@@ -1,0 +1,35 @@
+//! Quickstart: train C-ECL (10%) on a ring of 8 nodes for a few epochs
+//! and print accuracy + communication cost.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use cecl::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let graph = Graph::ring(8);
+    let spec = ExperimentSpec {
+        dataset: "fashion".into(),
+        algorithm: AlgorithmSpec::CEcl {
+            k_frac: 0.10,
+            theta: 1.0,
+            dense_first_epoch: true,
+        },
+        epochs: 6,
+        eval_every: 2,
+        verbose: true,
+        ..ExperimentSpec::default()
+    };
+    let report = run_experiment(&spec, &graph)?;
+    println!(
+        "\n{}: final accuracy {:.1}%, best {:.1}%, sent {:.0} KB/node/epoch \
+         ({:.1}s wallclock)",
+        report.algorithm,
+        report.final_accuracy * 100.0,
+        report.best_accuracy * 100.0,
+        report.mean_bytes_per_epoch / 1024.0,
+        report.wallclock_secs,
+    );
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT pipeline: lower the L2/L1 functions once to HLO *text* artifacts.
+
+HLO text (not serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.
+
+Outputs, per dataset config (``fashion``, ``cifar``):
+
+* ``train_step_<ds>.hlo.txt``  — Eq. (6) closed-form local update
+* ``eval_<ds>.hlo.txt``        — correct count + summed loss
+* ``dual_update_<ds>.hlo.txt`` — fused L1 Pallas compressed dual update
+* ``init_w_<ds>.bin``          — raw little-endian f32[d_pad] initial params
+
+plus ``smoke.hlo.txt`` (a tiny function for fast runtime unit tests) and
+``manifest.txt`` describing shapes/layout for the rust side.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+from .kernels.dual_update import dual_update
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return name
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_train_step(cfg: ModelConfig) -> str:
+    fn = functools.partial(model.train_step, cfg)
+    lowered = jax.jit(fn).lower(
+        _f32(cfg.d_pad),                                  # w
+        _f32(cfg.d_pad),                                  # zsum
+        _f32(cfg.batch, cfg.height, cfg.width, cfg.channels),
+        _i32(cfg.batch),
+        _f32(),                                           # eta
+        _f32(),                                           # alpha_deg
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_eval_step(cfg: ModelConfig) -> str:
+    fn = functools.partial(model.eval_step, cfg)
+    lowered = jax.jit(fn).lower(
+        _f32(cfg.d_pad),
+        _f32(cfg.eval_batch, cfg.height, cfg.width, cfg.channels),
+        _i32(cfg.eval_batch),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_dual_update(cfg: ModelConfig) -> str:
+    def fn(z, w, ycomp, m_in, m_out, theta, taa):
+        return dual_update(z, w, ycomp, m_in, m_out, theta, taa)
+
+    d = cfg.d_pad
+    lowered = jax.jit(fn).lower(
+        _f32(d), _f32(d), _f32(d), _f32(d), _f32(d), _f32(), _f32()
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_smoke() -> str:
+    def fn(x, y):
+        return (x * y + 1.0,)
+
+    lowered = jax.jit(fn).lower(_f32(4), _f32(4))
+    return to_hlo_text(lowered)
+
+
+def write_init_w(cfg: ModelConfig, out_dir: str, seed: int = 0) -> str:
+    w = model.init_params(cfg, seed=seed)
+    name = f"init_w_{cfg.name}.bin"
+    import numpy as np
+
+    np.asarray(w, dtype="<f4").tofile(os.path.join(out_dir, name))
+    return name
+
+
+def build(out_dir: str, datasets=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    datasets = datasets or list(CONFIGS)
+    lines = [f"version {MANIFEST_VERSION}"]
+    smoke = _write(out_dir, "smoke.hlo.txt", lower_smoke())
+    lines.append(f"smoke {smoke}")
+    for name in datasets:
+        cfg = CONFIGS[name]
+        print(f"[aot] {cfg.name}: d={cfg.d} d_pad={cfg.d_pad} "
+              f"input={cfg.height}x{cfg.width}x{cfg.channels}")
+        train = _write(out_dir, f"train_step_{cfg.name}.hlo.txt",
+                       lower_train_step(cfg))
+        print(f"[aot]   train_step -> {train}")
+        evalf = _write(out_dir, f"eval_{cfg.name}.hlo.txt",
+                       lower_eval_step(cfg))
+        print(f"[aot]   eval_step  -> {evalf}")
+        dual = _write(out_dir, f"dual_update_{cfg.name}.hlo.txt",
+                      lower_dual_update(cfg))
+        print(f"[aot]   dual_update-> {dual}")
+        init = write_init_w(cfg, out_dir)
+        print(f"[aot]   init_w     -> {init}")
+        lines.append(f"dataset {cfg.name}")
+        lines.append(f"d {cfg.d}")
+        lines.append(f"d_pad {cfg.d_pad}")
+        lines.append(f"input {cfg.height} {cfg.width} {cfg.channels}")
+        lines.append(f"classes {cfg.classes}")
+        lines.append(f"batch {cfg.batch}")
+        lines.append(f"eval_batch {cfg.eval_batch}")
+        lines.append(f"train_step {train}")
+        lines.append(f"eval_step {evalf}")
+        lines.append(f"dual_update {dual}")
+        lines.append(f"init_w {init}")
+        for spec in cfg.layers():
+            dims = " ".join(str(s) for s in spec.shape)
+            lines.append(f"layer {spec.name} {dims}")
+        lines.append("end")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"[aot] manifest -> {os.path.join(out_dir, 'manifest.txt')}")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--datasets", nargs="*", default=None,
+                        help="subset of dataset configs to build")
+    args = parser.parse_args()
+    build(args.out, args.datasets)
+
+
+if __name__ == "__main__":
+    main()

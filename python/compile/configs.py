@@ -1,0 +1,144 @@
+"""Model / dataset configurations shared by the L2 model and the AOT pipeline.
+
+Two dataset-scale configs mirror the paper's two benchmarks:
+
+* ``fashion`` — FashionMNIST-shaped: 1x28x28 greyscale, 10 classes.
+* ``cifar``   — CIFAR10-shaped: 3x32x32 colour, 10 classes.
+
+The model is the paper's architecture family: a 5-learnable-layer CNN with
+GroupNorm (3 conv + GN blocks, then 2 dense layers), width scaled to the
+CPU-PJRT budget of this sandbox (see DESIGN.md §2 for the substitution
+rationale — communication-cost *ratios* and the accuracy ordering across
+methods are what the paper's tables measure, and both are dimension-free).
+
+All parameters live in a single flat ``f32[d_pad]`` vector.  ``d_pad`` is
+``d`` rounded up to ``PAD_MULTIPLE`` so that the L1 Pallas dual-update
+kernel sees block-aligned shapes; the tail is mathematically inert (zero
+gradients, zero dual state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+# Flat vectors are padded to a multiple of this so the Pallas dual-update
+# kernel's (8, 128) blocks tile exactly.
+PAD_MULTIPLE = 1024
+
+# Pallas matmul tile sizes (MXU-shaped: 128x128 systolic array).
+MATMUL_BLOCK_N = 128
+MATMUL_BLOCK_K = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One named parameter tensor within the flat vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A dataset-scale instantiation of the 5-layer CNN + GroupNorm."""
+
+    name: str
+    height: int
+    width: int
+    channels: int
+    classes: int
+    batch: int
+    eval_batch: int
+    conv_channels: Tuple[int, int, int]
+    hidden: int
+    gn_groups: int
+
+    # ---- derived ---------------------------------------------------------
+
+    @property
+    def spatial_after_convs(self) -> Tuple[int, int]:
+        """conv2 and conv3 are stride-2 SAME: H -> ceil(H/2) -> ceil(H/4)."""
+        h = -(-self.height // 2)
+        h = -(-h // 2)
+        w = -(-self.width // 2)
+        w = -(-w // 2)
+        return h, w
+
+    @property
+    def flat_features(self) -> int:
+        h, w = self.spatial_after_convs
+        return h * w * self.conv_channels[2]
+
+    def layers(self) -> List[LayerSpec]:
+        """Parameter layout, in flat-vector order.
+
+        Conv kernels are HWIO (the jax.lax default for NHWC convs); dense
+        kernels are (in, out).  GroupNorm has per-channel scale and bias.
+        """
+        c1, c2, c3 = self.conv_channels
+        specs = [
+            LayerSpec("conv1_w", (3, 3, self.channels, c1)),
+            LayerSpec("conv1_b", (c1,)),
+            LayerSpec("gn1_scale", (c1,)),
+            LayerSpec("gn1_bias", (c1,)),
+            LayerSpec("conv2_w", (3, 3, c1, c2)),
+            LayerSpec("conv2_b", (c2,)),
+            LayerSpec("gn2_scale", (c2,)),
+            LayerSpec("gn2_bias", (c2,)),
+            LayerSpec("conv3_w", (3, 3, c2, c3)),
+            LayerSpec("conv3_b", (c3,)),
+            LayerSpec("gn3_scale", (c3,)),
+            LayerSpec("gn3_bias", (c3,)),
+            LayerSpec("dense1_w", (self.flat_features, self.hidden)),
+            LayerSpec("dense1_b", (self.hidden,)),
+            LayerSpec("dense2_w", (self.hidden, self.classes)),
+            LayerSpec("dense2_b", (self.classes,)),
+        ]
+        return specs
+
+    @property
+    def d(self) -> int:
+        return sum(s.size for s in self.layers())
+
+    @property
+    def d_pad(self) -> int:
+        return -(-self.d // PAD_MULTIPLE) * PAD_MULTIPLE
+
+
+# Width (6, 12, 24)/48 is the 1-CPU-budget point: ~2x faster per train
+# step than (8, 16, 32)/64 with the same architecture and phenomena (see
+# DESIGN.md §2 — the paper's table quantities are ratio- and
+# ordering-based, not parameter-count-based).
+FASHION = ModelConfig(
+    name="fashion",
+    height=28,
+    width=28,
+    channels=1,
+    classes=10,
+    batch=50,
+    eval_batch=100,
+    conv_channels=(6, 12, 24),
+    hidden=48,
+    gn_groups=4,
+)
+
+CIFAR = ModelConfig(
+    name="cifar",
+    height=32,
+    width=32,
+    channels=3,
+    classes=10,
+    batch=50,
+    eval_batch=100,
+    conv_channels=(6, 12, 24),
+    hidden=48,
+    gn_groups=4,
+)
+
+CONFIGS = {c.name: c for c in (FASHION, CIFAR)}

@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: MXU-tiled matmul for the dense classifier head.
+
+The CNN's two dense layers (``dense1``: features -> hidden, ``dense2``:
+hidden -> classes) route their GEMMs through this kernel, so the L1 layer
+lowers into the very same HLO module as the L2 model (one artifact, no
+graph breaks).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): classic systolic-array
+tiling — grid ``(n_blocks, k_blocks)`` with a ``(B, 128)`` activation
+block, a ``(128, 128)`` weight block (the MXU's native tile), and a
+``(B, 128)`` output accumulator that stays resident in VMEM across the
+K-loop (revisited output block, initialized at k == 0).  A CUDA version
+would stage the same tiles in shared memory per threadblock; here the
+HBM<->VMEM schedule is the two BlockSpec index_maps.
+
+Runs under ``interpret=True`` for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import MATMUL_BLOCK_K, MATMUL_BLOCK_N
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (n, k) grid step: o[n] (+)= x[k] @ w[k, n]."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(v, axis, multiple):
+    size = v.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return v
+    widths = [(0, 0)] * v.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(v, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(x, w, interpret=True):
+    """``x[B, K] @ w[K, N]`` via the tiled Pallas kernel.
+
+    K and N are zero-padded up to the 128-multiple tile grid; the result is
+    sliced back to ``(B, N)``.  B rides along whole (it is small — the
+    training batch) as the tile's sublane dimension.
+    """
+    b, k_dim = x.shape
+    k2, n_dim = w.shape
+    if k_dim != k2:
+        raise ValueError(f"shape mismatch: {x.shape} @ {w.shape}")
+    x32 = _pad_to(x.astype(jnp.float32), 1, MATMUL_BLOCK_K)
+    w32 = _pad_to(
+        _pad_to(w.astype(jnp.float32), 0, MATMUL_BLOCK_K), 1, MATMUL_BLOCK_N
+    )
+    kp, np_ = w32.shape
+    grid = (np_ // MATMUL_BLOCK_N, kp // MATMUL_BLOCK_K)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, MATMUL_BLOCK_K), lambda n, k: (0, k)),
+            pl.BlockSpec((MATMUL_BLOCK_K, MATMUL_BLOCK_N),
+                         lambda n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((b, MATMUL_BLOCK_N), lambda n, k: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((b, np_), jnp.float32),
+        interpret=interpret,
+    )(x32, w32)
+    return out[:, :n_dim]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: pallas_call has no built-in reverse-mode rule, so
+# the backward GEMMs (dx = g @ wᵀ, dw = xᵀ @ g) are routed through the very
+# same tiled kernel — the L1 layer stays on both the forward and backward
+# paths of the lowered training artifact.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul_ad(x, w):
+    """Differentiable ``x @ w`` backed by the Pallas kernel."""
+    return matmul(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(residual, g):
+    x, w = residual
+    return matmul(g, w.T), matmul(x.T, g)
+
+
+matmul_ad.defvjp(_matmul_fwd, _matmul_bwd)

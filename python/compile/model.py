@@ -1,0 +1,159 @@
+"""L2: the paper's model and update steps in JAX, over a flat parameter vector.
+
+Implements the 5-layer CNN with GroupNorm used in the paper's §5 (scaled —
+DESIGN.md §2) plus the three jit-able entry points that the rust
+coordinator executes through PJRT:
+
+* ``train_step`` — one local update of Eq. (6) in closed form.  Because
+  ``A_{i|j} = ±I`` and ``A² = I``, setting the gradient of the quadratic
+  surrogate to zero gives
+
+      w⁺ = (w/η − ∇f(w) + Σ_j A_{i|j} z_{i|j}) / (1/η + α·|N_i|)
+
+  With ``alpha_deg = α·|N_i| = 0`` and ``zsum = 0`` this is exactly the
+  plain SGD step ``w − η∇f(w)`` — one artifact serves ECL, C-ECL, D-PSGD
+  and single-node SGD.
+* ``eval_step`` — correct-prediction count + summed loss over a batch.
+* the L1 Pallas kernels (``kernels.matmul`` inside the dense head here,
+  ``kernels.dual_update`` as its own artifact) lower into the same HLO.
+
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text once and the rust runtime never imports Python again.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.matmul import matmul_ad
+
+
+def unpack(cfg: ModelConfig, wflat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Slice the flat f32[d_pad] vector into named parameter tensors.
+
+    The padding tail (entries d..d_pad) is ignored; its gradient is
+    therefore exactly zero and it stays inert through training.
+    """
+    params = {}
+    offset = 0
+    for spec in cfg.layers():
+        chunk = jax.lax.dynamic_slice_in_dim(wflat, offset, spec.size)
+        params[spec.name] = chunk.reshape(spec.shape)
+        offset += spec.size
+    return params
+
+
+def pack(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Inverse of :func:`unpack`; zero-pads up to d_pad."""
+    flat = jnp.concatenate(
+        [params[spec.name].reshape(-1) for spec in cfg.layers()]
+    )
+    return jnp.pad(flat, (0, cfg.d_pad - cfg.d))
+
+
+def group_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               groups: int, eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm over NHWC: normalize each (H, W, C/G) group per sample.
+
+    The group count is the largest divisor of C not exceeding ``groups``
+    (so any channel width is valid).
+    """
+    b, h, w, c = x.shape
+    g = max(d for d in range(1, min(groups, c) + 1) if c % d == 0)
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+          stride: int) -> jnp.ndarray:
+    """3x3 SAME conv, NHWC x HWIO."""
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def forward(cfg: ModelConfig, wflat: jnp.ndarray,
+            x: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a batch ``x: f32[B, H, W, C]``."""
+    p = unpack(cfg, wflat)
+    h = _conv(x, p["conv1_w"], p["conv1_b"], stride=1)
+    h = jax.nn.relu(group_norm(h, p["gn1_scale"], p["gn1_bias"],
+                               cfg.gn_groups))
+    h = _conv(h, p["conv2_w"], p["conv2_b"], stride=2)
+    h = jax.nn.relu(group_norm(h, p["gn2_scale"], p["gn2_bias"],
+                               cfg.gn_groups))
+    h = _conv(h, p["conv3_w"], p["conv3_b"], stride=2)
+    h = jax.nn.relu(group_norm(h, p["gn3_scale"], p["gn3_bias"],
+                               cfg.gn_groups))
+    h = h.reshape(h.shape[0], -1)
+    # Dense head routed through the L1 Pallas matmul kernel.
+    h = jax.nn.relu(matmul_ad(h, p["dense1_w"]) + p["dense1_b"])
+    return matmul_ad(h, p["dense2_w"]) + p["dense2_b"]
+
+
+def _cross_entropy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample softmax cross-entropy; ``y: i32[B]`` class indices."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(
+        logits, y[:, None].astype(jnp.int32), axis=-1
+    )[:, 0]
+    return logz - true_logit
+
+
+def loss_fn(cfg: ModelConfig, wflat: jnp.ndarray, x: jnp.ndarray,
+            y: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy loss — the f_i(w) of Eq. (1)."""
+    return _cross_entropy(forward(cfg, wflat, x), y).mean()
+
+
+def train_step(cfg: ModelConfig, wflat: jnp.ndarray, zsum: jnp.ndarray,
+               x: jnp.ndarray, y: jnp.ndarray, eta: jnp.ndarray,
+               alpha_deg: jnp.ndarray):
+    """One local prox-SGD update (Eq. 6 closed form). Returns (w⁺, loss)."""
+    loss, grad = jax.value_and_grad(loss_fn, argnums=1)(cfg, wflat, x, y)
+    denom = 1.0 / eta + alpha_deg
+    w_next = (wflat / eta - grad + zsum) / denom
+    return w_next, loss
+
+
+def eval_step(cfg: ModelConfig, wflat: jnp.ndarray, x: jnp.ndarray,
+              y: jnp.ndarray):
+    """Returns (correct_count, summed_loss) over an eval batch."""
+    logits = forward(cfg, wflat, x)
+    correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32).sum()
+    loss_sum = _cross_entropy(logits, y).sum()
+    return correct, loss_sum
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> jnp.ndarray:
+    """He-normal conv/dense kernels, zero biases, unit GN scales.
+
+    Returns the flat f32[d_pad] vector every node starts from (standard
+    shared initialization in decentralized training).
+    """
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for spec in cfg.layers():
+        key, sub = jax.random.split(key)
+        if spec.name.endswith("_w"):
+            fan_in = int(jnp.prod(jnp.asarray(spec.shape[:-1])))
+            std = (2.0 / fan_in) ** 0.5
+            params[spec.name] = std * jax.random.normal(
+                sub, spec.shape, jnp.float32
+            )
+        elif spec.name.endswith("_scale"):
+            params[spec.name] = jnp.ones(spec.shape, jnp.float32)
+        else:
+            params[spec.name] = jnp.zeros(spec.shape, jnp.float32)
+    return pack(cfg, params)

@@ -1,0 +1,84 @@
+"""AOT pipeline tests: lowering produces loadable HLO text + manifest."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.configs import FASHION
+
+
+def test_smoke_lowering_is_hlo_text():
+    text = aot.lower_smoke()
+    assert "ENTRY" in text
+    assert "f32[4]" in text
+
+
+def test_hlo_text_has_no_64bit_ids():
+    """xla_extension 0.5.1 requires instruction ids <= INT_MAX; HLO *text*
+    round-trips because the parser reassigns ids.  Guard the format: we
+    must be emitting text, not a serialized proto."""
+    text = aot.lower_smoke()
+    assert text.lstrip().startswith(("HloModule", "ENTRY"))
+
+
+def test_dual_update_lowering_shapes():
+    # Lower against a tiny stand-in dimension by monkeypatching is overkill;
+    # instead check the real fashion artifact contains the padded dim.
+    text = aot.lower_dual_update(FASHION)
+    assert f"f32[{FASHION.d_pad}]" in text
+    # Two outputs in a tuple.
+    assert "tuple" in text.lower()
+
+
+def test_write_init_w(tmp_path):
+    name = aot.write_init_w(FASHION, str(tmp_path), seed=0)
+    data = np.fromfile(os.path.join(tmp_path, name), dtype="<f4")
+    assert data.shape == (FASHION.d_pad,)
+    w = np.asarray(model.init_params(FASHION, seed=0))
+    np.testing.assert_array_equal(data, w)
+
+
+def test_manifest_format(tmp_path):
+    """Build a manifest with only the smoke artifact lowered; dataset
+    sections are validated against the real artifacts/ dir when present."""
+    repo_manifest = os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "manifest.txt"
+    )
+    if not os.path.exists(repo_manifest):
+        import pytest
+
+        pytest.skip("run `make artifacts` first")
+    lines = [l.strip() for l in open(repo_manifest) if l.strip()]
+    assert lines[0] == "version 1"
+    assert lines[1].startswith("smoke ")
+    # Every dataset block is terminated and carries the required keys.
+    blocks = "\n".join(lines).split("dataset ")[1:]
+    assert len(blocks) >= 2
+    for block in blocks:
+        for key in ("d ", "d_pad ", "input ", "classes ", "batch ",
+                    "train_step ", "eval_step ", "dual_update ", "init_w ",
+                    "layer ", "end"):
+            assert key in block, f"missing {key!r} in manifest block"
+
+
+def test_train_step_scalar_inputs_lower():
+    """eta / alpha_deg are runtime scalars (not baked): the lowered module
+    must take 6 parameters."""
+    lowered = jax.jit(
+        lambda w, z, x, y, e, a: model.train_step(FASHION, w, z, x, y, e, a)
+    ).lower(
+        jax.ShapeDtypeStruct((FASHION.d_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((FASHION.d_pad,), jnp.float32),
+        jax.ShapeDtypeStruct(
+            (FASHION.batch, FASHION.height, FASHION.width, FASHION.channels),
+            jnp.float32,
+        ),
+        jax.ShapeDtypeStruct((FASHION.batch,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text

@@ -1,0 +1,191 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/parameters; every case asserts
+``allclose(kernel, ref)``.  This is the core correctness signal for the
+kernels that end up inside the AOT artifacts.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.dual_update import BLOCK_ELEMS, dual_update
+from compile.kernels.matmul import matmul, matmul_ad
+
+SETTINGS = dict(max_examples=20, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _rng_vec(seed, d, scale=1.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.normal(0, scale, d), jnp.float32)
+
+
+def _rng_mask(seed, d, p):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.random(d) < p, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dual_update
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    blocks=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    theta=st.floats(0.05, 1.5),
+    alpha=st.floats(0.0, 2.0),
+    sign=st.sampled_from([-1.0, 1.0]),
+    p_in=st.floats(0.0, 1.0),
+    p_out=st.floats(0.0, 1.0),
+)
+def test_dual_update_matches_ref(blocks, seed, theta, alpha, sign, p_in,
+                                 p_out):
+    d = blocks * BLOCK_ELEMS
+    z = _rng_vec(seed, d)
+    w = _rng_vec(seed + 1, d)
+    y_in = _rng_vec(seed + 2, d)
+    m_in = _rng_mask(seed + 3, d, p_in)
+    m_out = _rng_mask(seed + 4, d, p_out)
+    ycomp = m_in * y_in
+    taa = 2.0 * alpha * sign
+
+    zk, yk = dual_update(z, w, ycomp, m_in, m_out, theta, taa)
+    zr, yr = ref.dual_update_ref(z, w, ycomp, m_in, m_out, theta, taa)
+    np.testing.assert_allclose(zk, zr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(yk, yr, rtol=1e-5, atol=1e-5)
+
+
+def test_dual_update_uncompressed_is_ecl():
+    """m = 1 must reduce exactly to Eq. (5): z' = (1-θ)z + θ·y_recv."""
+    d = BLOCK_ELEMS
+    z = _rng_vec(0, d)
+    w = _rng_vec(1, d)
+    y_recv = _rng_vec(2, d)
+    ones = jnp.ones(d)
+    theta = 0.6
+    zk, yk = dual_update(z, w, y_recv, ones, ones, theta, 0.8)
+    np.testing.assert_allclose(
+        zk, (1 - theta) * z + theta * y_recv, rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(yk, z - 0.8 * w, rtol=1e-5, atol=1e-6)
+
+
+def test_dual_update_fixed_point_is_stationary():
+    """At the DR fixed point (y_recv == z, full mask) z must not move."""
+    d = BLOCK_ELEMS
+    z = _rng_vec(3, d)
+    w = _rng_vec(4, d)
+    ones = jnp.ones(d)
+    zk, _ = dual_update(z, w, z, ones, ones, 1.0, 0.5)
+    np.testing.assert_allclose(zk, z, rtol=1e-6, atol=1e-6)
+
+
+def test_dual_update_zero_mask_keeps_z():
+    """comp ≡ 0 (τ→0 limit) must leave z untouched regardless of θ."""
+    d = BLOCK_ELEMS
+    z = _rng_vec(5, d)
+    w = _rng_vec(6, d)
+    zero = jnp.zeros(d)
+    zk, yk = dual_update(z, w, zero, zero, zero, 1.0, 1.0)
+    np.testing.assert_allclose(zk, z, rtol=0, atol=0)
+    np.testing.assert_allclose(yk, zero, rtol=0, atol=0)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_dual_update_linearity_identity(blocks, seed):
+    """comp(y−z) == comp(y) − comp(z) for mask compression (Assumption 1).
+
+    The kernel implements the RHS; this checks it equals the LHS that the
+    paper's Eq. (13) is derived from.
+    """
+    d = blocks * BLOCK_ELEMS
+    z = _rng_vec(seed, d)
+    w = _rng_vec(seed + 1, d)
+    y = _rng_vec(seed + 2, d)
+    m = _rng_mask(seed + 3, d, 0.3)
+    theta = 0.9
+    zk, _ = dual_update(z, w, m * y, m, m, theta, 0.0)
+    expected = z + theta * (m * (y - z))
+    np.testing.assert_allclose(zk, expected, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    b=st.integers(1, 64),
+    k=st.integers(1, 300),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_f32(b, k, n, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(0, 1, (b, k)), jnp.float32)
+    w = jnp.asarray(r.normal(0, 1, (k, n)), jnp.float32)
+    np.testing.assert_allclose(
+        matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    b=st.integers(1, 16),
+    k=st.integers(1, 140),
+    n=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_bf16_inputs(b, k, n, seed):
+    """bf16 inputs accumulate in f32 (preferred_element_type)."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(0, 1, (b, k)), jnp.bfloat16)
+    w = jnp.asarray(r.normal(0, 1, (k, n)), jnp.bfloat16)
+    got = matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_exact_tile_boundary():
+    """K and N exactly at the 128 tile size (no padding path)."""
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(0, 1, (8, 256)), jnp.float32)
+    w = jnp.asarray(r.normal(0, 1, (256, 128)), jnp.float32)
+    np.testing.assert_allclose(
+        matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_ad_gradients_match_jnp():
+    """The custom-vjp (Pallas backward GEMMs) must match jnp autodiff."""
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.normal(0, 1, (6, 50)), jnp.float32)
+    w = jnp.asarray(r.normal(0, 1, (50, 30)), jnp.float32)
+
+    def f_pallas(x, w):
+        return (matmul_ad(x, w) ** 2).sum()
+
+    def f_ref(x, w):
+        return (jnp.matmul(x, w) ** 2).sum()
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-3, atol=1e-3)
+
+
+def test_dual_update_rejects_unaligned():
+    d = BLOCK_ELEMS + 1
+    v = jnp.zeros(d)
+    with pytest.raises(ValueError):
+        dual_update(v, v, v, v, v, 1.0, 1.0)

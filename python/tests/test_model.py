@@ -1,0 +1,155 @@
+"""L2 correctness: flat-parameter model, Eq. (6) closed form, eval."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.configs import CIFAR, CONFIGS, FASHION
+
+# A tiny config keeps the hypothesis sweeps fast.
+TINY = FASHION
+
+
+def _batch(cfg, b, seed=0):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(
+        r.normal(0, 1, (b, cfg.height, cfg.width, cfg.channels)), jnp.float32
+    )
+    y = jnp.asarray(r.integers(0, cfg.classes, b), jnp.int32)
+    return x, y
+
+
+def test_layout_sizes():
+    """The documented parameter counts (DESIGN.md §2) stay pinned."""
+    assert FASHION.d == 60406
+    assert FASHION.d_pad == 60416
+    assert CIFAR.d == 77794
+    assert CIFAR.d_pad == 77824
+    for cfg in CONFIGS.values():
+        assert cfg.d_pad % 1024 == 0
+        assert sum(s.size for s in cfg.layers()) == cfg.d
+
+
+def test_pack_unpack_roundtrip():
+    for cfg in CONFIGS.values():
+        w = model.init_params(cfg, seed=3)
+        params = model.unpack(cfg, w)
+        assert set(params) == {s.name for s in cfg.layers()}
+        w2 = model.pack(cfg, params)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(w2))
+
+
+def test_init_params_statistics():
+    w = model.init_params(FASHION, seed=0)
+    p = model.unpack(FASHION, w)
+    # He init: std ~= sqrt(2/fan_in) for kernels, biases zero, GN scale one.
+    np.testing.assert_array_equal(p["conv1_b"], 0)
+    np.testing.assert_array_equal(p["gn2_scale"], 1)
+    d1 = np.asarray(p["dense1_w"])
+    expect = (2.0 / FASHION.flat_features) ** 0.5
+    assert abs(d1.std() - expect) / expect < 0.1
+    # Padding tail is zero.
+    assert np.all(np.asarray(w)[FASHION.d:] == 0)
+
+
+def test_forward_shapes_and_finite():
+    for cfg in CONFIGS.values():
+        w = model.init_params(cfg, seed=1)
+        x, _ = _batch(cfg, 7)
+        logits = model.forward(cfg, w, x)
+        assert logits.shape == (7, cfg.classes)
+        assert bool(jnp.isfinite(logits).all())
+
+
+def test_train_step_alpha_zero_is_sgd():
+    """With alpha_deg=0, zsum=0, Eq. (6) closed form == plain SGD."""
+    cfg = TINY
+    w = model.init_params(cfg, seed=2)
+    x, y = _batch(cfg, cfg.batch, seed=5)
+    eta = jnp.float32(0.05)
+    zero = jnp.zeros(cfg.d_pad)
+    w_next, loss = model.train_step(cfg, w, zero, x, y, eta, jnp.float32(0))
+    grad = jax.grad(model.loss_fn, argnums=1)(cfg, w, x, y)
+    np.testing.assert_allclose(
+        w_next, w - eta * grad, rtol=1e-4, atol=1e-6
+    )
+    assert float(loss) > 0
+
+
+@hypothesis.settings(max_examples=5, deadline=None)
+@hypothesis.given(
+    eta=st.floats(1e-3, 0.1),
+    alpha_deg=st.floats(1e-3, 5.0),
+    seed=st.integers(0, 10_000),
+)
+def test_train_step_solves_surrogate(eta, alpha_deg, seed):
+    """w⁺ must be the exact argmin of the Eq. (6) quadratic surrogate.
+
+    The surrogate gradient at w⁺ is
+        ∇f(w_r) + (w⁺ − w_r)/η + alpha_deg·w⁺ − zsum
+    and must vanish identically (closed-form check, not an optimizer run).
+    """
+    cfg = TINY
+    r = np.random.default_rng(seed)
+    w = model.init_params(cfg, seed=seed % 7)
+    zsum = jnp.asarray(r.normal(0, 0.1, cfg.d_pad), jnp.float32)
+    x, y = _batch(cfg, cfg.batch, seed=seed + 1)
+    w_next, _ = model.train_step(
+        cfg, w, zsum, x, y, jnp.float32(eta), jnp.float32(alpha_deg)
+    )
+    grad = jax.grad(model.loss_fn, argnums=1)(cfg, w, x, y)
+    resid = grad + (w_next - w) / eta + alpha_deg * w_next - zsum
+    scale = float(jnp.abs(grad).max()) + float(jnp.abs(zsum).max()) + 1.0
+    assert float(jnp.abs(resid).max()) / scale < 1e-4
+
+
+def test_padding_tail_inert():
+    """Gradient on the padding tail is zero; with zsum=0 the tail decays
+    multiplicatively but never receives signal."""
+    cfg = TINY
+    w = model.init_params(cfg, seed=4)
+    x, y = _batch(cfg, cfg.batch, seed=9)
+    grad = jax.grad(model.loss_fn, argnums=1)(cfg, w, x, y)
+    assert np.all(np.asarray(grad)[cfg.d:] == 0)
+
+
+def test_eval_step_counts():
+    cfg = TINY
+    w = model.init_params(cfg, seed=6)
+    x, y = _batch(cfg, cfg.eval_batch, seed=11)
+    correct, loss_sum = model.eval_step(cfg, w, x, y)
+    logits = model.forward(cfg, w, x)
+    expect = int((jnp.argmax(logits, -1) == y).sum())
+    assert int(correct) == expect
+    assert float(loss_sum) > 0
+
+
+def test_eval_matches_loss_mean():
+    cfg = TINY
+    w = model.init_params(cfg, seed=8)
+    x, y = _batch(cfg, cfg.eval_batch, seed=13)
+    _, loss_sum = model.eval_step(cfg, w, x, y)
+    mean = model.loss_fn(cfg, w, x, y)
+    np.testing.assert_allclose(
+        float(loss_sum) / cfg.eval_batch, float(mean), rtol=1e-5
+    )
+
+
+def test_training_reduces_loss():
+    """A few SGD steps on one batch must reduce its loss (sanity e2e)."""
+    cfg = TINY
+    w = model.init_params(cfg, seed=10)
+    x, y = _batch(cfg, cfg.batch, seed=17)
+    zero = jnp.zeros(cfg.d_pad)
+    first = None
+    loss = None
+    for _ in range(5):
+        w, loss = model.train_step(
+            cfg, w, zero, x, y, jnp.float32(0.05), jnp.float32(0)
+        )
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first

@@ -1,0 +1,153 @@
+//! Micro-benchmarks of the L3 hot paths (harness = false; criterion is
+//! unavailable offline — see util::bench).
+//!
+//! Covers: the fused dual update (native sparse / native dense / PJRT
+//! L1-Pallas), mask sampling, COO gather/scatter, gossip averaging, the
+//! PowerGossip power-iteration halves, and the PJRT train/eval steps.
+//! These are the per-round costs behind every table.
+
+use cecl::compress::low_rank::{matvec_f32, matvec_t_f32};
+use cecl::compress::{CooVec, RandK};
+use cecl::model::Manifest;
+use cecl::runtime::{native, Engine, ModelRuntime};
+use cecl::util::bench::BenchSet;
+use cecl::util::rng::Pcg;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn main() {
+    let d: usize = 60416; // fashion-scale d_pad
+    let mut set = BenchSet::new(
+        "micro_hotpath — per-edge/per-round primitives (fashion-scale d)",
+    );
+
+    // ---- mask sampling (the shared-seed ω derivation) ------------------
+    // A/B: geometric gap-sampling (current) vs naive per-coordinate
+    // Bernoulli (pre-optimization baseline) — §Perf iteration 1.
+    let op = RandK::new(0.1);
+    let mut rng = Pcg::new(1);
+    set.bench_throughput("mask_sample rand_10% (gap-sampling)", 3, 20,
+                         d as f64, "elem", || {
+        let m = op.sample_mask(d, &mut rng);
+        std::hint::black_box(m.len());
+    });
+    set.bench_throughput("mask_sample rand_10% (naive baseline)", 3, 20,
+                         d as f64, "elem", || {
+        let m = op.sample_mask_naive(d, &mut rng);
+        std::hint::black_box(m.len());
+    });
+
+    // ---- fused dual update: native sparse (default hot path) -----------
+    let z0 = randn(d, 2);
+    let w = randn(d, 3);
+    let y = randn(d, 4);
+    let mask_in = op.sample_mask(d, &mut Pcg::new(5));
+    let mask_out = op.sample_mask(d, &mut Pcg::new(6));
+    let coo = CooVec::gather(&y, &mask_in);
+    let mut z = z0.clone();
+    let mut yvals = Vec::new();
+    set.bench_throughput(
+        "dual_update native-sparse (k=10%)", 3, 50,
+        (mask_in.len() + mask_out.len()) as f64, "elem",
+        || {
+            native::dual_update_sparse(&mut z, &w, &coo, &mask_out, 1.0,
+                                       0.5, &mut yvals);
+        },
+    );
+
+    // ---- fused dual update: native dense (ECL path) --------------------
+    let mut mi = Vec::new();
+    let mut mo = Vec::new();
+    RandK::mask_to_dense(d, &mask_in, &mut mi);
+    RandK::mask_to_dense(d, &mask_out, &mut mo);
+    let ycomp: Vec<f32> = y.iter().zip(&mi).map(|(a, b)| a * b).collect();
+    let mut zn = vec![0.0f32; d];
+    let mut ys = vec![0.0f32; d];
+    set.bench_throughput("dual_update native-dense", 3, 50, d as f64, "elem",
+                         || {
+        native::dual_update_into(&z0, &w, &ycomp, &mi, &mo, 1.0, 0.5,
+                                 &mut zn, &mut ys);
+    });
+
+    // ---- COO wire ops ---------------------------------------------------
+    let mut buf = CooVec::new(d);
+    set.bench_throughput("coo gather (k=10%)", 3, 50,
+                         mask_in.len() as f64 * 4.0, "B", || {
+        buf.gather_into(&y, &mask_in);
+    });
+    let mut dense = Vec::new();
+    set.bench_throughput("coo scatter->dense", 3, 50, d as f64 * 4.0, "B",
+                         || {
+        coo.scatter_into_cleared(&mut dense);
+    });
+
+    // ---- gossip weighted average (D-PSGD inner loop) --------------------
+    let wj = randn(d, 7);
+    let mut acc = randn(d, 8);
+    set.bench_throughput("gossip axpy (1 neighbor)", 3, 50, d as f64 * 4.0,
+                         "B", || {
+        for (a, &v) in acc.iter_mut().zip(&wj) {
+            *a += 0.333 * v;
+        }
+        std::hint::black_box(&acc);
+    });
+
+    // ---- PowerGossip halves (dense1-scale matrix) -----------------------
+    let (rows, cols) = (1176, 48);
+    let m = randn(rows * cols, 9);
+    let q = randn(cols, 10);
+    let p = randn(rows, 11);
+    set.bench_throughput("powergossip p = M q", 3, 50,
+                         (rows * cols) as f64, "flop", || {
+        std::hint::black_box(matvec_f32(&m, rows, cols, &q));
+    });
+    set.bench_throughput("powergossip s = M^T p", 3, 50,
+                         (rows * cols) as f64, "flop", || {
+        std::hint::black_box(matvec_t_f32(&m, rows, cols, &p));
+    });
+
+    // ---- PJRT layers (needs artifacts) ----------------------------------
+    if let Ok(manifest) = Manifest::load_default() {
+        let engine = Engine::cpu().expect("pjrt cpu");
+        let ds = manifest.dataset("fashion").expect("fashion").clone();
+        let rt = ModelRuntime::load(&engine, &ds).expect("compile");
+        let dd = ds.d_pad;
+        let w = randn(dd, 20);
+        let zsum = vec![0.0f32; dd];
+        let x = randn(ds.batch * ds.sample_len(), 21);
+        let yb: Vec<i32> = (0..ds.batch as i32).map(|i| i % 10).collect();
+        set.bench("pjrt train_step (fwd+bwd+prox)", 2, 20, || {
+            let (wn, _) = rt.train_step(&w, &zsum, &x, &yb, 0.02, 1.0)
+                .expect("train");
+            std::hint::black_box(wn[0]);
+        });
+        let xe = randn(ds.eval_batch * ds.sample_len(), 22);
+        let ye: Vec<i32> = (0..ds.eval_batch as i32).map(|i| i % 10).collect();
+        set.bench("pjrt eval_batch", 2, 20, || {
+            std::hint::black_box(rt.eval_batch(&w, &xe, &ye).expect("eval"));
+        });
+        let zv = randn(dd, 23);
+        let yv = randn(dd, 24);
+        let op2 = RandK::new(0.1);
+        let m_in = op2.sample_mask(dd, &mut Pcg::new(25));
+        let m_out = op2.sample_mask(dd, &mut Pcg::new(26));
+        let mut mid = Vec::new();
+        let mut mod_ = Vec::new();
+        RandK::mask_to_dense(dd, &m_in, &mut mid);
+        RandK::mask_to_dense(dd, &m_out, &mut mod_);
+        let yc: Vec<f32> = yv.iter().zip(&mid).map(|(a, b)| a * b).collect();
+        set.bench("pjrt dual_update (L1 Pallas kernel)", 2, 20, || {
+            std::hint::black_box(
+                rt.dual_update(&zv, &w, &yc, &mid, &mod_, 1.0, 0.5)
+                    .expect("dual"),
+            );
+        });
+    } else {
+        eprintln!("artifacts missing: PJRT benches skipped (make artifacts)");
+    }
+
+    set.report();
+}

@@ -1,0 +1,65 @@
+//! Table-2 bench: per-round cost under the heterogeneous split.
+//! Identical harness to table1_round_cost but with the 8-of-10 class
+//! partition — byte costs must be partition-independent (the protocol
+//! never looks at the data), which this bench demonstrates.
+
+use cecl::algorithms::AlgorithmSpec;
+use cecl::coordinator::{run_with_engine, ExperimentSpec};
+use cecl::data::Partition;
+use cecl::graph::Graph;
+use cecl::model::Manifest;
+use cecl::runtime::Engine;
+use cecl::util::bench::{BenchSet, Measurement};
+use cecl::util::stats::Summary;
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        eprintln!("run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::cpu().expect("pjrt");
+    let graph = Graph::ring(8);
+    let mut set = BenchSet::new(
+        "table2_round_cost — heterogeneous(8/10) ring(8), 1 epoch per method",
+    );
+    let methods = [
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::PowerGossip { iters: 10 },
+        AlgorithmSpec::CEcl { k_frac: 0.10, theta: 1.0, dense_first_epoch: false },
+        AlgorithmSpec::NaiveCEcl { k_frac: 0.10, theta: 1.0 },
+    ];
+    for alg in methods {
+        let spec = ExperimentSpec {
+            dataset: "fashion".into(),
+            algorithm: alg.clone(),
+            epochs: 1,
+            nodes: 8,
+            train_per_node: 100,
+            test_size: 100,
+            local_steps: 1,
+            eta: 0.04,
+            eval_every: 1,
+            partition: Partition::Heterogeneous { classes_per_node: 8 },
+            ..Default::default()
+        };
+        let mut samples = Vec::new();
+        let mut bytes = 0.0;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            let report = run_with_engine(&engine, &manifest, &spec, &graph)
+                .expect("run");
+            samples.push(t0.elapsed().as_secs_f64());
+            bytes = report.mean_bytes_per_epoch;
+        }
+        set.record(Measurement {
+            name: format!("{} [{:.0} KB/node/epoch]", alg.name(),
+                          bytes / 1024.0),
+            iters: samples.len(),
+            secs: Summary::of(&samples),
+            items_per_iter: Some(bytes * 8.0),
+            items_unit: "B",
+        });
+    }
+    set.report();
+}

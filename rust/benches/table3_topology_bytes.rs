@@ -1,0 +1,94 @@
+//! Table-3 bench: Send/Epoch across the four paper topologies for the
+//! four reported methods.  Bytes are measured from real (1-epoch) runs
+//! and cross-checked against the analytic per-round formulas — if the
+//! two disagree the bench panics, so this doubles as an accounting
+//! regression gate.
+
+use cecl::algorithms::AlgorithmSpec;
+use cecl::coordinator::{run_with_engine, ExperimentSpec};
+use cecl::data::Partition;
+use cecl::graph::{Graph, Topology};
+use cecl::model::Manifest;
+use cecl::runtime::Engine;
+use cecl::util::table::Table;
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        eprintln!("run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::cpu().expect("pjrt");
+    let ds = manifest.dataset("fashion").expect("fashion");
+    let d = ds.d_pad as f64;
+
+    let methods = [
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::PowerGossip { iters: 10 },
+        AlgorithmSpec::CEcl { k_frac: 0.10, theta: 1.0, dense_first_epoch: false },
+    ];
+    let mut t = Table::new([
+        "method", "topology", "KB/node/epoch (measured)",
+        "KB/node/epoch (analytic)", "secs/epoch",
+    ]);
+    for topology in Topology::paper_set() {
+        let graph = Graph::build(topology, 8);
+        let mean_degree = 2.0 * graph.edges().len() as f64 / 8.0;
+        for alg in &methods {
+            let spec = ExperimentSpec {
+                dataset: "fashion".into(),
+                algorithm: alg.clone(),
+                epochs: 1,
+                nodes: 8,
+                train_per_node: 250, // 5 batches, K=5 -> 1 round/epoch
+                test_size: 100,
+                local_steps: 5,
+                eta: 0.04,
+                eval_every: 1,
+                partition: Partition::Homogeneous,
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let report =
+                run_with_engine(&engine, &manifest, &spec, &graph).expect("run");
+            let secs = t0.elapsed().as_secs_f64();
+            let measured = report.mean_bytes_per_epoch;
+            // Analytic: 1 round/epoch x mean_degree x payload.
+            let analytic = match alg {
+                AlgorithmSpec::DPsgd | AlgorithmSpec::Ecl { .. } => {
+                    mean_degree * d * 4.0
+                }
+                AlgorithmSpec::CEcl { k_frac, .. } => {
+                    mean_degree * d * k_frac * 8.0
+                }
+                AlgorithmSpec::PowerGossip { iters } => {
+                    let mat: usize = ds
+                        .matrix_views()
+                        .iter()
+                        .map(|&(_, _, r, c)| (r + c) * 4)
+                        .sum();
+                    let vecs: usize =
+                        ds.vector_views().iter().map(|&(_, _, l)| l * 4).sum();
+                    mean_degree * (mat * iters + vecs) as f64
+                }
+                _ => 0.0,
+            };
+            let tol = analytic * 0.06 + 1.0;
+            assert!(
+                (measured - analytic).abs() < tol,
+                "{} on {}: measured {measured} vs analytic {analytic}",
+                alg.name(),
+                topology.name()
+            );
+            t.row([
+                alg.name(),
+                topology.name().to_string(),
+                format!("{:.0}", measured / 1024.0),
+                format!("{:.0}", analytic / 1024.0),
+                format!("{secs:.2}"),
+            ]);
+        }
+    }
+    println!("## table3_topology_bytes — measured vs analytic\n");
+    println!("{}", t.render());
+}

@@ -1,0 +1,54 @@
+//! Theorem-1 bench: cost of the exact C-ECL round on the quadratic
+//! substrate (Cholesky prox + compressed dual exchange) as the problem
+//! dimension grows, plus the measured-vs-bound rate table that `repro
+//! theory` reports — regenerating the theory validation is a one-second
+//! affair and runs entirely in rust.
+
+use cecl::graph::Graph;
+use cecl::quadratic::{
+    rate_bound, run_cecl, tau_threshold, DualRule, QuadraticNetwork,
+};
+use cecl::util::bench::BenchSet;
+use cecl::util::stats::empirical_rate;
+use cecl::util::table::Table;
+
+fn main() {
+    let graph = Graph::ring(8);
+    let mut set = BenchSet::new("theory_rate — exact C-ECL rounds (ring 8)");
+    for dim in [8usize, 16, 32, 64] {
+        let net = QuadraticNetwork::random(8, dim, dim + 16, 0.5, 0.5, 42);
+        let alpha = net.best_alpha(&graph);
+        set.bench_throughput(
+            &format!("50 rounds @ dim {dim}"),
+            1,
+            5,
+            50.0,
+            "round",
+            || {
+                std::hint::black_box(run_cecl(
+                    &net, &graph, alpha, 1.0, 0.8, 50, 1,
+                    DualRule::CompressDiff,
+                ));
+            },
+        );
+    }
+    set.report();
+
+    // Rate table (the bench's correctness payload).
+    let net = QuadraticNetwork::random(8, 24, 40, 0.5, 0.5, 42);
+    let alpha = net.best_alpha(&graph);
+    let delta = net.delta(alpha, &graph);
+    let mut t = Table::new(["tau", "bound rho", "measured rate", "converged"]);
+    for tau in [1.0, 0.8, 0.6, (tau_threshold(delta) + 1.0) / 2.0] {
+        let errors = run_cecl(&net, &graph, alpha, 1.0, tau, 150, 2,
+                              DualRule::CompressDiff);
+        let rate = empirical_rate(&errors[30..]);
+        t.row([
+            format!("{tau:.3}"),
+            format!("{:.4}", rate_bound(1.0, tau, delta)),
+            format!("{rate:.4}"),
+            (errors.last().unwrap() < &(errors[0] * 1e-2)).to_string(),
+        ]);
+    }
+    println!("delta = {delta:.4} (alpha* = {alpha:.4})\n{}", t.render());
+}

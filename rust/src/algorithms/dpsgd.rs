@@ -1,0 +1,137 @@
+//! D-PSGD (Lian et al. 2017): the uncompressed Gossip baseline.
+//!
+//! Each round: K local SGD steps (done by the coordinator with
+//! `alpha_deg = 0`), then exchange full model parameters with every
+//! neighbor and take the Metropolis–Hastings-weighted average
+//! `w_i ← W_ii w_i + Σ_j W_ij w_j` (paper §2.2 / §D.1).
+
+use std::sync::Arc;
+
+use crate::comm::{Msg, NodeComm};
+use crate::graph::Graph;
+
+use super::{BuildCtx, NodeAlgorithm};
+
+pub struct DPsgdNode {
+    node: usize,
+    graph: Arc<Graph>,
+    /// This node's row of the MH weight matrix.
+    weights: Vec<f64>,
+    /// Scratch accumulator (no allocation per round).
+    acc: Vec<f32>,
+}
+
+impl DPsgdNode {
+    pub fn new(ctx: &BuildCtx) -> DPsgdNode {
+        let weights = ctx.graph.mh_weights()[ctx.node].clone();
+        DPsgdNode {
+            node: ctx.node,
+            graph: Arc::clone(&ctx.graph),
+            weights,
+            acc: vec![0.0; ctx.manifest.d_pad],
+        }
+    }
+}
+
+impl NodeAlgorithm for DPsgdNode {
+    fn name(&self) -> String {
+        "D-PSGD".to_string()
+    }
+
+    fn exchange(&mut self, _round: usize, w: &mut [f32], comm: &NodeComm) {
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        // Send to all first (channels are buffered; no deadlock).
+        for &j in &neighbors {
+            comm.send(j, Msg::Dense(w.to_vec()));
+        }
+        // Weighted average.
+        let wii = self.weights[self.node] as f32;
+        for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
+            *a = wii * wv;
+        }
+        for &j in &neighbors {
+            let wj = comm.recv(j).into_dense();
+            let wij = self.weights[j] as f32;
+            for (a, &v) in self.acc.iter_mut().zip(&wj) {
+                *a += wij * v;
+            }
+        }
+        w.copy_from_slice(&self.acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::build_bus;
+    use crate::model::Manifest;
+
+    fn manifest() -> crate::model::DatasetManifest {
+        Manifest::parse(
+            "version 1\nsmoke s\ndataset t\nd 8\nd_pad 8\ninput 2 2 1\n\
+             classes 2\nbatch 2\neval_batch 2\ntrain_step a\neval_step b\n\
+             dual_update c\ninit_w d\nlayer l 2 4\nend\n",
+            std::path::Path::new("/x"),
+        )
+        .unwrap()
+        .dataset("t")
+        .unwrap()
+        .clone()
+    }
+
+    #[test]
+    fn gossip_average_preserves_mean_and_contracts() {
+        // MH weights are doubly stochastic: the node-average of w is
+        // invariant, and disagreement strictly contracts on a connected
+        // graph.
+        let graph = Arc::new(Graph::ring(4));
+        let (comms, meter) = build_bus(&graph);
+        let mut ws: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..8).map(|t| (i * 8 + t) as f32).collect())
+            .collect();
+        let mean_before: f32 =
+            ws.iter().flat_map(|w| w.iter()).sum::<f32>() / 32.0;
+        let spread_before: f32 = ws
+            .iter()
+            .map(|w| (w[0] - mean_before).abs())
+            .sum();
+
+        std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .zip(ws.iter_mut())
+                .enumerate()
+                .map(|(i, (comm, w))| {
+                    let graph = Arc::clone(&graph);
+                    s.spawn(move || {
+                        let ctx = BuildCtx {
+                            node: i,
+                            graph,
+                            manifest: manifest(),
+                            seed: 1,
+                            eta: 0.1,
+                            local_steps: 1,
+                            rounds_per_epoch: 1,
+                            dual_path: crate::algorithms::DualPath::Native,
+                            runtime: None,
+                        };
+                        let mut node = DPsgdNode::new(&ctx);
+                        node.exchange(0, w, &comm);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+
+        let mean_after: f32 =
+            ws.iter().flat_map(|w| w.iter()).sum::<f32>() / 32.0;
+        assert!((mean_after - mean_before).abs() < 1e-3);
+        let spread_after: f32 =
+            ws.iter().map(|w| (w[0] - mean_after).abs()).sum();
+        assert!(spread_after < spread_before);
+        // Bytes: 4 nodes x 2 neighbors x 8 f32 = 256 B.
+        assert_eq!(meter.total_bytes(), 4 * 2 * 8 * 4);
+    }
+}

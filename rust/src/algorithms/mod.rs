@@ -1,0 +1,257 @@
+//! Decentralized-learning algorithms: the paper's C-ECL plus every
+//! comparison method of §5.1.
+//!
+//! Each algorithm is a per-node state machine driven by the coordinator's
+//! node thread.  The local-update phase is shared (the AOT train_step
+//! artifact, Eq. (6) closed form — gossip methods run it with
+//! `alpha_deg = 0`, reducing it to plain SGD); the algorithms differ in
+//! what [`NodeAlgorithm::exchange`] puts on the wire every K local steps.
+
+pub mod cecl;
+pub mod dpsgd;
+pub mod powergossip;
+
+pub use cecl::{CEclNode, DualPath, DualRule};
+pub use dpsgd::DPsgdNode;
+pub use powergossip::PowerGossipNode;
+
+use std::sync::Arc;
+
+use crate::comm::NodeComm;
+use crate::graph::Graph;
+use crate::model::DatasetManifest;
+use crate::runtime::ModelRuntime;
+
+/// Per-node algorithm driven by the coordinator.
+pub trait NodeAlgorithm: Send {
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+
+    /// `α·|N_i|` fed to the Eq. (6) train step (0 for gossip methods).
+    fn alpha_deg(&self) -> f32 {
+        0.0
+    }
+
+    /// `Σ_j A_{i|j} z_{i|j}` fed to the train step, if the algorithm
+    /// maintains dual state.
+    fn zsum(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Communication phase after the K local updates of round `round`.
+    /// May rewrite `w` (gossip averaging) and/or internal dual state.
+    fn exchange(&mut self, round: usize, w: &mut [f32], comm: &NodeComm);
+}
+
+/// Declarative algorithm selection (what the CLI and experiment drivers
+/// construct).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AlgorithmSpec {
+    /// Single-node SGD on all data (the paper's reference row).
+    Sgd,
+    /// D-PSGD (Lian et al. 2017): gossip averaging with MH weights.
+    DPsgd,
+    /// ECL (Niwa et al. 2020): uncompressed primal-dual, θ ∈ (0, 1].
+    Ecl { theta: f32 },
+    /// C-ECL (this paper): rand_k% compression of the dual update.
+    CEcl {
+        k_frac: f64,
+        theta: f32,
+        /// Paper §5.1: k = 100% during the first epoch.
+        dense_first_epoch: bool,
+    },
+    /// Ablation: Eq. (11) — compress y directly (§3.2 “does not work”).
+    NaiveCEcl { k_frac: f64, theta: f32 },
+    /// PowerGossip (Vogels et al. 2020) with the given power-iteration
+    /// steps per round.
+    PowerGossip { iters: usize },
+}
+
+impl AlgorithmSpec {
+    pub fn name(&self) -> String {
+        match self {
+            AlgorithmSpec::Sgd => "SGD".to_string(),
+            AlgorithmSpec::DPsgd => "D-PSGD".to_string(),
+            AlgorithmSpec::Ecl { .. } => "ECL".to_string(),
+            AlgorithmSpec::CEcl { k_frac, .. } => {
+                format!("C-ECL ({}%)", (*k_frac * 100.0).round() as u32)
+            }
+            AlgorithmSpec::NaiveCEcl { k_frac, .. } => {
+                format!("naive-C-ECL ({}%)", (*k_frac * 100.0).round() as u32)
+            }
+            AlgorithmSpec::PowerGossip { iters } => {
+                format!("PowerGossip ({iters})")
+            }
+        }
+    }
+
+    /// Whether this algorithm exchanges anything at all.
+    pub fn is_decentralized(&self) -> bool {
+        !matches!(self, AlgorithmSpec::Sgd)
+    }
+
+    /// Parse CLI names like `cecl:0.1`, `powergossip:10`, `ecl`, `dpsgd`.
+    pub fn parse(s: &str) -> Option<AlgorithmSpec> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "sgd" => Some(AlgorithmSpec::Sgd),
+            "dpsgd" | "d-psgd" => Some(AlgorithmSpec::DPsgd),
+            "ecl" => Some(AlgorithmSpec::Ecl {
+                theta: arg.map(|a| a.parse().ok()).flatten().unwrap_or(1.0),
+            }),
+            "cecl" | "c-ecl" => Some(AlgorithmSpec::CEcl {
+                k_frac: arg?.parse().ok()?,
+                theta: 1.0,
+                dense_first_epoch: true,
+            }),
+            "naive-cecl" => Some(AlgorithmSpec::NaiveCEcl {
+                k_frac: arg?.parse().ok()?,
+                theta: 1.0,
+            }),
+            "powergossip" | "pg" => Some(AlgorithmSpec::PowerGossip {
+                iters: arg?.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Everything a node algorithm needs at construction time.
+pub struct BuildCtx {
+    pub node: usize,
+    pub graph: Arc<Graph>,
+    pub manifest: DatasetManifest,
+    pub seed: u64,
+    pub eta: f32,
+    /// K — local steps between exchanges.
+    pub local_steps: usize,
+    pub rounds_per_epoch: usize,
+    pub dual_path: DualPath,
+    pub runtime: Option<Arc<ModelRuntime>>,
+}
+
+/// The paper's α schedule (§D.1): Eq. (46) for the ECL
+/// `α = 1 / (η |N_i| (K − 1))` and Eq. (47) for the C-ECL
+/// `α = 1 / (η |N_i| (100K/k − 1))` — the compression stretches the
+/// effective consensus interval.
+pub fn paper_alpha(eta: f32, degree: usize, local_steps: usize,
+                   k_frac: f64) -> f32 {
+    let k_eff = local_steps as f64 / k_frac.clamp(1e-6, 1.0);
+    let denom = eta as f64 * degree as f64 * (k_eff - 1.0).max(1e-6);
+    (1.0 / denom) as f32
+}
+
+/// Build the per-node state machine for a spec.
+pub fn build_node(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Box<dyn NodeAlgorithm> {
+    match spec {
+        AlgorithmSpec::Sgd => Box::new(SgdNode),
+        AlgorithmSpec::DPsgd => Box::new(DPsgdNode::new(ctx)),
+        AlgorithmSpec::Ecl { theta } => Box::new(CEclNode::new(
+            ctx,
+            1.0,
+            *theta,
+            0,
+            DualRule::CompressDiff,
+        )),
+        AlgorithmSpec::CEcl {
+            k_frac,
+            theta,
+            dense_first_epoch,
+        } => {
+            let dense_rounds = if *dense_first_epoch {
+                ctx.rounds_per_epoch
+            } else {
+                0
+            };
+            Box::new(CEclNode::new(
+                ctx,
+                *k_frac,
+                *theta,
+                dense_rounds,
+                DualRule::CompressDiff,
+            ))
+        }
+        AlgorithmSpec::NaiveCEcl { k_frac, theta } => Box::new(CEclNode::new(
+            ctx,
+            *k_frac,
+            *theta,
+            0,
+            DualRule::CompressY,
+        )),
+        AlgorithmSpec::PowerGossip { iters } => {
+            Box::new(PowerGossipNode::new(ctx, *iters))
+        }
+    }
+}
+
+/// Single-node SGD: no neighbors, no exchange, `alpha_deg = 0`.
+pub struct SgdNode;
+
+impl NodeAlgorithm for SgdNode {
+    fn name(&self) -> String {
+        "SGD".to_string()
+    }
+
+    fn exchange(&mut self, _round: usize, _w: &mut [f32], _comm: &NodeComm) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(AlgorithmSpec::parse("sgd"), Some(AlgorithmSpec::Sgd));
+        assert_eq!(AlgorithmSpec::parse("dpsgd"), Some(AlgorithmSpec::DPsgd));
+        assert_eq!(
+            AlgorithmSpec::parse("ecl"),
+            Some(AlgorithmSpec::Ecl { theta: 1.0 })
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("cecl:0.1"),
+            Some(AlgorithmSpec::CEcl {
+                k_frac: 0.1,
+                theta: 1.0,
+                dense_first_epoch: true
+            })
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("powergossip:10"),
+            Some(AlgorithmSpec::PowerGossip { iters: 10 })
+        );
+        assert_eq!(AlgorithmSpec::parse("cecl"), None);
+        assert_eq!(AlgorithmSpec::parse("bogus"), None);
+    }
+
+    #[test]
+    fn spec_names_match_paper_rows() {
+        assert_eq!(
+            AlgorithmSpec::CEcl {
+                k_frac: 0.01,
+                theta: 1.0,
+                dense_first_epoch: true
+            }
+            .name(),
+            "C-ECL (1%)"
+        );
+        assert_eq!(
+            AlgorithmSpec::PowerGossip { iters: 20 }.name(),
+            "PowerGossip (20)"
+        );
+    }
+
+    #[test]
+    fn paper_alpha_eq46_eq47() {
+        // Eq. (46): η=0.01, |N|=2, K=5 → α = 1/(0.01*2*4) = 12.5.
+        let a = paper_alpha(0.01, 2, 5, 1.0);
+        assert!((a - 12.5).abs() < 1e-4);
+        // Eq. (47): k=10% → K_eff = 50 → α = 1/(0.01*2*49).
+        let a = paper_alpha(0.01, 2, 5, 0.1);
+        assert!((a - 1.0 / (0.01 * 2.0 * 49.0)).abs() < 1e-4);
+        // More compression (smaller k) → smaller α.
+        assert!(paper_alpha(0.01, 2, 5, 0.01) < paper_alpha(0.01, 2, 5, 0.1));
+    }
+}

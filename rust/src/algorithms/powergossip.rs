@@ -1,0 +1,350 @@
+//! PowerGossip (Vogels, Karimireddy, Jaggi 2020): the compressed Gossip
+//! baseline of the paper's tables.
+//!
+//! Per round and per layer matrix, each edge approximates the model
+//! *difference* `D = M_lo − M_hi` by rank-1 power iteration with a
+//! warm-started direction `q̂` that both endpoints keep in lockstep (same
+//! derived seed, same deterministic updates — the low-rank analogue of
+//! the C-ECL shared-mask trick).  One “power iteration step” exchanges
+//! `p = M q̂` (rows floats) and `s = Mᵀ p̂` (cols floats) in each
+//! direction; after the configured number of steps the rank-1 correction
+//! `±W_ij · p q̂ᵀ` is applied gossip-style.  Rank-1 tensors (biases, GN
+//! scales) are exchanged dense — they are a rounding error of the byte
+//! budget.
+//!
+//! Wire cost per round per neighbor:
+//! `iters · Σ_matrices (rows + cols) · 4  +  Σ_vectors len · 4` bytes,
+//! which reproduces the paper's PowerGossip(1/10/20) ratio ladder.
+
+use std::sync::Arc;
+
+use crate::comm::{Msg, NodeComm};
+use crate::compress::low_rank::{
+    matvec_f32, matvec_t_f32, normalize, power_iteration_step, rank1_axpy,
+    LowRankEdgeState,
+};
+use crate::graph::Graph;
+use crate::util::rng::{streams, Pcg};
+
+use super::{BuildCtx, NodeAlgorithm};
+
+pub struct PowerGossipNode {
+    node: usize,
+    graph: Arc<Graph>,
+    iters: usize,
+    /// MH weight row.
+    weights: Vec<f64>,
+    /// `(offset, rows, cols)` per layer matrix.
+    views: Vec<(usize, usize, usize)>,
+    /// `(offset, len)` per rank-1 tensor.
+    vec_views: Vec<(usize, usize)>,
+    /// Warm-started q̂ per (neighbor slot, view).
+    states: Vec<Vec<LowRankEdgeState>>,
+    reseed_rng: Pcg,
+}
+
+impl PowerGossipNode {
+    pub fn new(ctx: &BuildCtx, iters: usize) -> PowerGossipNode {
+        assert!(iters >= 1);
+        let views: Vec<(usize, usize, usize)> = ctx
+            .manifest
+            .matrix_views()
+            .into_iter()
+            .map(|(_, off, r, c)| (off, r, c))
+            .collect();
+        let vec_views: Vec<(usize, usize)> = ctx
+            .manifest
+            .vector_views()
+            .into_iter()
+            .map(|(_, off, len)| (off, len))
+            .collect();
+        let neighbors = ctx.graph.neighbors(ctx.node);
+        // q̂ init must be identical at both edge endpoints: derive from
+        // (seed, POWER, edge, view).
+        let states = neighbors
+            .iter()
+            .map(|&j| {
+                let e = ctx.graph.edge_index(ctx.node, j).unwrap() as u64;
+                views
+                    .iter()
+                    .enumerate()
+                    .map(|(v, &(_, _, cols))| {
+                        let mut rng = Pcg::derive(
+                            ctx.seed,
+                            &[streams::POWER, e, v as u64],
+                        );
+                        LowRankEdgeState::new(cols, &mut rng)
+                    })
+                    .collect()
+            })
+            .collect();
+        PowerGossipNode {
+            node: ctx.node,
+            graph: Arc::clone(&ctx.graph),
+            iters,
+            weights: ctx.graph.mh_weights()[ctx.node].clone(),
+            views,
+            vec_views,
+            states,
+            reseed_rng: Pcg::derive(ctx.seed, &[streams::POWER, u64::MAX,
+                                                ctx.node as u64]),
+        }
+    }
+
+    /// Deterministic wire bytes per round (for accounting tests).
+    pub fn bytes_per_round_per_neighbor(&self) -> usize {
+        let mat: usize = self
+            .views
+            .iter()
+            .map(|&(_, r, c)| (r + c) * 4)
+            .sum::<usize>()
+            * self.iters;
+        let vecs: usize = self.vec_views.iter().map(|&(_, l)| l * 4).sum();
+        mat + vecs
+    }
+}
+
+impl NodeAlgorithm for PowerGossipNode {
+    fn name(&self) -> String {
+        format!("PowerGossip ({})", self.iters)
+    }
+
+    fn exchange(&mut self, _round: usize, w: &mut [f32], comm: &NodeComm) {
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        let nv = self.views.len();
+        // Final (p, q̂) per (neighbor, view) for the rank-1 correction.
+        let mut finals: Vec<Vec<(Vec<f32>, Vec<f32>)>> =
+            vec![Vec::with_capacity(nv); neighbors.len()];
+
+        for it in 0..self.iters {
+            // --- p half: send all, then receive all (no deadlock). ----
+            let mut p_self: Vec<Vec<Vec<f32>>> =
+                vec![Vec::with_capacity(nv); neighbors.len()];
+            for (jj, &j) in neighbors.iter().enumerate() {
+                for (v, &(off, rows, cols)) in self.views.iter().enumerate() {
+                    let m = &w[off..off + rows * cols];
+                    let p = matvec_f32(m, rows, cols,
+                                       &self.states[jj][v].q_hat);
+                    comm.send(j, Msg::Dense(p.clone()));
+                    p_self[jj].push(p);
+                }
+            }
+            let mut p_peer: Vec<Vec<Vec<f32>>> =
+                vec![Vec::with_capacity(nv); neighbors.len()];
+            for (jj, &j) in neighbors.iter().enumerate() {
+                for _ in 0..nv {
+                    p_peer[jj].push(comm.recv(j).into_dense());
+                }
+            }
+            // --- s half. ----------------------------------------------
+            let mut s_self: Vec<Vec<Vec<f32>>> =
+                vec![Vec::with_capacity(nv); neighbors.len()];
+            let mut p_hat_all: Vec<Vec<Vec<f32>>> =
+                vec![Vec::with_capacity(nv); neighbors.len()];
+            for (jj, &j) in neighbors.iter().enumerate() {
+                let lo_is_self = self.node < j;
+                for (v, &(off, rows, cols)) in self.views.iter().enumerate() {
+                    // Orientation: D = M_lo − M_hi.
+                    let (p_lo, p_hi) = if lo_is_self {
+                        (&p_self[jj][v], &p_peer[jj][v])
+                    } else {
+                        (&p_peer[jj][v], &p_self[jj][v])
+                    };
+                    let mut p_hat: Vec<f32> =
+                        p_lo.iter().zip(p_hi).map(|(a, b)| a - b).collect();
+                    normalize(&mut p_hat);
+                    let m = &w[off..off + rows * cols];
+                    let s = matvec_t_f32(m, rows, cols, &p_hat);
+                    comm.send(j, Msg::Dense(s.clone()));
+                    s_self[jj].push(s);
+                    p_hat_all[jj].push(p_hat);
+                }
+            }
+            for (jj, &j) in neighbors.iter().enumerate() {
+                let lo_is_self = self.node < j;
+                for v in 0..nv {
+                    let s_peer = comm.recv(j).into_dense();
+                    let (p_lo, p_hi) = if lo_is_self {
+                        (&p_self[jj][v], &p_peer[jj][v])
+                    } else {
+                        (&p_peer[jj][v], &p_self[jj][v])
+                    };
+                    let (s_lo, s_hi) = if lo_is_self {
+                        (&s_self[jj][v], &s_peer)
+                    } else {
+                        (&s_peer, &s_self[jj][v])
+                    };
+                    let (p, q_next) =
+                        power_iteration_step(p_lo, p_hi, s_lo, s_hi);
+                    let q_used = self.states[jj][v].q_hat.clone();
+                    self.states[jj][v].q_hat = q_next;
+                    self.states[jj][v].reseed_if_degenerate(&mut self.reseed_rng);
+                    if it == self.iters - 1 {
+                        finals[jj].push((p, q_used));
+                    }
+                }
+            }
+        }
+
+        // --- Apply the gossip step on matrices: w_i += W_ij (w_j − w_i),
+        // with (w_j − w_i) ≈ ±(p q̂ᵀ). --------------------------------
+        for (jj, &j) in neighbors.iter().enumerate() {
+            let wij = self.weights[j] as f32;
+            let sign = if self.node < j { -1.0f32 } else { 1.0 };
+            for (v, &(off, rows, cols)) in self.views.iter().enumerate() {
+                let (p, q_used) = &finals[jj][v];
+                rank1_axpy(
+                    &mut w[off..off + rows * cols],
+                    rows,
+                    cols,
+                    sign * wij,
+                    p,
+                    q_used,
+                );
+            }
+        }
+
+        // --- Rank-1 tensors: dense gossip averaging. ------------------
+        if !self.vec_views.is_empty() {
+            let total: usize = self.vec_views.iter().map(|&(_, l)| l).sum();
+            let mut mine = Vec::with_capacity(total);
+            for &(off, len) in &self.vec_views {
+                mine.extend_from_slice(&w[off..off + len]);
+            }
+            for &j in &neighbors {
+                comm.send(j, Msg::Dense(mine.clone()));
+            }
+            for &j in &neighbors {
+                let theirs = comm.recv(j).into_dense();
+                let wij = self.weights[j] as f32;
+                let mut cursor = 0;
+                for &(off, len) in &self.vec_views {
+                    for t in 0..len {
+                        let diff = theirs[cursor + t] - w[off + t];
+                        w[off + t] += wij * diff;
+                    }
+                    cursor += len;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::build_bus;
+    use crate::model::Manifest;
+
+    fn manifest() -> crate::model::DatasetManifest {
+        Manifest::parse(
+            "version 1\nsmoke s\ndataset t\nd 26\nd_pad 32\ninput 2 2 1\n\
+             classes 2\nbatch 2\neval_batch 2\ntrain_step a\neval_step b\n\
+             dual_update c\ninit_w d\nlayer m1 4 5\nlayer b1 2\nlayer m2 2 2\nend\n",
+            std::path::Path::new("/x"),
+        )
+        .unwrap()
+        .dataset("t")
+        .unwrap()
+        .clone()
+    }
+
+    fn build(i: usize, graph: &Arc<Graph>, iters: usize) -> PowerGossipNode {
+        let ctx = BuildCtx {
+            node: i,
+            graph: Arc::clone(graph),
+            manifest: manifest(),
+            seed: 5,
+            eta: 0.1,
+            local_steps: 1,
+            rounds_per_epoch: 1,
+            dual_path: crate::algorithms::DualPath::Native,
+            runtime: None,
+        };
+        PowerGossipNode::new(&ctx, iters)
+    }
+
+    #[test]
+    fn byte_accounting_formula() {
+        let graph = Arc::new(Graph::ring(4));
+        let node = build(0, &graph, 3);
+        // matrices: (4+5) + (2+2) = 13 floats x 3 iters x 4B = 156;
+        // vectors: 2 floats x 4B = 8.
+        assert_eq!(node.bytes_per_round_per_neighbor(), 156 + 8);
+    }
+
+    #[test]
+    fn exchange_reduces_disagreement_and_meters_expected_bytes() {
+        let graph = Arc::new(Graph::ring(4));
+        let (comms, meter) = build_bus(&graph);
+        let mut ws: Vec<Vec<f32>> = (0..4)
+            .map(|i| {
+                let mut rng = Pcg::new(300 + i as u64);
+                (0..32).map(|_| rng.normal_f32()).collect()
+            })
+            .collect();
+        let disagreement = |ws: &Vec<Vec<f32>>| -> f32 {
+            let mut mean = vec![0.0f32; 32];
+            for w in ws {
+                for (m, &v) in mean.iter_mut().zip(w) {
+                    *m += v / 4.0;
+                }
+            }
+            ws.iter()
+                .map(|w| {
+                    w.iter()
+                        .zip(&mean)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum::<f32>()
+                })
+                .sum()
+        };
+        let before = disagreement(&ws);
+        let iters = 2;
+        let rounds = 3;
+        let expected_bytes =
+            4 * 2 * build(0, &graph, iters).bytes_per_round_per_neighbor();
+
+        std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .zip(ws.iter_mut())
+                .enumerate()
+                .map(|(i, (comm, w))| {
+                    let graph = Arc::clone(&graph);
+                    s.spawn(move || {
+                        // Warm-started node reused across rounds (the
+                        // real usage pattern).
+                        let mut node = build(i, &graph, iters);
+                        for round in 0..rounds {
+                            node.exchange(round, w, &comm);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        let after = disagreement(&ws);
+        assert!(
+            after < before * 0.8,
+            "disagreement {before} -> {after} (should contract)"
+        );
+        assert_eq!(meter.total_bytes() as usize, 3 * expected_bytes);
+    }
+
+    #[test]
+    fn warm_start_states_identical_across_endpoints() {
+        let graph = Arc::new(Graph::ring(4));
+        let n0 = build(0, &graph, 1);
+        let n1 = build(1, &graph, 1);
+        // Edge (0,1): node 0's slot for neighbor 1 and node 1's slot for
+        // neighbor 0 must hold the same q̂.
+        let jj0 = graph.neighbors(0).iter().position(|&x| x == 1).unwrap();
+        let jj1 = graph.neighbors(1).iter().position(|&x| x == 0).unwrap();
+        for v in 0..2 {
+            assert_eq!(n0.states[jj0][v].q_hat, n1.states[jj1][v].q_hat);
+        }
+    }
+}

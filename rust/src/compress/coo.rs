@@ -1,0 +1,152 @@
+//! Sparse COO vector: the wire format for compressed dual variables.
+//!
+//! Byte accounting matches the paper's tables: a transmitted COO vector
+//! costs `4 * nnz` bytes of u32 indices plus `4 * nnz` bytes of f32
+//! values (so C-ECL(10%) lands at ~x5 vs dense, exactly the paper's
+//! ratio). With the shared-seed mask both endpoints could skip the index
+//! half; that further halving is measured as an ablation
+//! (`repro ablation-wire`) rather than baked into the headline numbers,
+//! to stay comparable with the paper's accounting.
+
+/// Sparse vector in coordinate format over a dense dimension `d`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CooVec {
+    pub dim: usize,
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl CooVec {
+    pub fn new(dim: usize) -> CooVec {
+        CooVec {
+            dim,
+            idx: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(dim: usize, cap: usize) -> CooVec {
+        CooVec {
+            dim,
+            idx: Vec::with_capacity(cap),
+            val: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Gather `x` at `indices` (the comp(x; ω) of Example 1 with ω known).
+    pub fn gather(x: &[f32], indices: &[u32]) -> CooVec {
+        let mut v = CooVec::with_capacity(x.len(), indices.len());
+        for &i in indices {
+            v.idx.push(i);
+            v.val.push(x[i as usize]);
+        }
+        v
+    }
+
+    /// Re-fill from `x` at `indices`, reusing allocations (hot path).
+    pub fn gather_into(&mut self, x: &[f32], indices: &[u32]) {
+        self.dim = x.len();
+        self.idx.clear();
+        self.val.clear();
+        self.idx.extend_from_slice(indices);
+        for &i in indices {
+            self.val.push(x[i as usize]);
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Bytes on the wire (paper accounting: indices + values).
+    pub fn wire_bytes(&self) -> usize {
+        8 * self.nnz()
+    }
+
+    /// Bytes on the wire when the sparsity pattern is derivable from the
+    /// shared seed (values only).
+    pub fn wire_bytes_values_only(&self) -> usize {
+        4 * self.nnz()
+    }
+
+    /// Dense materialization (masked-out entries zero).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.scatter_into(&mut out);
+        out
+    }
+
+    /// Write into a pre-zeroed (or to-be-overwritten) dense buffer:
+    /// `out` is cleared then scattered. Reuses the allocation.
+    pub fn scatter_into_cleared(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.dim, 0.0);
+        self.scatter_into(out);
+    }
+
+    /// `out[idx[k]] = val[k]` (no clearing).
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+    }
+
+    /// `out[idx[k]] += alpha * val[k]` — the fused receive-side update.
+    pub fn axpy_into(&self, alpha: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += alpha * v;
+        }
+    }
+
+    /// Squared L2 norm of the sparse values.
+    pub fn norm2_sq(&self) -> f64 {
+        self.val.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let v = CooVec::gather(&x, &[1, 3]);
+        assert_eq!(v.nnz(), 2);
+        assert_eq!(v.to_dense(), vec![0.0, 2.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_into_reuses() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut v = CooVec::new(3);
+        v.gather_into(&x, &[0, 2]);
+        assert_eq!(v.val, vec![1.0, 3.0]);
+        v.gather_into(&x, &[1]);
+        assert_eq!(v.val, vec![2.0]);
+        assert_eq!(v.idx, vec![1]);
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let v = CooVec::gather(&[0.0; 100], &[1, 2, 3]);
+        assert_eq!(v.wire_bytes(), 24);
+        assert_eq!(v.wire_bytes_values_only(), 12);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut out = vec![1.0f32; 4];
+        let v = CooVec::gather(&[10.0, 20.0, 30.0, 40.0], &[0, 2]);
+        v.axpy_into(0.5, &mut out);
+        assert_eq!(out, vec![6.0, 1.0, 16.0, 1.0]);
+    }
+
+    #[test]
+    fn norm_matches_dense() {
+        let v = CooVec::gather(&[3.0, 0.0, 4.0], &[0, 2]);
+        assert!((v.norm2_sq() - 25.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,250 @@
+//! Low-rank (PowerGossip-style) compression primitives.
+//!
+//! PowerGossip (Vogels, Karimireddy, Jaggi 2020) compresses the per-edge
+//! model *difference* `D = M_lo − M_hi` (per layer matrix) with warm-
+//! started power iteration: both endpoints hold an identical unit vector
+//! `q̂`; each exchanges `p_x = M_x q̂` (rows floats) and `s_x = M_xᵀ p̂`
+//! (cols floats), from which both reconstruct the same rank-1
+//! approximation `p q̂ᵀ ≈ D` and the same next `q̂`.  The warm start
+//! across rounds is what makes one step per round sufficient in practice
+//! (the paper's PowerGossip(1) row).
+//!
+//! This module is the math; the exchange choreography lives in
+//! `algorithms::powergossip`.
+
+use crate::util::rng::Pcg;
+
+/// `p = M q` for a row-major `rows x cols` matrix stored in a flat slice.
+pub fn matvec_f32(m: &[f32], rows: usize, cols: usize, q: &[f32]) -> Vec<f32> {
+    assert_eq!(m.len(), rows * cols);
+    assert_eq!(q.len(), cols);
+    let mut p = vec![0.0f32; rows];
+    for r in 0..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        let mut acc = 0.0f32;
+        for (a, b) in row.iter().zip(q) {
+            acc += a * b;
+        }
+        p[r] = acc;
+    }
+    p
+}
+
+/// `s = Mᵀ p`.
+pub fn matvec_t_f32(m: &[f32], rows: usize, cols: usize, p: &[f32]) -> Vec<f32> {
+    assert_eq!(m.len(), rows * cols);
+    assert_eq!(p.len(), rows);
+    let mut s = vec![0.0f32; cols];
+    for r in 0..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        let pr = p[r];
+        if pr == 0.0 {
+            continue;
+        }
+        for (sj, a) in s.iter_mut().zip(row) {
+            *sj += a * pr;
+        }
+    }
+    s
+}
+
+/// `out += alpha * p qᵀ` (rank-1 update of a row-major matrix).
+pub fn rank1_axpy(out: &mut [f32], rows: usize, cols: usize, alpha: f32,
+                  p: &[f32], q: &[f32]) {
+    assert_eq!(out.len(), rows * cols);
+    assert_eq!(p.len(), rows);
+    assert_eq!(q.len(), cols);
+    for r in 0..rows {
+        let coeff = alpha * p[r];
+        if coeff == 0.0 {
+            continue;
+        }
+        let row = &mut out[r * cols..(r + 1) * cols];
+        for (o, &qj) in row.iter_mut().zip(q) {
+            *o += coeff * qj;
+        }
+    }
+}
+
+/// Normalize in place; returns the original norm. Zero vectors are left
+/// unchanged (norm 0 returned) so callers can re-randomize.
+pub fn normalize(v: &mut [f32]) -> f32 {
+    let norm = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+        as f32;
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    norm
+}
+
+/// One power-iteration step on the implicit difference `D = M_lo − M_hi`
+/// given both halves of the exchange. Returns `(p, q_hat_next)` where
+/// `p = D q̂` and `q_hat_next = normalize(Dᵀ p̂)`.
+///
+/// Both endpoints call this with the same inputs (their own half plus the
+/// received half), so the results are bit-identical on the two sides.
+pub fn power_iteration_step(
+    p_lo: &[f32],
+    p_hi: &[f32],
+    s_lo: &[f32],
+    s_hi: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let p: Vec<f32> = p_lo.iter().zip(p_hi).map(|(a, b)| a - b).collect();
+    let mut q_next: Vec<f32> =
+        s_lo.iter().zip(s_hi).map(|(a, b)| a - b).collect();
+    normalize(&mut q_next);
+    (p, q_next)
+}
+
+/// Warm-start state for one (edge, layer-matrix) pair. Both endpoints
+/// construct it from the same derived RNG, so `q_hat` starts identical
+/// and stays identical (all updates are deterministic functions of
+/// exchanged values).
+#[derive(Debug, Clone)]
+pub struct LowRankEdgeState {
+    pub q_hat: Vec<f32>,
+}
+
+impl LowRankEdgeState {
+    pub fn new(cols: usize, rng: &mut Pcg) -> LowRankEdgeState {
+        let mut q: Vec<f32> = (0..cols).map(|_| rng.normal_f32()).collect();
+        normalize(&mut q);
+        LowRankEdgeState { q_hat: q }
+    }
+
+    /// Re-randomize if power iteration collapsed (q ≈ 0, e.g. identical
+    /// matrices on both sides).
+    pub fn reseed_if_degenerate(&mut self, rng: &mut Pcg) {
+        let norm: f32 = self.q_hat.iter().map(|x| x * x).sum();
+        if norm < 1e-12 {
+            for x in self.q_hat.iter_mut() {
+                *x = rng.normal_f32();
+            }
+            normalize(&mut self.q_hat);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn matvec_agrees_with_f64_path() {
+        let rows = 7;
+        let cols = 5;
+        let m = randn(rows * cols, 1);
+        let q = randn(cols, 2);
+        let p = matvec_f32(&m, rows, cols, &q);
+        for r in 0..rows {
+            let want: f32 =
+                (0..cols).map(|c| m[r * cols + c] * q[c]).sum();
+            assert!((p[r] - want).abs() < 1e-5);
+        }
+        let s = matvec_t_f32(&m, rows, cols, &p);
+        for c in 0..cols {
+            let want: f32 = (0..rows).map(|r| m[r * cols + c] * p[r]).sum();
+            assert!((s[c] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rank1_axpy_known() {
+        let mut out = vec![0.0f32; 6];
+        rank1_axpy(&mut out, 2, 3, 2.0, &[1.0, 10.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 20.0, 40.0, 60.0]);
+    }
+
+    #[test]
+    fn power_iteration_converges_to_top_singular_direction() {
+        // D = sigma * u vᵀ exactly rank-1: one step from a generic q̂
+        // recovers p ∝ u and the approximation p q̂_nextᵀ ≈ D after a
+        // couple of iterations.
+        let rows = 12;
+        let cols = 9;
+        let mut u = randn(rows, 3);
+        let mut v = randn(cols, 4);
+        normalize(&mut u);
+        normalize(&mut v);
+        let sigma = 5.0f32;
+        // M_lo = sigma u vᵀ, M_hi = 0 → D = M_lo.
+        let mut m_lo = vec![0.0f32; rows * cols];
+        rank1_axpy(&mut m_lo, rows, cols, sigma, &u, &v);
+        let m_hi = vec![0.0f32; rows * cols];
+
+        let mut rng = Pcg::new(5);
+        let mut state = LowRankEdgeState::new(cols, &mut rng);
+        let mut p = vec![0.0f32; rows];
+        for _ in 0..3 {
+            let p_lo = matvec_f32(&m_lo, rows, cols, &state.q_hat);
+            let p_hi = matvec_f32(&m_hi, rows, cols, &state.q_hat);
+            let mut p_hat: Vec<f32> =
+                p_lo.iter().zip(&p_hi).map(|(a, b)| a - b).collect();
+            normalize(&mut p_hat);
+            let s_lo = matvec_t_f32(&m_lo, rows, cols, &p_hat);
+            let s_hi = matvec_t_f32(&m_hi, rows, cols, &p_hat);
+            let (pp, q_next) = power_iteration_step(&p_lo, &p_hi, &s_lo, &s_hi);
+            p = pp;
+            state.q_hat = q_next;
+        }
+        // Reconstruction error of p q̂ᵀ vs D should be tiny (D is rank-1).
+        let mut approx = vec![0.0f32; rows * cols];
+        rank1_axpy(&mut approx, rows, cols, 1.0, &p, &state.q_hat);
+        let err: f32 = approx
+            .iter()
+            .zip(&m_lo)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let norm: f32 = m_lo.iter().map(|x| x * x).sum();
+        assert!(err / norm < 1e-3, "rel err {}", err / norm);
+    }
+
+    #[test]
+    fn both_endpoints_stay_in_sync() {
+        // Simulate the two endpoints exchanging halves: derived identical
+        // q̂ initialization + deterministic updates = identical states.
+        let rows = 6;
+        let cols = 4;
+        let m_lo = randn(rows * cols, 6);
+        let m_hi = randn(rows * cols, 7);
+        let mut rng_a = Pcg::derive(9, &[5, 0]);
+        let mut rng_b = Pcg::derive(9, &[5, 0]);
+        let mut sa = LowRankEdgeState::new(cols, &mut rng_a);
+        let mut sb = LowRankEdgeState::new(cols, &mut rng_b);
+        assert_eq!(sa.q_hat, sb.q_hat);
+        for _ in 0..4 {
+            // endpoint A (= lo) computes its halves; endpoint B (= hi) its.
+            let p_lo = matvec_f32(&m_lo, rows, cols, &sa.q_hat);
+            let p_hi = matvec_f32(&m_hi, rows, cols, &sb.q_hat);
+            let mut p_hat: Vec<f32> =
+                p_lo.iter().zip(&p_hi).map(|(a, b)| a - b).collect();
+            normalize(&mut p_hat);
+            let s_lo = matvec_t_f32(&m_lo, rows, cols, &p_hat);
+            let s_hi = matvec_t_f32(&m_hi, rows, cols, &p_hat);
+            let (_, qa) = power_iteration_step(&p_lo, &p_hi, &s_lo, &s_hi);
+            let (_, qb) = power_iteration_step(&p_lo, &p_hi, &s_lo, &s_hi);
+            assert_eq!(qa, qb);
+            sa.q_hat = qa;
+            sb.q_hat = qb;
+        }
+    }
+
+    #[test]
+    fn degenerate_reseed() {
+        let mut rng = Pcg::new(11);
+        let mut s = LowRankEdgeState {
+            q_hat: vec![0.0; 8],
+        };
+        s.reseed_if_degenerate(&mut rng);
+        let norm: f32 = s.q_hat.iter().map(|x| x * x).sum();
+        assert!((norm - 1.0).abs() < 1e-4);
+    }
+}

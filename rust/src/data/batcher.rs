@@ -1,0 +1,129 @@
+//! Per-node minibatch scheduling: shuffled epochs, fixed batch size,
+//! wrap-around so every epoch yields exactly `n / batch` (ceil) batches
+//! of the full AOT-compiled batch shape.
+
+use super::Dataset;
+use crate::util::rng::{streams, Pcg};
+
+/// Iterates shuffled minibatches over one node's dataset.
+pub struct Batcher {
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Pcg,
+    epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64, node: usize) -> Batcher {
+        assert!(batch > 0 && n >= batch, "need n >= batch (n={n}, b={batch})");
+        let mut rng = Pcg::derive(seed, &[streams::BATCH, node as u64]);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Batcher {
+            order,
+            cursor: 0,
+            batch,
+            rng,
+            epoch: 0,
+        }
+    }
+
+    /// Batches per epoch (floor; the tail wraps into the next epoch's
+    /// shuffle so every sample is seen at equal long-run frequency).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len() / self.batch
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Fill `x`/`y` with the next minibatch from `data`.
+    pub fn next_batch(&mut self, data: &Dataset, x: &mut [f32], y: &mut [i32]) {
+        let slen = data.sample_len;
+        assert_eq!(x.len(), self.batch * slen);
+        assert_eq!(y.len(), self.batch);
+        for b in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+                self.epoch += 1;
+            }
+            let i = self.order[self.cursor];
+            self.cursor += 1;
+            x[b * slen..(b + 1) * slen].copy_from_slice(data.sample(i));
+            y[b] = data.y[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Generator, SyntheticSpec};
+
+    fn tiny_dataset(n: usize) -> Dataset {
+        let spec = SyntheticSpec::for_dataset("t", 4, 4, 1, 3, 1);
+        let g = Generator::new(&spec);
+        let mut rng = Pcg::new(2);
+        g.generate(&[0, 1, 2], n, &mut rng)
+    }
+
+    #[test]
+    fn batches_cover_dataset_each_epoch() {
+        let data = tiny_dataset(12);
+        let mut b = Batcher::new(12, 4, 5, 0);
+        assert_eq!(b.batches_per_epoch(), 3);
+        let mut seen = vec![0usize; 3];
+        let mut x = vec![0.0; 4 * 16];
+        let mut y = vec![0i32; 4];
+        for _ in 0..3 {
+            b.next_batch(&data, &mut x, &mut y);
+            for &label in &y {
+                seen[label as usize] += 1;
+            }
+        }
+        // 12 samples, 4 per class.
+        assert_eq!(seen, vec![4, 4, 4]);
+        assert_eq!(b.epoch(), 0);
+        b.next_batch(&data, &mut x, &mut y);
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn batch_contents_match_dataset() {
+        let data = tiny_dataset(8);
+        let mut b = Batcher::new(8, 2, 7, 1);
+        let mut x = vec![0.0; 2 * 16];
+        let mut y = vec![0i32; 2];
+        b.next_batch(&data, &mut x, &mut y);
+        // Find which sample the first row is — must match its label.
+        let row = &x[0..16];
+        let idx = (0..8).find(|&i| data.sample(i) == row).expect("in set");
+        assert_eq!(data.y[idx], y[0]);
+    }
+
+    #[test]
+    fn deterministic_per_node_seed() {
+        let data = tiny_dataset(8);
+        let mut b1 = Batcher::new(8, 4, 9, 3);
+        let mut b2 = Batcher::new(8, 4, 9, 3);
+        let mut b3 = Batcher::new(8, 4, 9, 4);
+        let (mut x1, mut y1) = (vec![0.0; 64], vec![0i32; 4]);
+        let (mut x2, mut y2) = (vec![0.0; 64], vec![0i32; 4]);
+        let (mut x3, mut y3) = (vec![0.0; 64], vec![0i32; 4]);
+        b1.next_batch(&data, &mut x1, &mut y1);
+        b2.next_batch(&data, &mut x2, &mut y2);
+        b3.next_batch(&data, &mut x3, &mut y3);
+        assert_eq!(y1, y2);
+        assert_eq!(x1, x2);
+        assert_ne!(y1, y3); // different node, different shuffle (w.h.p.)
+    }
+
+    #[test]
+    #[should_panic]
+    fn batch_larger_than_dataset_rejected() {
+        let _ = Batcher::new(3, 4, 0, 0);
+    }
+}

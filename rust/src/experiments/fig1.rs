@@ -1,0 +1,91 @@
+//! Figure 1: test-accuracy curves for the four topologies under both
+//! data splits.  Emits one CSV per (topology, partition) with an
+//! `epoch` column plus one column per method — ready to plot.
+
+use anyhow::Result;
+
+use crate::algorithms::AlgorithmSpec;
+use crate::coordinator::run_with_engine;
+use crate::data::Partition;
+use crate::graph::{Graph, Topology};
+use crate::model::Manifest;
+use crate::runtime::Engine;
+use crate::util::table::Table;
+
+use super::{results_dir, Sizing};
+
+/// The figure's method set (paper Fig. 1 legend).
+pub fn figure_methods() -> Vec<AlgorithmSpec> {
+    vec![
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::PowerGossip { iters: 10 },
+        AlgorithmSpec::CEcl { k_frac: 0.10, theta: 1.0, dense_first_epoch: true },
+    ]
+}
+
+/// Run the full figure (or a subset of topologies). Returns the list of
+/// CSV paths written.
+pub fn run_fig1(
+    engine: &Engine,
+    manifest: &Manifest,
+    sizing: &Sizing,
+    topologies: &[Topology],
+) -> Result<Vec<std::path::PathBuf>> {
+    let ds = sizing
+        .datasets
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "fashion".to_string());
+    let methods = figure_methods();
+    let partitions = [
+        Partition::Homogeneous,
+        Partition::Heterogeneous { classes_per_node: 8 },
+    ];
+    let mut written = Vec::new();
+    for &topology in topologies {
+        let graph = Graph::build(topology, sizing.nodes);
+        for partition in partitions {
+            let mut series: Vec<Vec<(usize, f64)>> = Vec::new();
+            for alg in &methods {
+                let mut spec = sizing.spec_base(&ds, partition);
+                spec.algorithm = alg.clone();
+                eprintln!(
+                    "[fig1] {} / {} / {} ...",
+                    topology.name(),
+                    partition.name(),
+                    alg.name()
+                );
+                let report = run_with_engine(engine, manifest, &spec, &graph)?;
+                series.push(report.history.accuracy_series());
+            }
+            // Assemble: all series share the eval schedule.
+            let epochs: Vec<usize> =
+                series[0].iter().map(|&(e, _)| e).collect();
+            let mut headers = vec!["epoch".to_string()];
+            headers.extend(methods.iter().map(|m| m.name()));
+            let mut t = Table::new(headers);
+            for (row_i, &epoch) in epochs.iter().enumerate() {
+                let mut row = vec![epoch.to_string()];
+                for s in &series {
+                    row.push(format!("{:.4}", s[row_i].1));
+                }
+                t.row(row);
+            }
+            let path = results_dir().join(format!(
+                "fig1_{}_{}.csv",
+                topology.name(),
+                if partition == Partition::Homogeneous {
+                    "homogeneous"
+                } else {
+                    "heterogeneous"
+                }
+            ));
+            t.write_csv(&path)?;
+            println!("--- fig1: {} / {} ---", topology.name(), partition.name());
+            println!("{}", t.render());
+            written.push(path);
+        }
+    }
+    Ok(written)
+}

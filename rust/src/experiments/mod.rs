@@ -1,0 +1,136 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation
+//! section (see DESIGN.md §4 for the index).
+
+pub mod ablations;
+pub mod fig1;
+pub mod tables;
+pub mod theory;
+
+use crate::algorithms::DualPath;
+use crate::data::Partition;
+use crate::util::cli::Args;
+
+/// Shared sizing knobs for the CNN experiments, scaled to this CPU
+/// testbed (DESIGN.md §2). Every driver accepts CLI overrides.
+#[derive(Debug, Clone)]
+pub struct Sizing {
+    pub nodes: usize,
+    pub epochs: usize,
+    pub train_per_node: usize,
+    pub test_size: usize,
+    pub eta: f32,
+    pub local_steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub dual_path: DualPath,
+    pub verbose: bool,
+    /// Restrict to these dataset configs (default: both).
+    pub datasets: Vec<String>,
+}
+
+impl Default for Sizing {
+    fn default() -> Self {
+        Sizing {
+            nodes: 8,
+            epochs: 16,
+            train_per_node: 500,
+            test_size: 1000,
+            eta: 0.02,
+            local_steps: 5,
+            eval_every: 4,
+            seed: 42,
+            dual_path: DualPath::Native,
+            verbose: false,
+            datasets: vec!["fashion".to_string(), "cifar".to_string()],
+        }
+    }
+}
+
+impl Sizing {
+    /// Apply `--epochs`, `--nodes`, `--train-per-node`, `--test-size`,
+    /// `--eta`, `--local-steps`, `--eval-every`, `--seed`, `--dataset`,
+    /// `--dual-path`, `--verbose` overrides.
+    pub fn from_args(args: &Args) -> Sizing {
+        let mut s = Sizing::default();
+        s.nodes = args.get("nodes", s.nodes);
+        s.epochs = args.get("epochs", s.epochs);
+        s.train_per_node = args.get("train-per-node", s.train_per_node);
+        s.test_size = args.get("test-size", s.test_size);
+        s.eta = args.get("eta", s.eta);
+        s.local_steps = args.get("local-steps", s.local_steps);
+        s.eval_every = args.get("eval-every", s.eval_every);
+        s.seed = args.get("seed", s.seed);
+        s.verbose = args.flag("verbose");
+        if let Some(ds) = args.get_opt::<String>("dataset") {
+            s.datasets = vec![ds];
+        }
+        match args.get_str("dual-path", "native").as_str() {
+            "native" => s.dual_path = DualPath::Native,
+            "pjrt" => s.dual_path = DualPath::Pjrt,
+            other => panic!("--dual-path {other}: use native|pjrt"),
+        }
+        s
+    }
+
+    pub fn spec_base(&self, dataset: &str,
+                     partition: Partition) -> crate::coordinator::ExperimentSpec {
+        crate::coordinator::ExperimentSpec {
+            dataset: dataset.to_string(),
+            epochs: self.epochs,
+            nodes: self.nodes,
+            train_per_node: self.train_per_node,
+            test_size: self.test_size,
+            partition,
+            local_steps: self.local_steps,
+            eta: self.eta,
+            eval_every: self.eval_every,
+            seed: self.seed,
+            dual_path: self.dual_path,
+            verbose: self.verbose,
+            ..Default::default()
+        }
+    }
+}
+
+/// Results directory (created on demand).
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from(
+        std::env::var("CECL_RESULTS").unwrap_or_else(|_| "results".to_string()),
+    );
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizing_overrides() {
+        let args = Args::parse(
+            "x --epochs 3 --dataset cifar --eta 0.5 --dual-path pjrt --verbose"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let s = Sizing::from_args(&args);
+        assert_eq!(s.epochs, 3);
+        assert_eq!(s.datasets, vec!["cifar".to_string()]);
+        assert_eq!(s.dual_path, DualPath::Pjrt);
+        assert!(s.verbose);
+        assert!((s.eta - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spec_base_carries_partition() {
+        let s = Sizing::default();
+        let spec = s.spec_base(
+            "fashion",
+            Partition::Heterogeneous { classes_per_node: 8 },
+        );
+        assert_eq!(
+            spec.partition,
+            Partition::Heterogeneous { classes_per_node: 8 }
+        );
+        assert_eq!(spec.dataset, "fashion");
+    }
+}

@@ -1,0 +1,145 @@
+//! Tables 1–3 of the paper.
+//!
+//! * Table 1 — accuracy + Send/Epoch, homogeneous split, ring(8).
+//! * Table 2 — same, heterogeneous (8-of-10 classes per node).
+//! * Table 3 — Send/Epoch across chain / ring / multiplex ring / fully
+//!   connected for {D-PSGD, ECL, PowerGossip(10), C-ECL(10%)}.
+
+use anyhow::Result;
+
+use crate::algorithms::AlgorithmSpec;
+use crate::coordinator::{run_with_engine, Report};
+use crate::data::Partition;
+use crate::graph::{Graph, Topology};
+use crate::model::Manifest;
+use crate::runtime::Engine;
+use crate::util::table::{kb_with_ratio, Table};
+
+use super::{results_dir, Sizing};
+
+/// The comparison ladder of Tables 1–2, in the paper's row order.
+pub fn comparison_methods() -> Vec<AlgorithmSpec> {
+    vec![
+        AlgorithmSpec::Sgd,
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::PowerGossip { iters: 1 },
+        AlgorithmSpec::PowerGossip { iters: 10 },
+        AlgorithmSpec::PowerGossip { iters: 20 },
+        AlgorithmSpec::CEcl { k_frac: 0.01, theta: 1.0, dense_first_epoch: true },
+        AlgorithmSpec::CEcl { k_frac: 0.10, theta: 1.0, dense_first_epoch: true },
+        AlgorithmSpec::CEcl { k_frac: 0.20, theta: 1.0, dense_first_epoch: true },
+    ]
+}
+
+/// Run one accuracy table (Table 1 or 2). Returns the rendered table and
+/// the raw reports (also written to `results/`).
+pub fn run_accuracy_table(
+    engine: &Engine,
+    manifest: &Manifest,
+    sizing: &Sizing,
+    partition: Partition,
+    label: &str,
+) -> Result<(Table, Vec<Report>)> {
+    let graph = Graph::ring(sizing.nodes);
+    let methods = comparison_methods();
+    let mut headers = vec!["method".to_string()];
+    for ds in &sizing.datasets {
+        headers.push(format!("{ds} acc"));
+        headers.push(format!("{ds} send/epoch"));
+    }
+    let mut table = Table::new(headers);
+    let mut reports = Vec::new();
+
+    // Per dataset: run all methods; D-PSGD's bytes are the x1.0 baseline.
+    let mut rows: Vec<Vec<String>> =
+        methods.iter().map(|m| vec![m.name()]).collect();
+    for ds in &sizing.datasets {
+        let mut per_method: Vec<Report> = Vec::new();
+        for spec_alg in &methods {
+            let mut spec = sizing.spec_base(ds, partition);
+            spec.algorithm = spec_alg.clone();
+            eprintln!("[{label}] {ds} / {} ...", spec_alg.name());
+            let report = run_with_engine(engine, manifest, &spec, &graph)?;
+            eprintln!(
+                "[{label}]   acc {:.3} best {:.3} send/epoch {:.0} KB ({:.1}s)",
+                report.final_accuracy,
+                report.best_accuracy,
+                report.mean_bytes_per_epoch / 1024.0,
+                report.wallclock_secs
+            );
+            per_method.push(report);
+        }
+        let baseline = per_method
+            .iter()
+            .zip(&methods)
+            .find(|(_, m)| matches!(m, AlgorithmSpec::DPsgd))
+            .map(|(r, _)| r.mean_bytes_per_epoch)
+            .unwrap_or(0.0);
+        for (row, report) in rows.iter_mut().zip(&per_method) {
+            row.push(format!("{:.1}", report.best_accuracy * 100.0));
+            row.push(if report.mean_bytes_per_epoch > 0.0 {
+                kb_with_ratio(report.mean_bytes_per_epoch, baseline)
+            } else {
+                "-".to_string()
+            });
+        }
+        reports.extend(per_method);
+    }
+    for row in rows {
+        table.row(row);
+    }
+    table
+        .write_csv(results_dir().join(format!("{label}.csv")))
+        .ok();
+    Ok((table, reports))
+}
+
+/// Table 3: Send/Epoch per topology. Runs short (bytes are per-round
+/// deterministic), with the dense warmup disabled to report the steady
+/// state like the paper.
+pub fn run_topology_table(
+    engine: &Engine,
+    manifest: &Manifest,
+    sizing: &Sizing,
+) -> Result<Table> {
+    let methods: Vec<AlgorithmSpec> = vec![
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::PowerGossip { iters: 10 },
+        AlgorithmSpec::CEcl { k_frac: 0.10, theta: 1.0, dense_first_epoch: false },
+    ];
+    let ds = sizing
+        .datasets
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "fashion".to_string());
+    let mut headers = vec!["method".to_string()];
+    for t in Topology::paper_set() {
+        headers.push(t.name().to_string());
+    }
+    let mut table = Table::new(headers);
+    let mut rows: Vec<Vec<String>> =
+        methods.iter().map(|m| vec![m.name()]).collect();
+    for topology in Topology::paper_set() {
+        let graph = Graph::build(topology, sizing.nodes);
+        for (row, alg) in rows.iter_mut().zip(&methods) {
+            let mut spec = sizing.spec_base(&ds, Partition::Homogeneous);
+            spec.algorithm = alg.clone();
+            // Bytes/epoch are deterministic: 2 epochs suffice.
+            spec.epochs = 2;
+            spec.eval_every = 2;
+            eprintln!("[table3] {} / {} ...", topology.name(), alg.name());
+            let report = run_with_engine(engine, manifest, &spec, &graph)?;
+            row.push(format!(
+                "{:.0} KB",
+                report.mean_bytes_per_epoch / 1024.0
+            ));
+        }
+    }
+    for row in rows {
+        table.row(row);
+    }
+    table.write_csv(results_dir().join("table3.csv")).ok();
+    Ok(table)
+}

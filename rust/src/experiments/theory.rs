@@ -1,0 +1,161 @@
+//! Theorem 1 / Corollaries 1–3 validation on the convex-quadratic
+//! substrate: measured linear rates vs the theoretical contraction
+//! bound, the τ threshold, and the θ* = 1 optimality.
+
+use anyhow::Result;
+
+use crate::graph::Graph;
+use crate::quadratic::{
+    rate_bound, run_cecl, tau_threshold, theta_domain, DualRule,
+    QuadraticNetwork,
+};
+use crate::util::stats::empirical_rate;
+use crate::util::table::Table;
+
+use super::results_dir;
+
+/// Configuration for the theory experiment.
+#[derive(Debug, Clone)]
+pub struct TheoryConfig {
+    pub nodes: usize,
+    pub dim: usize,
+    pub rows: usize,
+    pub ridge: f64,
+    pub hetero: f64,
+    pub rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for TheoryConfig {
+    fn default() -> Self {
+        TheoryConfig {
+            nodes: 8,
+            dim: 24,
+            rows: 40,
+            ridge: 0.5,
+            hetero: 0.5,
+            rounds: 200,
+            seed: 42,
+        }
+    }
+}
+
+/// Run the full theory suite; prints tables and writes CSVs. Returns the
+/// (tau sweep, theta sweep) tables.
+pub fn run_theory(cfg: &TheoryConfig) -> Result<(Table, Table)> {
+    let graph = Graph::ring(cfg.nodes);
+    let net = QuadraticNetwork::random(
+        cfg.nodes, cfg.dim, cfg.rows, cfg.ridge, cfg.hetero, cfg.seed,
+    );
+    let alpha = net.best_alpha(&graph);
+    let delta = net.delta(alpha, &graph);
+    let threshold = tau_threshold(delta);
+    println!(
+        "quadratic network: L={:.3} mu={:.3} alpha*={:.4} delta={:.4} \
+         tau_threshold={:.4}",
+        net.l_smooth, net.mu, alpha, delta, threshold
+    );
+
+    // ---- τ sweep at θ = 1 (Theorem 1 + Corollary 1 at τ = 1) ---------
+    let mut tau_table = Table::new([
+        "tau (k%)",
+        "theta domain",
+        "bound rho",
+        "measured rate",
+        "final error",
+        "converged",
+    ]);
+    let mut curves: Vec<(String, Vec<f64>)> = Vec::new();
+    let taus = [1.0, 0.9, 0.7, 0.5, (threshold + 1.0) / 2.0, threshold * 0.5];
+    for &tau in &taus {
+        let dom = theta_domain(tau, delta);
+        let errors = run_cecl(
+            &net, &graph, alpha, 1.0, tau, cfg.rounds, cfg.seed,
+            DualRule::CompressDiff,
+        );
+        let tail_start = cfg.rounds / 5;
+        let rate = empirical_rate(&errors[tail_start..]);
+        let bound = rate_bound(1.0, tau, delta);
+        let final_err = *errors.last().unwrap();
+        let converged = final_err < errors[0] * 1e-3;
+        tau_table.row([
+            format!("{tau:.3}"),
+            dom.map(|(lo, hi)| format!("({lo:.3}, {hi:.3})"))
+                .unwrap_or_else(|| "empty".to_string()),
+            format!("{bound:.4}"),
+            format!("{rate:.4}"),
+            format!("{final_err:.3e}"),
+            converged.to_string(),
+        ]);
+        curves.push((format!("tau={tau:.3}"), errors));
+    }
+    println!("--- Theorem 1: tau sweep (theta = 1) ---");
+    println!("{}", tau_table.render());
+
+    // ---- θ sweep at fixed τ (Corollary 2: θ* = 1) --------------------
+    let tau = (threshold + 1.0) / 2.0;
+    let mut theta_table =
+        Table::new(["theta", "in domain", "bound rho", "measured rate"]);
+    for theta in [0.25, 0.5, 0.75, 1.0, 1.25] {
+        let dom = theta_domain(tau, delta);
+        let in_dom = dom
+            .map(|(lo, hi)| theta > lo && theta < hi)
+            .unwrap_or(false);
+        let errors = run_cecl(
+            &net, &graph, alpha, theta, tau, cfg.rounds, cfg.seed,
+            DualRule::CompressDiff,
+        );
+        let rate = empirical_rate(&errors[cfg.rounds / 5..]);
+        theta_table.row([
+            format!("{theta:.2}"),
+            in_dom.to_string(),
+            format!("{:.4}", rate_bound(theta, tau, delta)),
+            format!("{rate:.4}"),
+        ]);
+    }
+    println!("--- Corollary 2: theta sweep (tau = {tau:.3}) ---");
+    println!("{}", theta_table.render());
+
+    // ---- Convergence curves CSV --------------------------------------
+    let max_len = curves.iter().map(|(_, e)| e.len()).max().unwrap_or(0);
+    let mut headers = vec!["round".to_string()];
+    headers.extend(curves.iter().map(|(n, _)| n.clone()));
+    let mut curve_table = Table::new(headers);
+    for r in 0..max_len {
+        let mut row = vec![r.to_string()];
+        for (_, e) in &curves {
+            row.push(
+                e.get(r).map(|v| format!("{v:.6e}")).unwrap_or_default(),
+            );
+        }
+        curve_table.row(row);
+    }
+    curve_table.write_csv(results_dir().join("theory_curves.csv"))?;
+    tau_table.write_csv(results_dir().join("theory_tau.csv"))?;
+    theta_table.write_csv(results_dir().join("theory_theta.csv"))?;
+    Ok((tau_table, theta_table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theory_suite_runs_small() {
+        let cfg = TheoryConfig {
+            nodes: 4,
+            dim: 6,
+            rows: 10,
+            rounds: 60,
+            ..Default::default()
+        };
+        let dir = std::env::temp_dir().join("cecl_theory_test");
+        std::env::set_var("CECL_RESULTS", &dir);
+        let (tau, theta) = run_theory(&cfg).unwrap();
+        std::env::remove_var("CECL_RESULTS");
+        assert!(!tau.is_empty());
+        assert!(!theta.is_empty());
+        assert!(dir.join("theory_curves.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

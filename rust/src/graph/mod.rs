@@ -1,0 +1,413 @@
+//! Network topology substrate: the undirected connected graph
+//! G = (V, E) of §2.1, the four topologies of the paper's §5.3 (chain,
+//! ring, multiplex ring, fully connected), Metropolis–Hastings gossip
+//! weights (Xiao–Boyd–Kim 2007, used by D-PSGD / PowerGossip per the
+//! paper's §D.1), and the A_{i|j} = ±I edge-sign convention of Eq. (2).
+
+use crate::util::rng::Pcg;
+
+/// The topologies evaluated in the paper (§5.3, Fig. 2) plus extras.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    Chain,
+    Ring,
+    /// Ring plus all 2-hop chords (the paper's “multiplex ring”).
+    MultiplexRing,
+    FullyConnected,
+    Star,
+    /// Connected Erdős–Rényi-style random graph with given extra-edge
+    /// probability (beyond a spanning ring that guarantees connectivity).
+    Random { extra_p_percent: u8, seed: u64 },
+}
+
+impl Topology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Chain => "chain",
+            Topology::Ring => "ring",
+            Topology::MultiplexRing => "multiplex-ring",
+            Topology::FullyConnected => "fully-connected",
+            Topology::Star => "star",
+            Topology::Random { .. } => "random",
+        }
+    }
+
+    /// Parse from CLI names.
+    pub fn from_name(name: &str) -> Option<Topology> {
+        match name {
+            "chain" => Some(Topology::Chain),
+            "ring" => Some(Topology::Ring),
+            "multiplex-ring" | "multiplex_ring" | "multiplex" => {
+                Some(Topology::MultiplexRing)
+            }
+            "fully-connected" | "complete" | "full" => {
+                Some(Topology::FullyConnected)
+            }
+            "star" => Some(Topology::Star),
+            _ => None,
+        }
+    }
+
+    /// The paper's four evaluation topologies (§5.3 order).
+    pub fn paper_set() -> [Topology; 4] {
+        [
+            Topology::Chain,
+            Topology::Ring,
+            Topology::MultiplexRing,
+            Topology::FullyConnected,
+        ]
+    }
+}
+
+/// Undirected connected graph over nodes `0..n`.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    n: usize,
+    /// Canonical edge list, each with `i < j`, sorted.
+    edges: Vec<(usize, usize)>,
+    /// Per-node sorted neighbor lists.
+    neighbors: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Build from an explicit edge list (self-loops and duplicates are
+    /// rejected). Panics if not connected — decentralized learning
+    /// assumes a connected G (paper §2.1 / Assumption 4).
+    pub fn from_edges(n: usize, raw: &[(usize, usize)]) -> Graph {
+        assert!(n > 0, "empty graph");
+        let mut edges: Vec<(usize, usize)> = raw
+            .iter()
+            .map(|&(a, b)| {
+                assert!(a != b, "self-loop {a}");
+                assert!(a < n && b < n, "edge ({a},{b}) out of range");
+                (a.min(b), a.max(b))
+            })
+            .collect();
+        edges.sort_unstable();
+        let before = edges.len();
+        edges.dedup();
+        assert_eq!(before, edges.len(), "duplicate edges");
+        let mut neighbors = vec![Vec::new(); n];
+        for &(a, b) in &edges {
+            neighbors[a].push(b);
+            neighbors[b].push(a);
+        }
+        for nb in &mut neighbors {
+            nb.sort_unstable();
+        }
+        let g = Graph {
+            n,
+            edges,
+            neighbors,
+        };
+        assert!(g.is_connected(), "graph must be connected");
+        g
+    }
+
+    pub fn build(topology: Topology, n: usize) -> Graph {
+        match topology {
+            Topology::Chain => Graph::chain(n),
+            Topology::Ring => Graph::ring(n),
+            Topology::MultiplexRing => Graph::multiplex_ring(n),
+            Topology::FullyConnected => Graph::complete(n),
+            Topology::Star => Graph::star(n),
+            Topology::Random {
+                extra_p_percent,
+                seed,
+            } => Graph::random(n, extra_p_percent as f64 / 100.0, seed),
+        }
+    }
+
+    pub fn chain(n: usize) -> Graph {
+        let edges: Vec<_> = (0..n.saturating_sub(1)).map(|i| (i, i + 1)).collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    pub fn ring(n: usize) -> Graph {
+        assert!(n >= 3, "ring needs >= 3 nodes");
+        let mut edges: Vec<_> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        edges.push((n - 1, 0));
+        Graph::from_edges(n, &edges)
+    }
+
+    /// Ring plus the 2-hop chords — every node has degree 4 (for n >= 5).
+    pub fn multiplex_ring(n: usize) -> Graph {
+        assert!(n >= 5, "multiplex ring needs >= 5 nodes");
+        let mut edges = Vec::new();
+        for i in 0..n {
+            edges.push((i, (i + 1) % n));
+            edges.push((i, (i + 2) % n));
+        }
+        // from_edges canonicalizes + dedups via assert, so dedup here.
+        let mut canon: Vec<_> = edges
+            .into_iter()
+            .map(|(a, b)| (a.min(b), a.max(b)))
+            .collect();
+        canon.sort_unstable();
+        canon.dedup();
+        Graph::from_edges(n, &canon)
+    }
+
+    pub fn complete(n: usize) -> Graph {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                edges.push((i, j));
+            }
+        }
+        Graph::from_edges(n, &edges)
+    }
+
+    pub fn star(n: usize) -> Graph {
+        assert!(n >= 2);
+        let edges: Vec<_> = (1..n).map(|i| (0, i)).collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    /// Spanning ring + independent extra edges with probability `p`.
+    pub fn random(n: usize, p: f64, seed: u64) -> Graph {
+        let mut rng = Pcg::new(seed);
+        let mut edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        for i in 0..n {
+            for j in (i + 2)..n {
+                if (i, j) == (0, n - 1) {
+                    continue; // already a ring edge
+                }
+                if rng.bernoulli(p) {
+                    edges.push((i, j));
+                }
+            }
+        }
+        let mut canon: Vec<_> = edges
+            .into_iter()
+            .map(|(a, b)| (a.min(b), a.max(b)))
+            .collect();
+        canon.sort_unstable();
+        canon.dedup();
+        Graph::from_edges(n, &canon)
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.neighbors[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    /// N_min of Theorem 1.
+    pub fn min_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).min().unwrap()
+    }
+
+    /// N_max of Theorem 1.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap()
+    }
+
+    /// Index of edge `(i, j)` in the canonical list.
+    pub fn edge_index(&self, i: usize, j: usize) -> Option<usize> {
+        let key = (i.min(j), i.max(j));
+        self.edges.binary_search(&key).ok()
+    }
+
+    /// The Eq. (2) sign: `A_{i|j} = +I` if `i < j` else `-I`.
+    #[inline]
+    pub fn edge_sign(&self, i: usize, j: usize) -> f32 {
+        if i < j {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return false;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &u in &self.neighbors[v] {
+                if !seen[u] {
+                    seen[u] = true;
+                    count += 1;
+                    stack.push(u);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Metropolis–Hastings mixing weights (paper §D.1): for `(i, j) ∈ E`
+    /// `W_ij = 1 / (1 + max(deg_i, deg_j))`, `W_ii = 1 − Σ_j W_ij`.
+    /// Symmetric and doubly stochastic.
+    pub fn mh_weights(&self) -> Vec<Vec<f64>> {
+        let n = self.n;
+        let mut w = vec![vec![0.0; n]; n];
+        for &(i, j) in &self.edges {
+            let wij = 1.0 / (1.0 + self.degree(i).max(self.degree(j)) as f64);
+            w[i][j] = wij;
+            w[j][i] = wij;
+        }
+        for (i, row) in w.iter_mut().enumerate() {
+            let off: f64 = row.iter().sum();
+            row[i] = 1.0 - off;
+        }
+        w
+    }
+
+    /// ASCII rendering of the adjacency structure (Fig. 2 stand-in).
+    pub fn ascii_viz(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} nodes, {} edges, degree [{}, {}]\n",
+            self.n,
+            self.edges.len(),
+            self.min_degree(),
+            self.max_degree()
+        ));
+        out.push_str("    ");
+        for j in 0..self.n {
+            out.push_str(&format!("{j:>2} "));
+        }
+        out.push('\n');
+        for i in 0..self.n {
+            out.push_str(&format!("{i:>2} |"));
+            for j in 0..self.n {
+                let c = if i == j {
+                    " . "
+                } else if self.edge_index(i, j).is_some() {
+                    " # "
+                } else {
+                    "   "
+                };
+                out.push_str(c);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_topologies_eight_nodes() {
+        // Degrees match Fig. 2: chain 1..2, ring 2, multiplex ring 4,
+        // complete 7.
+        let chain = Graph::chain(8);
+        assert_eq!(chain.edges().len(), 7);
+        assert_eq!(chain.min_degree(), 1);
+        assert_eq!(chain.max_degree(), 2);
+
+        let ring = Graph::ring(8);
+        assert_eq!(ring.edges().len(), 8);
+        assert_eq!(ring.min_degree(), 2);
+        assert_eq!(ring.max_degree(), 2);
+
+        let mring = Graph::multiplex_ring(8);
+        assert_eq!(mring.edges().len(), 16);
+        assert_eq!(mring.min_degree(), 4);
+        assert_eq!(mring.max_degree(), 4);
+
+        let full = Graph::complete(8);
+        assert_eq!(full.edges().len(), 28);
+        assert_eq!(full.min_degree(), 7);
+    }
+
+    #[test]
+    fn edge_lookup_and_sign() {
+        let g = Graph::ring(5);
+        assert!(g.edge_index(0, 1).is_some());
+        assert!(g.edge_index(1, 0).is_some());
+        assert!(g.edge_index(0, 2).is_none());
+        assert_eq!(g.edge_sign(0, 1), 1.0);
+        assert_eq!(g.edge_sign(1, 0), -1.0);
+        // Constraint: A_{i|j} + A_{j|i} = 0 pairing (Eq. 2).
+        for &(i, j) in g.edges() {
+            assert_eq!(g.edge_sign(i, j) + g.edge_sign(j, i), 0.0);
+        }
+    }
+
+    #[test]
+    fn neighbors_sorted_and_symmetric() {
+        let g = Graph::multiplex_ring(8);
+        for i in 0..g.n() {
+            let nb = g.neighbors(i);
+            assert!(nb.windows(2).all(|w| w[0] < w[1]));
+            for &j in nb {
+                assert!(g.neighbors(j).contains(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn mh_weights_doubly_stochastic() {
+        for g in [Graph::chain(8), Graph::ring(8), Graph::star(6)] {
+            let w = g.mh_weights();
+            for i in 0..g.n() {
+                let row: f64 = w[i].iter().sum();
+                assert!((row - 1.0).abs() < 1e-12);
+                for j in 0..g.n() {
+                    assert!((w[i][j] - w[j][i]).abs() < 1e-15);
+                    assert!(w[i][j] >= -1e-15);
+                    if i != j && g.edge_index(i, j).is_none() {
+                        assert_eq!(w[i][j], 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "connected")]
+    fn disconnected_rejected() {
+        let _ = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn self_loop_rejected() {
+        let _ = Graph::from_edges(3, &[(0, 0), (0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn random_graph_connected_and_deterministic() {
+        let a = Graph::random(12, 0.2, 7);
+        let b = Graph::random(12, 0.2, 7);
+        assert!(a.is_connected());
+        assert_eq!(a.edges(), b.edges());
+        let c = Graph::random(12, 0.2, 8);
+        assert_ne!(a.edges(), c.edges());
+    }
+
+    #[test]
+    fn topology_names_roundtrip() {
+        for t in Topology::paper_set() {
+            assert_eq!(Topology::from_name(t.name()), Some(t));
+        }
+        assert_eq!(Topology::from_name("nope"), None);
+    }
+
+    #[test]
+    fn ascii_viz_contains_all_nodes() {
+        let viz = Graph::ring(5).ascii_viz();
+        assert!(viz.contains("5 nodes, 5 edges"));
+        assert!(viz.lines().count() >= 7);
+    }
+}

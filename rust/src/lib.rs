@@ -1,0 +1,65 @@
+//! # cecl — Communication-Compressed Edge-Consensus Learning
+//!
+//! A production-quality reproduction of *“Communication Compression for
+//! Decentralized Learning with Operator Splitting Methods”* (Takezawa,
+//! Niwa, Yamada, 2022) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the decentralized-training coordinator: node
+//!   threads over a network topology, a byte-metered message bus, the
+//!   per-edge dual state of the Douglas–Rachford splitting, compression
+//!   operators, the C-ECL/ECL/D-PSGD/PowerGossip protocol drivers, and
+//!   every experiment of the paper's evaluation section.
+//! * **L2 (python/compile/model.py, build-time only)** — the 5-layer CNN
+//!   with GroupNorm, its loss/gradient, and the Eq. (6) closed-form
+//!   prox-SGD local update, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/, build-time only)** — Pallas kernels
+//!   for the fused compressed dual update (Alg. 1 lines 4 & 9) and the
+//!   MXU-tiled matmul of the dense head.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! jax functions once; [`runtime::Engine`] loads and executes the HLO via
+//! the PJRT C API (`xla` crate, CPU client).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use cecl::prelude::*;
+//!
+//! let graph = Graph::ring(8);
+//! let spec = ExperimentSpec {
+//!     dataset: "fashion".into(),
+//!     algorithm: AlgorithmSpec::CEcl { k_frac: 0.10, theta: 1.0, dense_first_epoch: true },
+//!     epochs: 10,
+//!     ..ExperimentSpec::default()
+//! };
+//! let report = run_experiment(&spec, &graph).unwrap();
+//! println!("accuracy={:.1}% sent/epoch={}", report.final_accuracy * 100.0,
+//!          report.mean_bytes_per_epoch);
+//! ```
+
+pub mod algorithms;
+pub mod comm;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod quadratic;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::algorithms::AlgorithmSpec;
+    pub use crate::compress::{Compressor, RandK, TopK};
+    pub use crate::coordinator::{run_experiment, ExperimentSpec, Report};
+    pub use crate::data::{Partition, SyntheticSpec};
+    pub use crate::graph::{Graph, Topology};
+    pub use crate::metrics::History;
+    pub use crate::quadratic::QuadraticNetwork;
+    pub use crate::runtime::Engine;
+    pub use crate::util::rng::Pcg;
+}

@@ -1,0 +1,386 @@
+//! Dense linear-algebra substrate (f64), used by the convex-quadratic
+//! theory validation (exact Eq. (3) prox via Cholesky) and spectral
+//! estimation of the L, μ, δ constants of Theorem 1.
+//!
+//! Deliberately small and dependency-free: row-major [`Mat`], Cholesky
+//! factorization/solve, power iteration for extreme eigenvalues of
+//! symmetric PSD matrices.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    /// Random Gaussian matrix (used by tests and synthetic problems).
+    pub fn randn(rows: usize, cols: usize, rng: &mut crate::util::rng::Pcg) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for v in &mut m.data {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// `selfᵀ * x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let xi = x[i];
+            for (j, a) in row.iter().enumerate() {
+                y[j] += a * xi;
+            }
+        }
+        y
+    }
+
+    /// `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row =
+                    &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, b) in out_row.iter_mut().zip(orow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Gram matrix `selfᵀ * self` (symmetric PSD).
+    pub fn gram(&self) -> Mat {
+        let mut g = Mat::zeros(self.cols, self.cols);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..self.cols {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                for j in i..self.cols {
+                    g[(i, j)] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..self.cols {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// `self += scale * I` (in place, square only).
+    pub fn add_diag(&mut self, scale: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += scale;
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Cholesky factor (lower-triangular L with A = L Lᵀ) of a symmetric
+/// positive-definite matrix.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factorize; returns `None` if `a` is not (numerically) SPD.
+    pub fn new(a: &Mat) -> Option<Cholesky> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        // Forward: L y = b.
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[(i, k)] * y[k];
+            }
+            y[i] = sum / self.l[(i, i)];
+        }
+        // Backward: Lᵀ x = y.
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        x
+    }
+}
+
+// --------------------------------------------------------------------------
+// Vector helpers over f64 slices.
+// --------------------------------------------------------------------------
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix via power iteration.
+pub fn max_eig_sym(a: &Mat, iters: usize, rng: &mut crate::util::rng::Pcg) -> f64 {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let w = a.matvec(&v);
+        let nw = norm2(&w);
+        if nw < 1e-300 {
+            return 0.0;
+        }
+        v = w.iter().map(|x| x / nw).collect();
+        lambda = dot(&v, &a.matvec(&v));
+    }
+    lambda
+}
+
+/// Smallest eigenvalue of a symmetric PSD matrix: power iteration on
+/// `(sigma I - A)` with `sigma >= lambda_max`.
+pub fn min_eig_sym(a: &Mat, iters: usize, rng: &mut crate::util::rng::Pcg) -> f64 {
+    let lmax = max_eig_sym(a, iters, rng);
+    let sigma = lmax * 1.01 + 1e-9;
+    let n = a.rows;
+    let mut shifted = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            shifted[(i, j)] = -a[(i, j)];
+        }
+        shifted[(i, i)] += sigma;
+    }
+    let mu_shifted = max_eig_sym(&shifted, iters, rng);
+    (sigma - mu_shifted).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn matvec_identity() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg::new(1);
+        let a = Mat::randn(4, 7, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Pcg::new(2);
+        let a = Mat::randn(5, 3, &mut rng);
+        let g1 = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        for (x, y) in g1.data.iter().zip(&g2.data) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let mut rng = Pcg::new(3);
+        let a = Mat::randn(6, 4, &mut rng);
+        let x: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let y1 = a.matvec_t(&x);
+        let y2 = a.transpose().matvec(&x);
+        for (p, q) in y1.iter().zip(&y2) {
+            assert!((p - q).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        let mut rng = Pcg::new(4);
+        let b = Mat::randn(8, 5, &mut rng);
+        let mut a = b.gram();
+        a.add_diag(0.5); // ensure SPD
+        let x_true: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let rhs = a.matvec(&x_true);
+        let chol = Cholesky::new(&a).expect("SPD");
+        let x = chol.solve(&rhs);
+        for (p, q) in x.iter().zip(&x_true) {
+            assert!((p - q).abs() < 1e-8, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1, 3
+        assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn extreme_eigs_of_diagonal() {
+        let mut a = Mat::eye(4);
+        a[(0, 0)] = 9.0;
+        a[(1, 1)] = 4.0;
+        a[(2, 2)] = 2.0;
+        a[(3, 3)] = 0.5;
+        let mut rng = Pcg::new(5);
+        let lmax = max_eig_sym(&a, 200, &mut rng);
+        let lmin = min_eig_sym(&a, 200, &mut rng);
+        assert!((lmax - 9.0).abs() < 1e-6, "lmax={lmax}");
+        assert!((lmin - 0.5).abs() < 1e-6, "lmin={lmin}");
+    }
+
+    #[test]
+    fn vector_helpers() {
+        assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-12);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0]);
+        let mut z = vec![2.0, 4.0];
+        scale(0.5, &mut z);
+        assert_eq!(z, vec![1.0, 2.0]);
+        assert_eq!(sub(&[3.0, 2.0], &[1.0, 1.0]), vec![2.0, 1.0]);
+    }
+}

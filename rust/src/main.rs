@@ -1,0 +1,215 @@
+//! `repro` — the C-ECL reproduction CLI.
+//!
+//! ```text
+//! repro table1   [--epochs N --dataset fashion|cifar ...]   Table 1 (homogeneous)
+//! repro table2   [...]                                      Table 2 (heterogeneous)
+//! repro table3   [...]                                      Table 3 (topology bytes)
+//! repro fig1     [--topology ring ...]                      Figure 1 curves -> CSV
+//! repro topology [--topology ring --nodes 8] [--viz]        Figure 2 (adjacency)
+//! repro theory   [--rounds N --dim D ...]                   Theorem 1 validation
+//! repro train    --algorithm cecl:0.1 [--partition hetero]  one run
+//! repro ablation-naive | ablation-warmup | ablation-wire
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use cecl::algorithms::AlgorithmSpec;
+use cecl::coordinator::run_with_engine;
+use cecl::data::Partition;
+use cecl::experiments::{ablations, fig1, tables, theory, Sizing};
+use cecl::graph::{Graph, Topology};
+use cecl::model::Manifest;
+use cecl::runtime::Engine;
+use cecl::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let command = args.command.clone().unwrap_or_else(|| "help".to_string());
+    match command.as_str() {
+        "table1" | "table2" => {
+            let sizing = Sizing::from_args(&args);
+            check_unknown(&args)?;
+            let (engine, manifest) = load(&sizing)?;
+            let (partition, label) = if command == "table1" {
+                (Partition::Homogeneous, "table1")
+            } else {
+                (Partition::Heterogeneous { classes_per_node: 8 }, "table2")
+            };
+            let (table, _) = tables::run_accuracy_table(
+                &engine, &manifest, &sizing, partition, label,
+            )?;
+            println!("--- {label} ({}) ---", partition.name());
+            println!("{}", table.render());
+        }
+        "table3" => {
+            let sizing = Sizing::from_args(&args);
+            check_unknown(&args)?;
+            let (engine, manifest) = load(&sizing)?;
+            let table = tables::run_topology_table(&engine, &manifest, &sizing)?;
+            println!("--- table3 (send/epoch by topology) ---");
+            println!("{}", table.render());
+        }
+        "fig1" => {
+            let sizing = Sizing::from_args(&args);
+            let topologies = match args.get_opt::<String>("topology") {
+                Some(name) => vec![Topology::from_name(&name)
+                    .ok_or_else(|| anyhow!("unknown topology {name}"))?],
+                None => Topology::paper_set().to_vec(),
+            };
+            check_unknown(&args)?;
+            let (engine, manifest) = load(&sizing)?;
+            let paths = fig1::run_fig1(&engine, &manifest, &sizing, &topologies)?;
+            println!("wrote {} CSV series:", paths.len());
+            for p in paths {
+                println!("  {}", p.display());
+            }
+        }
+        "topology" => {
+            let nodes = args.get("nodes", 8usize);
+            let name = args.get_str("topology", "ring");
+            let _viz = args.flag("viz");
+            check_unknown(&args)?;
+            let topology = Topology::from_name(&name)
+                .ok_or_else(|| anyhow!("unknown topology {name}"))?;
+            let graph = Graph::build(topology, nodes);
+            println!("--- {} ---", topology.name());
+            println!("{}", graph.ascii_viz());
+            println!(
+                "Metropolis-Hastings weight row of node 0: {:?}",
+                graph.mh_weights()[0]
+                    .iter()
+                    .map(|w| (w * 1000.0).round() / 1000.0)
+                    .collect::<Vec<_>>()
+            );
+        }
+        "theory" => {
+            let cfg = theory::TheoryConfig {
+                nodes: args.get("nodes", 8),
+                dim: args.get("dim", 24),
+                rows: args.get("rows", 40),
+                ridge: args.get("ridge", 0.5),
+                hetero: args.get("hetero", 0.5),
+                rounds: args.get("rounds", 200),
+                seed: args.get("seed", 42),
+            };
+            check_unknown(&args)?;
+            theory::run_theory(&cfg)?;
+        }
+        "train" => {
+            let sizing = Sizing::from_args(&args);
+            let alg_name = args.get_str("algorithm", "cecl:0.1");
+            let algorithm = AlgorithmSpec::parse(&alg_name)
+                .ok_or_else(|| anyhow!("unknown algorithm {alg_name}"))?;
+            let partition = match args.get_str("partition", "homogeneous").as_str() {
+                "homogeneous" | "homo" => Partition::Homogeneous,
+                "heterogeneous" | "hetero" => Partition::Heterogeneous {
+                    // Paper default: 8-of-10. Lower = stronger client
+                    // drift (the `ablation-drift` stress regime).
+                    classes_per_node: args.get("classes-per-node", 8usize),
+                },
+                other => return Err(anyhow!("unknown partition {other}")),
+            };
+            let topo_name = args.get_str("topology", "ring");
+            check_unknown(&args)?;
+            let topology = Topology::from_name(&topo_name)
+                .ok_or_else(|| anyhow!("unknown topology {topo_name}"))?;
+            let graph = Graph::build(topology, sizing.nodes);
+            let (engine, manifest) = load(&sizing)?;
+            let ds = sizing.datasets.first().cloned().unwrap();
+            let mut spec = sizing.spec_base(&ds, partition);
+            spec.algorithm = algorithm;
+            spec.verbose = true;
+            let report = run_with_engine(&engine, &manifest, &spec, &graph)?;
+            println!(
+                "\n{} on {ds} ({}, {}): final acc {:.3}, best {:.3}, \
+                 send/epoch {:.0} KB, wallclock {:.1}s",
+                report.algorithm,
+                partition.name(),
+                topology.name(),
+                report.final_accuracy,
+                report.best_accuracy,
+                report.mean_bytes_per_epoch / 1024.0,
+                report.wallclock_secs
+            );
+        }
+        "ablation-naive" => {
+            let sizing = Sizing::from_args(&args);
+            check_unknown(&args)?;
+            let (engine, manifest) = load(&sizing)?;
+            let t = ablations::run_naive_ablation(&engine, &manifest, &sizing)?;
+            println!("--- ablation: Eq.11 vs Eq.13 ---\n{}", t.render());
+        }
+        "ablation-warmup" => {
+            let sizing = Sizing::from_args(&args);
+            check_unknown(&args)?;
+            let (engine, manifest) = load(&sizing)?;
+            let t = ablations::run_warmup_ablation(&engine, &manifest, &sizing)?;
+            println!("--- ablation: first-epoch dense warmup ---\n{}", t.render());
+        }
+        "ablation-drift" => {
+            let sizing = Sizing::from_args(&args);
+            check_unknown(&args)?;
+            let (engine, manifest) = load(&sizing)?;
+            let t = ablations::run_drift_ablation(&engine, &manifest, &sizing)?;
+            println!("--- ablation: client-drift strength ---\n{}", t.render());
+        }
+        "ablation-wire" => {
+            let sizing = Sizing::from_args(&args);
+            check_unknown(&args)?;
+            let manifest = load_manifest(&sizing)?;
+            let t = ablations::run_wire_ablation(&manifest, &sizing)?;
+            println!("--- ablation: wire format ---\n{}", t.render());
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+        }
+        other => {
+            eprintln!("unknown command: {other}\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn check_unknown(args: &Args) -> Result<()> {
+    let unknown = args.unknown_keys();
+    if unknown.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("unknown options: {unknown:?}"))
+    }
+}
+
+fn load_manifest(sizing: &Sizing) -> Result<Manifest> {
+    let _ = sizing;
+    Manifest::load_default()
+}
+
+fn load(sizing: &Sizing) -> Result<(Engine, Manifest)> {
+    let manifest = load_manifest(sizing)?;
+    let engine = Engine::cpu()?;
+    Ok((engine, manifest))
+}
+
+const HELP: &str = "\
+repro — C-ECL (Takezawa et al. 2022) reproduction
+
+commands:
+  table1           accuracy + send/epoch, homogeneous, ring(8)
+  table2           accuracy + send/epoch, heterogeneous (8-of-10)
+  table3           send/epoch across topologies
+  fig1             accuracy curves -> results/fig1_*.csv
+  topology --viz   print adjacency (Figure 2)
+  theory           Theorem 1 / Corollary 2 rate validation
+  train            one run: --algorithm sgd|dpsgd|ecl|cecl:K|powergossip:N
+  ablation-naive   Eq.11 vs Eq.13 dual compression
+  ablation-warmup  first-epoch dense on/off
+  ablation-wire    COO vs values-only wire accounting
+
+common options:
+  --dataset fashion|cifar   --epochs N        --nodes N
+  --train-per-node N        --test-size N     --eta F
+  --local-steps K           --eval-every N    --seed N
+  --dual-path native|pjrt   --verbose
+  --partition homo|hetero   --topology chain|ring|multiplex-ring|fully-connected
+";

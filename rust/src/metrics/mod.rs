@@ -1,0 +1,173 @@
+//! Training metrics: per-epoch history, accuracy/loss aggregation, and
+//! the communication accounting surfaced in the paper's tables.
+
+use crate::util::table::Table;
+
+/// One evaluation point in a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    /// Mean test accuracy over nodes (the paper's Fig. 1 y-axis).
+    pub mean_accuracy: f64,
+    /// Mean test loss over nodes.
+    pub mean_loss: f64,
+    /// Mean training loss over nodes since the previous record.
+    pub train_loss: f64,
+    /// Cumulative mean bytes sent per node.
+    pub cum_bytes_per_node: f64,
+}
+
+/// Full run history.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub records: Vec<EpochRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, r: EpochRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.records.last().map(|r| r.mean_accuracy).unwrap_or(0.0)
+    }
+
+    /// Best (max) accuracy seen — robust to end-of-run noise, mirrors
+    /// common reporting practice.
+    pub fn best_accuracy(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.mean_accuracy)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.records.last().map(|r| r.mean_loss).unwrap_or(f64::NAN)
+    }
+
+    /// Mean bytes sent per node per epoch over the whole run.
+    pub fn bytes_per_node_epoch(&self) -> f64 {
+        match self.records.last() {
+            Some(last) if last.epoch > 0 => {
+                last.cum_bytes_per_node / last.epoch as f64
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Accuracy series as (epoch, accuracy) pairs (Fig. 1 CSV payload).
+    pub fn accuracy_series(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .map(|r| (r.epoch, r.mean_accuracy))
+            .collect()
+    }
+
+    /// Render the history as a CSV-able table.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new([
+            "epoch",
+            "mean_accuracy",
+            "mean_loss",
+            "train_loss",
+            "cum_bytes_per_node",
+        ]);
+        for r in &self.records {
+            t.row([
+                r.epoch.to_string(),
+                format!("{:.4}", r.mean_accuracy),
+                format!("{:.4}", r.mean_loss),
+                format!("{:.4}", r.train_loss),
+                format!("{:.0}", r.cum_bytes_per_node),
+            ]);
+        }
+        t
+    }
+}
+
+/// Running mean accumulator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Mean {
+    sum: f64,
+    n: usize,
+}
+
+impl Mean {
+    pub fn add(&mut self, x: f64) {
+        self.sum += x;
+        self.n += 1;
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn take(&mut self) -> f64 {
+        let v = self.get();
+        *self = Mean::default();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(epoch: usize, acc: f64, bytes: f64) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            mean_accuracy: acc,
+            mean_loss: 1.0,
+            train_loss: 1.0,
+            cum_bytes_per_node: bytes,
+        }
+    }
+
+    #[test]
+    fn history_aggregates() {
+        let mut h = History::default();
+        h.push(record(10, 0.5, 1000.0));
+        h.push(record(20, 0.8, 2000.0));
+        h.push(record(30, 0.7, 3000.0));
+        assert_eq!(h.final_accuracy(), 0.7);
+        assert_eq!(h.best_accuracy(), 0.8);
+        assert!((h.bytes_per_node_epoch() - 100.0).abs() < 1e-12);
+        assert_eq!(h.accuracy_series().len(), 3);
+    }
+
+    #[test]
+    fn empty_history_is_safe() {
+        let h = History::default();
+        assert_eq!(h.final_accuracy(), 0.0);
+        assert_eq!(h.bytes_per_node_epoch(), 0.0);
+        assert!(h.final_loss().is_nan());
+    }
+
+    #[test]
+    fn mean_accumulator() {
+        let mut m = Mean::default();
+        assert!(m.get().is_nan());
+        m.add(1.0);
+        m.add(3.0);
+        assert_eq!(m.get(), 2.0);
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.take(), 2.0);
+        assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn table_render() {
+        let mut h = History::default();
+        h.push(record(1, 0.25, 10.0));
+        let t = h.to_table();
+        assert!(t.render().contains("0.2500"));
+    }
+}

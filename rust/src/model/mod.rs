@@ -1,0 +1,337 @@
+//! Model metadata on the rust side: the artifact manifest written by
+//! `python/compile/aot.py`, the flat-parameter layout (layer names,
+//! shapes, offsets), and the per-layer matrix views that PowerGossip
+//! compresses.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One named parameter tensor inside the flat vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl Layer {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// PowerGossip matrix view: tensors of rank >= 2 are seen as
+    /// `(prod(shape[..-1]), shape[-1])` matrices; rank-1 tensors (biases,
+    /// GN scales) have no view and are exchanged dense.
+    pub fn matrix_view(&self) -> Option<(usize, usize)> {
+        if self.shape.len() >= 2 {
+            let cols = *self.shape.last().unwrap();
+            Some((self.size() / cols, cols))
+        } else {
+            None
+        }
+    }
+}
+
+/// Manifest entry for one dataset-scale model.
+#[derive(Debug, Clone)]
+pub struct DatasetManifest {
+    pub name: String,
+    pub d: usize,
+    pub d_pad: usize,
+    /// (height, width, channels)
+    pub input: (usize, usize, usize),
+    pub classes: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub train_step: PathBuf,
+    pub eval_step: PathBuf,
+    pub dual_update: PathBuf,
+    pub init_w: PathBuf,
+    pub layers: Vec<Layer>,
+}
+
+impl DatasetManifest {
+    pub fn sample_len(&self) -> usize {
+        self.input.0 * self.input.1 * self.input.2
+    }
+
+    /// Load the initial flat parameter vector (little-endian f32[d_pad]).
+    pub fn load_init_w(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.init_w)
+            .with_context(|| format!("reading {:?}", self.init_w))?;
+        if bytes.len() != 4 * self.d_pad {
+            bail!(
+                "{:?}: expected {} bytes, got {}",
+                self.init_w,
+                4 * self.d_pad,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Matrix views for PowerGossip: `(name, offset, rows, cols)`.
+    pub fn matrix_views(&self) -> Vec<(String, usize, usize, usize)> {
+        self.layers
+            .iter()
+            .filter_map(|l| {
+                l.matrix_view()
+                    .map(|(r, c)| (l.name.clone(), l.offset, r, c))
+            })
+            .collect()
+    }
+
+    /// Rank-1 tensors: `(name, offset, len)` — exchanged dense by
+    /// PowerGossip.
+    pub fn vector_views(&self) -> Vec<(String, usize, usize)> {
+        self.layers
+            .iter()
+            .filter(|l| l.matrix_view().is_none())
+            .map(|l| (l.name.clone(), l.offset, l.size()))
+            .collect()
+    }
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub smoke: PathBuf,
+    pub datasets: BTreeMap<String, DatasetManifest>,
+}
+
+impl Manifest {
+    /// Parse the manifest and resolve artifact paths relative to `dir`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Default artifact dir: `$CECL_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("CECL_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut lines = text.lines().map(str::trim).filter(|l| !l.is_empty());
+        let version = lines
+            .next()
+            .ok_or_else(|| anyhow!("empty manifest"))?;
+        if version != "version 1" {
+            bail!("unsupported manifest version: {version:?}");
+        }
+        let mut smoke = None;
+        let mut datasets = BTreeMap::new();
+        let mut current: Option<DatasetManifest> = None;
+
+        for line in lines {
+            let mut parts = line.split_whitespace();
+            let key = parts.next().unwrap();
+            let rest: Vec<&str> = parts.collect();
+            let arg = |i: usize| -> Result<&str> {
+                rest.get(i)
+                    .copied()
+                    .ok_or_else(|| anyhow!("manifest line {line:?}: missing arg {i}"))
+            };
+            let num = |i: usize| -> Result<usize> {
+                arg(i)?
+                    .parse()
+                    .with_context(|| format!("manifest line {line:?}"))
+            };
+            match key {
+                "smoke" => smoke = Some(dir.join(arg(0)?)),
+                "dataset" => {
+                    if current.is_some() {
+                        bail!("manifest: nested dataset block");
+                    }
+                    current = Some(DatasetManifest {
+                        name: arg(0)?.to_string(),
+                        d: 0,
+                        d_pad: 0,
+                        input: (0, 0, 0),
+                        classes: 0,
+                        batch: 0,
+                        eval_batch: 0,
+                        train_step: PathBuf::new(),
+                        eval_step: PathBuf::new(),
+                        dual_update: PathBuf::new(),
+                        init_w: PathBuf::new(),
+                        layers: Vec::new(),
+                    });
+                }
+                "end" => {
+                    let mut ds = current
+                        .take()
+                        .ok_or_else(|| anyhow!("manifest: stray `end`"))?;
+                    // Compute layer offsets and validate totals.
+                    let mut offset = 0;
+                    for l in &mut ds.layers {
+                        l.offset = offset;
+                        offset += l.size();
+                    }
+                    if offset != ds.d {
+                        bail!(
+                            "dataset {}: layer sizes sum to {offset}, d={}",
+                            ds.name,
+                            ds.d
+                        );
+                    }
+                    if ds.d_pad < ds.d {
+                        bail!("dataset {}: d_pad < d", ds.name);
+                    }
+                    datasets.insert(ds.name.clone(), ds);
+                }
+                _ => {
+                    let ds = current
+                        .as_mut()
+                        .ok_or_else(|| anyhow!("manifest: {key:?} outside dataset"))?;
+                    match key {
+                        "d" => ds.d = num(0)?,
+                        "d_pad" => ds.d_pad = num(0)?,
+                        "input" => ds.input = (num(0)?, num(1)?, num(2)?),
+                        "classes" => ds.classes = num(0)?,
+                        "batch" => ds.batch = num(0)?,
+                        "eval_batch" => ds.eval_batch = num(0)?,
+                        "train_step" => ds.train_step = dir.join(arg(0)?),
+                        "eval_step" => ds.eval_step = dir.join(arg(0)?),
+                        "dual_update" => ds.dual_update = dir.join(arg(0)?),
+                        "init_w" => ds.init_w = dir.join(arg(0)?),
+                        "layer" => {
+                            let name = arg(0)?.to_string();
+                            let shape: Vec<usize> = rest[1..]
+                                .iter()
+                                .map(|s| s.parse())
+                                .collect::<std::result::Result<_, _>>()
+                                .with_context(|| format!("layer {line:?}"))?;
+                            if shape.is_empty() {
+                                bail!("layer {name}: empty shape");
+                            }
+                            ds.layers.push(Layer {
+                                name,
+                                shape,
+                                offset: 0,
+                            });
+                        }
+                        _ => bail!("manifest: unknown key {key:?}"),
+                    }
+                }
+            }
+        }
+        if current.is_some() {
+            bail!("manifest: unterminated dataset block");
+        }
+        Ok(Manifest {
+            smoke: smoke.ok_or_else(|| anyhow!("manifest: no smoke artifact"))?,
+            datasets,
+        })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetManifest> {
+        self.datasets.get(name).ok_or_else(|| {
+            anyhow!(
+                "dataset {name:?} not in manifest (have: {:?})",
+                self.datasets.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version 1
+smoke smoke.hlo.txt
+dataset tiny
+d 14
+d_pad 16
+input 2 2 1
+classes 3
+batch 4
+eval_batch 8
+train_step ts.hlo.txt
+eval_step ev.hlo.txt
+dual_update du.hlo.txt
+init_w init.bin
+layer conv_w 2 2 1 2
+layer conv_b 2
+layer dense_w 2 2
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.smoke, PathBuf::from("/a/smoke.hlo.txt"));
+        let ds = m.dataset("tiny").unwrap();
+        assert_eq!(ds.d, 14);
+        assert_eq!(ds.d_pad, 16);
+        assert_eq!(ds.input, (2, 2, 1));
+        assert_eq!(ds.layers.len(), 3);
+        assert_eq!(ds.layers[0].offset, 0);
+        assert_eq!(ds.layers[1].offset, 8);
+        assert_eq!(ds.layers[2].offset, 10);
+        assert_eq!(ds.sample_len(), 4);
+    }
+
+    #[test]
+    fn matrix_views_skip_rank1() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        let ds = m.dataset("tiny").unwrap();
+        let views = ds.matrix_views();
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0], ("conv_w".to_string(), 0, 4, 2));
+        assert_eq!(views[1], ("dense_w".to_string(), 10, 2, 2));
+        let vecs = ds.vector_views();
+        assert_eq!(vecs, vec![("conv_b".to_string(), 8, 2)]);
+    }
+
+    #[test]
+    fn rejects_bad_totals() {
+        let bad = SAMPLE.replace("d 14", "d 99");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_stray_end() {
+        let bad = SAMPLE.replace("classes 3", "classez 3");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+        assert!(Manifest::parse("version 1\nend\n", Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn unknown_dataset_lookup_fails() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert!(m.dataset("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_when_built() {
+        // Validates against the actual artifacts when present.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            return; // run `make artifacts` to enable
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["fashion", "cifar"] {
+            let ds = m.dataset(name).unwrap();
+            assert!(ds.d > 0 && ds.d_pad >= ds.d && ds.d_pad % 1024 == 0);
+            assert!(ds.train_step.exists());
+            assert!(ds.eval_step.exists());
+            assert!(ds.dual_update.exists());
+            let w = ds.load_init_w().unwrap();
+            assert_eq!(w.len(), ds.d_pad);
+            assert!(w.iter().all(|v| v.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,396 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts and execute
+//! them from the rust hot path (the L3 <-> L2 bridge).
+//!
+//! Wraps the published `xla` crate (0.1.6):
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `client.compile` -> `execute`.  Executables are compiled once at
+//! startup and shared across node threads.
+//!
+//! ## Thread safety
+//!
+//! The `xla` crate's handles are raw-pointer newtypes without `Send`/
+//! `Sync` impls.  The underlying PJRT CPU client (`TfrtCpuClient`) *is*
+//! thread-safe: compilation and execution take `const` handles and the
+//! runtime internally locks/schedules (this is the same property the
+//! Python jax runtime relies on when dispatching from multiple threads).
+//! [`Executable`] therefore carries a documented `unsafe impl Send +
+//! Sync`; every node thread executes through a shared `Arc<ModelRuntime>`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::DatasetManifest;
+
+/// Typed input to an executable.
+pub enum In<'a> {
+    /// f32 tensor with explicit dims (row-major).
+    F32(&'a [f32], &'a [i64]),
+    /// i32 tensor with explicit dims.
+    I32(&'a [i32], &'a [i64]),
+    /// f32 scalar.
+    ScalarF32(f32),
+}
+
+impl<'a> In<'a> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            In::F32(data, dims) => {
+                let expect: i64 = dims.iter().product();
+                if expect as usize != data.len() {
+                    bail!("In::F32: {} elems vs dims {:?}", data.len(), dims);
+                }
+                Ok(xla::Literal::vec1(data).reshape(dims)?)
+            }
+            In::I32(data, dims) => {
+                let expect: i64 = dims.iter().product();
+                if expect as usize != data.len() {
+                    bail!("In::I32: {} elems vs dims {:?}", data.len(), dims);
+                }
+                Ok(xla::Literal::vec1(data).reshape(dims)?)
+            }
+            In::ScalarF32(v) => Ok(xla::Literal::scalar(*v)),
+        }
+    }
+}
+
+/// A compiled HLO module, executable from any thread (see module docs).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+// SAFETY: PJRT CPU client executables are internally synchronized; see
+// module-level documentation. The wrapped pointer is never mutated
+// through a shared reference on the rust side.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with the given inputs; returns every tuple output as a
+    /// flat f32 vector (the artifacts are lowered with
+    /// `return_tuple=True`).
+    pub fn run(&self, inputs: &[In<'_>]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<_>>()
+            .with_context(|| format!("building inputs for {}", self.name))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let parts = tuple
+            .decompose_tuple()
+            .with_context(|| format!("decomposing result of {}", self.name))?;
+        parts
+            .into_iter()
+            .map(|lit| Ok(lit.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+/// PJRT client plus artifact loader.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: as for Executable — the CPU client is thread-safe.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact.
+    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "<hlo>".to_string()),
+        })
+    }
+}
+
+/// All compiled entry points for one dataset-scale model, shared across
+/// node threads via `Arc`.
+pub struct ModelRuntime {
+    pub ds: DatasetManifest,
+    train: Executable,
+    eval: Executable,
+    dual: Executable,
+}
+
+impl ModelRuntime {
+    pub fn load(engine: &Engine, ds: &DatasetManifest) -> Result<Arc<ModelRuntime>> {
+        Ok(Arc::new(ModelRuntime {
+            ds: ds.clone(),
+            train: engine.load_hlo(&ds.train_step)?,
+            eval: engine.load_hlo(&ds.eval_step)?,
+            dual: engine.load_hlo(&ds.dual_update)?,
+        }))
+    }
+
+    /// One Eq. (6) local update. `alpha_deg = α·|N_i|`; with
+    /// `alpha_deg = 0` and `zsum = 0` this is a plain SGD step.
+    /// Returns `(w_next, loss)`.
+    pub fn train_step(
+        &self,
+        w: &[f32],
+        zsum: &[f32],
+        x: &[f32],
+        y: &[i32],
+        eta: f32,
+        alpha_deg: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let d = self.ds.d_pad as i64;
+        let (h, wd, c) = self.ds.input;
+        let b = self.ds.batch as i64;
+        let dims = [b, h as i64, wd as i64, c as i64];
+        let mut out = self.train.run(&[
+            In::F32(w, &[d]),
+            In::F32(zsum, &[d]),
+            In::F32(x, &dims),
+            In::I32(y, &[b]),
+            In::ScalarF32(eta),
+            In::ScalarF32(alpha_deg),
+        ])?;
+        if out.len() != 2 {
+            bail!("train_step: expected 2 outputs, got {}", out.len());
+        }
+        let loss = out.pop().unwrap();
+        let w_next = out.pop().unwrap();
+        Ok((w_next, loss[0]))
+    }
+
+    /// One eval batch -> (correct_count, loss_sum).
+    pub fn eval_batch(&self, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let d = self.ds.d_pad as i64;
+        let (h, wd, c) = self.ds.input;
+        let b = self.ds.eval_batch as i64;
+        let dims = [b, h as i64, wd as i64, c as i64];
+        let out = self.eval.run(&[
+            In::F32(w, &[d]),
+            In::F32(x, &dims),
+            In::I32(y, &[b]),
+        ])?;
+        if out.len() != 2 {
+            bail!("eval: expected 2 outputs, got {}", out.len());
+        }
+        Ok((out[0][0], out[1][0]))
+    }
+
+    /// Full-test-set evaluation -> (accuracy, mean_loss). The test set
+    /// size must be a multiple of the AOT eval batch.
+    pub fn evaluate(&self, w: &[f32], test: &crate::data::Dataset) -> Result<(f64, f64)> {
+        let be = self.ds.eval_batch;
+        if test.n % be != 0 {
+            bail!("test size {} not a multiple of eval batch {be}", test.n);
+        }
+        let slen = test.sample_len;
+        let mut correct = 0.0f64;
+        let mut loss = 0.0f64;
+        for chunk in 0..test.n / be {
+            let xs = &test.x[chunk * be * slen..(chunk + 1) * be * slen];
+            let ys = &test.y[chunk * be..(chunk + 1) * be];
+            let (c, l) = self.eval_batch(w, xs, ys)?;
+            correct += c as f64;
+            loss += l as f64;
+        }
+        Ok((correct / test.n as f64, loss / test.n as f64))
+    }
+
+    /// The fused L1 dual update (Alg. 1 lines 4 & 9) through PJRT:
+    /// returns `(z_new, y_send_comp)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dual_update(
+        &self,
+        z: &[f32],
+        w: &[f32],
+        ycomp_in: &[f32],
+        m_in: &[f32],
+        m_out: &[f32],
+        theta: f32,
+        two_alpha_a: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = self.ds.d_pad as i64;
+        let mut out = self.dual.run(&[
+            In::F32(z, &[d]),
+            In::F32(w, &[d]),
+            In::F32(ycomp_in, &[d]),
+            In::F32(m_in, &[d]),
+            In::F32(m_out, &[d]),
+            In::ScalarF32(theta),
+            In::ScalarF32(two_alpha_a),
+        ])?;
+        if out.len() != 2 {
+            bail!("dual_update: expected 2 outputs, got {}", out.len());
+        }
+        let ysend = out.pop().unwrap();
+        let znew = out.pop().unwrap();
+        Ok((znew, ysend))
+    }
+}
+
+/// Native (pure-rust) twin of the fused dual update, used on the default
+/// hot path (ablation `dual-path` in EXPERIMENTS.md §Perf compares the
+/// two).  Must stay semantically identical to the L1 kernel — the
+/// integration tests assert elementwise agreement against the PJRT path.
+pub mod native {
+    /// `z' = z + θ(ycomp − m_in∘z)`, `y_send = m_out∘(z − taa·w)`,
+    /// writing into preallocated outputs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dual_update_into(
+        z: &[f32],
+        w: &[f32],
+        ycomp_in: &[f32],
+        m_in: &[f32],
+        m_out: &[f32],
+        theta: f32,
+        two_alpha_a: f32,
+        z_new: &mut [f32],
+        y_send: &mut [f32],
+    ) {
+        let d = z.len();
+        assert!(
+            w.len() == d
+                && ycomp_in.len() == d
+                && m_in.len() == d
+                && m_out.len() == d
+                && z_new.len() == d
+                && y_send.len() == d
+        );
+        for i in 0..d {
+            let zi = z[i];
+            y_send[i] = m_out[i] * (zi - two_alpha_a * w[i]);
+            z_new[i] = zi + theta * (ycomp_in[i] - m_in[i] * zi);
+        }
+    }
+
+    /// Sparse-aware variant: the receive side applies
+    /// `z' = z + θ·(comp(y_recv) − comp(z))` directly from the COO
+    /// message and the shared mask indices — no dense mask vectors at
+    /// all.  `y_send` values are gathered for the outbound mask.
+    pub fn dual_update_sparse(
+        z: &mut [f32],
+        w: &[f32],
+        ycomp_in: &crate::compress::CooVec,
+        mask_out: &[u32],
+        theta: f32,
+        two_alpha_a: f32,
+        y_send_vals: &mut Vec<f32>,
+    ) {
+        // Outbound gather first (y must use the pre-update z).
+        y_send_vals.clear();
+        y_send_vals.reserve(mask_out.len());
+        for &i in mask_out {
+            let i = i as usize;
+            y_send_vals.push(z[i] - two_alpha_a * w[i]);
+        }
+        // In-place receive update only touches masked coordinates.
+        for (&i, &yv) in ycomp_in.idx.iter().zip(&ycomp_in.val) {
+            let i = i as usize;
+            z[i] += theta * (yv - z[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CooVec;
+    use crate::util::rng::Pcg;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn native_dense_matches_formula() {
+        let d = 257;
+        let z = randn(d, 1);
+        let w = randn(d, 2);
+        let y = randn(d, 3);
+        let mut m_in = vec![0.0f32; d];
+        let mut m_out = vec![0.0f32; d];
+        for i in (0..d).step_by(3) {
+            m_in[i] = 1.0;
+        }
+        for i in (0..d).step_by(4) {
+            m_out[i] = 1.0;
+        }
+        let ycomp: Vec<f32> = y.iter().zip(&m_in).map(|(a, b)| a * b).collect();
+        let mut zn = vec![0.0f32; d];
+        let mut ys = vec![0.0f32; d];
+        native::dual_update_into(&z, &w, &ycomp, &m_in, &m_out, 0.7, 0.3,
+                                 &mut zn, &mut ys);
+        for i in 0..d {
+            let want_z = z[i] + 0.7 * (ycomp[i] - m_in[i] * z[i]);
+            let want_y = m_out[i] * (z[i] - 0.3 * w[i]);
+            assert!((zn[i] - want_z).abs() < 1e-6);
+            assert!((ys[i] - want_y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn native_sparse_matches_dense() {
+        let d = 300;
+        let z0 = randn(d, 4);
+        let w = randn(d, 5);
+        let y_recv = randn(d, 6);
+        let mask_in: Vec<u32> = (0..d as u32).filter(|i| i % 3 == 0).collect();
+        let mask_out: Vec<u32> = (0..d as u32).filter(|i| i % 5 == 0).collect();
+        let mut m_in_dense = vec![0.0f32; d];
+        let mut m_out_dense = vec![0.0f32; d];
+        for &i in &mask_in {
+            m_in_dense[i as usize] = 1.0;
+        }
+        for &i in &mask_out {
+            m_out_dense[i as usize] = 1.0;
+        }
+        let ycomp_dense: Vec<f32> =
+            y_recv.iter().zip(&m_in_dense).map(|(a, b)| a * b).collect();
+
+        // Dense reference.
+        let mut zn = vec![0.0f32; d];
+        let mut ys = vec![0.0f32; d];
+        native::dual_update_into(&z0, &w, &ycomp_dense, &m_in_dense,
+                                 &m_out_dense, 0.9, 1.1, &mut zn, &mut ys);
+
+        // Sparse path.
+        let coo = CooVec::gather(&y_recv, &mask_in);
+        let mut z_sparse = z0.clone();
+        let mut yvals = Vec::new();
+        native::dual_update_sparse(&mut z_sparse, &w, &coo, &mask_out, 0.9,
+                                   1.1, &mut yvals);
+        for i in 0..d {
+            assert!((z_sparse[i] - zn[i]).abs() < 1e-6, "z at {i}");
+        }
+        for (k, &i) in mask_out.iter().enumerate() {
+            assert!((yvals[k] - ys[i as usize]).abs() < 1e-6, "y at {i}");
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! In-repo micro-benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`bench`] /
+//! [`BenchSet`]; output is a column-aligned table of min / mean / p50 /
+//! p95 per benchmark, plus optional throughput annotations.
+
+use std::time::Instant;
+
+use super::stats::{human_secs, Summary};
+use super::table::Table;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Summary,
+    /// Optional: items (bytes, elements, …) processed per iteration, for a
+    /// throughput column.
+    pub items_per_iter: Option<f64>,
+    pub items_unit: &'static str,
+}
+
+/// Time `f` for `iters` iterations after `warmup` iterations, returning
+/// per-iteration seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// A named collection of measurements rendered as one table.
+#[derive(Default)]
+pub struct BenchSet {
+    pub title: String,
+    measurements: Vec<Measurement>,
+}
+
+impl BenchSet {
+    pub fn new<S: Into<String>>(title: S) -> Self {
+        BenchSet {
+            title: title.into(),
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Run and record a benchmark.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize,
+                             iters: usize, f: F) {
+        let secs = time_it(warmup, iters, f);
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            iters,
+            secs,
+            items_per_iter: None,
+            items_unit: "",
+        });
+    }
+
+    /// Run and record a benchmark with a throughput annotation.
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        items_per_iter: f64,
+        unit: &'static str,
+        f: F,
+    ) {
+        let secs = time_it(warmup, iters, f);
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            iters,
+            secs,
+            items_per_iter: Some(items_per_iter),
+            items_unit: unit,
+        });
+    }
+
+    /// Record an externally-computed metric row (e.g. deterministic byte
+    /// counts) so a bench table can mix timing and accounting columns.
+    pub fn record(&mut self, m: Measurement) {
+        self.measurements.push(m);
+    }
+
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+
+    /// Render the results table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new([
+            "benchmark", "iters", "min", "mean", "p50", "p95", "throughput",
+        ]);
+        for m in &self.measurements {
+            let tput = match m.items_per_iter {
+                Some(items) if m.secs.mean > 0.0 => {
+                    let per_sec = items / m.secs.mean;
+                    if m.items_unit == "B" {
+                        format!("{}/s", super::stats::human_bytes(per_sec))
+                    } else {
+                        format!("{per_sec:.3e} {}/s", m.items_unit)
+                    }
+                }
+                _ => "-".to_string(),
+            };
+            t.row([
+                m.name.clone(),
+                m.iters.to_string(),
+                human_secs(m.secs.min),
+                human_secs(m.secs.mean),
+                human_secs(m.secs.p50),
+                human_secs(m.secs.p95),
+                tput,
+            ]);
+        }
+        format!("## {}\n\n{}", self.title, t.render())
+    }
+
+    /// Print to stdout (the `cargo bench` entry point convention here).
+    pub fn report(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let s = time_it(2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min > 0.0);
+        assert!(s.min <= s.mean);
+        assert!(s.p50 <= s.p95 + 1e-12);
+    }
+
+    #[test]
+    fn benchset_renders() {
+        let mut set = BenchSet::new("unit");
+        set.bench("noop", 1, 5, || {});
+        set.bench_throughput("copy", 1, 5, 1024.0, "B", || {
+            std::hint::black_box(vec![0u8; 1024]);
+        });
+        let r = set.render();
+        assert!(r.contains("## unit"));
+        assert!(r.contains("noop"));
+        assert!(r.contains("B/s"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Minimal CLI argument parser (clap is not available offline).
+//!
+//! Grammar: `repro <subcommand> [--key value]... [--flag]...`
+//! Values parse via `FromStr`; unknown keys are reported at the end so
+//! typos fail loudly instead of silently using defaults.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional argument (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (used by tests).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut args = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(key) = item.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(item);
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    /// Typed option with default.
+    pub fn get<T: FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        self.consumed.borrow_mut().push(key.to_string());
+        match self.options.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} {v}: bad value ({e:?})")),
+            None => default,
+        }
+    }
+
+    /// Typed option, `None` when absent.
+    pub fn get_opt<T: FromStr>(&self, key: &str) -> Option<T>
+    where
+        T::Err: std::fmt::Debug,
+    {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.options.get(key).map(|v| {
+            v.parse()
+                .unwrap_or_else(|e| panic!("--{key} {v}: bad value ({e:?})"))
+        })
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean flag.
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Keys that were provided but never read — call after all `get`s.
+    pub fn unknown_keys(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("table1 --epochs 20 --dataset fashion --quiet");
+        assert_eq!(a.command.as_deref(), Some("table1"));
+        assert_eq!(a.get::<usize>("epochs", 5), 20);
+        assert_eq!(a.get_str("dataset", "cifar"), "fashion");
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --k-frac=0.1");
+        assert!((a.get::<f64>("k-frac", 0.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get::<usize>("epochs", 7), 7);
+        assert_eq!(a.get_opt::<usize>("epochs"), None);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("theory extra1 extra2 --n 4");
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+        assert_eq!(a.get::<usize>("n", 0), 4);
+    }
+
+    #[test]
+    fn unknown_keys_reported() {
+        let a = parse("run --epochs 5 --typo-key 3");
+        let _ = a.get::<usize>("epochs", 1);
+        assert_eq!(a.unknown_keys(), vec!["typo-key".to_string()]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_value_panics() {
+        let a = parse("run --epochs notanumber");
+        let _ = a.get::<usize>("epochs", 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! Utility substrates built in-repo (the offline vendor set has no rand /
+//! clap / serde / criterion / proptest — see DESIGN.md §2).
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

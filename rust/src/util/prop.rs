@@ -1,0 +1,165 @@
+//! Mini property-based testing harness (proptest is not available
+//! offline).
+//!
+//! `check` runs a property over `cases` seeded random inputs; on failure
+//! it retries with progressively simpler size hints (a light-weight
+//! shrinking pass) and reports the failing seed so the case is exactly
+//! reproducible with [`check_seed`].
+
+use super::rng::Pcg;
+
+/// Context handed to a property: a seeded RNG plus a size hint in
+/// `[1, max_size]` that grows over the run (small cases first).
+pub struct Ctx {
+    pub rng: Pcg,
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Ctx {
+    /// A vector of `n` standard-normal f32 values.
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32()).collect()
+    }
+
+    /// A vector of `n` standard-normal f64 values.
+    pub fn vec_f64(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+}
+
+/// Outcome of a single case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `property` over `cases` random inputs. Panics (with the failing
+/// seed and message) on the first failure after a simplification pass.
+pub fn check<F: Fn(&mut Ctx) -> CaseResult>(
+    name: &str,
+    cases: usize,
+    max_size: usize,
+    property: F,
+) {
+    let base = fxhash(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        // Size ramps up: early cases are small, later cases large.
+        let size = 1 + (max_size - 1) * case / cases.max(1);
+        if let Err(msg) = run_one(&property, seed, size) {
+            // Shrinking-lite: try the same seed at smaller sizes to
+            // report the simplest reproduction.
+            let mut best = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                if let Err(m) = run_one(&property, seed, s) {
+                    best = (s, m);
+                    if s == 1 {
+                        break;
+                    }
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            panic!(
+                "property `{name}` failed (seed={seed}, size={}): {}\n\
+                 reproduce with util::prop::check_seed(\"{name}\", {seed}, {})",
+                best.0, best.1, best.0
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_seed<F: Fn(&mut Ctx) -> CaseResult>(
+    name: &str,
+    seed: u64,
+    size: usize,
+    property: F,
+) {
+    if let Err(msg) = run_one(&property, seed, size) {
+        panic!("property `{name}` failed at seed={seed}: {msg}");
+    }
+}
+
+fn run_one<F: Fn(&mut Ctx) -> CaseResult>(
+    property: &F,
+    seed: u64,
+    size: usize,
+) -> CaseResult {
+    let mut ctx = Ctx {
+        rng: Pcg::new(seed),
+        size,
+        seed,
+    };
+    property(&mut ctx)
+}
+
+/// Assert helper producing `CaseResult`-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// FNV-1a on the property name, for a stable per-property seed base.
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0usize);
+        check("always-true", 32, 100, |_ctx| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 4, 10, |_ctx| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let max_seen = std::cell::Cell::new(0usize);
+        let min_seen = std::cell::Cell::new(usize::MAX);
+        check("size-ramp", 50, 64, |ctx| {
+            max_seen.set(max_seen.get().max(ctx.size));
+            min_seen.set(min_seen.get().min(ctx.size));
+            Ok(())
+        });
+        assert_eq!(min_seen.get(), 1);
+        assert!(max_seen.get() > 32);
+    }
+
+    #[test]
+    fn deterministic_inputs_per_seed() {
+        let first = std::cell::RefCell::new(Vec::new());
+        check("det", 1, 8, |ctx| {
+            *first.borrow_mut() = ctx.vec_f32(8);
+            Ok(())
+        });
+        let second = std::cell::RefCell::new(Vec::new());
+        check("det", 1, 8, |ctx| {
+            *second.borrow_mut() = ctx.vec_f32(8);
+            Ok(())
+        });
+        assert_eq!(*first.borrow(), *second.borrow());
+    }
+}

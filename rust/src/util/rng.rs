@@ -1,0 +1,274 @@
+//! Deterministic PRNG substrate: PCG-XSH-RR 64/32 with splitmix seeding
+//! and counter-based stream derivation.
+//!
+//! Stream derivation is load-bearing for the paper's shared-seed trick
+//! (§3.2 / Alg. 1 lines 5–6): node `i` and node `j` both derive the mask
+//! RNG for edge `(i, j)` at round `r` as `Pcg::derive(seed, &[EDGE_MASK,
+//! edge_id, round, dir])` — identical on both endpoints, so the sparsity
+//! pattern ω never crosses the wire.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014). Small state, excellent statistical
+/// quality, and — unlike xorshift — a principled multi-stream story via
+/// the odd increment.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+/// splitmix64 — used to expand seeds and hash derivation tuples.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+impl Pcg {
+    /// New generator from a 64-bit seed (stream 0).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0)
+    }
+
+    /// New generator on an explicit stream.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg {
+            state: 0,
+            inc: (splitmix64(stream.wrapping_add(0xda3e_39cb_94b9_5bdb)) << 1) | 1,
+        };
+        rng.state = splitmix64(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Counter-based derivation: a generator uniquely determined by
+    /// `(seed, path)`. Both endpoints of an edge derive identical mask
+    /// generators from the same path — the shared-seed optimization.
+    pub fn derive(seed: u64, path: &[u64]) -> Self {
+        let mut h = splitmix64(seed ^ 0x243F_6A88_85A3_08D3);
+        for &p in path {
+            h = splitmix64(h ^ splitmix64(p.wrapping_add(0x9E37_79B9)));
+        }
+        Pcg::with_stream(h, splitmix64(h ^ 0xB752_1E95))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 24 bits of mantissa entropy.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's nearly-divisionless method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; this RNG is not on any hot path that cares).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-12 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Standard normal as f32.
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Domain tags for [`Pcg::derive`] paths, so independent uses can never
+/// collide on the same stream.
+pub mod streams {
+    /// Per-edge, per-round compression mask (the paper's ω).
+    pub const EDGE_MASK: u64 = 1;
+    /// Dataset generation.
+    pub const DATA: u64 = 2;
+    /// Per-node batch shuffling.
+    pub const BATCH: u64 = 3;
+    /// Model initialization (quadratic substrate).
+    pub const INIT: u64 = 4;
+    /// PowerGossip warm-start vectors.
+    pub const POWER: u64 = 5;
+    /// Heterogeneous class assignment.
+    pub const PARTITION: u64 = 6;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn derive_is_path_sensitive() {
+        let mut a = Pcg::derive(7, &[1, 2, 3]);
+        let mut b = Pcg::derive(7, &[1, 2, 4]);
+        let mut c = Pcg::derive(7, &[1, 2, 3]);
+        assert_eq!(a.next_u64(), c.next_u64());
+        let mut a2 = Pcg::derive(7, &[1, 2, 3]);
+        assert_ne!(a2.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut rng = Pcg::new(3);
+        for _ in 0..10_000 {
+            let x = rng.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut rng = Pcg::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg::new(5);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut rng = Pcg::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::new(13);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg::new(17);
+        let idx = rng.sample_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg::new(23);
+        let hits = (0..100_000).filter(|_| rng.bernoulli(0.1)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.1).abs() < 0.01, "rate={rate}");
+    }
+}

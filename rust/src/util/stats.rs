@@ -1,0 +1,127 @@
+//! Small numeric helpers: summary statistics and human-readable units.
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute from a sample (not required to be sorted).
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+        }
+    }
+}
+
+/// Percentile of an ascending-sorted slice, linear interpolation.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// `1234567` -> `"1206 KB"` etc. Uses KB = 1024 B and keeps KB up to
+/// tens of MB to match the paper's table units (e.g. `18677 KB`).
+pub fn human_bytes(bytes: f64) -> String {
+    if bytes < 1024.0 {
+        format!("{bytes:.0} B")
+    } else if bytes < 32.0 * 1024.0 * 1024.0 {
+        format!("{:.0} KB", bytes / 1024.0)
+    } else {
+        format!("{:.1} MB", bytes / (1024.0 * 1024.0))
+    }
+}
+
+/// `12.3456` seconds -> `"12.35 s"`, small values in ms/us.
+pub fn human_secs(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.1} us", secs * 1e6)
+    }
+}
+
+/// Geometric mean of per-round contraction factors between consecutive
+/// error norms: `(e_last / e_first)^(1/(n-1))`. Used by the Theorem-1
+/// rate checker.
+pub fn empirical_rate(errors: &[f64]) -> f64 {
+    assert!(errors.len() >= 2);
+    let first = errors[0].max(1e-300);
+    let last = errors[errors.len() - 1].max(1e-300);
+    (last / first).powf(1.0 / (errors.len() - 1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 5.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile(&xs, 1.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(5336.0 * 1024.0), "5336 KB");
+        assert_eq!(human_bytes(18677.0 * 1024.0), "18677 KB");
+        assert_eq!(human_bytes(48.0 * 1024.0 * 1024.0), "48.0 MB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(2.0), "2.00 s");
+        assert_eq!(human_secs(0.0021), "2.10 ms");
+        assert_eq!(human_secs(12e-6), "12.0 us");
+    }
+
+    #[test]
+    fn rate_of_geometric_sequence() {
+        // e_r = 0.5^r: rate must be 0.5.
+        let errs: Vec<f64> = (0..10).map(|r| 0.5f64.powi(r)).collect();
+        assert!((empirical_rate(&errs) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,152 @@
+//! Markdown-table and CSV emitters for experiment reports (serde-free).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned markdown table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(headers: I) -> Self {
+        Table {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as a column-aligned GitHub-flavored markdown table.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            out.push('|');
+            for i in 0..ncols {
+                let _ = write!(out, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{:-<w$}|", "", w = w + 2);
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Write as CSV (headers + rows). Cells containing commas are quoted.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        let quote = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        writeln!(
+            f,
+            "{}",
+            self.headers.iter().map(|h| quote(h)).collect::<Vec<_>>().join(",")
+        )?;
+        for row in &self.rows {
+            writeln!(
+                f,
+                "{}",
+                row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(",")
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Format helper matching the paper's communication-cost columns:
+/// `"5336 KB (x1.0)"`.
+pub fn kb_with_ratio(bytes: f64, baseline_bytes: f64) -> String {
+    let kb = bytes / 1024.0;
+    if baseline_bytes > 0.0 && bytes > 0.0 {
+        format!("{:.0} KB (x{:.1})", kb, baseline_bytes / bytes)
+    } else if bytes > 0.0 {
+        format!("{kb:.0} KB")
+    } else {
+        "-".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(["method", "acc"]);
+        t.row(["D-PSGD", "84.1"]);
+        t.row(["C-ECL (1%)", "84.0"]);
+        let r = t.render();
+        assert!(r.contains("| method     | acc  |"));
+        assert!(r.lines().count() == 4);
+        for line in r.lines() {
+            assert_eq!(line.len(), r.lines().next().unwrap().len());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("cecl_table_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(["x", "y"]);
+        t.row(["1", "2,3"]);
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "x,y\n1,\"2,3\"\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(
+            kb_with_ratio(1024.0 * 100.0, 1024.0 * 1000.0),
+            "100 KB (x10.0)"
+        );
+        assert_eq!(kb_with_ratio(0.0, 123.0), "-");
+    }
+}

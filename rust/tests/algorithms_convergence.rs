@@ -1,0 +1,177 @@
+//! Convergence-behaviour suite on the convex-quadratic substrate — fast,
+//! exact, artifact-free checks of the paper's algorithmic claims.
+
+use cecl::graph::Graph;
+use cecl::linalg;
+use cecl::quadratic::{
+    delta_of, rate_bound, run_cecl, tau_threshold, theta_domain, DualRule,
+    QuadraticNetwork,
+};
+use cecl::util::stats::empirical_rate;
+
+fn network(seed: u64) -> (QuadraticNetwork, Graph) {
+    let graph = Graph::ring(8);
+    (QuadraticNetwork::random(8, 16, 30, 0.5, 0.6, seed), graph)
+}
+
+#[test]
+fn ecl_reaches_consensus_at_optimum() {
+    let (net, graph) = network(1);
+    let alpha = net.best_alpha(&graph);
+    let errors = run_cecl(&net, &graph, alpha, 1.0, 1.0, 300, 1,
+                          DualRule::CompressDiff);
+    assert!(
+        errors.last().unwrap() < &(errors[0] * 1e-8),
+        "did not converge: {:?}",
+        errors.last()
+    );
+}
+
+#[test]
+fn cecl_converges_across_seeds_and_compressions() {
+    for seed in [2, 3, 4] {
+        let (net, graph) = network(seed);
+        let alpha = net.best_alpha(&graph);
+        let delta = net.delta(alpha, &graph);
+        for k in [0.5, 0.8] {
+            if k < tau_threshold(delta) {
+                continue;
+            }
+            let errors = run_cecl(&net, &graph, alpha, 1.0, k, 300, seed,
+                                  DualRule::CompressDiff);
+            assert!(
+                errors.last().unwrap() < &(errors[0] * 1e-3),
+                "seed {seed} k {k}: {:?}",
+                errors.last()
+            );
+        }
+    }
+}
+
+#[test]
+fn compression_slows_but_does_not_break() {
+    let (net, graph) = network(5);
+    let alpha = net.best_alpha(&graph);
+    let rate_at = |k: f64| {
+        let e = run_cecl(&net, &graph, alpha, 1.0, k, 200, 5,
+                         DualRule::CompressDiff);
+        empirical_rate(&e[40..])
+    };
+    let r1 = rate_at(1.0);
+    let r05 = rate_at(0.5);
+    assert!(r1 < 1.0 && r05 < 1.0);
+    assert!(r1 <= r05 + 0.02, "full {r1} vs half {r05}");
+}
+
+#[test]
+fn naive_rule_fails_where_cecl_succeeds() {
+    // The §3.2 motivation: Eq. (11) stalls at a noise floor, Eq. (13)
+    // drives the error to ~0.
+    let (net, graph) = network(6);
+    let alpha = net.best_alpha(&graph);
+    let diff = run_cecl(&net, &graph, alpha, 1.0, 0.5, 250, 6,
+                        DualRule::CompressDiff);
+    let naive = run_cecl(&net, &graph, alpha, 1.0, 0.5, 250, 6,
+                         DualRule::CompressY);
+    assert!(diff.last().unwrap() * 20.0 < *naive.last().unwrap());
+}
+
+#[test]
+fn works_on_every_paper_topology() {
+    let net = QuadraticNetwork::random(8, 12, 24, 0.5, 0.5, 7);
+    for graph in [
+        Graph::chain(8),
+        Graph::ring(8),
+        Graph::multiplex_ring(8),
+        Graph::complete(8),
+    ] {
+        let alpha = net.best_alpha(&graph);
+        let errors = run_cecl(&net, &graph, alpha, 1.0, 0.8, 250, 7,
+                              DualRule::CompressDiff);
+        assert!(
+            errors.last().unwrap() < &(errors[0] * 1e-3),
+            "topology deg[{},{}]: final {:?}",
+            graph.min_degree(),
+            graph.max_degree(),
+            errors.last()
+        );
+    }
+}
+
+#[test]
+fn delta_and_domain_formulas_consistent() {
+    // δ(α*) minimizes the two-branch max; the θ domain at the threshold
+    // collapses onto a point near 1... (Lemma 6 arithmetic).
+    let (net, graph) = network(8);
+    let alpha = net.best_alpha(&graph);
+    let delta = net.delta(alpha, &graph);
+    assert!((0.0..1.0).contains(&delta));
+    let thr = tau_threshold(delta);
+    // Just above the threshold the domain exists and is tight around 1.
+    let (lo, hi) = theta_domain(thr + 1e-6, delta).expect("non-empty");
+    assert!(lo < 1.0 + 1e-3 && hi > 1.0 - 1e-3);
+    // Far above, it widens.
+    let (lo2, hi2) = theta_domain(1.0, delta).unwrap();
+    assert!(lo2 <= lo && hi2 >= hi);
+    // delta_of is continuous in alpha around alpha*.
+    let d1 = delta_of(alpha * 1.001, net.l_smooth, net.mu,
+                      graph.max_degree() as f64, graph.min_degree() as f64);
+    assert!((d1 - delta).abs() < 1e-2);
+}
+
+#[test]
+fn rate_bound_theorem1_structure() {
+    // ρ(θ=1, τ=1, δ) = δ (Corollary 1 with θ = 1 — the Peaceman-Rachford
+    // point), and ρ grows as √(1−τ) scales the compression penalty.
+    for delta in [0.1, 0.5, 0.9] {
+        assert!((rate_bound(1.0, 1.0, delta) - delta).abs() < 1e-12);
+    }
+    let d = 0.4;
+    let penalty = |tau: f64| rate_bound(1.0, tau, d) - d;
+    assert!(penalty(1.0).abs() < 1e-12);
+    let p075 = penalty(0.75);
+    let p05 = penalty(0.5);
+    // penalty(τ) = √(1−τ)(1 + δ): check exact values.
+    assert!((p075 - 0.25f64.sqrt() * (1.0 + d)).abs() < 1e-12);
+    assert!((p05 - 0.5f64.sqrt() * (1.0 + d)).abs() < 1e-12);
+}
+
+#[test]
+fn heterogeneity_hurts_gossip_not_prox() {
+    // Convex analogue of the paper's headline: one exact-averaging
+    // gossip round cannot reach the global optimum under heterogeneity
+    // (consensus of local optima != global optimum), while the
+    // primal-dual iteration converges to it exactly.
+    let (net, graph) = network(9);
+    // "Gossip at convergence": each node at its LOCAL optimum, then
+    // repeated MH averaging converges to the mean of local optima.
+    let dim = net.dim;
+    let mut locals: Vec<Vec<f64>> = net
+        .nodes
+        .iter()
+        .map(|n| {
+            cecl::linalg::Cholesky::new(&n.hess).unwrap().solve(&n.btc)
+        })
+        .collect();
+    let w = graph.mh_weights();
+    for _ in 0..500 {
+        let prev = locals.clone();
+        for i in 0..graph.n() {
+            let mut acc = vec![0.0; dim];
+            for j in 0..graph.n() {
+                if w[i][j] != 0.0 {
+                    linalg::axpy(w[i][j], &prev[j], &mut acc);
+                }
+            }
+            locals[i] = acc;
+        }
+    }
+    let gossip_err = linalg::norm2(&linalg::sub(&locals[0], &net.w_star));
+    let cecl_errors = run_cecl(&net, &graph, net.best_alpha(&graph), 1.0,
+                               1.0, 300, 9, DualRule::CompressDiff);
+    let prox_err = *cecl_errors.last().unwrap();
+    assert!(
+        prox_err < gossip_err / 100.0,
+        "prox {prox_err} vs gossip-mean bias {gossip_err}"
+    );
+}

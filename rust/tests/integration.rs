@@ -1,0 +1,209 @@
+//! Cross-module integration: full (tiny) experiment runs through the
+//! coordinator, byte-accounting invariants, and data-pipeline glue.
+//! Requires `make artifacts` (self-skips otherwise).
+
+use cecl::algorithms::{AlgorithmSpec, DualPath};
+use cecl::coordinator::{run_with_engine, ExperimentSpec};
+use cecl::data::Partition;
+use cecl::graph::Graph;
+use cecl::model::Manifest;
+use cecl::runtime::Engine;
+
+fn setup() -> Option<(Engine, Manifest)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some((Engine::cpu().unwrap(), Manifest::load(dir).unwrap()))
+}
+
+/// CI-sized spec: 4 nodes, 2 epochs, small data.
+fn tiny_spec(alg: AlgorithmSpec) -> ExperimentSpec {
+    ExperimentSpec {
+        dataset: "fashion".into(),
+        algorithm: alg,
+        epochs: 2,
+        nodes: 4,
+        train_per_node: 100,
+        test_size: 200,
+        local_steps: 2,
+        eta: 0.04,
+        eval_every: 1,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_algorithm_runs_end_to_end() {
+    let Some((engine, manifest)) = setup() else { return };
+    let graph = Graph::ring(4);
+    for alg in [
+        AlgorithmSpec::Sgd,
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::CEcl { k_frac: 0.1, theta: 1.0, dense_first_epoch: true },
+        AlgorithmSpec::NaiveCEcl { k_frac: 0.1, theta: 1.0 },
+        AlgorithmSpec::PowerGossip { iters: 2 },
+    ] {
+        let name = alg.name();
+        let report =
+            run_with_engine(&engine, &manifest, &tiny_spec(alg), &graph)
+                .unwrap_or_else(|e| panic!("{name}: {e:?}"));
+        assert_eq!(report.history.records.len(), 2, "{name}: eval points");
+        assert!(report.final_accuracy > 0.05, "{name}: degenerate accuracy");
+        assert!(
+            report.history.records[0].train_loss.is_finite(),
+            "{name}: train loss"
+        );
+    }
+}
+
+#[test]
+fn byte_accounting_matches_analytic_rates() {
+    let Some((engine, manifest)) = setup() else { return };
+    let graph = Graph::ring(4);
+    let ds = manifest.dataset("fashion").unwrap();
+    let d = ds.d_pad as f64;
+    // 100 samples, batch 50 => 2 batches/epoch; K=2 => 1 round/epoch.
+    let rounds_per_epoch = 1.0;
+    let epochs = 2.0;
+    let neighbors = 2.0;
+
+    // D-PSGD: dense w per neighbor per round.
+    let r = run_with_engine(&engine, &manifest, &tiny_spec(AlgorithmSpec::DPsgd),
+                            &graph).unwrap();
+    let want = rounds_per_epoch * neighbors * d * 4.0;
+    assert!(
+        (r.mean_bytes_per_epoch - want).abs() < 1.0,
+        "dpsgd: {} vs {want}",
+        r.mean_bytes_per_epoch
+    );
+
+    // ECL: dense y per neighbor per round — identical bytes to D-PSGD.
+    let r_ecl = run_with_engine(
+        &engine, &manifest, &tiny_spec(AlgorithmSpec::Ecl { theta: 1.0 }),
+        &graph,
+    ).unwrap();
+    assert!((r_ecl.mean_bytes_per_epoch - want).abs() < 1.0);
+
+    // C-ECL (k=10%, no warmup): COO idx+val = 8 bytes per kept coord.
+    let mut spec = tiny_spec(AlgorithmSpec::CEcl {
+        k_frac: 0.1,
+        theta: 1.0,
+        dense_first_epoch: false,
+    });
+    spec.seed = 3;
+    let r_cecl = run_with_engine(&engine, &manifest, &spec, &graph).unwrap();
+    let want_cecl = rounds_per_epoch * neighbors * d * 0.1 * 8.0;
+    let tol = want_cecl * 0.05; // Bernoulli(k) mask size fluctuates
+    assert!(
+        (r_cecl.mean_bytes_per_epoch - want_cecl).abs() < tol,
+        "cecl: {} vs {want_cecl}",
+        r_cecl.mean_bytes_per_epoch
+    );
+    // Ratio ladder: the paper's x(2/k·...) ordering.
+    assert!(r_cecl.mean_bytes_per_epoch < r_ecl.mean_bytes_per_epoch / 4.0);
+
+    // Warmup epoch adds one dense epoch's worth.
+    let r_warm = run_with_engine(
+        &engine,
+        &manifest,
+        &tiny_spec(AlgorithmSpec::CEcl {
+            k_frac: 0.1,
+            theta: 1.0,
+            dense_first_epoch: true,
+        }),
+        &graph,
+    ).unwrap();
+    assert!(
+        r_warm.mean_bytes_per_epoch > r_cecl.mean_bytes_per_epoch * 2.0,
+        "warmup must cost more: {} vs {}",
+        r_warm.mean_bytes_per_epoch,
+        r_cecl.mean_bytes_per_epoch
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some((engine, manifest)) = setup() else { return };
+    let graph = Graph::ring(4);
+    let spec = tiny_spec(AlgorithmSpec::CEcl {
+        k_frac: 0.2,
+        theta: 1.0,
+        dense_first_epoch: false,
+    });
+    let a = run_with_engine(&engine, &manifest, &spec, &graph).unwrap();
+    let b = run_with_engine(&engine, &manifest, &spec, &graph).unwrap();
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.total_bytes, b.total_bytes);
+    let mut spec2 = spec.clone();
+    spec2.seed = 8;
+    let c = run_with_engine(&engine, &manifest, &spec2, &graph).unwrap();
+    assert_ne!(a.total_bytes, c.total_bytes); // different masks w.h.p.
+}
+
+#[test]
+fn dual_paths_agree_in_training() {
+    // The L1 Pallas kernel through PJRT vs the native twin: identical
+    // wire traffic and (numerically) identical learning trajectory.
+    let Some((engine, manifest)) = setup() else { return };
+    let graph = Graph::ring(4);
+    let mut spec = tiny_spec(AlgorithmSpec::CEcl {
+        k_frac: 0.2,
+        theta: 1.0,
+        dense_first_epoch: false,
+    });
+    spec.dual_path = DualPath::Native;
+    let native = run_with_engine(&engine, &manifest, &spec, &graph).unwrap();
+    spec.dual_path = DualPath::Pjrt;
+    let pjrt = run_with_engine(&engine, &manifest, &spec, &graph).unwrap();
+    assert_eq!(native.total_bytes, pjrt.total_bytes, "wire traffic differs");
+    assert!(
+        (native.final_accuracy - pjrt.final_accuracy).abs() < 2e-2,
+        "trajectories diverged: {} vs {}",
+        native.final_accuracy,
+        pjrt.final_accuracy
+    );
+}
+
+#[test]
+fn heterogeneous_partition_plumbs_through() {
+    let Some((engine, manifest)) = setup() else { return };
+    let graph = Graph::ring(4);
+    let mut spec = tiny_spec(AlgorithmSpec::DPsgd);
+    spec.partition = Partition::Heterogeneous { classes_per_node: 8 };
+    let report = run_with_engine(&engine, &manifest, &spec, &graph).unwrap();
+    assert!(report.partition.contains("heterogeneous"));
+    assert!(report.final_accuracy > 0.05);
+}
+
+#[test]
+fn topologies_change_byte_costs() {
+    let Some((engine, manifest)) = setup() else { return };
+    let mut costs = Vec::new();
+    for (name, graph) in [
+        ("chain", Graph::chain(4)),
+        ("ring", Graph::ring(4)),
+        ("complete", Graph::complete(4)),
+    ] {
+        let r = run_with_engine(
+            &engine, &manifest, &tiny_spec(AlgorithmSpec::DPsgd), &graph,
+        ).unwrap();
+        costs.push((name, r.mean_bytes_per_epoch));
+    }
+    // chain (1.5 avg degree) < ring (2) < complete (3).
+    assert!(costs[0].1 < costs[1].1);
+    assert!(costs[1].1 < costs[2].1);
+}
+
+#[test]
+fn sgd_uses_all_data_and_sends_nothing() {
+    let Some((engine, manifest)) = setup() else { return };
+    let graph = Graph::ring(4);
+    let r = run_with_engine(&engine, &manifest, &tiny_spec(AlgorithmSpec::Sgd),
+                            &graph).unwrap();
+    assert_eq!(r.total_bytes, 0);
+    assert!(r.final_accuracy > 0.1);
+}

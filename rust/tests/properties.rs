@@ -1,0 +1,330 @@
+//! Property-based suites over the L3 substrates (util::prop — the
+//! in-repo proptest substitute; each property runs across seeded random
+//! inputs with ramping sizes).
+
+use cecl::compress::{Compressor, CooVec, Identity, RandK, TopK};
+use cecl::data::{node_classes, Partition};
+use cecl::graph::Graph;
+use cecl::linalg::{Cholesky, Mat};
+use cecl::prop_assert;
+use cecl::quadratic::{rate_bound, tau_threshold, theta_domain};
+use cecl::runtime::native;
+use cecl::util::prop::{check, Ctx};
+use cecl::util::rng::Pcg;
+
+// ---------------------------------------------------------------------
+// Compression operators (Assumption 1)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_randk_linearity_eq8_eq9() {
+    // comp(x+y; ω) = comp(x; ω) + comp(y; ω) and comp(−x; ω) = −comp(x; ω)
+    // hold EXACTLY for fixed ω.
+    check("randk-linearity", 40, 4096, |ctx: &mut Ctx| {
+        let d = ctx.size.max(4);
+        let x = ctx.vec_f32(d);
+        let y = ctx.vec_f32(d);
+        let k = 0.05 + 0.9 * ctx.rng.f64();
+        let op = RandK::new(k);
+        let mask = op.sample_mask(d, &mut ctx.rng);
+        let sum: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let neg: Vec<f32> = x.iter().map(|a| -a).collect();
+        let cx = CooVec::gather(&x, &mask);
+        let cy = CooVec::gather(&y, &mask);
+        let cs = CooVec::gather(&sum, &mask);
+        let cn = CooVec::gather(&neg, &mask);
+        for i in 0..mask.len() {
+            prop_assert!(
+                cs.val[i] == cx.val[i] + cy.val[i],
+                "Eq.8 violated at {i}"
+            );
+            prop_assert!(cn.val[i] == -cx.val[i], "Eq.9 violated at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_randk_contraction_eq7() {
+    // E‖comp(x) − x‖² ≤ (1 − τ)‖x‖² within sampling error.
+    check("randk-eq7", 10, 2000, |ctx: &mut Ctx| {
+        let d = ctx.size.max(256);
+        let x = ctx.vec_f32(d);
+        let k = 0.1 + 0.8 * ctx.rng.f64();
+        let op = RandK::new(k);
+        let measured =
+            cecl::compress::measure_contraction(&op, &x, 40, &mut ctx.rng);
+        let want = 1.0 - op.tau();
+        prop_assert!(
+            (measured - want).abs() < 0.15,
+            "contraction {measured} vs 1-tau {want} (k={k})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_never_worse_than_randk_energy() {
+    check("topk-energy", 20, 2048, |ctx: &mut Ctx| {
+        let d = ctx.size.max(64);
+        let x = ctx.vec_f32(d);
+        let k = 0.05 + 0.4 * ctx.rng.f64();
+        let top = TopK::new(k).compress(&x, &mut ctx.rng);
+        let rand = RandK::new(k).compress(&x, &mut ctx.rng);
+        prop_assert!(
+            top.norm2_sq() >= rand.norm2_sq() - 1e-9,
+            "top-k kept less energy"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_identity_roundtrip() {
+    check("identity", 10, 512, |ctx: &mut Ctx| {
+        let d = ctx.size.max(1);
+        let x = ctx.vec_f32(d);
+        let c = Identity.compress(&x, &mut ctx.rng);
+        prop_assert!(c.to_dense() == x, "identity not exact");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coo_scatter_gather_roundtrip() {
+    check("coo-roundtrip", 30, 2048, |ctx: &mut Ctx| {
+        let d = ctx.size.max(8);
+        let x = ctx.vec_f32(d);
+        let mask = RandK::new(0.3).sample_mask(d, &mut ctx.rng);
+        let coo = CooVec::gather(&x, &mask);
+        let dense = coo.to_dense();
+        for (i, &v) in dense.iter().enumerate() {
+            let expect = if mask.contains(&(i as u32)) { x[i] } else { 0.0 };
+            prop_assert!(v == expect, "coord {i}");
+        }
+        prop_assert!(coo.wire_bytes() == 8 * mask.len(), "byte accounting");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Fused dual update (native twin of the L1 kernel)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_dual_update_fixed_point() {
+    // At a fixed point (y_recv == z) the update must leave z unchanged
+    // for every mask and θ.
+    check("dual-fixed-point", 30, 1024, |ctx: &mut Ctx| {
+        let d = ctx.size.max(16);
+        let mut z = ctx.vec_f32(d);
+        let z0 = z.clone();
+        let w = ctx.vec_f32(d);
+        let theta = ctx.rng.f32();
+        let mask = RandK::new(0.4).sample_mask(d, &mut ctx.rng);
+        let ycomp = CooVec::gather(&z0, &mask); // comp(y) with y == z
+        let mut yvals = Vec::new();
+        native::dual_update_sparse(&mut z, &w, &ycomp, &mask, theta, 0.7,
+                                   &mut yvals);
+        for i in 0..d {
+            prop_assert!((z[i] - z0[i]).abs() < 1e-6, "z moved at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_update_dense_sparse_agree() {
+    check("dual-dense-sparse", 25, 1024, |ctx: &mut Ctx| {
+        let d = ctx.size.max(16);
+        let z0 = ctx.vec_f32(d);
+        let w = ctx.vec_f32(d);
+        let y = ctx.vec_f32(d);
+        let theta = ctx.rng.f32();
+        let taa = ctx.rng.normal_f32();
+        let mask_in = RandK::new(0.3).sample_mask(d, &mut ctx.rng);
+        let mask_out = RandK::new(0.3).sample_mask(d, &mut ctx.rng);
+        // Dense path.
+        let mut mi = Vec::new();
+        let mut mo = Vec::new();
+        RandK::mask_to_dense(d, &mask_in, &mut mi);
+        RandK::mask_to_dense(d, &mask_out, &mut mo);
+        let ycomp_dense: Vec<f32> =
+            y.iter().zip(&mi).map(|(a, b)| a * b).collect();
+        let mut zn = vec![0.0; d];
+        let mut ys = vec![0.0; d];
+        native::dual_update_into(&z0, &w, &ycomp_dense, &mi, &mo, theta, taa,
+                                 &mut zn, &mut ys);
+        // Sparse path.
+        let mut z_sp = z0.clone();
+        let coo = CooVec::gather(&y, &mask_in);
+        let mut yvals = Vec::new();
+        native::dual_update_sparse(&mut z_sp, &w, &coo, &mask_out, theta, taa,
+                                   &mut yvals);
+        for i in 0..d {
+            prop_assert!((z_sp[i] - zn[i]).abs() < 1e-5, "z mismatch at {i}");
+        }
+        for (k, &i) in mask_out.iter().enumerate() {
+            prop_assert!(
+                (yvals[k] - ys[i as usize]).abs() < 1e-5,
+                "y mismatch at {i}"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Graph invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_random_graphs_connected_mh_stochastic() {
+    check("graph-mh", 20, 24, |ctx: &mut Ctx| {
+        let n = (ctx.size + 3).min(24);
+        let g = Graph::random(n, ctx.rng.f64() * 0.5, ctx.rng.next_u64());
+        prop_assert!(g.is_connected(), "disconnected");
+        let w = g.mh_weights();
+        for i in 0..n {
+            let row: f64 = w[i].iter().sum();
+            prop_assert!((row - 1.0).abs() < 1e-9, "row {i} sums to {row}");
+            for j in 0..n {
+                prop_assert!(w[i][j] >= -1e-12, "negative weight");
+                prop_assert!(
+                    (w[i][j] - w[j][i]).abs() < 1e-12,
+                    "asymmetric at ({i},{j})"
+                );
+            }
+        }
+        // Edge-sign pairing (Eq. 2): A_{i|j} + A_{j|i} = 0.
+        for &(i, j) in g.edges() {
+            prop_assert!(
+                g.edge_sign(i, j) + g.edge_sign(j, i) == 0.0,
+                "sign pairing"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Linear algebra
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cholesky_solves_random_spd() {
+    check("cholesky", 20, 24, |ctx: &mut Ctx| {
+        let n = (ctx.size % 24).max(2);
+        let b = Mat::randn(n + 3, n, &mut ctx.rng);
+        let mut a = b.gram();
+        a.add_diag(0.3);
+        let x_true = ctx.vec_f64(n);
+        let rhs = a.matvec(&x_true);
+        let x = Cholesky::new(&a)
+            .ok_or_else(|| "not SPD".to_string())?
+            .solve(&rhs);
+        for i in 0..n {
+            prop_assert!(
+                (x[i] - x_true[i]).abs() < 1e-6,
+                "solve mismatch at {i}: {} vs {}",
+                x[i],
+                x_true[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Theory formulas (Theorem 1 arithmetic)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_theta_domain_contains_one_and_bound_below_one() {
+    // Whenever τ is above the threshold, Eq. (15) contains θ = 1 and the
+    // bound at θ = 1 contracts (< 1) — the paper's Lemma 6.
+    check("theta-domain", 50, 1, |ctx: &mut Ctx| {
+        let delta = ctx.rng.f64() * 0.95;
+        let threshold = tau_threshold(delta);
+        let tau = threshold + (1.0 - threshold) * (0.05 + 0.9 * ctx.rng.f64());
+        match theta_domain(tau, delta) {
+            Some((lo, hi)) => {
+                prop_assert!(
+                    lo < 1.0 && 1.0 <= hi + 1e-12,
+                    "domain ({lo},{hi}) misses 1 (tau={tau}, delta={delta})"
+                );
+                let rho = rate_bound(1.0, tau, delta);
+                prop_assert!(rho < 1.0, "bound {rho} >= 1");
+                Ok(())
+            }
+            None => Err(format!(
+                "domain empty above threshold: tau={tau} delta={delta}"
+            )),
+        }
+    });
+}
+
+#[test]
+fn prop_rate_bound_monotone_in_tau() {
+    // Less compression (larger τ) never worsens the bound.
+    check("bound-monotone", 50, 1, |ctx: &mut Ctx| {
+        let delta = ctx.rng.f64() * 0.9;
+        let theta = 0.2 + ctx.rng.f64();
+        let t1 = ctx.rng.f64();
+        let t2 = t1 + (1.0 - t1) * ctx.rng.f64();
+        prop_assert!(
+            rate_bound(theta, t2, delta) <= rate_bound(theta, t1, delta) + 1e-12,
+            "bound not monotone: tau {t1}->{t2}"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Data partitioner
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_heterogeneous_partition_shapes() {
+    check("partition", 20, 16, |ctx: &mut Ctx| {
+        let nodes = (ctx.size % 16).max(2);
+        let per = 1 + ctx.rng.below(9);
+        let sets = node_classes(
+            Partition::Heterogeneous { classes_per_node: per },
+            nodes,
+            10,
+            ctx.rng.next_u64(),
+        );
+        prop_assert!(sets.len() == nodes, "wrong node count");
+        for s in &sets {
+            prop_assert!(s.len() == per, "wrong class count");
+            let mut d = s.clone();
+            d.dedup();
+            prop_assert!(d.len() == per, "duplicate classes");
+            prop_assert!(s.iter().all(|&c| c < 10), "class out of range");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// RNG stream separation
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_derive_streams_uncorrelated() {
+    check("rng-streams", 20, 1, |ctx: &mut Ctx| {
+        let seed = ctx.rng.next_u64();
+        let a = ctx.rng.next_u64();
+        let b = ctx.rng.next_u64();
+        if a == b {
+            return Ok(());
+        }
+        let mut ra = Pcg::derive(seed, &[a]);
+        let mut rb = Pcg::derive(seed, &[b]);
+        let matches =
+            (0..256).filter(|_| ra.next_u32() == rb.next_u32()).count();
+        prop_assert!(matches < 4, "streams correlated: {matches}/256");
+        Ok(())
+    });
+}

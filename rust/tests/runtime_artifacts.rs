@@ -1,0 +1,216 @@
+//! Runtime <-> artifact integration: load the real AOT-compiled HLO
+//! modules through PJRT and cross-check them against independent rust
+//! implementations.  Requires `make artifacts` (tests self-skip when the
+//! artifacts directory is absent).
+
+use std::sync::Arc;
+
+use cecl::compress::RandK;
+use cecl::model::Manifest;
+use cecl::runtime::{native, Engine, In, ModelRuntime};
+use cecl::util::rng::Pcg;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(Manifest::load(dir).expect("manifest parses"))
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+#[test]
+fn smoke_artifact_executes() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_hlo(&m.smoke).unwrap();
+    // smoke = (x * y + 1,)
+    let out = exe
+        .run(&[
+            In::F32(&[1.0, 2.0, 3.0, 4.0], &[4]),
+            In::F32(&[10.0, 10.0, 10.0, 10.0], &[4]),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0], vec![11.0, 21.0, 31.0, 41.0]);
+}
+
+#[test]
+fn train_step_with_alpha_zero_is_sgd_direction() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let ds = m.dataset("fashion").unwrap();
+    let rt = ModelRuntime::load(&engine, ds).unwrap();
+    let w = ds.load_init_w().unwrap();
+    let zeros = vec![0.0f32; ds.d_pad];
+    let x = randn(ds.batch * ds.sample_len(), 1);
+    let y: Vec<i32> = (0..ds.batch as i32).map(|i| i % 10).collect();
+    let eta = 0.01f32;
+
+    let (w1, loss1) = rt.train_step(&w, &zeros, &x, &y, eta, 0.0).unwrap();
+    assert!(loss1.is_finite() && loss1 > 0.0);
+    // Same inputs with half the learning rate: step size halves (pure
+    // SGD linearity in eta for fixed gradient).
+    let (w2, loss2) = rt.train_step(&w, &zeros, &x, &y, eta / 2.0, 0.0).unwrap();
+    assert!((loss1 - loss2).abs() < 1e-5, "loss must not depend on eta");
+    for i in (0..ds.d_pad).step_by(997) {
+        let step1 = w1[i] - w[i];
+        let step2 = w2[i] - w[i];
+        assert!(
+            (step1 - 2.0 * step2).abs() <= 1e-5 + 1e-2 * step1.abs(),
+            "eta linearity at {i}: {step1} vs 2*{step2}"
+        );
+    }
+}
+
+#[test]
+fn train_step_prox_shrinks_towards_zsum() {
+    // With huge alpha_deg and zsum = alpha * deg * target, the Eq. (6)
+    // closed form must land near target/deg... more precisely
+    // w ≈ zsum / alpha_deg when alpha_deg >> 1/eta.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let ds = m.dataset("fashion").unwrap();
+    let rt = ModelRuntime::load(&engine, ds).unwrap();
+    let w = ds.load_init_w().unwrap();
+    let target = randn(ds.d_pad, 3);
+    let alpha_deg = 1e6f32;
+    let zsum: Vec<f32> = target.iter().map(|t| t * alpha_deg).collect();
+    let x = randn(ds.batch * ds.sample_len(), 2);
+    let y: Vec<i32> = vec![0; ds.batch];
+    let (w_next, _) = rt.train_step(&w, &zsum, &x, &y, 0.05, alpha_deg).unwrap();
+    for i in (0..ds.d_pad).step_by(631) {
+        assert!(
+            (w_next[i] - target[i]).abs() < 1e-3,
+            "prox limit at {i}: {} vs {}",
+            w_next[i],
+            target[i]
+        );
+    }
+}
+
+#[test]
+fn eval_batch_counts_are_sane() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let ds = m.dataset("fashion").unwrap();
+    let rt = ModelRuntime::load(&engine, ds).unwrap();
+    let w = ds.load_init_w().unwrap();
+    let x = randn(ds.eval_batch * ds.sample_len(), 5);
+    let y: Vec<i32> = (0..ds.eval_batch as i32).map(|i| i % 10).collect();
+    let (correct, loss_sum) = rt.eval_batch(&w, &x, &y).unwrap();
+    assert!(correct >= 0.0 && correct <= ds.eval_batch as f32);
+    assert_eq!(correct, correct.round(), "correct must be integral");
+    // Random init on random data: loss near ln(10) per sample.
+    let per_sample = loss_sum / ds.eval_batch as f32;
+    assert!(
+        (per_sample - 10f32.ln()).abs() < 0.5,
+        "per-sample loss {per_sample} far from ln(10)"
+    );
+}
+
+#[test]
+fn pjrt_dual_update_matches_native_twin() {
+    // THE L1 cross-check: the Pallas dual_update artifact and the rust
+    // native twin must agree elementwise on random inputs.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let ds = m.dataset("fashion").unwrap();
+    let rt = ModelRuntime::load(&engine, ds).unwrap();
+    let d = ds.d_pad;
+    let z = randn(d, 11);
+    let w = randn(d, 12);
+    let y = randn(d, 13);
+    let op = RandK::new(0.2);
+    let mut rng = Pcg::new(14);
+    let mask_in = op.sample_mask(d, &mut rng);
+    let mask_out = op.sample_mask(d, &mut rng);
+    let mut mi = Vec::new();
+    let mut mo = Vec::new();
+    RandK::mask_to_dense(d, &mask_in, &mut mi);
+    RandK::mask_to_dense(d, &mask_out, &mut mo);
+    let ycomp: Vec<f32> = y.iter().zip(&mi).map(|(a, b)| a * b).collect();
+    let theta = 0.85f32;
+    let taa = -0.31f32;
+
+    let (z_pjrt, y_pjrt) = rt
+        .dual_update(&z, &w, &ycomp, &mi, &mo, theta, taa)
+        .unwrap();
+    let mut z_native = vec![0.0f32; d];
+    let mut y_native = vec![0.0f32; d];
+    native::dual_update_into(&z, &w, &ycomp, &mi, &mo, theta, taa,
+                             &mut z_native, &mut y_native);
+    for i in 0..d {
+        assert!(
+            (z_pjrt[i] - z_native[i]).abs() < 1e-5,
+            "z mismatch at {i}: {} vs {}",
+            z_pjrt[i],
+            z_native[i]
+        );
+        assert!(
+            (y_pjrt[i] - y_native[i]).abs() < 1e-5,
+            "y mismatch at {i}: {} vs {}",
+            y_pjrt[i],
+            y_native[i]
+        );
+    }
+}
+
+#[test]
+fn executables_are_thread_safe() {
+    // 4 threads through the same Arc<ModelRuntime> (the coordinator's
+    // sharing pattern).
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let ds = m.dataset("fashion").unwrap();
+    let rt = ModelRuntime::load(&engine, ds).unwrap();
+    let w = Arc::new(ds.load_init_w().unwrap());
+    let zeros = Arc::new(vec![0.0f32; ds.d_pad]);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let rt = Arc::clone(&rt);
+                let w = Arc::clone(&w);
+                let zeros = Arc::clone(&zeros);
+                let ds = ds.clone();
+                s.spawn(move || {
+                    let x = randn(ds.batch * ds.sample_len(), 100 + t);
+                    let y: Vec<i32> = vec![(t % 10) as i32; ds.batch];
+                    for _ in 0..3 {
+                        let (w2, loss) = rt
+                            .train_step(&w, &zeros, &x, &y, 0.01, 0.0)
+                            .unwrap();
+                        assert!(loss.is_finite());
+                        assert_eq!(w2.len(), ds.d_pad);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn both_dataset_configs_load_and_run() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    for name in ["fashion", "cifar"] {
+        let ds = m.dataset(name).unwrap();
+        let rt = ModelRuntime::load(&engine, ds).unwrap();
+        let w = ds.load_init_w().unwrap();
+        let x = randn(ds.batch * ds.sample_len(), 7);
+        let y: Vec<i32> = vec![1; ds.batch];
+        let (w2, loss) = rt.train_step(&w, &vec![0.0; ds.d_pad], &x, &y,
+                                       0.01, 0.0).unwrap();
+        assert!(loss.is_finite(), "{name} loss");
+        assert!(w2.iter().all(|v| v.is_finite()), "{name} weights");
+    }
+}
