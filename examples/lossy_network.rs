@@ -1,0 +1,92 @@
+//! The scenario the byte tables only hint at: what compression buys in
+//! *time* when the network is slow, lossy, and partially down.
+//!
+//! Runs D-PSGD, ECL, and C-ECL (10%) on a 16-node ring under the
+//! virtual-time engine with a 20 Mbit/s, 1 ms, 5%-drop link, a 4×
+//! straggler, and a mid-run outage on one edge — entirely artifact-free
+//! (native softmax backend), so it works on a bare checkout:
+//!
+//! ```bash
+//! cargo run --release --example lossy_network
+//! ```
+//!
+//! Expect all three methods to land at similar accuracy while C-ECL's
+//! smaller messages finish the same schedule in a fraction of the
+//! simulated time, with proportionally fewer retransmitted bytes.
+
+use cecl::prelude::*;
+use cecl::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let nodes = 16;
+    let graph = Graph::ring(nodes);
+
+    // One edge goes down for half a simulated second early in the run;
+    // node 3 computes at quarter speed throughout.
+    let mut outages = OutageSchedule::new();
+    outages.add(0, 100_000_000, 600_000_000);
+    let scenario = SimConfig {
+        link: LinkSpec::Lossy {
+            latency_us: 1_000,
+            mbit_per_sec: 20.0,
+            drop_p: 0.05,
+        },
+        compute_ns_per_step: 2_000_000, // 2 ms per local step
+        stragglers: vec![(3, 4.0)],
+        outages,
+    };
+
+    let methods = [
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::CEcl {
+            k_frac: 0.10,
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+    ];
+
+    let mut t = Table::new([
+        "method",
+        "final acc",
+        "sim time (s)",
+        "KB/node/epoch",
+        "retrans KB",
+    ]);
+    for alg in methods {
+        let spec = ExperimentSpec {
+            dataset: "fashion".into(),
+            algorithm: alg,
+            epochs: 6,
+            nodes,
+            train_per_node: 200,
+            test_size: 200,
+            local_steps: 5,
+            eta: 0.05,
+            eval_every: 2,
+            seed: 42,
+            exec: ExecMode::Simulated(scenario.clone()),
+            ..ExperimentSpec::default()
+        };
+        eprintln!("simulating {} ...", spec.algorithm.name());
+        let r = run_simulated_native(&spec, &graph)?;
+        t.row([
+            r.algorithm.clone(),
+            format!("{:.3}", r.final_accuracy),
+            format!("{:.2}", r.sim_time_secs.unwrap_or(0.0)),
+            format!("{:.0}", r.mean_bytes_per_epoch / 1024.0),
+            format!("{:.0}", r.retransmit_bytes as f64 / 1024.0),
+        ]);
+    }
+    println!(
+        "\nring({nodes}), lossy 20 Mbit/s / 1 ms / 5% drop, straggler x4, \
+         one edge down 0.1s-0.6s:\n"
+    );
+    println!("{}", t.render());
+    println!(
+        "C-ECL ships ~an order of magnitude fewer bytes than the dense \
+         methods, which on this link turns directly into less simulated \
+         time to the same accuracy."
+    );
+    Ok(())
+}

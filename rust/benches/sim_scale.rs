@@ -1,0 +1,100 @@
+//! Scale bench for the virtual-time engine: C-ECL(10%) on rings of
+//! n ∈ {64, 256, 512} nodes — node counts that are simply impossible
+//! with the thread-per-node engine (OS threads + blocking channels) —
+//! plus the wall-clock cost per simulated round and the simulated
+//! time-to-accuracy ladder across link models at n = 64.
+//!
+//! Entirely artifact-free (native softmax backend): `cargo bench
+//! --bench sim_scale` works on a bare checkout.
+
+use cecl::algorithms::AlgorithmSpec;
+use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
+use cecl::graph::Graph;
+use cecl::sim::{LinkSpec, SimConfig};
+use cecl::util::bench::BenchSet;
+use cecl::util::table::Table;
+
+fn spec(nodes: usize, epochs: usize, link: LinkSpec) -> ExperimentSpec {
+    ExperimentSpec {
+        dataset: "tiny".into(),
+        algorithm: AlgorithmSpec::CEcl {
+            k_frac: 0.10,
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+        epochs,
+        nodes,
+        train_per_node: 40,
+        test_size: 50,
+        local_steps: 2,
+        eta: 0.1,
+        eval_every: epochs,
+        seed: 42,
+        exec: ExecMode::Simulated(SimConfig {
+            link,
+            ..SimConfig::default()
+        }),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut set = BenchSet::new(
+        "sim_scale — virtual-time C-ECL(10%) ring, native softmax backend",
+    );
+    // Wall-clock per simulated round at growing node counts.  Each run
+    // is 2 epochs x 2 rounds = 4 rounds.
+    for nodes in [64usize, 256, 512] {
+        let graph = Graph::ring(nodes);
+        let s = spec(
+            nodes,
+            2,
+            LinkSpec::Bandwidth {
+                latency_us: 200,
+                mbit_per_sec: 100.0,
+            },
+        );
+        set.bench_throughput(
+            &format!("ring({nodes}) 4 rounds"),
+            1,
+            3,
+            4.0 * nodes as f64,
+            "node-round",
+            || {
+                let r = run_simulated_native(&s, &graph).expect("sim run");
+                std::hint::black_box(r.total_bytes);
+            },
+        );
+    }
+    set.report();
+
+    // The payload: simulated time-to-accuracy across link models.
+    let mut t = Table::new([
+        "link", "final acc", "sim secs", "KB/node/epoch", "retrans KB",
+    ]);
+    let graph = Graph::ring(64);
+    for link in [
+        LinkSpec::Ideal,
+        LinkSpec::Constant { latency_us: 500 },
+        LinkSpec::Bandwidth {
+            latency_us: 500,
+            mbit_per_sec: 50.0,
+        },
+        LinkSpec::Lossy {
+            latency_us: 500,
+            mbit_per_sec: 50.0,
+            drop_p: 0.05,
+        },
+    ] {
+        let s = spec(64, 4, link.clone());
+        let r = run_simulated_native(&s, &graph).expect("sim run");
+        t.row([
+            link.name(),
+            format!("{:.3}", r.final_accuracy),
+            format!("{:.3}", r.sim_time_secs.unwrap_or(0.0)),
+            format!("{:.0}", r.mean_bytes_per_epoch / 1024.0),
+            format!("{:.0}", r.retransmit_bytes as f64 / 1024.0),
+        ]);
+    }
+    println!("\nring(64), C-ECL(10%), 4 epochs:\n{}", t.render());
+}

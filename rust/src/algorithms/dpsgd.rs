@@ -4,13 +4,20 @@
 //! `alpha_deg = 0`), then exchange full model parameters with every
 //! neighbor and take the Metropolis–Hastings-weighted average
 //! `w_i ← W_ii w_i + Σ_j W_ij w_j` (paper §2.2 / §D.1).
+//!
+//! Received parameter vectors are buffered per neighbor slot and folded
+//! in sorted-neighbor order at `round_end`, so the f32 average is
+//! bit-identical no matter in which order the virtual-time engine
+//! delivers the messages — and identical to the threaded engine's.
 
 use std::sync::Arc;
 
-use crate::comm::{Msg, NodeComm};
+use anyhow::{anyhow, ensure, Result};
+
+use crate::comm::{Msg, NodeComm, Outbox};
 use crate::graph::Graph;
 
-use super::{BuildCtx, NodeAlgorithm};
+use super::{BuildCtx, NodeAlgorithm, NodeStateMachine};
 
 pub struct DPsgdNode {
     node: usize,
@@ -19,17 +26,97 @@ pub struct DPsgdNode {
     weights: Vec<f64>,
     /// Scratch accumulator (no allocation per round).
     acc: Vec<f32>,
+    /// Received neighbor parameters, one slot per sorted neighbor.
+    recv: Vec<Option<Vec<f32>>>,
+    /// Messages still expected this round.
+    pending: usize,
 }
 
 impl DPsgdNode {
     pub fn new(ctx: &BuildCtx) -> DPsgdNode {
         let weights = ctx.graph.mh_weights()[ctx.node].clone();
+        let degree = ctx.graph.degree(ctx.node);
         DPsgdNode {
             node: ctx.node,
             graph: Arc::clone(&ctx.graph),
             weights,
             acc: vec![0.0; ctx.manifest.d_pad],
+            recv: (0..degree).map(|_| None).collect(),
+            pending: 0,
         }
+    }
+}
+
+impl NodeStateMachine for DPsgdNode {
+    fn name(&self) -> String {
+        "D-PSGD".to_string()
+    }
+
+    fn round_begin(&mut self, _round: usize, w: &mut [f32],
+                   out: &mut Outbox) -> Result<()> {
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        self.pending = neighbors.len();
+        for slot in self.recv.iter_mut() {
+            *slot = None;
+        }
+        for &j in &neighbors {
+            out.send(j, Msg::Dense(w.to_vec()));
+        }
+        Ok(())
+    }
+
+    fn on_message(&mut self, round: usize, from: usize, msg: Msg,
+                  _w: &mut [f32], _out: &mut Outbox) -> Result<()> {
+        ensure!(
+            self.pending > 0,
+            "D-PSGD node {}: unexpected message from {from} in round {round}",
+            self.node
+        );
+        let jj = self
+            .graph
+            .neighbors(self.node)
+            .iter()
+            .position(|&x| x == from)
+            .ok_or_else(|| {
+                anyhow!("node {}: message from non-neighbor {from}", self.node)
+            })?;
+        ensure!(
+            self.recv[jj].is_none(),
+            "D-PSGD node {}: duplicate message from {from}",
+            self.node
+        );
+        self.recv[jj] = Some(msg.into_dense()?);
+        self.pending -= 1;
+        Ok(())
+    }
+
+    fn round_complete(&self) -> bool {
+        self.pending == 0
+    }
+
+    fn round_end(&mut self, _round: usize, w: &mut [f32]) -> Result<()> {
+        ensure!(
+            self.pending == 0,
+            "D-PSGD node {}: round_end with {} messages outstanding",
+            self.node,
+            self.pending
+        );
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        let wii = self.weights[self.node] as f32;
+        for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
+            *a = wii * wv;
+        }
+        for (jj, &j) in neighbors.iter().enumerate() {
+            let wj = self.recv[jj]
+                .take()
+                .ok_or_else(|| anyhow!("missing parameters from {j}"))?;
+            let wij = self.weights[j] as f32;
+            for (a, &v) in self.acc.iter_mut().zip(&wj) {
+                *a += wij * v;
+            }
+        }
+        w.copy_from_slice(&self.acc);
+        Ok(())
     }
 }
 
@@ -38,25 +125,12 @@ impl NodeAlgorithm for DPsgdNode {
         "D-PSGD".to_string()
     }
 
-    fn exchange(&mut self, _round: usize, w: &mut [f32], comm: &NodeComm) {
+    fn exchange(&mut self, round: usize, w: &mut [f32], comm: &NodeComm)
+                -> Result<()> {
+        // Shared blocking driver: send to all first (channels are
+        // buffered; no deadlock), then drain one message per neighbor.
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
-        // Send to all first (channels are buffered; no deadlock).
-        for &j in &neighbors {
-            comm.send(j, Msg::Dense(w.to_vec()));
-        }
-        // Weighted average.
-        let wii = self.weights[self.node] as f32;
-        for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
-            *a = wii * wv;
-        }
-        for &j in &neighbors {
-            let wj = comm.recv(j).into_dense();
-            let wij = self.weights[j] as f32;
-            for (a, &v) in self.acc.iter_mut().zip(&wj) {
-                *a += wij * v;
-            }
-        }
-        w.copy_from_slice(&self.acc);
+        super::drive_blocking(self, &neighbors, round, w, comm)
     }
 }
 
@@ -116,7 +190,7 @@ mod tests {
                             runtime: None,
                         };
                         let mut node = DPsgdNode::new(&ctx);
-                        node.exchange(0, w, &comm);
+                        node.exchange(0, w, &comm).unwrap();
                     })
                 })
                 .collect();
@@ -133,5 +207,50 @@ mod tests {
         assert!(spread_after < spread_before);
         // Bytes: 4 nodes x 2 neighbors x 8 f32 = 256 B.
         assert_eq!(meter.total_bytes(), 4 * 2 * 8 * 4);
+    }
+
+    #[test]
+    fn duplicate_and_stray_messages_error() {
+        let graph = Arc::new(Graph::ring(4));
+        let ctx = BuildCtx {
+            node: 0,
+            graph: Arc::clone(&graph),
+            manifest: manifest(),
+            seed: 1,
+            eta: 0.1,
+            local_steps: 1,
+            rounds_per_epoch: 1,
+            dual_path: crate::algorithms::DualPath::Native,
+            runtime: None,
+        };
+        let mut node = DPsgdNode::new(&ctx);
+        let mut w = vec![1.0f32; 8];
+        let mut out = Outbox::new();
+        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        assert_eq!(out.len(), 2); // neighbors 1 and 3
+        let payload = Msg::Dense(vec![2.0; 8]);
+        NodeStateMachine::on_message(
+            &mut node, 0, 1, payload.clone(), &mut w, &mut out,
+        )
+        .unwrap();
+        // Duplicate from the same neighbor is a protocol error.
+        assert!(NodeStateMachine::on_message(
+            &mut node, 0, 1, payload.clone(), &mut w, &mut out,
+        )
+        .is_err());
+        // Non-neighbor sender is a protocol error.
+        assert!(NodeStateMachine::on_message(
+            &mut node, 0, 2, payload.clone(), &mut w, &mut out,
+        )
+        .is_err());
+        // Completing the round folds in sorted-neighbor order.
+        NodeStateMachine::on_message(&mut node, 0, 3, payload, &mut w, &mut out)
+            .unwrap();
+        assert!(node.round_complete());
+        NodeStateMachine::round_end(&mut node, 0, &mut w).unwrap();
+        // MH ring(4): W_ii = 1/3, W_ij = 1/3 each -> (1 + 2 + 2)/3.
+        for &v in &w {
+            assert!((v - 5.0 / 3.0).abs() < 1e-6);
+        }
     }
 }

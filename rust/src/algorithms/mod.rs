@@ -1,11 +1,24 @@
 //! Decentralized-learning algorithms: the paper's C-ECL plus every
 //! comparison method of §5.1.
 //!
-//! Each algorithm is a per-node state machine driven by the coordinator's
-//! node thread.  The local-update phase is shared (the AOT train_step
-//! artifact, Eq. (6) closed form — gossip methods run it with
-//! `alpha_deg = 0`, reducing it to plain SGD); the algorithms differ in
-//! what [`NodeAlgorithm::exchange`] puts on the wire every K local steps.
+//! Each algorithm is a per-node protocol with two interchangeable
+//! driving modes:
+//!
+//! * [`NodeAlgorithm::exchange`] — the blocking form used by the
+//!   thread-per-node coordinator: send to every neighbor, then block on
+//!   `recv` until the round's traffic has drained.
+//! * [`NodeStateMachine`] — the poll-driven form used by the
+//!   event-driven virtual-time engine (`crate::sim`): one round is
+//!   `round_begin` → (`on_message` until [`NodeStateMachine::round_complete`])
+//!   → `round_end`, with outbound traffic queued on an
+//!   [`Outbox`](crate::comm::Outbox) instead of written to a channel.
+//!
+//! Every concrete node type implements both traits over the same state,
+//! so the two engines run bit-identical protocols (the `sim` integration
+//! tests pin byte-level equivalence).  The local-update phase is shared
+//! (the AOT train_step artifact, Eq. (6) closed form — gossip methods
+//! run it with `alpha_deg = 0`, reducing it to plain SGD); the
+//! algorithms differ in what goes on the wire every K local steps.
 
 pub mod cecl;
 pub mod dpsgd;
@@ -17,12 +30,14 @@ pub use powergossip::PowerGossipNode;
 
 use std::sync::Arc;
 
-use crate::comm::NodeComm;
+use anyhow::Result;
+
+use crate::comm::{Msg, NodeComm, Outbox};
 use crate::graph::Graph;
 use crate::model::DatasetManifest;
 use crate::runtime::ModelRuntime;
 
-/// Per-node algorithm driven by the coordinator.
+/// Per-node algorithm driven by the blocking thread-per-node coordinator.
 pub trait NodeAlgorithm: Send {
     /// Human-readable name for reports.
     fn name(&self) -> String;
@@ -40,7 +55,48 @@ pub trait NodeAlgorithm: Send {
 
     /// Communication phase after the K local updates of round `round`.
     /// May rewrite `w` (gossip averaging) and/or internal dual state.
-    fn exchange(&mut self, round: usize, w: &mut [f32], comm: &NodeComm);
+    fn exchange(&mut self, round: usize, w: &mut [f32], comm: &NodeComm)
+                -> Result<()>;
+}
+
+/// Poll-driven view of the same protocols for the virtual-time engine.
+///
+/// Contract (enforced by `crate::sim`):
+///
+/// * `round_begin(r, ..)` is called exactly once per round, after the K
+///   local updates; it queues the round's opening sends.
+/// * `on_message` receives one payload at a time.  Messages from a given
+///   neighbor arrive in FIFO order (the engine guarantees per-edge
+///   ordering even under random link delays); messages from different
+///   neighbors interleave arbitrarily.  Multi-phase protocols may queue
+///   further sends from inside `on_message`.
+/// * Once `round_complete()` reports true, `round_end(r, ..)` runs and
+///   may rewrite `w` (gossip averaging).
+pub trait NodeStateMachine: Send {
+    fn name(&self) -> String;
+
+    fn alpha_deg(&self) -> f32 {
+        0.0
+    }
+
+    fn zsum(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Begin the exchange phase of `round`: queue the opening sends.
+    fn round_begin(&mut self, round: usize, w: &mut [f32],
+                   out: &mut Outbox) -> Result<()>;
+
+    /// Deliver the next in-FIFO-order message from neighbor `from`.
+    fn on_message(&mut self, round: usize, from: usize, msg: Msg,
+                  w: &mut [f32], out: &mut Outbox) -> Result<()>;
+
+    /// Whether the exchange phase of the current round has received
+    /// everything it expects.
+    fn round_complete(&self) -> bool;
+
+    /// Finish the round: apply buffered updates to `w` / dual state.
+    fn round_end(&mut self, round: usize, w: &mut [f32]) -> Result<()>;
 }
 
 /// Declarative algorithm selection (what the CLI and experiment drivers
@@ -144,12 +200,9 @@ pub fn paper_alpha(eta: f32, degree: usize, local_steps: usize,
     (1.0 / denom) as f32
 }
 
-/// Build the per-node state machine for a spec.
-pub fn build_node(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Box<dyn NodeAlgorithm> {
+fn build_cecl(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Option<CEclNode> {
     match spec {
-        AlgorithmSpec::Sgd => Box::new(SgdNode),
-        AlgorithmSpec::DPsgd => Box::new(DPsgdNode::new(ctx)),
-        AlgorithmSpec::Ecl { theta } => Box::new(CEclNode::new(
+        AlgorithmSpec::Ecl { theta } => Some(CEclNode::new(
             ctx,
             1.0,
             *theta,
@@ -166,7 +219,7 @@ pub fn build_node(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Box<dyn NodeAlgorithm
             } else {
                 0
             };
-            Box::new(CEclNode::new(
+            Some(CEclNode::new(
                 ctx,
                 *k_frac,
                 *theta,
@@ -174,17 +227,65 @@ pub fn build_node(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Box<dyn NodeAlgorithm
                 DualRule::CompressDiff,
             ))
         }
-        AlgorithmSpec::NaiveCEcl { k_frac, theta } => Box::new(CEclNode::new(
+        AlgorithmSpec::NaiveCEcl { k_frac, theta } => Some(CEclNode::new(
             ctx,
             *k_frac,
             *theta,
             0,
             DualRule::CompressY,
         )),
+        _ => None,
+    }
+}
+
+/// Build the per-node protocol for the blocking (threaded) engine.
+pub fn build_node(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Box<dyn NodeAlgorithm> {
+    match spec {
+        AlgorithmSpec::Sgd => Box::new(SgdNode),
+        AlgorithmSpec::DPsgd => Box::new(DPsgdNode::new(ctx)),
         AlgorithmSpec::PowerGossip { iters } => {
             Box::new(PowerGossipNode::new(ctx, *iters))
         }
+        other => Box::new(build_cecl(other, ctx).expect("cecl family")),
     }
+}
+
+/// Build the same protocol as a poll-driven state machine for the
+/// virtual-time engine.  Compressed duals always run the native fused
+/// path here (the PJRT kernel path is a threaded-engine option).
+pub fn build_machine(spec: &AlgorithmSpec,
+                     ctx: &BuildCtx) -> Box<dyn NodeStateMachine> {
+    match spec {
+        AlgorithmSpec::Sgd => Box::new(SgdNode),
+        AlgorithmSpec::DPsgd => Box::new(DPsgdNode::new(ctx)),
+        AlgorithmSpec::PowerGossip { iters } => {
+            Box::new(PowerGossipNode::new(ctx, *iters))
+        }
+        other => Box::new(build_cecl(other, ctx).expect("cecl family")),
+    }
+}
+
+/// Blocking driver for single-phase state machines over the threaded
+/// bus: queue the round's sends, drain exactly one message per sorted
+/// neighbor, finish the round.  (Multi-phase protocols like PowerGossip
+/// need their own drain loop.)
+pub fn drive_blocking(
+    machine: &mut dyn NodeStateMachine,
+    neighbors: &[usize],
+    round: usize,
+    w: &mut [f32],
+    comm: &NodeComm,
+) -> Result<()> {
+    let mut out = Outbox::new();
+    machine.round_begin(round, w, &mut out)?;
+    for (to, msg) in out.drain() {
+        comm.send(to, msg)?;
+    }
+    for &j in neighbors {
+        let msg = comm.recv(j)?;
+        machine.on_message(round, j, msg, w, &mut out)?;
+    }
+    machine.round_end(round, w)
 }
 
 /// Single-node SGD: no neighbors, no exchange, `alpha_deg = 0`.
@@ -195,7 +296,34 @@ impl NodeAlgorithm for SgdNode {
         "SGD".to_string()
     }
 
-    fn exchange(&mut self, _round: usize, _w: &mut [f32], _comm: &NodeComm) {}
+    fn exchange(&mut self, _round: usize, _w: &mut [f32], _comm: &NodeComm)
+                -> Result<()> {
+        Ok(())
+    }
+}
+
+impl NodeStateMachine for SgdNode {
+    fn name(&self) -> String {
+        "SGD".to_string()
+    }
+
+    fn round_begin(&mut self, _round: usize, _w: &mut [f32],
+                   _out: &mut Outbox) -> Result<()> {
+        Ok(())
+    }
+
+    fn on_message(&mut self, round: usize, from: usize, _msg: Msg,
+                  _w: &mut [f32], _out: &mut Outbox) -> Result<()> {
+        anyhow::bail!("SGD node received a message from {from} in round {round}")
+    }
+
+    fn round_complete(&self) -> bool {
+        true
+    }
+
+    fn round_end(&mut self, _round: usize, _w: &mut [f32]) -> Result<()> {
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -253,5 +381,19 @@ mod tests {
         assert!((a - 1.0 / (0.01 * 2.0 * 49.0)).abs() < 1e-4);
         // More compression (smaller k) → smaller α.
         assert!(paper_alpha(0.01, 2, 5, 0.01) < paper_alpha(0.01, 2, 5, 0.1));
+    }
+
+    #[test]
+    fn sgd_state_machine_is_trivially_complete() {
+        let mut sgd = SgdNode;
+        let mut out = Outbox::new();
+        let mut w = vec![0.0f32; 4];
+        sgd.round_begin(0, &mut w, &mut out).unwrap();
+        assert!(out.is_empty());
+        assert!(NodeStateMachine::round_complete(&sgd));
+        sgd.round_end(0, &mut w).unwrap();
+        assert!(sgd
+            .on_message(0, 1, Msg::Scalar(0.0), &mut w, &mut out)
+            .is_err());
     }
 }

@@ -12,13 +12,24 @@
 //! scales) are exchanged dense — they are a rounding error of the byte
 //! budget.
 //!
+//! The protocol is multi-phase, so the poll-driven
+//! [`NodeStateMachine`] form runs an independent pipeline per edge
+//! ([`PgEdgeRun`]): neighbor A can be two power iterations ahead of
+//! neighbor B without any global barrier.  Each edge's conversation only
+//! depends on its own traffic (w is frozen between `round_begin` and
+//! `round_end`, q̂ is per-edge), so the per-edge pipelining computes
+//! bit-identical results to the old lockstep schedule.  The blocking
+//! [`NodeAlgorithm::exchange`] drives the same machine edge-by-edge.
+//!
 //! Wire cost per round per neighbor:
 //! `iters · Σ_matrices (rows + cols) · 4  +  Σ_vectors len · 4` bytes,
 //! which reproduces the paper's PowerGossip(1/10/20) ratio ladder.
 
 use std::sync::Arc;
 
-use crate::comm::{Msg, NodeComm};
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::comm::{Msg, NodeComm, Outbox};
 use crate::compress::low_rank::{
     matvec_f32, matvec_t_f32, normalize, power_iteration_step, rank1_axpy,
     LowRankEdgeState,
@@ -26,7 +37,53 @@ use crate::compress::low_rank::{
 use crate::graph::Graph;
 use crate::util::rng::{streams, Pcg};
 
-use super::{BuildCtx, NodeAlgorithm};
+use super::{BuildCtx, NodeAlgorithm, NodeStateMachine};
+
+/// Where one edge's conversation stands within the current round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+enum PgPhase {
+    /// Receiving the peer's `p = M q̂` halves (one per matrix view).
+    #[default]
+    P,
+    /// Receiving the peer's `s = Mᵀ p̂` halves.
+    S,
+    /// Receiving the peer's dense rank-1-tensor payload.
+    Vectors,
+    Done,
+}
+
+/// Per-edge pipeline state for one exchange round.
+#[derive(Debug, Default)]
+struct PgEdgeRun {
+    /// Power-iteration index within the round.
+    it: usize,
+    phase: PgPhase,
+    /// Messages received so far in the current phase.
+    recv_count: usize,
+    /// Our halves for the current iteration, one per matrix view.
+    p_self: Vec<Vec<f32>>,
+    p_peer: Vec<Vec<f32>>,
+    s_self: Vec<Vec<f32>>,
+    /// `(p, q̂_used)` per view, captured on the last iteration, consumed
+    /// by `round_end`.
+    finals: Vec<(Vec<f32>, Vec<f32>)>,
+    vec_recv: Option<Vec<f32>>,
+}
+
+impl PgEdgeRun {
+    fn new(nv: usize) -> PgEdgeRun {
+        PgEdgeRun {
+            it: 0,
+            phase: PgPhase::P,
+            recv_count: 0,
+            p_self: Vec::new(),
+            p_peer: vec![Vec::new(); nv],
+            s_self: Vec::new(),
+            finals: Vec::with_capacity(nv),
+            vec_recv: None,
+        }
+    }
+}
 
 pub struct PowerGossipNode {
     node: usize,
@@ -40,7 +97,12 @@ pub struct PowerGossipNode {
     vec_views: Vec<(usize, usize)>,
     /// Warm-started q̂ per (neighbor slot, view).
     states: Vec<Vec<LowRankEdgeState>>,
-    reseed_rng: Pcg,
+    seed: u64,
+    /// Per-edge pipeline state for the round in flight.
+    runs: Vec<PgEdgeRun>,
+    /// Concatenated rank-1 tensors, snapshotted at `round_begin`.
+    vec_payload: Vec<f32>,
+    done_count: usize,
 }
 
 impl PowerGossipNode {
@@ -86,8 +148,10 @@ impl PowerGossipNode {
             views,
             vec_views,
             states,
-            reseed_rng: Pcg::derive(ctx.seed, &[streams::POWER, u64::MAX,
-                                                ctx.node as u64]),
+            seed: ctx.seed,
+            runs: Vec::new(),
+            vec_payload: Vec::new(),
+            done_count: 0,
         }
     }
 
@@ -102,97 +166,253 @@ impl PowerGossipNode {
         let vecs: usize = self.vec_views.iter().map(|&(_, l)| l * 4).sum();
         mat + vecs
     }
+
+    /// `p = M q̂` for every matrix view on edge slot `jj`.
+    fn p_halves(&self, jj: usize, w: &[f32]) -> Vec<Vec<f32>> {
+        self.views
+            .iter()
+            .enumerate()
+            .map(|(v, &(off, rows, cols))| {
+                matvec_f32(&w[off..off + rows * cols], rows, cols,
+                           &self.states[jj][v].q_hat)
+            })
+            .collect()
+    }
+
+    fn neighbor_slot(&self, from: usize) -> Result<usize> {
+        self.graph
+            .neighbors(self.node)
+            .iter()
+            .position(|&x| x == from)
+            .ok_or_else(|| {
+                anyhow!("node {}: message from non-neighbor {from}", self.node)
+            })
+    }
 }
 
-impl NodeAlgorithm for PowerGossipNode {
+impl NodeStateMachine for PowerGossipNode {
     fn name(&self) -> String {
         format!("PowerGossip ({})", self.iters)
     }
 
-    fn exchange(&mut self, _round: usize, w: &mut [f32], comm: &NodeComm) {
+    fn round_begin(&mut self, _round: usize, w: &mut [f32],
+                   out: &mut Outbox) -> Result<()> {
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
         let nv = self.views.len();
-        // Final (p, q̂) per (neighbor, view) for the rank-1 correction.
-        let mut finals: Vec<Vec<(Vec<f32>, Vec<f32>)>> =
-            vec![Vec::with_capacity(nv); neighbors.len()];
+        self.done_count = 0;
+        // Snapshot the rank-1 tensors once.  Vector views are disjoint
+        // from matrix views, so snapshotting before the round's rank-1
+        // corrections is equivalent to the post-correction read.
+        self.vec_payload.clear();
+        for &(off, len) in &self.vec_views {
+            self.vec_payload.extend_from_slice(&w[off..off + len]);
+        }
+        self.runs = neighbors.iter().map(|_| PgEdgeRun::new(nv)).collect();
+        for (jj, &j) in neighbors.iter().enumerate() {
+            if nv == 0 {
+                // Degenerate model with no matrix layers: straight to the
+                // dense vector gossip (or nothing at all).
+                if self.vec_views.is_empty() {
+                    self.runs[jj].phase = PgPhase::Done;
+                    self.done_count += 1;
+                } else {
+                    out.send(j, Msg::Dense(self.vec_payload.clone()));
+                    self.runs[jj].phase = PgPhase::Vectors;
+                }
+                continue;
+            }
+            let ps = self.p_halves(jj, w);
+            for p in &ps {
+                out.send(j, Msg::Dense(p.clone()));
+            }
+            self.runs[jj].p_self = ps;
+        }
+        Ok(())
+    }
 
-        for it in 0..self.iters {
-            // --- p half: send all, then receive all (no deadlock). ----
-            let mut p_self: Vec<Vec<Vec<f32>>> =
-                vec![Vec::with_capacity(nv); neighbors.len()];
-            for (jj, &j) in neighbors.iter().enumerate() {
-                for (v, &(off, rows, cols)) in self.views.iter().enumerate() {
-                    let m = &w[off..off + rows * cols];
-                    let p = matvec_f32(m, rows, cols,
-                                       &self.states[jj][v].q_hat);
-                    comm.send(j, Msg::Dense(p.clone()));
-                    p_self[jj].push(p);
+    fn on_message(&mut self, round: usize, from: usize, msg: Msg,
+                  w: &mut [f32], out: &mut Outbox) -> Result<()> {
+        let jj = self.neighbor_slot(from)?;
+        ensure!(
+            jj < self.runs.len(),
+            "PowerGossip node {}: message before round_begin",
+            self.node
+        );
+        let nv = self.views.len();
+        let phase = self.runs[jj].phase;
+        match phase {
+            PgPhase::P => {
+                let v = self.runs[jj].recv_count;
+                ensure!(v < nv, "p-phase overflow from {from}");
+                let p = msg.into_dense()?;
+                ensure!(
+                    p.len() == self.views[v].1,
+                    "p half for view {v}: len {} != rows {}",
+                    p.len(),
+                    self.views[v].1
+                );
+                self.runs[jj].p_peer[v] = p;
+                self.runs[jj].recv_count += 1;
+                if self.runs[jj].recv_count == nv {
+                    // All p halves in: compute p̂ and answer with our s
+                    // halves.
+                    let lo_is_self = self.node < from;
+                    let mut s_selfs = Vec::with_capacity(nv);
+                    for (v, &(off, rows, cols)) in
+                        self.views.iter().enumerate()
+                    {
+                        let run = &self.runs[jj];
+                        let (p_lo, p_hi) = if lo_is_self {
+                            (&run.p_self[v], &run.p_peer[v])
+                        } else {
+                            (&run.p_peer[v], &run.p_self[v])
+                        };
+                        let mut p_hat: Vec<f32> = p_lo
+                            .iter()
+                            .zip(p_hi.iter())
+                            .map(|(a, b)| a - b)
+                            .collect();
+                        normalize(&mut p_hat);
+                        let m = &w[off..off + rows * cols];
+                        let s = matvec_t_f32(m, rows, cols, &p_hat);
+                        out.send(from, Msg::Dense(s.clone()));
+                        s_selfs.push(s);
+                    }
+                    let run = &mut self.runs[jj];
+                    run.s_self = s_selfs;
+                    run.phase = PgPhase::S;
+                    run.recv_count = 0;
                 }
             }
-            let mut p_peer: Vec<Vec<Vec<f32>>> =
-                vec![Vec::with_capacity(nv); neighbors.len()];
-            for (jj, &j) in neighbors.iter().enumerate() {
-                for _ in 0..nv {
-                    p_peer[jj].push(comm.recv(j).into_dense());
-                }
-            }
-            // --- s half. ----------------------------------------------
-            let mut s_self: Vec<Vec<Vec<f32>>> =
-                vec![Vec::with_capacity(nv); neighbors.len()];
-            let mut p_hat_all: Vec<Vec<Vec<f32>>> =
-                vec![Vec::with_capacity(nv); neighbors.len()];
-            for (jj, &j) in neighbors.iter().enumerate() {
-                let lo_is_self = self.node < j;
-                for (v, &(off, rows, cols)) in self.views.iter().enumerate() {
-                    // Orientation: D = M_lo − M_hi.
+            PgPhase::S => {
+                let v = self.runs[jj].recv_count;
+                ensure!(v < nv, "s-phase overflow from {from}");
+                let s_peer = msg.into_dense()?;
+                ensure!(
+                    s_peer.len() == self.views[v].2,
+                    "s half for view {v}: len {} != cols {}",
+                    s_peer.len(),
+                    self.views[v].2
+                );
+                let lo_is_self = self.node < from;
+                let (p, q_next) = {
+                    let run = &self.runs[jj];
                     let (p_lo, p_hi) = if lo_is_self {
-                        (&p_self[jj][v], &p_peer[jj][v])
+                        (&run.p_self[v], &run.p_peer[v])
                     } else {
-                        (&p_peer[jj][v], &p_self[jj][v])
-                    };
-                    let mut p_hat: Vec<f32> =
-                        p_lo.iter().zip(p_hi).map(|(a, b)| a - b).collect();
-                    normalize(&mut p_hat);
-                    let m = &w[off..off + rows * cols];
-                    let s = matvec_t_f32(m, rows, cols, &p_hat);
-                    comm.send(j, Msg::Dense(s.clone()));
-                    s_self[jj].push(s);
-                    p_hat_all[jj].push(p_hat);
-                }
-            }
-            for (jj, &j) in neighbors.iter().enumerate() {
-                let lo_is_self = self.node < j;
-                for v in 0..nv {
-                    let s_peer = comm.recv(j).into_dense();
-                    let (p_lo, p_hi) = if lo_is_self {
-                        (&p_self[jj][v], &p_peer[jj][v])
-                    } else {
-                        (&p_peer[jj][v], &p_self[jj][v])
+                        (&run.p_peer[v], &run.p_self[v])
                     };
                     let (s_lo, s_hi) = if lo_is_self {
-                        (&s_self[jj][v], &s_peer)
+                        (&run.s_self[v], &s_peer)
                     } else {
-                        (&s_peer, &s_self[jj][v])
+                        (&s_peer, &run.s_self[v])
                     };
-                    let (p, q_next) =
-                        power_iteration_step(p_lo, p_hi, s_lo, s_hi);
-                    let q_used = self.states[jj][v].q_hat.clone();
-                    self.states[jj][v].q_hat = q_next;
-                    self.states[jj][v].reseed_if_degenerate(&mut self.reseed_rng);
-                    if it == self.iters - 1 {
-                        finals[jj].push((p, q_used));
+                    power_iteration_step(p_lo, p_hi, s_lo, s_hi)
+                };
+                let q_used =
+                    std::mem::replace(&mut self.states[jj][v].q_hat, q_next);
+                // Degenerate-collapse reseed: the stream is derived per
+                // (edge, view, round, iteration), so both endpoints
+                // draw the identical replacement q̂ (the warm-start
+                // lockstep survives) and the draw is independent of
+                // message delivery order (replay- and engine-stable).
+                let e = self
+                    .graph
+                    .edge_index(self.node, from)
+                    .ok_or_else(|| anyhow!("({}, {from}) is not an edge",
+                                           self.node))?;
+                let mut reseed_rng = Pcg::derive(
+                    self.seed,
+                    &[
+                        streams::POWER,
+                        u64::MAX,
+                        e as u64,
+                        v as u64,
+                        round as u64,
+                        self.runs[jj].it as u64,
+                    ],
+                );
+                self.states[jj][v].reseed_if_degenerate(&mut reseed_rng);
+                if self.runs[jj].it + 1 == self.iters {
+                    self.runs[jj].finals.push((p, q_used));
+                }
+                self.runs[jj].recv_count += 1;
+                if self.runs[jj].recv_count == nv {
+                    self.runs[jj].it += 1;
+                    if self.runs[jj].it < self.iters {
+                        // Next power iteration on this edge.
+                        let ps = self.p_halves(jj, w);
+                        for p in &ps {
+                            out.send(from, Msg::Dense(p.clone()));
+                        }
+                        let run = &mut self.runs[jj];
+                        run.p_self = ps;
+                        run.p_peer = vec![Vec::new(); nv];
+                        run.phase = PgPhase::P;
+                        run.recv_count = 0;
+                    } else if !self.vec_views.is_empty() {
+                        out.send(from, Msg::Dense(self.vec_payload.clone()));
+                        let run = &mut self.runs[jj];
+                        run.phase = PgPhase::Vectors;
+                        run.recv_count = 0;
+                    } else {
+                        self.runs[jj].phase = PgPhase::Done;
+                        self.done_count += 1;
                     }
                 }
             }
+            PgPhase::Vectors => {
+                ensure!(
+                    self.runs[jj].vec_recv.is_none(),
+                    "duplicate vector payload from {from}"
+                );
+                let theirs = msg.into_dense()?;
+                ensure!(
+                    theirs.len() == self.vec_payload.len(),
+                    "vector payload len {} != {}",
+                    theirs.len(),
+                    self.vec_payload.len()
+                );
+                self.runs[jj].vec_recv = Some(theirs);
+                self.runs[jj].phase = PgPhase::Done;
+                self.done_count += 1;
+            }
+            PgPhase::Done => {
+                bail!(
+                    "PowerGossip node {}: unexpected message from {from} in \
+                     round {round} (edge already done)",
+                    self.node
+                )
+            }
         }
+        Ok(())
+    }
 
-        // --- Apply the gossip step on matrices: w_i += W_ij (w_j − w_i),
-        // with (w_j − w_i) ≈ ±(p q̂ᵀ). --------------------------------
+    fn round_complete(&self) -> bool {
+        self.done_count == self.runs.len()
+    }
+
+    fn round_end(&mut self, _round: usize, w: &mut [f32]) -> Result<()> {
+        ensure!(
+            self.round_complete(),
+            "PowerGossip node {}: round_end with unfinished edges",
+            self.node
+        );
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        // Gossip step on matrices: w_i += W_ij (w_j − w_i) with
+        // (w_j − w_i) ≈ ±(p q̂ᵀ), folded in sorted-neighbor order (the
+        // same order the threaded engine used, for bit-identical f32).
         for (jj, &j) in neighbors.iter().enumerate() {
+            ensure!(
+                self.runs[jj].finals.len() == self.views.len(),
+                "edge to {j}: {} finals for {} views",
+                self.runs[jj].finals.len(),
+                self.views.len()
+            );
             let wij = self.weights[j] as f32;
             let sign = if self.node < j { -1.0f32 } else { 1.0 };
             for (v, &(off, rows, cols)) in self.views.iter().enumerate() {
-                let (p, q_used) = &finals[jj][v];
+                let (p, q_used) = &self.runs[jj].finals[v];
                 rank1_axpy(
                     &mut w[off..off + rows * cols],
                     rows,
@@ -203,19 +423,13 @@ impl NodeAlgorithm for PowerGossipNode {
                 );
             }
         }
-
-        // --- Rank-1 tensors: dense gossip averaging. ------------------
+        // Rank-1 tensors: dense gossip averaging.
         if !self.vec_views.is_empty() {
-            let total: usize = self.vec_views.iter().map(|&(_, l)| l).sum();
-            let mut mine = Vec::with_capacity(total);
-            for &(off, len) in &self.vec_views {
-                mine.extend_from_slice(&w[off..off + len]);
-            }
-            for &j in &neighbors {
-                comm.send(j, Msg::Dense(mine.clone()));
-            }
-            for &j in &neighbors {
-                let theirs = comm.recv(j).into_dense();
+            for (jj, &j) in neighbors.iter().enumerate() {
+                let theirs = self.runs[jj]
+                    .vec_recv
+                    .take()
+                    .ok_or_else(|| anyhow!("missing vector payload from {j}"))?;
                 let wij = self.weights[j] as f32;
                 let mut cursor = 0;
                 for &(off, len) in &self.vec_views {
@@ -227,6 +441,38 @@ impl NodeAlgorithm for PowerGossipNode {
                 }
             }
         }
+        Ok(())
+    }
+}
+
+impl NodeAlgorithm for PowerGossipNode {
+    fn name(&self) -> String {
+        format!("PowerGossip ({})", self.iters)
+    }
+
+    fn exchange(&mut self, round: usize, w: &mut [f32], comm: &NodeComm)
+                -> Result<()> {
+        // Blocking driver over the per-edge pipelines.  Every send of
+        // ours is triggered by a receive from the SAME neighbor (after
+        // the opening p halves), so draining one edge to completion
+        // before the next cannot deadlock: the peer never needs traffic
+        // from a third party to produce its next message.
+        let mut out = Outbox::new();
+        NodeStateMachine::round_begin(self, round, w, &mut out)?;
+        for (to, msg) in out.drain() {
+            comm.send(to, msg)?;
+        }
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        for (jj, &j) in neighbors.iter().enumerate() {
+            while self.runs[jj].phase != PgPhase::Done {
+                let msg = comm.recv(j)?;
+                NodeStateMachine::on_message(self, round, j, msg, w, &mut out)?;
+                for (to, m) in out.drain() {
+                    comm.send(to, m)?;
+                }
+            }
+        }
+        NodeStateMachine::round_end(self, round, w)
     }
 }
 
@@ -235,6 +481,7 @@ mod tests {
     use super::*;
     use crate::comm::build_bus;
     use crate::model::Manifest;
+    use std::collections::VecDeque;
 
     fn manifest() -> crate::model::DatasetManifest {
         Manifest::parse(
@@ -317,7 +564,7 @@ mod tests {
                         // real usage pattern).
                         let mut node = build(i, &graph, iters);
                         for round in 0..rounds {
-                            node.exchange(round, w, &comm);
+                            node.exchange(round, w, &comm).unwrap();
                         }
                     })
                 })
@@ -346,5 +593,79 @@ mod tests {
         for v in 0..2 {
             assert_eq!(n0.states[jj0][v].q_hat, n1.states[jj1][v].q_hat);
         }
+    }
+
+    #[test]
+    fn state_machine_matches_threaded_exchange() {
+        // Drive the poll-driven form by hand on a 2-node chain and
+        // compare bit-for-bit against the blocking form on the bus.
+        let graph = Arc::new(Graph::chain(2));
+        let init_w = |i: usize| -> Vec<f32> {
+            let mut rng = Pcg::new(400 + i as u64);
+            (0..32).map(|_| rng.normal_f32()).collect()
+        };
+
+        // Threaded reference.
+        let (comms, _) = build_bus(&graph);
+        let mut ws_t: Vec<Vec<f32>> = (0..2).map(init_w).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .zip(ws_t.iter_mut())
+                .enumerate()
+                .map(|(i, (comm, w))| {
+                    let graph = Arc::clone(&graph);
+                    s.spawn(move || {
+                        let mut node = build(i, &graph, 2);
+                        node.exchange(0, w, &comm).unwrap();
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+
+        // Poll-driven form, messages shuttled through queues.
+        let mut a = build(0, &graph, 2);
+        let mut b = build(1, &graph, 2);
+        let mut wa = init_w(0);
+        let mut wb = init_w(1);
+        let mut out = Outbox::new();
+        let mut q_ab: VecDeque<Msg> = VecDeque::new();
+        let mut q_ba: VecDeque<Msg> = VecDeque::new();
+        NodeStateMachine::round_begin(&mut a, 0, &mut wa, &mut out).unwrap();
+        for (to, m) in out.drain() {
+            assert_eq!(to, 1);
+            q_ab.push_back(m);
+        }
+        NodeStateMachine::round_begin(&mut b, 0, &mut wb, &mut out).unwrap();
+        for (to, m) in out.drain() {
+            assert_eq!(to, 0);
+            q_ba.push_back(m);
+        }
+        while !(q_ab.is_empty() && q_ba.is_empty()) {
+            if let Some(m) = q_ba.pop_front() {
+                NodeStateMachine::on_message(&mut a, 0, 1, m, &mut wa, &mut out)
+                    .unwrap();
+                for (to, m) in out.drain() {
+                    assert_eq!(to, 1);
+                    q_ab.push_back(m);
+                }
+            }
+            if let Some(m) = q_ab.pop_front() {
+                NodeStateMachine::on_message(&mut b, 0, 0, m, &mut wb, &mut out)
+                    .unwrap();
+                for (to, m) in out.drain() {
+                    assert_eq!(to, 0);
+                    q_ba.push_back(m);
+                }
+            }
+        }
+        assert!(a.round_complete() && b.round_complete());
+        NodeStateMachine::round_end(&mut a, 0, &mut wa).unwrap();
+        NodeStateMachine::round_end(&mut b, 0, &mut wb).unwrap();
+        assert_eq!(wa, ws_t[0], "node 0 diverged from threaded engine");
+        assert_eq!(wb, ws_t[1], "node 1 diverged from threaded engine");
     }
 }

@@ -1,13 +1,26 @@
-//! Byte-metered in-process message bus.
+//! Byte-metered communication substrate shared by both execution
+//! engines.
 //!
-//! The paper's testbed is 8 GPU workers over gloo; here each node is a
-//! thread and each undirected edge is a pair of unbounded channels.  The
-//! meter counts exactly the bytes a network transport would carry for
-//! each payload (dense f32 tensors, COO index+value pairs), which is the
-//! quantity the paper's tables report (“amount of parameters sent per
-//! epoch”).
+//! The paper's testbed is 8 GPU workers over gloo; here the same wire
+//! protocol runs over two interchangeable transports:
+//!
+//! * the **threaded bus** ([`build_bus`]): one OS thread per node, each
+//!   undirected edge a pair of unbounded channels ([`NodeComm`]);
+//! * the **virtual-time engine** (`crate::sim`): single-threaded,
+//!   event-driven delivery of [`Envelope`]s collected through an
+//!   [`Outbox`].
+//!
+//! The shared [`Meter`] counts exactly the bytes a network transport
+//! would carry for each payload (dense f32 tensors, COO index+value
+//! pairs) — the quantity the paper's tables report (“amount of
+//! parameters sent per epoch”) — plus, under the simulator, retransmit
+//! bytes and the virtual clock.
+//!
+//! All fallible operations return typed [`CommError`]s (convertible into
+//! `anyhow::Error`), never panic.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -26,6 +39,39 @@ pub enum Msg {
     Scalar(f64),
 }
 
+/// Typed communication failure (satisfies `std::error::Error`, so `?`
+/// lifts it into `anyhow::Result` at every call site).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CommError {
+    /// A payload of the wrong variant arrived (protocol bug).
+    WrongPayload {
+        expected: &'static str,
+        got: &'static str,
+    },
+    /// Send/recv on a pair that is not an edge of the graph.
+    NoEdge { node: usize, peer: usize },
+    /// The peer's endpoint was dropped (its thread exited or panicked).
+    Disconnected { node: usize, peer: usize },
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::WrongPayload { expected, got } => {
+                write!(f, "expected {expected} payload, got {got}")
+            }
+            CommError::NoEdge { node, peer } => {
+                write!(f, "node {node} has no edge to {peer}")
+            }
+            CommError::Disconnected { node, peer } => {
+                write!(f, "node {node}: peer {peer} hung up")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
 impl Msg {
     /// Bytes a real transport would carry (paper accounting; headers
     /// excluded on all payloads equally).
@@ -37,29 +83,98 @@ impl Msg {
         }
     }
 
-    pub fn into_dense(self) -> Vec<f32> {
+    /// Variant name for error reporting.
+    pub fn kind(&self) -> &'static str {
         match self {
-            Msg::Dense(v) => v,
-            Msg::Sparse(c) => c.to_dense(),
-            Msg::Scalar(_) => panic!("expected tensor payload, got scalar"),
+            Msg::Dense(_) => "dense",
+            Msg::Sparse(_) => "sparse",
+            Msg::Scalar(_) => "scalar",
         }
     }
 
-    pub fn into_sparse(self) -> CooVec {
+    /// Tensor payload as a dense vector (sparse payloads materialize).
+    pub fn into_dense(self) -> Result<Vec<f32>, CommError> {
         match self {
-            Msg::Sparse(c) => c,
-            _ => panic!("expected sparse payload"),
+            Msg::Dense(v) => Ok(v),
+            Msg::Sparse(c) => Ok(c.to_dense()),
+            Msg::Scalar(_) => Err(CommError::WrongPayload {
+                expected: "tensor",
+                got: "scalar",
+            }),
+        }
+    }
+
+    /// Sparse payload, or a typed error for any other variant.
+    pub fn into_sparse(self) -> Result<CooVec, CommError> {
+        match self {
+            Msg::Sparse(c) => Ok(c),
+            other => Err(CommError::WrongPayload {
+                expected: "sparse",
+                got: other.kind(),
+            }),
         }
     }
 }
 
-/// Per-node byte counters, shared with the coordinator for reporting.
+/// Delivery envelope used by the virtual-time engine: the payload plus
+/// the routing and round metadata the scheduler needs to buffer and
+/// order messages.
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    pub src: usize,
+    pub dst: usize,
+    /// Exchange round the payload belongs to (receivers that have not
+    /// reached `round` yet buffer the envelope).
+    pub round: usize,
+    pub payload: Msg,
+}
+
+/// Outbound message queue filled by the poll-driven state machines
+/// (`algorithms::NodeStateMachine`); drained by whichever engine is
+/// driving the node.
+#[derive(Debug, Default)]
+pub struct Outbox {
+    queued: Vec<(usize, Msg)>,
+}
+
+impl Outbox {
+    pub fn new() -> Outbox {
+        Outbox::default()
+    }
+
+    /// Queue a message for neighbor `to`.
+    pub fn send(&mut self, to: usize, msg: Msg) {
+        self.queued.push((to, msg));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queued.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued.is_empty()
+    }
+
+    /// Drain all queued `(dest, payload)` pairs in send order.
+    pub fn drain(&mut self) -> std::vec::Drain<'_, (usize, Msg)> {
+        self.queued.drain(..)
+    }
+}
+
+/// Per-node communication counters, shared with the coordinator for
+/// reporting.  Under the virtual-time engine the meter additionally
+/// tracks retransmitted bytes (lossy links) and the virtual clock.
 #[derive(Debug, Default)]
 pub struct Meter {
-    /// Total bytes sent by each node.
+    /// Total payload bytes sent by each node (first-transmission only).
     sent: Vec<AtomicU64>,
     /// Number of messages sent by each node.
     msgs: Vec<AtomicU64>,
+    /// Extra bytes burned on retransmissions by each node (lossy links).
+    retrans: Vec<AtomicU64>,
+    /// High-water mark of the virtual clock, in nanoseconds (0 under the
+    /// threaded engine).
+    vtime_ns: AtomicU64,
 }
 
 impl Meter {
@@ -67,6 +182,8 @@ impl Meter {
         Arc::new(Meter {
             sent: (0..n).map(|_| AtomicU64::new(0)).collect(),
             msgs: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            retrans: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            vtime_ns: AtomicU64::new(0),
         })
     }
 
@@ -75,31 +192,60 @@ impl Meter {
         self.msgs[node].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Account bytes burned on retransmissions (beyond the first copy).
+    pub fn record_retransmit(&self, node: usize, bytes: u64) {
+        self.retrans[node].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Advance the virtual clock high-water mark.
+    pub fn advance_vtime_ns(&self, t_ns: u64) {
+        self.vtime_ns.fetch_max(t_ns, Ordering::Relaxed);
+    }
+
+    pub fn vtime_ns(&self) -> u64 {
+        self.vtime_ns.load(Ordering::Relaxed)
+    }
+
     pub fn bytes_sent(&self, node: usize) -> u64 {
         self.sent[node].load(Ordering::Relaxed)
+    }
+
+    pub fn retransmit_bytes(&self, node: usize) -> u64 {
+        self.retrans[node].load(Ordering::Relaxed)
     }
 
     pub fn total_bytes(&self) -> u64 {
         self.sent.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
+    pub fn total_retransmit_bytes(&self) -> u64 {
+        self.retrans.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
     pub fn total_msgs(&self) -> u64 {
         self.msgs.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
-    /// Mean bytes sent per node.
+    /// Mean payload bytes sent per node.
     pub fn mean_bytes_per_node(&self) -> f64 {
         self.total_bytes() as f64 / self.sent.len() as f64
     }
 
     pub fn reset(&self) {
-        for a in self.sent.iter().chain(self.msgs.iter()) {
+        for a in self
+            .sent
+            .iter()
+            .chain(self.msgs.iter())
+            .chain(self.retrans.iter())
+        {
             a.store(0, Ordering::Relaxed);
         }
+        self.vtime_ns.store(0, Ordering::Relaxed);
     }
 }
 
-/// One node's endpoint: senders/receivers keyed by neighbor id.
+/// One node's endpoint on the threaded bus: senders/receivers keyed by
+/// neighbor id.
 pub struct NodeComm {
     pub node: usize,
     senders: BTreeMap<usize, Sender<Msg>>,
@@ -108,23 +254,35 @@ pub struct NodeComm {
 }
 
 impl NodeComm {
-    /// Send to a neighbor, metering the payload.
-    pub fn send(&self, to: usize, msg: Msg) {
-        self.meter.record_send(self.node, msg.wire_bytes());
-        self.senders
-            .get(&to)
-            .unwrap_or_else(|| panic!("node {} has no edge to {to}", self.node))
-            .send(msg)
-            .expect("peer hung up");
+    /// Send to a neighbor, metering the payload.  Failed sends are not
+    /// metered.
+    pub fn send(&self, to: usize, msg: Msg) -> Result<(), CommError> {
+        let tx = self.senders.get(&to).ok_or(CommError::NoEdge {
+            node: self.node,
+            peer: to,
+        })?;
+        let bytes = msg.wire_bytes();
+        tx.send(msg).map_err(|_| CommError::Disconnected {
+            node: self.node,
+            peer: to,
+        })?;
+        self.meter.record_send(self.node, bytes);
+        Ok(())
     }
 
     /// Blocking receive from a neighbor.
-    pub fn recv(&self, from: usize) -> Msg {
+    pub fn recv(&self, from: usize) -> Result<Msg, CommError> {
         self.receivers
             .get(&from)
-            .unwrap_or_else(|| panic!("node {} has no edge to {from}", self.node))
+            .ok_or(CommError::NoEdge {
+                node: self.node,
+                peer: from,
+            })?
             .recv()
-            .expect("peer hung up")
+            .map_err(|_| CommError::Disconnected {
+                node: self.node,
+                peer: from,
+            })
     }
 
     pub fn neighbors(&self) -> Vec<usize> {
@@ -177,15 +335,15 @@ mod tests {
         let c1 = comms.pop().unwrap();
         let c0 = comms.pop().unwrap();
 
-        c0.send(1, Msg::Dense(vec![1.0, 2.0, 3.0]));
-        let got = c1.recv(0).into_dense();
+        c0.send(1, Msg::Dense(vec![1.0, 2.0, 3.0])).unwrap();
+        let got = c1.recv(0).unwrap().into_dense().unwrap();
         assert_eq!(got, vec![1.0, 2.0, 3.0]);
         assert_eq!(meter.bytes_sent(0), 12);
         assert_eq!(meter.bytes_sent(1), 0);
 
         let coo = CooVec::gather(&[5.0, 6.0, 7.0], &[0, 2]);
-        c2.send(3, Msg::Sparse(coo.clone()));
-        let got = c3.recv(2).into_sparse();
+        c2.send(3, Msg::Sparse(coo.clone())).unwrap();
+        let got = c3.recv(2).unwrap().into_sparse().unwrap();
         assert_eq!(got, coo);
         assert_eq!(meter.bytes_sent(2), 16);
         assert_eq!(meter.total_bytes(), 28);
@@ -203,10 +361,10 @@ mod tests {
         let c0 = comms.pop().unwrap();
         // Both directions can be in flight simultaneously (the exchange
         // pattern in every algorithm: send to all neighbors, then recv).
-        c0.send(1, Msg::Scalar(1.0));
-        c1.send(0, Msg::Scalar(2.0));
-        assert!(matches!(c0.recv(1), Msg::Scalar(v) if v == 2.0));
-        assert!(matches!(c1.recv(0), Msg::Scalar(v) if v == 1.0));
+        c0.send(1, Msg::Scalar(1.0)).unwrap();
+        c1.send(0, Msg::Scalar(2.0)).unwrap();
+        assert!(matches!(c0.recv(1), Ok(Msg::Scalar(v)) if v == 2.0));
+        assert!(matches!(c1.recv(0), Ok(Msg::Scalar(v)) if v == 1.0));
     }
 
     #[test]
@@ -218,11 +376,89 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "no edge")]
-    fn non_edge_send_panics() {
+    fn non_edge_send_and_recv_error() {
         let g = Graph::chain(3);
-        let (comms, _) = build_bus(&g);
-        comms[0].send(2, Msg::Scalar(0.0));
+        let (comms, meter) = build_bus(&g);
+        let err = comms[0].send(2, Msg::Scalar(0.0)).unwrap_err();
+        assert_eq!(err, CommError::NoEdge { node: 0, peer: 2 });
+        let err = comms[0].recv(2).unwrap_err();
+        assert_eq!(err, CommError::NoEdge { node: 0, peer: 2 });
+        // Failed sends must not be metered.
+        assert_eq!(meter.total_bytes(), 0);
+        assert_eq!(meter.total_msgs(), 0);
+    }
+
+    #[test]
+    fn hung_up_peer_errors() {
+        let g = Graph::chain(2);
+        let (mut comms, _) = build_bus(&g);
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        drop(c1); // peer thread "exits"
+        let err = c0.send(1, Msg::Scalar(1.0)).unwrap_err();
+        assert_eq!(err, CommError::Disconnected { node: 0, peer: 1 });
+        let err = c0.recv(1).unwrap_err();
+        assert_eq!(err, CommError::Disconnected { node: 0, peer: 1 });
+    }
+
+    #[test]
+    fn wrong_payload_errors() {
+        let err = Msg::Scalar(1.0).into_dense().unwrap_err();
+        assert_eq!(
+            err,
+            CommError::WrongPayload { expected: "tensor", got: "scalar" }
+        );
+        let err = Msg::Dense(vec![1.0]).into_sparse().unwrap_err();
+        assert_eq!(
+            err,
+            CommError::WrongPayload { expected: "sparse", got: "dense" }
+        );
+        // Errors interop with anyhow (the coordinator's error channel).
+        let any: anyhow::Error = err.into();
+        assert!(any.to_string().contains("sparse"));
+    }
+
+    #[test]
+    fn comm_errors_display() {
+        assert_eq!(
+            CommError::NoEdge { node: 3, peer: 7 }.to_string(),
+            "node 3 has no edge to 7"
+        );
+        assert_eq!(
+            CommError::Disconnected { node: 1, peer: 2 }.to_string(),
+            "node 1: peer 2 hung up"
+        );
+    }
+
+    #[test]
+    fn outbox_queues_in_order() {
+        let mut out = Outbox::new();
+        assert!(out.is_empty());
+        out.send(3, Msg::Scalar(1.0));
+        out.send(1, Msg::Scalar(2.0));
+        assert_eq!(out.len(), 2);
+        let drained: Vec<(usize, Msg)> = out.drain().collect();
+        assert_eq!(drained[0].0, 3);
+        assert_eq!(drained[1].0, 1);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn meter_retransmit_and_vtime() {
+        let m = Meter::new(2);
+        m.record_send(0, 100);
+        m.record_retransmit(0, 40);
+        m.record_retransmit(1, 10);
+        assert_eq!(m.retransmit_bytes(0), 40);
+        assert_eq!(m.total_retransmit_bytes(), 50);
+        // Payload accounting stays first-copy-only.
+        assert_eq!(m.total_bytes(), 100);
+        m.advance_vtime_ns(500);
+        m.advance_vtime_ns(200); // high-water mark, never regresses
+        assert_eq!(m.vtime_ns(), 500);
+        m.reset();
+        assert_eq!(m.total_retransmit_bytes(), 0);
+        assert_eq!(m.vtime_ns(), 0);
     }
 
     #[test]
@@ -236,11 +472,11 @@ mod tests {
             .map(|c| {
                 std::thread::spawn(move || {
                     for &j in &c.neighbors() {
-                        c.send(j, Msg::Dense(vec![c.node as f32; 10]));
+                        c.send(j, Msg::Dense(vec![c.node as f32; 10])).unwrap();
                     }
                     let mut sum = 0.0;
                     for &j in &c.neighbors() {
-                        sum += c.recv(j).into_dense()[0];
+                        sum += c.recv(j).unwrap().into_dense().unwrap()[0];
                     }
                     sum
                 })

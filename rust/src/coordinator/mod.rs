@@ -1,11 +1,21 @@
-//! The training coordinator: thread-per-node execution of any
-//! [`AlgorithmSpec`] over a [`Graph`], with the AOT-compiled PJRT
-//! artifacts doing all numerical work and the byte-metered bus doing all
-//! communication.
+//! The training coordinator: runs any [`AlgorithmSpec`] over a
+//! [`Graph`] on one of two execution engines, selected via
+//! [`ExperimentSpec::exec`]:
+//!
+//! * **Threaded** — one OS thread per node over the blocking
+//!   byte-metered bus (`comm::build_bus`); the original engine, right
+//!   for artifact-backed wall-clock benchmarking at paper scale (8
+//!   nodes).
+//! * **Simulated** — the event-driven virtual-time engine
+//!   (`crate::sim`): single thread, 512+ nodes, pluggable link models
+//!   (latency / bandwidth / drops / stragglers / outages), and a
+//!   simulated time-to-accuracy clock.  Local numerics run through the
+//!   PJRT artifacts when present ([`run_with_engine`]) or through the
+//!   artifact-free softmax backend ([`run_simulated_native`]).
 //!
 //! Round structure (paper §5.1): every node runs `K = local_steps`
 //! minibatch updates of Eq. (6) (gossip methods: `alpha_deg = 0` ⇒ plain
-//! SGD), then the algorithm's `exchange` fires once.  Evaluation runs on
+//! SGD), then the algorithm's exchange fires once.  Evaluation runs on
 //! every node's own model every `eval_every` epochs and the mean is
 //! reported (the paper's “average test accuracy of each node”).
 
@@ -13,14 +23,26 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::algorithms::{build_node, AlgorithmSpec, BuildCtx, DualPath};
+use crate::algorithms::{build_machine, build_node, AlgorithmSpec, BuildCtx,
+                        DualPath};
 use crate::comm::{build_bus, NodeComm};
 use crate::data::{build_node_datasets, Batcher, Dataset, Partition,
                   SyntheticSpec};
 use crate::graph::Graph;
 use crate::metrics::{EpochRecord, History, Mean};
-use crate::model::Manifest;
+use crate::model::{DatasetManifest, Manifest};
 use crate::runtime::{Engine, ModelRuntime};
+use crate::sim::{self, Schedule, SimConfig, SoftmaxLocal};
+
+/// Which execution engine runs the experiment.
+#[derive(Debug, Clone, Default)]
+pub enum ExecMode {
+    /// Thread-per-node over blocking channels (zero-latency, lossless).
+    #[default]
+    Threaded,
+    /// Event-driven virtual-time simulation with the given scenario.
+    Simulated(SimConfig),
+}
 
 /// Full experiment description (one table row / one figure series).
 #[derive(Debug, Clone)]
@@ -29,7 +51,8 @@ pub struct ExperimentSpec {
     pub dataset: String,
     pub algorithm: AlgorithmSpec,
     pub epochs: usize,
-    /// Node count (the paper uses 8). Forced to 1 for `Sgd`.
+    /// Node count (the paper uses 8; the simulated engine scales to
+    /// 512+). Forced to 1 for `Sgd`.
     pub nodes: usize,
     /// Training samples per node (SGD gets `nodes *` this, per the paper:
     /// “a single node containing all training data”).
@@ -45,6 +68,8 @@ pub struct ExperimentSpec {
     pub eval_every: usize,
     pub seed: u64,
     pub dual_path: DualPath,
+    /// Execution engine (threaded vs virtual-time).
+    pub exec: ExecMode,
     /// Override the artifact directory (defaults to `$CECL_ARTIFACTS` or
     /// `./artifacts`).
     pub artifacts_dir: Option<String>,
@@ -67,6 +92,7 @@ impl Default for ExperimentSpec {
             eval_every: 2,
             seed: 42,
             dual_path: DualPath::Native,
+            exec: ExecMode::Threaded,
             artifacts_dir: None,
             verbose: false,
         }
@@ -83,14 +109,56 @@ pub struct Report {
     pub history: History,
     pub final_accuracy: f64,
     pub best_accuracy: f64,
-    /// Mean bytes sent per node per epoch — the paper's “Send/Epoch”.
+    /// Mean bytes sent per node per epoch — the paper's “Send/Epoch”
+    /// (first-copy payload bytes; retransmissions are separate).
     pub mean_bytes_per_epoch: f64,
     pub total_bytes: u64,
+    /// Extra bytes burned on retransmissions (0 on lossless links and
+    /// under the threaded engine).
+    pub retransmit_bytes: u64,
+    /// Total simulated time (None under the threaded engine).
+    pub sim_time_secs: Option<f64>,
     pub wallclock_secs: f64,
 }
 
+/// Derived round/eval structure for a spec against a dataset config.
+fn build_schedule(spec: &ExperimentSpec, train_per_node: usize,
+                  batch: usize) -> Result<Schedule> {
+    let batches_per_epoch = train_per_node / batch;
+    if batches_per_epoch == 0 {
+        return Err(anyhow!(
+            "train_per_node {train_per_node} < batch {batch}"
+        ));
+    }
+    let rounds_per_epoch = (batches_per_epoch / spec.local_steps).max(1);
+    Ok(Schedule::new(spec.epochs, rounds_per_epoch, spec.local_steps,
+                     spec.eval_every))
+}
+
+/// SGD trains on one node holding all data; everything else keeps the
+/// caller's graph.  Returns `(graph, nodes, train_per_node)`.
+fn effective_graph(spec: &ExperimentSpec, graph: &Graph)
+                   -> Result<(Arc<Graph>, usize, usize)> {
+    if !spec.algorithm.is_decentralized() {
+        return Ok((
+            Arc::new(Graph::from_edges(1, &[])),
+            1,
+            spec.train_per_node * spec.nodes,
+        ));
+    }
+    if graph.n() != spec.nodes {
+        return Err(anyhow!(
+            "graph has {} nodes, spec expects {}",
+            graph.n(),
+            spec.nodes
+        ));
+    }
+    Ok((Arc::new(graph.clone()), graph.n(), spec.train_per_node))
+}
+
 /// Run one experiment on the given topology. This is the crate's main
-/// entry point (see `examples/`).
+/// entry point (see `examples/`).  Requires AOT artifacts; for the
+/// artifact-free simulated path use [`run_simulated_native`].
 pub fn run_experiment(spec: &ExperimentSpec, graph: &Graph) -> Result<Report> {
     let manifest = match &spec.artifacts_dir {
         Some(dir) => Manifest::load(dir)?,
@@ -102,8 +170,21 @@ pub fn run_experiment(spec: &ExperimentSpec, graph: &Graph) -> Result<Report> {
 
 /// Run with a pre-built engine/manifest (lets callers amortize PJRT
 /// startup and artifact compilation across many runs — the experiment
-/// drivers use this).
+/// drivers use this).  Dispatches on `spec.exec`.
 pub fn run_with_engine(
+    engine: &Engine,
+    manifest: &Manifest,
+    spec: &ExperimentSpec,
+    graph: &Graph,
+) -> Result<Report> {
+    if let ExecMode::Simulated(cfg) = &spec.exec {
+        let cfg = cfg.clone();
+        return run_simulated_pjrt(engine, manifest, spec, graph, &cfg);
+    }
+    run_threaded(engine, manifest, spec, graph)
+}
+
+fn run_threaded(
     engine: &Engine,
     manifest: &Manifest,
     spec: &ExperimentSpec,
@@ -113,32 +194,11 @@ pub fn run_with_engine(
     let ds = manifest.dataset(&spec.dataset)?.clone();
     let runtime = ModelRuntime::load(engine, &ds)?;
 
-    // SGD trains on one node holding all data.
     let is_sgd = !spec.algorithm.is_decentralized();
-    let (graph_owned, nodes, train_per_node) = if is_sgd {
-        (Graph::from_edges(1, &[]), 1, spec.train_per_node * spec.nodes)
-    } else {
-        (graph.clone(), graph.n(), spec.train_per_node)
-    };
-    let graph = Arc::new(graph_owned);
-    if !is_sgd && graph.n() != spec.nodes {
-        return Err(anyhow!(
-            "graph has {} nodes, spec expects {}",
-            graph.n(),
-            spec.nodes
-        ));
-    }
-
-    let batches_per_epoch = train_per_node / ds.batch;
-    if batches_per_epoch == 0 {
-        return Err(anyhow!(
-            "train_per_node {} < batch {}",
-            train_per_node,
-            ds.batch
-        ));
-    }
-    let rounds_per_epoch = (batches_per_epoch / spec.local_steps).max(1);
-    let total_rounds = spec.epochs * rounds_per_epoch;
+    let (graph, nodes, train_per_node) = effective_graph(spec, graph)?;
+    let sched = build_schedule(spec, train_per_node, ds.batch)?;
+    let rounds_per_epoch = sched.rounds_per_epoch;
+    let total_rounds = sched.total_rounds();
 
     // Data.
     let (h, wdt, c) = ds.input;
@@ -158,15 +218,6 @@ pub fn run_with_engine(
     // Bus + collector.
     let (comms, meter) = build_bus(&graph);
     let (tx, rx) = mpsc::channel::<(usize, usize, f64, f64, f64)>();
-
-    // Eval schedule: end of every `eval_every`-th epoch plus the last.
-    let eval_epochs: Vec<usize> = (1..=spec.epochs)
-        .filter(|e| e % spec.eval_every == 0 || *e == spec.epochs)
-        .collect();
-    let eval_rounds: std::collections::BTreeMap<usize, usize> = eval_epochs
-        .iter()
-        .map(|&e| (e * rounds_per_epoch - 1, e))
-        .collect();
 
     let worker = |node: usize,
                   comm: NodeComm,
@@ -202,9 +253,10 @@ pub fn run_with_engine(
                 train_loss.add(loss as f64);
             }
             if !is_sgd {
-                algo.exchange(round, &mut w, &comm);
+                algo.exchange(round, &mut w, &comm)
+                    .with_context(|| format!("exchange node {node} round {round}"))?;
             }
-            if let Some(&epoch) = eval_rounds.get(&round) {
+            if let Some(&epoch) = sched.eval_rounds.get(&round) {
                 let (acc, loss) = runtime
                     .evaluate(&w, &test)
                     .with_context(|| format!("eval node {node}"))?;
@@ -235,7 +287,7 @@ pub fn run_with_engine(
         let mut pending: std::collections::BTreeMap<usize, Slot> =
             Default::default();
         let mut done = 0usize;
-        let expected = eval_epochs.len();
+        let expected = sched.eval_rounds.len();
         while done < expected {
             match rx.recv() {
                 Ok((node, epoch, acc, loss, tloss)) => {
@@ -258,6 +310,7 @@ pub fn run_with_engine(
                             mean_loss: l.take(),
                             train_loss: t.take(),
                             cum_bytes_per_node: meter.mean_bytes_per_node(),
+                            sim_time_secs: 0.0,
                         };
                         if spec.verbose {
                             println!(
@@ -297,7 +350,201 @@ pub fn run_with_engine(
         history,
         mean_bytes_per_epoch,
         total_bytes,
+        retransmit_bytes: 0,
+        sim_time_secs: None,
         wallclock_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Virtual-time paths
+// ---------------------------------------------------------------------
+
+/// PJRT-backed local numerics for the virtual-time engine.
+struct PjrtLocal {
+    runtime: Arc<ModelRuntime>,
+    train: Dataset,
+    test: Arc<Dataset>,
+    batcher: Batcher,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    eta: f32,
+    local_steps: usize,
+}
+
+impl sim::LocalUpdate for PjrtLocal {
+    fn local_round(&mut self, _round: usize, w: &mut [f32], zsum: &[f32],
+                   alpha_deg: f32) -> Result<f64> {
+        let mut m = Mean::default();
+        for _ in 0..self.local_steps {
+            self.batcher.next_batch(&self.train, &mut self.x, &mut self.y);
+            let (w_next, loss) = self
+                .runtime
+                .train_step(w, zsum, &self.x, &self.y, self.eta, alpha_deg)?;
+            w.copy_from_slice(&w_next);
+            m.add(loss as f64);
+        }
+        Ok(m.get())
+    }
+
+    fn evaluate(&mut self, w: &[f32]) -> Result<(f64, f64)> {
+        self.runtime.evaluate(w, &self.test)
+    }
+}
+
+/// Shared virtual-time driver: builds data + machines, runs the event
+/// loop, assembles the Report.  `make_local` supplies the numerics
+/// backend per node.
+fn run_simulated_inner<F>(
+    spec: &ExperimentSpec,
+    graph: &Graph,
+    cfg: &SimConfig,
+    ds: &DatasetManifest,
+    init_w: Vec<f32>,
+    mut make_local: F,
+) -> Result<Report>
+where
+    F: FnMut(usize, Dataset, Arc<Dataset>) -> Result<Box<dyn sim::LocalUpdate>>,
+{
+    let t0 = std::time::Instant::now();
+    let is_sgd = !spec.algorithm.is_decentralized();
+    let (graph, nodes, train_per_node) = effective_graph(spec, graph)?;
+    let sched = build_schedule(spec, train_per_node, ds.batch)?;
+
+    let (h, wdt, c) = ds.input;
+    let data_spec = SyntheticSpec::for_dataset(
+        &spec.dataset, h, wdt, c, ds.classes, spec.seed,
+    );
+    let (trains, test) = build_node_datasets(
+        &data_spec,
+        if is_sgd { Partition::Homogeneous } else { spec.partition },
+        nodes,
+        train_per_node,
+        spec.test_size,
+    );
+    let test = Arc::new(test);
+
+    let mut setups = Vec::with_capacity(nodes);
+    for (node, train) in trains.into_iter().enumerate() {
+        let ctx = BuildCtx {
+            node,
+            graph: Arc::clone(&graph),
+            manifest: ds.clone(),
+            seed: spec.seed,
+            eta: spec.eta,
+            local_steps: spec.local_steps,
+            rounds_per_epoch: sched.rounds_per_epoch,
+            // The state machines always run the native fused dual path;
+            // DualPath::Pjrt is a threaded-engine option.
+            dual_path: DualPath::Native,
+            runtime: None,
+        };
+        setups.push(sim::NodeSetup {
+            machine: build_machine(&spec.algorithm, &ctx),
+            local: make_local(node, train, Arc::clone(&test))?,
+            w: init_w.clone(),
+        });
+    }
+
+    let out = sim::simulate(&graph, cfg, spec.seed, &sched, setups,
+                            spec.verbose)?;
+    let total_bytes = out.meter.total_bytes();
+    let mean_bytes_per_epoch =
+        total_bytes as f64 / nodes as f64 / spec.epochs as f64;
+    Ok(Report {
+        algorithm: spec.algorithm.name(),
+        dataset: spec.dataset.clone(),
+        partition: spec.partition.name(),
+        topology: if is_sgd { "single".to_string() } else { "graph".to_string() },
+        final_accuracy: out.history.final_accuracy(),
+        best_accuracy: out.history.best_accuracy(),
+        history: out.history,
+        mean_bytes_per_epoch,
+        total_bytes,
+        retransmit_bytes: out.meter.total_retransmit_bytes(),
+        sim_time_secs: Some(out.vtime_ns as f64 / 1e9),
+        wallclock_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Virtual-time run with the PJRT CNN as the local model (requires AOT
+/// artifacts).  Usually reached through [`run_with_engine`] with
+/// `spec.exec = ExecMode::Simulated(..)`.
+pub fn run_simulated_pjrt(
+    engine: &Engine,
+    manifest: &Manifest,
+    spec: &ExperimentSpec,
+    graph: &Graph,
+    cfg: &SimConfig,
+) -> Result<Report> {
+    let ds = manifest.dataset(&spec.dataset)?.clone();
+    let runtime = ModelRuntime::load(engine, &ds)?;
+    let init_w = ds.load_init_w()?;
+    let eta = spec.eta;
+    let local_steps = spec.local_steps;
+    let seed = spec.seed;
+    let batch = ds.batch;
+    run_simulated_inner(spec, graph, cfg, &ds, init_w, move |node, train, test| {
+        let local: Box<dyn sim::LocalUpdate> = Box::new(PjrtLocal {
+            runtime: Arc::clone(&runtime),
+            batcher: Batcher::new(train.n, batch, seed, node),
+            x: vec![0.0f32; batch * train.sample_len],
+            y: vec![0i32; batch],
+            train,
+            test,
+            eta,
+            local_steps,
+        });
+        Ok(local)
+    })
+}
+
+/// Input shape for the artifact-free linear model, keyed off the spec's
+/// dataset name (shape-compatible stand-ins, like the data generator).
+fn native_input(dataset: &str) -> (usize, usize, usize) {
+    match dataset {
+        "cifar" => (32, 32, 3),
+        "fashion" => (28, 28, 1),
+        _ => (8, 8, 1),
+    }
+}
+
+/// Batch size of the artifact-free softmax backend.
+pub const NATIVE_SIM_BATCH: usize = 10;
+
+/// Virtual-time run with the artifact-free softmax-regression local
+/// model: no PJRT, no Python, no artifacts — this is what the CI smoke
+/// run, the 512-node scale tests, and `repro sim` use.
+pub fn run_simulated_native(spec: &ExperimentSpec, graph: &Graph)
+                            -> Result<Report> {
+    let cfg = match &spec.exec {
+        ExecMode::Simulated(c) => c.clone(),
+        ExecMode::Threaded => SimConfig::default(),
+    };
+    let classes = 10;
+    let ds = DatasetManifest::synthetic_linear(
+        &spec.dataset,
+        native_input(&spec.dataset),
+        classes,
+        NATIVE_SIM_BATCH,
+        NATIVE_SIM_BATCH,
+    );
+    let init_w = vec![0.0f32; ds.d_pad];
+    let eta = spec.eta;
+    let local_steps = spec.local_steps;
+    let seed = spec.seed;
+    run_simulated_inner(spec, graph, &cfg, &ds, init_w, move |node, train, test| {
+        let local: Box<dyn sim::LocalUpdate> = Box::new(SoftmaxLocal::new(
+            node,
+            train,
+            test,
+            classes,
+            seed,
+            eta,
+            NATIVE_SIM_BATCH,
+            local_steps,
+        )?);
+        Ok(local)
     })
 }
 
@@ -311,16 +558,83 @@ mod tests {
         assert_eq!(spec.nodes, 8);
         assert_eq!(spec.local_steps, 5);
         assert_eq!(spec.partition, Partition::Homogeneous);
+        assert!(matches!(spec.exec, ExecMode::Threaded));
     }
 
     #[test]
-    fn eval_schedule_includes_last_epoch() {
-        // (Pure logic replicated from run_with_engine.)
-        let epochs = 7usize;
-        let eval_every = 3usize;
-        let evals: Vec<usize> = (1..=epochs)
-            .filter(|e| e % eval_every == 0 || *e == epochs)
-            .collect();
-        assert_eq!(evals, vec![3, 6, 7]);
+    fn schedule_includes_last_epoch() {
+        let spec = ExperimentSpec {
+            epochs: 7,
+            eval_every: 3,
+            local_steps: 2,
+            ..Default::default()
+        };
+        // 100 samples / batch 10 = 10 batches; K=2 -> 5 rounds/epoch.
+        let sched = build_schedule(&spec, 100, 10).unwrap();
+        assert_eq!(sched.rounds_per_epoch, 5);
+        let epochs: Vec<usize> = sched.eval_rounds.values().copied().collect();
+        assert_eq!(epochs, vec![3, 6, 7]);
+        // Each eval lands on the epoch's last round.
+        for (&round, &epoch) in &sched.eval_rounds {
+            assert_eq!(round, epoch * 5 - 1);
+        }
+    }
+
+    #[test]
+    fn schedule_rejects_tiny_datasets() {
+        let spec = ExperimentSpec::default();
+        assert!(build_schedule(&spec, 3, 10).is_err());
+    }
+
+    #[test]
+    fn effective_graph_forces_sgd_to_one_node() {
+        let spec = ExperimentSpec {
+            algorithm: AlgorithmSpec::Sgd,
+            nodes: 8,
+            train_per_node: 100,
+            ..Default::default()
+        };
+        let g = Graph::ring(8);
+        let (g1, n, tpn) = effective_graph(&spec, &g).unwrap();
+        assert_eq!(g1.n(), 1);
+        assert_eq!(n, 1);
+        assert_eq!(tpn, 800);
+        // Mismatched node counts are rejected for decentralized specs.
+        let spec = ExperimentSpec {
+            nodes: 6,
+            ..Default::default()
+        };
+        assert!(effective_graph(&spec, &g).is_err());
+    }
+
+    #[test]
+    fn native_sim_runs_and_replays_bit_identically() {
+        let graph = Graph::ring(4);
+        let spec = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: AlgorithmSpec::CEcl {
+                k_frac: 0.2,
+                theta: 1.0,
+                dense_first_epoch: false,
+            },
+            epochs: 2,
+            nodes: 4,
+            train_per_node: 20,
+            test_size: 40,
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 1,
+            seed: 5,
+            exec: ExecMode::Simulated(SimConfig::default()),
+            ..Default::default()
+        };
+        let a = run_simulated_native(&spec, &graph).unwrap();
+        let b = run_simulated_native(&spec, &graph).unwrap();
+        assert_eq!(a.history.records.len(), 2);
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.sim_time_secs, b.sim_time_secs);
+        assert!(a.total_bytes > 0);
+        assert!(a.sim_time_secs.unwrap() > 0.0);
     }
 }

@@ -3,6 +3,7 @@
 
 pub mod ablations;
 pub mod fig1;
+pub mod sim;
 pub mod tables;
 pub mod theory;
 

@@ -1,0 +1,147 @@
+//! Virtual-time experiments: simulated *time-to-accuracy* under
+//! realistic links — the table the paper's byte counts are a proxy for.
+//!
+//! For each method × link model, runs the artifact-free simulated
+//! engine and reports final accuracy, total simulated seconds, the
+//! first virtual time at which the target accuracy was reached, payload
+//! bytes, and retransmit overhead.  On a bandwidth-limited or lossy
+//! link, C-ECL's smaller messages translate directly into earlier
+//! arrival times — compression becomes a *time* win, which bytes alone
+//! cannot show.
+
+use anyhow::Result;
+
+use crate::algorithms::AlgorithmSpec;
+use crate::coordinator::{run_simulated_native, ExecMode, ExperimentSpec,
+                         Report};
+use crate::data::Partition;
+use crate::graph::Graph;
+use crate::sim::{LinkSpec, SimConfig};
+use crate::util::table::Table;
+
+use super::{results_dir, Sizing};
+
+/// The link ladder the table sweeps: from the threaded engine's ideal
+/// network to a slow, lossy one.
+pub fn link_ladder() -> Vec<LinkSpec> {
+    vec![
+        LinkSpec::Ideal,
+        LinkSpec::Constant { latency_us: 500 },
+        LinkSpec::Bandwidth { latency_us: 500, mbit_per_sec: 100.0 },
+        LinkSpec::Lossy {
+            latency_us: 500,
+            mbit_per_sec: 100.0,
+            drop_p: 0.05,
+        },
+    ]
+}
+
+/// Methods compared in the simulated table (a compact subset of the
+/// paper ladder).
+pub fn sim_methods() -> Vec<AlgorithmSpec> {
+    vec![
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::PowerGossip { iters: 4 },
+        AlgorithmSpec::CEcl {
+            k_frac: 0.10,
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+    ]
+}
+
+/// Run the time-to-accuracy table on a ring. `target_acc` picks the
+/// accuracy threshold the "t2a" column reports.
+pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig,
+                     target_acc: f64) -> Result<(Table, Vec<Report>)> {
+    let graph = Graph::ring(sizing.nodes);
+    let dataset = sizing
+        .datasets
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "fashion".to_string());
+    let headers: Vec<String> = vec![
+        "method".into(),
+        "link".into(),
+        "final acc".into(),
+        "sim secs".into(),
+        format!("t2a@{:.0}%", target_acc * 100.0),
+        "KB/node/epoch".into(),
+        "retrans KB".into(),
+    ];
+    let mut table = Table::new(headers);
+    let mut reports = Vec::new();
+    for alg in sim_methods() {
+        for link in link_ladder() {
+            let mut spec: ExperimentSpec =
+                sizing.spec_base(&dataset, Partition::Homogeneous);
+            spec.algorithm = alg.clone();
+            spec.exec = ExecMode::Simulated(SimConfig {
+                link: link.clone(),
+                ..cfg_base.clone()
+            });
+            if sizing.verbose {
+                eprintln!("[sim] {} / {} ...", alg.name(), link.name());
+            }
+            let report = run_simulated_native(&spec, &graph)?;
+            let t2a = report
+                .history
+                .time_to_accuracy(target_acc)
+                .map(|(_, t)| format!("{t:.2}s"))
+                .unwrap_or_else(|| "-".to_string());
+            table.row([
+                report.algorithm.clone(),
+                link.name(),
+                format!("{:.3}", report.final_accuracy),
+                format!("{:.2}", report.sim_time_secs.unwrap_or(0.0)),
+                t2a,
+                format!("{:.0}", report.mean_bytes_per_epoch / 1024.0),
+                format!(
+                    "{:.0}",
+                    report.retransmit_bytes as f64 / 1024.0
+                ),
+            ]);
+            reports.push(report);
+        }
+    }
+    let _ = table.write_csv(results_dir().join("sim_time_to_accuracy.csv"));
+    Ok((table, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_has_lossless_and_lossy_links() {
+        let ladder = link_ladder();
+        assert!(ladder.contains(&LinkSpec::Ideal));
+        assert!(ladder
+            .iter()
+            .any(|l| matches!(l, LinkSpec::Lossy { .. })));
+        assert!(sim_methods().len() >= 3);
+    }
+
+    #[test]
+    fn tiny_sim_table_runs() {
+        let sizing = Sizing {
+            nodes: 4,
+            epochs: 1,
+            train_per_node: 20,
+            test_size: 20,
+            local_steps: 2,
+            eval_every: 1,
+            datasets: vec!["tiny".to_string()],
+            ..Sizing::default()
+        };
+        let (table, reports) =
+            run_sim_table(&sizing, &SimConfig::default(), 0.99).unwrap();
+        assert_eq!(reports.len(), sim_methods().len() * link_ladder().len());
+        let rendered = table.render();
+        assert!(rendered.contains("C-ECL"));
+        assert!(rendered.contains("ideal"));
+        // Every report carries a virtual clock.
+        assert!(reports.iter().all(|r| r.sim_time_secs.is_some()));
+    }
+}

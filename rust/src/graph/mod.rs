@@ -59,6 +59,62 @@ impl Topology {
     }
 }
 
+/// Time-varying topology hook: scheduled windows (in virtual
+/// nanoseconds) during which an edge of the canonical edge list is
+/// down.  The virtual-time engine holds traffic on a down edge until
+/// the window ends — links recover, messages are delayed rather than
+/// lost, so protocol semantics (eventual delivery) are preserved while
+/// outages stretch time-to-accuracy.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OutageSchedule {
+    /// `(edge index, from_ns inclusive, until_ns exclusive)`.
+    windows: Vec<(usize, u64, u64)>,
+}
+
+impl OutageSchedule {
+    pub fn new() -> OutageSchedule {
+        OutageSchedule::default()
+    }
+
+    /// Schedule edge `edge` down during `[from_ns, until_ns)`.
+    pub fn add(&mut self, edge: usize, from_ns: u64, until_ns: u64) {
+        assert!(from_ns < until_ns, "empty outage window");
+        self.windows.push((edge, from_ns, until_ns));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn is_up(&self, edge: usize, t_ns: u64) -> bool {
+        !self
+            .windows
+            .iter()
+            .any(|&(e, a, b)| e == edge && t_ns >= a && t_ns < b)
+    }
+
+    /// Earliest time `>= t_ns` at which `edge` is up (handles
+    /// overlapping and back-to-back windows).
+    pub fn next_up(&self, edge: usize, mut t_ns: u64) -> u64 {
+        // Each pass either finds no covering window (done) or jumps to
+        // a window end, which strictly increases t; bounded by the
+        // number of windows.
+        for _ in 0..=self.windows.len() {
+            match self
+                .windows
+                .iter()
+                .filter(|&&(e, a, b)| e == edge && t_ns >= a && t_ns < b)
+                .map(|&(_, _, b)| b)
+                .max()
+            {
+                Some(end) => t_ns = end,
+                None => return t_ns,
+            }
+        }
+        t_ns
+    }
+}
+
 /// Undirected connected graph over nodes `0..n`.
 #[derive(Debug, Clone)]
 pub struct Graph {
@@ -402,6 +458,34 @@ mod tests {
             assert_eq!(Topology::from_name(t.name()), Some(t));
         }
         assert_eq!(Topology::from_name("nope"), None);
+    }
+
+    #[test]
+    fn outage_schedule_windows() {
+        let mut s = OutageSchedule::new();
+        assert!(s.is_empty());
+        assert!(s.is_up(0, 123));
+        assert_eq!(s.next_up(0, 123), 123);
+        s.add(0, 100, 200);
+        s.add(0, 180, 300); // overlapping
+        s.add(1, 50, 60);
+        assert!(!s.is_empty());
+        assert!(s.is_up(0, 99));
+        assert!(!s.is_up(0, 100));
+        assert!(!s.is_up(0, 250));
+        assert!(s.is_up(0, 300)); // until is exclusive
+        assert!(s.is_up(2, 150)); // other edges unaffected
+        // next_up hops across the overlapping chain.
+        assert_eq!(s.next_up(0, 150), 300);
+        assert_eq!(s.next_up(0, 0), 0);
+        assert_eq!(s.next_up(1, 55), 60);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty outage window")]
+    fn outage_rejects_empty_window() {
+        let mut s = OutageSchedule::new();
+        s.add(0, 10, 10);
     }
 
     #[test]

@@ -4,9 +4,9 @@
 //! Decentralized Learning with Operator Splitting Methods”* (Takezawa,
 //! Niwa, Yamada, 2022) as a three-layer rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the decentralized-training coordinator: node
-//!   threads over a network topology, a byte-metered message bus, the
-//!   per-edge dual state of the Douglas–Rachford splitting, compression
+//! * **L3 (this crate)** — the decentralized-training coordinator over
+//!   a network topology: a byte-metered message substrate, the per-edge
+//!   dual state of the Douglas–Rachford splitting, compression
 //!   operators, the C-ECL/ECL/D-PSGD/PowerGossip protocol drivers, and
 //!   every experiment of the paper's evaluation section.
 //! * **L2 (python/compile/model.py, build-time only)** — the 5-layer CNN
@@ -17,8 +17,34 @@
 //!   MXU-tiled matmul of the dense head.
 //!
 //! Python never runs on the training path: `make artifacts` lowers the
-//! jax functions once; [`runtime::Engine`] loads and executes the HLO via
-//! the PJRT C API (`xla` crate, CPU client).
+//! jax functions once; [`runtime::Engine`] loads and executes the HLO
+//! via the PJRT C API (`xla` crate, CPU client, behind the `pjrt`
+//! cargo feature).
+//!
+//! ## Two execution engines
+//!
+//! Every algorithm is written once as a poll-driven state machine
+//! ([`algorithms::NodeStateMachine`]) and can be driven by either
+//! engine, selected through [`coordinator::ExperimentSpec::exec`]:
+//!
+//! | | **Threaded** (`ExecMode::Threaded`) | **Virtual-time** (`ExecMode::Simulated`) |
+//! |---|---|---|
+//! | concurrency | one OS thread per node | single thread, event queue |
+//! | network | zero-latency, lossless channels | pluggable [`sim::LinkModel`]s: latency, bandwidth, drops + retransmit, stragglers, edge outages |
+//! | clock | wall-clock only | virtual nanoseconds ⇒ simulated *time-to-accuracy* |
+//! | scale | ~dozens of nodes | 512+ nodes in one process |
+//! | determinism | bytes deterministic; timing racy | same seed ⇒ bit-identical [`coordinator::Report`] |
+//!
+//! Use the **threaded** engine to benchmark real wall-clock round costs
+//! with the PJRT artifacts at paper scale (8 nodes).  Use the
+//! **virtual-time** engine for everything the paper's claim is actually
+//! about — communication under imperfect networks — and for scale: it
+//! reports simulated time-to-accuracy under lossy/slow/straggling
+//! links, replays bit-identically from a seed, and needs no artifacts
+//! at all when paired with the native softmax backend
+//! ([`coordinator::run_simulated_native`]).  The zero-latency lossless
+//! link reproduces the threaded engine's byte accounting exactly
+//! (pinned by the `sim` test suite).
 //!
 //! ## Quick start
 //!
@@ -36,6 +62,26 @@
 //! println!("accuracy={:.1}% sent/epoch={}", report.final_accuracy * 100.0,
 //!          report.mean_bytes_per_epoch);
 //! ```
+//!
+//! Simulated, artifact-free, 512 nodes on a lossy network:
+//!
+//! ```no_run
+//! use cecl::prelude::*;
+//!
+//! let graph = Graph::ring(512);
+//! let spec = ExperimentSpec {
+//!     algorithm: AlgorithmSpec::CEcl { k_frac: 0.10, theta: 1.0, dense_first_epoch: false },
+//!     nodes: 512,
+//!     exec: ExecMode::Simulated(SimConfig {
+//!         link: LinkSpec::Lossy { latency_us: 500, mbit_per_sec: 100.0, drop_p: 0.02 },
+//!         ..SimConfig::default()
+//!     }),
+//!     ..ExperimentSpec::default()
+//! };
+//! let report = run_simulated_native(&spec, &graph).unwrap();
+//! println!("sim time {:.2}s, retransmitted {} B",
+//!          report.sim_time_secs.unwrap(), report.retransmit_bytes);
+//! ```
 
 pub mod algorithms;
 pub mod comm;
@@ -49,17 +95,20 @@ pub mod metrics;
 pub mod model;
 pub mod quadratic;
 pub mod runtime;
+pub mod sim;
 pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::algorithms::AlgorithmSpec;
     pub use crate::compress::{Compressor, RandK, TopK};
-    pub use crate::coordinator::{run_experiment, ExperimentSpec, Report};
+    pub use crate::coordinator::{run_experiment, run_simulated_native,
+                                 ExecMode, ExperimentSpec, Report};
     pub use crate::data::{Partition, SyntheticSpec};
-    pub use crate::graph::{Graph, Topology};
+    pub use crate::graph::{Graph, OutageSchedule, Topology};
     pub use crate::metrics::History;
     pub use crate::quadratic::QuadraticNetwork;
     pub use crate::runtime::Engine;
+    pub use crate::sim::{LinkSpec, SimConfig};
     pub use crate::util::rng::Pcg;
 }

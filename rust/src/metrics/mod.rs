@@ -15,6 +15,9 @@ pub struct EpochRecord {
     pub train_loss: f64,
     /// Cumulative mean bytes sent per node.
     pub cum_bytes_per_node: f64,
+    /// Virtual time at which the last node completed this epoch
+    /// (seconds; 0.0 under the threaded engine, which has no clock).
+    pub sim_time_secs: f64,
 }
 
 /// Full run history.
@@ -55,6 +58,17 @@ impl History {
         }
     }
 
+    /// Time-to-accuracy: the first evaluation whose mean accuracy
+    /// reaches `target`, as `(epoch, sim_time_secs)`.  `None` if the
+    /// run never got there.  Under the threaded engine the returned
+    /// time is 0.0 (no virtual clock).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<(usize, f64)> {
+        self.records
+            .iter()
+            .find(|r| r.mean_accuracy >= target)
+            .map(|r| (r.epoch, r.sim_time_secs))
+    }
+
     /// Accuracy series as (epoch, accuracy) pairs (Fig. 1 CSV payload).
     pub fn accuracy_series(&self) -> Vec<(usize, f64)> {
         self.records
@@ -71,6 +85,7 @@ impl History {
             "mean_loss",
             "train_loss",
             "cum_bytes_per_node",
+            "sim_time_secs",
         ]);
         for r in &self.records {
             t.row([
@@ -79,6 +94,7 @@ impl History {
                 format!("{:.4}", r.mean_loss),
                 format!("{:.4}", r.train_loss),
                 format!("{:.0}", r.cum_bytes_per_node),
+                format!("{:.4}", r.sim_time_secs),
             ]);
         }
         t
@@ -128,6 +144,7 @@ mod tests {
             mean_loss: 1.0,
             train_loss: 1.0,
             cum_bytes_per_node: bytes,
+            sim_time_secs: epoch as f64 * 0.5,
         }
     }
 
@@ -141,6 +158,10 @@ mod tests {
         assert_eq!(h.best_accuracy(), 0.8);
         assert!((h.bytes_per_node_epoch() - 100.0).abs() < 1e-12);
         assert_eq!(h.accuracy_series().len(), 3);
+        // time-to-accuracy: first record at or above target.
+        assert_eq!(h.time_to_accuracy(0.6), Some((20, 10.0)));
+        assert_eq!(h.time_to_accuracy(0.4), Some((10, 5.0)));
+        assert_eq!(h.time_to_accuracy(0.95), None);
     }
 
     #[test]

@@ -95,6 +95,47 @@ impl DatasetManifest {
             .map(|l| (l.name.clone(), l.offset, l.size()))
             .collect()
     }
+
+    /// In-memory manifest for the artifact-free linear (softmax) model
+    /// used by the virtual-time engine's native backend: a
+    /// `sample_len × classes` weight matrix (a PowerGossip matrix view)
+    /// plus a `classes` bias (a rank-1 view), no padding, no artifact
+    /// files.  `d = (h·w·c + 1) · classes`.
+    pub fn synthetic_linear(
+        name: &str,
+        input: (usize, usize, usize),
+        classes: usize,
+        batch: usize,
+        eval_batch: usize,
+    ) -> DatasetManifest {
+        let sample_len = input.0 * input.1 * input.2;
+        let d = (sample_len + 1) * classes;
+        DatasetManifest {
+            name: name.to_string(),
+            d,
+            d_pad: d,
+            input,
+            classes,
+            batch,
+            eval_batch,
+            train_step: PathBuf::new(),
+            eval_step: PathBuf::new(),
+            dual_update: PathBuf::new(),
+            init_w: PathBuf::new(),
+            layers: vec![
+                Layer {
+                    name: "w".to_string(),
+                    shape: vec![sample_len, classes],
+                    offset: 0,
+                },
+                Layer {
+                    name: "b".to_string(),
+                    shape: vec![classes],
+                    offset: sample_len * classes,
+                },
+            ],
+        }
+    }
 }
 
 /// Parsed `artifacts/manifest.txt`.
@@ -313,6 +354,21 @@ end
     fn unknown_dataset_lookup_fails() {
         let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
         assert!(m.dataset("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_linear_layout() {
+        let ds = DatasetManifest::synthetic_linear("sim", (4, 4, 1), 10, 8, 16);
+        assert_eq!(ds.sample_len(), 16);
+        assert_eq!(ds.d, 17 * 10);
+        assert_eq!(ds.d_pad, ds.d);
+        let views = ds.matrix_views();
+        assert_eq!(views, vec![("w".to_string(), 0, 16, 10)]);
+        let vecs = ds.vector_views();
+        assert_eq!(vecs, vec![("b".to_string(), 160, 10)]);
+        // Offsets + sizes tile d exactly.
+        let total: usize = ds.layers.iter().map(|l| l.size()).sum();
+        assert_eq!(total, ds.d);
     }
 
     #[test]

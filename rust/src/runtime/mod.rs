@@ -6,6 +6,16 @@
 //! `client.compile` -> `execute`.  Executables are compiled once at
 //! startup and shared across node threads.
 //!
+//! ## Feature gate
+//!
+//! The `xla` crate needs the XLA extension shared library at build
+//! time, so the whole PJRT path sits behind the off-by-default `pjrt`
+//! cargo feature.  Without it this module still compiles: the types
+//! keep their signatures and [`Engine::cpu`] returns a descriptive
+//! error, so artifact-dependent tests self-skip and everything else
+//! (both execution engines, the [`native`] twin of the dual update, the
+//! artifact-free simulator backend) runs normally.
+//!
 //! ## Thread safety
 //!
 //! The `xla` crate's handles are raw-pointer newtypes without `Send`/
@@ -19,7 +29,12 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(not(feature = "pjrt"))]
+use anyhow::anyhow;
 
 use crate::model::DatasetManifest;
 
@@ -33,6 +48,7 @@ pub enum In<'a> {
     ScalarF32(f32),
 }
 
+#[cfg(feature = "pjrt")]
 impl<'a> In<'a> {
     fn to_literal(&self) -> Result<xla::Literal> {
         match self {
@@ -57,6 +73,7 @@ impl<'a> In<'a> {
 
 /// A compiled HLO module, executable from any thread (see module docs).
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
@@ -64,13 +81,16 @@ pub struct Executable {
 // SAFETY: PJRT CPU client executables are internally synchronized; see
 // module-level documentation. The wrapped pointer is never mutated
 // through a shared reference on the rust side.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Executable {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Executable {}
 
 impl Executable {
     /// Execute with the given inputs; returns every tuple output as a
     /// flat f32 vector (the artifacts are lowered with
     /// `return_tuple=True`).
+    #[cfg(feature = "pjrt")]
     pub fn run(&self, inputs: &[In<'_>]) -> Result<Vec<Vec<f32>>> {
         let literals: Vec<xla::Literal> = inputs
             .iter()
@@ -92,29 +112,59 @@ impl Executable {
             .map(|lit| Ok(lit.to_vec::<f32>()?))
             .collect()
     }
+
+    /// Stub: unreachable in practice because [`Engine::cpu`] already
+    /// fails without the feature, but keeps call sites compiling.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run(&self, _inputs: &[In<'_>]) -> Result<Vec<Vec<f32>>> {
+        bail!("{}: built without the `pjrt` feature", self.name)
+    }
 }
 
 /// PJRT client plus artifact loader.
 pub struct Engine {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
 // SAFETY: as for Executable — the CPU client is thread-safe.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Engine {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Create the PJRT CPU client.
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Engine { client })
     }
 
+    /// Without the `pjrt` feature there is no client to create; tests
+    /// that need one self-skip on the artifacts check before reaching
+    /// this.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Engine> {
+        Err(anyhow!(
+            "PJRT runtime unavailable: rebuild with `--features pjrt` \
+             (requires the xla crate and its XLA extension library)"
+        ))
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "unavailable (built without pjrt)".to_string()
+        }
     }
 
     /// Load + compile one HLO text artifact.
+    #[cfg(feature = "pjrt")]
     pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
         let path = path.as_ref();
         let proto = xla::HloModuleProto::from_text_file(path)
@@ -131,6 +181,14 @@ impl Engine {
                 .map(|s| s.to_string_lossy().into_owned())
                 .unwrap_or_else(|| "<hlo>".to_string()),
         })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        bail!(
+            "cannot load {:?}: built without the `pjrt` feature",
+            path.as_ref()
+        )
     }
 }
 
@@ -392,5 +450,12 @@ mod tests {
         for (k, &i) in mask_out.iter().enumerate() {
             assert!((yvals[k] - ys[i as usize]).abs() < 1e-6, "y at {i}");
         }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn engine_without_pjrt_reports_clearly() {
+        let err = Engine::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -1,0 +1,354 @@
+//! Pluggable link models for the virtual-time engine: how long a
+//! message of `b` bytes occupies a directed edge, how long it then
+//! propagates, and how many transmission attempts it burns.
+//!
+//! Four models cover the evaluation regimes of the compression
+//! literature (Koloskova et al. 2019; Vogels et al. 2020):
+//!
+//! * [`IdealLink`] — zero latency, lossless: reproduces the threaded
+//!   bus exactly (byte-accounting equivalence is pinned by tests).
+//! * [`ConstantLatency`] — fixed propagation delay per message.
+//! * [`BandwidthLink`] — latency + serialization delay `bytes / rate`,
+//!   which is what makes compression a *time* win, not just a byte win.
+//! * [`LossyLink`] — i.i.d. packet drop with stop-and-wait retransmit:
+//!   each failed attempt burns a full serialization+timeout slot and is
+//!   accounted as retransmitted bytes on the sender's meter.
+//!
+//! A transmission is split into **occupancy** (how long the directed
+//! channel is busy serializing, retries included) and **latency**
+//! (propagation after the last serialization).  The engine queues
+//! occupancy per directed edge — two messages queued on the same edge
+//! serialize back-to-back, never in parallel — so bandwidth-bound
+//! traffic costs what a serial link actually costs.
+//!
+//! All randomness comes from the engine's deterministic link RNG, so a
+//! run is bit-reproducible from its seed.
+
+use crate::util::rng::Pcg;
+
+/// Failed attempts are capped so a pathological drop probability cannot
+/// stall virtual time forever (2⁻⁶⁴-grade improbable at sane `drop_p`).
+const MAX_ATTEMPTS: u32 = 64;
+
+/// Outcome of transmitting one message over a directed edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transmission {
+    /// Virtual nanoseconds the directed channel is busy (serialization
+    /// of every attempt plus retransmit timeouts).  The engine starts
+    /// the next message on this edge only after this one's occupancy.
+    pub occupancy_ns: u64,
+    /// Propagation delay between the final serialization and delivery.
+    pub latency_ns: u64,
+    /// Total transmission attempts (1 = no drops).
+    pub attempts: u32,
+}
+
+impl Transmission {
+    /// Send-to-delivery time when the channel is free at send time.
+    pub fn delay_ns(&self) -> u64 {
+        self.occupancy_ns.saturating_add(self.latency_ns)
+    }
+
+    /// Extra wire bytes burned beyond the first copy of a `payload`-byte
+    /// message.
+    pub fn retransmit_bytes(&self, payload: usize) -> u64 {
+        (self.attempts as u64 - 1) * payload as u64
+    }
+}
+
+/// A link model maps (message size, randomness) to a transmission
+/// outcome.  Implementations must be deterministic given the RNG state.
+pub trait LinkModel: Send + Sync {
+    fn name(&self) -> String;
+
+    fn transmit(&self, bytes: usize, rng: &mut Pcg) -> Transmission;
+}
+
+/// Zero-latency, lossless: the threaded bus's semantics in virtual time.
+#[derive(Debug, Clone, Copy)]
+pub struct IdealLink;
+
+impl LinkModel for IdealLink {
+    fn name(&self) -> String {
+        "ideal".to_string()
+    }
+
+    fn transmit(&self, _bytes: usize, _rng: &mut Pcg) -> Transmission {
+        Transmission {
+            occupancy_ns: 0,
+            latency_ns: 0,
+            attempts: 1,
+        }
+    }
+}
+
+/// Fixed propagation delay, lossless, infinite bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct ConstantLatency {
+    pub latency_ns: u64,
+}
+
+impl LinkModel for ConstantLatency {
+    fn name(&self) -> String {
+        format!("constant({}us)", self.latency_ns / 1_000)
+    }
+
+    fn transmit(&self, _bytes: usize, _rng: &mut Pcg) -> Transmission {
+        Transmission {
+            occupancy_ns: 0,
+            latency_ns: self.latency_ns,
+            attempts: 1,
+        }
+    }
+}
+
+fn serialization_ns(bytes: usize, bytes_per_sec: f64) -> u64 {
+    debug_assert!(bytes_per_sec > 0.0, "bandwidth must be positive");
+    (bytes as f64 * 1e9 / bytes_per_sec) as u64
+}
+
+/// Latency plus bandwidth-proportional serialization delay.
+#[derive(Debug, Clone, Copy)]
+pub struct BandwidthLink {
+    pub latency_ns: u64,
+    pub bytes_per_sec: f64,
+}
+
+impl LinkModel for BandwidthLink {
+    fn name(&self) -> String {
+        format!(
+            "bw({}us,{:.0}Mbit/s)",
+            self.latency_ns / 1_000,
+            self.bytes_per_sec * 8.0 / 1e6
+        )
+    }
+
+    fn transmit(&self, bytes: usize, _rng: &mut Pcg) -> Transmission {
+        Transmission {
+            occupancy_ns: serialization_ns(bytes, self.bytes_per_sec),
+            latency_ns: self.latency_ns,
+            attempts: 1,
+        }
+    }
+}
+
+/// Bandwidth link with i.i.d. per-message drop probability and
+/// stop-and-wait retransmission.
+#[derive(Debug, Clone, Copy)]
+pub struct LossyLink {
+    pub latency_ns: u64,
+    pub bytes_per_sec: f64,
+    /// Probability that one transmission attempt is lost.
+    pub drop_p: f64,
+}
+
+impl LinkModel for LossyLink {
+    fn name(&self) -> String {
+        format!(
+            "lossy({}us,{:.0}Mbit/s,p={})",
+            self.latency_ns / 1_000,
+            self.bytes_per_sec * 8.0 / 1e6,
+            self.drop_p
+        )
+    }
+
+    fn transmit(&self, bytes: usize, rng: &mut Pcg) -> Transmission {
+        debug_assert!(
+            (0.0..1.0).contains(&self.drop_p),
+            "drop_p in [0, 1) — validated at LinkSpec construction"
+        );
+        let mut attempts = 1u32;
+        while attempts < MAX_ATTEMPTS && rng.bernoulli(self.drop_p) {
+            attempts += 1;
+        }
+        let ser = serialization_ns(bytes, self.bytes_per_sec);
+        // Every failed attempt holds the channel for a serialization
+        // plus one latency's worth of timeout before the retry.
+        Transmission {
+            occupancy_ns: (ser + self.latency_ns) * (attempts as u64 - 1) + ser,
+            latency_ns: self.latency_ns,
+            attempts,
+        }
+    }
+}
+
+/// Declarative, `Clone`/`Debug`-able link selection that lives inside
+/// `ExperimentSpec` (trait objects would poison the spec's derives).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LinkSpec {
+    Ideal,
+    Constant {
+        latency_us: u64,
+    },
+    Bandwidth {
+        latency_us: u64,
+        mbit_per_sec: f64,
+    },
+    Lossy {
+        latency_us: u64,
+        mbit_per_sec: f64,
+        drop_p: f64,
+    },
+}
+
+impl LinkSpec {
+    /// Validate the parameters (positive rates, `drop_p ∈ [0, 1)`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            LinkSpec::Ideal | LinkSpec::Constant { .. } => Ok(()),
+            LinkSpec::Bandwidth { mbit_per_sec, .. } => {
+                anyhow::ensure!(
+                    mbit_per_sec > 0.0 && mbit_per_sec.is_finite(),
+                    "link bandwidth must be positive, got {mbit_per_sec}"
+                );
+                Ok(())
+            }
+            LinkSpec::Lossy { mbit_per_sec, drop_p, .. } => {
+                anyhow::ensure!(
+                    mbit_per_sec > 0.0 && mbit_per_sec.is_finite(),
+                    "link bandwidth must be positive, got {mbit_per_sec}"
+                );
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&drop_p),
+                    "drop probability must be in [0, 1), got {drop_p}"
+                );
+                Ok(())
+            }
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn LinkModel> {
+        match *self {
+            LinkSpec::Ideal => Box::new(IdealLink),
+            LinkSpec::Constant { latency_us } => Box::new(ConstantLatency {
+                latency_ns: latency_us * 1_000,
+            }),
+            LinkSpec::Bandwidth { latency_us, mbit_per_sec } => {
+                Box::new(BandwidthLink {
+                    latency_ns: latency_us * 1_000,
+                    bytes_per_sec: mbit_per_sec * 1e6 / 8.0,
+                })
+            }
+            LinkSpec::Lossy { latency_us, mbit_per_sec, drop_p } => {
+                Box::new(LossyLink {
+                    latency_ns: latency_us * 1_000,
+                    bytes_per_sec: mbit_per_sec * 1e6 / 8.0,
+                    drop_p,
+                })
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.build().name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_free() {
+        let mut rng = Pcg::new(1);
+        let t = IdealLink.transmit(1_000_000, &mut rng);
+        assert_eq!(t.delay_ns(), 0);
+        assert_eq!(t.attempts, 1);
+        assert_eq!(t.retransmit_bytes(1_000_000), 0);
+    }
+
+    #[test]
+    fn bandwidth_serialization_math() {
+        // 1 MB at 8 Mbit/s = 1 MB at 1 MB/s = 1 second of occupancy
+        // plus the propagation latency.
+        let link = BandwidthLink { latency_ns: 5_000, bytes_per_sec: 1e6 };
+        let mut rng = Pcg::new(2);
+        let t = link.transmit(1_000_000, &mut rng);
+        assert_eq!(t.occupancy_ns, 1_000_000_000);
+        assert_eq!(t.latency_ns, 5_000);
+        assert_eq!(t.delay_ns(), 5_000 + 1_000_000_000);
+        // Serialization scales linearly with size.
+        let t2 = link.transmit(500_000, &mut rng);
+        assert_eq!(t2.occupancy_ns, 500_000_000);
+    }
+
+    #[test]
+    fn lossy_retransmits_and_is_deterministic() {
+        let link = LossyLink {
+            latency_ns: 1_000,
+            bytes_per_sec: 1e9,
+            drop_p: 0.5,
+        };
+        let total_attempts = |seed: u64| -> u32 {
+            let mut rng = Pcg::new(seed);
+            (0..200).map(|_| link.transmit(100, &mut rng).attempts).sum()
+        };
+        // Deterministic given the seed.
+        assert_eq!(total_attempts(7), total_attempts(7));
+        // With p=0.5 over 200 messages, mean attempts ≈ 2: retransmits
+        // must actually happen.
+        assert!(total_attempts(7) > 250);
+        // 1000 B at 1 GB/s serializes in 1000 ns; every retry burns a
+        // serialization + timeout slot, so total delay is
+        // attempts x (ser + latency) = attempts x 2000 ns.
+        let mut rng = Pcg::new(9);
+        for _ in 0..50 {
+            let t = link.transmit(1_000, &mut rng);
+            assert_eq!(t.delay_ns(), 2_000 * t.attempts as u64);
+            assert_eq!(t.latency_ns, 1_000);
+        }
+    }
+
+    #[test]
+    fn lossless_models_never_retransmit() {
+        let mut rng = Pcg::new(3);
+        for _ in 0..100 {
+            assert_eq!(IdealLink.transmit(64, &mut rng).attempts, 1);
+            assert_eq!(
+                ConstantLatency { latency_ns: 10 }.transmit(64, &mut rng).attempts,
+                1
+            );
+        }
+    }
+
+    #[test]
+    fn spec_builds_matching_models() {
+        assert_eq!(LinkSpec::Ideal.name(), "ideal");
+        let spec = LinkSpec::Lossy {
+            latency_us: 100,
+            mbit_per_sec: 80.0,
+            drop_p: 0.1,
+        };
+        assert!(spec.validate().is_ok());
+        let model = spec.build();
+        let mut rng = Pcg::new(4);
+        // 80 Mbit/s = 10 MB/s: 10_000 bytes serialize in 1 ms.
+        let t = model.transmit(10_000, &mut rng);
+        assert!(t.delay_ns() >= 100_000 + 1_000_000);
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        assert!(LinkSpec::Lossy {
+            latency_us: 0,
+            mbit_per_sec: 10.0,
+            drop_p: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(LinkSpec::Lossy {
+            latency_us: 0,
+            mbit_per_sec: 10.0,
+            drop_p: -0.1
+        }
+        .validate()
+        .is_err());
+        assert!(LinkSpec::Bandwidth {
+            latency_us: 0,
+            mbit_per_sec: 0.0
+        }
+        .validate()
+        .is_err());
+        assert!(LinkSpec::Ideal.validate().is_ok());
+    }
+}

@@ -1,0 +1,790 @@
+//! Event-driven virtual-time network simulator — the crate's second
+//! execution engine.
+//!
+//! The threaded coordinator (one OS thread per node, blocking channels)
+//! models a perfect network: zero latency, lossless, and it cannot
+//! scale past a few dozen nodes or report anything but byte counts.
+//! This engine replaces threads with poll-driven state machines
+//! ([`NodeStateMachine`](crate::algorithms::NodeStateMachine)) scheduled
+//! off a binary-heap event queue keyed by **virtual nanoseconds**:
+//!
+//! * one thread simulates 512+ nodes (the scale lever),
+//! * no thread spawn/park overhead in benches (the speed lever),
+//! * messages travel through pluggable [`LinkModel`]s — constant
+//!   latency, bandwidth-proportional serialization, i.i.d. drop with
+//!   retransmit byte accounting — plus per-node straggler slowdowns and
+//!   scheduled edge outages
+//!   ([`OutageSchedule`](crate::graph::OutageSchedule)), so
+//!   *time-to-accuracy* under imperfect networks becomes measurable
+//!   (the scenario lever).
+//!
+//! ## Determinism
+//!
+//! Everything is single-threaded and seeded: events tie-break on a
+//! monotone sequence number, link randomness comes from one derived
+//! [`Pcg`] consumed in event order, and per-directed-edge delivery is
+//! clamped FIFO.  Same seed ⇒ bit-identical
+//! [`Report`](crate::coordinator::Report) — the property the replay
+//! tests pin, and what makes simulator bugs reproducible from a single
+//! `u64`.
+//!
+//! ## Local compute
+//!
+//! The numerics of the K local steps run through a [`LocalUpdate`]
+//! backend: the PJRT CNN runtime when AOT artifacts exist (see
+//! `coordinator::run_with_engine`), or the artifact-free
+//! [`SoftmaxLocal`] otherwise — which is how CI exercises 512-node
+//! rings with zero Python or XLA in the loop.  Virtual compute time is
+//! `compute_ns_per_step × K × straggler_factor`; evaluation is timed at
+//! zero virtual cost (it is reporting, not protocol).
+
+pub mod link;
+pub mod softmax;
+
+pub use link::{
+    BandwidthLink, ConstantLatency, IdealLink, LinkModel, LinkSpec,
+    LossyLink, Transmission,
+};
+pub use softmax::SoftmaxLocal;
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::algorithms::NodeStateMachine;
+use crate::comm::{Envelope, Meter, Msg, Outbox};
+use crate::graph::{Graph, OutageSchedule};
+use crate::metrics::{EpochRecord, History, Mean};
+use crate::util::rng::{streams, Pcg};
+
+/// Scenario knobs for one simulated run.  Lives inside
+/// `ExperimentSpec` (via `ExecMode::Simulated`), so it stays
+/// `Clone + Debug`.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub link: LinkSpec,
+    /// Virtual nanoseconds one local step costs on a nominal node.
+    pub compute_ns_per_step: u64,
+    /// Per-node compute slowdown factors `(node, factor)`; factor 2.0
+    /// means the node computes at half speed.  Unlisted nodes run at 1.0.
+    pub stragglers: Vec<(usize, f64)>,
+    /// Scheduled edge-down windows (time-varying topology).
+    pub outages: OutageSchedule,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            link: LinkSpec::Ideal,
+            compute_ns_per_step: 1_000_000, // 1 ms per local step
+            stragglers: Vec::new(),
+            outages: OutageSchedule::default(),
+        }
+    }
+}
+
+/// Round/eval bookkeeping shared by both execution engines.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub epochs: usize,
+    pub rounds_per_epoch: usize,
+    /// K — local steps per round (used for virtual compute time).
+    pub local_steps: usize,
+    /// `last round index of epoch -> epoch`, for epochs that evaluate.
+    pub eval_rounds: BTreeMap<usize, usize>,
+}
+
+impl Schedule {
+    pub fn new(epochs: usize, rounds_per_epoch: usize, local_steps: usize,
+               eval_every: usize) -> Schedule {
+        let eval_every = eval_every.max(1);
+        let eval_rounds = (1..=epochs)
+            .filter(|e| e % eval_every == 0 || *e == epochs)
+            .map(|e| (e * rounds_per_epoch - 1, e))
+            .collect();
+        Schedule {
+            epochs,
+            rounds_per_epoch,
+            local_steps,
+            eval_rounds,
+        }
+    }
+
+    pub fn total_rounds(&self) -> usize {
+        self.epochs * self.rounds_per_epoch
+    }
+}
+
+/// The numerics of the K local steps between exchanges, behind a trait
+/// so the engine is agnostic to PJRT vs native backends.
+pub trait LocalUpdate: Send {
+    /// Run the K local steps preceding exchange round `round`, mutating
+    /// `w` in place.  Returns the mean train loss over the steps.
+    fn local_round(&mut self, round: usize, w: &mut [f32], zsum: &[f32],
+                   alpha_deg: f32) -> Result<f64>;
+
+    /// Full test evaluation: `(accuracy, mean loss)`.
+    fn evaluate(&mut self, w: &[f32]) -> Result<(f64, f64)>;
+}
+
+/// No-op local model for exchange-only simulations (protocol tests and
+/// byte-accounting equivalence against the threaded bus).
+pub struct NullLocal;
+
+impl LocalUpdate for NullLocal {
+    fn local_round(&mut self, _round: usize, _w: &mut [f32], _zsum: &[f32],
+                   _alpha_deg: f32) -> Result<f64> {
+        Ok(0.0)
+    }
+
+    fn evaluate(&mut self, _w: &[f32]) -> Result<(f64, f64)> {
+        Ok((0.0, 0.0))
+    }
+}
+
+/// One node handed to [`simulate`]: protocol + local numerics + initial
+/// parameters.
+pub struct NodeSetup {
+    pub machine: Box<dyn NodeStateMachine>,
+    pub local: Box<dyn LocalUpdate>,
+    pub w: Vec<f32>,
+}
+
+/// What a simulated run produces.
+pub struct SimOutcome {
+    pub history: History,
+    /// Virtual time at which the last event fired.
+    pub vtime_ns: u64,
+    pub meter: Arc<Meter>,
+    /// Final per-node parameters.
+    pub w: Vec<Vec<f32>>,
+}
+
+// ---------------------------------------------------------------------
+// Event queue
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+enum EventKind {
+    /// Node finished its K local steps and enters the exchange phase.
+    ComputeDone { node: usize },
+    /// A message reaches its destination.
+    Deliver { env: Envelope },
+}
+
+#[derive(Debug)]
+struct Event {
+    t_ns: u64,
+    /// Monotone tie-breaker: equal-time events fire in schedule order,
+    /// which both guarantees determinism and per-edge FIFO.
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_ns == other.t_ns && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.t_ns
+            .cmp(&other.t_ns)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap wrapper (BinaryHeap is a max-heap).
+struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<Event>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn new() -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    fn push(&mut self, t_ns: u64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse(Event {
+            t_ns,
+            seq: self.seq,
+            kind,
+        }));
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|std::cmp::Reverse(e)| e)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------
+
+/// Message transport: meters payloads, draws link outcomes, queues
+/// serialization per directed edge (a serial link sends one message at
+/// a time — back-to-back, never in parallel), enforces FIFO delivery,
+/// and schedules `Deliver` events.
+struct Courier<'a> {
+    graph: &'a Graph,
+    outages: &'a OutageSchedule,
+    link: Box<dyn LinkModel>,
+    link_rng: Pcg,
+    meter: &'a Meter,
+    queue: EventQueue,
+    /// When each directed edge finishes serializing its last queued
+    /// message — the earliest the next one may start.
+    busy_until: BTreeMap<(usize, usize), u64>,
+    /// Last scheduled arrival per directed edge — delivery never
+    /// reorders within an edge (TCP-like semantics the protocols rely
+    /// on).  With per-edge-constant latency this follows from the
+    /// departure queue already; kept as a defensive clamp.
+    last_arrival: BTreeMap<(usize, usize), u64>,
+}
+
+impl Courier<'_> {
+    fn send(&mut self, src: usize, dst: usize, round: usize, msg: Msg,
+            now: u64) -> Result<()> {
+        let edge = self
+            .graph
+            .edge_index(src, dst)
+            .ok_or_else(|| anyhow!("sim: ({src}, {dst}) is not an edge"))?;
+        let bytes = msg.wire_bytes();
+        self.meter.record_send(src, bytes);
+        let tx = self.link.transmit(bytes, &mut self.link_rng);
+        if tx.attempts > 1 {
+            self.meter.record_retransmit(src, tx.retransmit_bytes(bytes));
+        }
+        // Serialization starts when the edge is up AND free: a down
+        // edge holds the message until the outage window ends, and a
+        // busy edge queues it behind the previous message.
+        let start = self
+            .outages
+            .next_up(edge, now)
+            .max(*self.busy_until.get(&(src, dst)).unwrap_or(&0));
+        let departure = start.saturating_add(tx.occupancy_ns);
+        self.busy_until.insert((src, dst), departure);
+        let mut arrival = departure.saturating_add(tx.latency_ns);
+        let last = self.last_arrival.entry((src, dst)).or_insert(0);
+        if arrival < *last {
+            arrival = *last;
+        }
+        *last = arrival;
+        self.queue.push(
+            arrival,
+            EventKind::Deliver {
+                env: Envelope {
+                    src,
+                    dst,
+                    round,
+                    payload: msg,
+                },
+            },
+        );
+        Ok(())
+    }
+}
+
+struct NodeRt {
+    machine: Box<dyn NodeStateMachine>,
+    local: Box<dyn LocalUpdate>,
+    w: Vec<f32>,
+    round: usize,
+    exchanging: bool,
+    /// Per-source FIFO buffers for messages the machine is not ready
+    /// for yet (future rounds, or arrivals during local compute).
+    inbox: BTreeMap<usize, VecDeque<Envelope>>,
+    train_loss: Mean,
+    done: bool,
+}
+
+struct World<'a> {
+    sched: &'a Schedule,
+    rt: Vec<NodeRt>,
+    courier: Courier<'a>,
+    /// Per-epoch eval slots, filled as nodes reach the epoch boundary.
+    evals: BTreeMap<usize, Vec<Option<(f64, f64, f64)>>>,
+    history: History,
+    compute_ns: Vec<u64>,
+    zeros: Vec<f32>,
+    finished: usize,
+    n: usize,
+    total_rounds: usize,
+    verbose: bool,
+}
+
+impl World<'_> {
+    fn on_compute_done(&mut self, i: usize, now: u64) -> Result<()> {
+        let round;
+        let outv: Vec<(usize, Msg)>;
+        {
+            let nrt = &mut self.rt[i];
+            round = nrt.round;
+            let alpha_deg = nrt.machine.alpha_deg();
+            let loss = match nrt.machine.zsum() {
+                Some(z) => {
+                    nrt.local.local_round(round, &mut nrt.w, z, alpha_deg)?
+                }
+                None => nrt.local.local_round(round, &mut nrt.w, &self.zeros,
+                                              alpha_deg)?,
+            };
+            nrt.train_loss.add(loss);
+            let mut out = Outbox::new();
+            nrt.machine.round_begin(round, &mut nrt.w, &mut out)?;
+            nrt.exchanging = true;
+            outv = out.drain().collect();
+        }
+        for (to, msg) in outv {
+            self.courier.send(i, to, round, msg, now)?;
+        }
+        // Degenerate rounds (SGD, degree 0) complete without traffic;
+        // otherwise drain anything that arrived while computing.
+        if self.rt[i].machine.round_complete() {
+            self.finish_round(i, now)?;
+            Ok(())
+        } else {
+            self.pump(i, now)
+        }
+    }
+
+    fn on_deliver(&mut self, env: Envelope, now: u64) -> Result<()> {
+        let dst = env.dst;
+        ensure!(dst < self.rt.len(), "sim: delivery to unknown node {dst}");
+        self.rt[dst].inbox.entry(env.src).or_default().push_back(env);
+        if self.rt[dst].exchanging {
+            self.pump(dst, now)?;
+        }
+        Ok(())
+    }
+
+    /// Feed buffered messages for the node's current round into its
+    /// machine until the round completes or nothing is deliverable.
+    fn pump(&mut self, i: usize, now: u64) -> Result<()> {
+        loop {
+            if !self.rt[i].exchanging {
+                return Ok(());
+            }
+            let round = self.rt[i].round;
+            let mut found: Option<usize> = None;
+            for (&src, q) in self.rt[i].inbox.iter() {
+                if let Some(env) = q.front() {
+                    ensure!(
+                        env.round >= round,
+                        "sim: node {i} holds a stale round-{} message from \
+                         {src} while in round {round}",
+                        env.round
+                    );
+                    if env.round == round {
+                        found = Some(src);
+                        break;
+                    }
+                }
+            }
+            let Some(src) = found else { return Ok(()) };
+            let env = self.rt[i]
+                .inbox
+                .get_mut(&src)
+                .and_then(|q| q.pop_front())
+                .expect("front just observed");
+            let complete;
+            let outv: Vec<(usize, Msg)>;
+            {
+                let nrt = &mut self.rt[i];
+                let mut out = Outbox::new();
+                nrt.machine
+                    .on_message(round, src, env.payload, &mut nrt.w, &mut out)?;
+                complete = nrt.machine.round_complete();
+                outv = out.drain().collect();
+            }
+            for (to, msg) in outv {
+                self.courier.send(i, to, round, msg, now)?;
+            }
+            if complete {
+                self.finish_round(i, now)?;
+            }
+        }
+    }
+
+    fn finish_round(&mut self, i: usize, now: u64) -> Result<()> {
+        let round;
+        {
+            let nrt = &mut self.rt[i];
+            round = nrt.round;
+            nrt.machine.round_end(round, &mut nrt.w)?;
+            nrt.exchanging = false;
+        }
+        if let Some(&epoch) = self.sched.eval_rounds.get(&round) {
+            let (acc, loss) = {
+                let nrt = &mut self.rt[i];
+                nrt.local.evaluate(&nrt.w)?
+            };
+            let tl = self.rt[i].train_loss.take();
+            let n = self.n;
+            let full = {
+                let slots = self
+                    .evals
+                    .entry(epoch)
+                    .or_insert_with(|| vec![None; n]);
+                ensure!(slots[i].is_none(), "node {i} evaluated epoch {epoch} twice");
+                slots[i] = Some((acc, loss, tl));
+                slots.iter().all(Option::is_some)
+            };
+            if full {
+                let slots = self.evals.remove(&epoch).expect("just filled");
+                let (mut a, mut l, mut t) =
+                    (Mean::default(), Mean::default(), Mean::default());
+                for s in slots.into_iter().flatten() {
+                    a.add(s.0);
+                    l.add(s.1);
+                    t.add(s.2);
+                }
+                let rec = EpochRecord {
+                    epoch,
+                    mean_accuracy: a.take(),
+                    mean_loss: l.take(),
+                    train_loss: t.take(),
+                    cum_bytes_per_node: self.courier.meter.mean_bytes_per_node(),
+                    sim_time_secs: now as f64 / 1e9,
+                };
+                if self.verbose {
+                    println!(
+                        "[sim] epoch {:>4}: acc {:.3} loss {:.3} train {:.3} \
+                         sent/node {:.0} KB  t={:.3}s",
+                        rec.epoch,
+                        rec.mean_accuracy,
+                        rec.mean_loss,
+                        rec.train_loss,
+                        rec.cum_bytes_per_node / 1024.0,
+                        rec.sim_time_secs
+                    );
+                }
+                self.history.push(rec);
+            }
+        }
+        let done = {
+            let nrt = &mut self.rt[i];
+            nrt.round += 1;
+            nrt.round >= self.total_rounds
+        };
+        if done {
+            self.rt[i].done = true;
+            self.finished += 1;
+        } else {
+            let dt = self.compute_ns[i];
+            self.courier
+                .queue
+                .push(now.saturating_add(dt), EventKind::ComputeDone { node: i });
+        }
+        Ok(())
+    }
+}
+
+/// Run `sched.total_rounds()` rounds of the given per-node protocols in
+/// virtual time.  Returns the aggregated history, final parameters, and
+/// the byte/retransmit/virtual-time meter.
+pub fn simulate(
+    graph: &Graph,
+    cfg: &SimConfig,
+    seed: u64,
+    sched: &Schedule,
+    nodes: Vec<NodeSetup>,
+    verbose: bool,
+) -> Result<SimOutcome> {
+    let n = graph.n();
+    ensure!(n > 0, "sim: empty graph");
+    ensure!(
+        nodes.len() == n,
+        "sim: {} node setups for a {n}-node graph",
+        nodes.len()
+    );
+    cfg.link.validate()?;
+    let total_rounds = sched.total_rounds();
+    let meter = Meter::new(n);
+    if total_rounds == 0 {
+        let w = nodes.into_iter().map(|s| s.w).collect();
+        return Ok(SimOutcome {
+            history: History::default(),
+            vtime_ns: 0,
+            meter,
+            w,
+        });
+    }
+
+    let d = nodes.iter().map(|s| s.w.len()).max().unwrap_or(0);
+    let mut compute_ns =
+        vec![cfg.compute_ns_per_step.saturating_mul(sched.local_steps as u64); n];
+    for &(i, f) in &cfg.stragglers {
+        ensure!(i < n, "sim: straggler index {i} out of range");
+        ensure!(f > 0.0, "sim: straggler factor must be positive");
+        compute_ns[i] = (compute_ns[i] as f64 * f) as u64;
+    }
+
+    let mut world = World {
+        sched,
+        rt: nodes
+            .into_iter()
+            .map(|s| NodeRt {
+                machine: s.machine,
+                local: s.local,
+                w: s.w,
+                round: 0,
+                exchanging: false,
+                inbox: BTreeMap::new(),
+                train_loss: Mean::default(),
+                done: false,
+            })
+            .collect(),
+        courier: Courier {
+            graph,
+            outages: &cfg.outages,
+            link: cfg.link.build(),
+            link_rng: Pcg::derive(seed, &[streams::LINK]),
+            meter: &meter,
+            queue: EventQueue::new(),
+            busy_until: BTreeMap::new(),
+            last_arrival: BTreeMap::new(),
+        },
+        evals: BTreeMap::new(),
+        history: History::default(),
+        compute_ns,
+        zeros: vec![0.0; d],
+        finished: 0,
+        n,
+        total_rounds,
+        verbose,
+    };
+
+    // Every node starts its round-0 local compute at t = 0.
+    for i in 0..n {
+        let dt = world.compute_ns[i];
+        world.courier.queue.push(dt, EventKind::ComputeDone { node: i });
+    }
+
+    let mut final_t = 0u64;
+    while let Some(ev) = world.courier.queue.pop() {
+        final_t = ev.t_ns;
+        match ev.kind {
+            EventKind::ComputeDone { node } => {
+                world.on_compute_done(node, ev.t_ns)?
+            }
+            EventKind::Deliver { env } => world.on_deliver(env, ev.t_ns)?,
+        }
+    }
+    let stuck: Vec<(usize, usize, bool)> = world
+        .rt
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| !r.done)
+        .map(|(i, r)| (i, r.round, r.exchanging))
+        .take(8)
+        .collect();
+    ensure!(
+        world.finished == n,
+        "sim deadlock: {}/{} nodes finished; stuck (node, round, \
+         exchanging): {:?}",
+        world.finished,
+        n,
+        stuck
+    );
+    meter.advance_vtime_ns(final_t);
+    let World { rt, history, .. } = world;
+    let w = rt.into_iter().map(|r| r.w).collect();
+    Ok(SimOutcome {
+        history,
+        vtime_ns: meter.vtime_ns(),
+        meter,
+        w,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{build_machine, AlgorithmSpec, BuildCtx, DualPath};
+    use crate::model::DatasetManifest;
+
+    fn machine_setup(
+        graph: &Arc<Graph>,
+        alg: &AlgorithmSpec,
+        seed: u64,
+        rounds_per_epoch: usize,
+    ) -> Vec<NodeSetup> {
+        let ds = DatasetManifest::synthetic_linear("t", (2, 2, 1), 3, 2, 2);
+        (0..graph.n())
+            .map(|node| {
+                let ctx = BuildCtx {
+                    node,
+                    graph: Arc::clone(graph),
+                    manifest: ds.clone(),
+                    seed,
+                    eta: 0.05,
+                    local_steps: 1,
+                    rounds_per_epoch,
+                    dual_path: DualPath::Native,
+                    runtime: None,
+                };
+                let mut rng = Pcg::new(900 + node as u64);
+                let w = (0..ds.d_pad).map(|_| rng.normal_f32()).collect();
+                NodeSetup {
+                    machine: build_machine(alg, &ctx),
+                    local: Box::new(NullLocal),
+                    w,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn event_ordering_time_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(50, EventKind::ComputeDone { node: 5 });
+        q.push(10, EventKind::ComputeDone { node: 1 });
+        q.push(10, EventKind::ComputeDone { node: 2 });
+        let order: Vec<(u64, usize)> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::ComputeDone { node } => (e.t_ns, node),
+                _ => unreachable!(),
+            })
+            .collect();
+        // Time first; equal times in push (seq) order.
+        assert_eq!(order, vec![(10, 1), (10, 2), (50, 5)]);
+    }
+
+    #[test]
+    fn schedule_eval_rounds() {
+        let s = Schedule::new(7, 4, 5, 3);
+        assert_eq!(s.total_rounds(), 28);
+        // Epochs 3, 6, 7 evaluate, at the last round of each.
+        let expect: BTreeMap<usize, usize> =
+            [(11, 3), (23, 6), (27, 7)].into_iter().collect();
+        assert_eq!(s.eval_rounds, expect);
+        assert_eq!(s.local_steps, 5);
+    }
+
+    #[test]
+    fn two_node_exchange_virtual_clock() {
+        // chain(2), ECL dense, 1 round: local compute takes 1000 ns,
+        // the constant link 1 us, so the run ends at exactly 2000 ns.
+        let graph = Arc::new(Graph::chain(2));
+        let cfg = SimConfig {
+            link: LinkSpec::Constant { latency_us: 1 },
+            compute_ns_per_step: 1_000,
+            ..SimConfig::default()
+        };
+        let sched = Schedule::new(1, 1, 1, 1);
+        let alg = AlgorithmSpec::Ecl { theta: 1.0 };
+        let nodes = machine_setup(&graph, &alg, 7, 1);
+        let out = simulate(&graph, &cfg, 7, &sched, nodes, false).unwrap();
+        // sends fire at t=1000, arrive at t=2000.
+        assert_eq!(out.vtime_ns, 2_000);
+        // ECL dense: d floats both ways.
+        let d = DatasetManifest::synthetic_linear("t", (2, 2, 1), 3, 2, 2).d;
+        assert_eq!(out.meter.total_bytes() as usize, 2 * 4 * d);
+        assert_eq!(out.meter.total_retransmit_bytes(), 0);
+    }
+
+    #[test]
+    fn straggler_stretches_virtual_time() {
+        let graph = Arc::new(Graph::ring(4));
+        let sched = Schedule::new(2, 2, 1, 1);
+        let alg = AlgorithmSpec::DPsgd;
+        let base_cfg = SimConfig {
+            link: LinkSpec::Constant { latency_us: 1 },
+            compute_ns_per_step: 100_000,
+            ..SimConfig::default()
+        };
+        let slow_cfg = SimConfig {
+            stragglers: vec![(2, 8.0)],
+            ..base_cfg.clone()
+        };
+        let fast = simulate(&graph, &base_cfg, 3, &sched,
+                            machine_setup(&graph, &alg, 3, 2), false)
+            .unwrap();
+        let slow = simulate(&graph, &slow_cfg, 3, &sched,
+                            machine_setup(&graph, &alg, 3, 2), false)
+            .unwrap();
+        assert!(slow.vtime_ns > fast.vtime_ns * 4,
+                "straggler {} vs {}", slow.vtime_ns, fast.vtime_ns);
+        // Same traffic either way.
+        assert_eq!(slow.meter.total_bytes(), fast.meter.total_bytes());
+    }
+
+    #[test]
+    fn outage_holds_messages_until_edge_recovers() {
+        let graph = Arc::new(Graph::chain(2));
+        let sched = Schedule::new(1, 1, 1, 1);
+        let alg = AlgorithmSpec::Ecl { theta: 1.0 };
+        let mut outages = OutageSchedule::default();
+        // Edge 0 down from t=0 until t=5 ms: round-0 sends (at ~1 us)
+        // stall until the window ends.
+        outages.add(0, 0, 5_000_000);
+        let cfg = SimConfig {
+            link: LinkSpec::Constant { latency_us: 1 },
+            compute_ns_per_step: 1_000,
+            outages,
+            ..SimConfig::default()
+        };
+        let out = simulate(&graph, &cfg, 11, &sched,
+                           machine_setup(&graph, &alg, 11, 1), false)
+            .unwrap();
+        assert!(out.vtime_ns >= 5_000_000, "vtime {}", out.vtime_ns);
+        let no_outage = SimConfig {
+            link: LinkSpec::Constant { latency_us: 1 },
+            compute_ns_per_step: 1_000,
+            ..SimConfig::default()
+        };
+        let base = simulate(&graph, &no_outage, 11, &sched,
+                            machine_setup(&graph, &alg, 11, 1), false)
+            .unwrap();
+        assert!(base.vtime_ns < out.vtime_ns);
+    }
+
+    #[test]
+    fn replay_is_bit_identical() {
+        let graph = Arc::new(Graph::ring(5));
+        let sched = Schedule::new(2, 3, 2, 1);
+        let alg = AlgorithmSpec::CEcl {
+            k_frac: 0.4,
+            theta: 1.0,
+            dense_first_epoch: false,
+        };
+        let cfg = SimConfig {
+            link: LinkSpec::Lossy {
+                latency_us: 50,
+                mbit_per_sec: 100.0,
+                drop_p: 0.3,
+            },
+            ..SimConfig::default()
+        };
+        let a = simulate(&graph, &cfg, 21, &sched,
+                         machine_setup(&graph, &alg, 21, 3), false)
+            .unwrap();
+        let b = simulate(&graph, &cfg, 21, &sched,
+                         machine_setup(&graph, &alg, 21, 3), false)
+            .unwrap();
+        assert_eq!(a.vtime_ns, b.vtime_ns);
+        assert_eq!(a.meter.total_bytes(), b.meter.total_bytes());
+        assert_eq!(
+            a.meter.total_retransmit_bytes(),
+            b.meter.total_retransmit_bytes()
+        );
+        assert_eq!(a.w, b.w, "final parameters must replay bit-identically");
+        assert!(a.meter.total_retransmit_bytes() > 0, "p=0.3 must retransmit");
+    }
+}

@@ -167,6 +167,8 @@ pub mod streams {
     pub const POWER: u64 = 5;
     /// Heterogeneous class assignment.
     pub const PARTITION: u64 = 6;
+    /// Virtual-time link model (drop/retransmit draws).
+    pub const LINK: u64 = 7;
 }
 
 #[cfg(test)]

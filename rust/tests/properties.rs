@@ -2,15 +2,21 @@
 //! in-repo proptest substitute; each property runs across seeded random
 //! inputs with ramping sizes).
 
+use std::sync::Arc;
+
+use cecl::algorithms::{BuildCtx, CEclNode, DualPath, DualRule,
+                       NodeAlgorithm, NodeStateMachine};
+use cecl::comm::{build_bus, Msg, Outbox};
 use cecl::compress::{Compressor, CooVec, Identity, RandK, TopK};
 use cecl::data::{node_classes, Partition};
 use cecl::graph::Graph;
 use cecl::linalg::{Cholesky, Mat};
+use cecl::model::DatasetManifest;
 use cecl::prop_assert;
 use cecl::quadratic::{rate_bound, tau_threshold, theta_domain};
 use cecl::runtime::native;
 use cecl::util::prop::{check, Ctx};
-use cecl::util::rng::Pcg;
+use cecl::util::rng::{streams, Pcg};
 
 // ---------------------------------------------------------------------
 // Compression operators (Assumption 1)
@@ -170,6 +176,330 @@ fn prop_dual_update_dense_sparse_agree() {
                 "y mismatch at {i}"
             );
         }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// The poll-driven (round_begin / on_message / round_end) protocol path
+// ---------------------------------------------------------------------
+
+fn sm_manifest(input: (usize, usize, usize), classes: usize)
+               -> DatasetManifest {
+    DatasetManifest::synthetic_linear("p", input, classes, 2, 2)
+}
+
+fn sm_ctx(node: usize, graph: &Arc<Graph>, seed: u64,
+          manifest: DatasetManifest) -> BuildCtx {
+    BuildCtx {
+        node,
+        graph: Arc::clone(graph),
+        manifest,
+        seed,
+        eta: 0.05,
+        local_steps: 2,
+        rounds_per_epoch: 4,
+        dual_path: DualPath::Native,
+        runtime: None,
+    }
+}
+
+/// Drive one exchange round of every node by hand (single-threaded),
+/// delivering to each receiver in ascending sender order — the same
+/// order the blocking driver drains its neighbors in.  Returns total
+/// wire bytes.
+fn drive_round(nodes: &mut [CEclNode], ws: &mut [Vec<f32>],
+               round: usize) -> usize {
+    let n = nodes.len();
+    let mut queued: Vec<Vec<(usize, Msg)>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut out = Outbox::new();
+        NodeStateMachine::round_begin(&mut nodes[i], round, &mut ws[i],
+                                      &mut out)
+            .unwrap();
+        queued.push(out.drain().collect());
+    }
+    let mut bytes = 0;
+    for (src, msgs) in queued.into_iter().enumerate() {
+        for (to, msg) in msgs {
+            bytes += msg.wire_bytes();
+            let mut out = Outbox::new();
+            NodeStateMachine::on_message(&mut nodes[to], round, src, msg,
+                                         &mut ws[to], &mut out)
+                .unwrap();
+            assert!(out.is_empty(), "C-ECL is single-phase");
+        }
+    }
+    for i in 0..n {
+        assert!(nodes[i].round_complete());
+        NodeStateMachine::round_end(&mut nodes[i], round, &mut ws[i]).unwrap();
+    }
+    bytes
+}
+
+#[test]
+fn prop_state_machine_matches_blocking_exchange() {
+    // The two driving modes of the same protocol must produce
+    // bit-identical dual state, zsum, and wire bytes after several
+    // rounds — for compressed, dense, and naive-rule variants alike.
+    check("sm-vs-blocking", 12, 1, |ctx: &mut Ctx| {
+        let seed = ctx.rng.next_u64();
+        let k = 0.15 + 0.8 * ctx.rng.f64();
+        let theta = 0.3 + 0.7 * ctx.rng.f32();
+        let rule = if ctx.rng.bernoulli(0.25) {
+            DualRule::CompressY
+        } else {
+            DualRule::CompressDiff
+        };
+        let rounds = 3usize;
+        let graph = Arc::new(Graph::ring(3));
+        let manifest = sm_manifest((2, 2, 1), 3); // d = 15
+        let d = manifest.d_pad;
+        let make_nodes = || -> Vec<CEclNode> {
+            (0..3)
+                .map(|i| {
+                    CEclNode::new(
+                        &sm_ctx(i, &graph, seed, manifest.clone()),
+                        k,
+                        theta,
+                        0,
+                        rule,
+                    )
+                })
+                .collect()
+        };
+        let make_ws = || -> Vec<Vec<f32>> {
+            (0..3u64)
+                .map(|i| {
+                    let mut rng = Pcg::derive(seed, &[7777, i]);
+                    (0..d).map(|_| rng.normal_f32()).collect()
+                })
+                .collect()
+        };
+
+        // Blocking (threaded) reference.
+        let mut threaded = make_nodes();
+        let (comms, meter) = build_bus(&graph);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = threaded
+                .iter_mut()
+                .zip(comms)
+                .zip(make_ws())
+                .map(|((node, comm), mut w)| {
+                    s.spawn(move || {
+                        for round in 0..rounds {
+                            node.exchange(round, &mut w, &comm).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+
+        // Poll-driven form, driven by hand.
+        let mut polled = make_nodes();
+        let mut ws = make_ws();
+        let mut bytes = 0usize;
+        for round in 0..rounds {
+            bytes += drive_round(&mut polled, &mut ws, round);
+        }
+
+        prop_assert!(
+            bytes as u64 == meter.total_bytes(),
+            "wire bytes: polled {bytes} vs threaded {}",
+            meter.total_bytes()
+        );
+        for i in 0..3 {
+            prop_assert!(
+                threaded[i].dual_state() == polled[i].dual_state(),
+                "node {i}: dual state diverged (k={k}, theta={theta}, \
+                 rule={rule:?})"
+            );
+            let zt = NodeAlgorithm::zsum(&threaded[i]).unwrap();
+            let zp = NodeAlgorithm::zsum(&polled[i]).unwrap();
+            prop_assert!(zt == zp, "node {i}: zsum diverged");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_update_dense_sparse_agree_state_machine() {
+    // The wire-level form of `prop_dual_update_dense_sparse_agree`:
+    // through round_begin, the COO a node emits must equal the
+    // shared-seed mask gather of the dense y = z − 2αa·w (Eqs. 8–9
+    // linearity at the wire), and through on_message the z update must
+    // equal the fused native::dual_update_sparse kernel.
+    check("sm-dual-wire", 15, 1, |ctx: &mut Ctx| {
+        let seed = ctx.rng.next_u64();
+        let k = 0.2 + 0.6 * ctx.rng.f64();
+        let theta = 0.4 + 0.6 * ctx.rng.f32();
+        let graph = Arc::new(Graph::chain(2));
+        let manifest = sm_manifest((3, 3, 1), 4); // d = 40
+        let d = manifest.d_pad;
+        let mut nodes: Vec<CEclNode> = (0..2)
+            .map(|i| {
+                CEclNode::new(
+                    &sm_ctx(i, &graph, seed, manifest.clone()),
+                    k,
+                    theta,
+                    0,
+                    DualRule::CompressDiff,
+                )
+            })
+            .collect();
+        let mut ws: Vec<Vec<f32>> = (0..2u64)
+            .map(|i| {
+                let mut rng = Pcg::derive(seed, &[8888, i]);
+                (0..d).map(|_| rng.normal_f32()).collect()
+            })
+            .collect();
+        // Round 0 makes z nonzero; round 1 is the round under test.
+        drive_round(&mut nodes, &mut ws, 0);
+        let round = 1usize;
+        let z_before: Vec<Vec<Vec<f32>>> =
+            nodes.iter().map(|n| n.dual_state().to_vec()).collect();
+
+        // Collect round_begin output per node.
+        let mut sent: Vec<CooVec> = Vec::new(); // [from node 0, from node 1]
+        for i in 0..2 {
+            let mut out = Outbox::new();
+            NodeStateMachine::round_begin(&mut nodes[i], round, &mut ws[i],
+                                          &mut out)
+                .unwrap();
+            let msgs: Vec<(usize, Msg)> = out.drain().collect();
+            prop_assert!(msgs.len() == 1, "node {i}: one neighbor");
+            let (to, msg) = msgs.into_iter().next().unwrap();
+            prop_assert!(to == 1 - i, "node {i}: wrong dest");
+            sent.push(msg.into_sparse().unwrap());
+        }
+
+        let op = RandK::new(k);
+        for i in 0..2usize {
+            let to = 1 - i;
+            let coo = &sent[i];
+            // (a) the mask is the shared-seed ω for (edge 0, round,
+            // receiver=to) — never transmitted, re-derived here.
+            let mut rng = Pcg::derive(
+                seed,
+                &[streams::EDGE_MASK, 0, round as u64, to as u64],
+            );
+            let expect_mask = op.sample_mask(d, &mut rng);
+            prop_assert!(coo.idx == expect_mask, "node {i}: mask mismatch");
+            // (b) values equal the gather of the dense y (Eq. 8/9:
+            // comp is exactly linear for fixed ω).
+            let sign = graph.edge_sign(i, to);
+            let taa = 2.0 * nodes[i].alpha() * sign;
+            let y_dense: Vec<f32> = z_before[i][0]
+                .iter()
+                .zip(&ws[i])
+                .map(|(&zv, &wv)| zv - taa * wv)
+                .collect();
+            let expect_vals = CooVec::gather(&y_dense, &expect_mask);
+            prop_assert!(
+                coo.val == expect_vals.val,
+                "node {i}: wire values != dense-y gather"
+            );
+        }
+
+        // (c) receiving through on_message equals the fused sparse
+        // kernel applied to the pre-round state.
+        for i in 0..2usize {
+            let from = 1 - i;
+            let mut out = Outbox::new();
+            NodeStateMachine::on_message(
+                &mut nodes[i],
+                round,
+                from,
+                Msg::Sparse(sent[from].clone()),
+                &mut ws[i],
+                &mut out,
+            )
+            .unwrap();
+            NodeStateMachine::round_end(&mut nodes[i], round, &mut ws[i])
+                .unwrap();
+            let mut z_expect = z_before[i][0].clone();
+            let mut yvals = Vec::new();
+            native::dual_update_sparse(
+                &mut z_expect,
+                &ws[i],
+                &sent[from],
+                &[],
+                theta,
+                0.0,
+                &mut yvals,
+            );
+            prop_assert!(
+                nodes[i].dual_state()[0] == z_expect,
+                "node {i}: on_message != dual_update_sparse"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_contraction_eq7_state_machine() {
+    // Eq. (7) measured on actual wire traffic: the energy a C-ECL node
+    // ships per round is a τ = k fraction of the dense y's energy, in
+    // expectation over the shared-seed masks.
+    check("sm-wire-eq7", 8, 1, |ctx: &mut Ctx| {
+        let seed = ctx.rng.next_u64();
+        let k = 0.2 + 0.5 * ctx.rng.f64();
+        let graph = Arc::new(Graph::chain(2));
+        let manifest = sm_manifest((4, 4, 1), 8); // d = 136
+        let d = manifest.d_pad;
+        let mut nodes: Vec<CEclNode> = (0..2)
+            .map(|i| {
+                CEclNode::new(
+                    &sm_ctx(i, &graph, seed, manifest.clone()),
+                    k,
+                    1.0,
+                    0,
+                    DualRule::CompressDiff,
+                )
+            })
+            .collect();
+        let mut ws: Vec<Vec<f32>> = (0..2u64)
+            .map(|i| {
+                let mut rng = Pcg::derive(seed, &[9999, i]);
+                (0..d).map(|_| rng.normal_f32()).collect()
+            })
+            .collect();
+        let rounds = 40usize;
+        let mut kept = 0.0f64;
+        let mut total = 0.0f64;
+        for round in 0..rounds {
+            // Inspect what each node is about to ship.
+            for i in 0..2usize {
+                let to = 1 - i;
+                let sign = graph.edge_sign(i, to);
+                let taa = 2.0 * nodes[i].alpha() * sign;
+                let y_dense: Vec<f32> = nodes[i].dual_state()[0]
+                    .iter()
+                    .zip(&ws[i])
+                    .map(|(&zv, &wv)| zv - taa * wv)
+                    .collect();
+                total += y_dense
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum::<f64>();
+                let mut rng = Pcg::derive(
+                    seed,
+                    &[streams::EDGE_MASK, 0, round as u64, to as u64],
+                );
+                let mask = RandK::new(k).sample_mask(d, &mut rng);
+                kept += CooVec::gather(&y_dense, &mask).norm2_sq();
+            }
+            drive_round(&mut nodes, &mut ws, round);
+        }
+        let measured = kept / total;
+        prop_assert!(
+            (measured - k).abs() < 0.12,
+            "kept energy fraction {measured} vs tau=k={k}"
+        );
         Ok(())
     });
 }

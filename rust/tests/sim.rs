@@ -1,0 +1,397 @@
+//! Virtual-time engine test suite — all artifact-free:
+//!
+//! * deterministic replay: same seed ⇒ bit-identical `Report` (bytes,
+//!   retransmits, virtual clock, every history record) for every
+//!   algorithm on two different link models;
+//! * zero-latency lossless link reproduces the threaded bus's byte
+//!   accounting exactly for C-ECL / ECL / D-PSGD on ring and
+//!   fully-connected graphs;
+//! * drop-with-retransmit never under-counts meter bytes versus the
+//!   lossless run;
+//! * the acceptance run: a 512-node ring C-ECL experiment completes in
+//!   one process and reports simulated time-to-accuracy.
+
+use std::sync::Arc;
+
+use cecl::algorithms::{build_machine, build_node, AlgorithmSpec, BuildCtx,
+                       DualPath, NodeAlgorithm};
+use cecl::comm::build_bus;
+use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
+use cecl::graph::Graph;
+use cecl::model::DatasetManifest;
+use cecl::sim::{simulate, LinkSpec, NodeSetup, NullLocal, Schedule, SimConfig};
+use cecl::util::rng::Pcg;
+
+fn exchange_manifest() -> DatasetManifest {
+    // d = (2*2*1 + 1) * 3 = 15 parameters.
+    DatasetManifest::synthetic_linear("x", (2, 2, 1), 3, 2, 2)
+}
+
+fn ctx(node: usize, graph: &Arc<Graph>, seed: u64, rounds: usize) -> BuildCtx {
+    BuildCtx {
+        node,
+        graph: Arc::clone(graph),
+        manifest: exchange_manifest(),
+        seed,
+        eta: 0.05,
+        local_steps: 2,
+        rounds_per_epoch: rounds,
+        dual_path: DualPath::Native,
+        runtime: None,
+    }
+}
+
+fn init_w(node: usize) -> Vec<f32> {
+    let mut rng = Pcg::new(500 + node as u64);
+    (0..exchange_manifest().d_pad)
+        .map(|_| rng.normal_f32())
+        .collect()
+}
+
+/// Per-node bytes + message count after `rounds` exchange-only rounds on
+/// the threaded bus.
+fn threaded_bytes(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
+                  rounds: usize) -> (Vec<u64>, u64) {
+    let (comms, meter) = build_bus(graph);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(i, comm)| {
+                let graph = Arc::clone(graph);
+                let alg = alg.clone();
+                s.spawn(move || {
+                    let mut node: Box<dyn NodeAlgorithm> =
+                        build_node(&alg, &ctx(i, &graph, seed, rounds));
+                    let mut w = init_w(i);
+                    for round in 0..rounds {
+                        node.exchange(round, &mut w, &comm).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    (
+        (0..graph.n()).map(|i| meter.bytes_sent(i)).collect(),
+        meter.total_msgs(),
+    )
+}
+
+/// Same protocol through the virtual-time engine on the given link.
+fn simulated_bytes(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
+                   rounds: usize, link: LinkSpec) -> (Vec<u64>, u64, u64) {
+    // One round per "epoch" with an eval only at the very end keeps the
+    // schedule equivalent to the bare threaded loop above.
+    let sched = Schedule::new(rounds, 1, 2, rounds);
+    let setups: Vec<NodeSetup> = (0..graph.n())
+        .map(|i| NodeSetup {
+            machine: build_machine(alg, &ctx(i, graph, seed, rounds)),
+            local: Box::new(NullLocal),
+            w: init_w(i),
+        })
+        .collect();
+    let cfg = SimConfig { link, ..SimConfig::default() };
+    let out = simulate(graph, &cfg, seed, &sched, setups, false).unwrap();
+    (
+        (0..graph.n()).map(|i| out.meter.bytes_sent(i)).collect(),
+        out.meter.total_msgs(),
+        out.meter.total_retransmit_bytes(),
+    )
+}
+
+#[test]
+fn ideal_link_matches_threaded_bus_byte_for_byte() {
+    let algs = [
+        AlgorithmSpec::CEcl {
+            k_frac: 0.3,
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::DPsgd,
+    ];
+    for graph in [Arc::new(Graph::ring(5)), Arc::new(Graph::complete(4))] {
+        for alg in &algs {
+            let (bytes_t, msgs_t) = threaded_bytes(alg, &graph, 77, 3);
+            let (bytes_s, msgs_s, retrans) =
+                simulated_bytes(alg, &graph, 77, 3, LinkSpec::Ideal);
+            assert_eq!(
+                bytes_t, bytes_s,
+                "{} on {}-node graph: per-node bytes diverged",
+                alg.name(),
+                graph.n()
+            );
+            assert_eq!(msgs_t, msgs_s, "{}: message counts", alg.name());
+            assert_eq!(retrans, 0, "ideal link must not retransmit");
+        }
+    }
+}
+
+#[test]
+fn deterministic_replay_every_algorithm_two_link_models() {
+    let algs = [
+        AlgorithmSpec::Sgd,
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::Ecl { theta: 1.0 },
+        AlgorithmSpec::CEcl {
+            k_frac: 0.2,
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+        AlgorithmSpec::NaiveCEcl { k_frac: 0.2, theta: 1.0 },
+        AlgorithmSpec::PowerGossip { iters: 2 },
+    ];
+    let links = [
+        LinkSpec::Constant { latency_us: 200 },
+        LinkSpec::Lossy {
+            latency_us: 200,
+            mbit_per_sec: 50.0,
+            drop_p: 0.1,
+        },
+    ];
+    let graph = Graph::ring(4);
+    for alg in &algs {
+        for link in &links {
+            // SGD collapses to a single node; a straggler entry for
+            // node 1 would be out of range there.
+            let stragglers = if alg.is_decentralized() {
+                vec![(1, 2.0)]
+            } else {
+                Vec::new()
+            };
+            let spec = ExperimentSpec {
+                dataset: "tiny".into(),
+                algorithm: alg.clone(),
+                epochs: 2,
+                nodes: 4,
+                train_per_node: 20,
+                test_size: 40,
+                local_steps: 2,
+                eta: 0.1,
+                eval_every: 1,
+                seed: 9,
+                exec: ExecMode::Simulated(SimConfig {
+                    link: link.clone(),
+                    stragglers,
+                    ..SimConfig::default()
+                }),
+                ..Default::default()
+            };
+            let a = run_simulated_native(&spec, &graph).unwrap();
+            let b = run_simulated_native(&spec, &graph).unwrap();
+            let label = format!("{} / {}", alg.name(), link.name());
+            assert_eq!(
+                a.final_accuracy.to_bits(),
+                b.final_accuracy.to_bits(),
+                "{label}: accuracy"
+            );
+            assert_eq!(a.total_bytes, b.total_bytes, "{label}: bytes");
+            assert_eq!(
+                a.retransmit_bytes, b.retransmit_bytes,
+                "{label}: retransmits"
+            );
+            assert_eq!(a.sim_time_secs, b.sim_time_secs, "{label}: clock");
+            assert_eq!(
+                a.history.records, b.history.records,
+                "{label}: history"
+            );
+            assert_eq!(a.history.records.len(), 2, "{label}: eval points");
+            assert!(a.sim_time_secs.unwrap() > 0.0, "{label}: clock ran");
+        }
+    }
+}
+
+#[test]
+fn lossy_link_never_undercounts_bytes() {
+    let graph = Graph::ring(6);
+    let base = ExperimentSpec {
+        dataset: "tiny".into(),
+        algorithm: AlgorithmSpec::CEcl {
+            k_frac: 0.3,
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+        epochs: 3,
+        nodes: 6,
+        train_per_node: 20,
+        test_size: 20,
+        local_steps: 2,
+        eta: 0.1,
+        eval_every: 3,
+        seed: 13,
+        ..Default::default()
+    };
+    let ideal = {
+        let mut s = base.clone();
+        s.exec = ExecMode::Simulated(SimConfig {
+            link: LinkSpec::Bandwidth {
+                latency_us: 100,
+                mbit_per_sec: 50.0,
+            },
+            ..SimConfig::default()
+        });
+        run_simulated_native(&s, &graph).unwrap()
+    };
+    let lossy = {
+        let mut s = base.clone();
+        s.exec = ExecMode::Simulated(SimConfig {
+            link: LinkSpec::Lossy {
+                latency_us: 100,
+                mbit_per_sec: 50.0,
+                drop_p: 0.3,
+            },
+            ..SimConfig::default()
+        });
+        run_simulated_native(&s, &graph).unwrap()
+    };
+    // The protocol's payload traffic is link-independent...
+    assert_eq!(lossy.total_bytes, ideal.total_bytes);
+    // ...drops only ever ADD retransmitted bytes (never under-count)...
+    assert!(
+        lossy.total_bytes + lossy.retransmit_bytes >= ideal.total_bytes
+    );
+    // ...and with p=0.3 over this much traffic they certainly happen,
+    // stretching the virtual clock.
+    assert!(lossy.retransmit_bytes > 0, "expected retransmissions");
+    assert!(lossy.sim_time_secs.unwrap() > ideal.sim_time_secs.unwrap());
+    assert_eq!(ideal.retransmit_bytes, 0);
+}
+
+#[test]
+fn native_sim_learns_above_chance() {
+    // 8-node ring, C-ECL(10%) on the softmax backend: with 40 local
+    // steps it must clear random accuracy (0.1) decisively.
+    let graph = Graph::ring(8);
+    let spec = ExperimentSpec {
+        dataset: "tiny".into(),
+        algorithm: AlgorithmSpec::CEcl {
+            k_frac: 0.1,
+            theta: 1.0,
+            dense_first_epoch: true,
+        },
+        epochs: 4,
+        nodes: 8,
+        train_per_node: 100,
+        test_size: 100,
+        local_steps: 2,
+        eta: 0.1,
+        eval_every: 2,
+        seed: 3,
+        exec: ExecMode::Simulated(SimConfig::default()),
+        ..Default::default()
+    };
+    let r = run_simulated_native(&spec, &graph).unwrap();
+    // Chance is 0.10 (10 balanced classes); the margin is deliberately
+    // modest — this is a learning-signal smoke check, not a benchmark.
+    assert!(
+        r.final_accuracy > 0.13,
+        "accuracy {} not above chance",
+        r.final_accuracy
+    );
+    // Accuracy trajectory is recorded against the virtual clock.
+    let times: Vec<f64> = r
+        .history
+        .records
+        .iter()
+        .map(|rec| rec.sim_time_secs)
+        .collect();
+    assert!(times.windows(2).all(|w| w[0] < w[1]), "clock not monotone");
+    assert!(r.history.time_to_accuracy(0.0).is_some());
+}
+
+#[test]
+fn ring_512_cecl_completes_and_reports_time_to_accuracy() {
+    // The acceptance run: 512 nodes in a single process — impossible
+    // with thread-per-node — under a bandwidth-limited link with one
+    // straggler, replayed bit-identically.
+    let graph = Graph::ring(512);
+    let spec = ExperimentSpec {
+        dataset: "tiny".into(),
+        algorithm: AlgorithmSpec::CEcl {
+            k_frac: 0.1,
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+        epochs: 2,
+        nodes: 512,
+        train_per_node: 20,
+        test_size: 50,
+        local_steps: 2,
+        eta: 0.1,
+        eval_every: 2,
+        seed: 1,
+        exec: ExecMode::Simulated(SimConfig {
+            link: LinkSpec::Bandwidth {
+                latency_us: 200,
+                mbit_per_sec: 100.0,
+            },
+            stragglers: vec![(7, 3.0)],
+            ..SimConfig::default()
+        }),
+        ..Default::default()
+    };
+    let r = run_simulated_native(&spec, &graph).unwrap();
+    assert_eq!(r.history.records.len(), 1); // eval at epoch 2 only
+    let sim_secs = r.sim_time_secs.expect("virtual clock");
+    assert!(sim_secs > 0.0);
+    assert!(r.total_bytes > 0);
+    assert!(r.final_accuracy.is_finite());
+    // Time-to-accuracy is reportable (target 0 ⇒ first eval qualifies).
+    let (epoch, t2a) = r.history.time_to_accuracy(0.0).unwrap();
+    assert_eq!(epoch, 2);
+    assert!(t2a > 0.0 && t2a <= sim_secs);
+    // Deterministic replay at scale.
+    let r2 = run_simulated_native(&spec, &graph).unwrap();
+    assert_eq!(r.final_accuracy.to_bits(), r2.final_accuracy.to_bits());
+    assert_eq!(r.total_bytes, r2.total_bytes);
+    assert_eq!(r.sim_time_secs, r2.sim_time_secs);
+}
+
+#[test]
+fn compression_wins_virtual_time_on_slow_links() {
+    // The point of the whole exercise: on a bandwidth-limited link,
+    // C-ECL(10%) finishes the same number of rounds in less virtual
+    // time than uncompressed ECL (smaller messages serialize faster).
+    let graph = Graph::ring(6);
+    let run = |alg: AlgorithmSpec| {
+        let spec = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: alg,
+            epochs: 2,
+            nodes: 6,
+            train_per_node: 20,
+            test_size: 20,
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 2,
+            seed: 21,
+            exec: ExecMode::Simulated(SimConfig {
+                link: LinkSpec::Bandwidth {
+                    latency_us: 100,
+                    // Slow enough that serialization dominates compute.
+                    mbit_per_sec: 1.0,
+                },
+                compute_ns_per_step: 100_000,
+                ..SimConfig::default()
+            }),
+            ..Default::default()
+        };
+        run_simulated_native(&spec, &graph).unwrap()
+    };
+    let ecl = run(AlgorithmSpec::Ecl { theta: 1.0 });
+    let cecl = run(AlgorithmSpec::CEcl {
+        k_frac: 0.1,
+        theta: 1.0,
+        dense_first_epoch: false,
+    });
+    assert!(cecl.total_bytes < ecl.total_bytes / 2);
+    assert!(
+        cecl.sim_time_secs.unwrap() < ecl.sim_time_secs.unwrap(),
+        "C-ECL {}s vs ECL {}s",
+        cecl.sim_time_secs.unwrap(),
+        ecl.sim_time_secs.unwrap()
+    );
+}
