@@ -1,10 +1,11 @@
 //! The scenario the byte tables only hint at: what compression buys in
 //! *time* when the network is slow, lossy, and partially down.
 //!
-//! Runs D-PSGD, ECL, and C-ECL (10%) on a 16-node ring under the
-//! virtual-time engine with a 20 Mbit/s, 1 ms, 5%-drop link, a 4×
-//! straggler, and a mid-run outage on one edge — entirely artifact-free
-//! (native softmax backend), so it works on a bare checkout:
+//! Runs D-PSGD, ECL, C-ECL (10%), and two codec variants (4-bit QSGD,
+//! error-feedback top-k) on a 16-node ring under the virtual-time
+//! engine with a 20 Mbit/s, 1 ms, 5%-drop link, a 4× straggler, and a
+//! mid-run outage on one edge — entirely artifact-free (native softmax
+//! backend), so it works on a bare checkout:
 //!
 //! ```bash
 //! cargo run --release --example lossy_network
@@ -41,6 +42,18 @@ fn main() -> anyhow::Result<()> {
         AlgorithmSpec::Ecl { theta: 1.0 },
         AlgorithmSpec::CEcl {
             k_frac: 0.10,
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+        // The codec ladder: a 4-bit quantizer and error-feedback top-k
+        // (both run the Eq. 11 dual rule automatically).
+        AlgorithmSpec::CEclCodec {
+            codec: CodecSpec::parse("qsgd:4").unwrap(),
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+        AlgorithmSpec::CEclCodec {
+            codec: CodecSpec::parse("ef+top_k:0.1").unwrap(),
             theta: 1.0,
             dense_first_epoch: false,
         },

@@ -7,7 +7,7 @@
 //! These are the per-round costs behind every table.
 
 use cecl::compress::low_rank::{matvec_f32, matvec_t_f32};
-use cecl::compress::{CooVec, RandK};
+use cecl::compress::{CodecSpec, CooVec, EdgeCtx, RandK};
 use cecl::model::Manifest;
 use cecl::runtime::{native, Engine, ModelRuntime};
 use cecl::util::bench::BenchSet;
@@ -83,6 +83,30 @@ fn main() {
                          || {
         coo.scatter_into_cleared(&mut dense);
     });
+
+    // ---- edge codecs: encode + decode (the codec wire hot path) ---------
+    let ctx = EdgeCtx { seed: 7, edge: 0, round: 0, receiver: 1, dim: d };
+    for spec_str in ["rand_k:0.1", "rand_k:0.1:values", "top_k:0.1",
+                     "qsgd:4", "sign", "ef+top_k:0.1"] {
+        let spec = CodecSpec::parse(spec_str).expect("bench codec spec");
+        let mut enc = spec.build();
+        let frame = spec.build().encode(&y, &ctx);
+        let mut dec = spec.build();
+        set.bench_throughput(
+            &format!("codec encode {spec_str}"), 2, 15, d as f64, "elem",
+            || {
+                let f = enc.encode(&y, &ctx);
+                std::hint::black_box(f.wire_bytes());
+            },
+        );
+        set.bench_throughput(
+            &format!("codec decode {spec_str}"), 2, 15, d as f64, "elem",
+            || {
+                let out = dec.decode(&frame, &ctx).expect("decode");
+                std::hint::black_box(out.len());
+            },
+        );
+    }
 
     // ---- gossip weighted average (D-PSGD inner loop) --------------------
     let wj = randn(d, 7);

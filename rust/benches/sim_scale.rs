@@ -8,6 +8,7 @@
 //! --bench sim_scale` works on a bare checkout.
 
 use cecl::algorithms::AlgorithmSpec;
+use cecl::compress::CodecSpec;
 use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
 use cecl::graph::Graph;
 use cecl::sim::{LinkSpec, SimConfig};
@@ -97,4 +98,33 @@ fn main() {
         ]);
     }
     println!("\nring(64), C-ECL(10%), 4 epochs:\n{}", t.render());
+
+    // Codec ladder on a bandwidth-limited ring(64): bytes buy time.
+    let mut t = Table::new([
+        "codec", "final acc", "sim secs", "KB/node/epoch",
+    ]);
+    for codec_str in ["identity", "rand_k:0.1", "rand_k:0.1:values",
+                      "top_k:0.1", "qsgd:4", "sign", "ef+top_k:0.1"] {
+        let mut s = spec(
+            64,
+            4,
+            LinkSpec::Bandwidth { latency_us: 500, mbit_per_sec: 50.0 },
+        );
+        s.algorithm = AlgorithmSpec::CEclCodec {
+            codec: CodecSpec::parse(codec_str).expect("bench codec"),
+            theta: 1.0,
+            dense_first_epoch: false,
+        };
+        let r = run_simulated_native(&s, &graph).expect("sim run");
+        t.row([
+            codec_str.to_string(),
+            format!("{:.3}", r.final_accuracy),
+            format!("{:.3}", r.sim_time_secs.unwrap_or(0.0)),
+            format!("{:.0}", r.mean_bytes_per_epoch / 1024.0),
+        ]);
+    }
+    println!(
+        "\nring(64), C-ECL codec ladder, bandwidth 50 Mbit/s:\n{}",
+        t.render()
+    );
 }

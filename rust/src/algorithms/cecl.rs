@@ -4,16 +4,29 @@
 //! Rachford splitting and implements Alg. 1:
 //!
 //! * line 4 — `y_{i|j} = z_{i|j} − 2α A_{i|j} w_i`
-//! * lines 5–6 — *omitted*: masks ω are derived from the shared seed
-//!   (`Pcg::derive(seed, [EDGE_MASK, edge, round, dir])`), identically at
-//!   both endpoints
-//! * lines 7–8 — exchange `comp(y; ω)` as COO
+//! * lines 5–6 — *omitted*: shared-seed randomness (masks ω, QSGD
+//!   rounding draws) derives from [`EdgeCtx`] identically at both
+//!   endpoints
+//! * lines 7–8 — exchange `comp(y)` as an encoded [`Frame`] whose byte
+//!   length *is* the metered wire size
 //! * line 9 — `z_{i|j} += θ·comp(y_{j|i} − z_{i|j}; ω_{i|j})`, expanded
 //!   via Assumption-1 linearity to `θ·(comp(y_{j|i}) − comp(z_{i|j}))`
 //!
-//! With `k_frac = 1` the node *is* the uncompressed ECL (dense wire
-//! format, Eq. (5) update).  `DualRule::CompressY` switches to the naive
-//! Eq. (11) rule for the §3.2 ablation.
+//! The compression operator is a pluggable [`EdgeCodec`] built from a
+//! [`CodecSpec`] — one stateful instance per neighbor slot, so codecs
+//! with per-edge memory (error feedback) Just Work.  Codecs that are
+//! linear for fixed ω *and* expose a seed-derivable sparse support
+//! (identity, rand-k in either wire mode) run the Eq. (13)
+//! `DualRule::CompressDiff` update touching only `|ω|` coordinates;
+//! value-dependent or quantizing codecs (top-k, QSGD, sign, `ef+…`)
+//! must run the naive Eq. (11) `DualRule::CompressY` rule — the §3.2
+//! ablation — which `build_machine`/`build_node` select automatically.
+//!
+//! With the full-rate mask (`rand_k:1`) the node *is* the uncompressed
+//! ECL: it uses the dense wire (4 B/coord, no index overhead), as do
+//! the paper's §5.1 first-epoch warmup rounds.  The `identity` codec
+//! ships byte-identical dense frames through the codec path instead —
+//! pinned equal to ECL's byte counts by the test suite.
 //!
 //! The protocol is written once in the poll-driven
 //! [`NodeStateMachine`] form (`round_begin` queues the outbound
@@ -26,18 +39,17 @@
 //! Two execution paths for line 4+9, semantically identical:
 //! [`DualPath::Native`] (fused rust loops, the default hot path) and
 //! [`DualPath::Pjrt`] (the L1 Pallas `dual_update` artifact through
-//! PJRT; threaded engine only).  Integration tests assert they agree
-//! elementwise.
+//! PJRT; threaded engine only, shared-seed mask codecs only).
+//! Integration tests assert they agree elementwise.
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::comm::{Msg, NodeComm, Outbox};
-use crate::compress::{CooVec, RandK};
+use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx, RandK, WireMode};
 use crate::graph::Graph;
 use crate::runtime::{native, ModelRuntime};
-use crate::util::rng::{streams, Pcg};
 
 use super::{paper_alpha, BuildCtx, NodeAlgorithm, NodeStateMachine};
 
@@ -50,7 +62,8 @@ pub enum DualPath {
     Pjrt,
 }
 
-/// Eq. (13) (the C-ECL) vs Eq. (11) (naive ablation).
+/// Eq. (13) (the C-ECL) vs Eq. (11) (naive ablation / non-linear
+/// codecs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DualRule {
     CompressDiff,
@@ -63,12 +76,16 @@ pub struct CEclNode {
     seed: u64,
     d_pad: usize,
     theta: f32,
-    /// Per-node α (Eq. 46/47 — depends on |N_i|).
+    /// Per-node α (Eq. 46/47 — depends on |N_i| and the codec's τ).
     alpha: f32,
     alpha_deg: f32,
-    k_frac: f64,
-    comp: RandK,
-    /// Rounds at the start trained with a full mask (paper §5.1 warmup).
+    codec_spec: CodecSpec,
+    /// One stateful codec instance per neighbor slot (sorted neighbor
+    /// order) — per-edge state such as error-feedback residuals lives
+    /// inside.
+    codecs: Vec<Box<dyn EdgeCodec>>,
+    /// Rounds at the start trained with the dense wire (paper §5.1
+    /// warmup).
     dense_rounds: usize,
     rule: DualRule,
     dual_path: DualPath,
@@ -80,21 +97,29 @@ pub struct CEclNode {
     /// Messages still expected in the current exchange round.
     pending: usize,
     // -- preallocated scratch (no allocation in the round hot loop) -----
-    scratch_vals: Vec<f32>,
+    scratch_y: Vec<f32>,
     scratch_dense_a: Vec<f32>,
-    scratch_dense_b: Vec<f32>,
     scratch_mask_in: Vec<f32>,
     scratch_mask_out: Vec<f32>,
 }
 
 impl CEclNode {
-    pub fn new(ctx: &BuildCtx, k_frac: f64, theta: f32, dense_rounds: usize,
-               rule: DualRule) -> CEclNode {
+    pub fn new(ctx: &BuildCtx, codec: CodecSpec, theta: f32,
+               dense_rounds: usize, rule: DualRule) -> Result<CEclNode> {
         let degree = ctx.graph.degree(ctx.node);
-        assert!(degree > 0, "ECL requires no isolated nodes (Assumption 4)");
-        let alpha = paper_alpha(ctx.eta, degree, ctx.local_steps, k_frac);
+        ensure!(degree > 0, "ECL requires no isolated nodes (Assumption 4)");
+        codec.validate()?;
+        ensure!(
+            rule == DualRule::CompressY || codec.is_linear_for_fixed_omega(),
+            "codec `{}` violates fixed-ω linearity (Eqs. 8–9); the Eq. 13 \
+             rule cannot run it — use the Eq. 11 rule",
+            codec.name()
+        );
         let d_pad = ctx.manifest.d_pad;
-        CEclNode {
+        let alpha = paper_alpha(ctx.eta, degree, ctx.local_steps,
+                                codec.tau(d_pad));
+        let codecs = (0..degree).map(|_| codec.build()).collect();
+        Ok(CEclNode {
             node: ctx.node,
             graph: Arc::clone(&ctx.graph),
             seed: ctx.seed,
@@ -102,8 +127,8 @@ impl CEclNode {
             theta,
             alpha,
             alpha_deg: alpha * degree as f32,
-            k_frac,
-            comp: RandK::new(k_frac.clamp(1e-9, 1.0)),
+            codec_spec: codec,
+            codecs,
             dense_rounds,
             rule,
             dual_path: ctx.dual_path,
@@ -111,31 +136,28 @@ impl CEclNode {
             z: vec![vec![0.0; d_pad]; degree],
             zsum: vec![0.0; d_pad],
             pending: 0,
-            scratch_vals: Vec::new(),
+            scratch_y: Vec::with_capacity(d_pad),
             scratch_dense_a: vec![0.0; d_pad],
-            scratch_dense_b: vec![0.0; d_pad],
             scratch_mask_in: vec![0.0; d_pad],
             scratch_mask_out: vec![0.0; d_pad],
+        })
+    }
+
+    /// Shared-seed context for messages received by `receiver` on
+    /// `edge` at `round` — both endpoints construct it identically, so
+    /// ω_{i|j} (what node i receives from j) is distinct from ω_{j|i}.
+    fn edge_ctx(&self, edge: usize, round: usize, receiver: usize) -> EdgeCtx {
+        EdgeCtx {
+            seed: self.seed,
+            edge,
+            round,
+            receiver,
+            dim: self.d_pad,
         }
     }
 
-    /// Mask RNG for messages flowing `from -> to` on `edge` at `round`.
-    /// The direction tag is the *receiver's* side so ω_{i|j} (mask for
-    /// what node i receives from j) is distinct from ω_{j|i}.
-    fn mask_rng(&self, edge: usize, round: usize, receiver: usize) -> Pcg {
-        Pcg::derive(
-            self.seed,
-            &[
-                streams::EDGE_MASK,
-                edge as u64,
-                round as u64,
-                receiver as u64,
-            ],
-        )
-    }
-
     fn is_dense_round(&self, round: usize) -> bool {
-        round < self.dense_rounds || self.k_frac >= 1.0
+        round < self.dense_rounds || self.codec_spec.is_effectively_dense()
     }
 
     /// Debug-build invariant: the incrementally-maintained zsum matches
@@ -167,10 +189,11 @@ impl CEclNode {
     }
 
     /// Compressed exchange via the PJRT / L1-Pallas path (threaded
-    /// engine only). One `dual_update` artifact call per neighbor; the
-    /// artifact computes both the outbound y values and the z update, so
-    /// the send happens after the kernel (results are identical — y uses
-    /// the pre-update z inside the kernel).
+    /// engine only; requires a codec with seed-derivable support, i.e.
+    /// the rand-k family).  One `dual_update` artifact call per
+    /// neighbor; the artifact computes both the outbound y values and
+    /// the z update, so the send happens after the kernel (results are
+    /// identical — y uses the pre-update z inside the kernel).
     fn exchange_sparse_pjrt(&mut self, round: usize, w: &[f32],
                             comm: &NodeComm) -> Result<()> {
         let rt = Arc::clone(
@@ -185,19 +208,22 @@ impl CEclNode {
         // the kernel with a zero ycomp (z update discarded), send, then
         // after receive run it again for the z update. This keeps the
         // wire protocol identical to the native path.
-        let mut masks_out: Vec<Vec<u32>> = Vec::with_capacity(neighbors.len());
-        for &j in &neighbors {
+        for (jj, &j) in neighbors.iter().enumerate() {
             let e = self
                 .graph
                 .edge_index(self.node, j)
                 .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
-            let mut rng = self.mask_rng(e, round, j);
-            masks_out.push(self.comp.sample_mask(self.d_pad, &mut rng));
-        }
-        for (jj, &j) in neighbors.iter().enumerate() {
-            let taa = 2.0 * self.alpha * self.graph.edge_sign(self.node, j);
-            RandK::mask_to_dense(self.d_pad, &masks_out[jj],
+            let ctx_e = self.edge_ctx(e, round, j);
+            let mask_out = self.codecs[jj].sparse_support(&ctx_e).ok_or_else(
+                || anyhow!(
+                    "DualPath::Pjrt requires a shared-seed mask codec \
+                     (rand-k family), got `{}`",
+                    self.codec_spec.name()
+                ),
+            )?;
+            RandK::mask_to_dense(self.d_pad, &mask_out,
                                  &mut self.scratch_mask_out);
+            let taa = 2.0 * self.alpha * self.graph.edge_sign(self.node, j);
             // zero ycomp / m_in: only the y output matters here.
             self.scratch_dense_a.iter_mut().for_each(|v| *v = 0.0);
             let (_, y_send) = rt
@@ -211,27 +237,31 @@ impl CEclNode {
                     taa,
                 )
                 .context("pjrt dual_update (send)")?;
-            comm.send(j, Msg::Sparse(CooVec::gather(&y_send, &masks_out[jj])))?;
+            let codec = &mut self.codecs[jj];
+            let frame = codec.encode(&y_send, &ctx_e);
+            comm.send(j, Msg::Frame(frame))?;
         }
-        // Phase 2: receive and update z through the kernel.
+        // Phase 2: receive, decode, and update z through the kernel.
         for (jj, &j) in neighbors.iter().enumerate() {
-            let coo = comm.recv(j)?.into_sparse()?;
+            let frame = comm.recv(j)?.into_frame()?;
             let e = self
                 .graph
                 .edge_index(self.node, j)
                 .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
-            let mut rng = self.mask_rng(e, round, self.node);
-            let mask_in = self.comp.sample_mask(self.d_pad, &mut rng);
-            debug_assert_eq!(coo.idx, mask_in, "shared-seed mask mismatch");
+            let ctx_e = self.edge_ctx(e, round, self.node);
+            let codec = &mut self.codecs[jj];
+            let ycomp = codec.decode(&frame, &ctx_e)?;
+            let mask_in = codec
+                .sparse_support(&ctx_e)
+                .ok_or_else(|| anyhow!("pjrt path needs a mask codec"))?;
             RandK::mask_to_dense(self.d_pad, &mask_in, &mut self.scratch_mask_in);
-            coo.scatter_into_cleared(&mut self.scratch_dense_b);
             self.scratch_mask_out.iter_mut().for_each(|v| *v = 0.0);
             let taa = 2.0 * self.alpha * self.graph.edge_sign(self.node, j);
             let (z_new, _) = rt
                 .dual_update(
                     &self.z[jj],
                     w,
-                    &self.scratch_dense_b,
+                    &ycomp,
                     &self.scratch_mask_in,
                     &self.scratch_mask_out,
                     self.theta,
@@ -242,13 +272,13 @@ impl CEclNode {
                 DualRule::CompressDiff => self.z[jj] = z_new,
                 DualRule::CompressY => {
                     // The kernel implements Eq. (13); Eq. (11) is the
-                    // naive rule, only supported natively.
+                    // naive rule, applied densely here (`ycomp` is zero
+                    // off the mask, so this matches the sparse form).
                     let theta = self.theta;
                     let z = &mut self.z[jj];
-                    for zv in z.iter_mut() {
-                        *zv *= 1.0 - theta;
+                    for (zv, &yv) in z.iter_mut().zip(&ycomp) {
+                        *zv = (1.0 - theta) * *zv + theta * yv;
                     }
-                    coo.axpy_into(theta, z);
                 }
             }
         }
@@ -263,11 +293,50 @@ impl CEclNode {
     pub fn alpha(&self) -> f32 {
         self.alpha
     }
+
+    fn display_name(&self) -> String {
+        cecl_display_name(self.rule, &self.codec_spec)
+    }
+}
+
+/// The dual rule a codec licenses: Eq. (13) for fixed-ω linear codecs,
+/// the naive Eq. (11) for everything else.  Single source of truth for
+/// `AlgorithmSpec::name`, `build_cecl`, and the tests.
+pub fn rule_for_codec(spec: &CodecSpec) -> DualRule {
+    if spec.is_linear_for_fixed_omega() {
+        DualRule::CompressDiff
+    } else {
+        DualRule::CompressY
+    }
+}
+
+/// Canonical display name for a C-ECL-family configuration — shared by
+/// `AlgorithmSpec::name` and the node itself so run labels never drift.
+pub fn cecl_display_name(rule: DualRule, spec: &CodecSpec) -> String {
+    match (rule, spec) {
+        (DualRule::CompressDiff, CodecSpec::RandK { k_frac, .. })
+            if *k_frac >= 1.0 =>
+        {
+            "ECL".to_string()
+        }
+        (
+            DualRule::CompressDiff,
+            CodecSpec::RandK { k_frac, mode: WireMode::Explicit },
+        ) => format!("C-ECL ({}%)", (*k_frac * 100.0).round() as u32),
+        (
+            DualRule::CompressY,
+            CodecSpec::RandK { k_frac, mode: WireMode::Explicit },
+        ) => format!("naive-C-ECL ({}%)", (*k_frac * 100.0).round() as u32),
+        (DualRule::CompressDiff, spec) => format!("C-ECL [{}]", spec.name()),
+        (DualRule::CompressY, spec) => {
+            format!("C-ECL [{}] (Eq.11)", spec.name())
+        }
+    }
 }
 
 impl NodeStateMachine for CEclNode {
     fn name(&self) -> String {
-        NodeAlgorithm::name(self)
+        self.display_name()
     }
 
     fn alpha_deg(&self) -> f32 {
@@ -294,31 +363,36 @@ impl NodeStateMachine for CEclNode {
                 out.send(j, Msg::Dense(y));
             }
         } else {
-            // Lines 4–8, compressed wire: gather comp(y; ω_{j|i}).
+            // Lines 4–8, codec wire: encode comp(y; ω_{j|i}) into an
+            // owned byte frame — the frame length is the wire size.
+            // Mask codecs evaluate y = z − 2αa·w on the |ω| kept
+            // coordinates only (`encode_from`); dense-input codecs
+            // (quantizers) stage the full y in preallocated scratch.
             for (jj, &j) in neighbors.iter().enumerate() {
                 let e = self
                     .graph
                     .edge_index(self.node, j)
                     .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
                 // ω_{j|i}: what j receives from us.
-                let mut rng = self.mask_rng(e, round, j);
-                let mask_out = self.comp.sample_mask(self.d_pad, &mut rng);
+                let ctx_e = self.edge_ctx(e, round, j);
                 let taa = 2.0 * self.alpha * self.graph.edge_sign(self.node, j);
-                self.scratch_vals.clear();
-                self.scratch_vals.reserve(mask_out.len());
+                let codec = &mut self.codecs[jj];
                 let z = &self.z[jj];
-                for &idx in &mask_out {
-                    let idx = idx as usize;
-                    self.scratch_vals.push(z[idx] - taa * w[idx]);
-                }
-                out.send(
-                    j,
-                    Msg::Sparse(CooVec {
-                        dim: self.d_pad,
-                        idx: mask_out,
-                        val: self.scratch_vals.clone(),
-                    }),
-                );
+                let frame = match codec
+                    .encode_from(&|i| z[i] - taa * w[i], &ctx_e)
+                {
+                    Some(frame) => frame,
+                    None => {
+                        self.scratch_y.clear();
+                        self.scratch_y.extend(
+                            z.iter()
+                                .zip(w.iter())
+                                .map(|(&zv, &wv)| zv - taa * wv),
+                        );
+                        codec.encode(&self.scratch_y, &ctx_e)
+                    }
+                };
+                out.send(j, Msg::Frame(frame));
             }
         }
         Ok(())
@@ -353,44 +427,77 @@ impl NodeStateMachine for CEclNode {
                 *zv = (1.0 - theta) * *zv + theta * yv;
             }
         } else {
-            // `zsum` is maintained INCREMENTALLY here: only the ~k·d
-            // masked coordinates change, so touching the full deg·d_pad
-            // state per round (the naive recompute) is wasted —
-            // EXPERIMENTS.md §Perf records the win.
-            let coo = msg.into_sparse()?;
-            ensure!(
-                coo.dim == self.d_pad,
-                "sparse payload dim {} != d_pad {}",
-                coo.dim,
-                self.d_pad
-            );
+            // Decode validates every byte — a corrupt frame surfaces a
+            // typed CodecError here instead of aborting the process.
+            let frame = msg.into_frame()?;
+            let e = self
+                .graph
+                .edge_index(self.node, from)
+                .ok_or_else(|| {
+                    anyhow!("({}, {from}) is not an edge", self.node)
+                })?;
+            let ctx_e = self.edge_ctx(e, round, self.node);
             let a = self.graph.edge_sign(self.node, from);
+            let codec = &mut self.codecs[jj];
             match self.rule {
                 DualRule::CompressDiff => {
-                    // z += θ(comp(y) − comp(z)) on masked coords only.
-                    let z = &mut self.z[jj];
-                    for (&idx, &yv) in coo.idx.iter().zip(&coo.val) {
-                        let idx = idx as usize;
-                        let delta = theta * (yv - z[idx]);
-                        z[idx] += delta;
-                        self.zsum[idx] += a * delta;
+                    // z += θ(comp(y) − comp(z)) on the ω support only —
+                    // `zsum` is maintained INCREMENTALLY: only the ~k·d
+                    // masked coordinates change, so touching the full
+                    // deg·d_pad state per round (the naive recompute) is
+                    // wasted — EXPERIMENTS.md §Perf records the win.
+                    // `decode_sparse` keeps this O(|ω|): no dense
+                    // materialization, at most one mask derivation.
+                    if let Some((idx, vals)) =
+                        codec.decode_sparse(&frame, &ctx_e)?
+                    {
+                        let z = &mut self.z[jj];
+                        for (&i, &yv) in idx.iter().zip(&vals) {
+                            let i = i as usize;
+                            debug_assert!(i < self.d_pad);
+                            let delta = theta * (yv - z[i]);
+                            z[i] += delta;
+                            self.zsum[i] += a * delta;
+                        }
+                    } else if codec.is_full_support() {
+                        // Identity: comp(z) = z, so Eq. (13) reduces to
+                        // the fused dense update — no support list.
+                        let y = codec.decode(&frame, &ctx_e)?;
+                        debug_assert_eq!(y.len(), self.d_pad);
+                        let z = &mut self.z[jj];
+                        for ((zv, acc), &yv) in
+                            z.iter_mut().zip(self.zsum.iter_mut()).zip(&y)
+                        {
+                            let delta = theta * (yv - *zv);
+                            *zv += delta;
+                            *acc += a * delta;
+                        }
+                    } else {
+                        // Unreachable with the current codec set: the
+                        // Eq. 13 rule requires fixed-ω linearity, and
+                        // every linear codec is either sparse-decodable
+                        // (rand-k) or full-support (identity).  A new
+                        // linear codec must implement one of the two.
+                        bail!(
+                            "codec `{}` supports neither sparse decode \
+                             nor full-support dense decode; the Eq. 13 \
+                             rule cannot run it",
+                            self.codec_spec.name()
+                        );
                     }
                 }
                 DualRule::CompressY => {
                     // Eq. (11): z' = (1−θ)z + θ comp(y). Touches every
-                    // coordinate — fall back to a full pass (ablation
-                    // path only).
+                    // coordinate (comp(y) is dense for quantizers).
+                    let y = codec.decode(&frame, &ctx_e)?;
+                    debug_assert_eq!(y.len(), self.d_pad);
                     let z = &mut self.z[jj];
-                    for (zv, acc) in z.iter_mut().zip(self.zsum.iter_mut()) {
-                        let delta = -theta * *zv;
-                        *zv += delta;
-                        *acc += a * delta;
-                    }
-                    for (&idx, &yv) in coo.idx.iter().zip(&coo.val) {
-                        let idx = idx as usize;
-                        let delta = theta * yv;
-                        z[idx] += delta;
-                        self.zsum[idx] += a * delta;
+                    for ((zv, acc), &yv) in
+                        z.iter_mut().zip(self.zsum.iter_mut()).zip(&y)
+                    {
+                        let old = *zv;
+                        *zv = (1.0 - theta) * old + theta * yv;
+                        *acc += a * (*zv - old);
                     }
                 }
             }
@@ -421,15 +528,7 @@ impl NodeStateMachine for CEclNode {
 
 impl NodeAlgorithm for CEclNode {
     fn name(&self) -> String {
-        match (self.rule, self.k_frac >= 1.0) {
-            (DualRule::CompressDiff, true) => "ECL".to_string(),
-            (DualRule::CompressDiff, false) => {
-                format!("C-ECL ({}%)", (self.k_frac * 100.0).round() as u32)
-            }
-            (DualRule::CompressY, _) => {
-                format!("naive-C-ECL ({}%)", (self.k_frac * 100.0).round() as u32)
-            }
-        }
+        self.display_name()
     }
 
     fn alpha_deg(&self) -> f32 {
@@ -460,6 +559,7 @@ mod tests {
     use super::*;
     use crate::comm::build_bus;
     use crate::model::Manifest;
+    use crate::util::rng::Pcg;
 
     fn tiny_manifest() -> crate::model::DatasetManifest {
         // A synthetic manifest (no artifact files needed for these tests).
@@ -501,6 +601,13 @@ end
         }
     }
 
+    fn rand_k(k_frac: f64) -> CodecSpec {
+        CodecSpec::RandK {
+            k_frac,
+            mode: WireMode::Explicit,
+        }
+    }
+
     /// Run one exchange over a 3-ring and return the nodes.
     fn run_ring_exchange(k_frac: f64, theta: f32, round: usize)
                          -> Vec<CEclNode> {
@@ -508,8 +615,9 @@ end
         let (comms, _) = build_bus(&graph);
         let mut nodes: Vec<CEclNode> = (0..3)
             .map(|i| {
-                let mut n = CEclNode::new(&ctx(i, &graph), k_frac, theta, 0,
-                                          DualRule::CompressDiff);
+                let mut n = CEclNode::new(&ctx(i, &graph), rand_k(k_frac),
+                                          theta, 0, DualRule::CompressDiff)
+                    .unwrap();
                 // Seed distinct non-trivial dual state + w.
                 let mut rng = Pcg::new(100 + i as u64);
                 for zv in n.z.iter_mut().flatten() {
@@ -624,8 +732,9 @@ end
     #[test]
     fn alpha_deg_consistency() {
         let graph = Arc::new(Graph::ring(4));
-        let node = CEclNode::new(&ctx(0, &graph), 0.1, 1.0, 0,
-                                 DualRule::CompressDiff);
+        let node = CEclNode::new(&ctx(0, &graph), rand_k(0.1), 1.0, 0,
+                                 DualRule::CompressDiff)
+            .unwrap();
         assert!((NodeAlgorithm::alpha_deg(&node) - node.alpha() * 2.0).abs()
                 < 1e-6);
         // Eq. 47 with η=0.05, |N|=2, K=5, k=0.1: α = 1/(0.05·2·49).
@@ -635,11 +744,108 @@ end
     #[test]
     fn warmup_rounds_use_dense() {
         let graph = Arc::new(Graph::ring(3));
-        let node = CEclNode::new(&ctx(0, &graph), 0.1, 1.0, 2,
-                                 DualRule::CompressDiff);
+        let node = CEclNode::new(&ctx(0, &graph), rand_k(0.1), 1.0, 2,
+                                 DualRule::CompressDiff)
+            .unwrap();
         assert!(node.is_dense_round(0));
         assert!(node.is_dense_round(1));
         assert!(!node.is_dense_round(2));
+        // Identity deliberately runs the codec frame path every round.
+        let ident = CEclNode::new(&ctx(0, &graph), CodecSpec::Identity, 1.0,
+                                  0, DualRule::CompressDiff)
+            .unwrap();
+        assert!(!ident.is_dense_round(5));
+        // Full-rate rand-k IS the dense ECL wire.
+        let ecl = CEclNode::new(&ctx(0, &graph), rand_k(1.0), 1.0, 0,
+                                DualRule::CompressDiff)
+            .unwrap();
+        assert!(ecl.is_dense_round(1000));
+        assert_eq!(NodeAlgorithm::name(&ecl), "ECL");
+    }
+
+    #[test]
+    fn nonlinear_codec_rejected_under_eq13() {
+        let graph = Arc::new(Graph::ring(3));
+        for spec in [
+            CodecSpec::TopK { k_frac: 0.1 },
+            CodecSpec::Qsgd { bits: 4 },
+            CodecSpec::SignNorm,
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK {
+                k_frac: 0.1,
+            })),
+        ] {
+            let err = CEclNode::new(&ctx(0, &graph), spec.clone(), 1.0, 0,
+                                    DualRule::CompressDiff)
+                .err()
+                .unwrap_or_else(|| panic!("{}: Eq.13 must reject", spec.name()));
+            assert!(err.to_string().contains("linearity"), "{err}");
+            // ... but they run fine under the Eq. 11 rule.
+            assert!(CEclNode::new(&ctx(0, &graph), spec, 1.0, 0,
+                                  DualRule::CompressY)
+                .is_ok());
+        }
+    }
+
+    #[test]
+    fn codec_exchange_roundtrips_for_every_family() {
+        // One full exchange round on a 3-ring for each codec family:
+        // the protocol completes, dual state moves, and zsum keeps its
+        // invariant — all through real encoded frames.
+        let graph = Arc::new(Graph::ring(3));
+        for spec in [
+            CodecSpec::Identity,
+            CodecSpec::RandK { k_frac: 0.4, mode: WireMode::ValuesOnly },
+            CodecSpec::TopK { k_frac: 0.3 },
+            CodecSpec::Qsgd { bits: 6 },
+            CodecSpec::SignNorm,
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK {
+                k_frac: 0.3,
+            })),
+        ] {
+            let rule = rule_for_codec(&spec);
+            let (comms, meter) = build_bus(&graph);
+            let mut nodes: Vec<CEclNode> = (0..3)
+                .map(|i| {
+                    let mut n = CEclNode::new(&ctx(i, &graph), spec.clone(),
+                                              0.9, 0, rule)
+                        .unwrap();
+                    let mut rng = Pcg::new(300 + i as u64);
+                    for zv in n.z.iter_mut().flatten() {
+                        *zv = rng.normal_f32();
+                    }
+                    n.recompute_zsum();
+                    n
+                })
+                .collect();
+            std::thread::scope(|s| {
+                let handles: Vec<_> = nodes
+                    .iter_mut()
+                    .zip(comms)
+                    .map(|(node, comm)| {
+                        s.spawn(move || {
+                            let mut w = vec![0.25f32; 32];
+                            node.exchange(2, &mut w, &comm).unwrap();
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+            });
+            assert!(meter.total_bytes() > 0, "{}: no traffic", spec.name());
+            for node in &nodes {
+                node.debug_check_zsum();
+                // Dual state must have moved off its seeded initial value.
+                let mut rng = Pcg::new(300 + node.node as u64);
+                let moved = node
+                    .z
+                    .iter()
+                    .flatten()
+                    .filter(|&&zv| zv != rng.normal_f32())
+                    .count();
+                assert!(moved > 0, "{}: z never moved", spec.name());
+            }
+        }
     }
 
     #[test]
@@ -647,19 +853,20 @@ end
         // round_begin queues one message per neighbor; delivering both
         // completes the round; a third message errors.
         let graph = Arc::new(Graph::ring(3));
-        let mut node = CEclNode::new(&ctx(0, &graph), 0.5, 1.0, 0,
-                                     DualRule::CompressDiff);
+        let mut node = CEclNode::new(&ctx(0, &graph), rand_k(0.5), 1.0, 0,
+                                     DualRule::CompressDiff)
+            .unwrap();
         let mut w = vec![0.5f32; 32];
         let mut out = Outbox::new();
         NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
         assert_eq!(out.len(), 2);
         assert!(!node.round_complete());
-        // Feed back each neighbor's expected payload (empty-ish COO with
-        // the right mask shape): reuse the messages addressed to us from
-        // identically-seeded peers.
+        // Feed back each neighbor's expected payload: reuse the messages
+        // addressed to us from identically-seeded peers.
         for &j in &[1usize, 2] {
-            let mut peer = CEclNode::new(&ctx(j, &graph), 0.5, 1.0, 0,
-                                         DualRule::CompressY);
+            let mut peer = CEclNode::new(&ctx(j, &graph), rand_k(0.5), 1.0, 0,
+                                         DualRule::CompressY)
+                .unwrap();
             let mut peer_out = Outbox::new();
             let mut wj = vec![0.25f32; 32];
             NodeStateMachine::round_begin(&mut peer, 0, &mut wj, &mut peer_out)
@@ -684,5 +891,41 @@ end
             &mut out,
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn corrupt_frame_is_error_not_panic() {
+        let graph = Arc::new(Graph::ring(3));
+        let mut node = CEclNode::new(&ctx(0, &graph), rand_k(0.5), 1.0, 0,
+                                     DualRule::CompressDiff)
+            .unwrap();
+        let mut w = vec![0.5f32; 32];
+        let mut out = Outbox::new();
+        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        // A peer's frame, corrupted in flight: first index out of range.
+        let mut peer = CEclNode::new(&ctx(1, &graph), rand_k(0.5), 1.0, 0,
+                                     DualRule::CompressDiff)
+            .unwrap();
+        let mut peer_out = Outbox::new();
+        let mut wj = vec![0.25f32; 32];
+        NodeStateMachine::round_begin(&mut peer, 0, &mut wj, &mut peer_out)
+            .unwrap();
+        let msg = peer_out
+            .drain()
+            .find(|(to, _)| *to == 0)
+            .map(|(_, m)| m)
+            .unwrap();
+        let mut frame = msg.into_frame().unwrap();
+        frame.bytes_mut()[0..4].copy_from_slice(&999u32.to_le_bytes());
+        let err = NodeStateMachine::on_message(
+            &mut node,
+            0,
+            1,
+            Msg::Frame(frame),
+            &mut w,
+            &mut out,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 }

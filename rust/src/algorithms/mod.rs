@@ -24,15 +24,17 @@ pub mod cecl;
 pub mod dpsgd;
 pub mod powergossip;
 
-pub use cecl::{CEclNode, DualPath, DualRule};
+pub use cecl::{cecl_display_name, rule_for_codec, CEclNode, DualPath,
+               DualRule};
 pub use dpsgd::DPsgdNode;
 pub use powergossip::PowerGossipNode;
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::comm::{Msg, NodeComm, Outbox};
+use crate::compress::{CodecSpec, WireMode};
 use crate::graph::Graph;
 use crate::model::DatasetManifest;
 use crate::runtime::ModelRuntime;
@@ -118,6 +120,15 @@ pub enum AlgorithmSpec {
     },
     /// Ablation: Eq. (11) — compress y directly (§3.2 “does not work”).
     NaiveCEcl { k_frac: f64, theta: f32 },
+    /// C-ECL over an arbitrary edge codec (`compress::codec`).  Codecs
+    /// that are linear for fixed ω run the Eq. (13) rule; everything
+    /// else (top-k, quantizers, error feedback) automatically runs the
+    /// Eq. (11) rule.
+    CEclCodec {
+        codec: CodecSpec,
+        theta: f32,
+        dense_first_epoch: bool,
+    },
     /// PowerGossip (Vogels et al. 2020) with the given power-iteration
     /// steps per round.
     PowerGossip { iters: usize },
@@ -135,6 +146,11 @@ impl AlgorithmSpec {
             AlgorithmSpec::NaiveCEcl { k_frac, .. } => {
                 format!("naive-C-ECL ({}%)", (*k_frac * 100.0).round() as u32)
             }
+            AlgorithmSpec::CEclCodec { codec, .. } => {
+                // Same rule selection as `build_cecl`, same label as the
+                // node itself (one rule function, one naming function).
+                cecl_display_name(rule_for_codec(codec), codec)
+            }
             AlgorithmSpec::PowerGossip { iters } => {
                 format!("PowerGossip ({iters})")
             }
@@ -146,7 +162,9 @@ impl AlgorithmSpec {
         !matches!(self, AlgorithmSpec::Sgd)
     }
 
-    /// Parse CLI names like `cecl:0.1`, `powergossip:10`, `ecl`, `dpsgd`.
+    /// Parse CLI names like `cecl:0.1`, `powergossip:10`, `ecl`,
+    /// `dpsgd`.  A non-numeric `cecl:` argument parses as a codec spec
+    /// (`cecl:qsgd:4`, `cecl:ef+top_k:0.01`, `cecl:rand_k:0.1:values`).
     pub fn parse(s: &str) -> Option<AlgorithmSpec> {
         let (head, arg) = match s.split_once(':') {
             Some((h, a)) => (h, Some(a)),
@@ -158,11 +176,22 @@ impl AlgorithmSpec {
             "ecl" => Some(AlgorithmSpec::Ecl {
                 theta: arg.map(|a| a.parse().ok()).flatten().unwrap_or(1.0),
             }),
-            "cecl" | "c-ecl" => Some(AlgorithmSpec::CEcl {
-                k_frac: arg?.parse().ok()?,
-                theta: 1.0,
-                dense_first_epoch: true,
-            }),
+            "cecl" | "c-ecl" => {
+                let arg = arg?;
+                if let Ok(k_frac) = arg.parse::<f64>() {
+                    Some(AlgorithmSpec::CEcl {
+                        k_frac,
+                        theta: 1.0,
+                        dense_first_epoch: true,
+                    })
+                } else {
+                    Some(AlgorithmSpec::CEclCodec {
+                        codec: CodecSpec::parse(arg).ok()?,
+                        theta: 1.0,
+                        dense_first_epoch: true,
+                    })
+                }
+            }
             "naive-cecl" => Some(AlgorithmSpec::NaiveCEcl {
                 k_frac: arg?.parse().ok()?,
                 theta: 1.0,
@@ -191,24 +220,34 @@ pub struct BuildCtx {
 
 /// The paper's α schedule (§D.1): Eq. (46) for the ECL
 /// `α = 1 / (η |N_i| (K − 1))` and Eq. (47) for the C-ECL
-/// `α = 1 / (η |N_i| (100K/k − 1))` — the compression stretches the
-/// effective consensus interval.
+/// `α = 1 / (η |N_i| (K/τ − 1))` — the compression stretches the
+/// effective consensus interval by the Eq. (7) contraction τ (τ = k for
+/// the paper's `rand_k%`; other codecs plug in their own τ).
 pub fn paper_alpha(eta: f32, degree: usize, local_steps: usize,
-                   k_frac: f64) -> f32 {
-    let k_eff = local_steps as f64 / k_frac.clamp(1e-6, 1.0);
+                   tau: f64) -> f32 {
+    let k_eff = local_steps as f64 / tau.clamp(1e-6, 1.0);
     let denom = eta as f64 * degree as f64 * (k_eff - 1.0).max(1e-6);
     (1.0 / denom) as f32
 }
 
-fn build_cecl(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Option<CEclNode> {
+/// The wire codec for a `k_frac`-style spec: the paper's explicit-index
+/// rand-k accounting (8 B per kept coordinate).
+fn rand_k_codec(k_frac: f64) -> CodecSpec {
+    CodecSpec::RandK {
+        k_frac,
+        mode: WireMode::Explicit,
+    }
+}
+
+fn build_cecl(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Result<CEclNode> {
     match spec {
-        AlgorithmSpec::Ecl { theta } => Some(CEclNode::new(
+        AlgorithmSpec::Ecl { theta } => CEclNode::new(
             ctx,
-            1.0,
+            rand_k_codec(1.0),
             *theta,
             0,
             DualRule::CompressDiff,
-        )),
+        ),
         AlgorithmSpec::CEcl {
             k_frac,
             theta,
@@ -219,50 +258,66 @@ fn build_cecl(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Option<CEclNode> {
             } else {
                 0
             };
-            Some(CEclNode::new(
+            CEclNode::new(
                 ctx,
-                *k_frac,
+                rand_k_codec(*k_frac),
                 *theta,
                 dense_rounds,
                 DualRule::CompressDiff,
-            ))
+            )
         }
-        AlgorithmSpec::NaiveCEcl { k_frac, theta } => Some(CEclNode::new(
+        AlgorithmSpec::NaiveCEcl { k_frac, theta } => CEclNode::new(
             ctx,
-            *k_frac,
+            rand_k_codec(*k_frac),
             *theta,
             0,
             DualRule::CompressY,
-        )),
-        _ => None,
+        ),
+        AlgorithmSpec::CEclCodec {
+            codec,
+            theta,
+            dense_first_epoch,
+        } => {
+            let dense_rounds = if *dense_first_epoch {
+                ctx.rounds_per_epoch
+            } else {
+                0
+            };
+            // Eq. (13) needs fixed-ω linearity; everything else runs
+            // the naive Eq. (11) rule.
+            CEclNode::new(ctx, codec.clone(), *theta, dense_rounds,
+                          rule_for_codec(codec))
+        }
+        other => bail!("{} is not a C-ECL-family spec", other.name()),
     }
 }
 
 /// Build the per-node protocol for the blocking (threaded) engine.
-pub fn build_node(spec: &AlgorithmSpec, ctx: &BuildCtx) -> Box<dyn NodeAlgorithm> {
-    match spec {
+pub fn build_node(spec: &AlgorithmSpec,
+                  ctx: &BuildCtx) -> Result<Box<dyn NodeAlgorithm>> {
+    Ok(match spec {
         AlgorithmSpec::Sgd => Box::new(SgdNode),
         AlgorithmSpec::DPsgd => Box::new(DPsgdNode::new(ctx)),
         AlgorithmSpec::PowerGossip { iters } => {
             Box::new(PowerGossipNode::new(ctx, *iters))
         }
-        other => Box::new(build_cecl(other, ctx).expect("cecl family")),
-    }
+        other => Box::new(build_cecl(other, ctx)?),
+    })
 }
 
 /// Build the same protocol as a poll-driven state machine for the
 /// virtual-time engine.  Compressed duals always run the native fused
 /// path here (the PJRT kernel path is a threaded-engine option).
 pub fn build_machine(spec: &AlgorithmSpec,
-                     ctx: &BuildCtx) -> Box<dyn NodeStateMachine> {
-    match spec {
+                     ctx: &BuildCtx) -> Result<Box<dyn NodeStateMachine>> {
+    Ok(match spec {
         AlgorithmSpec::Sgd => Box::new(SgdNode),
         AlgorithmSpec::DPsgd => Box::new(DPsgdNode::new(ctx)),
         AlgorithmSpec::PowerGossip { iters } => {
             Box::new(PowerGossipNode::new(ctx, *iters))
         }
-        other => Box::new(build_cecl(other, ctx).expect("cecl family")),
-    }
+        other => Box::new(build_cecl(other, ctx)?),
+    })
 }
 
 /// Blocking driver for single-phase state machines over the threaded
@@ -352,6 +407,45 @@ mod tests {
         );
         assert_eq!(AlgorithmSpec::parse("cecl"), None);
         assert_eq!(AlgorithmSpec::parse("bogus"), None);
+    }
+
+    #[test]
+    fn spec_parsing_codec_forms() {
+        assert_eq!(
+            AlgorithmSpec::parse("cecl:qsgd:4"),
+            Some(AlgorithmSpec::CEclCodec {
+                codec: CodecSpec::Qsgd { bits: 4 },
+                theta: 1.0,
+                dense_first_epoch: true,
+            })
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("cecl:ef+top_k:0.01"),
+            Some(AlgorithmSpec::CEclCodec {
+                codec: CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK {
+                    k_frac: 0.01,
+                })),
+                theta: 1.0,
+                dense_first_epoch: true,
+            })
+        );
+        // Numeric arguments stay on the paper's rand-k path.
+        assert!(matches!(
+            AlgorithmSpec::parse("cecl:0.2"),
+            Some(AlgorithmSpec::CEcl { .. })
+        ));
+        // Broken codec specs do not parse.
+        assert_eq!(AlgorithmSpec::parse("cecl:qsgd:99"), None);
+        assert_eq!(AlgorithmSpec::parse("cecl:nope:1"), None);
+        // Names mark the Eq. 11 fallback for non-linear codecs.
+        assert_eq!(
+            AlgorithmSpec::parse("cecl:qsgd:4").unwrap().name(),
+            "C-ECL [qsgd 4b] (Eq.11)"
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("cecl:rand_k:0.1:values").unwrap().name(),
+            "C-ECL [rand_k 10% vo]"
+        );
     }
 
     #[test]

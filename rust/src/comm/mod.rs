@@ -25,7 +25,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use crate::compress::CooVec;
+use crate::compress::{CooVec, Frame};
 use crate::graph::Graph;
 
 /// What can cross an edge.
@@ -33,8 +33,12 @@ use crate::graph::Graph;
 pub enum Msg {
     /// Dense f32 payload (model parameters, dual variables, PG halves).
     Dense(Vec<f32>),
-    /// Sparse COO payload (compressed dual updates).
+    /// Sparse COO payload (PJRT interop; the codec wire uses `Frame`).
     Sparse(CooVec),
+    /// Encoded codec frame (compressed dual updates): an owned byte
+    /// buffer whose length *is* the metered wire size — decoded by the
+    /// per-edge `EdgeCodec` at the receiver.
+    Frame(Frame),
     /// Scalar control value (losses for aggregation etc.).
     Scalar(f64),
 }
@@ -52,6 +56,9 @@ pub enum CommError {
     NoEdge { node: usize, peer: usize },
     /// The peer's endpoint was dropped (its thread exited or panicked).
     Disconnected { node: usize, peer: usize },
+    /// A payload failed validation while decoding (corrupt indices,
+    /// truncated frame) — carries the codec layer's rendered error.
+    Corrupt { detail: String },
 }
 
 impl fmt::Display for CommError {
@@ -66,6 +73,9 @@ impl fmt::Display for CommError {
             CommError::Disconnected { node, peer } => {
                 write!(f, "node {node}: peer {peer} hung up")
             }
+            CommError::Corrupt { detail } => {
+                write!(f, "corrupt payload: {detail}")
+            }
         }
     }
 }
@@ -79,6 +89,7 @@ impl Msg {
         match self {
             Msg::Dense(v) => 4 * v.len(),
             Msg::Sparse(c) => c.wire_bytes(),
+            Msg::Frame(f) => f.wire_bytes(),
             Msg::Scalar(_) => 8,
         }
     }
@@ -88,18 +99,23 @@ impl Msg {
         match self {
             Msg::Dense(_) => "dense",
             Msg::Sparse(_) => "sparse",
+            Msg::Frame(_) => "frame",
             Msg::Scalar(_) => "scalar",
         }
     }
 
-    /// Tensor payload as a dense vector (sparse payloads materialize).
+    /// Tensor payload as a dense vector (sparse payloads materialize
+    /// after index validation — a corrupt index is a typed error, never
+    /// a panic).  Frames need their edge codec and cannot densify here.
     pub fn into_dense(self) -> Result<Vec<f32>, CommError> {
         match self {
             Msg::Dense(v) => Ok(v),
-            Msg::Sparse(c) => Ok(c.to_dense()),
-            Msg::Scalar(_) => Err(CommError::WrongPayload {
+            Msg::Sparse(c) => c.try_to_dense().map_err(|e| CommError::Corrupt {
+                detail: e.to_string(),
+            }),
+            other => Err(CommError::WrongPayload {
                 expected: "tensor",
-                got: "scalar",
+                got: other.kind(),
             }),
         }
     }
@@ -110,6 +126,17 @@ impl Msg {
             Msg::Sparse(c) => Ok(c),
             other => Err(CommError::WrongPayload {
                 expected: "sparse",
+                got: other.kind(),
+            }),
+        }
+    }
+
+    /// Codec frame, or a typed error for any other variant.
+    pub fn into_frame(self) -> Result<Frame, CommError> {
+        match self {
+            Msg::Frame(f) => Ok(f),
+            other => Err(CommError::WrongPayload {
+                expected: "frame",
                 got: other.kind(),
             }),
         }
@@ -441,6 +468,43 @@ mod tests {
         assert_eq!(drained[0].0, 3);
         assert_eq!(drained[1].0, 1);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn frames_route_and_meter_by_buffer_length() {
+        use crate::compress::{CodecSpec, EdgeCtx, WireMode};
+        let g = Graph::chain(2);
+        let (mut comms, meter) = build_bus(&g);
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        let spec = CodecSpec::RandK { k_frac: 0.5, mode: WireMode::Explicit };
+        let mut codec = spec.build();
+        let ctx = EdgeCtx { seed: 1, edge: 0, round: 0, receiver: 1, dim: 64 };
+        let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let frame = codec.encode(&x, &ctx);
+        let want_bytes = frame.wire_bytes();
+        assert!(want_bytes > 0 && want_bytes % 8 == 0);
+        c0.send(1, Msg::Frame(frame)).unwrap();
+        // Metered size is the serialized buffer length, nothing inferred.
+        assert_eq!(meter.bytes_sent(0) as usize, want_bytes);
+        let got = c1.recv(0).unwrap().into_frame().unwrap();
+        assert_eq!(got.wire_bytes(), want_bytes);
+        assert_eq!(codec.decode(&got, &ctx).unwrap().len(), 64);
+        // Frames are not densifiable without their codec.
+        let err = Msg::Frame(got).into_dense().unwrap_err();
+        assert_eq!(
+            err,
+            CommError::WrongPayload { expected: "tensor", got: "frame" }
+        );
+    }
+
+    #[test]
+    fn corrupt_sparse_payload_is_typed_error() {
+        let mut coo = CooVec::gather(&[1.0, 2.0, 3.0], &[0, 2]);
+        coo.idx[1] = 999; // corruption past the trust boundary
+        let err = Msg::Sparse(coo).into_dense().unwrap_err();
+        assert!(matches!(err, CommError::Corrupt { .. }), "{err}");
+        assert!(err.to_string().contains("out of range"));
     }
 
     #[test]

@@ -1,0 +1,1521 @@
+//! Edge codecs: stateful, byte-exact compression of per-edge messages.
+//!
+//! The paper treats the compression operator `comp` (Assumption 1) as a
+//! black box; the old `Compressor` trait materialized it as an f32
+//! `CooVec` and left the wire size to be *inferred* from the payload
+//! enum.  This module replaces that with a first-class codec API:
+//!
+//! * [`Frame`] — an owned, serialized byte buffer.  `Frame::wire_bytes()`
+//!   *is* the metered wire size; nothing is inferred.
+//! * [`EdgeCtx`] — everything both endpoints of an edge share for one
+//!   message: edge id, round, receiving direction, dimension, and the
+//!   shared-seed RNG derivation (`Pcg::derive(seed, [EDGE_MASK, edge,
+//!   round, receiver])`, identical at both ends — Alg. 1 lines 5–6
+//!   "can be omitted").
+//! * [`EdgeCodec`] — `encode(&mut self, x, ctx) -> Frame` /
+//!   `decode(&mut self, frame, ctx) -> Result<Vec<f32>>`.  Codecs are
+//!   `&mut self` so they can carry per-edge state (error-feedback
+//!   residuals); decoding validates every byte and surfaces typed
+//!   [`CodecError`]s instead of panicking on corrupt frames.
+//! * [`CodecSpec`] — the parseable, `Clone + PartialEq` description
+//!   (`rand_k:0.1`, `rand_k:0.1:values`, `top_k:0.01`, `qsgd:4`,
+//!   `sign`, `ef+top_k:0.01`, `identity`) that the CLI, experiment
+//!   drivers, and both execution engines thread around; `build()` turns
+//!   it into a fresh per-edge codec instance.
+//!
+//! ## Codec families
+//!
+//! | spec | wire bytes (dim d, nnz m) | fixed-ω linear (Eq. 8) | Eq. 13? |
+//! |---|---|---|---|
+//! | `identity` | `4d` | yes | yes (it *is* ECL) |
+//! | `rand_k:K` | `8m` (explicit u32 idx + f32 val) | yes | yes |
+//! | `rand_k:K:values` | `4m` (mask re-derived from the shared seed) | yes | yes |
+//! | `top_k:K` | `8m` | **no** (value-dependent ω) | Eq. 11 only |
+//! | `qsgd:B` | `4⌈d/512⌉ + ⌈dB/8⌉` (bucket norms + B-bit codes) | **no** | Eq. 11 only |
+//! | `sign` | `4 + ⌈d/8⌉` (scale + sign bits) | **no** | Eq. 11 only |
+//! | `ef+<c>` | inner | **no** (stateful) | Eq. 11 only |
+//!
+//! Codecs that are linear for fixed ω and whose support is derivable
+//! from the shared seed ([`EdgeCodec::sparse_support`]) license the
+//! Eq. (13) rewrite `comp(y − z) = comp(y) − comp(z)`; everything else
+//! runs the C-ECL dual update under the naive Eq. (11) rule.
+
+use std::fmt;
+
+use super::RandK;
+use crate::util::rng::{streams, Pcg};
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// Typed decode/spec failure.  Decoding a corrupt or truncated frame
+/// must *never* panic (a retransmitted frame in a 512-node simulation
+/// would abort the whole run) — every malformed input maps here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// Frame length differs from what the codec requires on this edge.
+    Length { expected: usize, got: usize },
+    /// Frame length is not a whole number of records.
+    Ragged { got: usize, record: usize },
+    /// A decoded index falls outside the vector dimension.
+    IndexOutOfRange { idx: u32, dim: usize },
+    /// Indices are not strictly increasing (duplicate or reordered).
+    UnsortedIndex { pos: usize },
+    /// A decoded scalar field (norm/scale) is NaN or infinite — the
+    /// whole vector would be poisoned.
+    NonFiniteScalar,
+    /// The frame's index set does not match the shared-seed derived
+    /// mask (e.g. a frame truncated by a whole record, or an in-range
+    /// index flip): counts plus the first diverging position.
+    SupportMismatch { expect: usize, got: usize, pos: usize },
+    /// Parallel index/value arrays have different lengths.
+    ArityMismatch { idx: usize, vals: usize },
+    /// Codec spec string / parameter validation failure.
+    BadSpec(String),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Length { expected, got } => {
+                write!(f, "frame length {got} B, codec expects {expected} B")
+            }
+            CodecError::Ragged { got, record } => {
+                write!(f, "frame length {got} B is not a multiple of {record} B")
+            }
+            CodecError::IndexOutOfRange { idx, dim } => {
+                write!(f, "index {idx} out of range for dim {dim}")
+            }
+            CodecError::UnsortedIndex { pos } => {
+                write!(f, "index list not strictly increasing at position {pos}")
+            }
+            CodecError::NonFiniteScalar => {
+                write!(f, "scalar field (norm/scale) is not finite")
+            }
+            CodecError::SupportMismatch { expect, got, pos } => {
+                write!(
+                    f,
+                    "frame support ({got} coords) does not match the \
+                     shared-seed mask ({expect} coords); first \
+                     divergence at position {pos}"
+                )
+            }
+            CodecError::ArityMismatch { idx, vals } => {
+                write!(f, "{idx} indices vs {vals} values")
+            }
+            CodecError::BadSpec(s) => write!(f, "bad codec spec: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+// ---------------------------------------------------------------------
+// Frame + EdgeCtx
+// ---------------------------------------------------------------------
+
+/// An encoded message: an owned byte buffer.  Its length is exactly the
+/// number of payload bytes a real transport would carry — the quantity
+/// the [`Meter`](crate::comm::Meter) records.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Frame {
+    bytes: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(bytes: Vec<u8>) -> Frame {
+        Frame { bytes }
+    }
+
+    /// Metered wire size: the buffer length, nothing inferred.
+    pub fn wire_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Mutable access (tests corrupt frames through this).
+    pub fn bytes_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.bytes
+    }
+}
+
+/// Shared per-message context: both endpoints of an edge construct an
+/// identical `EdgeCtx` for a given `(edge, round, receiver)` triple, so
+/// shared-seed codecs (rand-k values-only, QSGD's stochastic rounding)
+/// can derive identical randomness without shipping it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeCtx {
+    /// Experiment seed.
+    pub seed: u64,
+    /// Undirected edge id (`Graph::edge_index`).
+    pub edge: usize,
+    /// Exchange round.
+    pub round: usize,
+    /// The *receiving* node id — the direction tag, so ω_{i|j} (what i
+    /// receives from j) differs from ω_{j|i}.
+    pub receiver: usize,
+    /// Dense dimension of the vectors on this edge.
+    pub dim: usize,
+}
+
+impl EdgeCtx {
+    /// The shared-seed RNG for this message (same derivation both ends).
+    pub fn mask_rng(&self) -> Pcg {
+        Pcg::derive(
+            self.seed,
+            &[
+                streams::EDGE_MASK,
+                self.edge as u64,
+                self.round as u64,
+                self.receiver as u64,
+            ],
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------
+
+/// A stateful per-edge compression codec.
+///
+/// One instance lives at each endpoint of each directed edge; `&mut
+/// self` lets implementations keep per-edge memory (the error-feedback
+/// residual).  Both endpoints must construct codecs from the same
+/// [`CodecSpec`] and feed them identical [`EdgeCtx`]s for the protocol
+/// to round-trip.
+pub trait EdgeCodec: Send {
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+
+    /// Whether `comp(x + y; ω) = comp(x; ω) + comp(y; ω)` holds exactly
+    /// for fixed ω (Eqs. 8–9) — required by the Eq. (13) dual rule.
+    fn is_linear_for_fixed_omega(&self) -> bool;
+
+    /// Serialize `comp(x; ω_ctx)` into an owned byte frame.
+    /// `x.len()` must equal `ctx.dim`.
+    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame;
+
+    /// Sparse-input encode fast path: `src(i)` yields coordinate `i` of
+    /// the input on demand.  Codecs with a seed-derivable support
+    /// (rand-k) evaluate it on the `|ω|` kept coordinates only, so the
+    /// Eq. (13) send hot path never materializes a dense vector.
+    /// `None` ⇒ the caller stages a dense input and calls [`encode`].
+    /// Must produce byte-identical frames to `encode` on the densified
+    /// input (pinned by tests).
+    fn encode_from(&mut self, _src: &dyn Fn(usize) -> f32,
+                   _ctx: &EdgeCtx) -> Option<Frame> {
+        None
+    }
+
+    /// Reconstruct the dense `comp(x; ω_ctx)` from a frame, validating
+    /// every byte.  Corrupt input returns a typed error, never panics.
+    fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError>;
+
+    /// Sparse fast path for codecs whose output is supported on `≪ d`
+    /// coordinates: decode a frame to `(sorted idx, vals)` without
+    /// materializing (or zero-filling) a dense vector.  `Ok(None)`
+    /// means "use [`EdgeCodec::decode`]".  The Eq. (13) receive hot
+    /// path relies on this to stay O(k·d) per message.
+    fn decode_sparse(
+        &mut self,
+        _frame: &Frame,
+        _ctx: &EdgeCtx,
+    ) -> Result<Option<(Vec<u32>, Vec<f32>)>, CodecError> {
+        Ok(None)
+    }
+
+    /// The sorted coordinate support of the decoded output, when it is
+    /// derivable from the shared seed alone (projection codecs: rand-k,
+    /// identity).  `None` for value-dependent codecs.  Licenses the
+    /// Eq. (13) rule together with fixed-ω linearity.
+    fn sparse_support(&self, _ctx: &EdgeCtx) -> Option<Vec<u32>> {
+        None
+    }
+
+    /// Whether the decoded output always covers every coordinate
+    /// (identity): the Eq. (13) receive path then runs the fused dense
+    /// update directly instead of materializing a 0..d support list.
+    fn is_full_support(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------
+// Byte helpers (little-endian, bounds pre-checked by callers)
+// ---------------------------------------------------------------------
+
+#[inline]
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn get_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+#[inline]
+fn get_f32(b: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// LSB-first bit packer for the sub-byte codecs (QSGD levels, sign bits).
+struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    #[inline]
+    fn push(&mut self, code: u32, bits: u32) {
+        debug_assert!(bits <= 32 && (bits == 32 || code < (1 << bits)));
+        self.acc |= (code as u64) << self.nbits;
+        self.nbits += bits;
+        while self.nbits >= 8 {
+            self.buf.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc & 0xFF) as u8);
+        }
+        self.buf
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> BitReader<'a> {
+        BitReader {
+            bytes,
+            pos: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    fn read(&mut self, bits: u32) -> u32 {
+        while self.nbits < bits {
+            let byte = if self.pos < self.bytes.len() {
+                self.bytes[self.pos]
+            } else {
+                0 // length pre-validated; only tail padding lands here
+            };
+            self.pos += 1;
+            self.acc |= (byte as u64) << self.nbits;
+            self.nbits += 8;
+        }
+        let v = (self.acc & ((1u64 << bits) - 1)) as u32;
+        self.acc >>= bits;
+        self.nbits -= bits;
+        v
+    }
+}
+
+/// Shared sparse decoder for the explicit `[u32 idx]*m ++ [f32 val]*m`
+/// layout (rand-k explicit mode and top-k): validates record alignment,
+/// index range, and strict ordering before touching any memory.
+fn decode_explicit_sparse(
+    bytes: &[u8],
+    dim: usize,
+) -> Result<(Vec<u32>, Vec<f32>), CodecError> {
+    if bytes.len() % 8 != 0 {
+        return Err(CodecError::Ragged {
+            got: bytes.len(),
+            record: 8,
+        });
+    }
+    let m = bytes.len() / 8;
+    if m > dim {
+        return Err(CodecError::Length {
+            expected: 8 * dim,
+            got: bytes.len(),
+        });
+    }
+    let mut idxs = Vec::with_capacity(m);
+    let mut vals = Vec::with_capacity(m);
+    let mut prev: i64 = -1;
+    for k in 0..m {
+        let idx = get_u32(bytes, 4 * k);
+        if (idx as usize) >= dim {
+            return Err(CodecError::IndexOutOfRange { idx, dim });
+        }
+        if (idx as i64) <= prev {
+            return Err(CodecError::UnsortedIndex { pos: k });
+        }
+        prev = idx as i64;
+        idxs.push(idx);
+        vals.push(get_f32(bytes, 4 * (m + k)));
+    }
+    Ok((idxs, vals))
+}
+
+/// Dense form of [`decode_explicit_sparse`].
+fn decode_explicit(bytes: &[u8], dim: usize) -> Result<Vec<f32>, CodecError> {
+    let (idxs, vals) = decode_explicit_sparse(bytes, dim)?;
+    let mut out = vec![0.0f32; dim];
+    for (&i, &v) in idxs.iter().zip(&vals) {
+        out[i as usize] = v;
+    }
+    Ok(out)
+}
+
+/// Shared encoder for the explicit layout (indices must be sorted).
+fn encode_explicit(x: &[f32], idx: &[u32]) -> Frame {
+    let mut buf = Vec::with_capacity(8 * idx.len());
+    for &i in idx {
+        put_u32(&mut buf, i);
+    }
+    for &i in idx {
+        put_f32(&mut buf, x[i as usize]);
+    }
+    Frame::new(buf)
+}
+
+// ---------------------------------------------------------------------
+// Concrete codecs
+// ---------------------------------------------------------------------
+
+/// Wire mode for the shared-seed mask codecs: ship `(idx, val)` pairs
+/// (the paper's COO accounting, 8 B/coord) or values only (4 B/coord,
+/// mask regenerated from the shared seed at both endpoints).  The old
+/// `wire_bytes_values_only` ablation split is exactly this enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireMode {
+    Explicit,
+    ValuesOnly,
+}
+
+/// Identity: dense f32 frames, byte-identical to the uncompressed ECL
+/// wire (4 B/coord).  τ = 1 — C-ECL with this codec *is* ECL
+/// (Corollary 1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdentityCodec;
+
+impl EdgeCodec for IdentityCodec {
+    fn name(&self) -> String {
+        "identity".to_string()
+    }
+
+    fn is_linear_for_fixed_omega(&self) -> bool {
+        true
+    }
+
+    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
+        debug_assert_eq!(x.len(), ctx.dim);
+        let mut buf = Vec::with_capacity(4 * x.len());
+        for &v in x {
+            put_f32(&mut buf, v);
+        }
+        Frame::new(buf)
+    }
+
+    fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        let b = frame.bytes();
+        if b.len() != 4 * ctx.dim {
+            return Err(CodecError::Length {
+                expected: 4 * ctx.dim,
+                got: b.len(),
+            });
+        }
+        Ok((0..ctx.dim).map(|i| get_f32(b, 4 * i)).collect())
+    }
+
+    fn sparse_support(&self, ctx: &EdgeCtx) -> Option<Vec<u32>> {
+        Some((0..ctx.dim as u32).collect())
+    }
+
+    fn is_full_support(&self) -> bool {
+        true
+    }
+}
+
+/// The paper's Example 1 (`rand_k%`) as a codec: keep each coordinate
+/// with probability k, ω derived from the shared seed.  Linear for
+/// fixed ω (Eqs. 8–9); τ = k.
+#[derive(Debug, Clone, Copy)]
+pub struct RandKCodec {
+    pub k_frac: f64,
+    pub mode: WireMode,
+}
+
+impl RandKCodec {
+    fn mask(&self, ctx: &EdgeCtx) -> Vec<u32> {
+        // Struct literal on purpose: k was validated by `CodecSpec`.
+        let op = RandK { k_frac: self.k_frac };
+        op.sample_mask(ctx.dim, &mut ctx.mask_rng())
+    }
+}
+
+impl EdgeCodec for RandKCodec {
+    fn name(&self) -> String {
+        let pct = (self.k_frac * 100.0).round() as u32;
+        match self.mode {
+            WireMode::Explicit => format!("rand_k {pct}%"),
+            WireMode::ValuesOnly => format!("rand_k {pct}% vo"),
+        }
+    }
+
+    fn is_linear_for_fixed_omega(&self) -> bool {
+        true
+    }
+
+    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
+        debug_assert_eq!(x.len(), ctx.dim);
+        let mask = self.mask(ctx);
+        match self.mode {
+            WireMode::Explicit => encode_explicit(x, &mask),
+            WireMode::ValuesOnly => {
+                let mut buf = Vec::with_capacity(4 * mask.len());
+                for &i in &mask {
+                    put_f32(&mut buf, x[i as usize]);
+                }
+                Frame::new(buf)
+            }
+        }
+    }
+
+    fn encode_from(&mut self, src: &dyn Fn(usize) -> f32,
+                   ctx: &EdgeCtx) -> Option<Frame> {
+        let mask = self.mask(ctx);
+        let record = match self.mode {
+            WireMode::Explicit => 8,
+            WireMode::ValuesOnly => 4,
+        };
+        let mut buf = Vec::with_capacity(record * mask.len());
+        if self.mode == WireMode::Explicit {
+            for &i in &mask {
+                put_u32(&mut buf, i);
+            }
+        }
+        for &i in &mask {
+            put_f32(&mut buf, src(i as usize));
+        }
+        Some(Frame::new(buf))
+    }
+
+    fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        let (mask, vals) = self
+            .decode_sparse(frame, ctx)?
+            .expect("rand-k decode is always sparse");
+        let mut out = vec![0.0f32; ctx.dim];
+        for (&i, &v) in mask.iter().zip(&vals) {
+            out[i as usize] = v;
+        }
+        Ok(out)
+    }
+
+    fn decode_sparse(
+        &mut self,
+        frame: &Frame,
+        ctx: &EdgeCtx,
+    ) -> Result<Option<(Vec<u32>, Vec<f32>)>, CodecError> {
+        match self.mode {
+            WireMode::Explicit => {
+                let (idxs, vals) =
+                    decode_explicit_sparse(frame.bytes(), ctx.dim)?;
+                // The index set must equal the shared-seed mask — this
+                // catches whole-record truncation (which stays 8-byte
+                // aligned and would otherwise shift the value block).
+                let mask = self.mask(ctx);
+                if idxs != mask {
+                    let pos = idxs
+                        .iter()
+                        .zip(&mask)
+                        .position(|(a, b)| a != b)
+                        .unwrap_or_else(|| idxs.len().min(mask.len()));
+                    return Err(CodecError::SupportMismatch {
+                        expect: mask.len(),
+                        got: idxs.len(),
+                        pos,
+                    });
+                }
+                Ok(Some((idxs, vals)))
+            }
+            WireMode::ValuesOnly => {
+                let mask = self.mask(ctx);
+                let b = frame.bytes();
+                if b.len() != 4 * mask.len() {
+                    return Err(CodecError::Length {
+                        expected: 4 * mask.len(),
+                        got: b.len(),
+                    });
+                }
+                let vals = (0..mask.len()).map(|k| get_f32(b, 4 * k)).collect();
+                Ok(Some((mask, vals)))
+            }
+        }
+    }
+
+    fn sparse_support(&self, ctx: &EdgeCtx) -> Option<Vec<u32>> {
+        Some(self.mask(ctx))
+    }
+}
+
+/// Deterministic top-k by magnitude, explicit-index wire.  ω depends on
+/// the values, so it is NOT linear for fixed ω — Eq. (11) rule only.
+#[derive(Debug, Clone, Copy)]
+pub struct TopKCodec {
+    pub k_frac: f64,
+}
+
+impl TopKCodec {
+    fn k_of(&self, dim: usize) -> usize {
+        (((dim as f64) * self.k_frac).round() as usize).clamp(1, dim)
+    }
+}
+
+impl EdgeCodec for TopKCodec {
+    fn name(&self) -> String {
+        format!("top_k {}%", (self.k_frac * 100.0).round() as u32)
+    }
+
+    fn is_linear_for_fixed_omega(&self) -> bool {
+        false
+    }
+
+    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
+        debug_assert_eq!(x.len(), ctx.dim);
+        let k = self.k_of(x.len());
+        let mut order: Vec<u32> = (0..x.len() as u32).collect();
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            x[b as usize]
+                .abs()
+                .partial_cmp(&x[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut idx: Vec<u32> = order[..k].to_vec();
+        idx.sort_unstable();
+        encode_explicit(x, &idx)
+    }
+
+    fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        // Top-k frames carry exactly k_of(d) records — pinning the
+        // count catches whole-record truncation, which would otherwise
+        // stay 8-byte aligned and shift the value block.
+        let expected = 8 * self.k_of(ctx.dim);
+        if frame.bytes().len() != expected {
+            return Err(CodecError::Length {
+                expected,
+                got: frame.bytes().len(),
+            });
+        }
+        decode_explicit(frame.bytes(), ctx.dim)
+    }
+}
+
+/// QSGD-style b-bit stochastic quantization (Alistarh et al. 2017),
+/// **bucketed**: the vector is split into buckets of
+/// [`QsgdCodec::BUCKET`] coordinates, each quantized against its own
+/// L2 norm — `comp(x)_i = ‖x_b‖₂ · sign(x_i) · ξ_i/s` with `ξ_i` the
+/// stochastic rounding of `|x_i|/‖x_b‖₂ · s` and `s = 2^{b−1} − 1`
+/// levels.  Without bucketing the variance grows like `√d/s` and the
+/// operator stops being a contraction at realistic d; per-bucket norms
+/// keep it dimension-independent.  Wire: one f32 norm per bucket +
+/// d sign-magnitude codes of `bits` bits.  Unbiased but not linear for
+/// fixed ω — Eq. (11) rule only.  The rounding draws come from the
+/// shared-seed RNG, so encode is deterministic per
+/// `(seed, edge, round, receiver)`.
+#[derive(Debug, Clone, Copy)]
+pub struct QsgdCodec {
+    pub bits: u8,
+}
+
+impl QsgdCodec {
+    /// Coordinates per quantization bucket (one transmitted norm each).
+    pub const BUCKET: usize = 512;
+
+    fn levels(&self) -> u32 {
+        (1u32 << (self.bits - 1)) - 1
+    }
+
+    fn n_buckets(dim: usize) -> usize {
+        (dim + Self::BUCKET - 1) / Self::BUCKET
+    }
+}
+
+impl EdgeCodec for QsgdCodec {
+    fn name(&self) -> String {
+        format!("qsgd {}b", self.bits)
+    }
+
+    fn is_linear_for_fixed_omega(&self) -> bool {
+        false
+    }
+
+    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
+        debug_assert_eq!(x.len(), ctx.dim);
+        let s = self.levels();
+        let bits = self.bits as u32;
+        let mut rng = ctx.mask_rng();
+        let norms: Vec<f32> = x
+            .chunks(Self::BUCKET)
+            .map(|c| {
+                c.iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum::<f64>()
+                    .sqrt() as f32
+            })
+            .collect();
+        let mut buf = Vec::with_capacity(
+            4 * norms.len() + (x.len() * bits as usize + 7) / 8,
+        );
+        for &n in &norms {
+            put_f32(&mut buf, n);
+        }
+        let mut w = BitWriter { buf, acc: 0, nbits: 0 };
+        for (i, &v) in x.iter().enumerate() {
+            let norm = norms[i / Self::BUCKET];
+            let code = if norm > 0.0 {
+                let a = (v.abs() as f64 / norm as f64) * s as f64;
+                let lo = a.floor();
+                let mut level = lo as u32;
+                if rng.f64() < a - lo {
+                    level += 1;
+                }
+                let level = level.min(s);
+                let sign = if v < 0.0 { 1u32 } else { 0u32 };
+                (sign << (bits - 1)) | level
+            } else {
+                0
+            };
+            w.push(code, bits);
+        }
+        Frame::new(w.finish())
+    }
+
+    fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        let bits = self.bits as u32;
+        let nb = Self::n_buckets(ctx.dim);
+        let expected = 4 * nb + (ctx.dim * bits as usize + 7) / 8;
+        let b = frame.bytes();
+        if b.len() != expected {
+            return Err(CodecError::Length {
+                expected,
+                got: b.len(),
+            });
+        }
+        let mut norms = Vec::with_capacity(nb);
+        for k in 0..nb {
+            let n = get_f32(b, 4 * k);
+            if !n.is_finite() {
+                return Err(CodecError::NonFiniteScalar);
+            }
+            norms.push(n);
+        }
+        let s = self.levels() as f32;
+        let mut r = BitReader::new(&b[4 * nb..]);
+        let mut out = Vec::with_capacity(ctx.dim);
+        for i in 0..ctx.dim {
+            let code = r.read(bits);
+            let level = code & ((1 << (bits - 1)) - 1);
+            let sign = if code >> (bits - 1) == 1 { -1.0f32 } else { 1.0 };
+            out.push(sign * (level as f32 / s) * norms[i / Self::BUCKET]);
+        }
+        Ok(out)
+    }
+}
+
+/// Sign + norm (signSGD with majority-scale, Bernstein et al. 2018):
+/// `comp(x) = (‖x‖₁/d) · sign(x)`.  Wire: one f32 scale + d sign bits.
+/// τ = ‖x‖₁²/(d‖x‖²) — ≈ 2/π on Gaussian inputs.  Not linear — Eq. (11)
+/// rule only.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignNormCodec;
+
+impl EdgeCodec for SignNormCodec {
+    fn name(&self) -> String {
+        "sign".to_string()
+    }
+
+    fn is_linear_for_fixed_omega(&self) -> bool {
+        false
+    }
+
+    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
+        debug_assert_eq!(x.len(), ctx.dim);
+        let scale = (x.iter().map(|&v| v.abs() as f64).sum::<f64>()
+            / x.len().max(1) as f64) as f32;
+        let mut buf = Vec::with_capacity(4 + (x.len() + 7) / 8);
+        put_f32(&mut buf, scale);
+        let mut w = BitWriter { buf, acc: 0, nbits: 0 };
+        for &v in x {
+            w.push(u32::from(v < 0.0), 1);
+        }
+        Frame::new(w.finish())
+    }
+
+    fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        let expected = 4 + (ctx.dim + 7) / 8;
+        let b = frame.bytes();
+        if b.len() != expected {
+            return Err(CodecError::Length {
+                expected,
+                got: b.len(),
+            });
+        }
+        let scale = get_f32(b, 0);
+        if !scale.is_finite() {
+            return Err(CodecError::NonFiniteScalar);
+        }
+        let mut r = BitReader::new(&b[4..]);
+        Ok((0..ctx.dim)
+            .map(|_| if r.read(1) == 1 { -scale } else { scale })
+            .collect())
+    }
+}
+
+/// Error-feedback combinator (EF-SGD / LEAD lineage): keeps the
+/// residual `e ← v − comp(v)` of each encode and folds it into the next
+/// (`v = x + e`), so the compression error is re-injected instead of
+/// lost.  Per-edge state lives here — one instance per directed edge.
+/// Stateful ⇒ not linear for fixed ω — Eq. (11) rule only.
+pub struct ErrorFeedback {
+    inner: Box<dyn EdgeCodec>,
+    residual: Vec<f32>,
+    carry: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(inner: Box<dyn EdgeCodec>) -> ErrorFeedback {
+        ErrorFeedback {
+            inner,
+            residual: Vec::new(),
+            carry: Vec::new(),
+        }
+    }
+
+    /// Current residual memory (tests inspect convergence).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+}
+
+impl EdgeCodec for ErrorFeedback {
+    fn name(&self) -> String {
+        format!("ef+{}", self.inner.name())
+    }
+
+    fn is_linear_for_fixed_omega(&self) -> bool {
+        false
+    }
+
+    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
+        if self.residual.len() != x.len() {
+            self.residual = vec![0.0; x.len()];
+        }
+        self.carry.clear();
+        self.carry
+            .extend(x.iter().zip(&self.residual).map(|(&a, &b)| a + b));
+        let frame = self.inner.encode(&self.carry, ctx);
+        // What the receiver will reconstruct — decode our own frame.
+        match self.inner.decode(&frame, ctx) {
+            Ok(est) => {
+                for ((r, &v), &e) in
+                    self.residual.iter_mut().zip(&self.carry).zip(&est)
+                {
+                    *r = v - e;
+                }
+            }
+            Err(_) => self.residual.iter_mut().for_each(|r| *r = 0.0),
+        }
+        frame
+    }
+
+    fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        self.inner.decode(frame, ctx)
+    }
+}
+
+// ---------------------------------------------------------------------
+// CodecSpec: the parseable description
+// ---------------------------------------------------------------------
+
+/// Declarative codec selection, threaded from the CLI (`--codec ...`)
+/// through `ExperimentSpec` into per-edge codec instances on both
+/// execution engines.
+///
+/// Grammar: `identity` | `rand_k:K[:values]` | `top_k:K` | `qsgd:B` |
+/// `sign` | `ef+<codec>` — with `K ∈ (0, 1]` a fraction and
+/// `B ∈ [2, 8]` bits.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecSpec {
+    Identity,
+    RandK { k_frac: f64, mode: WireMode },
+    TopK { k_frac: f64 },
+    Qsgd { bits: u8 },
+    SignNorm,
+    ErrorFeedback(Box<CodecSpec>),
+}
+
+impl CodecSpec {
+    /// Parse a spec string (see type-level grammar).
+    pub fn parse(s: &str) -> Result<CodecSpec, CodecError> {
+        let s = s.trim();
+        if let Some(rest) = s.strip_prefix("ef+") {
+            let inner = CodecSpec::parse(rest)?;
+            if matches!(inner, CodecSpec::ErrorFeedback(_)) {
+                return Err(CodecError::BadSpec("nested ef+ef".to_string()));
+            }
+            let spec = CodecSpec::ErrorFeedback(Box::new(inner));
+            spec.validate()?;
+            return Ok(spec);
+        }
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or("");
+        let args: Vec<&str> = parts.collect();
+        let frac = |a: &str| -> Result<f64, CodecError> {
+            a.parse::<f64>()
+                .map_err(|_| CodecError::BadSpec(format!("`{a}` is not a fraction")))
+        };
+        let spec = match (head, args.as_slice()) {
+            ("identity" | "dense", []) => CodecSpec::Identity,
+            ("rand_k" | "randk", [k]) => CodecSpec::RandK {
+                k_frac: frac(k)?,
+                mode: WireMode::Explicit,
+            },
+            ("rand_k" | "randk", [k, m]) => {
+                let mode = match *m {
+                    "values" | "vo" => WireMode::ValuesOnly,
+                    "explicit" | "coo" => WireMode::Explicit,
+                    other => {
+                        return Err(CodecError::BadSpec(format!(
+                            "unknown wire mode `{other}` (use values|explicit)"
+                        )))
+                    }
+                };
+                CodecSpec::RandK { k_frac: frac(k)?, mode }
+            }
+            ("top_k" | "topk", [k]) => CodecSpec::TopK { k_frac: frac(k)? },
+            ("qsgd", [b]) => CodecSpec::Qsgd {
+                bits: b.parse::<u8>().map_err(|_| {
+                    CodecError::BadSpec(format!("`{b}` is not a bit width"))
+                })?,
+            },
+            ("sign", []) => CodecSpec::SignNorm,
+            _ => {
+                return Err(CodecError::BadSpec(format!(
+                    "unknown codec `{s}` (grammar: identity | rand_k:K[:values] \
+                     | top_k:K | qsgd:B | sign | ef+<codec>)"
+                )))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parameter validation (k ranges, bit widths).
+    pub fn validate(&self) -> Result<(), CodecError> {
+        match self {
+            CodecSpec::Identity | CodecSpec::SignNorm => Ok(()),
+            CodecSpec::RandK { k_frac, .. } | CodecSpec::TopK { k_frac } => {
+                if *k_frac > 0.0 && *k_frac <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(CodecError::BadSpec(format!(
+                        "k must be in (0, 1], got {k_frac}"
+                    )))
+                }
+            }
+            CodecSpec::Qsgd { bits } => {
+                if (2..=8).contains(bits) {
+                    Ok(())
+                } else {
+                    Err(CodecError::BadSpec(format!(
+                        "qsgd bits must be in [2, 8], got {bits}"
+                    )))
+                }
+            }
+            CodecSpec::ErrorFeedback(inner) => inner.validate(),
+        }
+    }
+
+    /// Build a fresh per-edge codec instance.
+    pub fn build(&self) -> Box<dyn EdgeCodec> {
+        match self {
+            CodecSpec::Identity => Box::new(IdentityCodec),
+            CodecSpec::RandK { k_frac, mode } => Box::new(RandKCodec {
+                k_frac: *k_frac,
+                mode: *mode,
+            }),
+            CodecSpec::TopK { k_frac } => Box::new(TopKCodec { k_frac: *k_frac }),
+            CodecSpec::Qsgd { bits } => Box::new(QsgdCodec { bits: *bits }),
+            CodecSpec::SignNorm => Box::new(SignNormCodec),
+            CodecSpec::ErrorFeedback(inner) => {
+                Box::new(ErrorFeedback::new(inner.build()))
+            }
+        }
+    }
+
+    /// Display name (identical to `EdgeCodec::name` of the built
+    /// instance, without constructing one).
+    pub fn name(&self) -> String {
+        match self {
+            CodecSpec::Identity => "identity".to_string(),
+            CodecSpec::RandK { k_frac, mode } => {
+                let pct = (k_frac * 100.0).round() as u32;
+                match mode {
+                    WireMode::Explicit => format!("rand_k {pct}%"),
+                    WireMode::ValuesOnly => format!("rand_k {pct}% vo"),
+                }
+            }
+            CodecSpec::TopK { k_frac } => {
+                format!("top_k {}%", (k_frac * 100.0).round() as u32)
+            }
+            CodecSpec::Qsgd { bits } => format!("qsgd {bits}b"),
+            CodecSpec::SignNorm => "sign".to_string(),
+            CodecSpec::ErrorFeedback(inner) => format!("ef+{}", inner.name()),
+        }
+    }
+
+    /// The contraction parameter τ of Eq. (7), `E‖comp(x) − x‖² ≤
+    /// (1 − τ)‖x‖²`.  Exact for rand-k (τ = k) and identity (τ = 1);
+    /// a worst-case lower bound for top-k; the QSGD variance bound
+    /// rescaled to contraction form; the Gaussian-typical 2/π for sign.
+    /// Feeds the Eq. (47) α schedule.
+    pub fn tau(&self, dim: usize) -> f64 {
+        match self {
+            CodecSpec::Identity => 1.0,
+            CodecSpec::RandK { k_frac, .. } | CodecSpec::TopK { k_frac } => *k_frac,
+            CodecSpec::Qsgd { bits } => {
+                // Bucketed QSGD variance bound: min(B/s², √B/s) with B
+                // the bucket size — dimension-independent for d ≥ B.
+                // Eq. (7) reads E‖comp(x)−x‖² ≤ (1−τ)‖x‖², and the
+                // unscaled decode has error var·‖x‖², so τ = 1 − var.
+                // Low-bit QSGD (var ≥ 1) is NOT a contraction at all;
+                // it gets a conservative floor so the α schedule treats
+                // it as extreme compression instead of a mild one.
+                let s = ((1u32 << (bits - 1)) - 1) as f64;
+                let b = dim.clamp(1, QsgdCodec::BUCKET) as f64;
+                let var = (b / (s * s)).min(b.sqrt() / s);
+                (1.0 - var).max(0.01)
+            }
+            CodecSpec::SignNorm => 2.0 / std::f64::consts::PI,
+            CodecSpec::ErrorFeedback(inner) => inner.tau(dim),
+        }
+    }
+
+    /// Whether Eq. (8) additivity holds for fixed ω — the license for
+    /// the Eq. (13) dual rule.  Everything else runs under Eq. (11).
+    pub fn is_linear_for_fixed_omega(&self) -> bool {
+        matches!(self, CodecSpec::Identity | CodecSpec::RandK { .. })
+    }
+
+    /// Whether the codec is a full-rate mask (rand-k at k = 1): the
+    /// protocol then uses the cheaper dense wire (4 B/coord, no index
+    /// overhead), exactly like the uncompressed ECL.
+    pub fn is_effectively_dense(&self) -> bool {
+        matches!(self, CodecSpec::RandK { k_frac, .. } if *k_frac >= 1.0)
+    }
+
+    /// Analytic frame size at the *expected* support size — the wire
+    /// ablation's accounting (`nnz = round(k·d)`, no sampling noise).
+    pub fn nominal_frame_bytes(&self, dim: usize) -> usize {
+        match self {
+            CodecSpec::Identity => 4 * dim,
+            CodecSpec::RandK { k_frac, mode } => {
+                let nnz = ((dim as f64) * k_frac).round() as usize;
+                match mode {
+                    WireMode::Explicit => 8 * nnz,
+                    WireMode::ValuesOnly => 4 * nnz,
+                }
+            }
+            CodecSpec::TopK { k_frac } => {
+                let nnz = (((dim as f64) * k_frac).round() as usize).clamp(1, dim);
+                8 * nnz
+            }
+            CodecSpec::Qsgd { bits } => {
+                4 * QsgdCodec::n_buckets(dim) + (dim * *bits as usize + 7) / 8
+            }
+            CodecSpec::SignNorm => 4 + (dim + 7) / 8,
+            CodecSpec::ErrorFeedback(inner) => inner.nominal_frame_bytes(dim),
+        }
+    }
+}
+
+impl fmt::Display for CodecSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Empirically measure Eq. (7) for a codec: mean of
+/// `‖decode(encode(x)) − x‖² / ‖x‖²` over `trials` rounds (ω varies
+/// with the round through the shared-seed derivation).
+pub fn measure_codec_contraction(
+    spec: &CodecSpec,
+    x: &[f32],
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let norm: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    if norm == 0.0 {
+        return 0.0;
+    }
+    let mut codec = spec.build();
+    let mut acc = 0.0;
+    for t in 0..trials.max(1) {
+        let ctx = EdgeCtx {
+            seed,
+            edge: 0,
+            round: t,
+            receiver: 0,
+            dim: x.len(),
+        };
+        let frame = codec.encode(x, &ctx);
+        let dense = codec.decode(&frame, &ctx).expect("self-decode");
+        let err: f64 = x
+            .iter()
+            .zip(&dense)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum();
+        acc += err / norm;
+    }
+    acc / trials.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn ctx(dim: usize, round: usize) -> EdgeCtx {
+        EdgeCtx {
+            seed: 42,
+            edge: 3,
+            round,
+            receiver: 1,
+            dim,
+        }
+    }
+
+    fn all_specs() -> Vec<CodecSpec> {
+        vec![
+            CodecSpec::Identity,
+            CodecSpec::RandK { k_frac: 0.1, mode: WireMode::Explicit },
+            CodecSpec::RandK { k_frac: 0.1, mode: WireMode::ValuesOnly },
+            CodecSpec::TopK { k_frac: 0.05 },
+            CodecSpec::Qsgd { bits: 4 },
+            CodecSpec::SignNorm,
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK { k_frac: 0.1 })),
+        ]
+    }
+
+    #[test]
+    fn every_codec_roundtrips_deterministically_from_shared_seed() {
+        let d = 777;
+        let x = randn(d, 1);
+        for spec in all_specs() {
+            // Two independent codec instances (the two edge endpoints)
+            // must produce/consume identical frames from the shared ctx.
+            let mut enc = spec.build();
+            let mut enc2 = spec.build();
+            let mut dec = spec.build();
+            let c = ctx(d, 5);
+            let f1 = enc.encode(&x, &c);
+            let f2 = enc2.encode(&x, &c);
+            assert_eq!(f1, f2, "{}: encode not deterministic", spec.name());
+            assert_eq!(spec.name(), enc.name(), "spec/codec name drift");
+            let y1 = dec.decode(&f1, &c).unwrap();
+            let y2 = spec.build().decode(&f1, &c).unwrap();
+            assert_eq!(y1, y2, "{}: decode not deterministic", spec.name());
+            assert_eq!(y1.len(), d, "{}: wrong dim", spec.name());
+            // Metered size is the actual buffer length.
+            assert_eq!(f1.wire_bytes(), f1.bytes().len());
+        }
+    }
+
+    #[test]
+    fn identity_is_bit_exact_and_dense_sized() {
+        let d = 513;
+        let x = randn(d, 2);
+        let mut c = CodecSpec::Identity.build();
+        let e = ctx(d, 0);
+        let f = c.encode(&x, &e);
+        assert_eq!(f.wire_bytes(), 4 * d); // today's ECL dense accounting
+        let y = c.decode(&f, &e).unwrap();
+        for i in 0..d {
+            assert_eq!(x[i].to_bits(), y[i].to_bits(), "coord {i}");
+        }
+    }
+
+    #[test]
+    fn randk_wire_modes_one_mask_two_sizes() {
+        let d = 4096;
+        let x = randn(d, 3);
+        let e = ctx(d, 7);
+        let mut ex = CodecSpec::RandK { k_frac: 0.1, mode: WireMode::Explicit }
+            .build();
+        let mut vo = CodecSpec::RandK { k_frac: 0.1, mode: WireMode::ValuesOnly }
+            .build();
+        let fe = ex.encode(&x, &e);
+        let fv = vo.encode(&x, &e);
+        // Same shared-seed mask ⇒ values-only is exactly half the bytes.
+        assert_eq!(fe.wire_bytes(), 2 * fv.wire_bytes());
+        // Both decode to the same dense vector.
+        let ye = ex.decode(&fe, &e).unwrap();
+        let yv = vo.decode(&fv, &e).unwrap();
+        assert_eq!(ye, yv);
+        // Support matches the decoded nonzeros.
+        let support = ex.sparse_support(&e).unwrap();
+        assert_eq!(support, vo.sparse_support(&e).unwrap());
+        assert_eq!(fe.wire_bytes(), 8 * support.len());
+        for (i, &v) in ye.iter().enumerate() {
+            if support.binary_search(&(i as u32)).is_ok() {
+                assert_eq!(v.to_bits(), x[i].to_bits());
+            } else {
+                assert_eq!(v, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_codecs_satisfy_eq8_additivity_post_decode() {
+        // decode(enc(x+y)) == decode(enc(x)) + decode(enc(y)) exactly,
+        // for fixed ω (same ctx) — the Eq. (13) license, checked at the
+        // byte level rather than on an in-memory operator.
+        let d = 2048;
+        let x = randn(d, 4);
+        let y = randn(d, 5);
+        let sum: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        for spec in [
+            CodecSpec::Identity,
+            CodecSpec::RandK { k_frac: 0.3, mode: WireMode::Explicit },
+            CodecSpec::RandK { k_frac: 0.3, mode: WireMode::ValuesOnly },
+        ] {
+            assert!(spec.is_linear_for_fixed_omega());
+            let mut c = spec.build();
+            let e = ctx(d, 11);
+            let fx = c.encode(&x, &e);
+            let fy = c.encode(&y, &e);
+            let fs = c.encode(&sum, &e);
+            let dx = c.decode(&fx, &e).unwrap();
+            let dy = c.decode(&fy, &e).unwrap();
+            let ds = c.decode(&fs, &e).unwrap();
+            for i in 0..d {
+                assert_eq!(
+                    ds[i].to_bits(),
+                    (dx[i] + dy[i]).to_bits(),
+                    "{}: Eq.8 violated at {i}",
+                    spec.name()
+                );
+            }
+        }
+        // And the quantizers genuinely violate it (sanity of the flag).
+        assert!(!CodecSpec::Qsgd { bits: 4 }.is_linear_for_fixed_omega());
+        assert!(!CodecSpec::SignNorm.is_linear_for_fixed_omega());
+        assert!(!CodecSpec::TopK { k_frac: 0.3 }.is_linear_for_fixed_omega());
+    }
+
+    #[test]
+    fn measured_contraction_confirms_eq7_tau() {
+        let d = 4096;
+        let x = randn(d, 6);
+        // rand-k: E‖comp(x) − x‖² = (1 − k)‖x‖² exactly in expectation.
+        for mode in [WireMode::Explicit, WireMode::ValuesOnly] {
+            let spec = CodecSpec::RandK { k_frac: 0.25, mode };
+            let m = measure_codec_contraction(&spec, &x, 50, 9);
+            assert!(
+                (m - (1.0 - spec.tau(d))).abs() < 0.03,
+                "rand_k: measured {m}"
+            );
+        }
+        // top-k: at least as contractive as its τ = k lower bound.
+        let spec = CodecSpec::TopK { k_frac: 0.25 };
+        let m = measure_codec_contraction(&spec, &x, 1, 9);
+        assert!(m <= 1.0 - spec.tau(d) + 1e-9, "top_k: measured {m}");
+        // qsgd: within the variance-bound contraction.
+        let spec = CodecSpec::Qsgd { bits: 8 };
+        let m = measure_codec_contraction(&spec, &x, 10, 9);
+        assert!(m <= 1.0 - spec.tau(d) + 0.02, "qsgd: measured {m}");
+        assert!(m < 0.1, "qsgd 8-bit should be a fine quantizer: {m}");
+        // sign: ‖comp(x) − x‖²/‖x‖² = 1 − ‖x‖₁²/(d‖x‖²) ≈ 1 − 2/π on
+        // Gaussian input.
+        let spec = CodecSpec::SignNorm;
+        let m = measure_codec_contraction(&spec, &x, 1, 9);
+        assert!(
+            (m - (1.0 - 2.0 / std::f64::consts::PI)).abs() < 0.05,
+            "sign: measured {m}"
+        );
+    }
+
+    #[test]
+    fn error_feedback_residual_reinjects_lost_energy() {
+        // Repeatedly encoding the SAME vector, EF's emitted frames must
+        // carry the lost coordinates eventually: the cumulative decoded
+        // sum approaches r·x, which plain top-k never does for the
+        // coordinates it always drops.
+        let d = 512;
+        let x = randn(d, 7);
+        let spec =
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK { k_frac: 0.1 }));
+        let mut ef = spec.build();
+        let mut acc = vec![0.0f64; d];
+        let rounds = 30;
+        for r in 0..rounds {
+            let e = ctx(d, r);
+            let f = ef.encode(&x, &e);
+            let y = ef.decode(&f, &e).unwrap();
+            for (a, &v) in acc.iter_mut().zip(&y) {
+                *a += v as f64;
+            }
+        }
+        // Mean emitted value per round ≈ x everywhere (EF is unbiased in
+        // the long run), including coordinates top-k alone would starve.
+        let mut worst = 0.0f64;
+        for i in 0..d {
+            let mean = acc[i] / rounds as f64;
+            worst = worst.max((mean - x[i] as f64).abs());
+        }
+        assert!(worst < 0.35, "EF starved a coordinate: worst gap {worst}");
+    }
+
+    #[test]
+    fn corrupt_frames_yield_typed_errors_never_panic() {
+        let d = 256;
+        let x = randn(d, 8);
+        let e = ctx(d, 1);
+
+        // Explicit sparse: out-of-range index.
+        let mut rk = CodecSpec::RandK { k_frac: 0.2, mode: WireMode::Explicit }
+            .build();
+        let mut f = rk.encode(&x, &e);
+        f.bytes_mut()[0..4].copy_from_slice(&(d as u32 + 99).to_le_bytes());
+        assert!(matches!(
+            rk.decode(&f, &e),
+            Err(CodecError::IndexOutOfRange { .. })
+        ));
+
+        // Explicit sparse: truncated to a ragged length.
+        let mut f = rk.encode(&x, &e);
+        f.bytes_mut().pop();
+        assert!(matches!(rk.decode(&f, &e), Err(CodecError::Ragged { .. })));
+
+        // Explicit sparse: duplicate index breaks strict ordering.
+        let mut f = rk.encode(&x, &e);
+        let first = f.bytes()[0..4].to_vec();
+        f.bytes_mut()[4..8].copy_from_slice(&first);
+        assert!(matches!(
+            rk.decode(&f, &e),
+            Err(CodecError::UnsortedIndex { .. })
+        ));
+
+        // Values-only: wrong payload length for the derived mask.
+        let mut vo = CodecSpec::RandK { k_frac: 0.2, mode: WireMode::ValuesOnly }
+            .build();
+        let mut f = vo.encode(&x, &e);
+        f.bytes_mut().extend_from_slice(&[0; 4]);
+        assert!(matches!(vo.decode(&f, &e), Err(CodecError::Length { .. })));
+
+        // Dense / bit-packed codecs: length mismatch.
+        for spec in [CodecSpec::Identity, CodecSpec::Qsgd { bits: 4 },
+                     CodecSpec::SignNorm] {
+            let mut c = spec.build();
+            let mut f = c.encode(&x, &e);
+            f.bytes_mut().pop();
+            assert!(
+                matches!(c.decode(&f, &e), Err(CodecError::Length { .. })),
+                "{}: truncation not caught",
+                spec.name()
+            );
+        }
+
+        // Scalar-prefixed codecs: a corrupted NaN/Inf norm must not
+        // silently poison the decoded vector.
+        for spec in [CodecSpec::Qsgd { bits: 4 }, CodecSpec::SignNorm] {
+            let mut c = spec.build();
+            let mut f = c.encode(&x, &e);
+            f.bytes_mut()[0..4].copy_from_slice(&f32::NAN.to_le_bytes());
+            assert!(
+                matches!(c.decode(&f, &e), Err(CodecError::NonFiniteScalar)),
+                "{}: NaN norm not caught",
+                spec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn whole_record_truncation_is_caught() {
+        // Dropping a trailing 8-byte record keeps the frame 8-aligned
+        // but shifts the idx/val block boundary — the decoded values
+        // would be garbage.  Explicit rand-k pins the support against
+        // the shared-seed mask; top-k pins the record count.
+        let d = 256;
+        let x = randn(d, 12);
+        let e = ctx(d, 2);
+        let mut rk = CodecSpec::RandK { k_frac: 0.2, mode: WireMode::Explicit }
+            .build();
+        let mut f = rk.encode(&x, &e);
+        f.bytes_mut().truncate(f.wire_bytes() - 8);
+        assert!(
+            matches!(rk.decode(&f, &e), Err(CodecError::SupportMismatch { .. })),
+            "rand-k: record truncation not caught"
+        );
+        let mut tk = CodecSpec::TopK { k_frac: 0.2 }.build();
+        let mut f = tk.encode(&x, &e);
+        f.bytes_mut().truncate(f.wire_bytes() - 8);
+        assert!(
+            matches!(tk.decode(&f, &e), Err(CodecError::Length { .. })),
+            "top-k: record truncation not caught"
+        );
+    }
+
+    #[test]
+    fn encode_from_matches_dense_encode_byte_for_byte() {
+        // The sparse-input send fast path must serialize exactly what
+        // the dense encode would.
+        let d = 2048;
+        let x = randn(d, 13);
+        let e = ctx(d, 4);
+        for mode in [WireMode::Explicit, WireMode::ValuesOnly] {
+            let spec = CodecSpec::RandK { k_frac: 0.2, mode };
+            let mut dense = spec.build();
+            let mut sparse = spec.build();
+            let fd = dense.encode(&x, &e);
+            let fs = sparse
+                .encode_from(&|i| x[i], &e)
+                .expect("rand-k has the fast path");
+            assert_eq!(fd, fs, "{}: encode_from drifted", spec.name());
+        }
+        // Dense-input codecs opt out of the fast path.
+        for spec in [CodecSpec::Identity, CodecSpec::Qsgd { bits: 4 },
+                     CodecSpec::SignNorm, CodecSpec::TopK { k_frac: 0.2 }] {
+            assert!(
+                spec.build().encode_from(&|_: usize| 0.0f32, &e).is_none(),
+                "{}: unexpected fast path",
+                spec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn spec_parse_grammar_and_names() {
+        assert_eq!(CodecSpec::parse("identity").unwrap(), CodecSpec::Identity);
+        assert_eq!(
+            CodecSpec::parse("rand_k:0.1").unwrap(),
+            CodecSpec::RandK { k_frac: 0.1, mode: WireMode::Explicit }
+        );
+        assert_eq!(
+            CodecSpec::parse("rand_k:0.1:values").unwrap(),
+            CodecSpec::RandK { k_frac: 0.1, mode: WireMode::ValuesOnly }
+        );
+        assert_eq!(
+            CodecSpec::parse("top_k:0.01").unwrap(),
+            CodecSpec::TopK { k_frac: 0.01 }
+        );
+        assert_eq!(
+            CodecSpec::parse("qsgd:4").unwrap(),
+            CodecSpec::Qsgd { bits: 4 }
+        );
+        assert_eq!(CodecSpec::parse("sign").unwrap(), CodecSpec::SignNorm);
+        assert_eq!(
+            CodecSpec::parse("ef+top_k:0.01").unwrap(),
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK { k_frac: 0.01 }))
+        );
+        // Broken specs fail loudly with a typed error.
+        for bad in ["", "bogus", "rand_k", "rand_k:0", "rand_k:1.5",
+                    "rand_k:0.1:weird", "qsgd:1", "qsgd:9", "qsgd:x",
+                    "ef+ef+sign", "top_k:nope"] {
+            assert!(
+                matches!(CodecSpec::parse(bad), Err(CodecError::BadSpec(_))),
+                "`{bad}` should not parse"
+            );
+        }
+        assert_eq!(CodecSpec::parse("qsgd:4").unwrap().name(), "qsgd 4b");
+        assert_eq!(
+            CodecSpec::parse("ef+top_k:0.1").unwrap().name(),
+            "ef+top_k 10%"
+        );
+        assert_eq!(
+            CodecSpec::parse("rand_k:0.1:vo").unwrap().name(),
+            "rand_k 10% vo"
+        );
+    }
+
+    #[test]
+    fn nominal_bytes_match_wire_ablation_accounting() {
+        let d = 60416usize; // fashion-scale d_pad
+        let nnz = |k: f64| (d as f64 * k).round() as usize;
+        for k in [0.01, 0.1, 0.2] {
+            assert_eq!(
+                CodecSpec::RandK { k_frac: k, mode: WireMode::Explicit }
+                    .nominal_frame_bytes(d),
+                8 * nnz(k)
+            );
+            assert_eq!(
+                CodecSpec::RandK { k_frac: k, mode: WireMode::ValuesOnly }
+                    .nominal_frame_bytes(d),
+                4 * nnz(k)
+            );
+        }
+        assert_eq!(CodecSpec::Identity.nominal_frame_bytes(d), 4 * d);
+        let buckets = (d + QsgdCodec::BUCKET - 1) / QsgdCodec::BUCKET;
+        assert_eq!(
+            CodecSpec::Qsgd { bits: 4 }.nominal_frame_bytes(d),
+            4 * buckets + (4 * d + 7) / 8
+        );
+        assert_eq!(
+            CodecSpec::SignNorm.nominal_frame_bytes(d),
+            4 + (d + 7) / 8
+        );
+    }
+
+    #[test]
+    fn tau_values_sane() {
+        assert_eq!(CodecSpec::Identity.tau(100), 1.0);
+        assert_eq!(
+            CodecSpec::RandK { k_frac: 0.1, mode: WireMode::Explicit }.tau(100),
+            0.1
+        );
+        let t = CodecSpec::Qsgd { bits: 8 }.tau(4096);
+        assert!(t > 0.0 && t < 1.0, "qsgd tau {t}");
+        let s = CodecSpec::SignNorm.tau(10);
+        assert!((s - 2.0 / std::f64::consts::PI).abs() < 1e-12);
+        // EF inherits the inner τ (α schedule keys off the inner rate).
+        assert_eq!(
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK { k_frac: 0.2 }))
+                .tau(100),
+            0.2
+        );
+    }
+
+    #[test]
+    fn effectively_dense_only_for_full_rate_randk() {
+        assert!(CodecSpec::RandK { k_frac: 1.0, mode: WireMode::Explicit }
+            .is_effectively_dense());
+        assert!(!CodecSpec::RandK { k_frac: 0.5, mode: WireMode::Explicit }
+            .is_effectively_dense());
+        // Identity intentionally runs the frame path (byte-identical to
+        // dense) so the codec wire is exercised end to end.
+        assert!(!CodecSpec::Identity.is_effectively_dense());
+    }
+}

@@ -1,12 +1,21 @@
-//! Sparse COO vector: the wire format for compressed dual variables.
+//! Sparse COO vector: the PJRT-kernel interop format and the
+//! `Msg::Sparse` payload.
 //!
 //! Byte accounting matches the paper's tables: a transmitted COO vector
 //! costs `4 * nnz` bytes of u32 indices plus `4 * nnz` bytes of f32
 //! values (so C-ECL(10%) lands at ~x5 vs dense, exactly the paper's
-//! ratio). With the shared-seed mask both endpoints could skip the index
-//! half; that further halving is measured as an ablation
-//! (`repro ablation-wire`) rather than baked into the headline numbers,
-//! to stay comparable with the paper's accounting.
+//! ratio) — the same accounting the explicit-index wire mode of the
+//! rand-k codec serializes for real (`compress::codec`).  The
+//! values-only halving the shared seed enables is the codec layer's
+//! `WireMode::ValuesOnly`; `repro ablation-wire` reports both through
+//! `CodecSpec::nominal_frame_bytes`.
+//!
+//! Decode paths must use the checked accessors ([`CooVec::validate`],
+//! [`CooVec::try_to_dense`], [`CooVec::try_gather`]): the unchecked
+//! `gather`/`scatter_into` panic on out-of-range indices and are for
+//! trusted, locally-constructed vectors only.
+
+use super::codec::CodecError;
 
 /// Sparse vector in coordinate format over a dense dimension `d`.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -34,6 +43,8 @@ impl CooVec {
     }
 
     /// Gather `x` at `indices` (the comp(x; ω) of Example 1 with ω known).
+    /// Panics on out-of-range indices — callers with untrusted indices
+    /// use [`CooVec::try_gather`].
     pub fn gather(x: &[f32], indices: &[u32]) -> CooVec {
         let mut v = CooVec::with_capacity(x.len(), indices.len());
         for &i in indices {
@@ -41,6 +52,44 @@ impl CooVec {
             v.val.push(x[i as usize]);
         }
         v
+    }
+
+    /// Checked gather: a typed [`CodecError`] instead of a panic when an
+    /// index falls outside `x`.
+    pub fn try_gather(x: &[f32], indices: &[u32]) -> Result<CooVec, CodecError> {
+        if let Some(&bad) = indices.iter().find(|&&i| (i as usize) >= x.len()) {
+            return Err(CodecError::IndexOutOfRange {
+                idx: bad,
+                dim: x.len(),
+            });
+        }
+        Ok(CooVec::gather(x, indices))
+    }
+
+    /// Validate every index against `dim` — run this before scattering a
+    /// vector that crossed a trust boundary (wire, disk).
+    pub fn validate(&self) -> Result<(), CodecError> {
+        if self.idx.len() != self.val.len() {
+            return Err(CodecError::ArityMismatch {
+                idx: self.idx.len(),
+                vals: self.val.len(),
+            });
+        }
+        if let Some(&bad) = self.idx.iter().find(|&&i| (i as usize) >= self.dim)
+        {
+            return Err(CodecError::IndexOutOfRange {
+                idx: bad,
+                dim: self.dim,
+            });
+        }
+        Ok(())
+    }
+
+    /// Checked dense materialization: [`CooVec::validate`] +
+    /// [`CooVec::to_dense`].
+    pub fn try_to_dense(&self) -> Result<Vec<f32>, CodecError> {
+        self.validate()?;
+        Ok(self.to_dense())
     }
 
     /// Re-fill from `x` at `indices`, reusing allocations (hot path).
@@ -58,15 +107,10 @@ impl CooVec {
         self.idx.len()
     }
 
-    /// Bytes on the wire (paper accounting: indices + values).
+    /// Bytes on the wire (paper accounting: indices + values) — equal to
+    /// the serialized length of the rand-k codec's explicit-index frame.
     pub fn wire_bytes(&self) -> usize {
         8 * self.nnz()
-    }
-
-    /// Bytes on the wire when the sparsity pattern is derivable from the
-    /// shared seed (values only).
-    pub fn wire_bytes_values_only(&self) -> usize {
-        4 * self.nnz()
     }
 
     /// Dense materialization (masked-out entries zero).
@@ -133,7 +177,25 @@ mod tests {
     fn wire_bytes_accounting() {
         let v = CooVec::gather(&[0.0; 100], &[1, 2, 3]);
         assert_eq!(v.wire_bytes(), 24);
-        assert_eq!(v.wire_bytes_values_only(), 12);
+    }
+
+    #[test]
+    fn corrupt_indices_surface_typed_errors() {
+        use crate::compress::codec::CodecError;
+        // try_gather refuses out-of-range indices instead of panicking.
+        let err = CooVec::try_gather(&[1.0, 2.0], &[0, 7]).unwrap_err();
+        assert_eq!(err, CodecError::IndexOutOfRange { idx: 7, dim: 2 });
+        assert!(CooVec::try_gather(&[1.0, 2.0], &[0, 1]).is_ok());
+        // A corrupted vector fails validation and checked densify.
+        let mut v = CooVec::gather(&[1.0, 2.0, 3.0], &[0, 2]);
+        v.idx[1] = 9;
+        assert_eq!(
+            v.validate().unwrap_err(),
+            CodecError::IndexOutOfRange { idx: 9, dim: 3 }
+        );
+        assert!(v.try_to_dense().is_err());
+        v.idx[1] = 1;
+        assert_eq!(v.try_to_dense().unwrap(), vec![1.0, 3.0, 0.0]);
     }
 
     #[test]

@@ -235,7 +235,7 @@ fn run_threaded(
             dual_path: spec.dual_path,
             runtime: Some(Arc::clone(&runtime)),
         };
-        let mut algo = build_node(&spec.algorithm, &ctx);
+        let mut algo = build_node(&spec.algorithm, &ctx)?;
         let mut w = (*init_w).clone();
         let zeros = vec![0.0f32; ds.d_pad];
         let mut batcher = Batcher::new(train.n, ds.batch, spec.seed, node);
@@ -440,7 +440,7 @@ where
             runtime: None,
         };
         setups.push(sim::NodeSetup {
-            machine: build_machine(&spec.algorithm, &ctx),
+            machine: build_machine(&spec.algorithm, &ctx)?,
             local: make_local(node, train, Arc::clone(&test))?,
             w: init_w.clone(),
         });

@@ -3,12 +3,15 @@
 //! * **naive** (§3.2) — compressing y directly (Eq. 11) vs compressing
 //!   the update y − z (Eq. 13), on both the convex substrate and the CNN.
 //! * **warmup** (§5.1) — the first-epoch dense (k = 100%) trick on/off.
-//! * **wire** — COO (idx+val, the paper's accounting) vs values-only
-//!   (shared-seed masks make indices redundant), analytic.
+//! * **wire** — the rand-k codec's two wire modes: explicit COO
+//!   (idx+val, the paper's accounting) vs values-only (shared-seed
+//!   masks make indices redundant), analytic via
+//!   `CodecSpec::nominal_frame_bytes`.
 
 use anyhow::Result;
 
 use crate::algorithms::AlgorithmSpec;
+use crate::compress::{CodecSpec, WireMode};
 use crate::coordinator::run_with_engine;
 use crate::data::Partition;
 use crate::graph::Graph;
@@ -153,8 +156,10 @@ pub fn run_drift_ablation(
     Ok(t)
 }
 
-/// Wire-format accounting: the paper's COO (idx+val) vs the values-only
-/// format the shared seed enables. Pure accounting — no training.
+/// Wire-format accounting: the rand-k codec's explicit-index mode (the
+/// paper's COO accounting) vs its values-only mode (the shared seed
+/// makes indices redundant). Pure accounting through
+/// `CodecSpec::nominal_frame_bytes` — no training.
 pub fn run_wire_ablation(manifest: &Manifest, sizing: &Sizing) -> Result<Table> {
     let mut t = Table::new([
         "dataset", "k%", "dense KB", "coo KB (paper)", "values-only KB",
@@ -162,11 +167,15 @@ pub fn run_wire_ablation(manifest: &Manifest, sizing: &Sizing) -> Result<Table> 
     ]);
     for ds_name in &sizing.datasets {
         let ds = manifest.dataset(ds_name)?;
-        let dense = (ds.d_pad * 4) as f64 / 1024.0;
+        let dense =
+            CodecSpec::Identity.nominal_frame_bytes(ds.d_pad) as f64 / 1024.0;
         for k in [0.01, 0.1, 0.2] {
-            let nnz = (ds.d_pad as f64 * k).round();
-            let coo = nnz * 8.0 / 1024.0;
-            let vals = nnz * 4.0 / 1024.0;
+            let coo = CodecSpec::RandK { k_frac: k, mode: WireMode::Explicit }
+                .nominal_frame_bytes(ds.d_pad) as f64
+                / 1024.0;
+            let vals = CodecSpec::RandK { k_frac: k, mode: WireMode::ValuesOnly }
+                .nominal_frame_bytes(ds.d_pad) as f64
+                / 1024.0;
             t.row([
                 ds_name.clone(),
                 format!("{}", (k * 100.0) as u32),

@@ -8,6 +8,7 @@ pub mod tables;
 pub mod theory;
 
 use crate::algorithms::DualPath;
+use crate::compress::CodecSpec;
 use crate::data::Partition;
 use crate::util::cli::Args;
 
@@ -27,6 +28,10 @@ pub struct Sizing {
     pub verbose: bool,
     /// Restrict to these dataset configs (default: both).
     pub datasets: Vec<String>,
+    /// Extra edge codecs (`--codec rand_k:0.1,qsgd:4,...`): appended as
+    /// C-ECL rows to the comparison/sim tables; the first entry drives
+    /// single-run commands (`repro train` / `repro sim`).
+    pub codecs: Vec<CodecSpec>,
 }
 
 impl Default for Sizing {
@@ -43,6 +48,7 @@ impl Default for Sizing {
             dual_path: DualPath::Native,
             verbose: false,
             datasets: vec!["fashion".to_string(), "cifar".to_string()],
+            codecs: Vec::new(),
         }
     }
 }
@@ -50,7 +56,7 @@ impl Default for Sizing {
 impl Sizing {
     /// Apply `--epochs`, `--nodes`, `--train-per-node`, `--test-size`,
     /// `--eta`, `--local-steps`, `--eval-every`, `--seed`, `--dataset`,
-    /// `--dual-path`, `--verbose` overrides.
+    /// `--dual-path`, `--codec`, `--verbose` overrides.
     pub fn from_args(args: &Args) -> Sizing {
         let mut s = Sizing::default();
         s.nodes = args.get("nodes", s.nodes);
@@ -64,6 +70,16 @@ impl Sizing {
         s.verbose = args.flag("verbose");
         if let Some(ds) = args.get_opt::<String>("dataset") {
             s.datasets = vec![ds];
+        }
+        if let Some(list) = args.get_opt::<String>("codec") {
+            s.codecs = list
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| {
+                    CodecSpec::parse(p)
+                        .unwrap_or_else(|e| panic!("--codec {p}: {e}"))
+                })
+                .collect();
         }
         match args.get_str("dual-path", "native").as_str() {
             "native" => s.dual_path = DualPath::Native,
@@ -119,6 +135,28 @@ mod tests {
         assert_eq!(s.dual_path, DualPath::Pjrt);
         assert!(s.verbose);
         assert!((s.eta - 0.5).abs() < 1e-6);
+        assert!(s.codecs.is_empty());
+    }
+
+    #[test]
+    fn sizing_parses_codec_list() {
+        let args = Args::parse(
+            "x --codec rand_k:0.1,qsgd:4,ef+top_k:0.01"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let s = Sizing::from_args(&args);
+        assert_eq!(s.codecs.len(), 3);
+        assert_eq!(s.codecs[1], CodecSpec::Qsgd { bits: 4 });
+    }
+
+    #[test]
+    #[should_panic]
+    fn broken_codec_spec_fails_loudly() {
+        let args = Args::parse(
+            "x --codec qsgd:99".split_whitespace().map(String::from),
+        );
+        let _ = Sizing::from_args(&args);
     }
 
     #[test]

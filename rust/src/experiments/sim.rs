@@ -12,6 +12,7 @@
 use anyhow::Result;
 
 use crate::algorithms::AlgorithmSpec;
+use crate::compress::{CodecSpec, WireMode};
 use crate::coordinator::{run_simulated_native, ExecMode, ExperimentSpec,
                          Report};
 use crate::data::Partition;
@@ -36,9 +37,17 @@ pub fn link_ladder() -> Vec<LinkSpec> {
     ]
 }
 
-/// Methods compared in the simulated table (a compact subset of the
-/// paper ladder).
+/// Methods compared in the simulated table: the baselines plus a
+/// C-ECL codec ladder — the paper's rand-k, top-k, the values-only
+/// wire, a b-bit quantizer, sign+norm, and an error-feedback variant.
+/// Extra `--codec` specs from [`Sizing::codecs`] are appended by
+/// [`run_sim_table`].
 pub fn sim_methods() -> Vec<AlgorithmSpec> {
+    let cecl_codec = |codec: CodecSpec| AlgorithmSpec::CEclCodec {
+        codec,
+        theta: 1.0,
+        dense_first_epoch: false,
+    };
     vec![
         AlgorithmSpec::DPsgd,
         AlgorithmSpec::Ecl { theta: 1.0 },
@@ -48,6 +57,16 @@ pub fn sim_methods() -> Vec<AlgorithmSpec> {
             theta: 1.0,
             dense_first_epoch: false,
         },
+        cecl_codec(CodecSpec::RandK {
+            k_frac: 0.10,
+            mode: WireMode::ValuesOnly,
+        }),
+        cecl_codec(CodecSpec::TopK { k_frac: 0.10 }),
+        cecl_codec(CodecSpec::Qsgd { bits: 4 }),
+        cecl_codec(CodecSpec::SignNorm),
+        cecl_codec(CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK {
+            k_frac: 0.10,
+        }))),
     ]
 }
 
@@ -72,7 +91,13 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig,
     ];
     let mut table = Table::new(headers);
     let mut reports = Vec::new();
-    for alg in sim_methods() {
+    let mut methods = sim_methods();
+    methods.extend(sizing.codecs.iter().map(|c| AlgorithmSpec::CEclCodec {
+        codec: c.clone(),
+        theta: 1.0,
+        dense_first_epoch: false,
+    }));
+    for alg in methods {
         for link in link_ladder() {
             let mut spec: ExperimentSpec =
                 sizing.spec_base(&dataset, Partition::Homogeneous);
@@ -141,7 +166,35 @@ mod tests {
         let rendered = table.render();
         assert!(rendered.contains("C-ECL"));
         assert!(rendered.contains("ideal"));
+        // The codec ladder is present: ≥ 4 codecs including a
+        // quantizer and an error-feedback variant.
+        for row in ["rand_k 10%", "top_k 10%", "qsgd 4b", "sign",
+                    "ef+top_k 10%"] {
+            assert!(rendered.contains(row), "missing codec row `{row}`");
+        }
         // Every report carries a virtual clock.
         assert!(reports.iter().all(|r| r.sim_time_secs.is_some()));
+    }
+
+    #[test]
+    fn extra_codec_specs_append_rows() {
+        let sizing = Sizing {
+            nodes: 4,
+            epochs: 1,
+            train_per_node: 20,
+            test_size: 20,
+            local_steps: 2,
+            eval_every: 1,
+            datasets: vec!["tiny".to_string()],
+            codecs: vec![CodecSpec::Qsgd { bits: 8 }],
+            ..Sizing::default()
+        };
+        let (table, reports) =
+            run_sim_table(&sizing, &SimConfig::default(), 0.99).unwrap();
+        assert_eq!(
+            reports.len(),
+            (sim_methods().len() + 1) * link_ladder().len()
+        );
+        assert!(table.render().contains("qsgd 8b"));
     }
 }

@@ -33,7 +33,8 @@ pub fn comparison_methods() -> Vec<AlgorithmSpec> {
 }
 
 /// Run one accuracy table (Table 1 or 2). Returns the rendered table and
-/// the raw reports (also written to `results/`).
+/// the raw reports (also written to `results/`).  Extra `--codec` specs
+/// from [`Sizing::codecs`] append C-ECL rows below the paper ladder.
 pub fn run_accuracy_table(
     engine: &Engine,
     manifest: &Manifest,
@@ -42,7 +43,12 @@ pub fn run_accuracy_table(
     label: &str,
 ) -> Result<(Table, Vec<Report>)> {
     let graph = Graph::ring(sizing.nodes);
-    let methods = comparison_methods();
+    let mut methods = comparison_methods();
+    methods.extend(sizing.codecs.iter().map(|c| AlgorithmSpec::CEclCodec {
+        codec: c.clone(),
+        theta: 1.0,
+        dense_first_epoch: true,
+    }));
     let mut headers = vec!["method".to_string()];
     for ds in &sizing.datasets {
         headers.push(format!("{ds} acc"));

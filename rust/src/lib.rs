@@ -6,8 +6,11 @@
 //!
 //! * **L3 (this crate)** — the decentralized-training coordinator over
 //!   a network topology: a byte-metered message substrate, the per-edge
-//!   dual state of the Douglas–Rachford splitting, compression
-//!   operators, the C-ECL/ECL/D-PSGD/PowerGossip protocol drivers, and
+//!   dual state of the Douglas–Rachford splitting, a pluggable **edge
+//!   codec** layer ([`compress::codec`]: stateful per-edge
+//!   encoders/decoders producing byte-exact wire frames — rand-k in two
+//!   wire modes, top-k, QSGD quantization, sign+norm, error feedback,
+//!   identity), the C-ECL/ECL/D-PSGD/PowerGossip protocol drivers, and
 //!   every experiment of the paper's evaluation section.
 //! * **L2 (python/compile/model.py, build-time only)** — the 5-layer CNN
 //!   with GroupNorm, its loss/gradient, and the Eq. (6) closed-form
@@ -82,6 +85,36 @@
 //! println!("sim time {:.2}s, retransmitted {} B",
 //!          report.sim_time_secs.unwrap(), report.retransmit_bytes);
 //! ```
+//!
+//! C-ECL over any edge codec (CLI: `--codec qsgd:4`; codecs that are
+//! not linear for fixed ω — top-k, quantizers, error feedback — run
+//! the Eq. (11) dual rule automatically):
+//!
+//! ```no_run
+//! use cecl::prelude::*;
+//!
+//! let spec = ExperimentSpec {
+//!     algorithm: AlgorithmSpec::CEclCodec {
+//!         codec: CodecSpec::parse("ef+top_k:0.01").unwrap(),
+//!         theta: 1.0,
+//!         dense_first_epoch: false,
+//!     },
+//!     ..ExperimentSpec::default()
+//! };
+//! ```
+//!
+//! ## Module map
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`compress`] | rand-k mask sampler, COO vectors, low-rank (PowerGossip) |
+//! | [`compress::codec`] | **edge codecs**: `EdgeCodec`/`Frame`/`EdgeCtx`/`CodecSpec`, identity / rand-k (explicit + values-only wire) / top-k / QSGD / sign / error feedback |
+//! | [`comm`] | `Msg` (dense / sparse / codec frame / scalar), byte meter, threaded bus |
+//! | [`algorithms`] | `NodeAlgorithm` + `NodeStateMachine` protocol drivers |
+//! | [`coordinator`] | `ExperimentSpec` → `Report` on either engine |
+//! | [`sim`] | virtual-time engine: event queue, link models, stragglers, outages |
+//! | [`experiments`] | tables, figures, ablations, simulated time-to-accuracy |
+//! | [`quadratic`], [`graph`], [`data`], [`model`], [`runtime`] | convex substrate, topologies, synthetic data, manifests, PJRT |
 
 pub mod algorithms;
 pub mod comm;
@@ -101,7 +134,8 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::algorithms::AlgorithmSpec;
-    pub use crate::compress::{Compressor, RandK, TopK};
+    pub use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx, Frame, RandK,
+                              WireMode};
     pub use crate::coordinator::{run_experiment, run_simulated_native,
                                  ExecMode, ExperimentSpec, Report};
     pub use crate::data::{Partition, SyntheticSpec};

@@ -8,6 +8,7 @@
 //! repro topology [--topology ring --nodes 8] [--viz]        Figure 2 (adjacency)
 //! repro theory   [--rounds N --dim D ...]                   Theorem 1 validation
 //! repro train    --algorithm cecl:0.1 [--partition hetero]  one run
+//! repro train    --codec qsgd:4 | ef+top_k:0.01 | ...       codec run
 //! repro ablation-naive | ablation-warmup | ablation-wire
 //! ```
 
@@ -99,9 +100,8 @@ fn main() -> Result<()> {
         }
         "train" => {
             let sizing = Sizing::from_args(&args);
-            let alg_name = args.get_str("algorithm", "cecl:0.1");
-            let algorithm = AlgorithmSpec::parse(&alg_name)
-                .ok_or_else(|| anyhow!("unknown algorithm {alg_name}"))?;
+            // `--codec SPEC` runs C-ECL over that edge codec directly.
+            let algorithm = pick_algorithm(&args, &sizing, true)?;
             let partition = match args.get_str("partition", "homogeneous").as_str() {
                 "homogeneous" | "homo" => Partition::Homogeneous,
                 "heterogeneous" | "hetero" => Partition::Heterogeneous {
@@ -139,9 +139,9 @@ fn main() -> Result<()> {
             // works with zero PJRT artifacts, scales to 512+ nodes, and
             // reports simulated time-to-accuracy.
             let sizing = Sizing::from_args(&args);
-            let alg_name = args.get_str("algorithm", "cecl:0.1");
-            let algorithm = AlgorithmSpec::parse(&alg_name)
-                .ok_or_else(|| anyhow!("unknown algorithm {alg_name}"))?;
+            // `--codec SPEC` (first entry) selects C-ECL over that
+            // codec; the full list also extends the `--table` ladder.
+            let algorithm = pick_algorithm(&args, &sizing, false)?;
             let topo_name = args.get_str("topology", "ring");
             let link_name = args.get_str("link", "bandwidth");
             let latency_us = args.get("latency-us", 500u64);
@@ -242,6 +242,45 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// Resolve the algorithm for single-run commands: `--codec SPEC` means
+/// C-ECL over that edge codec; combining it with an explicit
+/// `--algorithm` is rejected so results are never silently mislabeled.
+/// Both spellings of a codec run (`--codec X` and `--algorithm cecl:X`)
+/// get the same per-command warmup default, so they build identical
+/// experiments.
+fn pick_algorithm(args: &Args, sizing: &Sizing,
+                  dense_first_epoch: bool) -> Result<AlgorithmSpec> {
+    let alg_name = args.get_opt::<String>("algorithm");
+    if !sizing.codecs.is_empty() && alg_name.is_some() {
+        return Err(anyhow!(
+            "--codec and --algorithm are mutually exclusive: --codec \
+             always runs C-ECL over the given edge codec (use \
+             `--algorithm cecl:<spec>` for the same thing)"
+        ));
+    }
+    if sizing.codecs.len() > 1 {
+        return Err(anyhow!(
+            "this command runs a single experiment; --codec takes one \
+             spec here (comma lists extend the table ladders: \
+             `sim --table`, table1/table2)"
+        ));
+    }
+    if let Some(codec) = sizing.codecs.first() {
+        return Ok(AlgorithmSpec::CEclCodec {
+            codec: codec.clone(),
+            theta: 1.0,
+            dense_first_epoch,
+        });
+    }
+    let name = alg_name.unwrap_or_else(|| "cecl:0.1".to_string());
+    let mut alg = AlgorithmSpec::parse(&name)
+        .ok_or_else(|| anyhow!("unknown algorithm {name}"))?;
+    if let AlgorithmSpec::CEclCodec { dense_first_epoch: dfe, .. } = &mut alg {
+        *dfe = dense_first_epoch;
+    }
+    Ok(alg)
+}
+
 fn check_unknown(args: &Args) -> Result<()> {
     let unknown = args.unknown_keys();
     if unknown.is_empty() {
@@ -273,13 +312,20 @@ commands:
   topology --viz   print adjacency (Figure 2)
   theory           Theorem 1 / Corollary 2 rate validation
   train            one run: --algorithm sgd|dpsgd|ecl|cecl:K|powergossip:N
+                   or --codec SPEC (C-ECL over that edge codec)
   sim              virtual-time run, artifact-free (scales to 512+ nodes):
                    --link ideal|constant|bandwidth|lossy --latency-us N
                    --mbit-per-sec F --drop-p F --compute-us-per-step N
-                   --table (time-to-accuracy ladder) --target-acc F
+                   --table (time-to-accuracy ladder incl. the codec
+                   ladder) --target-acc F --codec SPEC[,SPEC...]
   ablation-naive   Eq.11 vs Eq.13 dual compression
   ablation-warmup  first-epoch dense on/off
-  ablation-wire    COO vs values-only wire accounting
+  ablation-wire    explicit-index vs values-only rand-k wire modes
+
+codec specs (--codec, also `--algorithm cecl:SPEC`):
+  identity | rand_k:K | rand_k:K:values | top_k:K | qsgd:B | sign
+  | ef+<codec>         e.g. rand_k:0.1, qsgd:4, ef+top_k:0.01
+  (non-linear codecs — top_k/qsgd/sign/ef — run the Eq. 11 dual rule)
 
 common options:
   --dataset fashion|cifar   --epochs N        --nodes N

@@ -642,7 +642,7 @@ mod tests {
                 let mut rng = Pcg::new(900 + node as u64);
                 let w = (0..ds.d_pad).map(|_| rng.normal_f32()).collect();
                 NodeSetup {
-                    machine: build_machine(alg, &ctx),
+                    machine: build_machine(alg, &ctx).unwrap(),
                     local: Box::new(NullLocal),
                     w,
                 }

@@ -7,7 +7,8 @@ use std::sync::Arc;
 use cecl::algorithms::{BuildCtx, CEclNode, DualPath, DualRule,
                        NodeAlgorithm, NodeStateMachine};
 use cecl::comm::{build_bus, Msg, Outbox};
-use cecl::compress::{Compressor, CooVec, Identity, RandK, TopK};
+use cecl::compress::{measure_codec_contraction, CodecSpec, CooVec, EdgeCtx,
+                     RandK, WireMode};
 use cecl::data::{node_classes, Partition};
 use cecl::graph::Graph;
 use cecl::linalg::{Cholesky, Mat};
@@ -51,47 +52,70 @@ fn prop_randk_linearity_eq8_eq9() {
 }
 
 #[test]
-fn prop_randk_contraction_eq7() {
-    // E‖comp(x) − x‖² ≤ (1 − τ)‖x‖² within sampling error.
+fn prop_randk_codec_contraction_eq7() {
+    // E‖comp(x) − x‖² ≤ (1 − τ)‖x‖² within sampling error — measured
+    // through real encode→decode round trips on both wire modes.
     check("randk-eq7", 10, 2000, |ctx: &mut Ctx| {
         let d = ctx.size.max(256);
         let x = ctx.vec_f32(d);
         let k = 0.1 + 0.8 * ctx.rng.f64();
-        let op = RandK::new(k);
-        let measured =
-            cecl::compress::measure_contraction(&op, &x, 40, &mut ctx.rng);
-        let want = 1.0 - op.tau();
-        prop_assert!(
-            (measured - want).abs() < 0.15,
-            "contraction {measured} vs 1-tau {want} (k={k})"
-        );
+        let seed = ctx.rng.next_u64();
+        for mode in [WireMode::Explicit, WireMode::ValuesOnly] {
+            let spec = CodecSpec::RandK { k_frac: k, mode };
+            let measured = measure_codec_contraction(&spec, &x, 40, seed);
+            let want = 1.0 - spec.tau(d);
+            prop_assert!(
+                (measured - want).abs() < 0.15,
+                "contraction {measured} vs 1-tau {want} (k={k})"
+            );
+        }
         Ok(())
     });
 }
 
 #[test]
-fn prop_topk_never_worse_than_randk_energy() {
+fn prop_topk_codec_never_worse_than_randk_energy() {
     check("topk-energy", 20, 2048, |ctx: &mut Ctx| {
         let d = ctx.size.max(64);
         let x = ctx.vec_f32(d);
         let k = 0.05 + 0.4 * ctx.rng.f64();
-        let top = TopK::new(k).compress(&x, &mut ctx.rng);
-        let rand = RandK::new(k).compress(&x, &mut ctx.rng);
-        prop_assert!(
-            top.norm2_sq() >= rand.norm2_sq() - 1e-9,
-            "top-k kept less energy"
-        );
+        let seed = ctx.rng.next_u64();
+        // Decoded energy = ‖comp(x)‖²; top-k keeps the largest coords.
+        let e = |spec: &CodecSpec| -> f64 {
+            let mut codec = spec.build();
+            let ec = EdgeCtx { seed, edge: 0, round: 0, receiver: 1, dim: d };
+            let f = codec.encode(&x, &ec);
+            codec
+                .decode(&f, &ec)
+                .unwrap()
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum()
+        };
+        let top = e(&CodecSpec::TopK { k_frac: k });
+        let rand = e(&CodecSpec::RandK { k_frac: k, mode: WireMode::Explicit });
+        prop_assert!(top >= rand - 1e-9, "top-k kept less energy");
         Ok(())
     });
 }
 
 #[test]
-fn prop_identity_roundtrip() {
+fn prop_identity_codec_roundtrip_bit_exact() {
     check("identity", 10, 512, |ctx: &mut Ctx| {
         let d = ctx.size.max(1);
         let x = ctx.vec_f32(d);
-        let c = Identity.compress(&x, &mut ctx.rng);
-        prop_assert!(c.to_dense() == x, "identity not exact");
+        let mut codec = CodecSpec::Identity.build();
+        let ec = EdgeCtx {
+            seed: ctx.rng.next_u64(),
+            edge: 0,
+            round: 0,
+            receiver: 0,
+            dim: d,
+        };
+        let f = codec.encode(&x, &ec);
+        prop_assert!(f.wire_bytes() == 4 * d, "dense byte accounting");
+        let y = codec.decode(&f, &ec).map_err(|e| e.to_string())?;
+        prop_assert!(y == x, "identity not exact");
         Ok(())
     });
 }
@@ -260,11 +284,12 @@ fn prop_state_machine_matches_blocking_exchange() {
                 .map(|i| {
                     CEclNode::new(
                         &sm_ctx(i, &graph, seed, manifest.clone()),
-                        k,
+                        CodecSpec::RandK { k_frac: k, mode: WireMode::Explicit },
                         theta,
                         0,
                         rule,
                     )
+                    .unwrap()
                 })
                 .collect()
         };
@@ -328,7 +353,7 @@ fn prop_state_machine_matches_blocking_exchange() {
 #[test]
 fn prop_dual_update_dense_sparse_agree_state_machine() {
     // The wire-level form of `prop_dual_update_dense_sparse_agree`:
-    // through round_begin, the COO a node emits must equal the
+    // through round_begin, the frame a node emits must decode to the
     // shared-seed mask gather of the dense y = z − 2αa·w (Eqs. 8–9
     // linearity at the wire), and through on_message the z update must
     // equal the fused native::dual_update_sparse kernel.
@@ -339,15 +364,17 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
         let graph = Arc::new(Graph::chain(2));
         let manifest = sm_manifest((3, 3, 1), 4); // d = 40
         let d = manifest.d_pad;
+        let spec = CodecSpec::RandK { k_frac: k, mode: WireMode::Explicit };
         let mut nodes: Vec<CEclNode> = (0..2)
             .map(|i| {
                 CEclNode::new(
                     &sm_ctx(i, &graph, seed, manifest.clone()),
-                    k,
+                    spec.clone(),
                     theta,
                     0,
                     DualRule::CompressDiff,
                 )
+                .unwrap()
             })
             .collect();
         let mut ws: Vec<Vec<f32>> = (0..2u64)
@@ -363,7 +390,7 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
             nodes.iter().map(|n| n.dual_state().to_vec()).collect();
 
         // Collect round_begin output per node.
-        let mut sent: Vec<CooVec> = Vec::new(); // [from node 0, from node 1]
+        let mut sent: Vec<cecl::compress::Frame> = Vec::new();
         for i in 0..2 {
             let mut out = Outbox::new();
             NodeStateMachine::round_begin(&mut nodes[i], round, &mut ws[i],
@@ -373,23 +400,31 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
             prop_assert!(msgs.len() == 1, "node {i}: one neighbor");
             let (to, msg) = msgs.into_iter().next().unwrap();
             prop_assert!(to == 1 - i, "node {i}: wrong dest");
-            sent.push(msg.into_sparse().unwrap());
+            sent.push(msg.into_frame().unwrap());
         }
 
         let op = RandK::new(k);
+        let mut payloads: Vec<CooVec> = Vec::new(); // decoded wire content
         for i in 0..2usize {
             let to = 1 - i;
-            let coo = &sent[i];
             // (a) the mask is the shared-seed ω for (edge 0, round,
-            // receiver=to) — never transmitted, re-derived here.
+            // receiver=to) — never transmitted, re-derived here; the
+            // explicit frame must be exactly 8 bytes per kept coord.
             let mut rng = Pcg::derive(
                 seed,
                 &[streams::EDGE_MASK, 0, round as u64, to as u64],
             );
             let expect_mask = op.sample_mask(d, &mut rng);
-            prop_assert!(coo.idx == expect_mask, "node {i}: mask mismatch");
-            // (b) values equal the gather of the dense y (Eq. 8/9:
-            // comp is exactly linear for fixed ω).
+            prop_assert!(
+                sent[i].wire_bytes() == 8 * expect_mask.len(),
+                "node {i}: wire bytes {} != 8·|ω|",
+                sent[i].wire_bytes()
+            );
+            let mut codec = spec.build();
+            let ec = EdgeCtx { seed, edge: 0, round, receiver: to, dim: d };
+            let y_wire = codec.decode(&sent[i], &ec).unwrap();
+            // (b) decoded values equal the gather of the dense y
+            // (Eq. 8/9: comp is exactly linear for fixed ω).
             let sign = graph.edge_sign(i, to);
             let taa = 2.0 * nodes[i].alpha() * sign;
             let y_dense: Vec<f32> = z_before[i][0]
@@ -398,10 +433,17 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
                 .map(|(&zv, &wv)| zv - taa * wv)
                 .collect();
             let expect_vals = CooVec::gather(&y_dense, &expect_mask);
-            prop_assert!(
-                coo.val == expect_vals.val,
-                "node {i}: wire values != dense-y gather"
-            );
+            for (pos, &idx) in expect_mask.iter().enumerate() {
+                prop_assert!(
+                    y_wire[idx as usize] == expect_vals.val[pos],
+                    "node {i}: wire value at {idx} != dense-y gather"
+                );
+            }
+            payloads.push(CooVec {
+                dim: d,
+                idx: expect_mask,
+                val: expect_vals.val,
+            });
         }
 
         // (c) receiving through on_message equals the fused sparse
@@ -413,7 +455,7 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
                 &mut nodes[i],
                 round,
                 from,
-                Msg::Sparse(sent[from].clone()),
+                Msg::Frame(sent[from].clone()),
                 &mut ws[i],
                 &mut out,
             )
@@ -425,7 +467,7 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
             native::dual_update_sparse(
                 &mut z_expect,
                 &ws[i],
-                &sent[from],
+                &payloads[from],
                 &[],
                 theta,
                 0.0,
@@ -455,11 +497,12 @@ fn prop_wire_contraction_eq7_state_machine() {
             .map(|i| {
                 CEclNode::new(
                     &sm_ctx(i, &graph, seed, manifest.clone()),
-                    k,
+                    CodecSpec::RandK { k_frac: k, mode: WireMode::Explicit },
                     1.0,
                     0,
                     DualRule::CompressDiff,
                 )
+                .unwrap()
             })
             .collect();
         let mut ws: Vec<Vec<f32>> = (0..2u64)

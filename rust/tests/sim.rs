@@ -16,6 +16,7 @@ use std::sync::Arc;
 use cecl::algorithms::{build_machine, build_node, AlgorithmSpec, BuildCtx,
                        DualPath, NodeAlgorithm};
 use cecl::comm::build_bus;
+use cecl::compress::CodecSpec;
 use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
 use cecl::graph::Graph;
 use cecl::model::DatasetManifest;
@@ -62,7 +63,8 @@ fn threaded_bytes(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
                 let alg = alg.clone();
                 s.spawn(move || {
                     let mut node: Box<dyn NodeAlgorithm> =
-                        build_node(&alg, &ctx(i, &graph, seed, rounds));
+                        build_node(&alg, &ctx(i, &graph, seed, rounds))
+                            .unwrap();
                     let mut w = init_w(i);
                     for round in 0..rounds {
                         node.exchange(round, &mut w, &comm).unwrap();
@@ -88,7 +90,7 @@ fn simulated_bytes(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
     let sched = Schedule::new(rounds, 1, 2, rounds);
     let setups: Vec<NodeSetup> = (0..graph.n())
         .map(|i| NodeSetup {
-            machine: build_machine(alg, &ctx(i, graph, seed, rounds)),
+            machine: build_machine(alg, &ctx(i, graph, seed, rounds)).unwrap(),
             local: Box::new(NullLocal),
             w: init_w(i),
         })
@@ -127,6 +129,107 @@ fn ideal_link_matches_threaded_bus_byte_for_byte() {
             assert_eq!(msgs_t, msgs_s, "{}: message counts", alg.name());
             assert_eq!(retrans, 0, "ideal link must not retransmit");
         }
+    }
+}
+
+/// C-ECL over a codec spec (no warmup), for the codec-matrix tests.
+fn cecl_codec(spec: &str) -> AlgorithmSpec {
+    AlgorithmSpec::CEclCodec {
+        codec: CodecSpec::parse(spec).unwrap(),
+        theta: 1.0,
+        dense_first_epoch: false,
+    }
+}
+
+#[test]
+fn every_codec_meters_identical_first_copy_bytes_on_both_engines() {
+    // Acceptance pin: for EVERY codec, the threaded bus and the
+    // virtual-time engine account identical first-copy bytes per node —
+    // frames are serialized once and measured, never inferred.
+    let graph = Arc::new(Graph::ring(5));
+    for spec in ["identity", "rand_k:0.1", "rand_k:0.1:values", "top_k:0.1",
+                 "qsgd:4", "sign", "ef+top_k:0.1"] {
+        let alg = cecl_codec(spec);
+        let (bytes_t, msgs_t) = threaded_bytes(&alg, &graph, 31, 3);
+        let (bytes_s, msgs_s, retrans) =
+            simulated_bytes(&alg, &graph, 31, 3, LinkSpec::Ideal);
+        assert_eq!(bytes_t, bytes_s, "{spec}: per-node bytes diverged");
+        assert_eq!(msgs_t, msgs_s, "{spec}: message counts diverged");
+        assert_eq!(retrans, 0);
+        assert!(bytes_t.iter().sum::<u64>() > 0, "{spec}: no traffic");
+    }
+}
+
+#[test]
+fn identity_codec_reproduces_ecl_byte_counts_exactly() {
+    // C-ECL with the identity codec ships dense frames through the
+    // codec path; its byte counts must equal the uncompressed ECL's
+    // dense wire on both engines.
+    let graph = Arc::new(Graph::ring(6));
+    let ecl = AlgorithmSpec::Ecl { theta: 1.0 };
+    let ident = cecl_codec("identity");
+    let (bytes_ecl, msgs_ecl) = threaded_bytes(&ecl, &graph, 5, 4);
+    let (bytes_id, msgs_id) = threaded_bytes(&ident, &graph, 5, 4);
+    assert_eq!(bytes_ecl, bytes_id, "identity codec != ECL bytes");
+    assert_eq!(msgs_ecl, msgs_id);
+    let (bytes_sim, _, _) =
+        simulated_bytes(&ident, &graph, 5, 4, LinkSpec::Ideal);
+    assert_eq!(bytes_ecl, bytes_sim);
+    // 4 bytes per coordinate per directed edge per round, exactly.
+    let d = exchange_manifest().d_pad as u64;
+    assert_eq!(bytes_id[0], 4 * d * 2 * 4); // 2 neighbors × 4 rounds
+}
+
+#[test]
+fn values_only_wire_halves_randk_bytes() {
+    let graph = Arc::new(Graph::ring(4));
+    let (explicit, _) = threaded_bytes(&cecl_codec("rand_k:0.3"), &graph, 9, 3);
+    let (values, _) =
+        threaded_bytes(&cecl_codec("rand_k:0.3:values"), &graph, 9, 3);
+    // Same shared-seed masks ⇒ exactly half the bytes per node.
+    for (e, v) in explicit.iter().zip(&values) {
+        assert_eq!(*e, 2 * v, "values-only is not half of explicit");
+    }
+}
+
+#[test]
+fn codec_runs_replay_bit_identically_under_lossy_links() {
+    // Quantized and error-feedback codecs through the full simulated
+    // stack (drops + retransmits + stragglers): deterministic replay,
+    // nonzero traffic, finite accuracy — a retransmitted frame never
+    // aborts the run.
+    let graph = Graph::ring(6);
+    for spec in ["rand_k:0.2:values", "qsgd:4", "ef+top_k:0.1", "sign"] {
+        let exp = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: cecl_codec(spec),
+            epochs: 4,
+            nodes: 6,
+            train_per_node: 20,
+            test_size: 20,
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 1,
+            seed: 17,
+            exec: ExecMode::Simulated(SimConfig {
+                link: LinkSpec::Lossy {
+                    latency_us: 100,
+                    mbit_per_sec: 50.0,
+                    drop_p: 0.25,
+                },
+                stragglers: vec![(2, 2.0)],
+                ..SimConfig::default()
+            }),
+            ..Default::default()
+        };
+        let a = run_simulated_native(&exp, &graph).unwrap();
+        let b = run_simulated_native(&exp, &graph).unwrap();
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits(),
+                   "{spec}: accuracy replay");
+        assert_eq!(a.total_bytes, b.total_bytes, "{spec}: bytes replay");
+        assert_eq!(a.retransmit_bytes, b.retransmit_bytes, "{spec}");
+        assert!(a.total_bytes > 0 && a.retransmit_bytes > 0, "{spec}");
+        assert!(a.final_accuracy.is_finite(), "{spec}");
     }
 }
 
