@@ -7,7 +7,7 @@
 //! Entirely artifact-free (native softmax backend): `cargo bench
 //! --bench sim_scale` works on a bare checkout.
 
-use cecl::algorithms::AlgorithmSpec;
+use cecl::algorithms::{AlgorithmSpec, RoundPolicy};
 use cecl::compress::CodecSpec;
 use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
 use cecl::graph::Graph;
@@ -125,6 +125,62 @@ fn main() {
     }
     println!(
         "\nring(64), C-ECL codec ladder, bandwidth 50 Mbit/s:\n{}",
+        t.render()
+    );
+
+    // Sync vs async rounds under one 8x straggler: wall-clock cost of
+    // the event-driven scheduler is tracked alongside the simulated-
+    // time win (the whole point of the per-edge-clock refactor).
+    let mut set = BenchSet::new(
+        "sim_scale — sync vs async rounds, ring(64), one 8x straggler",
+    );
+    let mut t = Table::new([
+        "rounds", "final acc", "sim secs", "max lag", "KB/node/epoch",
+    ]);
+    let graph = Graph::ring(64);
+    for rounds in [
+        RoundPolicy::Sync,
+        RoundPolicy::Async { max_staleness: 1 },
+        RoundPolicy::Async { max_staleness: 4 },
+    ] {
+        // spec()'s link is irrelevant here — the exec is replaced
+        // wholesale with the straggler scenario just below.
+        let mut s = spec(64, 4, LinkSpec::Ideal);
+        s.rounds = rounds;
+        s.exec = ExecMode::Simulated(SimConfig {
+            link: LinkSpec::Constant { latency_us: 10_000 },
+            stragglers: vec![(7, 8.0)],
+            ..SimConfig::default()
+        });
+        let mut last = None;
+        set.bench_throughput(
+            &format!("rounds {}", rounds.name()),
+            1,
+            3,
+            8.0 * 64.0,
+            "node-round",
+            || {
+                let r = run_simulated_native(&s, &graph).expect("sim run");
+                last = Some((
+                    r.final_accuracy,
+                    r.sim_time_secs.unwrap_or(0.0),
+                    r.max_staleness,
+                    r.mean_bytes_per_epoch,
+                ));
+            },
+        );
+        let (acc, secs, lag, kb) = last.expect("at least one run");
+        t.row([
+            rounds.name(),
+            format!("{acc:.3}"),
+            format!("{secs:.3}"),
+            format!("{lag}"),
+            format!("{:.0}", kb / 1024.0),
+        ]);
+    }
+    set.report();
+    println!(
+        "\nring(64), C-ECL(10%), one 8x straggler, constant 10 ms links:\n{}",
         t.render()
     );
 }

@@ -36,6 +36,22 @@
 //! driver over the same methods, so both engines run identical wire
 //! traffic and identical arithmetic.
 //!
+//! ## Stale-dual async rounds
+//!
+//! Every edge carries its own round clock
+//! ([`RoundPolicy`](super::RoundPolicy)): `on_message` receives the
+//! *sender's* round stamp and applies line 9 with the shared-seed mask
+//! of **that** round (`EdgeCtx.round = msg_round`), so both endpoints
+//! derive the identical ω no matter how far their clocks have drifted.
+//! Under `Async { max_staleness }` the node performs its local update
+//! as soon as every edge has delivered a dual from round
+//! `≥ r − max_staleness`, consuming the freshest `z_{i|j}` it has per
+//! neighbor; a dual older than the bound is a hard protocol error
+//! enforced at `round_end`.  The per-edge codec instances are the
+//! natural home for this bookkeeping: codec state (error-feedback
+//! residuals, masks) is already keyed per edge and per message round,
+//! so stale consumption never desynchronizes the shared-seed streams.
+//!
 //! Two execution paths for line 4+9, semantically identical:
 //! [`DualPath::Native`] (fused rust loops, the default hot path) and
 //! [`DualPath::Pjrt`] (the L1 Pallas `dual_update` artifact through
@@ -51,7 +67,8 @@ use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx, RandK, WireMode};
 use crate::graph::Graph;
 use crate::runtime::{native, ModelRuntime};
 
-use super::{paper_alpha, BuildCtx, NodeAlgorithm, NodeStateMachine};
+use super::{paper_alpha, BuildCtx, NodeAlgorithm, NodeStateMachine,
+            RoundPolicy};
 
 /// Which implementation executes the fused dual update.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,8 +111,19 @@ pub struct CEclNode {
     z: Vec<Vec<f32>>,
     /// Cached `Σ_j A_{i|j} z_{i|j}`.
     zsum: Vec<f32>,
-    /// Messages still expected in the current exchange round.
-    pending: usize,
+    /// Sync vs bounded-staleness async rounds.
+    policy: RoundPolicy,
+    /// The node's own round clock (set by `round_begin`).
+    cur_round: usize,
+    /// Per-edge clock: round stamp of the freshest dual applied per
+    /// neighbor slot (−1 = nothing received yet).
+    edge_round: Vec<i64>,
+    /// Largest per-edge lag consumed at any `round_end`.
+    max_lag_seen: usize,
+    /// A dense payload rewrote `z` wholesale since the last `round_end`
+    /// (warmup rounds, effectively-dense codecs): `zsum` must be
+    /// recomputed rather than maintained incrementally.
+    zsum_dirty: bool,
     // -- preallocated scratch (no allocation in the round hot loop) -----
     scratch_y: Vec<f32>,
     scratch_dense_a: Vec<f32>,
@@ -135,7 +163,11 @@ impl CEclNode {
             runtime: ctx.runtime.clone(),
             z: vec![vec![0.0; d_pad]; degree],
             zsum: vec![0.0; d_pad],
-            pending: 0,
+            policy: ctx.round_policy,
+            cur_round: 0,
+            edge_round: vec![-1; degree],
+            max_lag_seen: 0,
+            zsum_dirty: false,
             scratch_y: Vec::with_capacity(d_pad),
             scratch_dense_a: vec![0.0; d_pad],
             scratch_mask_in: vec![0.0; d_pad],
@@ -350,7 +382,7 @@ impl NodeStateMachine for CEclNode {
     fn round_begin(&mut self, round: usize, w: &mut [f32],
                    out: &mut Outbox) -> Result<()> {
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
-        self.pending = neighbors.len();
+        self.cur_round = round;
         if self.is_dense_round(round) {
             // Line 4, dense wire: y_{i|j} = z_{i|j} − 2α a w.
             for (jj, &j) in neighbors.iter().enumerate() {
@@ -398,13 +430,8 @@ impl NodeStateMachine for CEclNode {
         Ok(())
     }
 
-    fn on_message(&mut self, round: usize, from: usize, msg: Msg,
+    fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
                   _w: &mut [f32], _out: &mut Outbox) -> Result<()> {
-        ensure!(
-            self.pending > 0,
-            "C-ECL node {}: unexpected message from {from} in round {round}",
-            self.node
-        );
         let jj = self
             .graph
             .neighbors(self.node)
@@ -413,8 +440,13 @@ impl NodeStateMachine for CEclNode {
             .ok_or_else(|| {
                 anyhow!("node {}: message from non-neighbor {from}", self.node)
             })?;
+        super::admit_message(self.policy, self.node, from, self.cur_round,
+                             self.edge_round[jj], msg_round)?;
         let theta = self.theta;
-        if self.is_dense_round(round) {
+        // Every decode keys its shared-seed context off the SENDER's
+        // round stamp, so a stale or ahead-of-us frame derives the
+        // exact ω the sender encoded with.
+        if self.is_dense_round(msg_round) {
             // Line 9, dense: z' = (1−θ)z + θ y_recv.
             let y_recv = msg.into_dense()?;
             ensure!(
@@ -426,6 +458,7 @@ impl NodeStateMachine for CEclNode {
             for (zv, &yv) in self.z[jj].iter_mut().zip(&y_recv) {
                 *zv = (1.0 - theta) * *zv + theta * yv;
             }
+            self.zsum_dirty = true;
         } else {
             // Decode validates every byte — a corrupt frame surfaces a
             // typed CodecError here instead of aborting the process.
@@ -436,7 +469,7 @@ impl NodeStateMachine for CEclNode {
                 .ok_or_else(|| {
                     anyhow!("({}, {from}) is not an edge", self.node)
                 })?;
-            let ctx_e = self.edge_ctx(e, round, self.node);
+            let ctx_e = self.edge_ctx(e, msg_round, self.node);
             let a = self.graph.edge_sign(self.node, from);
             let codec = &mut self.codecs[jj];
             match self.rule {
@@ -502,27 +535,36 @@ impl NodeStateMachine for CEclNode {
                 }
             }
         }
-        self.pending -= 1;
+        self.edge_round[jj] = msg_round as i64;
         Ok(())
     }
 
     fn round_complete(&self) -> bool {
-        self.pending == 0
+        super::staleness_gate(self.policy, self.cur_round, &self.edge_round)
     }
 
     fn round_end(&mut self, round: usize, _w: &mut [f32]) -> Result<()> {
-        ensure!(
-            self.pending == 0,
-            "C-ECL node {}: round_end with {} messages outstanding",
-            self.node,
-            self.pending
-        );
-        if self.is_dense_round(round) {
+        // The staleness bound is a hard protocol invariant: finishing a
+        // round with a dual older than `max_staleness` is an error, not
+        // a silent quality loss (the property tests pin this).
+        let lag = super::check_staleness(self.policy, self.node, "dual",
+                                         round, &self.edge_round)?;
+        self.max_lag_seen = self.max_lag_seen.max(lag);
+        if self.zsum_dirty {
             self.recompute_zsum();
+            self.zsum_dirty = false;
         } else if cfg!(debug_assertions) {
             self.debug_check_zsum();
         }
         Ok(())
+    }
+
+    fn max_staleness_seen(&self) -> usize {
+        self.max_lag_seen
+    }
+
+    fn policy(&self) -> Option<RoundPolicy> {
+        Some(self.policy)
     }
 }
 
@@ -588,6 +630,11 @@ end
     }
 
     fn ctx(node: usize, graph: &Arc<Graph>) -> BuildCtx {
+        ctx_policy(node, graph, RoundPolicy::Sync)
+    }
+
+    fn ctx_policy(node: usize, graph: &Arc<Graph>,
+                  round_policy: RoundPolicy) -> BuildCtx {
         BuildCtx {
             node,
             graph: Arc::clone(graph),
@@ -598,6 +645,7 @@ end
             rounds_per_epoch: 2,
             dual_path: DualPath::Native,
             runtime: None,
+            round_policy,
         }
     }
 
@@ -891,6 +939,102 @@ end
             &mut out,
         );
         assert!(err.is_err());
+    }
+
+    /// One peer's round-`round` frame addressed to node 0 (peers are
+    /// seeded identically, so the frame is exactly what node 0 would
+    /// receive on the wire).
+    fn peer_frame_for_node0(graph: &Arc<Graph>, peer: usize, round: usize,
+                            policy: RoundPolicy) -> Msg {
+        let mut p = CEclNode::new(&ctx_policy(peer, graph, policy),
+                                  rand_k(0.5), 1.0, 0, DualRule::CompressDiff)
+            .unwrap();
+        let mut out = Outbox::new();
+        let mut w = vec![0.25f32; 32];
+        for r in 0..=round {
+            out.drain().for_each(drop);
+            NodeStateMachine::round_begin(&mut p, r, &mut w, &mut out).unwrap();
+        }
+        out.drain()
+            .find(|(to, _)| *to == 0)
+            .map(|(_, m)| m)
+            .unwrap()
+    }
+
+    #[test]
+    fn async_gate_consumes_stale_duals_within_bound() {
+        let graph = Arc::new(Graph::ring(3));
+        let policy = RoundPolicy::Async { max_staleness: 1 };
+        let mut node = CEclNode::new(&ctx_policy(0, &graph, policy),
+                                     rand_k(0.5), 1.0, 0,
+                                     DualRule::CompressDiff)
+            .unwrap();
+        let mut w = vec![0.5f32; 32];
+        let mut out = Outbox::new();
+        // Round 0: staleness 1 lets the node step before hearing from
+        // anyone at all.
+        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        assert!(node.round_complete(), "async:1 must not block round 0");
+        NodeStateMachine::round_end(&mut node, 0, &mut w).unwrap();
+        // Start-up slack (nothing received yet) is not counted as lag.
+        assert_eq!(NodeStateMachine::max_staleness_seen(&node), 0);
+        // Round 1: now each edge must have delivered round ≥ 0.
+        NodeStateMachine::round_begin(&mut node, 1, &mut w, &mut out).unwrap();
+        assert!(!node.round_complete(), "round 1 needs round-0 duals");
+        for &j in &[1usize, 2] {
+            let msg = peer_frame_for_node0(&graph, j, 0, policy);
+            // Stale (round-0) frames decode with the round-0 mask and
+            // are accepted one round late.
+            NodeStateMachine::on_message(&mut node, 0, j, msg, &mut w,
+                                         &mut out)
+                .unwrap();
+        }
+        assert!(node.round_complete());
+        NodeStateMachine::round_end(&mut node, 1, &mut w).unwrap();
+        node.debug_check_zsum();
+        assert_eq!(NodeStateMachine::max_staleness_seen(&node), 1);
+        // Round 2 with nothing newer: the gate blocks, and forcing
+        // round_end is a hard staleness-bound violation.
+        NodeStateMachine::round_begin(&mut node, 2, &mut w, &mut out).unwrap();
+        assert!(!node.round_complete());
+        let err = NodeStateMachine::round_end(&mut node, 2, &mut w)
+            .unwrap_err();
+        assert!(err.to_string().contains("would consume"), "{err}");
+    }
+
+    #[test]
+    fn async_rejects_fifo_violations_sync_rejects_offround() {
+        let graph = Arc::new(Graph::ring(3));
+        let policy = RoundPolicy::Async { max_staleness: 2 };
+        let mut node = CEclNode::new(&ctx_policy(0, &graph, policy),
+                                     rand_k(0.5), 1.0, 0,
+                                     DualRule::CompressDiff)
+            .unwrap();
+        let mut w = vec![0.5f32; 32];
+        let mut out = Outbox::new();
+        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        // An AHEAD message (round 1 while we are at 0) is legal async.
+        let msg = peer_frame_for_node0(&graph, 1, 1, policy);
+        NodeStateMachine::on_message(&mut node, 1, 1, msg, &mut w, &mut out)
+            .unwrap();
+        // ...but a round-0 message from the same edge afterwards is a
+        // FIFO violation.
+        let msg = peer_frame_for_node0(&graph, 1, 0, policy);
+        let err = NodeStateMachine::on_message(&mut node, 0, 1, msg, &mut w,
+                                               &mut out)
+            .unwrap_err();
+        assert!(err.to_string().contains("FIFO"), "{err}");
+        // Sync machines reject any off-round stamp outright.
+        let mut sync_node = CEclNode::new(&ctx(0, &graph), rand_k(0.5), 1.0,
+                                          0, DualRule::CompressDiff)
+            .unwrap();
+        NodeStateMachine::round_begin(&mut sync_node, 0, &mut w, &mut out)
+            .unwrap();
+        let msg = peer_frame_for_node0(&graph, 1, 1, RoundPolicy::Sync);
+        let err = NodeStateMachine::on_message(&mut sync_node, 1, 1, msg,
+                                               &mut w, &mut out)
+            .unwrap_err();
+        assert!(err.to_string().contains("sync round"), "{err}");
     }
 
     #[test]

@@ -9,15 +9,22 @@
 //! in sorted-neighbor order at `round_end`, so the f32 average is
 //! bit-identical no matter in which order the virtual-time engine
 //! delivers the messages — and identical to the threaded engine's.
+//!
+//! Under [`RoundPolicy::Async`] each neighbor slot keeps the *freshest*
+//! parameter vector received on its edge (slots survive across rounds
+//! instead of being cleared), so a lagging edge contributes its last
+//! known model up to `max_staleness` rounds old; a neighbor that has
+//! not spoken at all yet (the first `max_staleness` rounds) contributes
+//! the node's own parameters, which keeps the MH row stochastic.
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, Result};
 
 use crate::comm::{Msg, NodeComm, Outbox};
 use crate::graph::Graph;
 
-use super::{BuildCtx, NodeAlgorithm, NodeStateMachine};
+use super::{BuildCtx, NodeAlgorithm, NodeStateMachine, RoundPolicy};
 
 pub struct DPsgdNode {
     node: usize,
@@ -26,10 +33,19 @@ pub struct DPsgdNode {
     weights: Vec<f64>,
     /// Scratch accumulator (no allocation per round).
     acc: Vec<f32>,
-    /// Received neighbor parameters, one slot per sorted neighbor.
+    /// Freshest received neighbor parameters, one slot per sorted
+    /// neighbor (cleared each round under `Sync`, persistent under
+    /// `Async`).
     recv: Vec<Option<Vec<f32>>>,
-    /// Messages still expected this round.
-    pending: usize,
+    /// Sync vs bounded-staleness async rounds.
+    policy: RoundPolicy,
+    /// The node's own round clock (set by `round_begin`).
+    cur_round: usize,
+    /// Per-edge clock: round stamp of the freshest parameters received
+    /// per neighbor slot (−1 = nothing yet).
+    edge_round: Vec<i64>,
+    /// Largest per-edge lag consumed at any `round_end`.
+    max_lag_seen: usize,
 }
 
 impl DPsgdNode {
@@ -42,7 +58,10 @@ impl DPsgdNode {
             weights,
             acc: vec![0.0; ctx.manifest.d_pad],
             recv: (0..degree).map(|_| None).collect(),
-            pending: 0,
+            policy: ctx.round_policy,
+            cur_round: 0,
+            edge_round: vec![-1; degree],
+            max_lag_seen: 0,
         }
     }
 }
@@ -52,12 +71,16 @@ impl NodeStateMachine for DPsgdNode {
         "D-PSGD".to_string()
     }
 
-    fn round_begin(&mut self, _round: usize, w: &mut [f32],
+    fn round_begin(&mut self, round: usize, w: &mut [f32],
                    out: &mut Outbox) -> Result<()> {
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
-        self.pending = neighbors.len();
-        for slot in self.recv.iter_mut() {
-            *slot = None;
+        self.cur_round = round;
+        if !self.policy.is_async() {
+            // Sync folds exactly this round's parameters; async keeps
+            // the freshest per edge across rounds.
+            for slot in self.recv.iter_mut() {
+                *slot = None;
+            }
         }
         for &j in &neighbors {
             out.send(j, Msg::Dense(w.to_vec()));
@@ -65,13 +88,8 @@ impl NodeStateMachine for DPsgdNode {
         Ok(())
     }
 
-    fn on_message(&mut self, round: usize, from: usize, msg: Msg,
+    fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
                   _w: &mut [f32], _out: &mut Outbox) -> Result<()> {
-        ensure!(
-            self.pending > 0,
-            "D-PSGD node {}: unexpected message from {from} in round {round}",
-            self.node
-        );
         let jj = self
             .graph
             .neighbors(self.node)
@@ -80,43 +98,57 @@ impl NodeStateMachine for DPsgdNode {
             .ok_or_else(|| {
                 anyhow!("node {}: message from non-neighbor {from}", self.node)
             })?;
-        ensure!(
-            self.recv[jj].is_none(),
-            "D-PSGD node {}: duplicate message from {from}",
-            self.node
-        );
+        super::admit_message(self.policy, self.node, from, self.cur_round,
+                             self.edge_round[jj], msg_round)?;
+        // FIFO stamps are strictly increasing, so overwriting always
+        // keeps the freshest parameters for this edge.
         self.recv[jj] = Some(msg.into_dense()?);
-        self.pending -= 1;
+        self.edge_round[jj] = msg_round as i64;
         Ok(())
     }
 
     fn round_complete(&self) -> bool {
-        self.pending == 0
+        super::staleness_gate(self.policy, self.cur_round, &self.edge_round)
     }
 
-    fn round_end(&mut self, _round: usize, w: &mut [f32]) -> Result<()> {
-        ensure!(
-            self.pending == 0,
-            "D-PSGD node {}: round_end with {} messages outstanding",
-            self.node,
-            self.pending
-        );
+    fn round_end(&mut self, round: usize, w: &mut [f32]) -> Result<()> {
+        let lag = super::check_staleness(self.policy, self.node, "parameters",
+                                         round, &self.edge_round)?;
+        self.max_lag_seen = self.max_lag_seen.max(lag);
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
         let wii = self.weights[self.node] as f32;
         for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
             *a = wii * wv;
         }
         for (jj, &j) in neighbors.iter().enumerate() {
-            let wj = self.recv[jj]
-                .take()
-                .ok_or_else(|| anyhow!("missing parameters from {j}"))?;
             let wij = self.weights[j] as f32;
-            for (a, &v) in self.acc.iter_mut().zip(&wj) {
-                *a += wij * v;
+            match &self.recv[jj] {
+                Some(wj) => {
+                    for (a, &v) in self.acc.iter_mut().zip(wj) {
+                        *a += wij * v;
+                    }
+                }
+                // Only reachable in the first `max_staleness` async
+                // rounds (edge_round = −1 ≥ horizon): the neighbor has
+                // not spoken yet, so its MH weight falls back to our
+                // own parameters — the row stays stochastic.
+                None => {
+                    for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
+                        *a += wij * wv;
+                    }
+                }
             }
         }
         w.copy_from_slice(&self.acc);
         Ok(())
+    }
+
+    fn max_staleness_seen(&self) -> usize {
+        self.max_lag_seen
+    }
+
+    fn policy(&self) -> Option<RoundPolicy> {
+        Some(self.policy)
     }
 }
 
@@ -188,6 +220,7 @@ mod tests {
                             rounds_per_epoch: 1,
                             dual_path: crate::algorithms::DualPath::Native,
                             runtime: None,
+                            round_policy: RoundPolicy::Sync,
                         };
                         let mut node = DPsgdNode::new(&ctx);
                         node.exchange(0, w, &comm).unwrap();
@@ -222,6 +255,7 @@ mod tests {
             rounds_per_epoch: 1,
             dual_path: crate::algorithms::DualPath::Native,
             runtime: None,
+            round_policy: RoundPolicy::Sync,
         };
         let mut node = DPsgdNode::new(&ctx);
         let mut w = vec![1.0f32; 8];

@@ -19,6 +19,34 @@
 //! (the AOT train_step artifact, Eq. (6) closed form — gossip methods
 //! run it with `alpha_deg = 0`, reducing it to plain SGD); the
 //! algorithms differ in what goes on the wire every K local steps.
+//!
+//! ## Round policies: per-edge clocks
+//!
+//! Rounds are **per-edge**, not global.  Every message carries the
+//! round counter of the *sender* at the moment it was queued, and
+//! [`NodeStateMachine::on_message`] receives that stamp (`msg_round`) —
+//! not the receiver's own round.  A [`RoundPolicy`] decides when a node
+//! may finish its exchange phase and run its next K local steps:
+//!
+//! * [`RoundPolicy::Sync`] (default) — `round_complete` requires every
+//!   edge to have delivered its round-`r` message; `msg_round` always
+//!   equals the receiver's round, and the trajectory is bit-identical
+//!   to the classic bulk-synchronous schedule on both engines (pinned
+//!   by tests).
+//! * [`RoundPolicy::Async { max_staleness }`] — gossip-style: each edge
+//!   advances on its own clock, messages are consumed in per-edge FIFO
+//!   order the moment they arrive (any `msg_round`), and a node at
+//!   round `r` may proceed once every edge has delivered a message from
+//!   round `≥ r − max_staleness`.  Slow edges lag; the node consumes
+//!   the freshest dual/parameters it has per neighbor.  `round_end`
+//!   *enforces* the staleness bound — consuming an older dual is a
+//!   protocol error, not a silent quality loss.
+//!
+//! The async policy needs the virtual-time engine (`ExecMode::
+//! Simulated`); the blocking threaded bus is bulk-synchronous by
+//! construction and rejects it.  PowerGossip's interactive multi-phase
+//! pipeline is sync-only (its per-edge conversations are already
+//! non-blocking *within* a round); the other algorithms support both.
 
 pub mod cecl;
 pub mod dpsgd;
@@ -38,6 +66,56 @@ use crate::compress::{CodecSpec, WireMode};
 use crate::graph::Graph;
 use crate::model::DatasetManifest;
 use crate::runtime::ModelRuntime;
+
+/// When a node may finish an exchange round and step: bulk-synchronous
+/// (every edge delivers the current round) or gossip-style with
+/// bounded per-edge staleness.  See the module docs (`Round policies`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoundPolicy {
+    /// Barrier on every edge's round-`r` message (the classic schedule;
+    /// trajectory pinned bit-identical across engines).
+    #[default]
+    Sync,
+    /// Event-driven rounds: proceed once every edge has delivered a
+    /// message from round `≥ r − max_staleness`.
+    Async { max_staleness: usize },
+}
+
+impl RoundPolicy {
+    /// Parse the CLI grammar `sync | async:<max_staleness>`.
+    pub fn parse(s: &str) -> Option<RoundPolicy> {
+        match s.trim() {
+            "sync" => Some(RoundPolicy::Sync),
+            other => {
+                let s = other.strip_prefix("async:")?;
+                Some(RoundPolicy::Async {
+                    max_staleness: s.parse().ok()?,
+                })
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            RoundPolicy::Sync => "sync".to_string(),
+            RoundPolicy::Async { max_staleness } => {
+                format!("async:{max_staleness}")
+            }
+        }
+    }
+
+    /// The staleness budget in rounds (0 under `Sync`).
+    pub fn staleness(&self) -> usize {
+        match self {
+            RoundPolicy::Sync => 0,
+            RoundPolicy::Async { max_staleness } => *max_staleness,
+        }
+    }
+
+    pub fn is_async(&self) -> bool {
+        matches!(self, RoundPolicy::Async { .. })
+    }
+}
 
 /// Per-node algorithm driven by the blocking thread-per-node coordinator.
 pub trait NodeAlgorithm: Send {
@@ -63,17 +141,26 @@ pub trait NodeAlgorithm: Send {
 
 /// Poll-driven view of the same protocols for the virtual-time engine.
 ///
-/// Contract (enforced by `crate::sim`):
+/// Contract (enforced by `crate::sim`), per-edge-clock form:
 ///
-/// * `round_begin(r, ..)` is called exactly once per round, after the K
-///   local updates; it queues the round's opening sends.
-/// * `on_message` receives one payload at a time.  Messages from a given
-///   neighbor arrive in FIFO order (the engine guarantees per-edge
-///   ordering even under random link delays); messages from different
-///   neighbors interleave arbitrarily.  Multi-phase protocols may queue
-///   further sends from inside `on_message`.
-/// * Once `round_complete()` reports true, `round_end(r, ..)` runs and
-///   may rewrite `w` (gossip averaging).
+/// * `round_begin(r, ..)` is called exactly once per local round, after
+///   the K local updates; it queues the round's opening sends (each
+///   stamped with `r`, the sender's own edge clock).
+/// * `on_message` receives one payload at a time.  `msg_round` is the
+///   **sender's** round stamp for that edge, not the receiver's
+///   current round: under [`RoundPolicy::Sync`] the engine only
+///   delivers `msg_round == r`, under [`RoundPolicy::Async`] a message
+///   may arrive for any edge round at any virtual time (behind *or*
+///   ahead of the receiver).  Messages from a given neighbor arrive in
+///   FIFO order (the engine guarantees per-edge ordering even under
+///   random link delays) and therefore with strictly increasing
+///   `msg_round`; messages from different neighbors interleave
+///   arbitrarily.  Multi-phase protocols may queue further sends from
+///   inside `on_message`.
+/// * `round_complete()` reports whether the machine's staleness policy
+///   is satisfied for its current round; once true, `round_end(r, ..)`
+///   runs and may rewrite `w` (gossip averaging).  Machines enforce
+///   their staleness bound in `round_end`.
 pub trait NodeStateMachine: Send {
     fn name(&self) -> String;
 
@@ -89,16 +176,34 @@ pub trait NodeStateMachine: Send {
     fn round_begin(&mut self, round: usize, w: &mut [f32],
                    out: &mut Outbox) -> Result<()>;
 
-    /// Deliver the next in-FIFO-order message from neighbor `from`.
-    fn on_message(&mut self, round: usize, from: usize, msg: Msg,
+    /// Deliver the next in-FIFO-order message from neighbor `from`,
+    /// stamped with the sender's round (`msg_round`).
+    fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
                   w: &mut [f32], out: &mut Outbox) -> Result<()>;
 
-    /// Whether the exchange phase of the current round has received
-    /// everything it expects.
+    /// Whether the staleness policy is satisfied for the current round
+    /// (everything this round still *needs* has been received).
     fn round_complete(&self) -> bool;
 
-    /// Finish the round: apply buffered updates to `w` / dual state.
+    /// Finish the round: apply buffered updates to `w` / dual state,
+    /// enforcing the staleness bound.
     fn round_end(&mut self, round: usize, w: &mut [f32]) -> Result<()>;
+
+    /// Largest per-edge lag (in rounds) of any *received* message this
+    /// machine has consumed at a `round_end` — 0 under `Sync`,
+    /// `≤ max_staleness` under `Async` (tests pin the bound).  Start-up
+    /// slack on edges that have not spoken yet is not counted.
+    fn max_staleness_seen(&self) -> usize {
+        0
+    }
+
+    /// The round policy this machine was built with, or `None` for
+    /// policy-agnostic machines (SGD).  The virtual-time engine asserts
+    /// agreement with its own delivery policy at startup, so a machine
+    /// built for one policy cannot be driven under another.
+    fn policy(&self) -> Option<RoundPolicy> {
+        None
+    }
 }
 
 /// Declarative algorithm selection (what the CLI and experiment drivers
@@ -162,6 +267,14 @@ impl AlgorithmSpec {
         !matches!(self, AlgorithmSpec::Sgd)
     }
 
+    /// Whether the algorithm can run under `RoundPolicy::Async`.
+    /// PowerGossip's interactive multi-phase pipeline is sync-only; the
+    /// single-phase protocols (and SGD, trivially) support stale
+    /// consumption.
+    pub fn supports_async(&self) -> bool {
+        !matches!(self, AlgorithmSpec::PowerGossip { .. })
+    }
+
     /// Parse CLI names like `cecl:0.1`, `powergossip:10`, `ecl`,
     /// `dpsgd`.  A non-numeric `cecl:` argument parses as a codec spec
     /// (`cecl:qsgd:4`, `cecl:ef+top_k:0.01`, `cecl:rand_k:0.1:values`).
@@ -216,6 +329,8 @@ pub struct BuildCtx {
     pub rounds_per_epoch: usize,
     pub dual_path: DualPath,
     pub runtime: Option<Arc<ModelRuntime>>,
+    /// Sync vs bounded-staleness async rounds (see module docs).
+    pub round_policy: RoundPolicy,
 }
 
 /// The paper's α schedule (§D.1): Eq. (46) for the ECL
@@ -299,7 +414,7 @@ pub fn build_node(spec: &AlgorithmSpec,
         AlgorithmSpec::Sgd => Box::new(SgdNode),
         AlgorithmSpec::DPsgd => Box::new(DPsgdNode::new(ctx)),
         AlgorithmSpec::PowerGossip { iters } => {
-            Box::new(PowerGossipNode::new(ctx, *iters))
+            Box::new(PowerGossipNode::new(ctx, *iters)?)
         }
         other => Box::new(build_cecl(other, ctx)?),
     })
@@ -314,7 +429,7 @@ pub fn build_machine(spec: &AlgorithmSpec,
         AlgorithmSpec::Sgd => Box::new(SgdNode),
         AlgorithmSpec::DPsgd => Box::new(DPsgdNode::new(ctx)),
         AlgorithmSpec::PowerGossip { iters } => {
-            Box::new(PowerGossipNode::new(ctx, *iters))
+            Box::new(PowerGossipNode::new(ctx, *iters)?)
         }
         other => Box::new(build_cecl(other, ctx)?),
     })
@@ -323,7 +438,9 @@ pub fn build_machine(spec: &AlgorithmSpec,
 /// Blocking driver for single-phase state machines over the threaded
 /// bus: queue the round's sends, drain exactly one message per sorted
 /// neighbor, finish the round.  (Multi-phase protocols like PowerGossip
-/// need their own drain loop.)
+/// need their own drain loop.)  The threaded bus is bulk-synchronous by
+/// construction — every received message carries the current round, so
+/// the per-edge `msg_round` stamp is `round` itself.
 pub fn drive_blocking(
     machine: &mut dyn NodeStateMachine,
     neighbors: &[usize],
@@ -341,6 +458,70 @@ pub fn drive_blocking(
         machine.on_message(round, j, msg, w, &mut out)?;
     }
     machine.round_end(round, w)
+}
+
+/// Shared per-edge-clock admission check for single-phase machines:
+/// under `Sync` a message must carry exactly the receiver's current
+/// round and be the first from its edge this round; under `Async`
+/// per-edge FIFO means stamps are strictly increasing, anything else
+/// (duplicate, reordering) is a transport bug.  Returns an error with
+/// the node/peer/rounds spelled out.
+pub(crate) fn admit_message(policy: RoundPolicy, node: usize, from: usize,
+                            cur_round: usize, edge_round: i64,
+                            msg_round: usize) -> Result<()> {
+    match policy {
+        RoundPolicy::Sync => {
+            anyhow::ensure!(
+                msg_round == cur_round,
+                "node {node}: sync round {cur_round} got a round-{msg_round} \
+                 message from {from}"
+            );
+            anyhow::ensure!(
+                edge_round < msg_round as i64,
+                "node {node}: duplicate round-{msg_round} message from {from}"
+            );
+        }
+        RoundPolicy::Async { .. } => {
+            anyhow::ensure!(
+                (msg_round as i64) > edge_round,
+                "node {node}: per-edge FIFO violated — round-{msg_round} \
+                 message from {from} after round {edge_round}"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Shared `round_complete` gate: every edge has delivered state from
+/// round `≥ cur_round − staleness` (`−1` = nothing yet).
+pub(crate) fn staleness_gate(policy: RoundPolicy, cur_round: usize,
+                             edge_round: &[i64]) -> bool {
+    let horizon = cur_round as i64 - policy.staleness() as i64;
+    edge_round.iter().all(|&r| r >= horizon)
+}
+
+/// Shared `round_end` enforcement of the staleness bound: errors if any
+/// edge's freshest `what` (dual / parameters) is older than the policy
+/// allows, and returns the largest lag among *received* messages
+/// (start-up slack on silent edges is not counted — see
+/// [`NodeStateMachine::max_staleness_seen`]).
+pub(crate) fn check_staleness(policy: RoundPolicy, node: usize,
+                              what: &str, round: usize,
+                              edge_round: &[i64]) -> Result<usize> {
+    let horizon = round as i64 - policy.staleness() as i64;
+    let mut max_lag = 0usize;
+    for (jj, &r) in edge_round.iter().enumerate() {
+        anyhow::ensure!(
+            r >= horizon,
+            "node {node}: round_end({round}) would consume round-{r} {what} \
+             from neighbor slot {jj} (policy {})",
+            policy.name()
+        );
+        if r >= 0 {
+            max_lag = max_lag.max((round as i64 - r).max(0) as usize);
+        }
+    }
+    Ok(max_lag)
 }
 
 /// Single-node SGD: no neighbors, no exchange, `alpha_deg = 0`.
@@ -367,9 +548,11 @@ impl NodeStateMachine for SgdNode {
         Ok(())
     }
 
-    fn on_message(&mut self, round: usize, from: usize, _msg: Msg,
+    fn on_message(&mut self, msg_round: usize, from: usize, _msg: Msg,
                   _w: &mut [f32], _out: &mut Outbox) -> Result<()> {
-        anyhow::bail!("SGD node received a message from {from} in round {round}")
+        anyhow::bail!(
+            "SGD node received a message from {from} stamped round {msg_round}"
+        )
     }
 
     fn round_complete(&self) -> bool {
@@ -475,6 +658,38 @@ mod tests {
         assert!((a - 1.0 / (0.01 * 2.0 * 49.0)).abs() < 1e-4);
         // More compression (smaller k) → smaller α.
         assert!(paper_alpha(0.01, 2, 5, 0.01) < paper_alpha(0.01, 2, 5, 0.1));
+    }
+
+    #[test]
+    fn round_policy_parse_and_names() {
+        assert_eq!(RoundPolicy::parse("sync"), Some(RoundPolicy::Sync));
+        assert_eq!(
+            RoundPolicy::parse("async:3"),
+            Some(RoundPolicy::Async { max_staleness: 3 })
+        );
+        assert_eq!(
+            RoundPolicy::parse("async:0"),
+            Some(RoundPolicy::Async { max_staleness: 0 })
+        );
+        assert_eq!(RoundPolicy::parse("async"), None);
+        assert_eq!(RoundPolicy::parse("async:x"), None);
+        assert_eq!(RoundPolicy::parse("gossip"), None);
+        assert_eq!(RoundPolicy::Sync.name(), "sync");
+        assert_eq!(RoundPolicy::Async { max_staleness: 2 }.name(), "async:2");
+        assert_eq!(RoundPolicy::Sync.staleness(), 0);
+        assert_eq!(RoundPolicy::Async { max_staleness: 5 }.staleness(), 5);
+        assert!(!RoundPolicy::Sync.is_async());
+        assert_eq!(RoundPolicy::default(), RoundPolicy::Sync);
+    }
+
+    #[test]
+    fn async_support_matrix() {
+        assert!(AlgorithmSpec::Sgd.supports_async());
+        assert!(AlgorithmSpec::DPsgd.supports_async());
+        assert!(AlgorithmSpec::Ecl { theta: 1.0 }.supports_async());
+        assert!(AlgorithmSpec::parse("cecl:0.1").unwrap().supports_async());
+        assert!(AlgorithmSpec::parse("cecl:qsgd:4").unwrap().supports_async());
+        assert!(!AlgorithmSpec::PowerGossip { iters: 4 }.supports_async());
     }
 
     #[test]

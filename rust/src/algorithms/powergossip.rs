@@ -37,7 +37,7 @@ use crate::compress::low_rank::{
 use crate::graph::Graph;
 use crate::util::rng::{streams, Pcg};
 
-use super::{BuildCtx, NodeAlgorithm, NodeStateMachine};
+use super::{BuildCtx, NodeAlgorithm, NodeStateMachine, RoundPolicy};
 
 /// Where one edge's conversation stands within the current round.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -106,8 +106,19 @@ pub struct PowerGossipNode {
 }
 
 impl PowerGossipNode {
-    pub fn new(ctx: &BuildCtx, iters: usize) -> PowerGossipNode {
-        assert!(iters >= 1);
+    pub fn new(ctx: &BuildCtx, iters: usize) -> Result<PowerGossipNode> {
+        ensure!(iters >= 1, "PowerGossip needs at least one iteration");
+        // The request-response power-iteration pipeline needs both
+        // endpoints inside the same edge round; per-edge pipelining
+        // already makes it non-blocking WITHIN a round, but bounded-
+        // staleness rounds would desynchronize the warm-started q̂
+        // lockstep.
+        ensure!(
+            ctx.round_policy == RoundPolicy::Sync,
+            "PowerGossip supports only RoundPolicy::Sync (its multi-phase \
+             per-edge pipeline requires matched rounds); requested {}",
+            ctx.round_policy.name()
+        );
         let views: Vec<(usize, usize, usize)> = ctx
             .manifest
             .matrix_views()
@@ -140,7 +151,7 @@ impl PowerGossipNode {
                     .collect()
             })
             .collect();
-        PowerGossipNode {
+        Ok(PowerGossipNode {
             node: ctx.node,
             graph: Arc::clone(&ctx.graph),
             iters,
@@ -152,7 +163,7 @@ impl PowerGossipNode {
             runs: Vec::new(),
             vec_payload: Vec::new(),
             done_count: 0,
-        }
+        })
     }
 
     /// Deterministic wire bytes per round (for accounting tests).
@@ -230,8 +241,13 @@ impl NodeStateMachine for PowerGossipNode {
         Ok(())
     }
 
-    fn on_message(&mut self, round: usize, from: usize, msg: Msg,
+    // `msg_round` always equals this node's current round here: the
+    // construction-time Sync pin means both engines only ever deliver
+    // same-round traffic, so the reseed stream derivation below stays
+    // identical at both edge endpoints.
+    fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
                   w: &mut [f32], out: &mut Outbox) -> Result<()> {
+        let round = msg_round;
         let jj = self.neighbor_slot(from)?;
         ensure!(
             jj < self.runs.len(),
@@ -392,6 +408,11 @@ impl NodeStateMachine for PowerGossipNode {
         self.done_count == self.runs.len()
     }
 
+    // Construction pins Sync (see `new`).
+    fn policy(&self) -> Option<RoundPolicy> {
+        Some(RoundPolicy::Sync)
+    }
+
     fn round_end(&mut self, _round: usize, w: &mut [f32]) -> Result<()> {
         ensure!(
             self.round_complete(),
@@ -507,8 +528,28 @@ mod tests {
             rounds_per_epoch: 1,
             dual_path: crate::algorithms::DualPath::Native,
             runtime: None,
+            round_policy: RoundPolicy::Sync,
         };
-        PowerGossipNode::new(&ctx, iters)
+        PowerGossipNode::new(&ctx, iters).unwrap()
+    }
+
+    #[test]
+    fn async_policy_rejected_at_construction() {
+        let graph = Arc::new(Graph::ring(4));
+        let ctx = BuildCtx {
+            node: 0,
+            graph: Arc::clone(&graph),
+            manifest: manifest(),
+            seed: 5,
+            eta: 0.1,
+            local_steps: 1,
+            rounds_per_epoch: 1,
+            dual_path: crate::algorithms::DualPath::Native,
+            runtime: None,
+            round_policy: RoundPolicy::Async { max_staleness: 2 },
+        };
+        let err = PowerGossipNode::new(&ctx, 2).err().unwrap();
+        assert!(err.to_string().contains("Sync"), "{err}");
     }
 
     #[test]

@@ -150,8 +150,11 @@ impl Msg {
 pub struct Envelope {
     pub src: usize,
     pub dst: usize,
-    /// Exchange round the payload belongs to (receivers that have not
-    /// reached `round` yet buffer the envelope).
+    /// The **sender's** round clock when the message was queued — the
+    /// per-edge round stamp.  Under `RoundPolicy::Sync` the engine
+    /// delivers only stamps matching the receiver's round (buffering
+    /// the rest); under `Async` the stamp is handed to the machine
+    /// as-is, which uses it to key shared-seed codec state.
     pub round: usize,
     pub payload: Msg,
 }

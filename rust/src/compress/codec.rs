@@ -870,14 +870,24 @@ pub enum CodecSpec {
     ErrorFeedback(Box<CodecSpec>),
 }
 
+/// The full `--codec` grammar, restated verbatim in every parse error.
+pub const CODEC_GRAMMAR: &str =
+    "identity | rand_k:K[:values|:explicit] | top_k:K | qsgd:B | sign \
+     | ef+<codec>, with K a fraction in (0, 1] and B bits in [2, 8]";
+
 impl CodecSpec {
-    /// Parse a spec string (see type-level grammar).
+    /// Parse the CLI codec grammar (see [`CODEC_GRAMMAR`]).  Every
+    /// error names the offending token and restates the grammar, so a
+    /// typo in a long `--codec` list is findable without source-diving.
     pub fn parse(s: &str) -> Result<CodecSpec, CodecError> {
         let s = s.trim();
         if let Some(rest) = s.strip_prefix("ef+") {
             let inner = CodecSpec::parse(rest)?;
             if matches!(inner, CodecSpec::ErrorFeedback(_)) {
-                return Err(CodecError::BadSpec("nested ef+ef".to_string()));
+                return Err(CodecError::BadSpec(format!(
+                    "`{s}`: ef+ wraps a base codec, not another ef+ \
+                     (grammar: {CODEC_GRAMMAR})"
+                )));
             }
             let spec = CodecSpec::ErrorFeedback(Box::new(inner));
             spec.validate()?;
@@ -887,8 +897,12 @@ impl CodecSpec {
         let head = parts.next().unwrap_or("");
         let args: Vec<&str> = parts.collect();
         let frac = |a: &str| -> Result<f64, CodecError> {
-            a.parse::<f64>()
-                .map_err(|_| CodecError::BadSpec(format!("`{a}` is not a fraction")))
+            a.parse::<f64>().map_err(|_| {
+                CodecError::BadSpec(format!(
+                    "`{s}`: `{a}` is not a fraction \
+                     (grammar: {CODEC_GRAMMAR})"
+                ))
+            })
         };
         let spec = match (head, args.as_slice()) {
             ("identity" | "dense", []) => CodecSpec::Identity,
@@ -902,7 +916,8 @@ impl CodecSpec {
                     "explicit" | "coo" => WireMode::Explicit,
                     other => {
                         return Err(CodecError::BadSpec(format!(
-                            "unknown wire mode `{other}` (use values|explicit)"
+                            "`{s}`: unknown wire mode `{other}` — use \
+                             values|explicit (grammar: {CODEC_GRAMMAR})"
                         )))
                     }
                 };
@@ -911,15 +926,34 @@ impl CodecSpec {
             ("top_k" | "topk", [k]) => CodecSpec::TopK { k_frac: frac(k)? },
             ("qsgd", [b]) => CodecSpec::Qsgd {
                 bits: b.parse::<u8>().map_err(|_| {
-                    CodecError::BadSpec(format!("`{b}` is not a bit width"))
+                    CodecError::BadSpec(format!(
+                        "`{s}`: `{b}` is not a bit width \
+                         (grammar: {CODEC_GRAMMAR})"
+                    ))
                 })?,
             },
             ("sign", []) => CodecSpec::SignNorm,
-            _ => {
-                return Err(CodecError::BadSpec(format!(
-                    "unknown codec `{s}` (grammar: identity | rand_k:K[:values] \
-                     | top_k:K | qsgd:B | sign | ef+<codec>)"
-                )))
+            (head, args) => {
+                // Name the token that broke the parse: a known codec
+                // with the wrong arity points at its argument list, an
+                // unknown head at itself.
+                let known = matches!(
+                    head,
+                    "identity" | "dense" | "rand_k" | "randk" | "top_k"
+                        | "topk" | "qsgd" | "sign"
+                );
+                return Err(CodecError::BadSpec(if known {
+                    format!(
+                        "`{s}`: `{head}` takes a different argument count \
+                         than the {} given (grammar: {CODEC_GRAMMAR})",
+                        args.len()
+                    )
+                } else {
+                    format!(
+                        "unknown codec `{head}` in `{s}` \
+                         (grammar: {CODEC_GRAMMAR})"
+                    )
+                }));
             }
         };
         spec.validate()?;
@@ -935,7 +969,8 @@ impl CodecSpec {
                     Ok(())
                 } else {
                     Err(CodecError::BadSpec(format!(
-                        "k must be in (0, 1], got {k_frac}"
+                        "k must be in (0, 1], got `{k_frac}` \
+                         (grammar: {CODEC_GRAMMAR})"
                     )))
                 }
             }
@@ -944,7 +979,8 @@ impl CodecSpec {
                     Ok(())
                 } else {
                     Err(CodecError::BadSpec(format!(
-                        "qsgd bits must be in [2, 8], got {bits}"
+                        "qsgd bits must be in [2, 8], got `{bits}` \
+                         (grammar: {CODEC_GRAMMAR})"
                     )))
                 }
             }
@@ -1441,13 +1477,32 @@ mod tests {
             CodecSpec::parse("ef+top_k:0.01").unwrap(),
             CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK { k_frac: 0.01 }))
         );
-        // Broken specs fail loudly with a typed error.
-        for bad in ["", "bogus", "rand_k", "rand_k:0", "rand_k:1.5",
-                    "rand_k:0.1:weird", "qsgd:1", "qsgd:9", "qsgd:x",
-                    "ef+ef+sign", "top_k:nope"] {
+        // Broken specs fail loudly with a typed error that names the
+        // offending token AND restates the grammar.
+        for (bad, token) in [
+            ("", ""),
+            ("bogus", "`bogus`"),
+            ("rand_k", "argument count"),
+            ("rand_k:0", "`0`"),
+            ("rand_k:1.5", "`1.5`"),
+            ("rand_k:0.1:weird", "`weird`"),
+            ("qsgd:1", "`1`"),
+            ("qsgd:9", "`9`"),
+            ("qsgd:x", "`x`"),
+            ("ef+ef+sign", "base codec"),
+            ("top_k:nope", "`nope`"),
+            ("sign:1", "argument count"),
+            ("identity:x", "argument count"),
+        ] {
+            let err = CodecSpec::parse(bad)
+                .err()
+                .unwrap_or_else(|| panic!("`{bad}` should not parse"));
+            assert!(matches!(err, CodecError::BadSpec(_)), "`{bad}`: {err}");
+            let msg = err.to_string();
+            assert!(msg.contains(token), "`{bad}`: `{msg}` misses `{token}`");
             assert!(
-                matches!(CodecSpec::parse(bad), Err(CodecError::BadSpec(_))),
-                "`{bad}` should not parse"
+                msg.contains("grammar"),
+                "`{bad}`: `{msg}` must restate the grammar"
             );
         }
         assert_eq!(CodecSpec::parse("qsgd:4").unwrap().name(), "qsgd 4b");

@@ -24,7 +24,7 @@ use std::sync::{mpsc, Arc};
 use anyhow::{anyhow, Context, Result};
 
 use crate::algorithms::{build_machine, build_node, AlgorithmSpec, BuildCtx,
-                        DualPath};
+                        DualPath, RoundPolicy};
 use crate::comm::{build_bus, NodeComm};
 use crate::data::{build_node_datasets, Batcher, Dataset, Partition,
                   SyntheticSpec};
@@ -70,6 +70,11 @@ pub struct ExperimentSpec {
     pub dual_path: DualPath,
     /// Execution engine (threaded vs virtual-time).
     pub exec: ExecMode,
+    /// Round policy: bulk-synchronous (default; trajectory pinned
+    /// identical to the pre-async schedule) or event-driven with
+    /// bounded per-edge staleness (`--rounds async:<s>`; requires the
+    /// virtual-time engine).
+    pub rounds: RoundPolicy,
     /// Override the artifact directory (defaults to `$CECL_ARTIFACTS` or
     /// `./artifacts`).
     pub artifacts_dir: Option<String>,
@@ -93,6 +98,7 @@ impl Default for ExperimentSpec {
             seed: 42,
             dual_path: DualPath::Native,
             exec: ExecMode::Threaded,
+            rounds: RoundPolicy::Sync,
             artifacts_dir: None,
             verbose: false,
         }
@@ -118,6 +124,9 @@ pub struct Report {
     pub retransmit_bytes: u64,
     /// Total simulated time (None under the threaded engine).
     pub sim_time_secs: Option<f64>,
+    /// Largest per-edge staleness (rounds) any node consumed — 0 under
+    /// sync rounds and the threaded engine.
+    pub max_staleness: usize,
     pub wallclock_secs: f64,
 }
 
@@ -190,6 +199,14 @@ fn run_threaded(
     spec: &ExperimentSpec,
     graph: &Graph,
 ) -> Result<Report> {
+    if spec.rounds.is_async() {
+        return Err(anyhow!(
+            "RoundPolicy::{} requires the virtual-time engine \
+             (ExecMode::Simulated): the threaded bus blocks on every \
+             neighbor and is bulk-synchronous by construction",
+            spec.rounds.name()
+        ));
+    }
     let t0 = std::time::Instant::now();
     let ds = manifest.dataset(&spec.dataset)?.clone();
     let runtime = ModelRuntime::load(engine, &ds)?;
@@ -234,6 +251,7 @@ fn run_threaded(
             rounds_per_epoch,
             dual_path: spec.dual_path,
             runtime: Some(Arc::clone(&runtime)),
+            round_policy: RoundPolicy::Sync,
         };
         let mut algo = build_node(&spec.algorithm, &ctx)?;
         let mut w = (*init_w).clone();
@@ -352,6 +370,7 @@ fn run_threaded(
         total_bytes,
         retransmit_bytes: 0,
         sim_time_secs: None,
+        max_staleness: 0,
         wallclock_secs: t0.elapsed().as_secs_f64(),
     })
 }
@@ -438,6 +457,7 @@ where
             // DualPath::Pjrt is a threaded-engine option.
             dual_path: DualPath::Native,
             runtime: None,
+            round_policy: spec.rounds,
         };
         setups.push(sim::NodeSetup {
             machine: build_machine(&spec.algorithm, &ctx)?,
@@ -447,7 +467,7 @@ where
     }
 
     let out = sim::simulate(&graph, cfg, spec.seed, &sched, setups,
-                            spec.verbose)?;
+                            spec.rounds, spec.verbose)?;
     let total_bytes = out.meter.total_bytes();
     let mean_bytes_per_epoch =
         total_bytes as f64 / nodes as f64 / spec.epochs as f64;
@@ -463,6 +483,7 @@ where
         total_bytes,
         retransmit_bytes: out.meter.total_retransmit_bytes(),
         sim_time_secs: Some(out.vtime_ns as f64 / 1e9),
+        max_staleness: out.max_staleness,
         wallclock_secs: t0.elapsed().as_secs_f64(),
     })
 }
@@ -551,6 +572,7 @@ pub fn run_simulated_native(spec: &ExperimentSpec, graph: &Graph)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::LinkSpec;
 
     #[test]
     fn defaults_are_paper_shaped() {
@@ -559,6 +581,52 @@ mod tests {
         assert_eq!(spec.local_steps, 5);
         assert_eq!(spec.partition, Partition::Homogeneous);
         assert!(matches!(spec.exec, ExecMode::Threaded));
+        // The default round policy IS the pre-async schedule.
+        assert_eq!(spec.rounds, RoundPolicy::Sync);
+    }
+
+    #[test]
+    fn async_native_sim_runs_replays_and_bounds_staleness() {
+        let graph = Graph::ring(6);
+        let spec = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: AlgorithmSpec::CEcl {
+                k_frac: 0.2,
+                theta: 1.0,
+                dense_first_epoch: false,
+            },
+            epochs: 3,
+            nodes: 6,
+            train_per_node: 20,
+            test_size: 40,
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 1,
+            seed: 11,
+            exec: ExecMode::Simulated(SimConfig {
+                link: LinkSpec::Constant { latency_us: 300 },
+                stragglers: vec![(1, 6.0)],
+                ..SimConfig::default()
+            }),
+            rounds: RoundPolicy::Async { max_staleness: 2 },
+            ..Default::default()
+        };
+        let a = run_simulated_native(&spec, &graph).unwrap();
+        let b = run_simulated_native(&spec, &graph).unwrap();
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.sim_time_secs, b.sim_time_secs);
+        assert_eq!(a.max_staleness, b.max_staleness);
+        assert!(a.max_staleness <= 2, "bound violated: {}", a.max_staleness);
+        assert!(a.final_accuracy.is_finite());
+        // PowerGossip cannot run async — a typed construction error,
+        // not a deadlock.
+        let pg = ExperimentSpec {
+            algorithm: AlgorithmSpec::PowerGossip { iters: 2 },
+            ..spec.clone()
+        };
+        let err = run_simulated_native(&pg, &graph).err().unwrap();
+        assert!(err.to_string().contains("Sync"), "{err}");
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod sim;
 pub mod tables;
 pub mod theory;
 
-use crate::algorithms::DualPath;
+use crate::algorithms::{DualPath, RoundPolicy};
 use crate::compress::CodecSpec;
 use crate::data::Partition;
 use crate::util::cli::Args;
@@ -32,6 +32,10 @@ pub struct Sizing {
     /// C-ECL rows to the comparison/sim tables; the first entry drives
     /// single-run commands (`repro train` / `repro sim`).
     pub codecs: Vec<CodecSpec>,
+    /// Round policy (`--rounds sync|async:<s>`).  Async needs the
+    /// virtual-time engine; in `repro sim --table` a non-sync value
+    /// adds an async sweep next to the sync baseline.
+    pub rounds: RoundPolicy,
 }
 
 impl Default for Sizing {
@@ -49,6 +53,7 @@ impl Default for Sizing {
             verbose: false,
             datasets: vec!["fashion".to_string(), "cifar".to_string()],
             codecs: Vec::new(),
+            rounds: RoundPolicy::Sync,
         }
     }
 }
@@ -86,6 +91,9 @@ impl Sizing {
             "pjrt" => s.dual_path = DualPath::Pjrt,
             other => panic!("--dual-path {other}: use native|pjrt"),
         }
+        let rounds = args.get_str("rounds", "sync");
+        s.rounds = RoundPolicy::parse(&rounds)
+            .unwrap_or_else(|| panic!("--rounds {rounds}: use sync|async:<max_staleness>"));
         s
     }
 
@@ -103,6 +111,7 @@ impl Sizing {
             eval_every: self.eval_every,
             seed: self.seed,
             dual_path: self.dual_path,
+            rounds: self.rounds,
             verbose: self.verbose,
             ..Default::default()
         }
@@ -136,6 +145,31 @@ mod tests {
         assert!(s.verbose);
         assert!((s.eta - 0.5).abs() < 1e-6);
         assert!(s.codecs.is_empty());
+    }
+
+    #[test]
+    fn sizing_parses_round_policy() {
+        let s = Sizing::from_args(&Args::parse(
+            "x --rounds async:3".split_whitespace().map(String::from),
+        ));
+        assert_eq!(s.rounds, RoundPolicy::Async { max_staleness: 3 });
+        let s = Sizing::from_args(&Args::parse(
+            "x --rounds sync".split_whitespace().map(String::from),
+        ));
+        assert_eq!(s.rounds, RoundPolicy::Sync);
+        assert_eq!(Sizing::default().rounds, RoundPolicy::Sync);
+        assert_eq!(
+            s.spec_base("fashion", Partition::Homogeneous).rounds,
+            RoundPolicy::Sync
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn broken_round_policy_fails_loudly() {
+        let _ = Sizing::from_args(&Args::parse(
+            "x --rounds async".split_whitespace().map(String::from),
+        ));
     }
 
     #[test]

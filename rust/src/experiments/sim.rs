@@ -1,17 +1,21 @@
 //! Virtual-time experiments: simulated *time-to-accuracy* under
 //! realistic links — the table the paper's byte counts are a proxy for.
 //!
-//! For each method × link model, runs the artifact-free simulated
-//! engine and reports final accuracy, total simulated seconds, the
-//! first virtual time at which the target accuracy was reached, payload
-//! bytes, and retransmit overhead.  On a bandwidth-limited or lossy
-//! link, C-ECL's smaller messages translate directly into earlier
-//! arrival times — compression becomes a *time* win, which bytes alone
-//! cannot show.
+//! For each method × link model × round policy, runs the artifact-free
+//! simulated engine and reports final accuracy, total simulated
+//! seconds, the first virtual time at which the target accuracy was
+//! reached, payload bytes, retransmit overhead, and the largest
+//! per-edge staleness actually consumed.  On a bandwidth-limited or
+//! lossy link, C-ECL's smaller messages translate directly into
+//! earlier arrival times — compression becomes a *time* win, which
+//! bytes alone cannot show.  Under a straggler or a slow edge, the
+//! async policy (`--rounds async:<s>`) additionally hides
+//! communication behind the slowest node's compute, so the sync rows
+//! double as the ablation baseline.
 
 use anyhow::Result;
 
-use crate::algorithms::AlgorithmSpec;
+use crate::algorithms::{AlgorithmSpec, RoundPolicy};
 use crate::compress::{CodecSpec, WireMode};
 use crate::coordinator::{run_simulated_native, ExecMode, ExperimentSpec,
                          Report};
@@ -70,10 +74,25 @@ pub fn sim_methods() -> Vec<AlgorithmSpec> {
     ]
 }
 
+/// The round-policy sweep for a sizing: sync alone by default, sync
+/// plus the requested async policy when `--rounds async:<s>` was given
+/// (so every async row has its barrier baseline right above it).
+pub fn policy_ladder(sizing: &Sizing) -> Vec<RoundPolicy> {
+    if sizing.rounds.is_async() {
+        vec![RoundPolicy::Sync, sizing.rounds]
+    } else {
+        vec![RoundPolicy::Sync]
+    }
+}
+
 /// Run the time-to-accuracy table on a ring. `target_acc` picks the
-/// accuracy threshold the "t2a" column reports.
-pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig,
-                     target_acc: f64) -> Result<(Table, Vec<Report>)> {
+/// accuracy threshold the "t2a" column reports; `policies` is the
+/// round-policy sweep (see [`policy_ladder`]).  Methods that cannot
+/// run a policy (PowerGossip × async) are skipped rather than failing
+/// the whole table.
+pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
+                     policies: &[RoundPolicy])
+                     -> Result<(Table, Vec<Report>)> {
     let graph = Graph::ring(sizing.nodes);
     let dataset = sizing
         .datasets
@@ -83,9 +102,11 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig,
     let headers: Vec<String> = vec![
         "method".into(),
         "link".into(),
+        "rounds".into(),
         "final acc".into(),
         "sim secs".into(),
         format!("t2a@{:.0}%", target_acc * 100.0),
+        "lag".into(),
         "KB/node/epoch".into(),
         "retrans KB".into(),
     ];
@@ -99,35 +120,44 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig,
     }));
     for alg in methods {
         for link in link_ladder() {
-            let mut spec: ExperimentSpec =
-                sizing.spec_base(&dataset, Partition::Homogeneous);
-            spec.algorithm = alg.clone();
-            spec.exec = ExecMode::Simulated(SimConfig {
-                link: link.clone(),
-                ..cfg_base.clone()
-            });
-            if sizing.verbose {
-                eprintln!("[sim] {} / {} ...", alg.name(), link.name());
+            for &policy in policies {
+                if policy.is_async() && !alg.supports_async() {
+                    continue;
+                }
+                let mut spec: ExperimentSpec =
+                    sizing.spec_base(&dataset, Partition::Homogeneous);
+                spec.algorithm = alg.clone();
+                spec.rounds = policy;
+                spec.exec = ExecMode::Simulated(SimConfig {
+                    link: link.clone(),
+                    ..cfg_base.clone()
+                });
+                if sizing.verbose {
+                    eprintln!("[sim] {} / {} / {} ...", alg.name(),
+                              link.name(), policy.name());
+                }
+                let report = run_simulated_native(&spec, &graph)?;
+                let t2a = report
+                    .history
+                    .time_to_accuracy(target_acc)
+                    .map(|(_, t)| format!("{t:.2}s"))
+                    .unwrap_or_else(|| "-".to_string());
+                table.row([
+                    report.algorithm.clone(),
+                    link.name(),
+                    policy.name(),
+                    format!("{:.3}", report.final_accuracy),
+                    format!("{:.2}", report.sim_time_secs.unwrap_or(0.0)),
+                    t2a,
+                    format!("{}", report.max_staleness),
+                    format!("{:.0}", report.mean_bytes_per_epoch / 1024.0),
+                    format!(
+                        "{:.0}",
+                        report.retransmit_bytes as f64 / 1024.0
+                    ),
+                ]);
+                reports.push(report);
             }
-            let report = run_simulated_native(&spec, &graph)?;
-            let t2a = report
-                .history
-                .time_to_accuracy(target_acc)
-                .map(|(_, t)| format!("{t:.2}s"))
-                .unwrap_or_else(|| "-".to_string());
-            table.row([
-                report.algorithm.clone(),
-                link.name(),
-                format!("{:.3}", report.final_accuracy),
-                format!("{:.2}", report.sim_time_secs.unwrap_or(0.0)),
-                t2a,
-                format!("{:.0}", report.mean_bytes_per_epoch / 1024.0),
-                format!(
-                    "{:.0}",
-                    report.retransmit_bytes as f64 / 1024.0
-                ),
-            ]);
-            reports.push(report);
         }
     }
     let _ = table.write_csv(results_dir().join("sim_time_to_accuracy.csv"));
@@ -148,9 +178,8 @@ mod tests {
         assert!(sim_methods().len() >= 3);
     }
 
-    #[test]
-    fn tiny_sim_table_runs() {
-        let sizing = Sizing {
+    fn tiny_sizing() -> Sizing {
+        Sizing {
             nodes: 4,
             epochs: 1,
             train_per_node: 20,
@@ -159,42 +188,123 @@ mod tests {
             eval_every: 1,
             datasets: vec!["tiny".to_string()],
             ..Sizing::default()
-        };
-        let (table, reports) =
-            run_sim_table(&sizing, &SimConfig::default(), 0.99).unwrap();
+        }
+    }
+
+    #[test]
+    fn tiny_sim_table_runs() {
+        let sizing = tiny_sizing();
+        let (table, reports) = run_sim_table(&sizing, &SimConfig::default(),
+                                             0.99, &policy_ladder(&sizing))
+            .unwrap();
         assert_eq!(reports.len(), sim_methods().len() * link_ladder().len());
         let rendered = table.render();
         assert!(rendered.contains("C-ECL"));
         assert!(rendered.contains("ideal"));
+        assert!(rendered.contains("sync"));
         // The codec ladder is present: ≥ 4 codecs including a
         // quantizer and an error-feedback variant.
         for row in ["rand_k 10%", "top_k 10%", "qsgd 4b", "sign",
                     "ef+top_k 10%"] {
             assert!(rendered.contains(row), "missing codec row `{row}`");
         }
-        // Every report carries a virtual clock.
+        // Every report carries a virtual clock; sync rows never lag.
         assert!(reports.iter().all(|r| r.sim_time_secs.is_some()));
+        assert!(reports.iter().all(|r| r.max_staleness == 0));
     }
 
     #[test]
     fn extra_codec_specs_append_rows() {
         let sizing = Sizing {
-            nodes: 4,
-            epochs: 1,
-            train_per_node: 20,
-            test_size: 20,
-            local_steps: 2,
-            eval_every: 1,
-            datasets: vec!["tiny".to_string()],
             codecs: vec![CodecSpec::Qsgd { bits: 8 }],
-            ..Sizing::default()
+            ..tiny_sizing()
         };
-        let (table, reports) =
-            run_sim_table(&sizing, &SimConfig::default(), 0.99).unwrap();
+        let (table, reports) = run_sim_table(&sizing, &SimConfig::default(),
+                                             0.99, &policy_ladder(&sizing))
+            .unwrap();
         assert_eq!(
             reports.len(),
             (sim_methods().len() + 1) * link_ladder().len()
         );
         assert!(table.render().contains("qsgd 8b"));
+    }
+
+    #[test]
+    fn async_policy_ladder_sweeps_sync_baseline_and_skips_powergossip() {
+        let sizing = Sizing {
+            rounds: RoundPolicy::Async { max_staleness: 2 },
+            ..tiny_sizing()
+        };
+        let policies = policy_ladder(&sizing);
+        assert_eq!(
+            policies,
+            vec![RoundPolicy::Sync, RoundPolicy::Async { max_staleness: 2 }]
+        );
+        let (table, reports) =
+            run_sim_table(&sizing, &SimConfig::default(), 0.99, &policies)
+                .unwrap();
+        // Every method runs sync; every method but PowerGossip also
+        // runs async.
+        assert_eq!(
+            reports.len(),
+            (2 * sim_methods().len() - 1) * link_ladder().len()
+        );
+        let rendered = table.render();
+        assert!(rendered.contains("async:2"));
+        assert!(reports.iter().all(|r| r.max_staleness <= 2));
+    }
+
+    #[test]
+    fn async_beats_sync_under_a_straggler() {
+        // The acceptance scenario in miniature: a ring with one 8×
+        // straggler (16 ms rounds vs 2 ms) on a latency-dominated link
+        // (30 ms).  Sync couples every round into a compute+round-trip
+        // cycle (period ≈ (2·30 + 2 + 16)/2 = 39 ms); async:2 gives
+        // 2 × 16 = 32 ms ≥ 30 ms of slack, so the straggler's edges lag
+        // instead of stalling and the period collapses to the
+        // straggler's own 16 ms compute — same target accuracy in
+        // measurably less simulated time.
+        let run = |rounds: RoundPolicy| {
+            let sizing = Sizing {
+                nodes: 8,
+                epochs: 4,
+                train_per_node: 40,
+                rounds,
+                ..tiny_sizing()
+            };
+            let cfg = SimConfig {
+                link: LinkSpec::Constant { latency_us: 30_000 },
+                compute_ns_per_step: 1_000_000,
+                stragglers: vec![(0, 8.0)],
+                ..SimConfig::default()
+            };
+            let spec = ExperimentSpec {
+                algorithm: AlgorithmSpec::CEcl {
+                    k_frac: 0.1,
+                    theta: 1.0,
+                    dense_first_epoch: false,
+                },
+                exec: ExecMode::Simulated(cfg),
+                rounds,
+                ..sizing.spec_base("tiny", Partition::Homogeneous)
+            };
+            run_simulated_native(&spec, &Graph::ring(8)).unwrap()
+        };
+        let sync = run(RoundPolicy::Sync);
+        let async_ = run(RoundPolicy::Async { max_staleness: 2 });
+        assert_eq!(sync.max_staleness, 0);
+        assert!(async_.max_staleness >= 1, "straggler edges must lag");
+        assert!(async_.max_staleness <= 2, "bound violated");
+        // Same traffic, strictly less simulated time end-to-end AND to
+        // the (trivially reachable) accuracy target.
+        assert_eq!(sync.total_bytes, async_.total_bytes);
+        let (ts, ta) = (
+            sync.sim_time_secs.unwrap(),
+            async_.sim_time_secs.unwrap(),
+        );
+        assert!(ta < ts, "async {ta}s !< sync {ts}s");
+        let t2a_s = sync.history.time_to_accuracy(0.0).unwrap().1;
+        let t2a_a = async_.history.time_to_accuracy(0.0).unwrap().1;
+        assert!(t2a_a < t2a_s, "t2a async {t2a_a}s !< sync {t2a_s}s");
     }
 }

@@ -33,9 +33,10 @@
 //! | | **Threaded** (`ExecMode::Threaded`) | **Virtual-time** (`ExecMode::Simulated`) |
 //! |---|---|---|
 //! | concurrency | one OS thread per node | single thread, event queue |
-//! | network | zero-latency, lossless channels | pluggable [`sim::LinkModel`]s: latency, bandwidth, drops + retransmit, stragglers, edge outages |
+//! | network | zero-latency, lossless channels | pluggable [`sim::LinkModel`]s: latency, bandwidth, drops + retransmit, per-edge overrides, stragglers, edge outages |
 //! | clock | wall-clock only | virtual nanoseconds ⇒ simulated *time-to-accuracy* |
 //! | scale | ~dozens of nodes | 512+ nodes in one process |
+//! | round policies | sync only | sync, or `async:<s>` bounded staleness |
 //! | determinism | bytes deterministic; timing racy | same seed ⇒ bit-identical [`coordinator::Report`] |
 //!
 //! Use the **threaded** engine to benchmark real wall-clock round costs
@@ -103,6 +104,49 @@
 //! };
 //! ```
 //!
+//! ## Round policies
+//!
+//! Rounds are **per-edge**: every message carries its sender's round
+//! counter, and [`algorithms::NodeStateMachine::on_message`] receives
+//! that stamp rather than the receiver's round.  An
+//! [`algorithms::RoundPolicy`] — selected via
+//! [`coordinator::ExperimentSpec::rounds`] or `--rounds sync|async:<s>`
+//! — decides when a node may finish its exchange and run its next K
+//! local steps:
+//!
+//! * **`Sync`** (default): barrier on every edge's current-round
+//!   message.  Byte- and trajectory-identical to the pre-async
+//!   schedule on both engines — pinned by tests.
+//! * **`Async { max_staleness }`** (virtual-time engine only):
+//!   gossip-style, event-driven rounds.  Messages apply the moment they
+//!   arrive (per-edge FIFO, shared-seed masks keyed by the *message's*
+//!   round, so codec streams never desynchronize); a node steps once
+//!   every edge has delivered state at most `max_staleness` rounds old.
+//!   A straggler or one slow edge then delays only its own edges
+//!   instead of barring the whole graph — C-ECL consumes the freshest
+//!   dual it has per neighbor (stale-dual C-ECL), D-PSGD averages the
+//!   freshest parameters.  The bound is enforced in-protocol
+//!   (`round_end` errors on a violation) and reported as
+//!   [`coordinator::Report::max_staleness`].  PowerGossip's interactive
+//!   multi-phase pipeline is sync-only.
+//!
+//! ```no_run
+//! use cecl::prelude::*;
+//!
+//! let spec = ExperimentSpec {
+//!     algorithm: AlgorithmSpec::CEcl { k_frac: 0.10, theta: 1.0, dense_first_epoch: false },
+//!     nodes: 64,
+//!     exec: ExecMode::Simulated(SimConfig {
+//!         link: LinkSpec::Constant { latency_us: 30_000 },
+//!         stragglers: vec![(11, 8.0)],         // one 8x-slow node
+//!         edge_links: vec![(3, LinkSpec::Constant { latency_us: 100 })],
+//!         ..SimConfig::default()
+//!     }),
+//!     rounds: RoundPolicy::Async { max_staleness: 2 },
+//!     ..ExperimentSpec::default()
+//! };
+//! ```
+//!
 //! ## Module map
 //!
 //! | module | contents |
@@ -110,9 +154,9 @@
 //! | [`compress`] | rand-k mask sampler, COO vectors, low-rank (PowerGossip) |
 //! | [`compress::codec`] | **edge codecs**: `EdgeCodec`/`Frame`/`EdgeCtx`/`CodecSpec`, identity / rand-k (explicit + values-only wire) / top-k / QSGD / sign / error feedback |
 //! | [`comm`] | `Msg` (dense / sparse / codec frame / scalar), byte meter, threaded bus |
-//! | [`algorithms`] | `NodeAlgorithm` + `NodeStateMachine` protocol drivers |
+//! | [`algorithms`] | `NodeAlgorithm` + `NodeStateMachine` protocol drivers, `RoundPolicy` (sync / bounded-staleness async) |
 //! | [`coordinator`] | `ExperimentSpec` → `Report` on either engine |
-//! | [`sim`] | virtual-time engine: event queue, link models, stragglers, outages |
+//! | [`sim`] | virtual-time engine: event queue, link models (incl. per-edge overrides), stragglers, outages |
 //! | [`experiments`] | tables, figures, ablations, simulated time-to-accuracy |
 //! | [`quadratic`], [`graph`], [`data`], [`model`], [`runtime`] | convex substrate, topologies, synthetic data, manifests, PJRT |
 
@@ -133,7 +177,7 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::algorithms::AlgorithmSpec;
+    pub use crate::algorithms::{AlgorithmSpec, RoundPolicy};
     pub use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx, Frame, RandK,
                               WireMode};
     pub use crate::coordinator::{run_experiment, run_simulated_native,

@@ -150,6 +150,12 @@ fn main() -> Result<()> {
             let compute_us = args.get("compute-us-per-step", 1000u64);
             let table_mode = args.flag("table");
             let target = args.get("target-acc", 0.5f64);
+            let stragglers = parse_stragglers(
+                &args.get_str("straggler", ""),
+            )?;
+            let edge_links = parse_edge_links(
+                &args.get_str("edge-link", ""),
+            )?;
             check_unknown(&args)?;
             let link = match link_name.as_str() {
                 "ideal" => LinkSpec::Ideal,
@@ -167,14 +173,19 @@ fn main() -> Result<()> {
             };
             let cfg = SimConfig {
                 link,
+                edge_links,
                 compute_ns_per_step: compute_us.saturating_mul(1000),
+                stragglers,
                 ..SimConfig::default()
             };
             if table_mode {
-                let (table, _) = sim_exp::run_sim_table(&sizing, &cfg, target)?;
+                let policies = sim_exp::policy_ladder(&sizing);
+                let (table, _) =
+                    sim_exp::run_sim_table(&sizing, &cfg, target, &policies)?;
                 println!(
-                    "--- sim time-to-accuracy (ring {} nodes) ---",
-                    sizing.nodes
+                    "--- sim time-to-accuracy (ring {} nodes, rounds {}) ---",
+                    sizing.nodes,
+                    sizing.rounds.name()
                 );
                 println!("{}", table.render());
             } else {
@@ -188,15 +199,18 @@ fn main() -> Result<()> {
                 spec.exec = ExecMode::Simulated(cfg);
                 let report = run_simulated_native(&spec, &graph)?;
                 println!(
-                    "\n{} on {} ({} nodes, {}): final acc {:.3}, \
-                     sim time {:.2}s, sent {:.0} KB/node/epoch, \
+                    "\n{} on {} ({} nodes, {}, rounds {}): final acc {:.3}, \
+                     sim time {:.2}s, max lag {} rounds, \
+                     sent {:.0} KB/node/epoch, \
                      retransmitted {:.0} KB, wallclock {:.2}s",
                     report.algorithm,
                     topology.name(),
                     sizing.nodes,
                     report.dataset,
+                    spec.rounds.name(),
                     report.final_accuracy,
                     report.sim_time_secs.unwrap_or(0.0),
+                    report.max_staleness,
                     report.mean_bytes_per_epoch / 1024.0,
                     report.retransmit_bytes as f64 / 1024.0,
                     report.wallclock_secs
@@ -273,12 +287,76 @@ fn pick_algorithm(args: &Args, sizing: &Sizing,
         });
     }
     let name = alg_name.unwrap_or_else(|| "cecl:0.1".to_string());
-    let mut alg = AlgorithmSpec::parse(&name)
-        .ok_or_else(|| anyhow!("unknown algorithm {name}"))?;
+    let mut alg = AlgorithmSpec::parse(&name).ok_or_else(|| {
+        // A broken embedded codec spec deserves the codec parser's
+        // detailed error (offending token + grammar), not a generic
+        // "unknown algorithm".
+        if let Some(arg) = name
+            .strip_prefix("cecl:")
+            .or_else(|| name.strip_prefix("c-ecl:"))
+        {
+            if arg.parse::<f64>().is_err() {
+                if let Err(e) = cecl::compress::CodecSpec::parse(arg) {
+                    return anyhow!("--algorithm {name}: {e}");
+                }
+            }
+        }
+        anyhow!("unknown algorithm {name}")
+    })?;
     if let AlgorithmSpec::CEclCodec { dense_first_epoch: dfe, .. } = &mut alg {
         *dfe = dense_first_epoch;
     }
     Ok(alg)
+}
+
+/// Parse `--straggler n:factor[,n:factor...]` into `SimConfig`
+/// straggler entries (range and duplicate validation happens in the
+/// engine, next to the edge-link checks).
+fn parse_stragglers(s: &str) -> Result<Vec<(usize, f64)>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            let p = p.trim();
+            let (node, factor) = p.split_once(':').ok_or_else(|| {
+                anyhow!(
+                    "--straggler `{p}`: expected <node>:<factor> \
+                     (e.g. 0:8 for an 8x slowdown of node 0)"
+                )
+            })?;
+            Ok((
+                node.parse().map_err(|_| {
+                    anyhow!("--straggler `{p}`: `{node}` is not a node index")
+                })?,
+                factor.parse().map_err(|_| {
+                    anyhow!("--straggler `{p}`: `{factor}` is not a factor")
+                })?,
+            ))
+        })
+        .collect()
+}
+
+/// Parse `--edge-link e@spec[,e@spec...]` into per-edge link
+/// overrides (spec grammar: `LinkSpec::parse`).
+fn parse_edge_links(s: &str) -> Result<Vec<(usize, LinkSpec)>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            let p = p.trim();
+            let (edge, spec) = p.split_once('@').ok_or_else(|| {
+                anyhow!(
+                    "--edge-link `{p}`: expected <edge>@<link spec> \
+                     (e.g. 0@constant:5000)"
+                )
+            })?;
+            Ok((
+                edge.parse().map_err(|_| {
+                    anyhow!("--edge-link `{p}`: `{edge}` is not an edge index")
+                })?,
+                LinkSpec::parse(spec)
+                    .map_err(|e| anyhow!("--edge-link `{p}`: {e}"))?,
+            ))
+        })
+        .collect()
 }
 
 fn check_unknown(args: &Args) -> Result<()> {
@@ -316,8 +394,13 @@ commands:
   sim              virtual-time run, artifact-free (scales to 512+ nodes):
                    --link ideal|constant|bandwidth|lossy --latency-us N
                    --mbit-per-sec F --drop-p F --compute-us-per-step N
-                   --table (time-to-accuracy ladder incl. the codec
-                   ladder) --target-acc F --codec SPEC[,SPEC...]
+                   --straggler n:factor[,...] (per-node compute slowdown)
+                   --edge-link e@SPEC[,...]   (heterogeneous per-edge links,
+                   SPEC: ideal|constant:LAT|bandwidth:LAT:MBIT|
+                   lossy:LAT:MBIT:P)
+                   --table (time-to-accuracy ladder incl. the codec ladder;
+                   with --rounds async:S it sweeps sync vs async)
+                   --target-acc F --codec SPEC[,SPEC...]
   ablation-naive   Eq.11 vs Eq.13 dual compression
   ablation-warmup  first-epoch dense on/off
   ablation-wire    explicit-index vs values-only rand-k wire modes
@@ -327,10 +410,17 @@ codec specs (--codec, also `--algorithm cecl:SPEC`):
   | ef+<codec>         e.g. rand_k:0.1, qsgd:4, ef+top_k:0.01
   (non-linear codecs — top_k/qsgd/sign/ef — run the Eq. 11 dual rule)
 
+round policies (--rounds, virtual-time engine only for async):
+  sync             bulk-synchronous rounds (default; pre-async pinned
+                   trajectory)
+  async:S          per-edge clocks, gossip-style: a node steps once every
+                   edge has delivered a message at most S rounds stale
+                   (PowerGossip is sync-only)
+
 common options:
   --dataset fashion|cifar   --epochs N        --nodes N
   --train-per-node N        --test-size N     --eta F
   --local-steps K           --eval-every N    --seed N
-  --dual-path native|pjrt   --verbose
+  --dual-path native|pjrt   --verbose         --rounds sync|async:S
   --partition homo|hetero   --topology chain|ring|multiplex-ring|fully-connected
 ";

@@ -191,7 +191,59 @@ pub enum LinkSpec {
     },
 }
 
+/// Compact `LinkSpec` grammar shared by every parse error.
+const LINK_GRAMMAR: &str = "ideal | constant:<latency_us> | \
+                            bandwidth:<latency_us>:<mbit_per_sec> | \
+                            lossy:<latency_us>:<mbit_per_sec>:<drop_p>";
+
 impl LinkSpec {
+    /// Parse the compact one-token grammar used by `--edge-link`
+    /// (`ideal`, `constant:500`, `bandwidth:500:100`,
+    /// `lossy:500:100:0.05`).  Errors name the offending token and
+    /// restate the grammar.
+    pub fn parse(s: &str) -> anyhow::Result<LinkSpec> {
+        let s = s.trim();
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or("");
+        let args: Vec<&str> = parts.collect();
+        let int = |a: &str, what: &str| -> anyhow::Result<u64> {
+            a.parse::<u64>().map_err(|_| {
+                anyhow::anyhow!(
+                    "link spec `{s}`: `{a}` is not a {what} \
+                     (grammar: {LINK_GRAMMAR})"
+                )
+            })
+        };
+        let num = |a: &str, what: &str| -> anyhow::Result<f64> {
+            a.parse::<f64>().map_err(|_| {
+                anyhow::anyhow!(
+                    "link spec `{s}`: `{a}` is not a {what} \
+                     (grammar: {LINK_GRAMMAR})"
+                )
+            })
+        };
+        let spec = match (head, args.as_slice()) {
+            ("ideal", []) => LinkSpec::Ideal,
+            ("constant", [lat]) => LinkSpec::Constant {
+                latency_us: int(lat, "latency in microseconds")?,
+            },
+            ("bandwidth" | "bw", [lat, mbit]) => LinkSpec::Bandwidth {
+                latency_us: int(lat, "latency in microseconds")?,
+                mbit_per_sec: num(mbit, "bandwidth in Mbit/s")?,
+            },
+            ("lossy", [lat, mbit, drop]) => LinkSpec::Lossy {
+                latency_us: int(lat, "latency in microseconds")?,
+                mbit_per_sec: num(mbit, "bandwidth in Mbit/s")?,
+                drop_p: num(drop, "drop probability")?,
+            },
+            _ => anyhow::bail!(
+                "unknown link spec `{s}` (grammar: {LINK_GRAMMAR})"
+            ),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
     /// Validate the parameters (positive rates, `drop_p ∈ [0, 1)`).
     pub fn validate(&self) -> anyhow::Result<()> {
         match *self {
@@ -325,6 +377,36 @@ mod tests {
         // 80 Mbit/s = 10 MB/s: 10_000 bytes serialize in 1 ms.
         let t = model.transmit(10_000, &mut rng);
         assert!(t.delay_ns() >= 100_000 + 1_000_000);
+    }
+
+    #[test]
+    fn parse_compact_grammar() {
+        assert_eq!(LinkSpec::parse("ideal").unwrap(), LinkSpec::Ideal);
+        assert_eq!(
+            LinkSpec::parse("constant:500").unwrap(),
+            LinkSpec::Constant { latency_us: 500 }
+        );
+        assert_eq!(
+            LinkSpec::parse("bw:500:100").unwrap(),
+            LinkSpec::Bandwidth { latency_us: 500, mbit_per_sec: 100.0 }
+        );
+        assert_eq!(
+            LinkSpec::parse("lossy:200:50:0.1").unwrap(),
+            LinkSpec::Lossy {
+                latency_us: 200,
+                mbit_per_sec: 50.0,
+                drop_p: 0.1
+            }
+        );
+        // Errors name the offending token and restate the grammar.
+        let err = LinkSpec::parse("constant:fast").unwrap_err();
+        assert!(err.to_string().contains("`fast`"), "{err}");
+        assert!(err.to_string().contains("grammar"), "{err}");
+        let err = LinkSpec::parse("warp:1").unwrap_err();
+        assert!(err.to_string().contains("`warp:1`"), "{err}");
+        // Out-of-range parameters still go through validate().
+        assert!(LinkSpec::parse("lossy:200:50:1.5").is_err());
+        assert!(LinkSpec::parse("bandwidth:200:0").is_err());
     }
 
     #[test]

@@ -12,11 +12,19 @@
 //! * no thread spawn/park overhead in benches (the speed lever),
 //! * messages travel through pluggable [`LinkModel`]s — constant
 //!   latency, bandwidth-proportional serialization, i.i.d. drop with
-//!   retransmit byte accounting — plus per-node straggler slowdowns and
+//!   retransmit byte accounting, heterogeneous per-edge overrides
+//!   (`SimConfig::edge_links`) — plus per-node straggler slowdowns and
 //!   scheduled edge outages
 //!   ([`OutageSchedule`](crate::graph::OutageSchedule)), so
 //!   *time-to-accuracy* under imperfect networks becomes measurable
-//!   (the scenario lever).
+//!   (the scenario lever),
+//! * rounds follow a [`RoundPolicy`]: the classic bulk-synchronous
+//!   barrier (`Sync`, trajectory-identical to the threaded bus), or
+//!   gossip-style `Async { max_staleness }` where every message is
+//!   delivered the moment it arrives (per-edge FIFO, stamped with the
+//!   sender's round) and a node steps once each edge is at most
+//!   `max_staleness` rounds stale — a straggler or one slow edge then
+//!   delays only its own edges (the async lever).
 //!
 //! ## Determinism
 //!
@@ -53,7 +61,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::algorithms::NodeStateMachine;
+use crate::algorithms::{NodeStateMachine, RoundPolicy};
 use crate::comm::{Envelope, Meter, Msg, Outbox};
 use crate::graph::{Graph, OutageSchedule};
 use crate::metrics::{EpochRecord, History, Mean};
@@ -65,6 +73,11 @@ use crate::util::rng::{streams, Pcg};
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     pub link: LinkSpec,
+    /// Heterogeneous links: per-edge overrides `(edge_index, spec)`;
+    /// unlisted edges use `link`.  One topology can mix fast and slow
+    /// edges — the regime where async rounds shine (a slow edge lags
+    /// instead of stalling the whole graph).
+    pub edge_links: Vec<(usize, LinkSpec)>,
     /// Virtual nanoseconds one local step costs on a nominal node.
     pub compute_ns_per_step: u64,
     /// Per-node compute slowdown factors `(node, factor)`; factor 2.0
@@ -78,6 +91,7 @@ impl Default for SimConfig {
     fn default() -> Self {
         SimConfig {
             link: LinkSpec::Ideal,
+            edge_links: Vec::new(),
             compute_ns_per_step: 1_000_000, // 1 ms per local step
             stragglers: Vec::new(),
             outages: OutageSchedule::default(),
@@ -160,6 +174,11 @@ pub struct SimOutcome {
     pub meter: Arc<Meter>,
     /// Final per-node parameters.
     pub w: Vec<Vec<f32>>,
+    /// Largest per-edge staleness (in rounds) of any received message
+    /// a node consumed — 0 under `RoundPolicy::Sync`, `≤ max_staleness`
+    /// under `Async` (the bound is enforced in-protocol and pinned by
+    /// tests; start-up slack on silent edges is not counted).
+    pub max_staleness: usize,
 }
 
 // ---------------------------------------------------------------------
@@ -245,6 +264,9 @@ struct Courier<'a> {
     graph: &'a Graph,
     outages: &'a OutageSchedule,
     link: Box<dyn LinkModel>,
+    /// Heterogeneous-link overrides keyed by undirected edge index;
+    /// edges not listed fall back to `link`.
+    edge_links: BTreeMap<usize, Box<dyn LinkModel>>,
     link_rng: Pcg,
     meter: &'a Meter,
     queue: EventQueue,
@@ -267,7 +289,12 @@ impl Courier<'_> {
             .ok_or_else(|| anyhow!("sim: ({src}, {dst}) is not an edge"))?;
         let bytes = msg.wire_bytes();
         self.meter.record_send(src, bytes);
-        let tx = self.link.transmit(bytes, &mut self.link_rng);
+        let model = self
+            .edge_links
+            .get(&edge)
+            .map(|m| m.as_ref())
+            .unwrap_or(self.link.as_ref());
+        let tx = model.transmit(bytes, &mut self.link_rng);
         if tx.attempts > 1 {
             self.meter.record_retransmit(src, tx.retransmit_bytes(bytes));
         }
@@ -316,6 +343,7 @@ struct NodeRt {
 
 struct World<'a> {
     sched: &'a Schedule,
+    policy: RoundPolicy,
     rt: Vec<NodeRt>,
     courier: Courier<'a>,
     /// Per-epoch eval slots, filled as nodes reach the epoch boundary.
@@ -353,14 +381,11 @@ impl World<'_> {
         for (to, msg) in outv {
             self.courier.send(i, to, round, msg, now)?;
         }
-        // Degenerate rounds (SGD, degree 0) complete without traffic;
-        // otherwise drain anything that arrived while computing.
-        if self.rt[i].machine.round_complete() {
-            self.finish_round(i, now)?;
-            Ok(())
-        } else {
-            self.pump(i, now)
-        }
+        // Drain anything that arrived while computing; `pump` finishes
+        // the round once the policy is satisfied and nothing more is
+        // deliverable (degenerate rounds — SGD, degree 0, async slack
+        // within the staleness budget — complete without traffic).
+        self.pump(i, now)
     }
 
     fn on_deliver(&mut self, env: Envelope, now: u64) -> Result<()> {
@@ -373,8 +398,15 @@ impl World<'_> {
         Ok(())
     }
 
-    /// Feed buffered messages for the node's current round into its
-    /// machine until the round completes or nothing is deliverable.
+    /// Feed buffered messages into the node's machine, then finish the
+    /// round once the policy is satisfied and nothing more is
+    /// deliverable.  Delivery admission is the round policy's job:
+    /// `Sync` holds every message until the receiver's round matches
+    /// its stamp (the classic barrier — byte- and trajectory-identical
+    /// to the threaded bus), `Async` hands over each per-edge FIFO
+    /// head immediately, whatever round it was sent in — the machine
+    /// folds in every message it has (the freshest state per edge)
+    /// before its local step.
     fn pump(&mut self, i: usize, now: u64) -> Result<()> {
         loop {
             if !self.rt[i].exchanging {
@@ -384,39 +416,54 @@ impl World<'_> {
             let mut found: Option<usize> = None;
             for (&src, q) in self.rt[i].inbox.iter() {
                 if let Some(env) = q.front() {
-                    ensure!(
-                        env.round >= round,
-                        "sim: node {i} holds a stale round-{} message from \
-                         {src} while in round {round}",
-                        env.round
-                    );
-                    if env.round == round {
-                        found = Some(src);
-                        break;
+                    match self.policy {
+                        RoundPolicy::Sync => {
+                            ensure!(
+                                env.round >= round,
+                                "sim: node {i} holds a stale round-{} message \
+                                 from {src} while in round {round}",
+                                env.round
+                            );
+                            if env.round == round {
+                                found = Some(src);
+                                break;
+                            }
+                        }
+                        RoundPolicy::Async { .. } => {
+                            found = Some(src);
+                            break;
+                        }
                     }
                 }
             }
-            let Some(src) = found else { return Ok(()) };
+            let Some(src) = found else {
+                // Nothing (more) deliverable: step if the policy allows.
+                // Under sync this fires exactly when all of this round's
+                // messages are in (one per edge — the classic barrier);
+                // under async also on slack within the staleness budget.
+                if self.rt[i].machine.round_complete() {
+                    self.finish_round(i, now)?;
+                }
+                return Ok(());
+            };
             let env = self.rt[i]
                 .inbox
                 .get_mut(&src)
                 .and_then(|q| q.pop_front())
                 .expect("front just observed");
-            let complete;
             let outv: Vec<(usize, Msg)>;
             {
                 let nrt = &mut self.rt[i];
                 let mut out = Outbox::new();
+                // The machine receives the SENDER's round stamp; its own
+                // round only gates completion.
                 nrt.machine
-                    .on_message(round, src, env.payload, &mut nrt.w, &mut out)?;
-                complete = nrt.machine.round_complete();
+                    .on_message(env.round, src, env.payload, &mut nrt.w,
+                                &mut out)?;
                 outv = out.drain().collect();
             }
             for (to, msg) in outv {
                 self.courier.send(i, to, round, msg, now)?;
-            }
-            if complete {
-                self.finish_round(i, now)?;
             }
         }
     }
@@ -496,14 +543,17 @@ impl World<'_> {
 }
 
 /// Run `sched.total_rounds()` rounds of the given per-node protocols in
-/// virtual time.  Returns the aggregated history, final parameters, and
-/// the byte/retransmit/virtual-time meter.
+/// virtual time under the given round policy (which must match the
+/// policy the machines were built with).  Returns the aggregated
+/// history, final parameters, and the byte/retransmit/virtual-time
+/// meter.
 pub fn simulate(
     graph: &Graph,
     cfg: &SimConfig,
     seed: u64,
     sched: &Schedule,
     nodes: Vec<NodeSetup>,
+    policy: RoundPolicy,
     verbose: bool,
 ) -> Result<SimOutcome> {
     let n = graph.n();
@@ -514,6 +564,34 @@ pub fn simulate(
         nodes.len()
     );
     cfg.link.validate()?;
+    let mut edge_links: BTreeMap<usize, Box<dyn LinkModel>> = BTreeMap::new();
+    for (edge, spec) in &cfg.edge_links {
+        ensure!(
+            *edge < graph.edges().len(),
+            "sim: per-edge link for edge {edge}, but the graph has only \
+             {} edges",
+            graph.edges().len()
+        );
+        spec.validate()?;
+        ensure!(
+            edge_links.insert(*edge, spec.build()).is_none(),
+            "sim: duplicate per-edge link override for edge {edge}"
+        );
+    }
+    // The engine's delivery policy and each machine's gating policy
+    // must agree — a mismatch would surface later as confusing
+    // admission errors (or silently mislabel a run).
+    for (i, s) in nodes.iter().enumerate() {
+        if let Some(p) = s.machine.policy() {
+            ensure!(
+                p == policy,
+                "sim: node {i} was built for `{}` rounds but the engine \
+                 is driving `{}`",
+                p.name(),
+                policy.name()
+            );
+        }
+    }
     let total_rounds = sched.total_rounds();
     let meter = Meter::new(n);
     if total_rounds == 0 {
@@ -523,20 +601,29 @@ pub fn simulate(
             vtime_ns: 0,
             meter,
             w,
+            max_staleness: 0,
         });
     }
 
     let d = nodes.iter().map(|s| s.w.len()).max().unwrap_or(0);
     let mut compute_ns =
         vec![cfg.compute_ns_per_step.saturating_mul(sched.local_steps as u64); n];
+    let mut straggler_seen = std::collections::BTreeSet::new();
     for &(i, f) in &cfg.stragglers {
         ensure!(i < n, "sim: straggler index {i} out of range");
         ensure!(f > 0.0, "sim: straggler factor must be positive");
+        // Like edge_links: a repeated entry would silently compound
+        // factors multiplicatively, which is never what it means.
+        ensure!(
+            straggler_seen.insert(i),
+            "sim: duplicate straggler entry for node {i}"
+        );
         compute_ns[i] = (compute_ns[i] as f64 * f) as u64;
     }
 
     let mut world = World {
         sched,
+        policy,
         rt: nodes
             .into_iter()
             .map(|s| NodeRt {
@@ -554,6 +641,7 @@ pub fn simulate(
             graph,
             outages: &cfg.outages,
             link: cfg.link.build(),
+            edge_links,
             link_rng: Pcg::derive(seed, &[streams::LINK]),
             meter: &meter,
             queue: EventQueue::new(),
@@ -604,12 +692,18 @@ pub fn simulate(
     );
     meter.advance_vtime_ns(final_t);
     let World { rt, history, .. } = world;
+    let max_staleness = rt
+        .iter()
+        .map(|r| r.machine.max_staleness_seen())
+        .max()
+        .unwrap_or(0);
     let w = rt.into_iter().map(|r| r.w).collect();
     Ok(SimOutcome {
         history,
         vtime_ns: meter.vtime_ns(),
         meter,
         w,
+        max_staleness,
     })
 }
 
@@ -625,6 +719,17 @@ mod tests {
         seed: u64,
         rounds_per_epoch: usize,
     ) -> Vec<NodeSetup> {
+        machine_setup_policy(graph, alg, seed, rounds_per_epoch,
+                             RoundPolicy::Sync)
+    }
+
+    fn machine_setup_policy(
+        graph: &Arc<Graph>,
+        alg: &AlgorithmSpec,
+        seed: u64,
+        rounds_per_epoch: usize,
+        round_policy: RoundPolicy,
+    ) -> Vec<NodeSetup> {
         let ds = DatasetManifest::synthetic_linear("t", (2, 2, 1), 3, 2, 2);
         (0..graph.n())
             .map(|node| {
@@ -638,6 +743,7 @@ mod tests {
                     rounds_per_epoch,
                     dual_path: DualPath::Native,
                     runtime: None,
+                    round_policy,
                 };
                 let mut rng = Pcg::new(900 + node as u64);
                 let w = (0..ds.d_pad).map(|_| rng.normal_f32()).collect();
@@ -690,7 +796,8 @@ mod tests {
         let sched = Schedule::new(1, 1, 1, 1);
         let alg = AlgorithmSpec::Ecl { theta: 1.0 };
         let nodes = machine_setup(&graph, &alg, 7, 1);
-        let out = simulate(&graph, &cfg, 7, &sched, nodes, false).unwrap();
+        let out = simulate(&graph, &cfg, 7, &sched, nodes, RoundPolicy::Sync,
+                           false).unwrap();
         // sends fire at t=1000, arrive at t=2000.
         assert_eq!(out.vtime_ns, 2_000);
         // ECL dense: d floats both ways.
@@ -714,15 +821,28 @@ mod tests {
             ..base_cfg.clone()
         };
         let fast = simulate(&graph, &base_cfg, 3, &sched,
-                            machine_setup(&graph, &alg, 3, 2), false)
+                            machine_setup(&graph, &alg, 3, 2),
+                            RoundPolicy::Sync, false)
             .unwrap();
         let slow = simulate(&graph, &slow_cfg, 3, &sched,
-                            machine_setup(&graph, &alg, 3, 2), false)
+                            machine_setup(&graph, &alg, 3, 2),
+                            RoundPolicy::Sync, false)
             .unwrap();
         assert!(slow.vtime_ns > fast.vtime_ns * 4,
                 "straggler {} vs {}", slow.vtime_ns, fast.vtime_ns);
         // Same traffic either way.
         assert_eq!(slow.meter.total_bytes(), fast.meter.total_bytes());
+        // Repeated straggler entries would compound silently — rejected.
+        let dup_cfg = SimConfig {
+            stragglers: vec![(2, 2.0), (2, 2.0)],
+            ..base_cfg
+        };
+        let err = simulate(&graph, &dup_cfg, 3, &sched,
+                           machine_setup(&graph, &alg, 3, 2),
+                           RoundPolicy::Sync, false)
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("duplicate straggler"), "{err}");
     }
 
     #[test]
@@ -741,7 +861,8 @@ mod tests {
             ..SimConfig::default()
         };
         let out = simulate(&graph, &cfg, 11, &sched,
-                           machine_setup(&graph, &alg, 11, 1), false)
+                           machine_setup(&graph, &alg, 11, 1),
+                           RoundPolicy::Sync, false)
             .unwrap();
         assert!(out.vtime_ns >= 5_000_000, "vtime {}", out.vtime_ns);
         let no_outage = SimConfig {
@@ -750,7 +871,8 @@ mod tests {
             ..SimConfig::default()
         };
         let base = simulate(&graph, &no_outage, 11, &sched,
-                            machine_setup(&graph, &alg, 11, 1), false)
+                            machine_setup(&graph, &alg, 11, 1),
+                            RoundPolicy::Sync, false)
             .unwrap();
         assert!(base.vtime_ns < out.vtime_ns);
     }
@@ -773,10 +895,12 @@ mod tests {
             ..SimConfig::default()
         };
         let a = simulate(&graph, &cfg, 21, &sched,
-                         machine_setup(&graph, &alg, 21, 3), false)
+                         machine_setup(&graph, &alg, 21, 3),
+                         RoundPolicy::Sync, false)
             .unwrap();
         let b = simulate(&graph, &cfg, 21, &sched,
-                         machine_setup(&graph, &alg, 21, 3), false)
+                         machine_setup(&graph, &alg, 21, 3),
+                         RoundPolicy::Sync, false)
             .unwrap();
         assert_eq!(a.vtime_ns, b.vtime_ns);
         assert_eq!(a.meter.total_bytes(), b.meter.total_bytes());
@@ -786,5 +910,161 @@ mod tests {
         );
         assert_eq!(a.w, b.w, "final parameters must replay bit-identically");
         assert!(a.meter.total_retransmit_bytes() > 0, "p=0.3 must retransmit");
+    }
+
+    #[test]
+    fn per_edge_link_override_slows_only_its_edge() {
+        // chain(3): edges 0 = (0,1), 1 = (1,2).  Overriding edge 1 with
+        // a high-latency link must stretch virtual time; overriding a
+        // third, nonexistent edge must be rejected.
+        let graph = Arc::new(Graph::chain(3));
+        let sched = Schedule::new(1, 1, 1, 1);
+        let alg = AlgorithmSpec::Ecl { theta: 1.0 };
+        let base = SimConfig {
+            link: LinkSpec::Constant { latency_us: 1 },
+            compute_ns_per_step: 1_000,
+            ..SimConfig::default()
+        };
+        let hetero = SimConfig {
+            edge_links: vec![(1, LinkSpec::Constant { latency_us: 4_000 })],
+            ..base.clone()
+        };
+        let fast = simulate(&graph, &base, 5, &sched,
+                            machine_setup(&graph, &alg, 5, 1),
+                            RoundPolicy::Sync, false)
+            .unwrap();
+        let slow = simulate(&graph, &hetero, 5, &sched,
+                            machine_setup(&graph, &alg, 5, 1),
+                            RoundPolicy::Sync, false)
+            .unwrap();
+        // Same payload traffic, different clock: only edge 1 slowed.
+        assert_eq!(fast.meter.total_bytes(), slow.meter.total_bytes());
+        assert_eq!(fast.vtime_ns, 1_000 + 1_000);
+        assert_eq!(slow.vtime_ns, 1_000 + 4_000_000);
+
+        let bad = SimConfig {
+            edge_links: vec![(7, LinkSpec::Ideal)],
+            ..base.clone()
+        };
+        let err = simulate(&graph, &bad, 5, &sched,
+                           machine_setup(&graph, &alg, 5, 1),
+                           RoundPolicy::Sync, false)
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("edge 7"), "{err}");
+        let dup = SimConfig {
+            edge_links: vec![(0, LinkSpec::Ideal), (0, LinkSpec::Ideal)],
+            ..base
+        };
+        let err = simulate(&graph, &dup, 5, &sched,
+                           machine_setup(&graph, &alg, 5, 1),
+                           RoundPolicy::Sync, false)
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn async_rounds_hide_a_slow_edge_within_staleness() {
+        // ring(4) with one 10x-latency edge.  Sync: the whole lockstep
+        // ring is throttled through that edge every round.  Async:2 the
+        // slow edge lags up to two rounds and everyone else free-runs —
+        // strictly less virtual time for the same number of rounds, and
+        // the staleness bound is both observed and reached.
+        let graph = Arc::new(Graph::ring(4));
+        let sched = Schedule::new(4, 2, 1, 4);
+        let alg = AlgorithmSpec::CEcl {
+            k_frac: 0.4,
+            theta: 1.0,
+            dense_first_epoch: false,
+        };
+        let cfg = SimConfig {
+            link: LinkSpec::Constant { latency_us: 10 },
+            edge_links: vec![(0, LinkSpec::Constant { latency_us: 150 })],
+            compute_ns_per_step: 100_000,
+            ..SimConfig::default()
+        };
+        let sync = simulate(&graph, &cfg, 3, &sched,
+                            machine_setup(&graph, &alg, 3, 2),
+                            RoundPolicy::Sync, false)
+            .unwrap();
+        let policy = RoundPolicy::Async { max_staleness: 2 };
+        let async_out = simulate(
+            &graph,
+            &cfg,
+            3,
+            &sched,
+            machine_setup_policy(&graph, &alg, 3, 2, policy),
+            policy,
+            false,
+        )
+        .unwrap();
+        assert_eq!(sync.max_staleness, 0, "sync must never lag");
+        assert!(async_out.max_staleness >= 1, "slow edge must actually lag");
+        assert!(async_out.max_staleness <= 2, "staleness bound violated");
+        // Identical payload traffic (every node still sends every
+        // round), strictly less virtual time.
+        assert_eq!(sync.meter.total_bytes(), async_out.meter.total_bytes());
+        assert!(
+            async_out.vtime_ns < sync.vtime_ns,
+            "async {} !< sync {}",
+            async_out.vtime_ns,
+            sync.vtime_ns
+        );
+    }
+
+    #[test]
+    fn engine_rejects_policy_mismatch_with_machines() {
+        // Machines built for Sync cannot be driven under Async (and
+        // vice versa) — a typed startup error, not a mid-run puzzle.
+        let graph = Arc::new(Graph::ring(4));
+        let sched = Schedule::new(1, 1, 1, 1);
+        let alg = AlgorithmSpec::DPsgd;
+        let err = simulate(
+            &graph,
+            &SimConfig::default(),
+            3,
+            &sched,
+            machine_setup(&graph, &alg, 3, 1), // built for Sync
+            RoundPolicy::Async { max_staleness: 1 },
+            false,
+        )
+        .err()
+        .unwrap();
+        assert!(err.to_string().contains("built for `sync`"), "{err}");
+    }
+
+    #[test]
+    fn async_replay_is_bit_identical() {
+        let graph = Arc::new(Graph::ring(5));
+        let sched = Schedule::new(2, 3, 2, 1);
+        let alg = AlgorithmSpec::CEcl {
+            k_frac: 0.4,
+            theta: 1.0,
+            dense_first_epoch: false,
+        };
+        let cfg = SimConfig {
+            link: LinkSpec::Lossy {
+                latency_us: 50,
+                mbit_per_sec: 100.0,
+                drop_p: 0.3,
+            },
+            stragglers: vec![(2, 4.0)],
+            ..SimConfig::default()
+        };
+        let policy = RoundPolicy::Async { max_staleness: 3 };
+        let run = || {
+            simulate(&graph, &cfg, 21, &sched,
+                     machine_setup_policy(&graph, &alg, 21, 3, policy),
+                     policy, false)
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.vtime_ns, b.vtime_ns);
+        assert_eq!(a.meter.total_bytes(), b.meter.total_bytes());
+        assert_eq!(a.w, b.w, "async replay must be bit-identical");
+        assert_eq!(a.max_staleness, b.max_staleness);
+        assert!(a.max_staleness <= 3, "bound violated: {}", a.max_staleness);
     }
 }

@@ -4,8 +4,9 @@
 
 use std::sync::Arc;
 
-use cecl::algorithms::{BuildCtx, CEclNode, DualPath, DualRule,
-                       NodeAlgorithm, NodeStateMachine};
+use cecl::algorithms::{build_machine, AlgorithmSpec, BuildCtx, CEclNode,
+                       DualPath, DualRule, NodeAlgorithm, NodeStateMachine,
+                       RoundPolicy};
 use cecl::comm::{build_bus, Msg, Outbox};
 use cecl::compress::{measure_codec_contraction, CodecSpec, CooVec, EdgeCtx,
                      RandK, WireMode};
@@ -225,6 +226,7 @@ fn sm_ctx(node: usize, graph: &Arc<Graph>, seed: u64,
         rounds_per_epoch: 4,
         dual_path: DualPath::Native,
         runtime: None,
+        round_policy: RoundPolicy::Sync,
     }
 }
 
@@ -542,6 +544,86 @@ fn prop_wire_contraction_eq7_state_machine() {
         prop_assert!(
             (measured - k).abs() < 0.12,
             "kept energy fraction {measured} vs tau=k={k}"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Round policies: bounded staleness
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_async_staleness_never_exceeds_bound() {
+    // Across random staleness budgets, straggler factors, link models,
+    // and seeds, an `async:<s>` run must (a) complete every round
+    // without deadlock and (b) never consume a dual older than `s`
+    // rounds — `SimOutcome::max_staleness` is the largest lag any
+    // machine ever folded in, and the machines additionally hard-error
+    // inside `round_end` if the bound is broken.
+    use cecl::sim::{simulate, NodeSetup, NullLocal, Schedule, SimConfig};
+
+    check("async-staleness-bound", 12, 4, |ctx: &mut Ctx| {
+        let s = 1 + ctx.rng.below(3); // staleness budget 1..=3
+        let n = 4 + (ctx.size % 3); // ring of 4..=6 nodes
+        let rounds = 6 + ctx.rng.below(5);
+        let seed = ctx.rng.next_u64();
+        let policy = RoundPolicy::Async { max_staleness: s };
+        let graph = Arc::new(Graph::ring(n));
+        let alg = if ctx.rng.bernoulli(0.5) {
+            AlgorithmSpec::CEcl {
+                k_frac: 0.3,
+                theta: 1.0,
+                dense_first_epoch: false,
+            }
+        } else {
+            AlgorithmSpec::DPsgd
+        };
+        let manifest = sm_manifest((2, 2, 1), 3);
+        let ws: Vec<Vec<f32>> =
+            (0..n).map(|_| ctx.vec_f32(manifest.d_pad)).collect();
+        let setups: Vec<NodeSetup> = ws
+            .into_iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let mut bctx = sm_ctx(i, &graph, seed, manifest.clone());
+                bctx.round_policy = policy;
+                NodeSetup {
+                    machine: build_machine(&alg, &bctx).unwrap(),
+                    local: Box::new(NullLocal),
+                    w,
+                }
+            })
+            .collect();
+        let cfg = SimConfig {
+            link: if ctx.rng.bernoulli(0.5) {
+                cecl::sim::LinkSpec::Lossy {
+                    latency_us: 200 + ctx.rng.below(2_000) as u64,
+                    mbit_per_sec: 20.0,
+                    drop_p: 0.2 * ctx.rng.f64(),
+                }
+            } else {
+                cecl::sim::LinkSpec::Constant {
+                    latency_us: 200 + ctx.rng.below(4_000) as u64,
+                }
+            },
+            compute_ns_per_step: 500_000,
+            stragglers: vec![(ctx.rng.below(n), 1.0 + 7.0 * ctx.rng.f64())],
+            ..SimConfig::default()
+        };
+        let sched = Schedule::new(rounds, 1, 2, rounds);
+        let out = simulate(&graph, &cfg, seed, &sched, setups, policy, false)
+            .map_err(|e| format!("async sim failed: {e}"))?;
+        prop_assert!(
+            out.max_staleness <= s,
+            "lag {} exceeds budget {s} (n={n}, rounds={rounds}, alg={})",
+            out.max_staleness,
+            alg.name()
+        );
+        prop_assert!(
+            out.meter.total_msgs() as usize == rounds * 2 * n,
+            "every node must still send every round: {} msgs",
+            out.meter.total_msgs()
         );
         Ok(())
     });

@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use cecl::algorithms::{build_machine, build_node, AlgorithmSpec, BuildCtx,
-                       DualPath, NodeAlgorithm};
+                       DualPath, NodeAlgorithm, RoundPolicy};
 use cecl::comm::build_bus;
 use cecl::compress::CodecSpec;
 use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
@@ -29,6 +29,11 @@ fn exchange_manifest() -> DatasetManifest {
 }
 
 fn ctx(node: usize, graph: &Arc<Graph>, seed: u64, rounds: usize) -> BuildCtx {
+    ctx_policy(node, graph, seed, rounds, RoundPolicy::Sync)
+}
+
+fn ctx_policy(node: usize, graph: &Arc<Graph>, seed: u64, rounds: usize,
+              round_policy: RoundPolicy) -> BuildCtx {
     BuildCtx {
         node,
         graph: Arc::clone(graph),
@@ -39,6 +44,7 @@ fn ctx(node: usize, graph: &Arc<Graph>, seed: u64, rounds: usize) -> BuildCtx {
         rounds_per_epoch: rounds,
         dual_path: DualPath::Native,
         runtime: None,
+        round_policy,
     }
 }
 
@@ -49,25 +55,28 @@ fn init_w(node: usize) -> Vec<f32> {
         .collect()
 }
 
-/// Per-node bytes + message count after `rounds` exchange-only rounds on
-/// the threaded bus.
-fn threaded_bytes(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
-                  rounds: usize) -> (Vec<u64>, u64) {
+/// Per-node bytes + message count + final parameters after `rounds`
+/// exchange-only rounds on the threaded bus.  The blocking
+/// `NodeAlgorithm::exchange` loop IS the pre-refactor bulk-synchronous
+/// schedule, so its trajectory doubles as the pre-async pin.
+fn threaded_run(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
+                rounds: usize) -> (Vec<u64>, u64, Vec<Vec<f32>>) {
     let (comms, meter) = build_bus(graph);
+    let mut ws: Vec<Vec<f32>> = (0..graph.n()).map(init_w).collect();
     std::thread::scope(|s| {
         let handles: Vec<_> = comms
             .into_iter()
+            .zip(ws.iter_mut())
             .enumerate()
-            .map(|(i, comm)| {
+            .map(|(i, (comm, w))| {
                 let graph = Arc::clone(graph);
                 let alg = alg.clone();
                 s.spawn(move || {
                     let mut node: Box<dyn NodeAlgorithm> =
                         build_node(&alg, &ctx(i, &graph, seed, rounds))
                             .unwrap();
-                    let mut w = init_w(i);
                     for round in 0..rounds {
-                        node.exchange(round, &mut w, &comm).unwrap();
+                        node.exchange(round, w, &comm).unwrap();
                     }
                 })
             })
@@ -79,29 +88,50 @@ fn threaded_bytes(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
     (
         (0..graph.n()).map(|i| meter.bytes_sent(i)).collect(),
         meter.total_msgs(),
+        ws,
     )
 }
 
+fn threaded_bytes(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
+                  rounds: usize) -> (Vec<u64>, u64) {
+    let (bytes, msgs, _) = threaded_run(alg, graph, seed, rounds);
+    (bytes, msgs)
+}
+
 /// Same protocol through the virtual-time engine on the given link.
-fn simulated_bytes(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
-                   rounds: usize, link: LinkSpec) -> (Vec<u64>, u64, u64) {
+fn simulated_run(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
+                 rounds: usize, link: LinkSpec,
+                 policy: RoundPolicy) -> (Vec<u64>, u64, u64, Vec<Vec<f32>>) {
     // One round per "epoch" with an eval only at the very end keeps the
     // schedule equivalent to the bare threaded loop above.
     let sched = Schedule::new(rounds, 1, 2, rounds);
     let setups: Vec<NodeSetup> = (0..graph.n())
         .map(|i| NodeSetup {
-            machine: build_machine(alg, &ctx(i, graph, seed, rounds)).unwrap(),
+            machine: build_machine(
+                alg,
+                &ctx_policy(i, graph, seed, rounds, policy),
+            )
+            .unwrap(),
             local: Box::new(NullLocal),
             w: init_w(i),
         })
         .collect();
     let cfg = SimConfig { link, ..SimConfig::default() };
-    let out = simulate(graph, &cfg, seed, &sched, setups, false).unwrap();
+    let out = simulate(graph, &cfg, seed, &sched, setups, policy, false)
+        .unwrap();
     (
         (0..graph.n()).map(|i| out.meter.bytes_sent(i)).collect(),
         out.meter.total_msgs(),
         out.meter.total_retransmit_bytes(),
+        out.w,
     )
+}
+
+fn simulated_bytes(alg: &AlgorithmSpec, graph: &Arc<Graph>, seed: u64,
+                   rounds: usize, link: LinkSpec) -> (Vec<u64>, u64, u64) {
+    let (bytes, msgs, retrans, _) =
+        simulated_run(alg, graph, seed, rounds, link, RoundPolicy::Sync);
+    (bytes, msgs, retrans)
 }
 
 #[test]
@@ -451,6 +481,157 @@ fn ring_512_cecl_completes_and_reports_time_to_accuracy() {
     assert_eq!(r.final_accuracy.to_bits(), r2.final_accuracy.to_bits());
     assert_eq!(r.total_bytes, r2.total_bytes);
     assert_eq!(r.sim_time_secs, r2.sim_time_secs);
+}
+
+#[test]
+fn sync_trajectory_bit_identical_to_pre_refactor_blocking_schedule() {
+    // The `--rounds sync` pin: the per-edge-clock engine under
+    // RoundPolicy::Sync must replay the EXACT trajectory of the
+    // blocking thread-per-node schedule (which is, verbatim, the
+    // pre-async bulk-synchronous driver) — final parameters
+    // bit-identical, not approximately equal, even with nonzero link
+    // latency reordering deliveries across nodes.
+    let graph = Arc::new(Graph::ring(5));
+    for alg in [
+        AlgorithmSpec::DPsgd,
+        AlgorithmSpec::PowerGossip { iters: 2 },
+    ] {
+        let (bytes_t, msgs_t, ws_t) = threaded_run(&alg, &graph, 41, 4);
+        for link in [
+            LinkSpec::Ideal,
+            LinkSpec::Constant { latency_us: 200 },
+        ] {
+            let (bytes_s, msgs_s, _, ws_s) = simulated_run(
+                &alg, &graph, 41, 4, link.clone(), RoundPolicy::Sync,
+            );
+            assert_eq!(bytes_t, bytes_s, "{}: bytes", alg.name());
+            assert_eq!(msgs_t, msgs_s, "{}: messages", alg.name());
+            assert_eq!(
+                ws_t, ws_s,
+                "{} on {}: sync trajectory diverged from the blocking \
+                 schedule",
+                alg.name(),
+                link.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn acceptance_64_node_ring_async_straggler_beats_sync() {
+    // The PR's acceptance scenario at full scale: 64-node ring, one 8×
+    // straggler, latency-dominated links.  async:2 must reach the
+    // target accuracy in measurably less simulated time than sync,
+    // with the staleness bound holding and replay still bit-exact.
+    let run = |rounds: RoundPolicy| {
+        let spec = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: AlgorithmSpec::CEcl {
+                k_frac: 0.1,
+                theta: 1.0,
+                dense_first_epoch: false,
+            },
+            epochs: 4,
+            nodes: 64,
+            train_per_node: 40,
+            test_size: 40,
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 1,
+            seed: 29,
+            exec: ExecMode::Simulated(SimConfig {
+                link: LinkSpec::Constant { latency_us: 30_000 },
+                compute_ns_per_step: 1_000_000,
+                stragglers: vec![(11, 8.0)],
+                ..SimConfig::default()
+            }),
+            rounds,
+            ..Default::default()
+        };
+        run_simulated_native(&spec, &Graph::ring(64)).unwrap()
+    };
+    let sync = run(RoundPolicy::Sync);
+    let async_ = run(RoundPolicy::Async { max_staleness: 2 });
+    assert_eq!(sync.max_staleness, 0, "sync must never lag");
+    assert!(async_.max_staleness >= 1, "the straggler's edges must lag");
+    assert!(async_.max_staleness <= 2, "staleness bound violated");
+    // Both complete all rounds: identical payload byte accounting.
+    assert_eq!(sync.total_bytes, async_.total_bytes);
+    let (ts, ta) = (
+        sync.sim_time_secs.unwrap(),
+        async_.sim_time_secs.unwrap(),
+    );
+    assert!(
+        ta < 0.9 * ts,
+        "async {ta}s not measurably below sync {ts}s"
+    );
+    let t2a_sync = sync.history.time_to_accuracy(0.0).unwrap().1;
+    let t2a_async = async_.history.time_to_accuracy(0.0).unwrap().1;
+    assert!(
+        t2a_async < t2a_sync,
+        "t2a async {t2a_async}s !< sync {t2a_sync}s"
+    );
+    // Determinism survives the async scheduler.
+    let replay = run(RoundPolicy::Async { max_staleness: 2 });
+    assert_eq!(replay.final_accuracy.to_bits(),
+               async_.final_accuracy.to_bits());
+    assert_eq!(replay.sim_time_secs, async_.sim_time_secs);
+    assert_eq!(replay.max_staleness, async_.max_staleness);
+}
+
+#[test]
+fn heterogeneous_edge_links_with_async_rounds() {
+    // Satellite: per-edge LinkModel parameters through SimConfig.  One
+    // slow edge in a 16-node ring; sync throttles the whole lockstep
+    // ring through it, async:3 confines the damage to that edge.
+    let run = |rounds: RoundPolicy, slow_edge: bool| {
+        let spec = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: AlgorithmSpec::CEcl {
+                k_frac: 0.2,
+                theta: 1.0,
+                dense_first_epoch: false,
+            },
+            epochs: 4,
+            nodes: 16,
+            train_per_node: 40,
+            test_size: 40,
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 4,
+            seed: 33,
+            exec: ExecMode::Simulated(SimConfig {
+                link: LinkSpec::Constant { latency_us: 100 },
+                edge_links: if slow_edge {
+                    vec![(3, LinkSpec::Constant { latency_us: 5_000 })]
+                } else {
+                    Vec::new()
+                },
+                compute_ns_per_step: 1_000_000,
+                ..SimConfig::default()
+            }),
+            rounds,
+            ..Default::default()
+        };
+        run_simulated_native(&spec, &Graph::ring(16)).unwrap()
+    };
+    let sync_slow = run(RoundPolicy::Sync, true);
+    let async_slow = run(RoundPolicy::Async { max_staleness: 3 }, true);
+    let sync_fast = run(RoundPolicy::Sync, false);
+    // The slow edge costs sync time...
+    assert!(
+        sync_slow.sim_time_secs.unwrap() > sync_fast.sim_time_secs.unwrap()
+    );
+    // ...async hides it within the staleness budget.
+    assert!(
+        async_slow.sim_time_secs.unwrap() < sync_slow.sim_time_secs.unwrap(),
+        "async {:?} !< sync {:?}",
+        async_slow.sim_time_secs,
+        sync_slow.sim_time_secs
+    );
+    assert!(async_slow.max_staleness >= 1);
+    assert!(async_slow.max_staleness <= 3);
+    assert_eq!(sync_slow.total_bytes, async_slow.total_bytes);
 }
 
 #[test]
