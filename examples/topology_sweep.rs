@@ -31,7 +31,11 @@ fn main() -> anyhow::Result<()> {
         let report = run_experiment(&spec, &graph)?;
         t.row([
             topology.name().to_string(),
-            format!("[{}, {}]", graph.min_degree(), graph.max_degree()),
+            format!(
+                "[{}, {}]",
+                graph.min_degree().unwrap_or(0),
+                graph.max_degree().unwrap_or(0)
+            ),
             format!("{:.1}%", report.best_accuracy * 100.0),
             format!("{:.0}", report.mean_bytes_per_epoch / 1024.0),
         ]);

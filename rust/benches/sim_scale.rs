@@ -183,4 +183,59 @@ fn main() {
         "\nring(64), C-ECL(10%), one 8x straggler, constant 10 ms links:\n{}",
         t.render()
     );
+
+    // Async PowerGossip: the multi-phase conversation pipeline under
+    // per-edge clocks — wall-clock cost of round-straddling
+    // conversations next to its own sync baseline.
+    let mut set = BenchSet::new(
+        "sim_scale — PowerGossip(2) sync vs async, ring(64), one 8x straggler",
+    );
+    let mut t = Table::new([
+        "rounds", "final acc", "sim secs", "max lag", "KB/node/epoch",
+    ]);
+    let graph = Graph::ring(64);
+    for rounds in [
+        RoundPolicy::Sync,
+        RoundPolicy::Async { max_staleness: 2 },
+    ] {
+        let mut s = spec(64, 4, LinkSpec::Ideal);
+        s.algorithm = AlgorithmSpec::PowerGossip { iters: 2 };
+        s.rounds = rounds;
+        s.exec = ExecMode::Simulated(SimConfig {
+            link: LinkSpec::Constant { latency_us: 10_000 },
+            stragglers: vec![(7, 8.0)],
+            ..SimConfig::default()
+        });
+        let mut last = None;
+        set.bench_throughput(
+            &format!("powergossip rounds {}", rounds.name()),
+            1,
+            3,
+            8.0 * 64.0,
+            "node-round",
+            || {
+                let r = run_simulated_native(&s, &graph).expect("sim run");
+                last = Some((
+                    r.final_accuracy,
+                    r.sim_time_secs.unwrap_or(0.0),
+                    r.max_staleness,
+                    r.mean_bytes_per_epoch,
+                ));
+            },
+        );
+        let (acc, secs, lag, kb) = last.expect("at least one run");
+        t.row([
+            rounds.name(),
+            format!("{acc:.3}"),
+            format!("{secs:.3}"),
+            format!("{lag}"),
+            format!("{:.0}", kb / 1024.0),
+        ]);
+    }
+    set.report();
+    println!(
+        "\nring(64), PowerGossip(2), one 8x straggler, constant 10 ms \
+         links:\n{}",
+        t.render()
+    );
 }

@@ -17,7 +17,7 @@ fn main() {
     let mut set = BenchSet::new("theory_rate — exact C-ECL rounds (ring 8)");
     for dim in [8usize, 16, 32, 64] {
         let net = QuadraticNetwork::random(8, dim, dim + 16, 0.5, 0.5, 42);
-        let alpha = net.best_alpha(&graph);
+        let alpha = net.best_alpha(&graph).expect("non-empty graph");
         set.bench_throughput(
             &format!("50 rounds @ dim {dim}"),
             1,
@@ -36,8 +36,8 @@ fn main() {
 
     // Rate table (the bench's correctness payload).
     let net = QuadraticNetwork::random(8, 24, 40, 0.5, 0.5, 42);
-    let alpha = net.best_alpha(&graph);
-    let delta = net.delta(alpha, &graph);
+    let alpha = net.best_alpha(&graph).expect("non-empty graph");
+    let delta = net.delta(alpha, &graph).expect("non-empty graph");
     let mut t = Table::new(["tau", "bound rho", "measured rate", "converged"]);
     for tau in [1.0, 0.8, 0.6, (tau_threshold(delta) + 1.0) / 2.0] {
         let errors = run_cecl(&net, &graph, alpha, 1.0, tau, 150, 2,

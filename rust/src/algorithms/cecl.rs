@@ -146,7 +146,26 @@ impl CEclNode {
         let d_pad = ctx.manifest.d_pad;
         let alpha = paper_alpha(ctx.eta, degree, ctx.local_steps,
                                 codec.tau(d_pad));
-        let codecs = (0..degree).map(|_| codec.build()).collect();
+        let mut codecs: Vec<Box<dyn EdgeCodec>> =
+            (0..degree).map(|_| codec.build()).collect();
+        // Structure-aware codecs (low_rank) compress per layer matrix —
+        // hand every codec instance the manifest's layout (no-op for
+        // the rest of the codec families).
+        let mats: Vec<(usize, usize, usize)> = ctx
+            .manifest
+            .matrix_views()
+            .into_iter()
+            .map(|(_, off, r, c)| (off, r, c))
+            .collect();
+        let vecs: Vec<(usize, usize)> = ctx
+            .manifest
+            .vector_views()
+            .into_iter()
+            .map(|(_, off, len)| (off, len))
+            .collect();
+        for c in codecs.iter_mut() {
+            c.bind_layout(&mats, &vecs);
+        }
         Ok(CEclNode {
             node: ctx.node,
             graph: Arc::clone(&ctx.graph),

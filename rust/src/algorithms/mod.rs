@@ -44,9 +44,12 @@
 //!
 //! The async policy needs the virtual-time engine (`ExecMode::
 //! Simulated`); the blocking threaded bus is bulk-synchronous by
-//! construction and rejects it.  PowerGossip's interactive multi-phase
-//! pipeline is sync-only (its per-edge conversations are already
-//! non-blocking *within* a round); the other algorithms support both.
+//! construction and rejects it.  Every algorithm supports both
+//! policies: the single-phase protocols consume per-edge stale state
+//! directly, and PowerGossip's interactive multi-phase pipeline runs on
+//! per-edge *conversation counters* (agreed at both endpoints by
+//! construction, with deferred rank-1 application for conversations
+//! that straddle rounds — see `powergossip`'s module docs).
 
 pub mod cecl;
 pub mod dpsgd;
@@ -268,11 +271,14 @@ impl AlgorithmSpec {
     }
 
     /// Whether the algorithm can run under `RoundPolicy::Async`.
-    /// PowerGossip's interactive multi-phase pipeline is sync-only; the
-    /// single-phase protocols (and SGD, trivially) support stale
-    /// consumption.
+    /// Every current algorithm does: the single-phase protocols (and
+    /// SGD, trivially) consume stale per-edge state directly, and
+    /// PowerGossip runs its multi-phase pipeline on per-edge
+    /// conversation counters with deferred rank-1 application.  Kept as
+    /// a method so future sync-only protocols slot into the same
+    /// table-driver gate.
     pub fn supports_async(&self) -> bool {
-        !matches!(self, AlgorithmSpec::PowerGossip { .. })
+        true
     }
 
     /// Parse CLI names like `cecl:0.1`, `powergossip:10`, `ecl`,
@@ -292,6 +298,10 @@ impl AlgorithmSpec {
             "cecl" | "c-ecl" => {
                 let arg = arg?;
                 if let Ok(k_frac) = arg.parse::<f64>() {
+                    // Degenerate fractions (k = 0, k > 1) are rejected
+                    // HERE, like the codec grammar does, instead of
+                    // failing deep inside encode.
+                    valid_k(k_frac)?;
                     Some(AlgorithmSpec::CEcl {
                         k_frac,
                         theta: 1.0,
@@ -305,16 +315,29 @@ impl AlgorithmSpec {
                     })
                 }
             }
-            "naive-cecl" => Some(AlgorithmSpec::NaiveCEcl {
-                k_frac: arg?.parse().ok()?,
-                theta: 1.0,
-            }),
-            "powergossip" | "pg" => Some(AlgorithmSpec::PowerGossip {
-                iters: arg?.parse().ok()?,
-            }),
+            "naive-cecl" => {
+                let k_frac = arg?.parse().ok()?;
+                valid_k(k_frac)?;
+                Some(AlgorithmSpec::NaiveCEcl { k_frac, theta: 1.0 })
+            }
+            "powergossip" | "pg" => {
+                let iters: usize = arg?.parse().ok()?;
+                if iters == 0 {
+                    return None;
+                }
+                Some(AlgorithmSpec::PowerGossip { iters })
+            }
             _ => None,
         }
     }
+}
+
+/// `Some(())` iff `k` is a legal rand-k fraction — delegates to the
+/// codec grammar's single source of truth
+/// ([`CodecSpec::validate_k_fraction`]), shared by the numeric
+/// `cecl:K`/`naive-cecl:K` spellings.
+fn valid_k(k: f64) -> Option<()> {
+    CodecSpec::validate_k_fraction(k).ok()
 }
 
 /// Everything a node algorithm needs at construction time.
@@ -629,6 +652,19 @@ mod tests {
             AlgorithmSpec::parse("cecl:rand_k:0.1:values").unwrap().name(),
             "C-ECL [rand_k 10% vo]"
         );
+        // PowerGossip-as-a-codec rides the same spelling.
+        assert_eq!(
+            AlgorithmSpec::parse("cecl:low_rank:2"),
+            Some(AlgorithmSpec::CEclCodec {
+                codec: CodecSpec::LowRank { rank: 2, iters: 1 },
+                theta: 1.0,
+                dense_first_epoch: true,
+            })
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("cecl:low_rank:2").unwrap().name(),
+            "C-ECL [low_rank r2] (Eq.11)"
+        );
     }
 
     #[test]
@@ -689,7 +725,22 @@ mod tests {
         assert!(AlgorithmSpec::Ecl { theta: 1.0 }.supports_async());
         assert!(AlgorithmSpec::parse("cecl:0.1").unwrap().supports_async());
         assert!(AlgorithmSpec::parse("cecl:qsgd:4").unwrap().supports_async());
-        assert!(!AlgorithmSpec::PowerGossip { iters: 4 }.supports_async());
+        // Conversation counters lifted PowerGossip's sync-only pin.
+        assert!(AlgorithmSpec::PowerGossip { iters: 4 }.supports_async());
+    }
+
+    #[test]
+    fn degenerate_numeric_specs_rejected_at_parse_time() {
+        // The numeric `cecl:K` spellings share the codec grammar's
+        // (0, 1] domain; `powergossip:0` has no zeroth power iteration.
+        for bad in ["cecl:0", "cecl:0.0", "cecl:1.5", "cecl:-0.1",
+                    "naive-cecl:0", "naive-cecl:2", "powergossip:0",
+                    "pg:0"] {
+            assert_eq!(AlgorithmSpec::parse(bad), None, "`{bad}` must fail");
+        }
+        // The boundary k = 1 (ECL) stays legal.
+        assert!(AlgorithmSpec::parse("cecl:1").is_some());
+        assert!(AlgorithmSpec::parse("powergossip:1").is_some());
     }
 
     #[test]

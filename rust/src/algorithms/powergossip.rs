@@ -12,22 +12,49 @@
 //! scales) are exchanged dense — they are a rounding error of the byte
 //! budget.
 //!
-//! The protocol is multi-phase, so the poll-driven
-//! [`NodeStateMachine`] form runs an independent pipeline per edge
-//! ([`PgEdgeRun`]): neighbor A can be two power iterations ahead of
-//! neighbor B without any global barrier.  Each edge's conversation only
-//! depends on its own traffic (w is frozen between `round_begin` and
-//! `round_end`, q̂ is per-edge), so the per-edge pipelining computes
-//! bit-identical results to the old lockstep schedule.  The blocking
-//! [`NodeAlgorithm::exchange`] drives the same machine edge-by-edge.
+//! ## Conversations: the per-edge clock
+//!
+//! The multi-phase exchange is organized as per-edge **conversations**.
+//! Conversation `c` on an edge is the power-iteration exchange both
+//! endpoints start at their own local round `c`; each endpoint starts
+//! exactly one conversation per edge per round, so the conversation
+//! counters agree at both ends by construction — no negotiation, no
+//! extra wire traffic.  All per-conversation derived randomness (the
+//! degenerate-collapse q̂ reseed) keys off the **conversation counter**,
+//! never off a message's round stamp: under async rounds the two
+//! endpoints may sit at different rounds while speaking, but the
+//! conversation sequence — and therefore the warm-started q̂ lockstep —
+//! is identical on both sides.
+//!
+//! * Under [`RoundPolicy::Sync`] conversation `c` runs entirely inside
+//!   round `c` (the counter *equals* the round), every round completes
+//!   every edge, and the trajectory is bit-identical to the classic
+//!   lockstep schedule (pinned by the engine-equivalence tests).
+//! * Under [`RoundPolicy::Async`] a slow edge's conversation may
+//!   straddle local rounds: the node keeps stepping while the
+//!   conversation is in flight, queues at most one pending start per
+//!   elapsed round, and buffers an ahead-running peer's opening halves
+//!   until it starts that conversation itself.  Completed conversations
+//!   park their rank-1 corrections until the next `round_end`
+//!   (**deferred application** — `w` is only rewritten at round
+//!   boundaries, exactly like the sync schedule), and `round_end`
+//!   enforces the staleness bound on the per-edge conversation clock
+//!   the same way C-ECL/D-PSGD enforce it on their dual/parameter
+//!   clocks.
+//!
+//! The blocking [`NodeAlgorithm::exchange`] drives the same machine
+//! edge-by-edge (sync only — the threaded bus is bulk-synchronous).
 //!
 //! Wire cost per round per neighbor:
 //! `iters · Σ_matrices (rows + cols) · 4  +  Σ_vectors len · 4` bytes,
-//! which reproduces the paper's PowerGossip(1/10/20) ratio ladder.
+//! which reproduces the paper's PowerGossip(1/10/20) ratio ladder and
+//! is byte-identical to the `low_rank:R` edge codec at `R = iters`
+//! (pinned by tests).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::comm::{Msg, NodeComm, Outbox};
 use crate::compress::low_rank::{
@@ -39,7 +66,7 @@ use crate::util::rng::{streams, Pcg};
 
 use super::{BuildCtx, NodeAlgorithm, NodeStateMachine, RoundPolicy};
 
-/// Where one edge's conversation stands within the current round.
+/// Where one conversation stands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 enum PgPhase {
     /// Receiving the peer's `p = M q̂` halves (one per matrix view).
@@ -49,13 +76,15 @@ enum PgPhase {
     S,
     /// Receiving the peer's dense rank-1-tensor payload.
     Vectors,
-    Done,
 }
 
-/// Per-edge pipeline state for one exchange round.
+/// One in-flight conversation (multi-phase power-iteration exchange) on
+/// one edge.  `conv` is the per-edge conversation counter both
+/// endpoints agree on by construction (see the module docs).
 #[derive(Debug, Default)]
-struct PgEdgeRun {
-    /// Power-iteration index within the round.
+struct PgConv {
+    conv: usize,
+    /// Power-iteration index within the conversation.
     it: usize,
     phase: PgPhase,
     /// Messages received so far in the current phase.
@@ -65,22 +94,46 @@ struct PgEdgeRun {
     p_peer: Vec<Vec<f32>>,
     s_self: Vec<Vec<f32>>,
     /// `(p, q̂_used)` per view, captured on the last iteration, consumed
-    /// by `round_end`.
+    /// at the applying `round_end`.
     finals: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Our rank-1-tensor snapshot, taken when the conversation started.
+    vec_payload: Vec<f32>,
     vec_recv: Option<Vec<f32>>,
 }
 
-impl PgEdgeRun {
-    fn new(nv: usize) -> PgEdgeRun {
-        PgEdgeRun {
-            it: 0,
-            phase: PgPhase::P,
-            recv_count: 0,
-            p_self: Vec::new(),
-            p_peer: vec![Vec::new(); nv],
-            s_self: Vec::new(),
-            finals: Vec::with_capacity(nv),
-            vec_recv: None,
+/// Per-edge machine state: the active conversation, queued starts,
+/// completed-but-unapplied conversations, and the peer-ahead buffer.
+#[derive(Debug)]
+struct PgEdge {
+    active: Option<PgConv>,
+    /// Local rounds whose conversation could not start yet because the
+    /// previous one is still in flight (async only; sync never queues).
+    pending_starts: usize,
+    /// Index of the next conversation to start locally (== local rounds
+    /// begun on this edge).
+    next_conv: usize,
+    /// Latest conversation COMPLETED on this edge (−1 = none): the
+    /// per-edge clock the staleness policy gates on.
+    last_completed: i64,
+    /// Completed conversations awaiting their applying `round_end`
+    /// (deferred rank-1 application for round-straddling conversations).
+    done: Vec<PgConv>,
+    /// Peer payloads for a conversation we have not started ourselves
+    /// yet (the peer ran ahead); drained the moment it starts.
+    inbuf: VecDeque<Vec<f32>>,
+}
+
+impl PgEdge {
+    fn new() -> PgEdge {
+        PgEdge {
+            active: None,
+            pending_starts: 0,
+            next_conv: 0,
+            // −1: no conversation has completed yet — start-up slack,
+            // exactly like C-ECL's per-edge dual clock.
+            last_completed: -1,
+            done: Vec::new(),
+            inbuf: VecDeque::new(),
         }
     }
 }
@@ -98,27 +151,17 @@ pub struct PowerGossipNode {
     /// Warm-started q̂ per (neighbor slot, view).
     states: Vec<Vec<LowRankEdgeState>>,
     seed: u64,
-    /// Per-edge pipeline state for the round in flight.
-    runs: Vec<PgEdgeRun>,
-    /// Concatenated rank-1 tensors, snapshotted at `round_begin`.
-    vec_payload: Vec<f32>,
-    done_count: usize,
+    policy: RoundPolicy,
+    /// The node's own round clock (set by `round_begin`).
+    cur_round: usize,
+    edges: Vec<PgEdge>,
+    /// Largest conversation lag consumed at any `round_end`.
+    max_lag_seen: usize,
 }
 
 impl PowerGossipNode {
     pub fn new(ctx: &BuildCtx, iters: usize) -> Result<PowerGossipNode> {
         ensure!(iters >= 1, "PowerGossip needs at least one iteration");
-        // The request-response power-iteration pipeline needs both
-        // endpoints inside the same edge round; per-edge pipelining
-        // already makes it non-blocking WITHIN a round, but bounded-
-        // staleness rounds would desynchronize the warm-started q̂
-        // lockstep.
-        ensure!(
-            ctx.round_policy == RoundPolicy::Sync,
-            "PowerGossip supports only RoundPolicy::Sync (its multi-phase \
-             per-edge pipeline requires matched rounds); requested {}",
-            ctx.round_policy.name()
-        );
         let views: Vec<(usize, usize, usize)> = ctx
             .manifest
             .matrix_views()
@@ -151,6 +194,7 @@ impl PowerGossipNode {
                     .collect()
             })
             .collect();
+        let edges = neighbors.iter().map(|_| PgEdge::new()).collect();
         Ok(PowerGossipNode {
             node: ctx.node,
             graph: Arc::clone(&ctx.graph),
@@ -160,9 +204,10 @@ impl PowerGossipNode {
             vec_views,
             states,
             seed: ctx.seed,
-            runs: Vec::new(),
-            vec_payload: Vec::new(),
-            done_count: 0,
+            policy: ctx.round_policy,
+            cur_round: 0,
+            edges,
+            max_lag_seen: 0,
         })
     }
 
@@ -199,77 +244,109 @@ impl PowerGossipNode {
                 anyhow!("node {}: message from non-neighbor {from}", self.node)
             })
     }
-}
 
-impl NodeStateMachine for PowerGossipNode {
-    fn name(&self) -> String {
-        format!("PowerGossip ({})", self.iters)
-    }
-
-    fn round_begin(&mut self, _round: usize, w: &mut [f32],
-                   out: &mut Outbox) -> Result<()> {
-        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+    /// Start the next conversation on edge slot `jj` (neighbor `j`):
+    /// snapshot the rank-1 tensors and queue the opening `p` halves.
+    /// Degenerate models (no matrix views) go straight to the dense
+    /// vector exchange, or complete instantly when there is nothing to
+    /// exchange at all.
+    fn start_conversation(&mut self, jj: usize, j: usize, w: &[f32],
+                          out: &mut Outbox) {
         let nv = self.views.len();
-        self.done_count = 0;
-        // Snapshot the rank-1 tensors once.  Vector views are disjoint
-        // from matrix views, so snapshotting before the round's rank-1
-        // corrections is equivalent to the post-correction read.
-        self.vec_payload.clear();
+        let conv = self.edges[jj].next_conv;
+        self.edges[jj].next_conv += 1;
+        let mut vec_payload = Vec::new();
         for &(off, len) in &self.vec_views {
-            self.vec_payload.extend_from_slice(&w[off..off + len]);
+            vec_payload.extend_from_slice(&w[off..off + len]);
         }
-        self.runs = neighbors.iter().map(|_| PgEdgeRun::new(nv)).collect();
-        for (jj, &j) in neighbors.iter().enumerate() {
-            if nv == 0 {
-                // Degenerate model with no matrix layers: straight to the
-                // dense vector gossip (or nothing at all).
-                if self.vec_views.is_empty() {
-                    self.runs[jj].phase = PgPhase::Done;
-                    self.done_count += 1;
-                } else {
-                    out.send(j, Msg::Dense(self.vec_payload.clone()));
-                    self.runs[jj].phase = PgPhase::Vectors;
-                }
-                continue;
+        let mut run = PgConv {
+            conv,
+            it: 0,
+            phase: PgPhase::P,
+            recv_count: 0,
+            p_self: Vec::new(),
+            p_peer: vec![Vec::new(); nv],
+            s_self: Vec::new(),
+            finals: Vec::with_capacity(nv),
+            vec_payload,
+            vec_recv: None,
+        };
+        if nv == 0 {
+            if self.vec_views.is_empty() {
+                // Nothing on the wire: the conversation completes on
+                // the spot.
+                self.edges[jj].last_completed = conv as i64;
+                self.edges[jj].done.push(run);
+                return;
             }
+            out.send(j, Msg::Dense(run.vec_payload.clone()));
+            run.phase = PgPhase::Vectors;
+        } else {
             let ps = self.p_halves(jj, w);
             for p in &ps {
                 out.send(j, Msg::Dense(p.clone()));
             }
-            self.runs[jj].p_self = ps;
+            run.p_self = ps;
         }
-        Ok(())
+        self.edges[jj].active = Some(run);
     }
 
-    // `msg_round` always equals this node's current round here: the
-    // construction-time Sync pin means both engines only ever deliver
-    // same-round traffic, so the reseed stream derivation below stays
-    // identical at both edge endpoints.
-    fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
-                  w: &mut [f32], out: &mut Outbox) -> Result<()> {
-        let round = msg_round;
-        let jj = self.neighbor_slot(from)?;
-        ensure!(
-            jj < self.runs.len(),
-            "PowerGossip node {}: message before round_begin",
-            self.node
-        );
+    /// Pump edge slot `jj`: feed buffered peer payloads into the active
+    /// conversation, start queued conversations as their predecessors
+    /// complete, and hold payloads for conversations the peer started
+    /// before we did.
+    fn drain_edge(&mut self, jj: usize, j: usize, w: &mut [f32],
+                  out: &mut Outbox) -> Result<()> {
+        loop {
+            if self.edges[jj].active.is_none() {
+                if self.edges[jj].pending_starts > 0 {
+                    self.edges[jj].pending_starts -= 1;
+                    self.start_conversation(jj, j, w, out);
+                    continue; // instant completions loop back here
+                }
+                // The peer ran ahead: its opening halves wait in
+                // `inbuf` until our own round starts the conversation.
+                return Ok(());
+            }
+            let Some(payload) = self.edges[jj].inbuf.pop_front() else {
+                return Ok(());
+            };
+            self.feed(jj, j, payload, w, out)?;
+        }
+    }
+
+    /// Deliver one peer payload to the active conversation on edge slot
+    /// `jj`.
+    fn feed(&mut self, jj: usize, from: usize, payload: Vec<f32>,
+            w: &mut [f32], out: &mut Outbox) -> Result<()> {
         let nv = self.views.len();
-        let phase = self.runs[jj].phase;
-        match phase {
+        // Take the conversation out of the slot: everything below works
+        // on a local value, so the phase logic can call `&self` helpers
+        // without fighting the borrow of `self.edges`.
+        let mut run = self.edges[jj]
+            .active
+            .take()
+            .ok_or_else(|| {
+                anyhow!(
+                    "PowerGossip node {}: payload from {from} with no \
+                     active conversation",
+                    self.node
+                )
+            })?;
+        let mut completed = false;
+        match run.phase {
             PgPhase::P => {
-                let v = self.runs[jj].recv_count;
+                let v = run.recv_count;
                 ensure!(v < nv, "p-phase overflow from {from}");
-                let p = msg.into_dense()?;
                 ensure!(
-                    p.len() == self.views[v].1,
+                    payload.len() == self.views[v].1,
                     "p half for view {v}: len {} != rows {}",
-                    p.len(),
+                    payload.len(),
                     self.views[v].1
                 );
-                self.runs[jj].p_peer[v] = p;
-                self.runs[jj].recv_count += 1;
-                if self.runs[jj].recv_count == nv {
+                run.p_peer[v] = payload;
+                run.recv_count += 1;
+                if run.recv_count == nv {
                     // All p halves in: compute p̂ and answer with our s
                     // halves.
                     let lo_is_self = self.node < from;
@@ -277,7 +354,6 @@ impl NodeStateMachine for PowerGossipNode {
                     for (v, &(off, rows, cols)) in
                         self.views.iter().enumerate()
                     {
-                        let run = &self.runs[jj];
                         let (p_lo, p_hi) = if lo_is_self {
                             (&run.p_self[v], &run.p_peer[v])
                         } else {
@@ -294,16 +370,15 @@ impl NodeStateMachine for PowerGossipNode {
                         out.send(from, Msg::Dense(s.clone()));
                         s_selfs.push(s);
                     }
-                    let run = &mut self.runs[jj];
                     run.s_self = s_selfs;
                     run.phase = PgPhase::S;
                     run.recv_count = 0;
                 }
             }
             PgPhase::S => {
-                let v = self.runs[jj].recv_count;
+                let v = run.recv_count;
                 ensure!(v < nv, "s-phase overflow from {from}");
-                let s_peer = msg.into_dense()?;
+                let s_peer = payload;
                 ensure!(
                     s_peer.len() == self.views[v].2,
                     "s half for view {v}: len {} != cols {}",
@@ -312,7 +387,6 @@ impl NodeStateMachine for PowerGossipNode {
                 );
                 let lo_is_self = self.node < from;
                 let (p, q_next) = {
-                    let run = &self.runs[jj];
                     let (p_lo, p_hi) = if lo_is_self {
                         (&run.p_self[v], &run.p_peer[v])
                     } else {
@@ -328,10 +402,14 @@ impl NodeStateMachine for PowerGossipNode {
                 let q_used =
                     std::mem::replace(&mut self.states[jj][v].q_hat, q_next);
                 // Degenerate-collapse reseed: the stream is derived per
-                // (edge, view, round, iteration), so both endpoints
-                // draw the identical replacement q̂ (the warm-start
-                // lockstep survives) and the draw is independent of
-                // message delivery order (replay- and engine-stable).
+                // (edge, view, CONVERSATION, iteration) — the
+                // conversation counter, never a round stamp, so both
+                // endpoints draw the identical replacement q̂ even when
+                // their round clocks have drifted apart under async
+                // rounds (and the draw stays independent of message
+                // delivery order — replay- and engine-stable).  Under
+                // sync the counter equals the round, so the stream is
+                // bit-identical to the legacy schedule.
                 let e = self
                     .graph
                     .edge_index(self.node, from)
@@ -344,125 +422,206 @@ impl NodeStateMachine for PowerGossipNode {
                         u64::MAX,
                         e as u64,
                         v as u64,
-                        round as u64,
-                        self.runs[jj].it as u64,
+                        run.conv as u64,
+                        run.it as u64,
                     ],
                 );
                 self.states[jj][v].reseed_if_degenerate(&mut reseed_rng);
-                if self.runs[jj].it + 1 == self.iters {
-                    self.runs[jj].finals.push((p, q_used));
+                if run.it + 1 == self.iters {
+                    run.finals.push((p, q_used));
                 }
-                self.runs[jj].recv_count += 1;
-                if self.runs[jj].recv_count == nv {
-                    self.runs[jj].it += 1;
-                    if self.runs[jj].it < self.iters {
-                        // Next power iteration on this edge.
+                run.recv_count += 1;
+                if run.recv_count == nv {
+                    run.it += 1;
+                    if run.it < self.iters {
+                        // Next power iteration of this conversation.
                         let ps = self.p_halves(jj, w);
                         for p in &ps {
                             out.send(from, Msg::Dense(p.clone()));
                         }
-                        let run = &mut self.runs[jj];
                         run.p_self = ps;
                         run.p_peer = vec![Vec::new(); nv];
                         run.phase = PgPhase::P;
                         run.recv_count = 0;
                     } else if !self.vec_views.is_empty() {
-                        out.send(from, Msg::Dense(self.vec_payload.clone()));
-                        let run = &mut self.runs[jj];
+                        out.send(from, Msg::Dense(run.vec_payload.clone()));
                         run.phase = PgPhase::Vectors;
                         run.recv_count = 0;
                     } else {
-                        self.runs[jj].phase = PgPhase::Done;
-                        self.done_count += 1;
+                        completed = true;
                     }
                 }
             }
             PgPhase::Vectors => {
                 ensure!(
-                    self.runs[jj].vec_recv.is_none(),
+                    run.vec_recv.is_none(),
                     "duplicate vector payload from {from}"
                 );
-                let theirs = msg.into_dense()?;
                 ensure!(
-                    theirs.len() == self.vec_payload.len(),
+                    payload.len() == run.vec_payload.len(),
                     "vector payload len {} != {}",
-                    theirs.len(),
-                    self.vec_payload.len()
+                    payload.len(),
+                    run.vec_payload.len()
                 );
-                self.runs[jj].vec_recv = Some(theirs);
-                self.runs[jj].phase = PgPhase::Done;
-                self.done_count += 1;
-            }
-            PgPhase::Done => {
-                bail!(
-                    "PowerGossip node {}: unexpected message from {from} in \
-                     round {round} (edge already done)",
-                    self.node
-                )
+                run.vec_recv = Some(payload);
+                completed = true;
             }
         }
+        if completed {
+            self.edges[jj].last_completed = run.conv as i64;
+            self.edges[jj].done.push(run);
+        } else {
+            self.edges[jj].active = Some(run);
+        }
+        Ok(())
+    }
+}
+
+impl NodeStateMachine for PowerGossipNode {
+    fn name(&self) -> String {
+        format!("PowerGossip ({})", self.iters)
+    }
+
+    fn round_begin(&mut self, round: usize, w: &mut [f32],
+                   out: &mut Outbox) -> Result<()> {
+        self.cur_round = round;
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        for (jj, &j) in neighbors.iter().enumerate() {
+            if self.edges[jj].active.is_some() {
+                // Straddling conversation: queue this round's start.
+                // Sync never gets here — round_end barriers on every
+                // edge completing.
+                ensure!(
+                    self.policy.is_async(),
+                    "PowerGossip node {}: round {round} began with an \
+                     unfinished sync conversation to {j}",
+                    self.node
+                );
+                self.edges[jj].pending_starts += 1;
+            } else {
+                self.start_conversation(jj, j, w, out);
+                // An ahead-running peer may already have buffered this
+                // conversation's halves.
+                self.drain_edge(jj, j, w, out)?;
+            }
+        }
+        Ok(())
+    }
+
+    // `msg_round` is ignored by the protocol itself: all derived
+    // randomness keys off the per-edge conversation counter (see the
+    // module docs), so a stale or ahead-of-us message is simply the
+    // next payload of its edge's FIFO conversation stream.
+    fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
+                  w: &mut [f32], out: &mut Outbox) -> Result<()> {
+        let jj = self.neighbor_slot(from)?;
+        if !self.policy.is_async() {
+            ensure!(
+                msg_round == self.cur_round,
+                "PowerGossip node {}: sync round {} got a round-{msg_round} \
+                 message from {from}",
+                self.node,
+                self.cur_round
+            );
+        }
+        self.edges[jj].inbuf.push_back(msg.into_dense()?);
+        self.drain_edge(jj, from, w, out)?;
+        // Under sync every legitimate message is consumable the moment
+        // it arrives (the conversation of the current round is active);
+        // anything left buffered is a duplicate or stray frame — the
+        // protocol violation the old phase machine bailed on.  Async
+        // legitimately buffers an ahead-running peer's opening halves.
+        ensure!(
+            self.policy.is_async() || self.edges[jj].inbuf.is_empty(),
+            "PowerGossip node {}: unexpected message from {from} in round \
+             {} (conversation already complete)",
+            self.node,
+            self.cur_round
+        );
         Ok(())
     }
 
     fn round_complete(&self) -> bool {
-        self.done_count == self.runs.len()
+        let clocks: Vec<i64> =
+            self.edges.iter().map(|e| e.last_completed).collect();
+        super::staleness_gate(self.policy, self.cur_round, &clocks)
     }
 
-    // Construction pins Sync (see `new`).
     fn policy(&self) -> Option<RoundPolicy> {
-        Some(RoundPolicy::Sync)
+        Some(self.policy)
     }
 
-    fn round_end(&mut self, _round: usize, w: &mut [f32]) -> Result<()> {
-        ensure!(
-            self.round_complete(),
-            "PowerGossip node {}: round_end with unfinished edges",
-            self.node
-        );
+    fn round_end(&mut self, round: usize, w: &mut [f32]) -> Result<()> {
+        // The staleness bound is a hard protocol invariant on the
+        // per-edge conversation clock, exactly like C-ECL's dual clock:
+        // finishing a round while an edge's newest completed
+        // conversation is older than `max_staleness` is an error, not a
+        // silent quality loss.
+        let clocks: Vec<i64> =
+            self.edges.iter().map(|e| e.last_completed).collect();
+        let lag = super::check_staleness(self.policy, self.node,
+                                         "conversation", round, &clocks)?;
+        self.max_lag_seen = self.max_lag_seen.max(lag);
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        // Deferred application: fold every conversation completed since
+        // the last round_end, per edge in conversation order (exactly
+        // one per edge under sync — the legacy schedule, bit-identical).
+        let done: Vec<Vec<PgConv>> = self
+            .edges
+            .iter_mut()
+            .map(|e| std::mem::take(&mut e.done))
+            .collect();
         // Gossip step on matrices: w_i += W_ij (w_j − w_i) with
         // (w_j − w_i) ≈ ±(p q̂ᵀ), folded in sorted-neighbor order (the
         // same order the threaded engine used, for bit-identical f32).
         for (jj, &j) in neighbors.iter().enumerate() {
-            ensure!(
-                self.runs[jj].finals.len() == self.views.len(),
-                "edge to {j}: {} finals for {} views",
-                self.runs[jj].finals.len(),
-                self.views.len()
-            );
             let wij = self.weights[j] as f32;
             let sign = if self.node < j { -1.0f32 } else { 1.0 };
-            for (v, &(off, rows, cols)) in self.views.iter().enumerate() {
-                let (p, q_used) = &self.runs[jj].finals[v];
-                rank1_axpy(
-                    &mut w[off..off + rows * cols],
-                    rows,
-                    cols,
-                    sign * wij,
-                    p,
-                    q_used,
+            for run in &done[jj] {
+                ensure!(
+                    run.finals.len() == self.views.len(),
+                    "edge to {j}: {} finals for {} views",
+                    run.finals.len(),
+                    self.views.len()
                 );
+                for (v, &(off, rows, cols)) in self.views.iter().enumerate() {
+                    let (p, q_used) = &run.finals[v];
+                    rank1_axpy(
+                        &mut w[off..off + rows * cols],
+                        rows,
+                        cols,
+                        sign * wij,
+                        p,
+                        q_used,
+                    );
+                }
             }
         }
-        // Rank-1 tensors: dense gossip averaging.
+        // Rank-1 tensors: dense gossip averaging (vector views are
+        // disjoint from matrix views, so the two passes commute).
         if !self.vec_views.is_empty() {
             for (jj, &j) in neighbors.iter().enumerate() {
-                let theirs = self.runs[jj]
-                    .vec_recv
-                    .take()
-                    .ok_or_else(|| anyhow!("missing vector payload from {j}"))?;
                 let wij = self.weights[j] as f32;
-                let mut cursor = 0;
-                for &(off, len) in &self.vec_views {
-                    for t in 0..len {
-                        let diff = theirs[cursor + t] - w[off + t];
-                        w[off + t] += wij * diff;
+                for run in &done[jj] {
+                    let theirs = run.vec_recv.as_ref().ok_or_else(|| {
+                        anyhow!("missing vector payload from {j}")
+                    })?;
+                    let mut cursor = 0;
+                    for &(off, len) in &self.vec_views {
+                        for t in 0..len {
+                            let diff = theirs[cursor + t] - w[off + t];
+                            w[off + t] += wij * diff;
+                        }
+                        cursor += len;
                     }
-                    cursor += len;
                 }
             }
         }
         Ok(())
+    }
+
+    fn max_staleness_seen(&self) -> usize {
+        self.max_lag_seen
     }
 }
 
@@ -473,11 +632,12 @@ impl NodeAlgorithm for PowerGossipNode {
 
     fn exchange(&mut self, round: usize, w: &mut [f32], comm: &NodeComm)
                 -> Result<()> {
-        // Blocking driver over the per-edge pipelines.  Every send of
-        // ours is triggered by a receive from the SAME neighbor (after
-        // the opening p halves), so draining one edge to completion
-        // before the next cannot deadlock: the peer never needs traffic
-        // from a third party to produce its next message.
+        // Blocking driver over the per-edge conversations (the threaded
+        // bus is bulk-synchronous, so this is the sync schedule).  Every
+        // send of ours is triggered by a receive from the SAME neighbor
+        // (after the opening p halves), so draining one edge to
+        // completion before the next cannot deadlock: the peer never
+        // needs traffic from a third party to produce its next message.
         let mut out = Outbox::new();
         NodeStateMachine::round_begin(self, round, w, &mut out)?;
         for (to, msg) in out.drain() {
@@ -485,7 +645,7 @@ impl NodeAlgorithm for PowerGossipNode {
         }
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
         for (jj, &j) in neighbors.iter().enumerate() {
-            while self.runs[jj].phase != PgPhase::Done {
+            while self.edges[jj].last_completed < round as i64 {
                 let msg = comm.recv(j)?;
                 NodeStateMachine::on_message(self, round, j, msg, w, &mut out)?;
                 for (to, m) in out.drain() {
@@ -517,7 +677,8 @@ mod tests {
         .clone()
     }
 
-    fn build(i: usize, graph: &Arc<Graph>, iters: usize) -> PowerGossipNode {
+    fn build_policy(i: usize, graph: &Arc<Graph>, iters: usize,
+                    round_policy: RoundPolicy) -> PowerGossipNode {
         let ctx = BuildCtx {
             node: i,
             graph: Arc::clone(graph),
@@ -528,28 +689,26 @@ mod tests {
             rounds_per_epoch: 1,
             dual_path: crate::algorithms::DualPath::Native,
             runtime: None,
-            round_policy: RoundPolicy::Sync,
+            round_policy,
         };
         PowerGossipNode::new(&ctx, iters).unwrap()
     }
 
+    fn build(i: usize, graph: &Arc<Graph>, iters: usize) -> PowerGossipNode {
+        build_policy(i, graph, iters, RoundPolicy::Sync)
+    }
+
     #[test]
-    fn async_policy_rejected_at_construction() {
+    fn async_policy_accepted_at_construction() {
+        // PR 3 pinned a typed rejection here; conversation counters
+        // lifted it — the machine now reports the policy it was built
+        // with so the engine can assert agreement.
         let graph = Arc::new(Graph::ring(4));
-        let ctx = BuildCtx {
-            node: 0,
-            graph: Arc::clone(&graph),
-            manifest: manifest(),
-            seed: 5,
-            eta: 0.1,
-            local_steps: 1,
-            rounds_per_epoch: 1,
-            dual_path: crate::algorithms::DualPath::Native,
-            runtime: None,
-            round_policy: RoundPolicy::Async { max_staleness: 2 },
-        };
-        let err = PowerGossipNode::new(&ctx, 2).err().unwrap();
-        assert!(err.to_string().contains("Sync"), "{err}");
+        let policy = RoundPolicy::Async { max_staleness: 2 };
+        let node = build_policy(0, &graph, 2, policy);
+        assert_eq!(NodeStateMachine::policy(&node), Some(policy));
+        let sync = build(0, &graph, 2);
+        assert_eq!(NodeStateMachine::policy(&sync), Some(RoundPolicy::Sync));
     }
 
     #[test]
@@ -559,6 +718,46 @@ mod tests {
         // matrices: (4+5) + (2+2) = 13 floats x 3 iters x 4B = 156;
         // vectors: 2 floats x 4B = 8.
         assert_eq!(node.bytes_per_round_per_neighbor(), 156 + 8);
+    }
+
+    #[test]
+    fn low_rank_codec_frames_match_powergossip_wire_accounting() {
+        // The `low_rank:R` edge codec bound to the same model layout
+        // must meter exactly PowerGossip's bytes per round per neighbor
+        // at `R = iters` — the codec IS PowerGossip's compressor on the
+        // C-ECL wire.
+        use crate::compress::{EdgeCodec, EdgeCtx, LowRankCodec};
+        let graph = Arc::new(Graph::ring(4));
+        let ds = manifest();
+        for iters in [1usize, 2, 10] {
+            let node = build(0, &graph, iters);
+            let mut codec = LowRankCodec::new(iters, 1);
+            let mats: Vec<(usize, usize, usize)> = ds
+                .matrix_views()
+                .into_iter()
+                .map(|(_, o, r, c)| (o, r, c))
+                .collect();
+            let vecs: Vec<(usize, usize)> = ds
+                .vector_views()
+                .into_iter()
+                .map(|(_, o, l)| (o, l))
+                .collect();
+            codec.bind_layout(&mats, &vecs);
+            let ctx = EdgeCtx {
+                seed: 5,
+                edge: 0,
+                round: 0,
+                receiver: 1,
+                dim: ds.d_pad,
+            };
+            let x: Vec<f32> = (0..ds.d_pad).map(|i| i as f32 * 0.1).collect();
+            let frame = codec.encode(&x, &ctx);
+            assert_eq!(
+                frame.wire_bytes(),
+                node.bytes_per_round_per_neighbor(),
+                "rank {iters}: codec bytes != PowerGossip accounting"
+            );
+        }
     }
 
     #[test]
@@ -708,5 +907,106 @@ mod tests {
         NodeStateMachine::round_end(&mut b, 0, &mut wb).unwrap();
         assert_eq!(wa, ws_t[0], "node 0 diverged from threaded engine");
         assert_eq!(wb, ws_t[1], "node 1 diverged from threaded engine");
+        // A stray frame after the round's conversation completed is a
+        // typed protocol error under sync, not a silent buffer.
+        let err = NodeStateMachine::on_message(
+            &mut a, 0, 1, Msg::Dense(vec![0.0; 4]), &mut wa, &mut out,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unexpected message"), "{err}");
+    }
+
+    #[test]
+    fn async_conversation_straddles_rounds_and_defers_application() {
+        // Two nodes, async:1.  Node A runs rounds 0 and 1 before B says
+        // anything: conversation 0 straddles A's round boundary, round
+        // 1's start is queued, and A's w is untouched until the
+        // conversation completes and the NEXT round_end applies it.
+        let graph = Arc::new(Graph::chain(2));
+        let policy = RoundPolicy::Async { max_staleness: 1 };
+        let mut a = build_policy(0, &graph, 1, policy);
+        let mut b = build_policy(1, &graph, 1, policy);
+        let mut wa: Vec<f32> = {
+            let mut rng = Pcg::new(500);
+            (0..32).map(|_| rng.normal_f32()).collect()
+        };
+        let mut wb: Vec<f32> = {
+            let mut rng = Pcg::new(501);
+            (0..32).map(|_| rng.normal_f32()).collect()
+        };
+        let wa0 = wa.clone();
+        let mut out = Outbox::new();
+        let mut to_b: VecDeque<Msg> = VecDeque::new();
+
+        // A: round 0 begins, sends its opening p halves, and — with
+        // staleness 1 — may finish round 0 without hearing back.
+        NodeStateMachine::round_begin(&mut a, 0, &mut wa, &mut out).unwrap();
+        for (to, m) in out.drain() {
+            assert_eq!(to, 1);
+            to_b.push_back(m);
+        }
+        assert!(a.round_complete(), "async:1 must not block round 0");
+        NodeStateMachine::round_end(&mut a, 0, &mut wa).unwrap();
+        assert_eq!(wa, wa0, "no conversation done: w must be untouched");
+
+        // A: round 1 begins while conversation 0 is still in flight —
+        // the round's conversation start is queued, not interleaved.
+        NodeStateMachine::round_begin(&mut a, 1, &mut wa, &mut out).unwrap();
+        assert!(out.is_empty(), "straddling edge queues its start");
+        assert!(!a.round_complete(), "round 1 needs conversation 0");
+
+        // B: round 0 begins; the two nodes now finish conversation 0.
+        NodeStateMachine::round_begin(&mut b, 0, &mut wb, &mut out).unwrap();
+        let mut to_a: VecDeque<Msg> = out.drain().map(|(_, m)| m).collect();
+        loop {
+            let mut progressed = false;
+            if let Some(m) = to_a.pop_front() {
+                // B's sends carry B's round stamp (0) while A sits at
+                // round 1 — exactly the skew conversation counters absorb.
+                NodeStateMachine::on_message(&mut a, 0, 1, m, &mut wa, &mut out)
+                    .unwrap();
+                out.drain().for_each(|(_, m)| to_b.push_back(m));
+                progressed = true;
+            }
+            if let Some(m) = to_b.pop_front() {
+                NodeStateMachine::on_message(&mut b, 1, 0, m, &mut wb, &mut out)
+                    .unwrap();
+                out.drain().for_each(|(_, m)| to_a.push_back(m));
+                progressed = true;
+            }
+            if !progressed {
+                break;
+            }
+        }
+        // Conversation 0 done everywhere; conversation 1 (A's queued
+        // round-1 start) is now in flight, so A can finish round 1.
+        assert_eq!(a.edges[0].last_completed, 0);
+        assert_eq!(b.edges[0].last_completed, 0);
+        assert!(a.round_complete());
+        NodeStateMachine::round_end(&mut a, 1, &mut wa).unwrap();
+        assert_ne!(wa, wa0, "deferred correction must apply at round_end");
+        assert_eq!(NodeStateMachine::max_staleness_seen(&a), 1);
+
+        // Warm-start lockstep survived the round skew.
+        for v in 0..2 {
+            assert_eq!(a.states[0][v].q_hat, b.states[0][v].q_hat,
+                       "view {v}: q̂ desynchronized");
+        }
+    }
+
+    #[test]
+    fn async_round_end_past_staleness_bound_is_typed_error() {
+        let graph = Arc::new(Graph::ring(4));
+        let policy = RoundPolicy::Async { max_staleness: 1 };
+        let mut node = build_policy(0, &graph, 1, policy);
+        let mut w = vec![0.5f32; 32];
+        let mut out = Outbox::new();
+        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        NodeStateMachine::round_end(&mut node, 0, &mut w).unwrap();
+        NodeStateMachine::round_begin(&mut node, 1, &mut w, &mut out).unwrap();
+        assert!(!node.round_complete(), "round 1 needs conversation 0");
+        let err = NodeStateMachine::round_end(&mut node, 1, &mut w)
+            .unwrap_err();
+        assert!(err.to_string().contains("would consume"), "{err}");
     }
 }

@@ -33,6 +33,7 @@
 //! | `top_k:K` | `8m` | **no** (value-dependent ω) | Eq. 11 only |
 //! | `qsgd:B` | `4⌈d/512⌉ + ⌈dB/8⌉` (bucket norms + B-bit codes) | **no** | Eq. 11 only |
 //! | `sign` | `4 + ⌈d/8⌉` (scale + sign bits) | **no** | Eq. 11 only |
+//! | `low_rank:R[:it]` | `4R·Σ(rows+cols) + 4·Σvec` per bound layout | **no** (value-dependent) | Eq. 11 only |
 //! | `ef+<c>` | inner | **no** (stateful) | Eq. 11 only |
 //!
 //! Codecs that are linear for fixed ω and whose support is derivable
@@ -242,6 +243,17 @@ pub trait EdgeCodec: Send {
     /// update directly instead of materializing a 0..d support list.
     fn is_full_support(&self) -> bool {
         false
+    }
+
+    /// Optional model-layout hint: the layer-matrix views
+    /// `(offset, rows, cols)` and rank-1-tensor views `(offset, len)`
+    /// of the vectors this codec will see.  Structure-aware codecs
+    /// (`low_rank`) compress each layer matrix separately — exactly
+    /// PowerGossip's per-layer wire accounting; everything else ignores
+    /// the hint.  Callers bind at most once, before the first
+    /// encode/decode (C-ECL binds its manifest views at construction).
+    fn bind_layout(&mut self, _matrices: &[(usize, usize, usize)],
+                   _vectors: &[(usize, usize)]) {
     }
 }
 
@@ -847,6 +859,11 @@ impl EdgeCodec for ErrorFeedback {
     fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
         self.inner.decode(frame, ctx)
     }
+
+    fn bind_layout(&mut self, matrices: &[(usize, usize, usize)],
+                   vectors: &[(usize, usize)]) {
+        self.inner.bind_layout(matrices, vectors);
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -858,8 +875,8 @@ impl EdgeCodec for ErrorFeedback {
 /// execution engines.
 ///
 /// Grammar: `identity` | `rand_k:K[:values]` | `top_k:K` | `qsgd:B` |
-/// `sign` | `ef+<codec>` — with `K ∈ (0, 1]` a fraction and
-/// `B ∈ [2, 8]` bits.
+/// `sign` | `low_rank:R[:iters]` | `ef+<codec>` — with `K ∈ (0, 1]` a
+/// fraction, `B ∈ [2, 8]` bits, `R ∈ [1, 128]` and `iters ∈ [1, 16]`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CodecSpec {
     Identity,
@@ -867,13 +884,17 @@ pub enum CodecSpec {
     TopK { k_frac: f64 },
     Qsgd { bits: u8 },
     SignNorm,
+    /// PowerGossip as a codec: rank-R power-iteration factors per layer
+    /// matrix, rank-1 tensors dense (`compress::low_rank::LowRankCodec`).
+    LowRank { rank: usize, iters: usize },
     ErrorFeedback(Box<CodecSpec>),
 }
 
 /// The full `--codec` grammar, restated verbatim in every parse error.
 pub const CODEC_GRAMMAR: &str =
     "identity | rand_k:K[:values|:explicit] | top_k:K | qsgd:B | sign \
-     | ef+<codec>, with K a fraction in (0, 1] and B bits in [2, 8]";
+     | low_rank:R[:iters] | ef+<codec>, with K a fraction in (0, 1], \
+     B bits in [2, 8], R a rank in [1, 128], and iters in [1, 16]";
 
 impl CodecSpec {
     /// Parse the CLI codec grammar (see [`CODEC_GRAMMAR`]).  Every
@@ -900,6 +921,14 @@ impl CodecSpec {
             a.parse::<f64>().map_err(|_| {
                 CodecError::BadSpec(format!(
                     "`{s}`: `{a}` is not a fraction \
+                     (grammar: {CODEC_GRAMMAR})"
+                ))
+            })
+        };
+        let int = |a: &str, what: &str| -> Result<usize, CodecError> {
+            a.parse::<usize>().map_err(|_| {
+                CodecError::BadSpec(format!(
+                    "`{s}`: `{a}` is not {what} \
                      (grammar: {CODEC_GRAMMAR})"
                 ))
             })
@@ -933,6 +962,14 @@ impl CodecSpec {
                 })?,
             },
             ("sign", []) => CodecSpec::SignNorm,
+            ("low_rank" | "lowrank", [r]) => CodecSpec::LowRank {
+                rank: int(r, "a rank")?,
+                iters: 1,
+            },
+            ("low_rank" | "lowrank", [r, i]) => CodecSpec::LowRank {
+                rank: int(r, "a rank")?,
+                iters: int(i, "an iteration count")?,
+            },
             (head, args) => {
                 // Name the token that broke the parse: a known codec
                 // with the wrong arity points at its argument list, an
@@ -940,7 +977,7 @@ impl CodecSpec {
                 let known = matches!(
                     head,
                     "identity" | "dense" | "rand_k" | "randk" | "top_k"
-                        | "topk" | "qsgd" | "sign"
+                        | "topk" | "qsgd" | "sign" | "low_rank" | "lowrank"
                 );
                 return Err(CodecError::BadSpec(if known {
                     format!(
@@ -958,6 +995,18 @@ impl CodecSpec {
         };
         spec.validate()?;
         Ok(spec)
+    }
+
+    /// Validate a bare rand-k fraction against the same (0, 1] domain
+    /// the grammar enforces — the single source of truth for the
+    /// numeric `cecl:K` / `naive-cecl:K` spellings (parser and CLI
+    /// diagnostics alike).
+    pub fn validate_k_fraction(k: f64) -> Result<(), CodecError> {
+        CodecSpec::RandK {
+            k_frac: k,
+            mode: WireMode::Explicit,
+        }
+        .validate()
     }
 
     /// Parameter validation (k ranges, bit widths).
@@ -984,6 +1033,21 @@ impl CodecSpec {
                     )))
                 }
             }
+            CodecSpec::LowRank { rank, iters } => {
+                if !(1..=128).contains(rank) {
+                    Err(CodecError::BadSpec(format!(
+                        "low_rank rank must be in [1, 128], got `{rank}` \
+                         (grammar: {CODEC_GRAMMAR})"
+                    )))
+                } else if !(1..=16).contains(iters) {
+                    Err(CodecError::BadSpec(format!(
+                        "low_rank iters must be in [1, 16], got `{iters}` \
+                         (grammar: {CODEC_GRAMMAR})"
+                    )))
+                } else {
+                    Ok(())
+                }
+            }
             CodecSpec::ErrorFeedback(inner) => inner.validate(),
         }
     }
@@ -999,6 +1063,9 @@ impl CodecSpec {
             CodecSpec::TopK { k_frac } => Box::new(TopKCodec { k_frac: *k_frac }),
             CodecSpec::Qsgd { bits } => Box::new(QsgdCodec { bits: *bits }),
             CodecSpec::SignNorm => Box::new(SignNormCodec),
+            CodecSpec::LowRank { rank, iters } => {
+                Box::new(crate::compress::LowRankCodec::new(*rank, *iters))
+            }
             CodecSpec::ErrorFeedback(inner) => {
                 Box::new(ErrorFeedback::new(inner.build()))
             }
@@ -1022,6 +1089,13 @@ impl CodecSpec {
             }
             CodecSpec::Qsgd { bits } => format!("qsgd {bits}b"),
             CodecSpec::SignNorm => "sign".to_string(),
+            CodecSpec::LowRank { rank, iters } => {
+                if *iters == 1 {
+                    format!("low_rank r{rank}")
+                } else {
+                    format!("low_rank r{rank}x{iters}")
+                }
+            }
             CodecSpec::ErrorFeedback(inner) => format!("ef+{}", inner.name()),
         }
     }
@@ -1049,6 +1123,18 @@ impl CodecSpec {
                 (1.0 - var).max(0.01)
             }
             CodecSpec::SignNorm => 2.0 / std::f64::consts::PI,
+            CodecSpec::LowRank { rank, .. } => {
+                // Heuristic: the energy a rank-R factorization of a
+                // near-square reshape can retain is value-dependent;
+                // use the wire compression ratio R(rows+cols)/(rows·
+                // cols) — exact for uniformly-spread spectra, a lower
+                // bound once the warm start locks onto the top
+                // directions — clamped into the α schedule's domain.
+                let (rows, cols) = super::low_rank::near_square_shape(dim);
+                (*rank as f64 * (rows + cols) as f64
+                    / (rows * cols) as f64)
+                    .clamp(0.01, 1.0)
+            }
             CodecSpec::ErrorFeedback(inner) => inner.tau(dim),
         }
     }
@@ -1086,6 +1172,13 @@ impl CodecSpec {
                 4 * QsgdCodec::n_buckets(dim) + (dim * *bits as usize + 7) / 8
             }
             CodecSpec::SignNorm => 4 + (dim + 7) / 8,
+            CodecSpec::LowRank { rank, .. } => {
+                // Unbound (near-square reshape) accounting; a bound
+                // model layout meters per layer matrix instead — equal
+                // to PowerGossip's wire formula, pinned by tests.
+                let (rows, cols) = super::low_rank::near_square_shape(dim);
+                4 * rank * (rows + cols)
+            }
             CodecSpec::ErrorFeedback(inner) => inner.nominal_frame_bytes(dim),
         }
     }
@@ -1162,7 +1255,12 @@ mod tests {
             CodecSpec::TopK { k_frac: 0.05 },
             CodecSpec::Qsgd { bits: 4 },
             CodecSpec::SignNorm,
+            CodecSpec::LowRank { rank: 2, iters: 1 },
             CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK { k_frac: 0.1 })),
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::LowRank {
+                rank: 2,
+                iters: 1,
+            })),
         ]
     }
 
@@ -1474,22 +1572,52 @@ mod tests {
         );
         assert_eq!(CodecSpec::parse("sign").unwrap(), CodecSpec::SignNorm);
         assert_eq!(
+            CodecSpec::parse("low_rank:2").unwrap(),
+            CodecSpec::LowRank { rank: 2, iters: 1 }
+        );
+        assert_eq!(
+            CodecSpec::parse("low_rank:2:3").unwrap(),
+            CodecSpec::LowRank { rank: 2, iters: 3 }
+        );
+        assert_eq!(
             CodecSpec::parse("ef+top_k:0.01").unwrap(),
             CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK { k_frac: 0.01 }))
         );
+        assert_eq!(
+            CodecSpec::parse("ef+low_rank:2").unwrap(),
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::LowRank {
+                rank: 2,
+                iters: 1,
+            }))
+        );
         // Broken specs fail loudly with a typed error that names the
-        // offending token AND restates the grammar.
+        // offending token AND restates the grammar — degenerate
+        // parameters (zero ranks/fractions/bit widths, over-full
+        // fractions) are caught HERE, not deep inside encode.
         for (bad, token) in [
             ("", ""),
             ("bogus", "`bogus`"),
             ("rand_k", "argument count"),
             ("rand_k:0", "`0`"),
+            ("rand_k:0.0", "`0`"),
             ("rand_k:1.5", "`1.5`"),
+            ("rand_k:-0.1", "`-0.1`"),
             ("rand_k:0.1:weird", "`weird`"),
+            ("top_k:0", "`0`"),
+            ("top_k:1.5", "`1.5`"),
+            ("qsgd:0", "`0`"),
             ("qsgd:1", "`1`"),
             ("qsgd:9", "`9`"),
             ("qsgd:x", "`x`"),
+            ("low_rank", "argument count"),
+            ("low_rank:0", "`0`"),
+            ("low_rank:129", "`129`"),
+            ("low_rank:2:0", "`0`"),
+            ("low_rank:2:17", "`17`"),
+            ("low_rank:x", "`x`"),
+            ("low_rank:2:3:4", "argument count"),
             ("ef+ef+sign", "base codec"),
+            ("ef+low_rank:0", "`0`"),
             ("top_k:nope", "`nope`"),
             ("sign:1", "argument count"),
             ("identity:x", "argument count"),
@@ -1514,6 +1642,12 @@ mod tests {
             CodecSpec::parse("rand_k:0.1:vo").unwrap().name(),
             "rand_k 10% vo"
         );
+        assert_eq!(CodecSpec::parse("low_rank:2").unwrap().name(),
+                   "low_rank r2");
+        assert_eq!(CodecSpec::parse("low_rank:2:3").unwrap().name(),
+                   "low_rank r2x3");
+        assert_eq!(CodecSpec::parse("ef+low_rank:1").unwrap().name(),
+                   "ef+low_rank r1");
     }
 
     #[test]
@@ -1542,6 +1676,12 @@ mod tests {
             CodecSpec::SignNorm.nominal_frame_bytes(d),
             4 + (d + 7) / 8
         );
+        // low_rank's unbound accounting must equal the bytes a real
+        // unbound codec instance serializes (shared reshape helper).
+        let spec = CodecSpec::LowRank { rank: 2, iters: 1 };
+        let x = randn(d, 99);
+        let f = spec.build().encode(&x, &ctx(d, 0));
+        assert_eq!(spec.nominal_frame_bytes(d), f.wire_bytes());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Low-rank (PowerGossip-style) compression primitives.
+//! Low-rank (PowerGossip-style) compression primitives, plus the
+//! [`LowRankCodec`] that packages them as an [`EdgeCodec`].
 //!
 //! PowerGossip (Vogels, Karimireddy, Jaggi 2020) compresses the per-edge
 //! model *difference* `D = M_lo − M_hi` (per layer matrix) with warm-
@@ -9,10 +10,14 @@
 //! across rounds is what makes one step per round sufficient in practice
 //! (the paper's PowerGossip(1) row).
 //!
-//! This module is the math; the exchange choreography lives in
-//! `algorithms::powergossip`.
+//! The same operator also works as a one-shot codec (`low_rank:R` in the
+//! `--codec` grammar): encode deflates rank-R factors out of the input
+//! and ships the `(p, q)` pairs explicitly, so C-ECL can run the
+//! PowerGossip compressor through the Eq. (11) dual rule.  The
+//! interactive two-node choreography lives in `algorithms::powergossip`.
 
-use crate::util::rng::Pcg;
+use crate::compress::codec::{CodecError, EdgeCodec, EdgeCtx, Frame};
+use crate::util::rng::{streams, Pcg};
 
 /// `p = M q` for a row-major `rows x cols` matrix stored in a flat slice.
 pub fn matvec_f32(m: &[f32], rows: usize, cols: usize, q: &[f32]) -> Vec<f32> {
@@ -124,6 +129,274 @@ impl LowRankEdgeState {
             }
             normalize(&mut self.q_hat);
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The low-rank edge codec (`low_rank:R[:iters]`)
+// ---------------------------------------------------------------------
+
+/// One matrix view the codec compresses: `(offset, rows, cols, len)`
+/// into the flat vector.  `len < rows·cols` only for the generic
+/// reshape of an unbound codec, where the tail of the matrix is
+/// zero-padding.
+type MatView = (usize, usize, usize, usize);
+
+/// Near-square reshape of a flat `dim`-vector: `(rows, cols)` with
+/// `cols = ⌈√d⌉` and `rows = ⌈d/cols⌉` (zero-padded to `rows·cols`).
+/// The single definition behind the unbound [`LowRankCodec`] layout AND
+/// the spec-level accounting (`CodecSpec::{tau, nominal_frame_bytes}`)
+/// — they must never drift apart, or metered bytes would diverge from
+/// the sizing tables.
+pub fn near_square_shape(dim: usize) -> (usize, usize) {
+    let cols = ((dim as f64).sqrt().ceil().max(1.0)) as usize;
+    let rows = ((dim + cols - 1) / cols).max(1);
+    (rows, cols)
+}
+
+/// PowerGossip-as-a-codec: rank-R power-iteration compression of each
+/// layer matrix, rank-1 tensors shipped dense — the exact wire
+/// accounting of `PowerGossipNode::bytes_per_round_per_neighbor`
+/// (`algorithms::powergossip`) at `iters = R`, which the tests pin.
+///
+/// * **Frame layout**: per matrix view, `R` explicit `(p, q)` factor
+///   pairs (`rows + cols` f32 each, deflated greedily: rank `k+1`
+///   approximates the residual left by ranks `0..k`); then every
+///   rank-1 tensor raw.  Frame length is deterministic per layout, so
+///   decode validates it exactly.
+/// * **Warm start**: the per-edge codec instance keeps one q̂ per
+///   (view, rank), seeded from the shared-seed derivation
+///   `(POWER, edge, receiver, view, rank)` of the first [`EdgeCtx`] it
+///   encodes with, and updated after every encode with
+///   `normalize(Mᵀ p̂)` — repeated encodes of a slowly-moving input
+///   converge on its top singular directions exactly like PowerGossip's
+///   across-round warm start.  Decode is stateless: the factors are on
+///   the wire.
+/// * **Layout**: [`EdgeCodec::bind_layout`] supplies the model's layer
+///   structure (C-ECL binds its manifest views at construction).
+///   Unbound instances fall back to reshaping the whole vector into one
+///   near-square matrix (zero-padded); coordinates outside every view
+///   decode to 0.
+///
+/// Value-dependent, so NOT linear for fixed ω — Eq. (11) rule only.
+pub struct LowRankCodec {
+    pub rank: usize,
+    /// Power-iteration refinements per rank within one encode.
+    pub iters: usize,
+    views: Vec<MatView>,
+    vec_views: Vec<(usize, usize)>,
+    /// Dimension the views were derived for (layout binding or first
+    /// ctx); later ctxs must agree.
+    dim: Option<usize>,
+    /// Warm-start state per (view, rank); seeded lazily from the first
+    /// encode's ctx.
+    states: Vec<Vec<LowRankEdgeState>>,
+    scratch: Vec<f32>,
+}
+
+impl LowRankCodec {
+    pub fn new(rank: usize, iters: usize) -> LowRankCodec {
+        LowRankCodec {
+            rank: rank.max(1),
+            iters: iters.max(1),
+            views: Vec::new(),
+            vec_views: Vec::new(),
+            dim: None,
+            states: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Generic layout for an unbound codec: one near-square matrix
+    /// covering the whole vector, zero-padded (see
+    /// [`near_square_shape`]).
+    fn fallback_views(dim: usize) -> Vec<MatView> {
+        let (rows, cols) = near_square_shape(dim);
+        vec![(0, rows, cols, dim)]
+    }
+
+    fn ensure_views(&mut self, dim: usize) -> Result<(), CodecError> {
+        match self.dim {
+            Some(d) if d == dim => Ok(()),
+            Some(d) => Err(CodecError::BadSpec(format!(
+                "low_rank codec bound for dim {d}, used with dim {dim}"
+            ))),
+            None => {
+                if self.views.is_empty() && self.vec_views.is_empty() {
+                    self.views = Self::fallback_views(dim);
+                }
+                self.dim = Some(dim);
+                Ok(())
+            }
+        }
+    }
+
+    /// Exact frame length for the current layout.
+    fn frame_bytes(&self) -> usize {
+        let mats: usize = self
+            .views
+            .iter()
+            .map(|&(_, r, c, _)| (r + c) * 4)
+            .sum::<usize>()
+            * self.rank;
+        let vecs: usize = self.vec_views.iter().map(|&(_, l)| l * 4).sum();
+        mats + vecs
+    }
+
+    /// Stage view `v` of `x` into `self.scratch` (zero-pads the generic
+    /// reshape's tail).
+    fn load_view(&mut self, x: &[f32], v: usize) {
+        let (off, rows, cols, len) = self.views[v];
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&x[off..off + len]);
+        self.scratch.resize(rows * cols, 0.0);
+    }
+}
+
+impl EdgeCodec for LowRankCodec {
+    fn name(&self) -> String {
+        if self.iters == 1 {
+            format!("low_rank r{}", self.rank)
+        } else {
+            format!("low_rank r{}x{}", self.rank, self.iters)
+        }
+    }
+
+    fn is_linear_for_fixed_omega(&self) -> bool {
+        false
+    }
+
+    fn bind_layout(&mut self, matrices: &[(usize, usize, usize)],
+                   vectors: &[(usize, usize)]) {
+        self.views = matrices
+            .iter()
+            .map(|&(off, r, c)| (off, r, c, r * c))
+            .collect();
+        self.vec_views = vectors.to_vec();
+        self.dim = None;
+        self.states.clear();
+    }
+
+    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
+        debug_assert_eq!(x.len(), ctx.dim);
+        self.ensure_views(ctx.dim).expect("encode dim drifted from layout");
+        if self.states.is_empty() {
+            // Warm-start q̂ per (view, rank), derived from the shared
+            // seed so two instances on the same directed edge encode
+            // identical frames from round 0.
+            self.states = self
+                .views
+                .iter()
+                .enumerate()
+                .map(|(v, &(_, _, cols, _))| {
+                    (0..self.rank)
+                        .map(|r| {
+                            let mut rng = Pcg::derive(
+                                ctx.seed,
+                                &[
+                                    streams::POWER,
+                                    ctx.edge as u64,
+                                    ctx.receiver as u64,
+                                    v as u64,
+                                    r as u64,
+                                ],
+                            );
+                            LowRankEdgeState::new(cols, &mut rng)
+                        })
+                        .collect()
+                })
+                .collect();
+        }
+        let mut buf = Vec::with_capacity(self.frame_bytes());
+        for v in 0..self.views.len() {
+            let (_, rows, cols, _) = self.views[v];
+            self.load_view(x, v);
+            let mut res = std::mem::take(&mut self.scratch);
+            for r in 0..self.rank {
+                let mut q_used = self.states[v][r].q_hat.clone();
+                let mut p = matvec_f32(&res, rows, cols, &q_used);
+                for it in 0..self.iters {
+                    let mut p_hat = p.clone();
+                    normalize(&mut p_hat);
+                    let s = matvec_t_f32(&res, rows, cols, &p_hat);
+                    let mut q_next = s;
+                    normalize(&mut q_next);
+                    if it + 1 < self.iters {
+                        // Refine within this encode.
+                        q_used = q_next;
+                        p = matvec_f32(&res, rows, cols, &q_used);
+                    } else {
+                        // Warm start for the next encode; reseed if the
+                        // residual collapsed (rank < R input).
+                        let mut reseed = Pcg::derive(
+                            ctx.seed,
+                            &[
+                                streams::POWER,
+                                u64::MAX,
+                                ctx.edge as u64,
+                                ctx.receiver as u64,
+                                v as u64,
+                                r as u64,
+                                ctx.round as u64,
+                            ],
+                        );
+                        self.states[v][r].q_hat = q_next;
+                        self.states[v][r].reseed_if_degenerate(&mut reseed);
+                    }
+                }
+                for &val in &p {
+                    buf.extend_from_slice(&val.to_le_bytes());
+                }
+                for &val in &q_used {
+                    buf.extend_from_slice(&val.to_le_bytes());
+                }
+                // Deflate: the next rank approximates what is left.
+                rank1_axpy(&mut res, rows, cols, -1.0, &p, &q_used);
+            }
+            self.scratch = res;
+        }
+        for &(off, len) in &self.vec_views {
+            for &val in &x[off..off + len] {
+                buf.extend_from_slice(&val.to_le_bytes());
+            }
+        }
+        Frame::new(buf)
+    }
+
+    fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        self.ensure_views(ctx.dim)?;
+        let expected = self.frame_bytes();
+        let b = frame.bytes();
+        if b.len() != expected {
+            return Err(CodecError::Length {
+                expected,
+                got: b.len(),
+            });
+        }
+        let f32_at = |k: usize| {
+            f32::from_le_bytes([b[4 * k], b[4 * k + 1], b[4 * k + 2],
+                                b[4 * k + 3]])
+        };
+        let mut out = vec![0.0f32; ctx.dim];
+        let mut cur = 0usize; // f32 cursor
+        for &(off, rows, cols, len) in &self.views {
+            let mut mat = vec![0.0f32; rows * cols];
+            for _ in 0..self.rank {
+                let p: Vec<f32> = (0..rows).map(|i| f32_at(cur + i)).collect();
+                cur += rows;
+                let q: Vec<f32> = (0..cols).map(|i| f32_at(cur + i)).collect();
+                cur += cols;
+                rank1_axpy(&mut mat, rows, cols, 1.0, &p, &q);
+            }
+            out[off..off + len].copy_from_slice(&mat[..len]);
+        }
+        for &(off, len) in &self.vec_views {
+            for i in 0..len {
+                out[off + i] = f32_at(cur + i);
+            }
+            cur += len;
+        }
+        Ok(out)
     }
 }
 
@@ -246,5 +519,100 @@ mod tests {
         s.reseed_if_degenerate(&mut rng);
         let norm: f32 = s.q_hat.iter().map(|x| x * x).sum();
         assert!((norm - 1.0).abs() < 1e-4);
+    }
+
+    fn codec_ctx(dim: usize, round: usize) -> EdgeCtx {
+        EdgeCtx {
+            seed: 19,
+            edge: 2,
+            round,
+            receiver: 1,
+            dim,
+        }
+    }
+
+    #[test]
+    fn low_rank_codec_reconstructs_exact_rank_r_input() {
+        // A bound (rows x cols) view holding an exactly rank-2 matrix:
+        // after a couple of warm-started encodes, low_rank:2 must
+        // reconstruct it almost exactly.
+        let rows = 14;
+        let cols = 10;
+        let dim = rows * cols;
+        let mut m = vec![0.0f32; dim];
+        for (k, sigma) in [(0u64, 4.0f32), (1, 2.0)] {
+            let mut u = randn(rows, 30 + k);
+            let mut v = randn(cols, 40 + k);
+            normalize(&mut u);
+            normalize(&mut v);
+            rank1_axpy(&mut m, rows, cols, sigma, &u, &v);
+        }
+        let mut codec = LowRankCodec::new(2, 2);
+        codec.bind_layout(&[(0, rows, cols)], &[]);
+        let mut last_err = f32::MAX;
+        for round in 0..6 {
+            let c = codec_ctx(dim, round);
+            let f = codec.encode(&m, &c);
+            assert_eq!(f.wire_bytes(), 2 * (rows + cols) * 4);
+            let y = codec.decode(&f, &c).unwrap();
+            let err: f32 = y
+                .iter()
+                .zip(&m)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            let norm: f32 = m.iter().map(|x| x * x).sum();
+            last_err = err / norm;
+        }
+        assert!(last_err < 1e-2, "rank-2 input rel err {last_err}");
+    }
+
+    #[test]
+    fn low_rank_codec_layout_ships_vectors_dense_and_pins_bytes() {
+        // Layout: one 4x5 matrix + one len-3 rank-1 tensor.
+        let dim = 23;
+        let x = randn(dim, 50);
+        let mut codec = LowRankCodec::new(3, 2);
+        codec.bind_layout(&[(0, 4, 5)], &[(20, 3)]);
+        let c = codec_ctx(dim, 0);
+        let f = codec.encode(&x, &c);
+        // 3 ranks x (4 + 5) floats + 3 raw floats (iters is refinement
+        // quality, not wire size).
+        assert_eq!(f.wire_bytes(), (3 * 9 + 3) * 4);
+        let y = codec.decode(&f, &c).unwrap();
+        // Rank-1 tensors round-trip bit-exactly.
+        for i in 20..23 {
+            assert_eq!(y[i].to_bits(), x[i].to_bits(), "vec coord {i}");
+        }
+        // Rank 3 cannot lose much of a 4x5 matrix (full rank is 4).
+        let err: f32 = y[..20]
+            .iter()
+            .zip(&x[..20])
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let norm: f32 = x[..20].iter().map(|v| v * v).sum();
+        assert!(err / norm < 0.6, "rel err {}", err / norm);
+    }
+
+    #[test]
+    fn low_rank_codec_unbound_fallback_and_corrupt_frames() {
+        let dim = 96; // cols = 10, rows = 10, 4 coords of padding
+        let x = randn(dim, 60);
+        let mut codec = LowRankCodec::new(2, 1);
+        let c = codec_ctx(dim, 0);
+        let f = codec.encode(&x, &c);
+        assert_eq!(f.wire_bytes(), 2 * (10 + 10) * 4);
+        // Two fresh instances produce identical frames (shared-seed
+        // warm start) and identical decodes.
+        let f2 = LowRankCodec::new(2, 1).encode(&x, &c);
+        assert_eq!(f, f2, "encode not deterministic");
+        let y = LowRankCodec::new(2, 1).decode(&f, &c).unwrap();
+        assert_eq!(y.len(), dim);
+        // Truncated frame -> typed length error, never a panic.
+        let mut bad = f.clone();
+        bad.bytes_mut().pop();
+        assert!(matches!(
+            LowRankCodec::new(2, 1).decode(&bad, &c),
+            Err(CodecError::Length { .. })
+        ));
     }
 }

@@ -20,8 +20,10 @@
 //! * [`CooVec`] — sparse COO vectors (the PJRT kernel interop format
 //!   and the `Msg::Sparse` payload), with checked accessors for decode
 //!   paths.
-//! * [`LowRankEdgeState`] (in `low_rank.rs`) — the PowerGossip
-//!   primitive.
+//! * [`LowRankEdgeState`] / [`LowRankCodec`] (in `low_rank.rs`) — the
+//!   PowerGossip power-iteration primitive, and the same operator as a
+//!   first-class `low_rank:R[:iters]` edge codec (explicit p/q factor
+//!   frames, warm-started per-edge state).
 
 pub mod codec;
 pub mod coo;
@@ -32,7 +34,7 @@ pub use codec::{
     Frame, WireMode,
 };
 pub use coo::CooVec;
-pub use low_rank::{power_iteration_step, LowRankEdgeState};
+pub use low_rank::{power_iteration_step, LowRankCodec, LowRankEdgeState};
 
 use crate::util::rng::Pcg;
 

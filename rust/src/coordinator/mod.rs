@@ -130,6 +130,16 @@ pub struct Report {
     pub wallclock_secs: f64,
 }
 
+impl Report {
+    /// The simulated clock, or a typed error for threaded runs — for
+    /// callers that require a virtual time instead of unwrapping the
+    /// `Option` (drivers print `—` for the missing case).
+    pub fn require_sim_time(&self) -> Result<f64, crate::metrics::MetricsError> {
+        self.sim_time_secs
+            .ok_or(crate::metrics::MetricsError::NoSimClock)
+    }
+}
+
 /// Derived round/eval structure for a spec against a dataset config.
 fn build_schedule(spec: &ExperimentSpec, train_per_node: usize,
                   batch: usize) -> Result<Schedule> {
@@ -619,14 +629,16 @@ mod tests {
         assert_eq!(a.max_staleness, b.max_staleness);
         assert!(a.max_staleness <= 2, "bound violated: {}", a.max_staleness);
         assert!(a.final_accuracy.is_finite());
-        // PowerGossip cannot run async — a typed construction error,
-        // not a deadlock.
+        // PowerGossip runs async too (conversation counters — PR 3
+        // pinned a typed rejection here) and honors the same bound.
         let pg = ExperimentSpec {
             algorithm: AlgorithmSpec::PowerGossip { iters: 2 },
             ..spec.clone()
         };
-        let err = run_simulated_native(&pg, &graph).err().unwrap();
-        assert!(err.to_string().contains("Sync"), "{err}");
+        let r = run_simulated_native(&pg, &graph).unwrap();
+        assert!(r.max_staleness <= 2, "PG bound violated: {}", r.max_staleness);
+        assert!(r.final_accuracy.is_finite());
+        assert!(r.total_bytes > 0);
     }
 
     #[test]

@@ -34,7 +34,9 @@ pub fn run_naive_ablation(
     // Convex part.
     let graph = Graph::ring(8);
     let net = QuadraticNetwork::random(8, 24, 40, 0.5, 0.5, sizing.seed);
-    let alpha = net.best_alpha(&graph);
+    let alpha = net
+        .best_alpha(&graph)
+        .ok_or_else(|| anyhow::anyhow!("ablation needs a non-empty graph"))?;
     for (rule, name) in [
         (DualRule::CompressDiff, "Eq.13 comp(y-z)"),
         (DualRule::CompressY, "Eq.11 comp(y)"),

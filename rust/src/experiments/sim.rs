@@ -68,6 +68,9 @@ pub fn sim_methods() -> Vec<AlgorithmSpec> {
         cecl_codec(CodecSpec::TopK { k_frac: 0.10 }),
         cecl_codec(CodecSpec::Qsgd { bits: 4 }),
         cecl_codec(CodecSpec::SignNorm),
+        // PowerGossip's compressor on the C-ECL wire — byte-identical
+        // per neighbor per round to the PowerGossip(4) row above.
+        cecl_codec(CodecSpec::LowRank { rank: 4, iters: 1 }),
         cecl_codec(CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK {
             k_frac: 0.10,
         }))),
@@ -87,9 +90,11 @@ pub fn policy_ladder(sizing: &Sizing) -> Vec<RoundPolicy> {
 
 /// Run the time-to-accuracy table on a ring. `target_acc` picks the
 /// accuracy threshold the "t2a" column reports; `policies` is the
-/// round-policy sweep (see [`policy_ladder`]).  Methods that cannot
-/// run a policy (PowerGossip × async) are skipped rather than failing
-/// the whole table.
+/// round-policy sweep (see [`policy_ladder`]).  A method that cannot
+/// run a policy is skipped rather than failing the whole table (no
+/// current method is — PowerGossip joined the async contract via
+/// per-edge conversation counters); rows that never reach the target
+/// print `—` in the t2a column instead of aborting the sweep.
 pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
                      policies: &[RoundPolicy])
                      -> Result<(Table, Vec<Report>)> {
@@ -137,17 +142,25 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
                               link.name(), policy.name());
                 }
                 let report = run_simulated_native(&spec, &graph)?;
+                // A run that never reached the target (straggler-heavy
+                // lossy rows genuinely may not) prints `—` instead of
+                // aborting the sweep — same for a missing virtual
+                // clock.
                 let t2a = report
                     .history
                     .time_to_accuracy(target_acc)
                     .map(|(_, t)| format!("{t:.2}s"))
-                    .unwrap_or_else(|| "-".to_string());
+                    .unwrap_or_else(|| "—".to_string());
+                let sim_secs = report
+                    .sim_time_secs
+                    .map(|t| format!("{t:.2}"))
+                    .unwrap_or_else(|| "—".to_string());
                 table.row([
                     report.algorithm.clone(),
                     link.name(),
                     policy.name(),
                     format!("{:.3}", report.final_accuracy),
-                    format!("{:.2}", report.sim_time_secs.unwrap_or(0.0)),
+                    sim_secs,
                     t2a,
                     format!("{}", report.max_staleness),
                     format!("{:.0}", report.mean_bytes_per_epoch / 1024.0),
@@ -202,10 +215,11 @@ mod tests {
         assert!(rendered.contains("C-ECL"));
         assert!(rendered.contains("ideal"));
         assert!(rendered.contains("sync"));
-        // The codec ladder is present: ≥ 4 codecs including a
-        // quantizer and an error-feedback variant.
+        // The codec ladder is present: ≥ 5 codecs including a
+        // quantizer, the low-rank (PowerGossip) compressor, and an
+        // error-feedback variant.
         for row in ["rand_k 10%", "top_k 10%", "qsgd 4b", "sign",
-                    "ef+top_k 10%"] {
+                    "low_rank r4", "ef+top_k 10%"] {
             assert!(rendered.contains(row), "missing codec row `{row}`");
         }
         // Every report carries a virtual clock; sync rows never lag.
@@ -230,7 +244,7 @@ mod tests {
     }
 
     #[test]
-    fn async_policy_ladder_sweeps_sync_baseline_and_skips_powergossip() {
+    fn async_policy_ladder_sweeps_sync_baseline_including_powergossip() {
         let sizing = Sizing {
             rounds: RoundPolicy::Async { max_staleness: 2 },
             ..tiny_sizing()
@@ -243,19 +257,44 @@ mod tests {
         let (table, reports) =
             run_sim_table(&sizing, &SimConfig::default(), 0.99, &policies)
                 .unwrap();
-        // Every method runs sync; every method but PowerGossip also
-        // runs async.
+        // Every method runs BOTH policies — PowerGossip included, now
+        // that its conversation counters support async rounds.
         assert_eq!(
             reports.len(),
-            (2 * sim_methods().len() - 1) * link_ladder().len()
+            2 * sim_methods().len() * link_ladder().len()
         );
         let rendered = table.render();
         assert!(rendered.contains("async:2"));
+        // The PowerGossip row exists on the async sweep.
+        assert!(
+            reports.iter().any(|r| r.algorithm.contains("PowerGossip")
+                && r.sim_time_secs.is_some()),
+            "PowerGossip rows must not be skipped"
+        );
         assert!(reports.iter().all(|r| r.max_staleness <= 2));
     }
 
     #[test]
-    fn async_beats_sync_under_a_straggler() {
+    fn unreached_target_prints_em_dash_not_panic() {
+        // A target no tiny run can reach: every t2a cell must render
+        // `—` and the sweep must complete instead of unwrap-aborting.
+        let sizing = tiny_sizing();
+        let (table, reports) = run_sim_table(&sizing, &SimConfig::default(),
+                                             2.0, &policy_ladder(&sizing))
+            .unwrap();
+        assert!(!reports.is_empty());
+        let rendered = table.render();
+        assert!(rendered.contains("—"), "unreached targets must print —");
+        // And the typed path reports the miss with the best accuracy.
+        let err = reports[0]
+            .history
+            .require_time_to_accuracy(2.0)
+            .unwrap_err();
+        assert!(err.to_string().contains("never reached"), "{err}");
+    }
+
+    #[test]
+    fn async_beats_sync_under_a_straggler() -> anyhow::Result<()> {
         // The acceptance scenario in miniature: a ring with one 8×
         // straggler (16 ms rounds vs 2 ms) on a latency-dominated link
         // (30 ms).  Sync couples every round into a compute+round-trip
@@ -288,23 +327,24 @@ mod tests {
                 rounds,
                 ..sizing.spec_base("tiny", Partition::Homogeneous)
             };
-            run_simulated_native(&spec, &Graph::ring(8)).unwrap()
+            run_simulated_native(&spec, &Graph::ring(8))
         };
-        let sync = run(RoundPolicy::Sync);
-        let async_ = run(RoundPolicy::Async { max_staleness: 2 });
+        let sync = run(RoundPolicy::Sync)?;
+        let async_ = run(RoundPolicy::Async { max_staleness: 2 })?;
         assert_eq!(sync.max_staleness, 0);
         assert!(async_.max_staleness >= 1, "straggler edges must lag");
         assert!(async_.max_staleness <= 2, "bound violated");
         // Same traffic, strictly less simulated time end-to-end AND to
-        // the (trivially reachable) accuracy target.
+        // the (trivially reachable) accuracy target — extracted through
+        // the typed accessors, not `.unwrap()` (the exact panics a
+        // straggler-heavy sweep used to abort on).
         assert_eq!(sync.total_bytes, async_.total_bytes);
-        let (ts, ta) = (
-            sync.sim_time_secs.unwrap(),
-            async_.sim_time_secs.unwrap(),
-        );
+        let ts = sync.require_sim_time()?;
+        let ta = async_.require_sim_time()?;
         assert!(ta < ts, "async {ta}s !< sync {ts}s");
-        let t2a_s = sync.history.time_to_accuracy(0.0).unwrap().1;
-        let t2a_a = async_.history.time_to_accuracy(0.0).unwrap().1;
+        let (_, t2a_s) = sync.history.require_time_to_accuracy(0.0)?;
+        let (_, t2a_a) = async_.history.require_time_to_accuracy(0.0)?;
         assert!(t2a_a < t2a_s, "t2a async {t2a_a}s !< sync {t2a_s}s");
+        Ok(())
     }
 }

@@ -47,8 +47,12 @@ pub fn run_theory(cfg: &TheoryConfig) -> Result<(Table, Table)> {
     let net = QuadraticNetwork::random(
         cfg.nodes, cfg.dim, cfg.rows, cfg.ridge, cfg.hetero, cfg.seed,
     );
-    let alpha = net.best_alpha(&graph);
-    let delta = net.delta(alpha, &graph);
+    let alpha = net
+        .best_alpha(&graph)
+        .ok_or_else(|| anyhow::anyhow!("theory needs a non-empty graph"))?;
+    let delta = net
+        .delta(alpha, &graph)
+        .ok_or_else(|| anyhow::anyhow!("theory needs a non-empty graph"))?;
     let threshold = tau_threshold(delta);
     println!(
         "quadratic network: L={:.3} mu={:.3} alpha*={:.4} delta={:.4} \

@@ -130,7 +130,9 @@ impl Graph {
     /// rejected). Panics if not connected — decentralized learning
     /// assumes a connected G (paper §2.1 / Assumption 4).
     pub fn from_edges(n: usize, raw: &[(usize, usize)]) -> Graph {
-        assert!(n > 0, "empty graph");
+        // n == 0 builds the empty graph (degree queries return `None`,
+        // `is_connected` is false); the execution engines validate
+        // non-emptiness where they actually require it.
         let mut edges: Vec<(usize, usize)> = raw
             .iter()
             .map(|&(a, b)| {
@@ -156,7 +158,7 @@ impl Graph {
             edges,
             neighbors,
         };
-        assert!(g.is_connected(), "graph must be connected");
+        assert!(g.n == 0 || g.is_connected(), "graph must be connected");
         g
     }
 
@@ -261,14 +263,16 @@ impl Graph {
         self.neighbors[i].len()
     }
 
-    /// N_min of Theorem 1.
-    pub fn min_degree(&self) -> usize {
-        (0..self.n).map(|i| self.degree(i)).min().unwrap()
+    /// N_min of Theorem 1.  `None` on an empty graph (there is no
+    /// minimum over zero nodes — callers decide, instead of a panic
+    /// deep inside a sweep).
+    pub fn min_degree(&self) -> Option<usize> {
+        (0..self.n).map(|i| self.degree(i)).min()
     }
 
-    /// N_max of Theorem 1.
-    pub fn max_degree(&self) -> usize {
-        (0..self.n).map(|i| self.degree(i)).max().unwrap()
+    /// N_max of Theorem 1.  `None` on an empty graph.
+    pub fn max_degree(&self) -> Option<usize> {
+        (0..self.n).map(|i| self.degree(i)).max()
     }
 
     /// Index of edge `(i, j)` in the canonical list.
@@ -332,8 +336,8 @@ impl Graph {
             "{} nodes, {} edges, degree [{}, {}]\n",
             self.n,
             self.edges.len(),
-            self.min_degree(),
-            self.max_degree()
+            self.min_degree().unwrap_or(0),
+            self.max_degree().unwrap_or(0)
         ));
         out.push_str("    ");
         for j in 0..self.n {
@@ -368,22 +372,31 @@ mod tests {
         // complete 7.
         let chain = Graph::chain(8);
         assert_eq!(chain.edges().len(), 7);
-        assert_eq!(chain.min_degree(), 1);
-        assert_eq!(chain.max_degree(), 2);
+        assert_eq!(chain.min_degree(), Some(1));
+        assert_eq!(chain.max_degree(), Some(2));
 
         let ring = Graph::ring(8);
         assert_eq!(ring.edges().len(), 8);
-        assert_eq!(ring.min_degree(), 2);
-        assert_eq!(ring.max_degree(), 2);
+        assert_eq!(ring.min_degree(), Some(2));
+        assert_eq!(ring.max_degree(), Some(2));
 
         let mring = Graph::multiplex_ring(8);
         assert_eq!(mring.edges().len(), 16);
-        assert_eq!(mring.min_degree(), 4);
-        assert_eq!(mring.max_degree(), 4);
+        assert_eq!(mring.min_degree(), Some(4));
+        assert_eq!(mring.max_degree(), Some(4));
 
         let full = Graph::complete(8);
         assert_eq!(full.edges().len(), 28);
-        assert_eq!(full.min_degree(), 7);
+        assert_eq!(full.min_degree(), Some(7));
+    }
+
+    #[test]
+    fn empty_graph_degrees_are_none_not_panic() {
+        let g = Graph::from_edges(0, &[]);
+        assert_eq!(g.min_degree(), None);
+        assert_eq!(g.max_degree(), None);
+        // The ASCII rendering degrades gracefully too.
+        assert!(g.ascii_viz().contains("0 nodes"));
     }
 
     #[test]

@@ -88,8 +88,14 @@
 //! ```
 //!
 //! C-ECL over any edge codec (CLI: `--codec qsgd:4`; codecs that are
-//! not linear for fixed ω — top-k, quantizers, error feedback — run
-//! the Eq. (11) dual rule automatically):
+//! not linear for fixed ω — top-k, quantizers, low-rank, error
+//! feedback — run the Eq. (11) dual rule automatically).  The
+//! `low_rank:R[:iters]` codec is PowerGossip's compressor on the C-ECL
+//! wire: rank-R power-iteration factors per layer matrix (`R` explicit
+//! `(p, q)` pairs, deflated greedily, warm-started per edge from the
+//! shared seed; `iters` refinement steps per rank, default 1), rank-1
+//! tensors dense — byte-identical per neighbor per round to sync
+//! `powergossip:R`, pinned by tests:
 //!
 //! ```no_run
 //! use cecl::prelude::*;
@@ -127,8 +133,22 @@
 //!   dual it has per neighbor (stale-dual C-ECL), D-PSGD averages the
 //!   freshest parameters.  The bound is enforced in-protocol
 //!   (`round_end` errors on a violation) and reported as
-//!   [`coordinator::Report::max_staleness`].  PowerGossip's interactive
-//!   multi-phase pipeline is sync-only.
+//!   [`coordinator::Report::max_staleness`].
+//!
+//! **PowerGossip's conversation-counter contract.**  PowerGossip's
+//! interactive multi-phase pipeline runs async through per-edge
+//! *conversation counters*: conversation `c` on an edge is the exchange
+//! both endpoints start at their own local round `c` (one start per
+//! edge per round, so the counters agree at both ends by construction,
+//! with no negotiation traffic), and every piece of derived randomness
+//! — the degenerate-collapse q̂ reseed — keys off that counter, never
+//! off a message's round stamp.  A conversation that straddles rounds
+//! keeps running while the node steps; its rank-1 correction is parked
+//! and applied at the node's next `round_end` (deferred application),
+//! where the staleness bound is enforced on the per-edge conversation
+//! clock exactly like C-ECL's dual clock.  Under sync the counter
+//! equals the round and the trajectory is bit-identical to the legacy
+//! schedule (pinned by tests).
 //!
 //! ```no_run
 //! use cecl::prelude::*;
@@ -151,8 +171,8 @@
 //!
 //! | module | contents |
 //! |---|---|
-//! | [`compress`] | rand-k mask sampler, COO vectors, low-rank (PowerGossip) |
-//! | [`compress::codec`] | **edge codecs**: `EdgeCodec`/`Frame`/`EdgeCtx`/`CodecSpec`, identity / rand-k (explicit + values-only wire) / top-k / QSGD / sign / error feedback |
+//! | [`compress`] | rand-k mask sampler, COO vectors, low-rank (PowerGossip primitives + `low_rank` codec) |
+//! | [`compress::codec`] | **edge codecs**: `EdgeCodec`/`Frame`/`EdgeCtx`/`CodecSpec`, identity / rand-k (explicit + values-only wire) / top-k / QSGD / sign / low-rank / error feedback |
 //! | [`comm`] | `Msg` (dense / sparse / codec frame / scalar), byte meter, threaded bus |
 //! | [`algorithms`] | `NodeAlgorithm` + `NodeStateMachine` protocol drivers, `RoundPolicy` (sync / bounded-staleness async) |
 //! | [`coordinator`] | `ExperimentSpec` → `Report` on either engine |

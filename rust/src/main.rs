@@ -288,17 +288,34 @@ fn pick_algorithm(args: &Args, sizing: &Sizing,
     }
     let name = alg_name.unwrap_or_else(|| "cecl:0.1".to_string());
     let mut alg = AlgorithmSpec::parse(&name).ok_or_else(|| {
-        // A broken embedded codec spec deserves the codec parser's
-        // detailed error (offending token + grammar), not a generic
-        // "unknown algorithm".
+        // A broken embedded codec spec — or a degenerate numeric
+        // fraction (`cecl:0`, `cecl:1.5`) — deserves the codec
+        // parser's detailed error (offending token + grammar), not a
+        // generic "unknown algorithm".
         if let Some(arg) = name
             .strip_prefix("cecl:")
             .or_else(|| name.strip_prefix("c-ecl:"))
+            .or_else(|| name.strip_prefix("naive-cecl:"))
         {
-            if arg.parse::<f64>().is_err() {
-                if let Err(e) = cecl::compress::CodecSpec::parse(arg) {
+            if let Ok(k_frac) = arg.parse::<f64>() {
+                if let Err(e) =
+                    cecl::compress::CodecSpec::validate_k_fraction(k_frac)
+                {
                     return anyhow!("--algorithm {name}: {e}");
                 }
+            } else if let Err(e) = cecl::compress::CodecSpec::parse(arg) {
+                return anyhow!("--algorithm {name}: {e}");
+            }
+        }
+        if let Some(arg) = name
+            .strip_prefix("powergossip:")
+            .or_else(|| name.strip_prefix("pg:"))
+        {
+            if matches!(arg.parse::<usize>(), Ok(0)) {
+                return anyhow!(
+                    "--algorithm {name}: powergossip needs at least one \
+                     power iteration (grammar: powergossip:N with N >= 1)"
+                );
             }
         }
         anyhow!("unknown algorithm {name}")
@@ -407,15 +424,18 @@ commands:
 
 codec specs (--codec, also `--algorithm cecl:SPEC`):
   identity | rand_k:K | rand_k:K:values | top_k:K | qsgd:B | sign
-  | ef+<codec>         e.g. rand_k:0.1, qsgd:4, ef+top_k:0.01
-  (non-linear codecs — top_k/qsgd/sign/ef — run the Eq. 11 dual rule)
+  | low_rank:R[:iters] | ef+<codec>
+                   e.g. rand_k:0.1, qsgd:4, ef+top_k:0.01, low_rank:2
+  (non-linear codecs — top_k/qsgd/sign/low_rank/ef — run the Eq. 11
+  dual rule; low_rank:R is PowerGossip's compressor on the C-ECL wire,
+  byte-identical to powergossip:R per neighbor per round)
 
 round policies (--rounds, virtual-time engine only for async):
   sync             bulk-synchronous rounds (default; pre-async pinned
                    trajectory)
   async:S          per-edge clocks, gossip-style: a node steps once every
-                   edge has delivered a message at most S rounds stale
-                   (PowerGossip is sync-only)
+                   edge has delivered state at most S rounds stale
+                   (PowerGossip runs on per-edge conversation counters)
 
 common options:
   --dataset fashion|cifar   --epochs N        --nodes N

@@ -1,7 +1,39 @@
 //! Training metrics: per-epoch history, accuracy/loss aggregation, and
 //! the communication accounting surfaced in the paper's tables.
 
+use std::fmt;
+
 use crate::util::table::Table;
+
+/// Typed metric-extraction failure.  A run that never reached its
+/// accuracy target (a straggler-heavy lossy scenario genuinely may
+/// not) or that has no virtual clock is an *outcome*, not a reason to
+/// `unwrap`-abort a whole sweep — drivers print `—` for these, and
+/// code that requires the value gets a typed error to propagate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricsError {
+    /// `time_to_accuracy` never reached `target`; `best` is the best
+    /// accuracy the run did reach.
+    TargetNeverReached { target: f64, best: f64 },
+    /// The run has no simulated clock (threaded engine).
+    NoSimClock,
+}
+
+impl fmt::Display for MetricsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MetricsError::TargetNeverReached { target, best } => write!(
+                f,
+                "accuracy target {target:.3} never reached (best {best:.3})"
+            ),
+            MetricsError::NoSimClock => {
+                write!(f, "run has no simulated clock (threaded engine)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MetricsError {}
 
 /// One evaluation point in a run.
 #[derive(Debug, Clone, PartialEq)]
@@ -67,6 +99,20 @@ impl History {
             .iter()
             .find(|r| r.mean_accuracy >= target)
             .map(|r| (r.epoch, r.sim_time_secs))
+    }
+
+    /// [`History::time_to_accuracy`] for callers that *require* the
+    /// target to have been reached: a typed error (with the best
+    /// accuracy actually seen) instead of an `Option` to unwrap.
+    pub fn require_time_to_accuracy(
+        &self,
+        target: f64,
+    ) -> Result<(usize, f64), MetricsError> {
+        self.time_to_accuracy(target)
+            .ok_or(MetricsError::TargetNeverReached {
+                target,
+                best: self.best_accuracy(),
+            })
     }
 
     /// Accuracy series as (epoch, accuracy) pairs (Fig. 1 CSV payload).
@@ -162,6 +208,14 @@ mod tests {
         assert_eq!(h.time_to_accuracy(0.6), Some((20, 10.0)));
         assert_eq!(h.time_to_accuracy(0.4), Some((10, 5.0)));
         assert_eq!(h.time_to_accuracy(0.95), None);
+        // The checked form carries the target and the best accuracy.
+        assert_eq!(h.require_time_to_accuracy(0.6), Ok((20, 10.0)));
+        let err = h.require_time_to_accuracy(0.95).unwrap_err();
+        assert_eq!(
+            err,
+            MetricsError::TargetNeverReached { target: 0.95, best: 0.8 }
+        );
+        assert!(err.to_string().contains("never reached"), "{err}");
     }
 
     #[test]

@@ -114,16 +114,19 @@ impl QuadraticNetwork {
         }
     }
 
-    /// δ of Theorem 1 for a given α and graph degrees.
-    pub fn delta(&self, alpha: f64, graph: &Graph) -> f64 {
-        delta_of(alpha, self.l_smooth, self.mu,
-                 graph.max_degree() as f64, graph.min_degree() as f64)
+    /// δ of Theorem 1 for a given α and graph degrees.  `None` when the
+    /// graph has no degrees to speak of (empty graph).
+    pub fn delta(&self, alpha: f64, graph: &Graph) -> Option<f64> {
+        Some(delta_of(alpha, self.l_smooth, self.mu,
+                      graph.max_degree()? as f64,
+                      graph.min_degree()? as f64))
     }
 
     /// α minimizing δ (golden-section on log α; δ is unimodal in α).
-    pub fn best_alpha(&self, graph: &Graph) -> f64 {
-        let nmax = graph.max_degree() as f64;
-        let nmin = graph.min_degree() as f64;
+    /// `None` on an empty graph, like [`QuadraticNetwork::delta`].
+    pub fn best_alpha(&self, graph: &Graph) -> Option<f64> {
+        let nmax = graph.max_degree()? as f64;
+        let nmin = graph.min_degree()? as f64;
         let f = |ln_a: f64| delta_of(ln_a.exp(), self.l_smooth, self.mu, nmax, nmin);
         let (mut lo, mut hi) = ((self.mu / nmax / 10.0).ln(), (self.l_smooth / nmin * 10.0).ln());
         let phi = 0.5 * (3.0 - 5.0f64.sqrt());
@@ -136,7 +139,7 @@ impl QuadraticNetwork {
                 lo = a;
             }
         }
-        (0.5 * (lo + hi)).exp()
+        Some((0.5 * (lo + hi)).exp())
     }
 }
 
@@ -361,7 +364,7 @@ mod tests {
     fn delta_in_unit_interval() {
         let (net, graph) = net();
         for alpha in [0.01, 0.1, 1.0, 10.0] {
-            let d = net.delta(alpha, &graph);
+            let d = net.delta(alpha, &graph).expect("ring is non-empty");
             assert!((0.0..1.0).contains(&d), "alpha={alpha} delta={d}");
         }
     }
@@ -369,10 +372,10 @@ mod tests {
     #[test]
     fn best_alpha_beats_neighbors() {
         let (net, graph) = net();
-        let a = net.best_alpha(&graph);
-        let d = net.delta(a, &graph);
-        assert!(d <= net.delta(a * 2.0, &graph) + 1e-9);
-        assert!(d <= net.delta(a / 2.0, &graph) + 1e-9);
+        let a = net.best_alpha(&graph).expect("ring is non-empty");
+        let d = net.delta(a, &graph).unwrap();
+        assert!(d <= net.delta(a * 2.0, &graph).unwrap() + 1e-9);
+        assert!(d <= net.delta(a / 2.0, &graph).unwrap() + 1e-9);
     }
 
     #[test]
@@ -388,7 +391,7 @@ mod tests {
         // the qualitative claim (linear convergence) and *report* the
         // measured-vs-bound gap in `repro theory`.
         let (net, graph) = net();
-        let alpha = net.best_alpha(&graph);
+        let alpha = net.best_alpha(&graph).expect("ring is non-empty");
         let errors = run_cecl(&net, &graph, alpha, 1.0, 1.0, 120, 7,
                               DualRule::CompressDiff);
         let rate = empirical_rate(&errors[20..]);
@@ -409,8 +412,8 @@ mod tests {
     #[test]
     fn cecl_converges_within_theory_domain() {
         let (net, graph) = net();
-        let alpha = net.best_alpha(&graph);
-        let delta = net.delta(alpha, &graph);
+        let alpha = net.best_alpha(&graph).expect("ring is non-empty");
+        let delta = net.delta(alpha, &graph).unwrap();
         // Choose τ safely above the threshold; θ = 1 (Corollary 2).
         let tau = (tau_threshold(delta) + 1.0) / 2.0;
         let errors = run_cecl(&net, &graph, alpha, 1.0, tau, 250, 9,
@@ -431,7 +434,7 @@ mod tests {
         // Qualitative Theorem-1 shape: the measured rate degrades as τ
         // shrinks (more compression).
         let (net, graph) = net();
-        let alpha = net.best_alpha(&graph);
+        let alpha = net.best_alpha(&graph).expect("ring is non-empty");
         let r = |tau: f64| {
             let e = run_cecl(&net, &graph, alpha, 1.0, tau, 150, 21,
                              DualRule::CompressDiff);
@@ -450,8 +453,8 @@ mod tests {
         // at θ = 1 — that is pure arithmetic of the formula and must
         // hold exactly.
         let (net, graph) = net();
-        let alpha = net.best_alpha(&graph);
-        let delta = net.delta(alpha, &graph);
+        let alpha = net.best_alpha(&graph).expect("ring is non-empty");
+        let delta = net.delta(alpha, &graph).unwrap();
         let tau = (tau_threshold(delta) + 1.0) / 2.0;
         for theta in [0.3, 0.6, 0.8, 1.2, 1.4] {
             assert!(
@@ -488,7 +491,7 @@ mod tests {
         // §3.2: compressing y directly does not work — with the same
         // budget the Eq. (13) rule must end with (much) smaller error.
         let (net, graph) = net();
-        let alpha = net.best_alpha(&graph);
+        let alpha = net.best_alpha(&graph).expect("ring is non-empty");
         let e_diff = run_cecl(&net, &graph, alpha, 1.0, 0.5, 150, 13,
                               DualRule::CompressDiff);
         let e_y = run_cecl(&net, &graph, alpha, 1.0, 0.5, 150, 13,

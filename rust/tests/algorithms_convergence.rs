@@ -17,7 +17,7 @@ fn network(seed: u64) -> (QuadraticNetwork, Graph) {
 #[test]
 fn ecl_reaches_consensus_at_optimum() {
     let (net, graph) = network(1);
-    let alpha = net.best_alpha(&graph);
+    let alpha = net.best_alpha(&graph).expect("non-empty graph");
     let errors = run_cecl(&net, &graph, alpha, 1.0, 1.0, 300, 1,
                           DualRule::CompressDiff);
     assert!(
@@ -31,8 +31,8 @@ fn ecl_reaches_consensus_at_optimum() {
 fn cecl_converges_across_seeds_and_compressions() {
     for seed in [2, 3, 4] {
         let (net, graph) = network(seed);
-        let alpha = net.best_alpha(&graph);
-        let delta = net.delta(alpha, &graph);
+        let alpha = net.best_alpha(&graph).expect("non-empty graph");
+        let delta = net.delta(alpha, &graph).expect("non-empty graph");
         for k in [0.5, 0.8] {
             if k < tau_threshold(delta) {
                 continue;
@@ -51,7 +51,7 @@ fn cecl_converges_across_seeds_and_compressions() {
 #[test]
 fn compression_slows_but_does_not_break() {
     let (net, graph) = network(5);
-    let alpha = net.best_alpha(&graph);
+    let alpha = net.best_alpha(&graph).expect("non-empty graph");
     let rate_at = |k: f64| {
         let e = run_cecl(&net, &graph, alpha, 1.0, k, 200, 5,
                          DualRule::CompressDiff);
@@ -68,7 +68,7 @@ fn naive_rule_fails_where_cecl_succeeds() {
     // The §3.2 motivation: Eq. (11) stalls at a noise floor, Eq. (13)
     // drives the error to ~0.
     let (net, graph) = network(6);
-    let alpha = net.best_alpha(&graph);
+    let alpha = net.best_alpha(&graph).expect("non-empty graph");
     let diff = run_cecl(&net, &graph, alpha, 1.0, 0.5, 250, 6,
                         DualRule::CompressDiff);
     let naive = run_cecl(&net, &graph, alpha, 1.0, 0.5, 250, 6,
@@ -85,12 +85,12 @@ fn works_on_every_paper_topology() {
         Graph::multiplex_ring(8),
         Graph::complete(8),
     ] {
-        let alpha = net.best_alpha(&graph);
+        let alpha = net.best_alpha(&graph).expect("non-empty graph");
         let errors = run_cecl(&net, &graph, alpha, 1.0, 0.8, 250, 7,
                               DualRule::CompressDiff);
         assert!(
             errors.last().unwrap() < &(errors[0] * 1e-3),
-            "topology deg[{},{}]: final {:?}",
+            "topology deg[{:?},{:?}]: final {:?}",
             graph.min_degree(),
             graph.max_degree(),
             errors.last()
@@ -103,8 +103,8 @@ fn delta_and_domain_formulas_consistent() {
     // δ(α*) minimizes the two-branch max; the θ domain at the threshold
     // collapses onto a point near 1... (Lemma 6 arithmetic).
     let (net, graph) = network(8);
-    let alpha = net.best_alpha(&graph);
-    let delta = net.delta(alpha, &graph);
+    let alpha = net.best_alpha(&graph).expect("non-empty graph");
+    let delta = net.delta(alpha, &graph).expect("non-empty graph");
     assert!((0.0..1.0).contains(&delta));
     let thr = tau_threshold(delta);
     // Just above the threshold the domain exists and is tight around 1.
@@ -115,7 +115,8 @@ fn delta_and_domain_formulas_consistent() {
     assert!(lo2 <= lo && hi2 >= hi);
     // delta_of is continuous in alpha around alpha*.
     let d1 = delta_of(alpha * 1.001, net.l_smooth, net.mu,
-                      graph.max_degree() as f64, graph.min_degree() as f64);
+                      graph.max_degree().unwrap() as f64,
+                      graph.min_degree().unwrap() as f64);
     assert!((d1 - delta).abs() < 1e-2);
 }
 
@@ -167,7 +168,7 @@ fn heterogeneity_hurts_gossip_not_prox() {
         }
     }
     let gossip_err = linalg::norm2(&linalg::sub(&locals[0], &net.w_star));
-    let cecl_errors = run_cecl(&net, &graph, net.best_alpha(&graph), 1.0,
+    let cecl_errors = run_cecl(&net, &graph, net.best_alpha(&graph).expect("non-empty graph"), 1.0,
                                1.0, 300, 9, DualRule::CompressDiff);
     let prox_err = *cecl_errors.last().unwrap();
     assert!(

@@ -629,6 +629,139 @@ fn prop_async_staleness_never_exceeds_bound() {
     });
 }
 
+#[test]
+fn prop_powergossip_async_staleness_never_exceeds_bound() {
+    // PowerGossip's conversation counters under async rounds: across
+    // random staleness budgets, iteration counts, stragglers, and link
+    // latencies, the run must complete every round without deadlock
+    // (multi-phase conversations straddling rounds and all) and the
+    // per-edge conversation clock must never lag past the budget.
+    // Message counts are NOT one-per-edge-per-round here — PowerGossip
+    // is multi-phase and trailing conversations may be abandoned at
+    // shutdown — so only the bound and liveness are asserted.
+    use cecl::sim::{simulate, NodeSetup, NullLocal, Schedule, SimConfig};
+
+    check("pg-async-staleness-bound", 10, 4, |ctx: &mut Ctx| {
+        let s = 1 + ctx.rng.below(3); // staleness budget 1..=3
+        let n = 4 + (ctx.size % 3); // ring of 4..=6 nodes
+        let rounds = 5 + ctx.rng.below(4);
+        let seed = ctx.rng.next_u64();
+        let policy = RoundPolicy::Async { max_staleness: s };
+        let graph = Arc::new(Graph::ring(n));
+        let alg = AlgorithmSpec::PowerGossip {
+            iters: 1 + ctx.rng.below(2),
+        };
+        let manifest = sm_manifest((2, 2, 1), 3);
+        let ws: Vec<Vec<f32>> =
+            (0..n).map(|_| ctx.vec_f32(manifest.d_pad)).collect();
+        let setups: Vec<NodeSetup> = ws
+            .into_iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let mut bctx = sm_ctx(i, &graph, seed, manifest.clone());
+                bctx.round_policy = policy;
+                NodeSetup {
+                    machine: build_machine(&alg, &bctx).unwrap(),
+                    local: Box::new(NullLocal),
+                    w,
+                }
+            })
+            .collect();
+        let cfg = SimConfig {
+            link: cecl::sim::LinkSpec::Constant {
+                latency_us: 200 + ctx.rng.below(4_000) as u64,
+            },
+            compute_ns_per_step: 500_000,
+            stragglers: vec![(ctx.rng.below(n), 1.0 + 7.0 * ctx.rng.f64())],
+            ..SimConfig::default()
+        };
+        let sched = Schedule::new(rounds, 1, 2, rounds);
+        let out = simulate(&graph, &cfg, seed, &sched, setups, policy, false)
+            .map_err(|e| format!("async PowerGossip sim failed: {e}"))?;
+        prop_assert!(
+            out.max_staleness <= s,
+            "conversation lag {} exceeds budget {s} (n={n}, \
+             rounds={rounds}, alg={})",
+            out.max_staleness,
+            alg.name()
+        );
+        prop_assert!(
+            out.meter.total_bytes() > 0,
+            "PowerGossip sent no traffic"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_low_rank_codec_roundtrips_within_rank_error() {
+    // `low_rank:R` on an exactly rank-R matrix: with at least one
+    // power-iteration refinement per rank, every shipped q factor lies
+    // in the residual's row space, so R greedy deflation steps project
+    // the whole row space away — encode→decode reconstructs the input
+    // to f32 rounding, for any rank/shape/seed.  The wire size is the
+    // PowerGossip formula `R·(rows+cols)·4` exactly.
+    use cecl::compress::{EdgeCodec, EdgeCtx, LowRankCodec};
+
+    check("low-rank-roundtrip", 14, 8, |ctx: &mut Ctx| {
+        let rank = 1 + ctx.rng.below(3);
+        let rows = 4 + ctx.rng.below(12);
+        let cols = 3 + ctx.rng.below(9);
+        let dim = rows * cols;
+        // Exactly rank-R input: sum of R random outer products.
+        let mut m = vec![0.0f32; dim];
+        for _ in 0..rank {
+            let sigma = (0.5 + 4.0 * ctx.rng.f64()) as f32;
+            let u: Vec<f32> =
+                (0..rows).map(|_| ctx.rng.normal_f32()).collect();
+            let v: Vec<f32> =
+                (0..cols).map(|_| ctx.rng.normal_f32()).collect();
+            for r in 0..rows {
+                for c in 0..cols {
+                    m[r * cols + c] += sigma * u[r] * v[c];
+                }
+            }
+        }
+        let norm: f32 = m.iter().map(|x| x * x).sum();
+        if norm < 1e-6 {
+            return Ok(()); // degenerate draw, nothing to measure
+        }
+        let seed = ctx.rng.next_u64();
+        let mut codec = LowRankCodec::new(rank, 2);
+        codec.bind_layout(&[(0, rows, cols)], &[]);
+        let mut rel = f32::MAX;
+        for round in 0..3 {
+            let ectx = EdgeCtx {
+                seed,
+                edge: 1,
+                round,
+                receiver: 0,
+                dim,
+            };
+            let frame = codec.encode(&m, &ectx);
+            prop_assert!(
+                frame.wire_bytes() == rank * (rows + cols) * 4,
+                "rank {rank} ({rows}x{cols}): {} wire bytes",
+                frame.wire_bytes()
+            );
+            let y = codec
+                .decode(&frame, &ectx)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            let err: f32 = y
+                .iter()
+                .zip(&m)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            rel = err / norm;
+        }
+        prop_assert!(
+            rel < 1e-2,
+            "rank-{rank} ({rows}x{cols}): rel err {rel} after warm start"
+        );
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------
 // Graph invariants
 // ---------------------------------------------------------------------

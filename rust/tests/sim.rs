@@ -178,7 +178,8 @@ fn every_codec_meters_identical_first_copy_bytes_on_both_engines() {
     // frames are serialized once and measured, never inferred.
     let graph = Arc::new(Graph::ring(5));
     for spec in ["identity", "rand_k:0.1", "rand_k:0.1:values", "top_k:0.1",
-                 "qsgd:4", "sign", "ef+top_k:0.1"] {
+                 "qsgd:4", "sign", "low_rank:2", "ef+top_k:0.1",
+                 "ef+low_rank:2"] {
         let alg = cecl_codec(spec);
         let (bytes_t, msgs_t) = threaded_bytes(&alg, &graph, 31, 3);
         let (bytes_s, msgs_s, retrans) =
@@ -677,5 +678,96 @@ fn compression_wins_virtual_time_on_slow_links() {
         "C-ECL {}s vs ECL {}s",
         cecl.sim_time_secs.unwrap(),
         ecl.sim_time_secs.unwrap()
+    );
+}
+
+#[test]
+fn low_rank_codec_meters_powergossip_bytes_end_to_end() {
+    // Acceptance pin: `--codec low_rank:2` meters exactly the bytes of
+    // sync PowerGossip at rank 2 — same graph, same schedule, so equal
+    // per-round-per-neighbor wire cost means equal totals.
+    let graph = Graph::ring(6);
+    let run = |alg: AlgorithmSpec| {
+        let spec = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: alg,
+            epochs: 2,
+            nodes: 6,
+            train_per_node: 20,
+            test_size: 20,
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 2,
+            seed: 55,
+            exec: ExecMode::Simulated(SimConfig::default()),
+            ..Default::default()
+        };
+        run_simulated_native(&spec, &graph).unwrap()
+    };
+    let pg = run(AlgorithmSpec::PowerGossip { iters: 2 });
+    let lr = run(cecl_codec("low_rank:2"));
+    assert!(pg.total_bytes > 0, "PowerGossip sent nothing");
+    assert_eq!(
+        pg.total_bytes, lr.total_bytes,
+        "low_rank:2 must meter sync PowerGossip(2)'s bytes"
+    );
+    assert!(lr.final_accuracy.is_finite());
+}
+
+#[test]
+fn powergossip_async_rounds_complete_bounded_and_replay() {
+    // The tentpole: PowerGossip under `--rounds async:<s>` on the
+    // virtual-time engine.  One 6x straggler plus a slow edge forces
+    // conversations to straddle rounds; the run must complete, actually
+    // use (and never exceed) the staleness budget, replay
+    // bit-identically, and beat sync to the finish line.
+    let graph = Graph::ring(8);
+    let run = |rounds: RoundPolicy| {
+        let spec = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: AlgorithmSpec::PowerGossip { iters: 2 },
+            epochs: 4,
+            nodes: 8,
+            train_per_node: 40,
+            test_size: 40,
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 4,
+            seed: 13,
+            exec: ExecMode::Simulated(SimConfig {
+                link: LinkSpec::Constant { latency_us: 10_000 },
+                edge_links: vec![(2, LinkSpec::Constant {
+                    latency_us: 40_000,
+                })],
+                compute_ns_per_step: 4_000_000,
+                stragglers: vec![(5, 6.0)],
+                ..SimConfig::default()
+            }),
+            rounds,
+            ..Default::default()
+        };
+        run_simulated_native(&spec, &graph).unwrap()
+    };
+    let sync = run(RoundPolicy::Sync);
+    assert_eq!(sync.max_staleness, 0, "sync PowerGossip must never lag");
+    let policy = RoundPolicy::Async { max_staleness: 2 };
+    let a = run(policy);
+    let b = run(policy);
+    assert!(a.max_staleness >= 1,
+            "straggler/slow-edge conversations must actually straddle");
+    assert!(a.max_staleness <= 2, "staleness bound violated");
+    assert!(a.final_accuracy.is_finite());
+    assert!(a.total_bytes > 0);
+    // Deterministic replay, bit for bit.
+    assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+    assert_eq!(a.total_bytes, b.total_bytes);
+    assert_eq!(a.sim_time_secs, b.sim_time_secs);
+    assert_eq!(a.max_staleness, b.max_staleness);
+    // Async hides the straggler behind the staleness budget.
+    assert!(
+        a.sim_time_secs.unwrap() < sync.sim_time_secs.unwrap(),
+        "async PG {:?} !< sync PG {:?}",
+        a.sim_time_secs,
+        sync.sim_time_secs
     );
 }
