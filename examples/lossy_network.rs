@@ -26,11 +26,15 @@ fn main() -> anyhow::Result<()> {
     let nodes = 16;
     let graph = Graph::ring(nodes);
 
-    // One edge goes down for half a simulated second early in the run;
-    // node 3 computes at quarter speed throughout; edge 7 is a 10 ms
-    // outlier link (per-edge override) on an otherwise 1 ms network.
-    let mut outages = OutageSchedule::new();
-    outages.add(0, 100_000_000, 600_000_000);
+    // One edge suffers an OUTAGE (traffic held, state preserved) for
+    // half a simulated second early in the run, and a different edge
+    // CHURNS out (state torn down, in-flight frames dropped, re-add is
+    // a fresh edge epoch) for a window in the middle; node 3 computes
+    // at quarter speed throughout; edge 7 is a 10 ms outlier link
+    // (per-edge override) on an otherwise 1 ms network.
+    let mut churn = ChurnSchedule::new();
+    churn.add_outage(0, 100_000_000, 600_000_000);
+    churn.add_edge_down(3, 300_000_000, 900_000_000);
     let scenario = SimConfig {
         link: LinkSpec::Lossy {
             latency_us: 1_000,
@@ -47,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         )],
         compute_ns_per_step: 2_000_000, // 2 ms per local step
         stragglers: vec![(3, 4.0)],
-        outages,
+        churn,
         ..SimConfig::default()
     };
 
@@ -79,6 +83,8 @@ fn main() -> anyhow::Result<()> {
         "final acc",
         "sim time (s)",
         "max lag",
+        "churned",
+        "chdrops",
         "KB/node/epoch",
         "retrans KB",
     ]);
@@ -122,13 +128,15 @@ fn main() -> anyhow::Result<()> {
             format!("{:.3}", r.final_accuracy),
             format!("{:.2}", r.sim_time_secs.unwrap_or(0.0)),
             format!("{}", r.max_staleness),
+            format!("{}", r.edges_churned),
+            format!("{}", r.frames_dropped_by_churn),
             format!("{:.0}", r.mean_bytes_per_epoch / 1024.0),
             format!("{:.0}", r.retransmit_bytes as f64 / 1024.0),
         ]);
     }
     println!(
         "\nring({nodes}), lossy 20 Mbit/s / 1 ms / 5% drop, one 10 ms edge, \
-         straggler x4, one edge down 0.1s-0.6s:\n"
+         straggler x4, one outage 0.1s-0.6s, one churned edge 0.3s-0.9s:\n"
     );
     println!("{}", t.render());
     println!(

@@ -85,7 +85,14 @@ fn main() {
     });
 
     // ---- edge codecs: encode + decode (the codec wire hot path) ---------
-    let ctx = EdgeCtx { seed: 7, edge: 0, round: 0, receiver: 1, dim: d };
+    let ctx = EdgeCtx {
+        seed: 7,
+        edge: 0,
+        round: 0,
+        receiver: 1,
+        dim: d,
+        epoch: 0,
+    };
     for spec_str in ["rand_k:0.1", "rand_k:0.1:values", "top_k:0.1",
                      "qsgd:4", "sign", "ef+top_k:0.1"] {
         let spec = CodecSpec::parse(spec_str).expect("bench codec spec");

@@ -10,7 +10,7 @@
 use cecl::algorithms::{AlgorithmSpec, RoundPolicy};
 use cecl::compress::CodecSpec;
 use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
-use cecl::graph::Graph;
+use cecl::graph::{ChurnSchedule, Graph};
 use cecl::sim::{LinkSpec, SimConfig};
 use cecl::util::bench::BenchSet;
 use cecl::util::table::Table;
@@ -181,6 +181,69 @@ fn main() {
     set.report();
     println!(
         "\nring(64), C-ECL(10%), one 8x straggler, constant 10 ms links:\n{}",
+        t.render()
+    );
+
+    // Churn-scheduler overhead: the static path (no churn events, one
+    // version compare per callback) vs `random:0.05` edge churn on a
+    // ring(64) — wall-clock cost of the first-class churn events plus
+    // the protocol cost the counters surface.
+    let mut set = BenchSet::new(
+        "sim_scale — churn events vs static path, ring(64), C-ECL(10%)",
+    );
+    let mut t = Table::new([
+        "schedule", "final acc", "sim secs", "churned", "chdrops",
+        "KB/node/epoch",
+    ]);
+    let graph = Graph::ring(64);
+    for churny in [false, true] {
+        let mut s = spec(
+            64,
+            4,
+            LinkSpec::Bandwidth { latency_us: 200, mbit_per_sec: 100.0 },
+        );
+        let mut churn = ChurnSchedule::new();
+        if churny {
+            churn.random_edge_churn_with_slot(0.05, 11, 1_000_000);
+        }
+        let label = churn.label();
+        s.exec = ExecMode::Simulated(SimConfig {
+            link: LinkSpec::Bandwidth { latency_us: 200, mbit_per_sec: 100.0 },
+            churn,
+            ..SimConfig::default()
+        });
+        let mut last = None;
+        set.bench_throughput(
+            &format!("schedule {label}"),
+            1,
+            3,
+            8.0 * 64.0,
+            "node-round",
+            || {
+                let r = run_simulated_native(&s, &graph).expect("sim run");
+                last = Some((
+                    r.final_accuracy,
+                    r.sim_time_secs.unwrap_or(0.0),
+                    r.edges_churned,
+                    r.frames_dropped_by_churn,
+                    r.mean_bytes_per_epoch,
+                ));
+            },
+        );
+        let (acc, secs, churned, drops, kb) = last.expect("one run");
+        t.row([
+            label,
+            format!("{acc:.3}"),
+            format!("{secs:.3}"),
+            if churny { format!("{churned}") } else { "—".into() },
+            if churny { format!("{drops}") } else { "—".into() },
+            format!("{:.0}", kb / 1024.0),
+        ]);
+    }
+    set.report();
+    println!(
+        "\nring(64), C-ECL(10%), static vs random:0.05 edge churn \
+         (1 ms slots):\n{}",
         t.render()
     );
 

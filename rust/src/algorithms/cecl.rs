@@ -64,11 +64,11 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::comm::{Msg, NodeComm, Outbox};
 use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx, RandK, WireMode};
-use crate::graph::Graph;
+use crate::graph::{Graph, TopologyView};
 use crate::runtime::{native, ModelRuntime};
 
-use super::{paper_alpha, BuildCtx, NodeAlgorithm, NodeStateMachine,
-            RoundPolicy};
+use super::{paper_alpha, BuildCtx, EdgeClock, NodeAlgorithm,
+            NodeStateMachine, RoundPolicy};
 
 /// Which implementation executes the fused dual update.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -108,16 +108,32 @@ pub struct CEclNode {
     dual_path: DualPath,
     runtime: Option<Arc<ModelRuntime>>,
     /// Dual state, one vector per neighbor slot (sorted neighbor order).
+    /// Dead slots are retired to zero until their edge is reborn.
     z: Vec<Vec<f32>>,
-    /// Cached `Σ_j A_{i|j} z_{i|j}`.
+    /// Cached `Σ_j A_{i|j} z_{i|j}` over live edges.
     zsum: Vec<f32>,
     /// Sync vs bounded-staleness async rounds.
     policy: RoundPolicy,
     /// The node's own round clock (set by `round_begin`).
     cur_round: usize,
-    /// Per-edge clock: round stamp of the freshest dual applied per
-    /// neighbor slot (−1 = nothing received yet).
-    edge_round: Vec<i64>,
+    /// Per-edge clocks: freshest dual stamp, liveness, activation.
+    clocks: Vec<EdgeClock>,
+    /// Cached edge incarnation per neighbor slot — a view epoch ahead
+    /// of this triggers the birth lifecycle (fresh codec, warm-started
+    /// dual).
+    edge_epochs: Vec<u32>,
+    /// Last `TopologyView::version` synced against (0 = static full).
+    seen_view: u64,
+    /// Matrix/vector layout views, kept for rebinding freshly built
+    /// codecs on edge birth.
+    mats: Vec<(usize, usize, usize)>,
+    vecs: Vec<(usize, usize)>,
+    /// Currently-live degree (scales `alpha_deg` — Eq. 46's α|N_i|
+    /// with the *current* N_i).
+    live_deg: usize,
+    /// Cached static full view for the (epoch-constant) blocking
+    /// engine — built once instead of per exchange round.
+    full_view: Arc<TopologyView>,
     /// Largest per-edge lag consumed at any `round_end`.
     max_lag_seen: usize,
     /// A dense payload rewrote `z` wholesale since the last `round_end`
@@ -184,7 +200,15 @@ impl CEclNode {
             zsum: vec![0.0; d_pad],
             policy: ctx.round_policy,
             cur_round: 0,
-            edge_round: vec![-1; degree],
+            clocks: vec![EdgeClock::born(0); degree],
+            edge_epochs: vec![0; degree],
+            seen_view: 0,
+            mats,
+            vecs,
+            live_deg: degree,
+            full_view: Arc::new(TopologyView::full(
+                ctx.graph.edges().len(),
+            )),
             max_lag_seen: 0,
             zsum_dirty: false,
             scratch_y: Vec::with_capacity(d_pad),
@@ -194,16 +218,96 @@ impl CEclNode {
         })
     }
 
+    /// Per-edge lifecycle sync against the engine's topology view.
+    /// Static runs never get past the version compare.  On a fresh
+    /// incarnation (view epoch ahead of the cached one): allocate a new
+    /// codec instance (stale error-feedback residuals can never
+    /// resurrect) and warm-start the dual from the node's current
+    /// primal at the consensus fixed point `z_{i|j} = α A_{i|j} w_i` —
+    /// what keeps the Eq. 11 update sane on a mid-training edge birth.
+    /// On edge death: retire the dual (zero it out of `zsum`).
+    fn sync_view(&mut self, view: &TopologyView, w: &[f32]) -> Result<()> {
+        if view.version() == self.seen_view {
+            return Ok(());
+        }
+        self.seen_view = view.version();
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        let mut changed = false;
+        for (jj, &j) in neighbors.iter().enumerate() {
+            let e = self
+                .graph
+                .edge_index(self.node, j)
+                .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
+            let life = view.edge_life(e);
+            if life.epoch != self.edge_epochs[jj] {
+                // Birth of a fresh incarnation.
+                self.edge_epochs[jj] = life.epoch;
+                let mut codec = self.codec_spec.build();
+                codec.bind_layout(&self.mats, &self.vecs);
+                self.codecs[jj] = codec;
+                if life.live {
+                    // Warm-start from the current primal.
+                    let a = self.graph.edge_sign(self.node, j);
+                    let alpha = self.alpha;
+                    for (zv, &wv) in self.z[jj].iter_mut().zip(w.iter()) {
+                        *zv = alpha * a * wv;
+                    }
+                } else {
+                    // The incarnation is already dead again (several
+                    // transitions observed at once, e.g. by a direct
+                    // TopologyView user): a dead slot carries no dual.
+                    for zv in self.z[jj].iter_mut() {
+                        *zv = 0.0;
+                    }
+                }
+                let mut clock = EdgeClock::born(life.activation_round);
+                clock.live = life.live;
+                self.clocks[jj] = clock;
+                changed = true;
+            } else if life.live != self.clocks[jj].live {
+                self.clocks[jj].live = life.live;
+                if !life.live {
+                    // Typed teardown: the dual is retired with the
+                    // edge; rebirth rebuilds it from the then-current
+                    // primal under a new epoch.
+                    for zv in self.z[jj].iter_mut() {
+                        *zv = 0.0;
+                    }
+                }
+                changed = true;
+            }
+        }
+        if changed {
+            // The view's helper is the canonical live-degree query (its
+            // answer is pinned equal to the clocks' live count).
+            self.live_deg = view.live_degree(&self.graph, self.node);
+            debug_assert_eq!(
+                self.live_deg,
+                self.clocks.iter().filter(|c| c.live).count()
+            );
+            self.alpha_deg = self.alpha * self.live_deg as f32;
+            self.recompute_zsum();
+            self.zsum_dirty = false;
+        }
+        Ok(())
+    }
+
     /// Shared-seed context for messages received by `receiver` on
     /// `edge` at `round` — both endpoints construct it identically, so
     /// ω_{i|j} (what node i receives from j) is distinct from ω_{j|i}.
-    fn edge_ctx(&self, edge: usize, round: usize, receiver: usize) -> EdgeCtx {
+    /// `jj` is the neighbor slot: the context carries the slot's
+    /// current edge epoch, keeping derived streams in lockstep across a
+    /// remove/re-add (and bit-identical to the legacy derivation while
+    /// the epoch is 0).
+    fn edge_ctx(&self, jj: usize, edge: usize, round: usize,
+                receiver: usize) -> EdgeCtx {
         EdgeCtx {
             seed: self.seed,
             edge,
             round,
             receiver,
             dim: self.d_pad,
+            epoch: self.edge_epochs[jj],
         }
     }
 
@@ -264,7 +368,7 @@ impl CEclNode {
                 .graph
                 .edge_index(self.node, j)
                 .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
-            let ctx_e = self.edge_ctx(e, round, j);
+            let ctx_e = self.edge_ctx(jj, e, round, j);
             let mask_out = self.codecs[jj].sparse_support(&ctx_e).ok_or_else(
                 || anyhow!(
                     "DualPath::Pjrt requires a shared-seed mask codec \
@@ -299,7 +403,7 @@ impl CEclNode {
                 .graph
                 .edge_index(self.node, j)
                 .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
-            let ctx_e = self.edge_ctx(e, round, self.node);
+            let ctx_e = self.edge_ctx(jj, e, round, self.node);
             let codec = &mut self.codecs[jj];
             let ycomp = codec.decode(&frame, &ctx_e)?;
             let mask_in = codec
@@ -398,13 +502,17 @@ impl NodeStateMachine for CEclNode {
         Some(&self.zsum)
     }
 
-    fn round_begin(&mut self, round: usize, w: &mut [f32],
-                   out: &mut Outbox) -> Result<()> {
+    fn round_begin(&mut self, round: usize, view: &TopologyView,
+                   w: &mut [f32], out: &mut Outbox) -> Result<()> {
+        self.sync_view(view, w)?;
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
         self.cur_round = round;
         if self.is_dense_round(round) {
             // Line 4, dense wire: y_{i|j} = z_{i|j} − 2α a w.
             for (jj, &j) in neighbors.iter().enumerate() {
+                if !self.clocks[jj].active(round) {
+                    continue; // dead or not-yet-activated edge
+                }
                 let taa = 2.0 * self.alpha * self.graph.edge_sign(self.node, j);
                 let y: Vec<f32> = self.z[jj]
                     .iter()
@@ -420,12 +528,15 @@ impl NodeStateMachine for CEclNode {
             // coordinates only (`encode_from`); dense-input codecs
             // (quantizers) stage the full y in preallocated scratch.
             for (jj, &j) in neighbors.iter().enumerate() {
+                if !self.clocks[jj].active(round) {
+                    continue; // dead or not-yet-activated edge
+                }
                 let e = self
                     .graph
                     .edge_index(self.node, j)
                     .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
                 // ω_{j|i}: what j receives from us.
-                let ctx_e = self.edge_ctx(e, round, j);
+                let ctx_e = self.edge_ctx(jj, e, round, j);
                 let taa = 2.0 * self.alpha * self.graph.edge_sign(self.node, j);
                 let codec = &mut self.codecs[jj];
                 let z = &self.z[jj];
@@ -450,7 +561,9 @@ impl NodeStateMachine for CEclNode {
     }
 
     fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
-                  _w: &mut [f32], _out: &mut Outbox) -> Result<()> {
+                  view: &TopologyView, w: &mut [f32],
+                  _out: &mut Outbox) -> Result<()> {
+        self.sync_view(view, w)?;
         let jj = self
             .graph
             .neighbors(self.node)
@@ -459,8 +572,14 @@ impl NodeStateMachine for CEclNode {
             .ok_or_else(|| {
                 anyhow!("node {}: message from non-neighbor {from}", self.node)
             })?;
+        ensure!(
+            self.clocks[jj].live,
+            "node {}: message from {from} on a churned-out edge \
+             (the engine should have dropped it)",
+            self.node
+        );
         super::admit_message(self.policy, self.node, from, self.cur_round,
-                             self.edge_round[jj], msg_round)?;
+                             self.clocks[jj].round, msg_round)?;
         let theta = self.theta;
         // Every decode keys its shared-seed context off the SENDER's
         // round stamp, so a stale or ahead-of-us frame derives the
@@ -488,7 +607,7 @@ impl NodeStateMachine for CEclNode {
                 .ok_or_else(|| {
                     anyhow!("({}, {from}) is not an edge", self.node)
                 })?;
-            let ctx_e = self.edge_ctx(e, msg_round, self.node);
+            let ctx_e = self.edge_ctx(jj, e, msg_round, self.node);
             let a = self.graph.edge_sign(self.node, from);
             let codec = &mut self.codecs[jj];
             match self.rule {
@@ -554,20 +673,24 @@ impl NodeStateMachine for CEclNode {
                 }
             }
         }
-        self.edge_round[jj] = msg_round as i64;
+        self.clocks[jj].round = msg_round as i64;
+        self.clocks[jj].spoken = true;
         Ok(())
     }
 
     fn round_complete(&self) -> bool {
-        super::staleness_gate(self.policy, self.cur_round, &self.edge_round)
+        super::staleness_gate(self.policy, self.cur_round, &self.clocks)
     }
 
-    fn round_end(&mut self, round: usize, _w: &mut [f32]) -> Result<()> {
+    fn round_end(&mut self, round: usize, view: &TopologyView,
+                 w: &mut [f32]) -> Result<()> {
+        self.sync_view(view, w)?;
         // The staleness bound is a hard protocol invariant: finishing a
         // round with a dual older than `max_staleness` is an error, not
-        // a silent quality loss (the property tests pin this).
+        // a silent quality loss (the property tests pin this).  It is
+        // evaluated over currently-live edges only.
         let lag = super::check_staleness(self.policy, self.node, "dual",
-                                         round, &self.edge_round)?;
+                                         round, &self.clocks)?;
         self.max_lag_seen = self.max_lag_seen.max(lag);
         if self.zsum_dirty {
             self.recompute_zsum();
@@ -576,6 +699,11 @@ impl NodeStateMachine for CEclNode {
             self.debug_check_zsum();
         }
         Ok(())
+    }
+
+    fn on_topology(&mut self, view: &TopologyView, w: &mut [f32],
+                   _out: &mut Outbox) -> Result<()> {
+        self.sync_view(view, w)
     }
 
     fn max_staleness_seen(&self) -> usize {
@@ -608,7 +736,8 @@ impl NodeAlgorithm for CEclNode {
             return Ok(());
         }
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
-        super::drive_blocking(self, &neighbors, round, w, comm)
+        let view = Arc::clone(&self.full_view);
+        super::drive_blocking(self, &neighbors, &view, round, w, comm)
     }
 }
 
@@ -673,6 +802,10 @@ end
             k_frac,
             mode: WireMode::Explicit,
         }
+    }
+
+    fn full_view(graph: &Graph) -> TopologyView {
+        TopologyView::full(graph.edges().len())
     }
 
     /// Run one exchange over a 3-ring and return the nodes.
@@ -920,12 +1053,14 @@ end
         // round_begin queues one message per neighbor; delivering both
         // completes the round; a third message errors.
         let graph = Arc::new(Graph::ring(3));
+        let view = full_view(&graph);
         let mut node = CEclNode::new(&ctx(0, &graph), rand_k(0.5), 1.0, 0,
                                      DualRule::CompressDiff)
             .unwrap();
         let mut w = vec![0.5f32; 32];
         let mut out = Outbox::new();
-        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
         assert_eq!(out.len(), 2);
         assert!(!node.round_complete());
         // Feed back each neighbor's expected payload: reuse the messages
@@ -936,28 +1071,91 @@ end
                 .unwrap();
             let mut peer_out = Outbox::new();
             let mut wj = vec![0.25f32; 32];
-            NodeStateMachine::round_begin(&mut peer, 0, &mut wj, &mut peer_out)
+            NodeStateMachine::round_begin(&mut peer, 0, &view, &mut wj,
+                                          &mut peer_out)
                 .unwrap();
             let msg = peer_out
                 .drain()
                 .find(|(to, _)| *to == 0)
                 .map(|(_, m)| m)
                 .unwrap();
-            NodeStateMachine::on_message(&mut node, 0, j, msg, &mut w, &mut out)
+            NodeStateMachine::on_message(&mut node, 0, j, msg, &view, &mut w,
+                                         &mut out)
                 .unwrap();
         }
         assert!(node.round_complete());
-        NodeStateMachine::round_end(&mut node, 0, &mut w).unwrap();
+        NodeStateMachine::round_end(&mut node, 0, &view, &mut w).unwrap();
         // Extra message after completion is a protocol error.
         let err = NodeStateMachine::on_message(
             &mut node,
             0,
             1,
             Msg::Scalar(0.0),
+            &view,
             &mut w,
             &mut out,
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn edge_rebirth_rebuilds_codec_and_warm_starts_dual() {
+        // Kill edge (0, 1) and revive it: node 0's dual toward 1 must be
+        // retired (zsum excluded) while dead, then reborn warm-started
+        // at the consensus fixed point z = α·a·w from the CURRENT
+        // primal, with a fresh edge clock gating at the activation
+        // round — and the static slot toward neighbor 2 untouched.
+        let graph = Arc::new(Graph::ring(3));
+        let mut view = full_view(&graph);
+        let mut node = CEclNode::new(&ctx(0, &graph), rand_k(0.5), 1.0, 0,
+                                     DualRule::CompressDiff)
+            .unwrap();
+        // Seed nonzero dual state so the teardown is observable.
+        let mut rng = Pcg::new(7);
+        for zv in node.z.iter_mut().flatten() {
+            *zv = rng.normal_f32();
+        }
+        node.recompute_zsum();
+        let z_to_2 = node.z[1].clone();
+        let mut w = vec![0.5f32; 32];
+        let mut out = Outbox::new();
+
+        let e01 = graph.edge_index(0, 1).unwrap();
+        view.kill_edge(e01);
+        NodeStateMachine::on_topology(&mut node, &view, &mut w, &mut out)
+            .unwrap();
+        assert!(out.is_empty());
+        assert!(node.z[0].iter().all(|&v| v == 0.0), "dual not retired");
+        assert_eq!(node.z[1], z_to_2, "static slot must be untouched");
+        // alpha_deg tracks the live degree.
+        let full_ad = node.alpha() * 2.0;
+        assert!((NodeStateMachine::alpha_deg(&node) - node.alpha()).abs()
+                < 1e-6);
+        node.debug_check_zsum();
+        // A dead edge neither sends nor gates.
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 1, "only the live neighbor 2 is addressed");
+        out.drain().for_each(drop);
+
+        view.revive_edge(e01, 3);
+        NodeStateMachine::on_topology(&mut node, &view, &mut w, &mut out)
+            .unwrap();
+        assert!((NodeStateMachine::alpha_deg(&node) - full_ad).abs() < 1e-6);
+        // Warm start: z_{0|1} = α · (+1) · w.
+        for (&zv, &wv) in node.z[0].iter().zip(&w) {
+            assert!((zv - node.alpha() * wv).abs() < 1e-6, "{zv} vs α·w");
+        }
+        node.debug_check_zsum();
+        // Before the activation round the reborn edge stays silent…
+        NodeStateMachine::round_begin(&mut node, 1, &view, &mut w, &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        out.drain().for_each(drop);
+        // …and from activation on it speaks again.
+        NodeStateMachine::round_begin(&mut node, 3, &view, &mut w, &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 2);
     }
 
     /// One peer's round-`round` frame addressed to node 0 (peers are
@@ -965,6 +1163,7 @@ end
     /// receive on the wire).
     fn peer_frame_for_node0(graph: &Arc<Graph>, peer: usize, round: usize,
                             policy: RoundPolicy) -> Msg {
+        let view = full_view(graph);
         let mut p = CEclNode::new(&ctx_policy(peer, graph, policy),
                                   rand_k(0.5), 1.0, 0, DualRule::CompressDiff)
             .unwrap();
@@ -972,7 +1171,8 @@ end
         let mut w = vec![0.25f32; 32];
         for r in 0..=round {
             out.drain().for_each(drop);
-            NodeStateMachine::round_begin(&mut p, r, &mut w, &mut out).unwrap();
+            NodeStateMachine::round_begin(&mut p, r, &view, &mut w, &mut out)
+                .unwrap();
         }
         out.drain()
             .find(|(to, _)| *to == 0)
@@ -983,6 +1183,7 @@ end
     #[test]
     fn async_gate_consumes_stale_duals_within_bound() {
         let graph = Arc::new(Graph::ring(3));
+        let view = full_view(&graph);
         let policy = RoundPolicy::Async { max_staleness: 1 };
         let mut node = CEclNode::new(&ctx_policy(0, &graph, policy),
                                      rand_k(0.5), 1.0, 0,
@@ -992,31 +1193,34 @@ end
         let mut out = Outbox::new();
         // Round 0: staleness 1 lets the node step before hearing from
         // anyone at all.
-        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
         assert!(node.round_complete(), "async:1 must not block round 0");
-        NodeStateMachine::round_end(&mut node, 0, &mut w).unwrap();
+        NodeStateMachine::round_end(&mut node, 0, &view, &mut w).unwrap();
         // Start-up slack (nothing received yet) is not counted as lag.
         assert_eq!(NodeStateMachine::max_staleness_seen(&node), 0);
         // Round 1: now each edge must have delivered round ≥ 0.
-        NodeStateMachine::round_begin(&mut node, 1, &mut w, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut node, 1, &view, &mut w, &mut out)
+            .unwrap();
         assert!(!node.round_complete(), "round 1 needs round-0 duals");
         for &j in &[1usize, 2] {
             let msg = peer_frame_for_node0(&graph, j, 0, policy);
             // Stale (round-0) frames decode with the round-0 mask and
             // are accepted one round late.
-            NodeStateMachine::on_message(&mut node, 0, j, msg, &mut w,
+            NodeStateMachine::on_message(&mut node, 0, j, msg, &view, &mut w,
                                          &mut out)
                 .unwrap();
         }
         assert!(node.round_complete());
-        NodeStateMachine::round_end(&mut node, 1, &mut w).unwrap();
+        NodeStateMachine::round_end(&mut node, 1, &view, &mut w).unwrap();
         node.debug_check_zsum();
         assert_eq!(NodeStateMachine::max_staleness_seen(&node), 1);
         // Round 2 with nothing newer: the gate blocks, and forcing
         // round_end is a hard staleness-bound violation.
-        NodeStateMachine::round_begin(&mut node, 2, &mut w, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut node, 2, &view, &mut w, &mut out)
+            .unwrap();
         assert!(!node.round_complete());
-        let err = NodeStateMachine::round_end(&mut node, 2, &mut w)
+        let err = NodeStateMachine::round_end(&mut node, 2, &view, &mut w)
             .unwrap_err();
         assert!(err.to_string().contains("would consume"), "{err}");
     }
@@ -1024,6 +1228,7 @@ end
     #[test]
     fn async_rejects_fifo_violations_sync_rejects_offround() {
         let graph = Arc::new(Graph::ring(3));
+        let view = full_view(&graph);
         let policy = RoundPolicy::Async { max_staleness: 2 };
         let mut node = CEclNode::new(&ctx_policy(0, &graph, policy),
                                      rand_k(0.5), 1.0, 0,
@@ -1031,27 +1236,30 @@ end
             .unwrap();
         let mut w = vec![0.5f32; 32];
         let mut out = Outbox::new();
-        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
         // An AHEAD message (round 1 while we are at 0) is legal async.
         let msg = peer_frame_for_node0(&graph, 1, 1, policy);
-        NodeStateMachine::on_message(&mut node, 1, 1, msg, &mut w, &mut out)
+        NodeStateMachine::on_message(&mut node, 1, 1, msg, &view, &mut w,
+                                     &mut out)
             .unwrap();
         // ...but a round-0 message from the same edge afterwards is a
         // FIFO violation.
         let msg = peer_frame_for_node0(&graph, 1, 0, policy);
-        let err = NodeStateMachine::on_message(&mut node, 0, 1, msg, &mut w,
-                                               &mut out)
+        let err = NodeStateMachine::on_message(&mut node, 0, 1, msg, &view,
+                                               &mut w, &mut out)
             .unwrap_err();
         assert!(err.to_string().contains("FIFO"), "{err}");
         // Sync machines reject any off-round stamp outright.
         let mut sync_node = CEclNode::new(&ctx(0, &graph), rand_k(0.5), 1.0,
                                           0, DualRule::CompressDiff)
             .unwrap();
-        NodeStateMachine::round_begin(&mut sync_node, 0, &mut w, &mut out)
+        NodeStateMachine::round_begin(&mut sync_node, 0, &view, &mut w,
+                                      &mut out)
             .unwrap();
         let msg = peer_frame_for_node0(&graph, 1, 1, RoundPolicy::Sync);
         let err = NodeStateMachine::on_message(&mut sync_node, 1, 1, msg,
-                                               &mut w, &mut out)
+                                               &view, &mut w, &mut out)
             .unwrap_err();
         assert!(err.to_string().contains("sync round"), "{err}");
     }
@@ -1059,19 +1267,22 @@ end
     #[test]
     fn corrupt_frame_is_error_not_panic() {
         let graph = Arc::new(Graph::ring(3));
+        let view = full_view(&graph);
         let mut node = CEclNode::new(&ctx(0, &graph), rand_k(0.5), 1.0, 0,
                                      DualRule::CompressDiff)
             .unwrap();
         let mut w = vec![0.5f32; 32];
         let mut out = Outbox::new();
-        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
         // A peer's frame, corrupted in flight: first index out of range.
         let mut peer = CEclNode::new(&ctx(1, &graph), rand_k(0.5), 1.0, 0,
                                      DualRule::CompressDiff)
             .unwrap();
         let mut peer_out = Outbox::new();
         let mut wj = vec![0.25f32; 32];
-        NodeStateMachine::round_begin(&mut peer, 0, &mut wj, &mut peer_out)
+        NodeStateMachine::round_begin(&mut peer, 0, &view, &mut wj,
+                                      &mut peer_out)
             .unwrap();
         let msg = peer_out
             .drain()
@@ -1085,6 +1296,7 @@ end
             0,
             1,
             Msg::Frame(frame),
+            &view,
             &mut w,
             &mut out,
         )

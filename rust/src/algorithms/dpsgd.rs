@@ -22,9 +22,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::comm::{Msg, NodeComm, Outbox};
-use crate::graph::Graph;
+use crate::graph::{Graph, TopologyView};
 
-use super::{BuildCtx, NodeAlgorithm, NodeStateMachine, RoundPolicy};
+use super::{BuildCtx, EdgeClock, NodeAlgorithm, NodeStateMachine,
+            RoundPolicy};
 
 pub struct DPsgdNode {
     node: usize,
@@ -35,15 +36,22 @@ pub struct DPsgdNode {
     acc: Vec<f32>,
     /// Freshest received neighbor parameters, one slot per sorted
     /// neighbor (cleared each round under `Sync`, persistent under
-    /// `Async`).
+    /// `Async`; retired on edge death so a churned-out neighbor's last
+    /// model can never be folded in again).
     recv: Vec<Option<Vec<f32>>>,
     /// Sync vs bounded-staleness async rounds.
     policy: RoundPolicy,
     /// The node's own round clock (set by `round_begin`).
     cur_round: usize,
-    /// Per-edge clock: round stamp of the freshest parameters received
-    /// per neighbor slot (−1 = nothing yet).
-    edge_round: Vec<i64>,
+    /// Per-edge clocks: freshest parameter stamp, liveness, activation.
+    clocks: Vec<EdgeClock>,
+    /// Cached edge incarnation per neighbor slot.
+    edge_epochs: Vec<u32>,
+    /// Last `TopologyView::version` synced against.
+    seen_view: u64,
+    /// Cached static full view for the (epoch-constant) blocking
+    /// engine — built once instead of per exchange round.
+    full_view: Arc<TopologyView>,
     /// Largest per-edge lag consumed at any `round_end`.
     max_lag_seen: usize,
 }
@@ -60,9 +68,47 @@ impl DPsgdNode {
             recv: (0..degree).map(|_| None).collect(),
             policy: ctx.round_policy,
             cur_round: 0,
-            edge_round: vec![-1; degree],
+            clocks: vec![EdgeClock::born(0); degree],
+            edge_epochs: vec![0; degree],
+            seen_view: 0,
+            full_view: Arc::new(TopologyView::full(
+                ctx.graph.edges().len(),
+            )),
             max_lag_seen: 0,
         }
+    }
+
+    /// Per-edge lifecycle sync (see `CEclNode::sync_view`): births reset
+    /// the slot with a fresh clock, deaths retire the buffered neighbor
+    /// parameters.  D-PSGD needs no codec or dual warm-start — a dead
+    /// or unborn slot simply falls back to the node's own parameters in
+    /// the MH fold, which keeps the weight row stochastic.
+    fn sync_view(&mut self, view: &TopologyView) -> Result<()> {
+        if view.version() == self.seen_view {
+            return Ok(());
+        }
+        self.seen_view = view.version();
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        for (jj, &j) in neighbors.iter().enumerate() {
+            let e = self
+                .graph
+                .edge_index(self.node, j)
+                .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
+            let life = view.edge_life(e);
+            if life.epoch != self.edge_epochs[jj] {
+                self.edge_epochs[jj] = life.epoch;
+                self.recv[jj] = None;
+                let mut clock = EdgeClock::born(life.activation_round);
+                clock.live = life.live;
+                self.clocks[jj] = clock;
+            } else if life.live != self.clocks[jj].live {
+                self.clocks[jj].live = life.live;
+                if !life.live {
+                    self.recv[jj] = None;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -71,8 +117,9 @@ impl NodeStateMachine for DPsgdNode {
         "D-PSGD".to_string()
     }
 
-    fn round_begin(&mut self, round: usize, w: &mut [f32],
-                   out: &mut Outbox) -> Result<()> {
+    fn round_begin(&mut self, round: usize, view: &TopologyView,
+                   w: &mut [f32], out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)?;
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
         self.cur_round = round;
         if !self.policy.is_async() {
@@ -82,14 +129,18 @@ impl NodeStateMachine for DPsgdNode {
                 *slot = None;
             }
         }
-        for &j in &neighbors {
-            out.send(j, Msg::Dense(w.to_vec()));
+        for (jj, &j) in neighbors.iter().enumerate() {
+            if self.clocks[jj].active(round) {
+                out.send(j, Msg::Dense(w.to_vec()));
+            }
         }
         Ok(())
     }
 
     fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
-                  _w: &mut [f32], _out: &mut Outbox) -> Result<()> {
+                  view: &TopologyView, _w: &mut [f32],
+                  _out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)?;
         let jj = self
             .graph
             .neighbors(self.node)
@@ -98,22 +149,31 @@ impl NodeStateMachine for DPsgdNode {
             .ok_or_else(|| {
                 anyhow!("node {}: message from non-neighbor {from}", self.node)
             })?;
+        anyhow::ensure!(
+            self.clocks[jj].live,
+            "node {}: parameters from {from} on a churned-out edge \
+             (the engine should have dropped them)",
+            self.node
+        );
         super::admit_message(self.policy, self.node, from, self.cur_round,
-                             self.edge_round[jj], msg_round)?;
+                             self.clocks[jj].round, msg_round)?;
         // FIFO stamps are strictly increasing, so overwriting always
         // keeps the freshest parameters for this edge.
         self.recv[jj] = Some(msg.into_dense()?);
-        self.edge_round[jj] = msg_round as i64;
+        self.clocks[jj].round = msg_round as i64;
+        self.clocks[jj].spoken = true;
         Ok(())
     }
 
     fn round_complete(&self) -> bool {
-        super::staleness_gate(self.policy, self.cur_round, &self.edge_round)
+        super::staleness_gate(self.policy, self.cur_round, &self.clocks)
     }
 
-    fn round_end(&mut self, round: usize, w: &mut [f32]) -> Result<()> {
+    fn round_end(&mut self, round: usize, view: &TopologyView,
+                 w: &mut [f32]) -> Result<()> {
+        self.sync_view(view)?;
         let lag = super::check_staleness(self.policy, self.node, "parameters",
-                                         round, &self.edge_round)?;
+                                         round, &self.clocks)?;
         self.max_lag_seen = self.max_lag_seen.max(lag);
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
         let wii = self.weights[self.node] as f32;
@@ -122,16 +182,23 @@ impl NodeStateMachine for DPsgdNode {
         }
         for (jj, &j) in neighbors.iter().enumerate() {
             let wij = self.weights[j] as f32;
-            match &self.recv[jj] {
+            let fold = if self.clocks[jj].live {
+                self.recv[jj].as_deref()
+            } else {
+                // Churned-out neighbor: its weight falls back to our
+                // own parameters (row stays stochastic).
+                None
+            };
+            match fold {
                 Some(wj) => {
                     for (a, &v) in self.acc.iter_mut().zip(wj) {
                         *a += wij * v;
                     }
                 }
-                // Only reachable in the first `max_staleness` async
-                // rounds (edge_round = −1 ≥ horizon): the neighbor has
-                // not spoken yet, so its MH weight falls back to our
-                // own parameters — the row stays stochastic.
+                // Also reachable in the first `max_staleness` async
+                // rounds of an incarnation (birth slack): the neighbor
+                // has not spoken yet, so its MH weight falls back to
+                // our own parameters — the row stays stochastic.
                 None => {
                     for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
                         *a += wij * wv;
@@ -141,6 +208,11 @@ impl NodeStateMachine for DPsgdNode {
         }
         w.copy_from_slice(&self.acc);
         Ok(())
+    }
+
+    fn on_topology(&mut self, view: &TopologyView, _w: &mut [f32],
+                   _out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)
     }
 
     fn max_staleness_seen(&self) -> usize {
@@ -162,7 +234,8 @@ impl NodeAlgorithm for DPsgdNode {
         // Shared blocking driver: send to all first (channels are
         // buffered; no deadlock), then drain one message per neighbor.
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
-        super::drive_blocking(self, &neighbors, round, w, comm)
+        let view = Arc::clone(&self.full_view);
+        super::drive_blocking(self, &neighbors, &view, round, w, comm)
     }
 }
 
@@ -258,33 +331,77 @@ mod tests {
             round_policy: RoundPolicy::Sync,
         };
         let mut node = DPsgdNode::new(&ctx);
+        let view = TopologyView::full(graph.edges().len());
         let mut w = vec![1.0f32; 8];
         let mut out = Outbox::new();
-        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
         assert_eq!(out.len(), 2); // neighbors 1 and 3
         let payload = Msg::Dense(vec![2.0; 8]);
         NodeStateMachine::on_message(
-            &mut node, 0, 1, payload.clone(), &mut w, &mut out,
+            &mut node, 0, 1, payload.clone(), &view, &mut w, &mut out,
         )
         .unwrap();
         // Duplicate from the same neighbor is a protocol error.
         assert!(NodeStateMachine::on_message(
-            &mut node, 0, 1, payload.clone(), &mut w, &mut out,
+            &mut node, 0, 1, payload.clone(), &view, &mut w, &mut out,
         )
         .is_err());
         // Non-neighbor sender is a protocol error.
         assert!(NodeStateMachine::on_message(
-            &mut node, 0, 2, payload.clone(), &mut w, &mut out,
+            &mut node, 0, 2, payload.clone(), &view, &mut w, &mut out,
         )
         .is_err());
         // Completing the round folds in sorted-neighbor order.
-        NodeStateMachine::on_message(&mut node, 0, 3, payload, &mut w, &mut out)
+        NodeStateMachine::on_message(&mut node, 0, 3, payload, &view, &mut w,
+                                     &mut out)
             .unwrap();
         assert!(node.round_complete());
-        NodeStateMachine::round_end(&mut node, 0, &mut w).unwrap();
+        NodeStateMachine::round_end(&mut node, 0, &view, &mut w).unwrap();
         // MH ring(4): W_ii = 1/3, W_ij = 1/3 each -> (1 + 2 + 2)/3.
         for &v in &w {
             assert!((v - 5.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn churned_out_neighbor_folds_own_parameters() {
+        // Kill edge (0, 1): D-PSGD stops sending there, the gate skips
+        // it, and the MH fold substitutes the node's own parameters for
+        // the missing neighbor — the row stays stochastic, so a vector
+        // of ones stays a vector of ones.
+        let graph = Arc::new(Graph::ring(4));
+        let ctx = BuildCtx {
+            node: 0,
+            graph: Arc::clone(&graph),
+            manifest: manifest(),
+            seed: 1,
+            eta: 0.1,
+            local_steps: 1,
+            rounds_per_epoch: 1,
+            dual_path: crate::algorithms::DualPath::Native,
+            runtime: None,
+            round_policy: RoundPolicy::Sync,
+        };
+        let mut node = DPsgdNode::new(&ctx);
+        let mut view = TopologyView::full(graph.edges().len());
+        view.kill_edge(graph.edge_index(0, 1).unwrap());
+        let mut w = vec![1.0f32; 8];
+        let mut out = Outbox::new();
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 1); // only neighbor 3
+        let drained: Vec<_> = out.drain().collect();
+        assert_eq!(drained[0].0, 3);
+        assert!(!node.round_complete(), "live neighbor 3 still gates");
+        NodeStateMachine::on_message(&mut node, 0, 3,
+                                     Msg::Dense(vec![1.0; 8]), &view, &mut w,
+                                     &mut out)
+            .unwrap();
+        assert!(node.round_complete());
+        NodeStateMachine::round_end(&mut node, 0, &view, &mut w).unwrap();
+        for &v in &w {
+            assert!((v - 1.0).abs() < 1e-6, "{v}");
         }
     }
 }

@@ -66,7 +66,7 @@ use anyhow::{bail, Result};
 
 use crate::comm::{Msg, NodeComm, Outbox};
 use crate::compress::{CodecSpec, WireMode};
-use crate::graph::Graph;
+use crate::graph::{Graph, TopologyView};
 use crate::model::DatasetManifest;
 use crate::runtime::ModelRuntime;
 
@@ -146,9 +146,19 @@ pub trait NodeAlgorithm: Send {
 ///
 /// Contract (enforced by `crate::sim`), per-edge-clock form:
 ///
+/// * Every callback receives the engine's current [`TopologyView`] —
+///   the epoch-stamped live-edge snapshot that replaces the old fixed
+///   neighbor slice.  Machines compare the view's per-edge epochs with
+///   their cached ones and run per-edge **lifecycle**: on edge birth,
+///   allocate a fresh codec instance and initialize the dual from the
+///   node's current primal; on edge death, retire dual/residual/
+///   conversation state so it can never be resurrected against a
+///   different edge epoch.  A static run keeps the view at version 0,
+///   so the lifecycle scan is one integer compare.
 /// * `round_begin(r, ..)` is called exactly once per local round, after
 ///   the K local updates; it queues the round's opening sends (each
-///   stamped with `r`, the sender's own edge clock).
+///   stamped with `r`, the sender's own edge clock) on every live edge
+///   whose `activation_round` has arrived.
 /// * `on_message` receives one payload at a time.  `msg_round` is the
 ///   **sender's** round stamp for that edge, not the receiver's
 ///   current round: under [`RoundPolicy::Sync`] the engine only
@@ -159,11 +169,19 @@ pub trait NodeAlgorithm: Send {
 ///   random link delays) and therefore with strictly increasing
 ///   `msg_round`; messages from different neighbors interleave
 ///   arbitrarily.  Multi-phase protocols may queue further sends from
-///   inside `on_message`.
+///   inside `on_message`.  A message on a churned-out edge is a
+///   protocol error (the engine drops such frames before they get
+///   here).
 /// * `round_complete()` reports whether the machine's staleness policy
-///   is satisfied for its current round; once true, `round_end(r, ..)`
-///   runs and may rewrite `w` (gossip averaging).  Machines enforce
-///   their staleness bound in `round_end`.
+///   is satisfied for its current round — evaluated over **currently
+///   live** edges only; once true, `round_end(r, ..)` runs and may
+///   rewrite `w` (gossip averaging).  Machines enforce their staleness
+///   bound in `round_end`.
+/// * `on_topology` is the engine's mid-round churn notification: the
+///   view changed while the node may be waiting on edges that no
+///   longer exist.  Machines sync their lifecycle immediately (the
+///   engine re-polls `round_complete` right after).  Default: no-op
+///   for topology-agnostic machines (SGD).
 pub trait NodeStateMachine: Send {
     fn name(&self) -> String;
 
@@ -175,22 +193,37 @@ pub trait NodeStateMachine: Send {
         None
     }
 
-    /// Begin the exchange phase of `round`: queue the opening sends.
-    fn round_begin(&mut self, round: usize, w: &mut [f32],
-                   out: &mut Outbox) -> Result<()>;
+    /// Begin the exchange phase of `round`: queue the opening sends on
+    /// live, activated edges.
+    fn round_begin(&mut self, round: usize, view: &TopologyView,
+                   w: &mut [f32], out: &mut Outbox) -> Result<()>;
 
     /// Deliver the next in-FIFO-order message from neighbor `from`,
     /// stamped with the sender's round (`msg_round`).
     fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
-                  w: &mut [f32], out: &mut Outbox) -> Result<()>;
+                  view: &TopologyView, w: &mut [f32], out: &mut Outbox)
+                  -> Result<()>;
 
     /// Whether the staleness policy is satisfied for the current round
-    /// (everything this round still *needs* has been received).
+    /// (everything this round still *needs* from live edges has been
+    /// received).
     fn round_complete(&self) -> bool;
 
     /// Finish the round: apply buffered updates to `w` / dual state,
-    /// enforcing the staleness bound.
-    fn round_end(&mut self, round: usize, w: &mut [f32]) -> Result<()>;
+    /// enforcing the staleness bound over live edges.
+    fn round_end(&mut self, round: usize, view: &TopologyView,
+                 w: &mut [f32]) -> Result<()>;
+
+    /// Topology transition notification (possibly mid-round): sync
+    /// per-edge lifecycle against the new view.  `w` is the node's
+    /// current primal (edge births warm-start their dual from it);
+    /// `out` exists for protocols that must speak on a transition
+    /// (none of the current ones do).
+    fn on_topology(&mut self, view: &TopologyView, w: &mut [f32],
+                   out: &mut Outbox) -> Result<()> {
+        let _ = (view, w, out);
+        Ok(())
+    }
 
     /// Largest per-edge lag (in rounds) of any *received* message this
     /// machine has consumed at a `round_end` — 0 under `Sync`,
@@ -463,24 +496,63 @@ pub fn build_machine(spec: &AlgorithmSpec,
 /// neighbor, finish the round.  (Multi-phase protocols like PowerGossip
 /// need their own drain loop.)  The threaded bus is bulk-synchronous by
 /// construction — every received message carries the current round, so
-/// the per-edge `msg_round` stamp is `round` itself.
+/// the per-edge `msg_round` stamp is `round` itself — and
+/// epoch-constant: it always drives the static full [`TopologyView`].
 pub fn drive_blocking(
     machine: &mut dyn NodeStateMachine,
     neighbors: &[usize],
+    view: &TopologyView,
     round: usize,
     w: &mut [f32],
     comm: &NodeComm,
 ) -> Result<()> {
     let mut out = Outbox::new();
-    machine.round_begin(round, w, &mut out)?;
+    machine.round_begin(round, view, w, &mut out)?;
     for (to, msg) in out.drain() {
         comm.send(to, msg)?;
     }
     for &j in neighbors {
         let msg = comm.recv(j)?;
-        machine.on_message(round, j, msg, w, &mut out)?;
+        machine.on_message(round, j, msg, view, w, &mut out)?;
     }
-    machine.round_end(round, w)
+    machine.round_end(round, view, w)
+}
+
+/// One edge's per-machine clock: the freshest round stamp consumed on
+/// the edge this incarnation, the incarnation's activation round, and
+/// the liveness/spoken flags the staleness machinery keys on.  Dead
+/// edges never gate; edges that have not spoken yet gate through their
+/// birth floor (`activation − 1` — the same `−1` start-up slack the
+/// static protocol always had, shifted to the incarnation's origin).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct EdgeClock {
+    /// Freshest round stamp delivered this incarnation, or
+    /// `activation − 1` as the birth floor before anything arrives.
+    pub round: i64,
+    /// First round this incarnation carries traffic.
+    pub activation: usize,
+    /// Whether the edge is currently in the topology.
+    pub live: bool,
+    /// Whether `round` reflects a real received message (birth slack is
+    /// never counted as lag).
+    pub spoken: bool,
+}
+
+impl EdgeClock {
+    /// A freshly (re)born live edge activating at `activation`.
+    pub fn born(activation: usize) -> EdgeClock {
+        EdgeClock {
+            round: activation as i64 - 1,
+            activation,
+            live: true,
+            spoken: false,
+        }
+    }
+
+    /// Whether the edge carries traffic at `round` (live + activated).
+    pub fn active(&self, round: usize) -> bool {
+        self.live && round >= self.activation
+    }
 }
 
 /// Shared per-edge-clock admission check for single-phase machines:
@@ -515,33 +587,41 @@ pub(crate) fn admit_message(policy: RoundPolicy, node: usize, from: usize,
     Ok(())
 }
 
-/// Shared `round_complete` gate: every edge has delivered state from
-/// round `≥ cur_round − staleness` (`−1` = nothing yet).
+/// Shared `round_complete` gate: every **live** edge has delivered
+/// state from round `≥ cur_round − staleness` (birth floor =
+/// `activation − 1` before the first message).  Dead edges are
+/// excluded — the staleness bound is a promise about the current
+/// topology, not about peers that no longer exist.
 pub(crate) fn staleness_gate(policy: RoundPolicy, cur_round: usize,
-                             edge_round: &[i64]) -> bool {
+                             clocks: &[EdgeClock]) -> bool {
     let horizon = cur_round as i64 - policy.staleness() as i64;
-    edge_round.iter().all(|&r| r >= horizon)
+    clocks.iter().filter(|c| c.live).all(|c| c.round >= horizon)
 }
 
-/// Shared `round_end` enforcement of the staleness bound: errors if any
-/// edge's freshest `what` (dual / parameters) is older than the policy
-/// allows, and returns the largest lag among *received* messages
-/// (start-up slack on silent edges is not counted — see
+/// Shared `round_end` enforcement of the staleness bound over live
+/// edges: errors if any live edge's freshest `what` (dual /
+/// parameters) is older than the policy allows, and returns the
+/// largest lag among *received* messages (birth/start-up slack on
+/// edges that have not spoken this incarnation is not counted — see
 /// [`NodeStateMachine::max_staleness_seen`]).
 pub(crate) fn check_staleness(policy: RoundPolicy, node: usize,
                               what: &str, round: usize,
-                              edge_round: &[i64]) -> Result<usize> {
+                              clocks: &[EdgeClock]) -> Result<usize> {
     let horizon = round as i64 - policy.staleness() as i64;
     let mut max_lag = 0usize;
-    for (jj, &r) in edge_round.iter().enumerate() {
+    for (jj, c) in clocks.iter().enumerate() {
+        if !c.live {
+            continue;
+        }
         anyhow::ensure!(
-            r >= horizon,
-            "node {node}: round_end({round}) would consume round-{r} {what} \
+            c.round >= horizon,
+            "node {node}: round_end({round}) would consume round-{} {what} \
              from neighbor slot {jj} (policy {})",
+            c.round,
             policy.name()
         );
-        if r >= 0 {
-            max_lag = max_lag.max((round as i64 - r).max(0) as usize);
+        if c.spoken {
+            max_lag = max_lag.max((round as i64 - c.round).max(0) as usize);
         }
     }
     Ok(max_lag)
@@ -566,13 +646,14 @@ impl NodeStateMachine for SgdNode {
         "SGD".to_string()
     }
 
-    fn round_begin(&mut self, _round: usize, _w: &mut [f32],
-                   _out: &mut Outbox) -> Result<()> {
+    fn round_begin(&mut self, _round: usize, _view: &TopologyView,
+                   _w: &mut [f32], _out: &mut Outbox) -> Result<()> {
         Ok(())
     }
 
     fn on_message(&mut self, msg_round: usize, from: usize, _msg: Msg,
-                  _w: &mut [f32], _out: &mut Outbox) -> Result<()> {
+                  _view: &TopologyView, _w: &mut [f32],
+                  _out: &mut Outbox) -> Result<()> {
         anyhow::bail!(
             "SGD node received a message from {from} stamped round {msg_round}"
         )
@@ -582,7 +663,8 @@ impl NodeStateMachine for SgdNode {
         true
     }
 
-    fn round_end(&mut self, _round: usize, _w: &mut [f32]) -> Result<()> {
+    fn round_end(&mut self, _round: usize, _view: &TopologyView,
+                 _w: &mut [f32]) -> Result<()> {
         Ok(())
     }
 }
@@ -748,12 +830,53 @@ mod tests {
         let mut sgd = SgdNode;
         let mut out = Outbox::new();
         let mut w = vec![0.0f32; 4];
-        sgd.round_begin(0, &mut w, &mut out).unwrap();
+        let view = TopologyView::full(0);
+        sgd.round_begin(0, &view, &mut w, &mut out).unwrap();
         assert!(out.is_empty());
         assert!(NodeStateMachine::round_complete(&sgd));
-        sgd.round_end(0, &mut w).unwrap();
+        sgd.round_end(0, &view, &mut w).unwrap();
+        // Topology notifications are a no-op for edge-free machines.
+        NodeStateMachine::on_topology(&mut sgd, &view, &mut w, &mut out)
+            .unwrap();
         assert!(sgd
-            .on_message(0, 1, Msg::Scalar(0.0), &mut w, &mut out)
+            .on_message(0, 1, Msg::Scalar(0.0), &view, &mut w, &mut out)
             .is_err());
+    }
+
+    #[test]
+    fn edge_clock_birth_floor_and_gating() {
+        // A fresh incarnation gates through activation − 1 and is not
+        // counted as lag until it actually speaks.
+        let born = EdgeClock::born(5);
+        assert_eq!(born.round, 4);
+        assert!(born.live && !born.spoken);
+        assert!(!born.active(4));
+        assert!(born.active(5));
+        let initial = EdgeClock::born(0);
+        assert_eq!(initial.round, -1); // the legacy start-up slack
+        let dead = EdgeClock { live: false, ..born };
+        // Dead edges never gate or error, however stale.
+        let clocks = [dead];
+        assert!(staleness_gate(RoundPolicy::Sync, 100, &clocks));
+        assert_eq!(
+            check_staleness(RoundPolicy::Sync, 0, "dual", 100, &clocks)
+                .unwrap(),
+            0
+        );
+        // A live birth floor gates its own activation round under sync…
+        let clocks = [born];
+        assert!(staleness_gate(RoundPolicy::Sync, 4, &clocks));
+        assert!(!staleness_gate(RoundPolicy::Sync, 5, &clocks));
+        // …and unspoken floors are never reported as lag.
+        let spoken = EdgeClock { round: 3, spoken: true, ..born };
+        let lag = check_staleness(
+            RoundPolicy::Async { max_staleness: 2 },
+            0,
+            "dual",
+            5,
+            &[spoken],
+        )
+        .unwrap();
+        assert_eq!(lag, 2);
     }
 }

@@ -61,10 +61,11 @@ use crate::compress::low_rank::{
     matvec_f32, matvec_t_f32, normalize, power_iteration_step, rank1_axpy,
     LowRankEdgeState,
 };
-use crate::graph::Graph;
+use crate::graph::{Graph, TopologyView};
 use crate::util::rng::{streams, Pcg};
 
-use super::{BuildCtx, NodeAlgorithm, NodeStateMachine, RoundPolicy};
+use super::{BuildCtx, EdgeClock, NodeAlgorithm, NodeStateMachine,
+            RoundPolicy};
 
 /// Where one conversation stands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -102,7 +103,9 @@ struct PgConv {
 }
 
 /// Per-edge machine state: the active conversation, queued starts,
-/// completed-but-unapplied conversations, and the peer-ahead buffer.
+/// completed-but-unapplied conversations, and the peer-ahead buffer —
+/// plus the incarnation bookkeeping (`offset`/`epoch`/`live`) that maps
+/// conversation numbers onto local rounds under dynamic topology.
 #[derive(Debug)]
 struct PgEdge {
     active: Option<PgConv>,
@@ -110,10 +113,10 @@ struct PgEdge {
     /// previous one is still in flight (async only; sync never queues).
     pending_starts: usize,
     /// Index of the next conversation to start locally (== local rounds
-    /// begun on this edge).
+    /// begun on this edge this incarnation).
     next_conv: usize,
-    /// Latest conversation COMPLETED on this edge (−1 = none): the
-    /// per-edge clock the staleness policy gates on.
+    /// Latest conversation COMPLETED on this edge this incarnation
+    /// (−1 = none): the per-edge clock the staleness policy gates on.
     last_completed: i64,
     /// Completed conversations awaiting their applying `round_end`
     /// (deferred rank-1 application for round-straddling conversations).
@@ -121,10 +124,19 @@ struct PgEdge {
     /// Peer payloads for a conversation we have not started ourselves
     /// yet (the peer ran ahead); drained the moment it starts.
     inbuf: VecDeque<Vec<f32>>,
+    /// Round ↔ conversation offset of this incarnation: conversation
+    /// `c` belongs to local round `offset + c`.  0 for the initial
+    /// incarnation (conversation == round, the legacy schedule); a
+    /// reborn edge starts counting at its activation round.
+    offset: usize,
+    /// Cached incarnation epoch (`EdgeLife::epoch`).
+    epoch: u32,
+    /// Whether the edge is currently in the topology.
+    live: bool,
 }
 
 impl PgEdge {
-    fn new() -> PgEdge {
+    fn new(offset: usize, epoch: u32) -> PgEdge {
         PgEdge {
             active: None,
             pending_starts: 0,
@@ -134,6 +146,23 @@ impl PgEdge {
             last_completed: -1,
             done: Vec::new(),
             inbuf: VecDeque::new(),
+            offset,
+            epoch,
+            live: true,
+        }
+    }
+
+    /// The staleness clock of this edge, in round units.
+    fn clock(&self) -> EdgeClock {
+        EdgeClock {
+            round: if self.last_completed < 0 {
+                self.offset as i64 - 1
+            } else {
+                self.offset as i64 + self.last_completed
+            },
+            activation: self.offset,
+            live: self.live,
+            spoken: self.last_completed >= 0,
         }
     }
 }
@@ -155,6 +184,11 @@ pub struct PowerGossipNode {
     /// The node's own round clock (set by `round_begin`).
     cur_round: usize,
     edges: Vec<PgEdge>,
+    /// Last `TopologyView::version` synced against.
+    seen_view: u64,
+    /// Cached static full view for the (epoch-constant) blocking
+    /// engine — built once instead of per exchange round.
+    full_view: Arc<TopologyView>,
     /// Largest conversation lag consumed at any `round_end`.
     max_lag_seen: usize,
 }
@@ -176,25 +210,16 @@ impl PowerGossipNode {
             .collect();
         let neighbors = ctx.graph.neighbors(ctx.node);
         // q̂ init must be identical at both edge endpoints: derive from
-        // (seed, POWER, edge, view).
+        // (seed, POWER, edge, view) — plus the incarnation epoch for
+        // reborn edges (epoch 0 keeps the legacy stream).
         let states = neighbors
             .iter()
             .map(|&j| {
                 let e = ctx.graph.edge_index(ctx.node, j).unwrap() as u64;
-                views
-                    .iter()
-                    .enumerate()
-                    .map(|(v, &(_, _, cols))| {
-                        let mut rng = Pcg::derive(
-                            ctx.seed,
-                            &[streams::POWER, e, v as u64],
-                        );
-                        LowRankEdgeState::new(cols, &mut rng)
-                    })
-                    .collect()
+                Self::derive_states(ctx.seed, e, 0, &views)
             })
             .collect();
-        let edges = neighbors.iter().map(|_| PgEdge::new()).collect();
+        let edges = neighbors.iter().map(|_| PgEdge::new(0, 0)).collect();
         Ok(PowerGossipNode {
             node: ctx.node,
             graph: Arc::clone(&ctx.graph),
@@ -207,8 +232,80 @@ impl PowerGossipNode {
             policy: ctx.round_policy,
             cur_round: 0,
             edges,
+            seen_view: 0,
+            full_view: Arc::new(TopologyView::full(
+                ctx.graph.edges().len(),
+            )),
             max_lag_seen: 0,
         })
+    }
+
+    /// Shared-seed q̂ warm-start vectors for one edge incarnation —
+    /// identical at both endpoints by construction.
+    fn derive_states(seed: u64, edge: u64, epoch: u32,
+                     views: &[(usize, usize, usize)])
+                     -> Vec<LowRankEdgeState> {
+        views
+            .iter()
+            .enumerate()
+            .map(|(v, &(_, _, cols))| {
+                let mut path = vec![streams::POWER, edge, v as u64];
+                if epoch > 0 {
+                    path.push(epoch as u64);
+                }
+                let mut rng = Pcg::derive(seed, &path);
+                LowRankEdgeState::new(cols, &mut rng)
+            })
+            .collect()
+    }
+
+    /// Per-edge lifecycle sync: a fresh incarnation (view epoch ahead
+    /// of the cached one) resets the whole per-edge machine — the
+    /// in-flight conversation, its buffered halves, and the *unapplied*
+    /// completed conversations are retired (typed teardown: nothing
+    /// from an old epoch can be applied or resumed), the q̂ warm starts
+    /// re-derive from the epoch-keyed shared stream, and the
+    /// conversation counter restarts at the incarnation's activation
+    /// round (`offset`).  A death without rebirth just tears down.
+    fn sync_view(&mut self, view: &TopologyView) -> Result<()> {
+        if view.version() == self.seen_view {
+            return Ok(());
+        }
+        self.seen_view = view.version();
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        for (jj, &j) in neighbors.iter().enumerate() {
+            let e = self
+                .graph
+                .edge_index(self.node, j)
+                .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
+            let life = view.edge_life(e);
+            if life.epoch != self.edges[jj].epoch {
+                // Rebirth: a wholly fresh conversation machine.
+                let mut edge =
+                    PgEdge::new(life.activation_round, life.epoch);
+                edge.live = life.live;
+                self.edges[jj] = edge;
+                self.states[jj] = Self::derive_states(
+                    self.seed, e as u64, life.epoch, &self.views,
+                );
+            } else if life.live != self.edges[jj].live {
+                self.edges[jj].live = life.live;
+                if !life.live {
+                    // Teardown: drop the in-flight conversation, its
+                    // buffered peer halves, and any completed-but-
+                    // unapplied corrections.
+                    self.edges[jj].active = None;
+                    self.edges[jj].pending_starts = 0;
+                    self.edges[jj].done.clear();
+                    self.edges[jj].inbuf.clear();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn clocks(&self) -> Vec<EdgeClock> {
+        self.edges.iter().map(|e| e.clock()).collect()
     }
 
     /// Deterministic wire bytes per round (for accounting tests).
@@ -409,23 +506,27 @@ impl PowerGossipNode {
                 // rounds (and the draw stays independent of message
                 // delivery order — replay- and engine-stable).  Under
                 // sync the counter equals the round, so the stream is
-                // bit-identical to the legacy schedule.
+                // bit-identical to the legacy schedule.  A reborn
+                // edge's incarnation epoch extends the path (epoch 0 =
+                // the legacy derivation), so conversation 0 of epoch 2
+                // never replays epoch 1's draws.
                 let e = self
                     .graph
                     .edge_index(self.node, from)
                     .ok_or_else(|| anyhow!("({}, {from}) is not an edge",
                                            self.node))?;
-                let mut reseed_rng = Pcg::derive(
-                    self.seed,
-                    &[
-                        streams::POWER,
-                        u64::MAX,
-                        e as u64,
-                        v as u64,
-                        run.conv as u64,
-                        run.it as u64,
-                    ],
-                );
+                let mut path = vec![
+                    streams::POWER,
+                    u64::MAX,
+                    e as u64,
+                    v as u64,
+                    run.conv as u64,
+                    run.it as u64,
+                ];
+                if self.edges[jj].epoch > 0 {
+                    path.push(self.edges[jj].epoch as u64);
+                }
+                let mut reseed_rng = Pcg::derive(self.seed, &path);
                 self.states[jj][v].reseed_if_degenerate(&mut reseed_rng);
                 if run.it + 1 == self.iters {
                     run.finals.push((p, q_used));
@@ -482,11 +583,17 @@ impl NodeStateMachine for PowerGossipNode {
         format!("PowerGossip ({})", self.iters)
     }
 
-    fn round_begin(&mut self, round: usize, w: &mut [f32],
-                   out: &mut Outbox) -> Result<()> {
+    fn round_begin(&mut self, round: usize, view: &TopologyView,
+                   w: &mut [f32], out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)?;
         self.cur_round = round;
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
         for (jj, &j) in neighbors.iter().enumerate() {
+            if !self.edges[jj].live || round < self.edges[jj].offset {
+                // Dead or not-yet-activated incarnation: no
+                // conversation this round.
+                continue;
+            }
             if self.edges[jj].active.is_some() {
                 // Straddling conversation: queue this round's start.
                 // Sync never gets here — round_end barriers on every
@@ -513,8 +620,16 @@ impl NodeStateMachine for PowerGossipNode {
     // module docs), so a stale or ahead-of-us message is simply the
     // next payload of its edge's FIFO conversation stream.
     fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
-                  w: &mut [f32], out: &mut Outbox) -> Result<()> {
+                  view: &TopologyView, w: &mut [f32],
+                  out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)?;
         let jj = self.neighbor_slot(from)?;
+        ensure!(
+            self.edges[jj].live,
+            "PowerGossip node {}: payload from {from} on a churned-out \
+             edge (the engine should have dropped it)",
+            self.node
+        );
         if !self.policy.is_async() {
             ensure!(
                 msg_round == self.cur_round,
@@ -542,25 +657,30 @@ impl NodeStateMachine for PowerGossipNode {
     }
 
     fn round_complete(&self) -> bool {
-        let clocks: Vec<i64> =
-            self.edges.iter().map(|e| e.last_completed).collect();
-        super::staleness_gate(self.policy, self.cur_round, &clocks)
+        super::staleness_gate(self.policy, self.cur_round, &self.clocks())
     }
 
     fn policy(&self) -> Option<RoundPolicy> {
         Some(self.policy)
     }
 
-    fn round_end(&mut self, round: usize, w: &mut [f32]) -> Result<()> {
+    fn on_topology(&mut self, view: &TopologyView, _w: &mut [f32],
+                   _out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)
+    }
+
+    fn round_end(&mut self, round: usize, view: &TopologyView,
+                 w: &mut [f32]) -> Result<()> {
+        self.sync_view(view)?;
         // The staleness bound is a hard protocol invariant on the
         // per-edge conversation clock, exactly like C-ECL's dual clock:
         // finishing a round while an edge's newest completed
         // conversation is older than `max_staleness` is an error, not a
-        // silent quality loss.
-        let clocks: Vec<i64> =
-            self.edges.iter().map(|e| e.last_completed).collect();
+        // silent quality loss.  Dead edges are excluded; a reborn
+        // edge's clock counts from its activation round.
         let lag = super::check_staleness(self.policy, self.node,
-                                         "conversation", round, &clocks)?;
+                                         "conversation", round,
+                                         &self.clocks())?;
         self.max_lag_seen = self.max_lag_seen.max(lag);
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
         // Deferred application: fold every conversation completed since
@@ -633,13 +753,15 @@ impl NodeAlgorithm for PowerGossipNode {
     fn exchange(&mut self, round: usize, w: &mut [f32], comm: &NodeComm)
                 -> Result<()> {
         // Blocking driver over the per-edge conversations (the threaded
-        // bus is bulk-synchronous, so this is the sync schedule).  Every
-        // send of ours is triggered by a receive from the SAME neighbor
-        // (after the opening p halves), so draining one edge to
-        // completion before the next cannot deadlock: the peer never
-        // needs traffic from a third party to produce its next message.
+        // bus is bulk-synchronous and epoch-constant, so this is the
+        // sync schedule over the static full view).  Every send of ours
+        // is triggered by a receive from the SAME neighbor (after the
+        // opening p halves), so draining one edge to completion before
+        // the next cannot deadlock: the peer never needs traffic from a
+        // third party to produce its next message.
+        let view = Arc::clone(&self.full_view);
         let mut out = Outbox::new();
-        NodeStateMachine::round_begin(self, round, w, &mut out)?;
+        NodeStateMachine::round_begin(self, round, &view, w, &mut out)?;
         for (to, msg) in out.drain() {
             comm.send(to, msg)?;
         }
@@ -647,13 +769,14 @@ impl NodeAlgorithm for PowerGossipNode {
         for (jj, &j) in neighbors.iter().enumerate() {
             while self.edges[jj].last_completed < round as i64 {
                 let msg = comm.recv(j)?;
-                NodeStateMachine::on_message(self, round, j, msg, w, &mut out)?;
+                NodeStateMachine::on_message(self, round, j, msg, &view, w,
+                                             &mut out)?;
                 for (to, m) in out.drain() {
                     comm.send(to, m)?;
                 }
             }
         }
-        NodeStateMachine::round_end(self, round, w)
+        NodeStateMachine::round_end(self, round, &view, w)
     }
 }
 
@@ -696,6 +819,10 @@ mod tests {
 
     fn build(i: usize, graph: &Arc<Graph>, iters: usize) -> PowerGossipNode {
         build_policy(i, graph, iters, RoundPolicy::Sync)
+    }
+
+    fn full_view(graph: &Arc<Graph>) -> TopologyView {
+        TopologyView::full(graph.edges().len())
     }
 
     #[test]
@@ -749,6 +876,7 @@ mod tests {
                 round: 0,
                 receiver: 1,
                 dim: ds.d_pad,
+                epoch: 0,
             };
             let x: Vec<f32> = (0..ds.d_pad).map(|i| i as f32 * 0.1).collect();
             let frame = codec.encode(&x, &ctx);
@@ -867,6 +995,7 @@ mod tests {
         });
 
         // Poll-driven form, messages shuttled through queues.
+        let view = full_view(&graph);
         let mut a = build(0, &graph, 2);
         let mut b = build(1, &graph, 2);
         let mut wa = init_w(0);
@@ -874,19 +1003,22 @@ mod tests {
         let mut out = Outbox::new();
         let mut q_ab: VecDeque<Msg> = VecDeque::new();
         let mut q_ba: VecDeque<Msg> = VecDeque::new();
-        NodeStateMachine::round_begin(&mut a, 0, &mut wa, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut a, 0, &view, &mut wa, &mut out)
+            .unwrap();
         for (to, m) in out.drain() {
             assert_eq!(to, 1);
             q_ab.push_back(m);
         }
-        NodeStateMachine::round_begin(&mut b, 0, &mut wb, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut b, 0, &view, &mut wb, &mut out)
+            .unwrap();
         for (to, m) in out.drain() {
             assert_eq!(to, 0);
             q_ba.push_back(m);
         }
         while !(q_ab.is_empty() && q_ba.is_empty()) {
             if let Some(m) = q_ba.pop_front() {
-                NodeStateMachine::on_message(&mut a, 0, 1, m, &mut wa, &mut out)
+                NodeStateMachine::on_message(&mut a, 0, 1, m, &view, &mut wa,
+                                             &mut out)
                     .unwrap();
                 for (to, m) in out.drain() {
                     assert_eq!(to, 1);
@@ -894,7 +1026,8 @@ mod tests {
                 }
             }
             if let Some(m) = q_ab.pop_front() {
-                NodeStateMachine::on_message(&mut b, 0, 0, m, &mut wb, &mut out)
+                NodeStateMachine::on_message(&mut b, 0, 0, m, &view, &mut wb,
+                                             &mut out)
                     .unwrap();
                 for (to, m) in out.drain() {
                     assert_eq!(to, 0);
@@ -903,14 +1036,14 @@ mod tests {
             }
         }
         assert!(a.round_complete() && b.round_complete());
-        NodeStateMachine::round_end(&mut a, 0, &mut wa).unwrap();
-        NodeStateMachine::round_end(&mut b, 0, &mut wb).unwrap();
+        NodeStateMachine::round_end(&mut a, 0, &view, &mut wa).unwrap();
+        NodeStateMachine::round_end(&mut b, 0, &view, &mut wb).unwrap();
         assert_eq!(wa, ws_t[0], "node 0 diverged from threaded engine");
         assert_eq!(wb, ws_t[1], "node 1 diverged from threaded engine");
         // A stray frame after the round's conversation completed is a
         // typed protocol error under sync, not a silent buffer.
         let err = NodeStateMachine::on_message(
-            &mut a, 0, 1, Msg::Dense(vec![0.0; 4]), &mut wa, &mut out,
+            &mut a, 0, 1, Msg::Dense(vec![0.0; 4]), &view, &mut wa, &mut out,
         )
         .unwrap_err();
         assert!(err.to_string().contains("unexpected message"), "{err}");
@@ -923,6 +1056,7 @@ mod tests {
         // 1's start is queued, and A's w is untouched until the
         // conversation completes and the NEXT round_end applies it.
         let graph = Arc::new(Graph::chain(2));
+        let view = full_view(&graph);
         let policy = RoundPolicy::Async { max_staleness: 1 };
         let mut a = build_policy(0, &graph, 1, policy);
         let mut b = build_policy(1, &graph, 1, policy);
@@ -940,36 +1074,41 @@ mod tests {
 
         // A: round 0 begins, sends its opening p halves, and — with
         // staleness 1 — may finish round 0 without hearing back.
-        NodeStateMachine::round_begin(&mut a, 0, &mut wa, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut a, 0, &view, &mut wa, &mut out)
+            .unwrap();
         for (to, m) in out.drain() {
             assert_eq!(to, 1);
             to_b.push_back(m);
         }
         assert!(a.round_complete(), "async:1 must not block round 0");
-        NodeStateMachine::round_end(&mut a, 0, &mut wa).unwrap();
+        NodeStateMachine::round_end(&mut a, 0, &view, &mut wa).unwrap();
         assert_eq!(wa, wa0, "no conversation done: w must be untouched");
 
         // A: round 1 begins while conversation 0 is still in flight —
         // the round's conversation start is queued, not interleaved.
-        NodeStateMachine::round_begin(&mut a, 1, &mut wa, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut a, 1, &view, &mut wa, &mut out)
+            .unwrap();
         assert!(out.is_empty(), "straddling edge queues its start");
         assert!(!a.round_complete(), "round 1 needs conversation 0");
 
         // B: round 0 begins; the two nodes now finish conversation 0.
-        NodeStateMachine::round_begin(&mut b, 0, &mut wb, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut b, 0, &view, &mut wb, &mut out)
+            .unwrap();
         let mut to_a: VecDeque<Msg> = out.drain().map(|(_, m)| m).collect();
         loop {
             let mut progressed = false;
             if let Some(m) = to_a.pop_front() {
                 // B's sends carry B's round stamp (0) while A sits at
                 // round 1 — exactly the skew conversation counters absorb.
-                NodeStateMachine::on_message(&mut a, 0, 1, m, &mut wa, &mut out)
+                NodeStateMachine::on_message(&mut a, 0, 1, m, &view, &mut wa,
+                                             &mut out)
                     .unwrap();
                 out.drain().for_each(|(_, m)| to_b.push_back(m));
                 progressed = true;
             }
             if let Some(m) = to_b.pop_front() {
-                NodeStateMachine::on_message(&mut b, 1, 0, m, &mut wb, &mut out)
+                NodeStateMachine::on_message(&mut b, 1, 0, m, &view, &mut wb,
+                                             &mut out)
                     .unwrap();
                 out.drain().for_each(|(_, m)| to_a.push_back(m));
                 progressed = true;
@@ -983,7 +1122,7 @@ mod tests {
         assert_eq!(a.edges[0].last_completed, 0);
         assert_eq!(b.edges[0].last_completed, 0);
         assert!(a.round_complete());
-        NodeStateMachine::round_end(&mut a, 1, &mut wa).unwrap();
+        NodeStateMachine::round_end(&mut a, 1, &view, &mut wa).unwrap();
         assert_ne!(wa, wa0, "deferred correction must apply at round_end");
         assert_eq!(NodeStateMachine::max_staleness_seen(&a), 1);
 
@@ -997,16 +1136,76 @@ mod tests {
     #[test]
     fn async_round_end_past_staleness_bound_is_typed_error() {
         let graph = Arc::new(Graph::ring(4));
+        let view = full_view(&graph);
         let policy = RoundPolicy::Async { max_staleness: 1 };
         let mut node = build_policy(0, &graph, 1, policy);
         let mut w = vec![0.5f32; 32];
         let mut out = Outbox::new();
-        NodeStateMachine::round_begin(&mut node, 0, &mut w, &mut out).unwrap();
-        NodeStateMachine::round_end(&mut node, 0, &mut w).unwrap();
-        NodeStateMachine::round_begin(&mut node, 1, &mut w, &mut out).unwrap();
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
+        NodeStateMachine::round_end(&mut node, 0, &view, &mut w).unwrap();
+        NodeStateMachine::round_begin(&mut node, 1, &view, &mut w, &mut out)
+            .unwrap();
         assert!(!node.round_complete(), "round 1 needs conversation 0");
-        let err = NodeStateMachine::round_end(&mut node, 1, &mut w)
+        let err = NodeStateMachine::round_end(&mut node, 1, &view, &mut w)
             .unwrap_err();
         assert!(err.to_string().contains("would consume"), "{err}");
+    }
+
+    #[test]
+    fn edge_rebirth_resets_conversations_and_reseeds_qhat() {
+        // Kill edge (0, 1) mid-conversation, then revive it: the
+        // in-flight conversation is torn down (typed teardown — nothing
+        // from the old epoch can resume), the conversation counter
+        // restarts at the activation round, and the q̂ warm start
+        // re-derives from the epoch-keyed stream — different from epoch
+        // 0's, but still identical at both endpoints.
+        let graph = Arc::new(Graph::chain(2));
+        let mut view = full_view(&graph);
+        let mut a = build(0, &graph, 2);
+        let mut b = build(1, &graph, 2);
+        let q0 = a.states[0][0].q_hat.clone();
+        let mut w = vec![0.5f32; 32];
+        let mut out = Outbox::new();
+        // Open a conversation (never completed: the peer stays silent).
+        NodeStateMachine::round_begin(&mut a, 0, &view, &mut w, &mut out)
+            .unwrap();
+        assert!(a.edges[0].active.is_some());
+        out.drain().for_each(drop);
+
+        let e01 = graph.edge_index(0, 1).unwrap();
+        view.kill_edge(e01);
+        NodeStateMachine::on_topology(&mut a, &view, &mut w, &mut out)
+            .unwrap();
+        assert!(a.edges[0].active.is_none(), "conversation not torn down");
+        assert!(!a.edges[0].live);
+        // With its only edge dead, the sync gate is trivially open.
+        assert!(a.round_complete());
+
+        view.revive_edge(e01, 5);
+        NodeStateMachine::on_topology(&mut a, &view, &mut w, &mut out)
+            .unwrap();
+        NodeStateMachine::on_topology(&mut b, &view, &mut w, &mut out)
+            .unwrap();
+        assert_eq!(a.edges[0].epoch, 1);
+        assert_eq!(a.edges[0].offset, 5);
+        assert_eq!(a.edges[0].next_conv, 0, "counter restarts per epoch");
+        // Fresh-epoch q̂: not the epoch-0 stream, but lockstep across
+        // the endpoints.
+        assert_ne!(a.states[0][0].q_hat, q0, "epoch must reseed q̂");
+        for v in 0..a.views.len() {
+            assert_eq!(a.states[0][v].q_hat, b.states[0][v].q_hat,
+                       "view {v}: endpoints desynchronized");
+        }
+        // Before activation the edge starts no conversation…
+        NodeStateMachine::round_begin(&mut a, 4, &view, &mut w, &mut out)
+            .unwrap();
+        assert!(out.is_empty());
+        assert!(a.edges[0].active.is_none());
+        // …and at activation it opens conversation 0 of the new epoch.
+        NodeStateMachine::round_begin(&mut a, 5, &view, &mut w, &mut out)
+            .unwrap();
+        assert!(a.edges[0].active.is_some());
+        assert!(!out.is_empty());
     }
 }

@@ -59,6 +59,11 @@ pub enum CommError {
     /// A payload failed validation while decoding (corrupt indices,
     /// truncated frame) — carries the codec layer's rendered error.
     Corrupt { detail: String },
+    /// The frame was in flight when its edge churned out of the
+    /// topology (or the edge was reborn into a new epoch before
+    /// delivery): the virtual-time engine drains it as a typed drop
+    /// instead of delivering cross-incarnation state.
+    ChurnDropped { src: usize, dst: usize, edge: usize },
 }
 
 impl fmt::Display for CommError {
@@ -75,6 +80,13 @@ impl fmt::Display for CommError {
             }
             CommError::Corrupt { detail } => {
                 write!(f, "corrupt payload: {detail}")
+            }
+            CommError::ChurnDropped { src, dst, edge } => {
+                write!(
+                    f,
+                    "frame {src}->{dst} dropped: edge {edge} churned \
+                     out of the topology in flight"
+                )
             }
         }
     }
@@ -156,6 +168,11 @@ pub struct Envelope {
     /// the rest); under `Async` the stamp is handed to the machine
     /// as-is, which uses it to key shared-seed codec state.
     pub round: usize,
+    /// The edge incarnation (`EdgeLife::epoch`) at send time.  A frame
+    /// whose epoch no longer matches the edge at delivery time was in
+    /// flight across a churn event and drains as a typed drop — stale
+    /// incarnation state can never be delivered.
+    pub epoch: u32,
     pub payload: Msg,
 }
 
@@ -205,6 +222,15 @@ pub struct Meter {
     /// High-water mark of the virtual clock, in nanoseconds (0 under the
     /// threaded engine).
     vtime_ns: AtomicU64,
+    /// Frames dropped by topology churn (in flight on a removed edge or
+    /// across an epoch change).  Their payload bytes stay in `sent` —
+    /// the transmission happened; the delivery did not.
+    churn_dropped_frames: AtomicU64,
+    /// Payload bytes of those dropped frames.
+    churn_dropped_bytes: AtomicU64,
+    /// Edge lifecycle transitions (kills + revivals) applied by the
+    /// engine.
+    edges_churned: AtomicU64,
 }
 
 impl Meter {
@@ -214,6 +240,9 @@ impl Meter {
             msgs: (0..n).map(|_| AtomicU64::new(0)).collect(),
             retrans: (0..n).map(|_| AtomicU64::new(0)).collect(),
             vtime_ns: AtomicU64::new(0),
+            churn_dropped_frames: AtomicU64::new(0),
+            churn_dropped_bytes: AtomicU64::new(0),
+            edges_churned: AtomicU64::new(0),
         })
     }
 
@@ -225,6 +254,31 @@ impl Meter {
     /// Account bytes burned on retransmissions (beyond the first copy).
     pub fn record_retransmit(&self, node: usize, bytes: u64) {
         self.retrans[node].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Account a frame drained by topology churn (typed drop, not an
+    /// error): sent-byte accounting is untouched, only the loss is
+    /// counted.
+    pub fn record_churn_drop(&self, bytes: u64) {
+        self.churn_dropped_frames.fetch_add(1, Ordering::Relaxed);
+        self.churn_dropped_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Account one edge lifecycle transition (kill or revival).
+    pub fn record_edge_churn(&self) {
+        self.edges_churned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn churn_dropped_frames(&self) -> u64 {
+        self.churn_dropped_frames.load(Ordering::Relaxed)
+    }
+
+    pub fn churn_dropped_bytes(&self) -> u64 {
+        self.churn_dropped_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn edges_churned(&self) -> u64 {
+        self.edges_churned.load(Ordering::Relaxed)
     }
 
     /// Advance the virtual clock high-water mark.
@@ -271,6 +325,9 @@ impl Meter {
             a.store(0, Ordering::Relaxed);
         }
         self.vtime_ns.store(0, Ordering::Relaxed);
+        self.churn_dropped_frames.store(0, Ordering::Relaxed);
+        self.churn_dropped_bytes.store(0, Ordering::Relaxed);
+        self.edges_churned.store(0, Ordering::Relaxed);
     }
 }
 
@@ -482,7 +539,14 @@ mod tests {
         let c0 = comms.pop().unwrap();
         let spec = CodecSpec::RandK { k_frac: 0.5, mode: WireMode::Explicit };
         let mut codec = spec.build();
-        let ctx = EdgeCtx { seed: 1, edge: 0, round: 0, receiver: 1, dim: 64 };
+        let ctx = EdgeCtx {
+            seed: 1,
+            edge: 0,
+            round: 0,
+            receiver: 1,
+            dim: 64,
+            epoch: 0,
+        };
         let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
         let frame = codec.encode(&x, &ctx);
         let want_bytes = frame.wire_bytes();
@@ -526,6 +590,28 @@ mod tests {
         m.reset();
         assert_eq!(m.total_retransmit_bytes(), 0);
         assert_eq!(m.vtime_ns(), 0);
+    }
+
+    #[test]
+    fn meter_churn_counters_are_byte_exact_and_resettable() {
+        let m = Meter::new(2);
+        m.record_send(0, 64);
+        // The frame drops in flight: the send stays metered (the bytes
+        // left the NIC), the loss is counted separately.
+        m.record_churn_drop(64);
+        m.record_edge_churn();
+        m.record_edge_churn();
+        assert_eq!(m.total_bytes(), 64);
+        assert_eq!(m.churn_dropped_frames(), 1);
+        assert_eq!(m.churn_dropped_bytes(), 64);
+        assert_eq!(m.edges_churned(), 2);
+        m.reset();
+        assert_eq!(m.churn_dropped_frames(), 0);
+        assert_eq!(m.churn_dropped_bytes(), 0);
+        assert_eq!(m.edges_churned(), 0);
+        // The typed drop renders with its route.
+        let e = CommError::ChurnDropped { src: 1, dst: 0, edge: 3 };
+        assert!(e.to_string().contains("edge 3"), "{e}");
     }
 
     #[test]

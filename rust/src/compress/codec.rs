@@ -161,20 +161,43 @@ pub struct EdgeCtx {
     pub receiver: usize,
     /// Dense dimension of the vectors on this edge.
     pub dim: usize,
+    /// Edge incarnation (`TopologyView`'s `EdgeLife::epoch`): 0 for the
+    /// edge as constructed, bumped on every churn re-add.  Both
+    /// endpoints observe the same epoch for a given message (the engine
+    /// drops cross-epoch frames in flight), so including it in the
+    /// shared-seed derivation keeps the RNG streams in lockstep across
+    /// a remove/re-add — and distinct from the previous incarnation's.
+    pub epoch: u32,
 }
 
 impl EdgeCtx {
-    /// The shared-seed RNG for this message (same derivation both ends).
+    /// The shared-seed RNG for this message (same derivation both
+    /// ends).  Epoch 0 keeps the legacy 4-element derivation path so
+    /// static schedules replay the exact pre-churn streams
+    /// bit-identically; later incarnations fold the epoch in.
     pub fn mask_rng(&self) -> Pcg {
-        Pcg::derive(
-            self.seed,
-            &[
-                streams::EDGE_MASK,
-                self.edge as u64,
-                self.round as u64,
-                self.receiver as u64,
-            ],
-        )
+        if self.epoch == 0 {
+            Pcg::derive(
+                self.seed,
+                &[
+                    streams::EDGE_MASK,
+                    self.edge as u64,
+                    self.round as u64,
+                    self.receiver as u64,
+                ],
+            )
+        } else {
+            Pcg::derive(
+                self.seed,
+                &[
+                    streams::EDGE_MASK,
+                    self.edge as u64,
+                    self.round as u64,
+                    self.receiver as u64,
+                    self.epoch as u64,
+                ],
+            )
+        }
     }
 }
 
@@ -1212,6 +1235,7 @@ pub fn measure_codec_contraction(
             round: t,
             receiver: 0,
             dim: x.len(),
+            epoch: 0,
         };
         let frame = codec.encode(x, &ctx);
         let dense = codec.decode(&frame, &ctx).expect("self-decode");
@@ -1244,6 +1268,7 @@ mod tests {
             round,
             receiver: 1,
             dim,
+            epoch: 0,
         }
     }
 

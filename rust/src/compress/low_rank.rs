@@ -291,16 +291,20 @@ impl EdgeCodec for LowRankCodec {
                 .map(|(v, &(_, _, cols, _))| {
                     (0..self.rank)
                         .map(|r| {
-                            let mut rng = Pcg::derive(
-                                ctx.seed,
-                                &[
-                                    streams::POWER,
-                                    ctx.edge as u64,
-                                    ctx.receiver as u64,
-                                    v as u64,
-                                    r as u64,
-                                ],
-                            );
+                            // Epoch 0 keeps the legacy derivation path
+                            // (bit-identical static replay); a reborn
+                            // edge draws a fresh, still-shared stream.
+                            let mut path = vec![
+                                streams::POWER,
+                                ctx.edge as u64,
+                                ctx.receiver as u64,
+                                v as u64,
+                                r as u64,
+                            ];
+                            if ctx.epoch > 0 {
+                                path.push(ctx.epoch as u64);
+                            }
+                            let mut rng = Pcg::derive(ctx.seed, &path);
                             LowRankEdgeState::new(cols, &mut rng)
                         })
                         .collect()
@@ -327,19 +331,21 @@ impl EdgeCodec for LowRankCodec {
                         p = matvec_f32(&res, rows, cols, &q_used);
                     } else {
                         // Warm start for the next encode; reseed if the
-                        // residual collapsed (rank < R input).
-                        let mut reseed = Pcg::derive(
-                            ctx.seed,
-                            &[
-                                streams::POWER,
-                                u64::MAX,
-                                ctx.edge as u64,
-                                ctx.receiver as u64,
-                                v as u64,
-                                r as u64,
-                                ctx.round as u64,
-                            ],
-                        );
+                        // residual collapsed (rank < R input).  Epoch 0
+                        // keeps the legacy path (static replay).
+                        let mut path = vec![
+                            streams::POWER,
+                            u64::MAX,
+                            ctx.edge as u64,
+                            ctx.receiver as u64,
+                            v as u64,
+                            r as u64,
+                            ctx.round as u64,
+                        ];
+                        if ctx.epoch > 0 {
+                            path.push(ctx.epoch as u64);
+                        }
+                        let mut reseed = Pcg::derive(ctx.seed, &path);
                         self.states[v][r].q_hat = q_next;
                         self.states[v][r].reseed_if_degenerate(&mut reseed);
                     }
@@ -528,6 +534,7 @@ mod tests {
             round,
             receiver: 1,
             dim,
+            epoch: 0,
         }
     }
 

@@ -8,10 +8,14 @@
 //!   nodes).
 //! * **Simulated** — the event-driven virtual-time engine
 //!   (`crate::sim`): single thread, 512+ nodes, pluggable link models
-//!   (latency / bandwidth / drops / stragglers / outages), and a
-//!   simulated time-to-accuracy clock.  Local numerics run through the
-//!   PJRT artifacts when present ([`run_with_engine`]) or through the
-//!   artifact-free softmax backend ([`run_simulated_native`]).
+//!   (latency / bandwidth / drops / stragglers), a time-varying
+//!   topology (`SimConfig::churn`: outage holds, edge churn, node
+//!   join-leave), and a simulated time-to-accuracy clock.  Local
+//!   numerics run through the PJRT artifacts when present
+//!   ([`run_with_engine`]) or through the artifact-free softmax
+//!   backend ([`run_simulated_native`]).  The threaded engine is
+//!   epoch-constant by construction — churn schedules exist only on
+//!   the simulated path.
 //!
 //! Round structure (paper §5.1): every node runs `K = local_steps`
 //! minibatch updates of Eq. (6) (gossip methods: `alpha_deg = 0` ⇒ plain
@@ -127,6 +131,13 @@ pub struct Report {
     /// Largest per-edge staleness (rounds) any node consumed — 0 under
     /// sync rounds and the threaded engine.
     pub max_staleness: usize,
+    /// Edge lifecycle transitions applied by the churn scheduler — 0 on
+    /// a static schedule and under the threaded engine (which accepts
+    /// only epoch-constant schedules).
+    pub edges_churned: u64,
+    /// Frames drained in flight by topology churn (their payload bytes
+    /// stay in the send accounting — byte-exact metering).
+    pub frames_dropped_by_churn: u64,
     pub wallclock_secs: f64,
 }
 
@@ -381,6 +392,8 @@ fn run_threaded(
         retransmit_bytes: 0,
         sim_time_secs: None,
         max_staleness: 0,
+        edges_churned: 0,
+        frames_dropped_by_churn: 0,
         wallclock_secs: t0.elapsed().as_secs_f64(),
     })
 }
@@ -494,6 +507,8 @@ where
         retransmit_bytes: out.meter.total_retransmit_bytes(),
         sim_time_secs: Some(out.vtime_ns as f64 / 1e9),
         max_staleness: out.max_staleness,
+        edges_churned: out.edges_churned,
+        frames_dropped_by_churn: out.meter.churn_dropped_frames(),
         wallclock_secs: t0.elapsed().as_secs_f64(),
     })
 }
@@ -685,6 +700,59 @@ mod tests {
             ..Default::default()
         };
         assert!(effective_graph(&spec, &g).is_err());
+    }
+
+    #[test]
+    fn native_sim_churn_counters_surface_in_report() {
+        use crate::graph::ChurnSchedule;
+        let graph = Graph::ring(6);
+        let mut churn = ChurnSchedule::default();
+        // 40% per edge per 1 ms slot: across ~7 slots x 6 edges the
+        // probability of a seeded run with zero transitions is ~1e-9.
+        churn.random_edge_churn_with_slot(0.4, 3, 1_000_000);
+        let spec = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: AlgorithmSpec::CEcl {
+                k_frac: 0.2,
+                theta: 1.0,
+                dense_first_epoch: false,
+            },
+            epochs: 3,
+            nodes: 6,
+            train_per_node: 20,
+            test_size: 40,
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 1,
+            seed: 11,
+            exec: ExecMode::Simulated(SimConfig {
+                link: LinkSpec::Constant { latency_us: 500 },
+                churn,
+                ..SimConfig::default()
+            }),
+            rounds: RoundPolicy::Async { max_staleness: 2 },
+            ..Default::default()
+        };
+        let a = run_simulated_native(&spec, &graph).unwrap();
+        assert!(a.edges_churned > 0, "0.2/2ms churn must transition");
+        assert!(a.final_accuracy.is_finite());
+        assert!(a.max_staleness <= 2, "bound over live edges only");
+        // Replays bit-identically, churn and all.
+        let b = run_simulated_native(&spec, &graph).unwrap();
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+        assert_eq!(a.edges_churned, b.edges_churned);
+        assert_eq!(a.frames_dropped_by_churn, b.frames_dropped_by_churn);
+        // A static run reports zeros (the drivers print `—`).
+        let static_spec = ExperimentSpec {
+            exec: ExecMode::Simulated(SimConfig {
+                link: LinkSpec::Constant { latency_us: 500 },
+                ..SimConfig::default()
+            }),
+            ..spec.clone()
+        };
+        let s = run_simulated_native(&static_spec, &graph).unwrap();
+        assert_eq!(s.edges_churned, 0);
+        assert_eq!(s.frames_dropped_by_churn, 0);
     }
 
     #[test]

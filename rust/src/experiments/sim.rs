@@ -20,7 +20,7 @@ use crate::compress::{CodecSpec, WireMode};
 use crate::coordinator::{run_simulated_native, ExecMode, ExperimentSpec,
                          Report};
 use crate::data::Partition;
-use crate::graph::Graph;
+use crate::graph::{ChurnSchedule, Graph};
 use crate::sim::{LinkSpec, SimConfig};
 use crate::util::table::Table;
 
@@ -88,13 +88,30 @@ pub fn policy_ladder(sizing: &Sizing) -> Vec<RoundPolicy> {
     }
 }
 
+/// The churn sweep for a base schedule: static alone when nothing
+/// churns, otherwise static plus the requested schedule — every churn
+/// row gets its static baseline right above it, mirroring
+/// [`policy_ladder`].
+pub fn churn_ladder(base: &ChurnSchedule) -> Vec<ChurnSchedule> {
+    if base.has_churn() {
+        vec![ChurnSchedule::new(), base.clone()]
+    } else {
+        // Epoch-constant (possibly outage-only) schedule: one row.
+        vec![base.clone()]
+    }
+}
+
 /// Run the time-to-accuracy table on a ring. `target_acc` picks the
 /// accuracy threshold the "t2a" column reports; `policies` is the
-/// round-policy sweep (see [`policy_ladder`]).  A method that cannot
-/// run a policy is skipped rather than failing the whole table (no
-/// current method is — PowerGossip joined the async contract via
-/// per-edge conversation counters); rows that never reach the target
-/// print `—` in the t2a column instead of aborting the sweep.
+/// round-policy sweep (see [`policy_ladder`]).  The churn ladder is
+/// derived from `cfg_base.churn` ([`churn_ladder`]): a churn-bearing
+/// schedule runs every row twice, static baseline first.  A method
+/// that cannot run a policy is skipped rather than failing the whole
+/// table (no current method is — PowerGossip joined the async contract
+/// via per-edge conversation counters); rows that never reach the
+/// target print `—` in the t2a column instead of aborting the sweep,
+/// and static rows print `—` in the churn counters (the PR 4
+/// convention).
 pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
                      policies: &[RoundPolicy])
                      -> Result<(Table, Vec<Report>)> {
@@ -108,10 +125,13 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
         "method".into(),
         "link".into(),
         "rounds".into(),
+        "churn".into(),
         "final acc".into(),
         "sim secs".into(),
         format!("t2a@{:.0}%", target_acc * 100.0),
         "lag".into(),
+        "churned".into(),
+        "chdrops".into(),
         "KB/node/epoch".into(),
         "retrans KB".into(),
     ];
@@ -123,53 +143,69 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
         theta: 1.0,
         dense_first_epoch: false,
     }));
+    let churns = churn_ladder(&cfg_base.churn);
     for alg in methods {
         for link in link_ladder() {
             for &policy in policies {
                 if policy.is_async() && !alg.supports_async() {
                     continue;
                 }
-                let mut spec: ExperimentSpec =
-                    sizing.spec_base(&dataset, Partition::Homogeneous);
-                spec.algorithm = alg.clone();
-                spec.rounds = policy;
-                spec.exec = ExecMode::Simulated(SimConfig {
-                    link: link.clone(),
-                    ..cfg_base.clone()
-                });
-                if sizing.verbose {
-                    eprintln!("[sim] {} / {} / {} ...", alg.name(),
-                              link.name(), policy.name());
+                for churn in &churns {
+                    let mut spec: ExperimentSpec =
+                        sizing.spec_base(&dataset, Partition::Homogeneous);
+                    spec.algorithm = alg.clone();
+                    spec.rounds = policy;
+                    spec.exec = ExecMode::Simulated(SimConfig {
+                        link: link.clone(),
+                        churn: churn.clone(),
+                        ..cfg_base.clone()
+                    });
+                    if sizing.verbose {
+                        eprintln!("[sim] {} / {} / {} / {} ...", alg.name(),
+                                  link.name(), policy.name(), churn.label());
+                    }
+                    let report = run_simulated_native(&spec, &graph)?;
+                    // A run that never reached the target
+                    // (straggler-heavy lossy rows genuinely may not)
+                    // prints `—` instead of aborting the sweep — same
+                    // for a missing virtual clock, and for the churn
+                    // counters of static rows.
+                    let t2a = report
+                        .history
+                        .time_to_accuracy(target_acc)
+                        .map(|(_, t)| format!("{t:.2}s"))
+                        .unwrap_or_else(|| "—".to_string());
+                    let sim_secs = report
+                        .sim_time_secs
+                        .map(|t| format!("{t:.2}"))
+                        .unwrap_or_else(|| "—".to_string());
+                    let (churned, chdrops) = if churn.has_churn() {
+                        (
+                            format!("{}", report.edges_churned),
+                            format!("{}", report.frames_dropped_by_churn),
+                        )
+                    } else {
+                        ("—".to_string(), "—".to_string())
+                    };
+                    table.row([
+                        report.algorithm.clone(),
+                        link.name(),
+                        policy.name(),
+                        churn.label(),
+                        format!("{:.3}", report.final_accuracy),
+                        sim_secs,
+                        t2a,
+                        format!("{}", report.max_staleness),
+                        churned,
+                        chdrops,
+                        format!("{:.0}", report.mean_bytes_per_epoch / 1024.0),
+                        format!(
+                            "{:.0}",
+                            report.retransmit_bytes as f64 / 1024.0
+                        ),
+                    ]);
+                    reports.push(report);
                 }
-                let report = run_simulated_native(&spec, &graph)?;
-                // A run that never reached the target (straggler-heavy
-                // lossy rows genuinely may not) prints `—` instead of
-                // aborting the sweep — same for a missing virtual
-                // clock.
-                let t2a = report
-                    .history
-                    .time_to_accuracy(target_acc)
-                    .map(|(_, t)| format!("{t:.2}s"))
-                    .unwrap_or_else(|| "—".to_string());
-                let sim_secs = report
-                    .sim_time_secs
-                    .map(|t| format!("{t:.2}"))
-                    .unwrap_or_else(|| "—".to_string());
-                table.row([
-                    report.algorithm.clone(),
-                    link.name(),
-                    policy.name(),
-                    format!("{:.3}", report.final_accuracy),
-                    sim_secs,
-                    t2a,
-                    format!("{}", report.max_staleness),
-                    format!("{:.0}", report.mean_bytes_per_epoch / 1024.0),
-                    format!(
-                        "{:.0}",
-                        report.retransmit_bytes as f64 / 1024.0
-                    ),
-                ]);
-                reports.push(report);
             }
         }
     }
@@ -272,6 +308,49 @@ mod tests {
             "PowerGossip rows must not be skipped"
         );
         assert!(reports.iter().all(|r| r.max_staleness <= 2));
+    }
+
+    #[test]
+    fn churn_ladder_doubles_rows_and_prints_dash_for_static() {
+        use crate::graph::ChurnSchedule;
+        // The ladder: static alone for epoch-constant schedules, static
+        // + churn when the schedule tears topology.
+        assert_eq!(churn_ladder(&ChurnSchedule::new()).len(), 1);
+        let mut outage_only = ChurnSchedule::new();
+        outage_only.add_outage(0, 10, 20);
+        let ladder = churn_ladder(&outage_only);
+        assert_eq!(ladder.len(), 1, "outage-only is epoch-constant");
+        assert!(!ladder[0].is_empty(), "outage windows must be kept");
+        let mut churny = ChurnSchedule::new();
+        churny.random_edge_churn_with_slot(0.3, 5, 1_000_000);
+        let ladder = churn_ladder(&churny);
+        assert_eq!(ladder.len(), 2);
+        assert!(!ladder[0].has_churn(), "static baseline first");
+        assert!(ladder[1].has_churn());
+
+        // End-to-end: the table runs both rows per cell and prints the
+        // `—` convention in the churn counters of static rows.
+        let sizing = tiny_sizing();
+        let cfg = SimConfig {
+            churn: churny,
+            ..SimConfig::default()
+        };
+        let (table, reports) =
+            run_sim_table(&sizing, &cfg, 0.99, &policy_ladder(&sizing))
+                .unwrap();
+        assert_eq!(
+            reports.len(),
+            2 * sim_methods().len() * link_ladder().len()
+        );
+        let rendered = table.render();
+        assert!(rendered.contains("random:0.3"));
+        assert!(rendered.contains("static"));
+        assert!(rendered.contains("—"), "static rows print — counters");
+        // Churn rows surface real transition counts.
+        assert!(
+            reports.iter().any(|r| r.edges_churned > 0),
+            "no churn row transitioned"
+        );
     }
 
     #[test]

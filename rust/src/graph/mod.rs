@@ -3,8 +3,32 @@
 //! ring, multiplex ring, fully connected), Metropolis–Hastings gossip
 //! weights (Xiao–Boyd–Kim 2007, used by D-PSGD / PowerGossip per the
 //! paper's §D.1), and the A_{i|j} = ±I edge-sign convention of Eq. (2).
+//!
+//! ## Dynamic topology
+//!
+//! The base [`Graph`] stays immutable — it is the **universe** of edges
+//! a run may ever use.  Time variation is layered on top:
+//!
+//! * [`ChurnSchedule`] — when edges/nodes are out of service, in
+//!   virtual nanoseconds.  Two kinds of downtime
+//!   ([`DownKind`]): an **outage** holds traffic and preserves per-edge
+//!   protocol state (the remove/re-add pair that *preserves* state —
+//!   the old `OutageSchedule` semantics, folded in here), while
+//!   **churn** removes the edge from the topology: in-flight frames
+//!   drop, both endpoints tear down per-edge state (duals, codec
+//!   residuals, PowerGossip conversations), and a re-add is a fresh
+//!   edge *epoch*.  Node join/leave is churn on every incident edge.
+//! * [`TopologyView`] — the epoch-stamped live snapshot the execution
+//!   engines hand to every `NodeStateMachine` callback.  Each canonical
+//!   edge carries an [`EdgeLife`]: `live`, the incarnation `epoch`
+//!   (0 = as constructed; each churn re-add bumps it), and the
+//!   `activation_round` at which the incarnation starts carrying
+//!   traffic (assigned by the engine so both endpoints open the edge at
+//!   the same round number).  An empty schedule keeps the view at
+//!   version 0 forever — static runs take the exact legacy code paths
+//!   and replay bit-identically.
 
-use crate::util::rng::Pcg;
+use crate::util::rng::{splitmix64, streams, Pcg};
 
 /// The topologies evaluated in the paper (§5.3, Fig. 2) plus extras.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -15,8 +39,8 @@ pub enum Topology {
     MultiplexRing,
     FullyConnected,
     Star,
-    /// Connected Erdős–Rényi-style random graph with given extra-edge
-    /// probability (beyond a spanning ring that guarantees connectivity).
+    /// Connected Erdős–Rényi random graph: G(n, p) resampled until
+    /// connected ([`Graph::random_connected`]), `p` given in percent.
     Random { extra_p_percent: u8, seed: u64 },
 }
 
@@ -59,43 +83,182 @@ impl Topology {
     }
 }
 
-/// Time-varying topology hook: scheduled windows (in virtual
-/// nanoseconds) during which an edge of the canonical edge list is
-/// down.  The virtual-time engine holds traffic on a down edge until
-/// the window ends — links recover, messages are delayed rather than
-/// lost, so protocol semantics (eventual delivery) are preserved while
-/// outages stretch time-to-accuracy.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct OutageSchedule {
-    /// `(edge index, from_ns inclusive, until_ns exclusive)`.
-    windows: Vec<(usize, u64, u64)>,
+/// Why a scheduled edge is out of service — the semantic fork between
+/// the old outage behavior and real topology churn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DownKind {
+    /// Link outage: traffic queued on the edge is *held* until the
+    /// window ends (messages are delayed, never lost) and per-edge
+    /// protocol state survives — a remove/re-add pair that preserves
+    /// state.
+    Outage,
+    /// Topology churn: the edge leaves the graph.  In-flight frames
+    /// drain as typed drops, both endpoints retire their per-edge state
+    /// (dual `z_{i|j}`, error-feedback residuals, PowerGossip q̂ /
+    /// conversations), and a later re-add is a fresh [`EdgeLife`]
+    /// epoch.
+    Churn,
 }
 
-impl OutageSchedule {
-    pub fn new() -> OutageSchedule {
-        OutageSchedule::default()
+/// The CLI grammar for `--churn` (comma-separated items; `--outage
+/// e@from..to` is sugar for `outage:` items).
+pub const CHURN_GRAMMAR: &str = "edge:<e>@<from_ns>..<to_ns> | \
+     outage:<e>@<from_ns>..<to_ns> | node:<n>@join:<ns> | \
+     node:<n>@leave:<ns> | random:<rate>[:<seed>]";
+
+/// Default slot length of the `random:<rate>` churn rule: each edge is
+/// independently down (churn-kind) in each 10 ms slot with the given
+/// probability.
+pub const DEFAULT_CHURN_SLOT_NS: u64 = 10_000_000;
+
+/// How often [`Graph::random_connected`] resamples before giving up.
+pub const RANDOM_CONNECT_ATTEMPTS: u64 = 64;
+
+/// Time-varying topology schedule, in virtual nanoseconds: edge
+/// outage/churn windows, node join/leave, and an optional seeded random
+/// edge-churn rule.  Generalizes the old `OutageSchedule` (an outage is
+/// now just a [`DownKind::Outage`] window; the interval lookup is
+/// shared).  The threaded engine accepts only epoch-constant (empty)
+/// schedules; the virtual-time engine turns churn boundaries into
+/// first-class events.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChurnSchedule {
+    /// `(edge index, from_ns inclusive, until_ns exclusive, kind)`.
+    /// `until_ns == u64::MAX` means "for the rest of the run".
+    windows: Vec<(usize, u64, u64, DownKind)>,
+    /// `(node, from_ns, until_ns)` — the node is absent (all incident
+    /// edges churn-down) during the window.
+    node_windows: Vec<(usize, u64, u64)>,
+    /// `(rate, seed, slot_ns)` — i.i.d. per-edge per-slot churn.
+    random: Option<(f64, u64, u64)>,
+}
+
+impl ChurnSchedule {
+    pub fn new() -> ChurnSchedule {
+        ChurnSchedule::default()
     }
 
-    /// Schedule edge `edge` down during `[from_ns, until_ns)`.
-    pub fn add(&mut self, edge: usize, from_ns: u64, until_ns: u64) {
+    /// Schedule an outage (state-preserving hold) on `edge` during
+    /// `[from_ns, until_ns)`.
+    pub fn add_outage(&mut self, edge: usize, from_ns: u64, until_ns: u64) {
         assert!(from_ns < until_ns, "empty outage window");
-        self.windows.push((edge, from_ns, until_ns));
+        self.windows.push((edge, from_ns, until_ns, DownKind::Outage));
     }
 
+    /// Schedule churn (state-tearing removal) of `edge` during
+    /// `[from_ns, until_ns)`.
+    pub fn add_edge_down(&mut self, edge: usize, from_ns: u64, until_ns: u64) {
+        assert!(from_ns < until_ns, "empty churn window");
+        self.windows.push((edge, from_ns, until_ns, DownKind::Churn));
+    }
+
+    /// Node `node` leaves the topology at `t_ns` (and never rejoins
+    /// unless a later `add_node_absent`-style window says otherwise).
+    pub fn add_node_leave(&mut self, node: usize, t_ns: u64) {
+        self.node_windows.push((node, t_ns, u64::MAX));
+    }
+
+    /// Node `node` joins the topology at `t_ns` (absent before that).
+    pub fn add_node_join(&mut self, node: usize, t_ns: u64) {
+        assert!(t_ns > 0, "join at t=0 is a no-op");
+        self.node_windows.push((node, 0, t_ns));
+    }
+
+    /// Node `node` is absent during `[from_ns, until_ns)`.
+    pub fn add_node_absent(&mut self, node: usize, from_ns: u64,
+                           until_ns: u64) {
+        assert!(from_ns < until_ns, "empty node-absence window");
+        self.node_windows.push((node, from_ns, until_ns));
+    }
+
+    /// i.i.d. random edge churn: every edge is independently down
+    /// (churn-kind) in each [`DEFAULT_CHURN_SLOT_NS`] slot with
+    /// probability `rate`, derived deterministically from `seed`.
+    pub fn random_edge_churn(&mut self, rate: f64, seed: u64) {
+        self.random_edge_churn_with_slot(rate, seed, DEFAULT_CHURN_SLOT_NS);
+    }
+
+    /// [`ChurnSchedule::random_edge_churn`] with an explicit slot
+    /// length (tests use short slots to pack many transitions into a
+    /// short simulated horizon).
+    pub fn random_edge_churn_with_slot(&mut self, rate: f64, seed: u64,
+                                       slot_ns: u64) {
+        assert!((0.0..1.0).contains(&rate), "churn rate must be in [0, 1)");
+        assert!(slot_ns > 0, "churn slot must be positive");
+        self.random = Some((rate, seed, slot_ns));
+    }
+
+    /// Fold another schedule's windows/events into this one (the CLI's
+    /// `--outage` sugar merges into `--churn`).  A second random rule
+    /// replaces the first.
+    pub fn merge(&mut self, other: ChurnSchedule) {
+        self.windows.extend(other.windows);
+        self.node_windows.extend(other.node_windows);
+        if other.random.is_some() {
+            self.random = other.random;
+        }
+    }
+
+    /// No windows, no node events, no random rule — the static
+    /// schedule, pinned bit-identical to the pre-churn code paths.
     pub fn is_empty(&self) -> bool {
         self.windows.is_empty()
+            && self.node_windows.is_empty()
+            && self.random.is_none()
     }
 
-    pub fn is_up(&self, edge: usize, t_ns: u64) -> bool {
-        !self
-            .windows
+    /// Whether anything in the schedule *tears down* topology (churn
+    /// windows, node events, or the random rule) — outage-only
+    /// schedules keep the topology epoch-constant.
+    pub fn has_churn(&self) -> bool {
+        self.windows.iter().any(|&(_, _, _, k)| k == DownKind::Churn)
+            || !self.node_windows.is_empty()
+            || self.random.is_some()
+    }
+
+    /// Largest edge index referenced by an explicit window (validation).
+    pub fn max_edge_index(&self) -> Option<usize> {
+        self.windows.iter().map(|&(e, _, _, _)| e).max()
+    }
+
+    /// Largest node index referenced by a node window (validation).
+    pub fn max_node_index(&self) -> Option<usize> {
+        self.node_windows.iter().map(|&(n, _, _)| n).max()
+    }
+
+    /// Short label for result tables (`static` when nothing churns).
+    pub fn label(&self) -> String {
+        if !self.has_churn() {
+            return "static".to_string();
+        }
+        if let Some((rate, _, _)) = self.random {
+            if self.windows.iter().all(|w| w.3 == DownKind::Outage)
+                && self.node_windows.is_empty()
+            {
+                return format!("random:{rate}");
+            }
+        }
+        "churn".to_string()
+    }
+
+    // -- the single interval lookup (shared by both kinds) -------------
+
+    fn window_covers(edge: usize, t_ns: u64, kind: DownKind,
+                     w: &(usize, u64, u64, DownKind)) -> bool {
+        w.0 == edge && w.3 == kind && t_ns >= w.1 && t_ns < w.2
+    }
+
+    /// Whether an *outage* window holds edge `edge` at `t_ns`.
+    pub fn is_outage_down(&self, edge: usize, t_ns: u64) -> bool {
+        self.windows
             .iter()
-            .any(|&(e, a, b)| e == edge && t_ns >= a && t_ns < b)
+            .any(|w| Self::window_covers(edge, t_ns, DownKind::Outage, w))
     }
 
-    /// Earliest time `>= t_ns` at which `edge` is up (handles
-    /// overlapping and back-to-back windows).
-    pub fn next_up(&self, edge: usize, mut t_ns: u64) -> u64 {
+    /// Earliest time `>= t_ns` at which no outage window holds `edge`
+    /// (handles overlapping and back-to-back windows).  Churn windows
+    /// do not hold traffic — their frames drop instead.
+    pub fn outage_next_up(&self, edge: usize, mut t_ns: u64) -> u64 {
         // Each pass either finds no covering window (done) or jumps to
         // a window end, which strictly increases t; bounded by the
         // number of windows.
@@ -103,8 +266,8 @@ impl OutageSchedule {
             match self
                 .windows
                 .iter()
-                .filter(|&&(e, a, b)| e == edge && t_ns >= a && t_ns < b)
-                .map(|&(_, _, b)| b)
+                .filter(|w| Self::window_covers(edge, t_ns, DownKind::Outage, w))
+                .map(|&(_, _, b, _)| b)
                 .max()
             {
                 Some(end) => t_ns = end,
@@ -112,6 +275,248 @@ impl OutageSchedule {
             }
         }
         t_ns
+    }
+
+    /// Whether edge `edge = (i, j)` is churned out of the topology at
+    /// `t_ns` — by an explicit churn window, by either endpoint being
+    /// absent, or by the random rule.
+    pub fn churned_down(&self, edge: usize, i: usize, j: usize,
+                        t_ns: u64) -> bool {
+        if self
+            .windows
+            .iter()
+            .any(|w| Self::window_covers(edge, t_ns, DownKind::Churn, w))
+        {
+            return true;
+        }
+        if self
+            .node_windows
+            .iter()
+            .any(|&(n, a, b)| (n == i || n == j) && t_ns >= a && t_ns < b)
+        {
+            return true;
+        }
+        if let Some((rate, seed, slot_ns)) = self.random {
+            let slot = t_ns / slot_ns;
+            let mut rng =
+                Pcg::derive(seed, &[streams::CHURN, edge as u64, slot]);
+            return rng.bernoulli(rate);
+        }
+        false
+    }
+
+    /// Earliest churn-kind transition boundary strictly after `t_ns`
+    /// (window edges, node events, or the next random slot).  Outage
+    /// windows are not transitions — they never change the topology.
+    pub fn next_transition_after(&self, t_ns: u64) -> Option<u64> {
+        let mut next: Option<u64> = None;
+        let mut consider = |b: u64| {
+            if b > t_ns && b < u64::MAX {
+                next = Some(next.map_or(b, |n| n.min(b)));
+            }
+        };
+        for &(_, a, b, kind) in &self.windows {
+            if kind == DownKind::Churn {
+                consider(a);
+                consider(b);
+            }
+        }
+        for &(_, a, b) in &self.node_windows {
+            consider(a);
+            consider(b);
+        }
+        if let Some((_, _, slot_ns)) = self.random {
+            consider((t_ns / slot_ns + 1).saturating_mul(slot_ns));
+        }
+        next
+    }
+
+    /// Parse the `--churn` grammar (see [`CHURN_GRAMMAR`]): a comma
+    /// list of `edge:<e>@<a>..<b>`, `outage:<e>@<a>..<b>`,
+    /// `node:<n>@join:<ns>`, `node:<n>@leave:<ns>`, and
+    /// `random:<rate>[:<seed>]` items.
+    pub fn parse(s: &str) -> Result<ChurnSchedule, String> {
+        fn window(rest: &str, what: &str) -> Result<(usize, u64, u64), String> {
+            let (e, range) = rest.split_once('@').ok_or_else(|| {
+                format!("{what} `{rest}`: expected <e>@<from>..<to> \
+                         (grammar: {CHURN_GRAMMAR})")
+            })?;
+            let e: usize = e.parse().map_err(|_| {
+                format!("{what} `{rest}`: `{e}` is not an edge index")
+            })?;
+            let (a, b) = range.split_once("..").ok_or_else(|| {
+                format!("{what} `{rest}`: expected <from_ns>..<to_ns>")
+            })?;
+            let a: u64 = a.parse().map_err(|_| {
+                format!("{what} `{rest}`: `{a}` is not a time in ns")
+            })?;
+            let b: u64 = b.parse().map_err(|_| {
+                format!("{what} `{rest}`: `{b}` is not a time in ns")
+            })?;
+            if a >= b {
+                return Err(format!("{what} `{rest}`: empty window"));
+            }
+            Ok((e, a, b))
+        }
+        let mut sched = ChurnSchedule::new();
+        for item in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let item = item.trim();
+            if let Some(rest) = item.strip_prefix("edge:") {
+                let (e, a, b) = window(rest, "edge churn")?;
+                sched.add_edge_down(e, a, b);
+            } else if let Some(rest) = item.strip_prefix("outage:") {
+                let (e, a, b) = window(rest, "outage")?;
+                sched.add_outage(e, a, b);
+            } else if let Some(rest) = item.strip_prefix("node:") {
+                let (n, ev) = rest.split_once('@').ok_or_else(|| {
+                    format!("node event `{rest}`: expected \
+                             <n>@join:<ns> or <n>@leave:<ns>")
+                })?;
+                let n: usize = n.parse().map_err(|_| {
+                    format!("node event `{rest}`: `{n}` is not a node index")
+                })?;
+                if let Some(t) = ev.strip_prefix("join:") {
+                    let t: u64 = t.parse().map_err(|_| {
+                        format!("node event `{rest}`: `{t}` is not a time")
+                    })?;
+                    if t == 0 {
+                        return Err(format!(
+                            "node event `{rest}`: join at t=0 is a no-op"
+                        ));
+                    }
+                    sched.add_node_join(n, t);
+                } else if let Some(t) = ev.strip_prefix("leave:") {
+                    let t: u64 = t.parse().map_err(|_| {
+                        format!("node event `{rest}`: `{t}` is not a time")
+                    })?;
+                    sched.add_node_leave(n, t);
+                } else {
+                    return Err(format!(
+                        "node event `{rest}`: expected join:<ns> or \
+                         leave:<ns> (grammar: {CHURN_GRAMMAR})"
+                    ));
+                }
+            } else if let Some(rest) = item.strip_prefix("random:") {
+                let (rate, seed) = match rest.split_once(':') {
+                    Some((r, s)) => {
+                        let seed: u64 = s.parse().map_err(|_| {
+                            format!("random churn `{rest}`: `{s}` is not \
+                                     a seed")
+                        })?;
+                        (r, seed)
+                    }
+                    None => (rest, 0),
+                };
+                let rate: f64 = rate.parse().map_err(|_| {
+                    format!("random churn `{rest}`: `{rate}` is not a rate")
+                })?;
+                if !(0.0..1.0).contains(&rate) {
+                    return Err(format!(
+                        "random churn `{rest}`: rate must be in [0, 1)"
+                    ));
+                }
+                sched.random_edge_churn(rate, seed);
+            } else {
+                return Err(format!(
+                    "unknown churn item `{item}` (grammar: {CHURN_GRAMMAR})"
+                ));
+            }
+        }
+        Ok(sched)
+    }
+}
+
+/// One canonical edge's current incarnation in a [`TopologyView`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeLife {
+    /// Whether the edge is currently part of the topology.
+    pub live: bool,
+    /// Incarnation count: 0 = the edge as constructed; every churn
+    /// re-add bumps it, so per-edge state (duals, codec residuals, q̂
+    /// warm starts) from an earlier incarnation can never be
+    /// resurrected against the new one.
+    pub epoch: u32,
+    /// First exchange round this incarnation carries traffic (0 for the
+    /// initial incarnation).  The engine assigns it on revival as
+    /// `1 + max(endpoint rounds)` so both endpoints open the edge at
+    /// the same round number — which is what keeps sync rounds in
+    /// lockstep and shared-seed/conversation derivations aligned.
+    pub activation_round: usize,
+}
+
+/// Epoch-stamped snapshot of the live topology, indexed by the base
+/// [`Graph`]'s canonical edge list.  The engines thread it through
+/// every `NodeStateMachine` callback; machines compare its per-edge
+/// epochs against their cached ones to run birth/death lifecycle.
+/// `version` is bumped on every transition, so an unchanged view (the
+/// static case, version 0 forever) costs one integer compare per
+/// callback.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologyView {
+    version: u64,
+    edges: Vec<EdgeLife>,
+}
+
+impl TopologyView {
+    /// The static view: every edge live, epoch 0, active from round 0.
+    pub fn full(edge_count: usize) -> TopologyView {
+        TopologyView {
+            version: 0,
+            edges: vec![
+                EdgeLife { live: true, epoch: 0, activation_round: 0 };
+                edge_count
+            ],
+        }
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Monotone change counter (0 = the static full view).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn edge_life(&self, edge: usize) -> EdgeLife {
+        self.edges[edge]
+    }
+
+    pub fn is_live(&self, edge: usize) -> bool {
+        self.edges[edge].live
+    }
+
+    /// Number of currently-live edges at `node`.
+    pub fn live_degree(&self, graph: &Graph, node: usize) -> usize {
+        graph
+            .neighbors(node)
+            .iter()
+            .filter(|&&j| {
+                graph
+                    .edge_index(node, j)
+                    .map(|e| self.edges[e].live)
+                    .unwrap_or(false)
+            })
+            .count()
+    }
+
+    /// Remove `edge` from the topology (no-op if already dead).
+    pub fn kill_edge(&mut self, edge: usize) {
+        if self.edges[edge].live {
+            self.edges[edge].live = false;
+            self.version += 1;
+        }
+    }
+
+    /// Re-add `edge` as a fresh incarnation activating at
+    /// `activation_round`.
+    pub fn revive_edge(&mut self, edge: usize, activation_round: usize) {
+        let life = &mut self.edges[edge];
+        debug_assert!(!life.live, "revive of a live edge");
+        life.live = true;
+        life.epoch += 1;
+        life.activation_round = activation_round;
+        self.version += 1;
     }
 }
 
@@ -133,6 +538,18 @@ impl Graph {
         // n == 0 builds the empty graph (degree queries return `None`,
         // `is_connected` is false); the execution engines validate
         // non-emptiness where they actually require it.
+        let g = Graph::from_edges_any(n, raw);
+        assert!(g.n == 0 || g.is_connected(), "graph must be connected");
+        g
+    }
+
+    /// [`Graph::from_edges`] without the connectivity assertion:
+    /// self-loops and duplicates are still rejected, but the result may
+    /// be disconnected.  This is the substrate for [`Graph::random`]
+    /// (true Erdős–Rényi sampling) and for tests that reason about
+    /// components explicitly; protocol drivers want [`Graph::from_edges`]
+    /// or [`Graph::random_connected`].
+    pub fn from_edges_any(n: usize, raw: &[(usize, usize)]) -> Graph {
         let mut edges: Vec<(usize, usize)> = raw
             .iter()
             .map(|&(a, b)| {
@@ -153,13 +570,11 @@ impl Graph {
         for nb in &mut neighbors {
             nb.sort_unstable();
         }
-        let g = Graph {
+        Graph {
             n,
             edges,
             neighbors,
-        };
-        assert!(g.n == 0 || g.is_connected(), "graph must be connected");
-        g
+        }
     }
 
     pub fn build(topology: Topology, n: usize) -> Graph {
@@ -169,10 +584,13 @@ impl Graph {
             Topology::MultiplexRing => Graph::multiplex_ring(n),
             Topology::FullyConnected => Graph::complete(n),
             Topology::Star => Graph::star(n),
+            // Experiment drivers need a connected G (Assumption 4):
+            // the topology enum always takes the connected sampler.
             Topology::Random {
                 extra_p_percent,
                 seed,
-            } => Graph::random(n, extra_p_percent as f64 / 100.0, seed),
+            } => Graph::random_connected(n, extra_p_percent as f64 / 100.0,
+                                         seed),
         }
     }
 
@@ -222,27 +640,39 @@ impl Graph {
         Graph::from_edges(n, &edges)
     }
 
-    /// Spanning ring + independent extra edges with probability `p`.
+    /// True Erdős–Rényi G(n, p): every pair is an edge independently
+    /// with probability `p`.  **May be disconnected** — there is no
+    /// implicit spanning structure.  Protocol drivers need a connected
+    /// G (Assumption 4) and should call [`Graph::random_connected`];
+    /// this form exists for churn scenarios and component-aware tests.
     pub fn random(n: usize, p: f64, seed: u64) -> Graph {
         let mut rng = Pcg::new(seed);
-        let mut edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        let mut edges = Vec::new();
         for i in 0..n {
-            for j in (i + 2)..n {
-                if (i, j) == (0, n - 1) {
-                    continue; // already a ring edge
-                }
+            for j in (i + 1)..n {
                 if rng.bernoulli(p) {
                     edges.push((i, j));
                 }
             }
         }
-        let mut canon: Vec<_> = edges
-            .into_iter()
-            .map(|(a, b)| (a.min(b), a.max(b)))
-            .collect();
-        canon.sort_unstable();
-        canon.dedup();
-        Graph::from_edges(n, &canon)
+        Graph::from_edges_any(n, &edges)
+    }
+
+    /// G(n, p) conditioned on connectivity: resamples with derived
+    /// seeds up to [`RANDOM_CONNECT_ATTEMPTS`] times and panics with a
+    /// clear message if `p` is too small to ever connect `n` nodes —
+    /// connectivity is an explicit choice here, not a silent property.
+    pub fn random_connected(n: usize, p: f64, seed: u64) -> Graph {
+        for attempt in 0..RANDOM_CONNECT_ATTEMPTS {
+            let g = Graph::random(n, p, splitmix64(seed ^ attempt));
+            if g.is_connected() {
+                return g;
+            }
+        }
+        panic!(
+            "random_connected(n={n}, p={p}): no connected sample in \
+             {RANDOM_CONNECT_ATTEMPTS} attempts — raise p"
+        );
     }
 
     // ---- accessors -------------------------------------------------------
@@ -456,13 +886,25 @@ mod tests {
     }
 
     #[test]
-    fn random_graph_connected_and_deterministic() {
-        let a = Graph::random(12, 0.2, 7);
-        let b = Graph::random(12, 0.2, 7);
+    fn random_graph_deterministic_and_connected_variant() {
+        let a = Graph::random_connected(12, 0.3, 7);
+        let b = Graph::random_connected(12, 0.3, 7);
         assert!(a.is_connected());
         assert_eq!(a.edges(), b.edges());
-        let c = Graph::random(12, 0.2, 8);
+        let c = Graph::random_connected(12, 0.3, 8);
         assert_ne!(a.edges(), c.edges());
+        // Plain `random` is honest Erdős–Rényi: p = 0 is a legal,
+        // maximally disconnected sample — no panic, no hidden ring.
+        let empty = Graph::random(6, 0.0, 3);
+        assert_eq!(empty.edges().len(), 0);
+        assert!(!empty.is_connected());
+    }
+
+    #[test]
+    #[should_panic(expected = "no connected sample")]
+    fn random_connected_gives_up_loudly() {
+        // p = 0 can never connect more than one node.
+        let _ = Graph::random_connected(4, 0.0, 1);
     }
 
     #[test]
@@ -474,31 +916,153 @@ mod tests {
     }
 
     #[test]
-    fn outage_schedule_windows() {
-        let mut s = OutageSchedule::new();
+    fn outage_windows_hold_semantics() {
+        // The old OutageSchedule behavior, now DownKind::Outage windows
+        // of the folded ChurnSchedule.
+        let mut s = ChurnSchedule::new();
         assert!(s.is_empty());
-        assert!(s.is_up(0, 123));
-        assert_eq!(s.next_up(0, 123), 123);
-        s.add(0, 100, 200);
-        s.add(0, 180, 300); // overlapping
-        s.add(1, 50, 60);
+        assert!(!s.is_outage_down(0, 123));
+        assert_eq!(s.outage_next_up(0, 123), 123);
+        s.add_outage(0, 100, 200);
+        s.add_outage(0, 180, 300); // overlapping
+        s.add_outage(1, 50, 60);
         assert!(!s.is_empty());
-        assert!(s.is_up(0, 99));
-        assert!(!s.is_up(0, 100));
-        assert!(!s.is_up(0, 250));
-        assert!(s.is_up(0, 300)); // until is exclusive
-        assert!(s.is_up(2, 150)); // other edges unaffected
+        // Outage-only schedules are epoch-constant: no churn.
+        assert!(!s.has_churn());
+        assert!(!s.is_outage_down(0, 99));
+        assert!(s.is_outage_down(0, 100));
+        assert!(s.is_outage_down(0, 250));
+        assert!(!s.is_outage_down(0, 300)); // until is exclusive
+        assert!(!s.is_outage_down(2, 150)); // other edges unaffected
         // next_up hops across the overlapping chain.
-        assert_eq!(s.next_up(0, 150), 300);
-        assert_eq!(s.next_up(0, 0), 0);
-        assert_eq!(s.next_up(1, 55), 60);
+        assert_eq!(s.outage_next_up(0, 150), 300);
+        assert_eq!(s.outage_next_up(0, 0), 0);
+        assert_eq!(s.outage_next_up(1, 55), 60);
+        // Outage windows never churn an edge and are not transitions.
+        assert!(!s.churned_down(0, 0, 1, 150));
+        assert_eq!(s.next_transition_after(0), None);
     }
 
     #[test]
     #[should_panic(expected = "empty outage window")]
     fn outage_rejects_empty_window() {
-        let mut s = OutageSchedule::new();
-        s.add(0, 10, 10);
+        let mut s = ChurnSchedule::new();
+        s.add_outage(0, 10, 10);
+    }
+
+    #[test]
+    fn churn_windows_and_node_events() {
+        let mut s = ChurnSchedule::new();
+        s.add_edge_down(2, 100, 200);
+        s.add_node_leave(3, 500);
+        s.add_node_join(4, 50);
+        assert!(s.has_churn());
+        // Explicit edge window.
+        assert!(s.churned_down(2, 1, 2, 150));
+        assert!(!s.churned_down(2, 1, 2, 200));
+        // Churn does NOT hold traffic — that is the outage kind.
+        assert!(!s.is_outage_down(2, 150));
+        // Node 3 leaves at 500 forever.
+        assert!(!s.churned_down(7, 3, 5, 499));
+        assert!(s.churned_down(7, 3, 5, 500));
+        assert!(s.churned_down(7, 0, 3, 1_000_000));
+        // Node 4 is absent until its join at 50.
+        assert!(s.churned_down(9, 4, 6, 0));
+        assert!(!s.churned_down(9, 4, 6, 50));
+        // Transition boundaries, in order (u64::MAX never reported).
+        assert_eq!(s.next_transition_after(0), Some(50));
+        assert_eq!(s.next_transition_after(50), Some(100));
+        assert_eq!(s.next_transition_after(100), Some(200));
+        assert_eq!(s.next_transition_after(200), Some(500));
+        assert_eq!(s.next_transition_after(500), None);
+        assert_eq!(s.max_edge_index(), Some(2));
+        assert_eq!(s.max_node_index(), Some(4));
+    }
+
+    #[test]
+    fn random_churn_rule_deterministic_with_slot_boundaries() {
+        let mut s = ChurnSchedule::new();
+        s.random_edge_churn_with_slot(0.3, 9, 1_000);
+        assert!(s.has_churn());
+        assert!(!s.is_empty());
+        // Deterministic per (edge, slot) and constant within a slot.
+        let mut t = ChurnSchedule::new();
+        t.random_edge_churn_with_slot(0.3, 9, 1_000);
+        let mut downs = 0;
+        for e in 0..16usize {
+            for slot in 0..32u64 {
+                let at = slot * 1_000 + 500;
+                let a = s.churned_down(e, 0, 1, at);
+                assert_eq!(a, t.churned_down(e, 0, 1, at));
+                assert_eq!(a, s.churned_down(e, 0, 1, slot * 1_000));
+                downs += a as usize;
+            }
+        }
+        // ~30% of 512 samples; loose bounds, deterministic seed.
+        assert!(downs > 80 && downs < 260, "downs {downs}");
+        // Transitions land exactly on slot boundaries.
+        assert_eq!(s.next_transition_after(0), Some(1_000));
+        assert_eq!(s.next_transition_after(1_500), Some(2_000));
+    }
+
+    #[test]
+    fn churn_grammar_parses_and_rejects() {
+        let s = ChurnSchedule::parse(
+            "edge:3@1000..2000, node:5@leave:7000, node:2@join:500, \
+             outage:0@10..20, random:0.05:42",
+        )
+        .unwrap();
+        assert!(s.has_churn());
+        assert!(s.churned_down(3, 0, 3, 1500));
+        assert!(s.churned_down(8, 5, 6, 7000));
+        assert!(s.churned_down(8, 2, 4, 100));
+        assert!(s.is_outage_down(0, 15));
+        assert_eq!(s.label(), "churn");
+        // Pure random schedules label with their rate.
+        let r = ChurnSchedule::parse("random:0.05").unwrap();
+        assert_eq!(r.label(), "random:0.05");
+        assert_eq!(ChurnSchedule::new().label(), "static");
+        // Broken items fail with errors that restate what was expected.
+        for bad in ["edge:3", "edge:x@1..2", "edge:3@5..5", "node:1@at:5",
+                    "node:1@join:0", "random:1.5", "bogus:1"] {
+            assert!(ChurnSchedule::parse(bad).is_err(), "`{bad}` must fail");
+        }
+        let err = ChurnSchedule::parse("bogus:1").unwrap_err();
+        assert!(err.contains("grammar"), "{err}");
+        let err = ChurnSchedule::parse("edge:3").unwrap_err();
+        assert!(err.contains("expected"), "{err}");
+        let err = ChurnSchedule::parse("random:1.5").unwrap_err();
+        assert!(err.contains("rate"), "{err}");
+    }
+
+    #[test]
+    fn topology_view_lifecycle() {
+        let mut v = TopologyView::full(4);
+        assert_eq!(v.version(), 0);
+        assert_eq!(v.edge_count(), 4);
+        assert!(v.is_live(2));
+        assert_eq!(v.edge_life(2).epoch, 0);
+        assert_eq!(v.edge_life(2).activation_round, 0);
+        v.kill_edge(2);
+        assert!(!v.is_live(2));
+        assert_eq!(v.version(), 1);
+        v.kill_edge(2); // idempotent, no version bump
+        assert_eq!(v.version(), 1);
+        v.revive_edge(2, 7);
+        let life = v.edge_life(2);
+        assert!(life.live);
+        assert_eq!(life.epoch, 1);
+        assert_eq!(life.activation_round, 7);
+        assert_eq!(v.version(), 2);
+        // live_degree follows the view, not the base graph.
+        let g = Graph::ring(4);
+        let mut view = TopologyView::full(g.edges().len());
+        assert_eq!(view.live_degree(&g, 0), 2);
+        let e = g.edge_index(0, 1).unwrap();
+        view.kill_edge(e);
+        assert_eq!(view.live_degree(&g, 0), 1);
+        assert_eq!(view.live_degree(&g, 1), 1);
+        assert_eq!(view.live_degree(&g, 2), 2);
     }
 
     #[test]

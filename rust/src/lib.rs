@@ -33,7 +33,8 @@
 //! | | **Threaded** (`ExecMode::Threaded`) | **Virtual-time** (`ExecMode::Simulated`) |
 //! |---|---|---|
 //! | concurrency | one OS thread per node | single thread, event queue |
-//! | network | zero-latency, lossless channels | pluggable [`sim::LinkModel`]s: latency, bandwidth, drops + retransmit, per-edge overrides, stragglers, edge outages |
+//! | network | zero-latency, lossless channels | pluggable [`sim::LinkModel`]s: latency, bandwidth, drops + retransmit, per-edge overrides, stragglers |
+//! | topology | epoch-constant (static view) | dynamic: [`graph::ChurnSchedule`] outages + edge churn + node join/leave, epoch-stamped [`graph::TopologyView`] |
 //! | clock | wall-clock only | virtual nanoseconds ⇒ simulated *time-to-accuracy* |
 //! | scale | ~dozens of nodes | 512+ nodes in one process |
 //! | round policies | sync only | sync, or `async:<s>` bounded staleness |
@@ -173,12 +174,47 @@
 //! |---|---|
 //! | [`compress`] | rand-k mask sampler, COO vectors, low-rank (PowerGossip primitives + `low_rank` codec) |
 //! | [`compress::codec`] | **edge codecs**: `EdgeCodec`/`Frame`/`EdgeCtx`/`CodecSpec`, identity / rand-k (explicit + values-only wire) / top-k / QSGD / sign / low-rank / error feedback |
-//! | [`comm`] | `Msg` (dense / sparse / codec frame / scalar), byte meter, threaded bus |
-//! | [`algorithms`] | `NodeAlgorithm` + `NodeStateMachine` protocol drivers, `RoundPolicy` (sync / bounded-staleness async) |
+//! | [`comm`] | `Msg` (dense / sparse / codec frame / scalar), byte meter (incl. churn-drop counters), threaded bus |
+//! | [`algorithms`] | `NodeAlgorithm` + `NodeStateMachine` protocol drivers, `RoundPolicy` (sync / bounded-staleness async), per-edge lifecycle |
 //! | [`coordinator`] | `ExperimentSpec` → `Report` on either engine |
-//! | [`sim`] | virtual-time engine: event queue, link models (incl. per-edge overrides), stragglers, outages |
-//! | [`experiments`] | tables, figures, ablations, simulated time-to-accuracy |
-//! | [`quadratic`], [`graph`], [`data`], [`model`], [`runtime`] | convex substrate, topologies, synthetic data, manifests, PJRT |
+//! | [`sim`] | virtual-time engine: event queue, link models (incl. per-edge overrides), stragglers, first-class churn events |
+//! | [`experiments`] | tables, figures, ablations, simulated time-to-accuracy (churn ladder) |
+//! | [`graph`] | topologies, `TopologyView` (epoch-stamped live snapshot), `ChurnSchedule` (outage / edge churn / node join-leave / random rule) |
+//! | [`quadratic`], [`data`], [`model`], [`runtime`] | convex substrate, synthetic data, manifests, PJRT |
+//!
+//! ## Dynamic topology
+//!
+//! The base [`graph::Graph`] is the immutable **universe** of edges; a
+//! [`graph::ChurnSchedule`] (CLI `--churn`, grammar
+//! `edge:<e>@<from_ns>..<to_ns> | node:<n>@join:<ns>|leave:<ns> |
+//! random:<rate>[:<seed>]`, plus `--outage` sugar) declares when edges
+//! and nodes are out of service.  The virtual-time engine turns every
+//! transition into a first-class event: it maintains an epoch-stamped
+//! [`graph::TopologyView`] that flows through every
+//! [`algorithms::NodeStateMachine`] callback in place of a fixed
+//! neighbor slice, drains in-flight frames of a removed edge as typed
+//! churn drops (`Report::frames_dropped_by_churn`; send bytes stay
+//! metered), and evaluates staleness bounds over currently-live edges
+//! only.
+//!
+//! **Per-edge state lifecycle.**  On edge *death* the endpoints retire
+//! their per-edge state — the C-ECL dual `z_{i|j}` (zeroed out of
+//! `zsum`), error-feedback residuals, PowerGossip conversations — via a
+//! typed teardown.  On edge *birth* (a churn re-add is a fresh
+//! `EdgeLife::epoch`) each endpoint allocates a new codec instance from
+//! its `CodecSpec` and warm-starts the dual from its current primal at
+//! the consensus fixed point `z_{i|j} = α·A_{i|j}·w_i` — the
+//! initialization that keeps the Eq. (11) update sane mid-training.
+//! Shared-seed derivations (`compress::codec::EdgeCtx::epoch`,
+//! PowerGossip q̂ streams) fold the epoch in for epoch ≥ 1, so an old
+//! incarnation's residuals/warm-starts can never be resurrected against
+//! a new one; epoch 0 keeps the legacy derivation paths, which is why
+//! an **empty schedule replays the pre-churn trajectories and byte
+//! counts bit-identically** (pinned by the replay/equivalence suites).
+//! A revived edge activates at `1 + max(endpoint rounds)` — assigned by
+//! the engine so both endpoints (and PowerGossip's conversation
+//! counters, which restart at that offset) open the edge at the same
+//! round number under sync and async alike.
 
 pub mod algorithms;
 pub mod comm;
@@ -203,7 +239,8 @@ pub mod prelude {
     pub use crate::coordinator::{run_experiment, run_simulated_native,
                                  ExecMode, ExperimentSpec, Report};
     pub use crate::data::{Partition, SyntheticSpec};
-    pub use crate::graph::{Graph, OutageSchedule, Topology};
+    pub use crate::graph::{ChurnSchedule, EdgeLife, Graph, Topology,
+                           TopologyView};
     pub use crate::metrics::History;
     pub use crate::quadratic::QuadraticNetwork;
     pub use crate::runtime::Engine;

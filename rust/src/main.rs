@@ -19,7 +19,7 @@ use cecl::coordinator::{run_simulated_native, run_with_engine, ExecMode};
 use cecl::data::Partition;
 use cecl::experiments::{ablations, fig1, sim as sim_exp, tables, theory,
                         Sizing};
-use cecl::graph::{Graph, Topology};
+use cecl::graph::{ChurnSchedule, Graph, Topology};
 use cecl::model::Manifest;
 use cecl::runtime::Engine;
 use cecl::sim::{LinkSpec, SimConfig};
@@ -156,6 +156,10 @@ fn main() -> Result<()> {
             let edge_links = parse_edge_links(
                 &args.get_str("edge-link", ""),
             )?;
+            let churn = parse_churn(
+                &args.get_str("churn", ""),
+                &args.get_str("outage", ""),
+            )?;
             check_unknown(&args)?;
             let link = match link_name.as_str() {
                 "ideal" => LinkSpec::Ideal,
@@ -176,6 +180,7 @@ fn main() -> Result<()> {
                 edge_links,
                 compute_ns_per_step: compute_us.saturating_mul(1000),
                 stragglers,
+                churn,
                 ..SimConfig::default()
             };
             if table_mode {
@@ -197,10 +202,24 @@ fn main() -> Result<()> {
                 spec.algorithm = algorithm;
                 spec.verbose = true;
                 spec.exec = ExecMode::Simulated(cfg);
+                let has_churn = match &spec.exec {
+                    ExecMode::Simulated(c) => c.churn.has_churn(),
+                    ExecMode::Threaded => false,
+                };
                 let report = run_simulated_native(&spec, &graph)?;
+                // Static rows print `—` for the churn counters (the
+                // table convention), so a run can never be misread as
+                // "zero churn events happened" when none were possible.
+                let churn_cell = if has_churn {
+                    format!("{} transitions / {} dropped frames",
+                            report.edges_churned,
+                            report.frames_dropped_by_churn)
+                } else {
+                    "—".to_string()
+                };
                 println!(
                     "\n{} on {} ({} nodes, {}, rounds {}): final acc {:.3}, \
-                     sim time {:.2}s, max lag {} rounds, \
+                     sim time {:.2}s, max lag {} rounds, churn {}, \
                      sent {:.0} KB/node/epoch, \
                      retransmitted {:.0} KB, wallclock {:.2}s",
                     report.algorithm,
@@ -211,6 +230,7 @@ fn main() -> Result<()> {
                     report.final_accuracy,
                     report.sim_time_secs.unwrap_or(0.0),
                     report.max_staleness,
+                    churn_cell,
                     report.mean_bytes_per_epoch / 1024.0,
                     report.retransmit_bytes as f64 / 1024.0,
                     report.wallclock_secs
@@ -352,6 +372,21 @@ fn parse_stragglers(s: &str) -> Result<Vec<(usize, f64)>> {
         .collect()
 }
 
+/// Parse `--churn` (grammar: `cecl::graph::CHURN_GRAMMAR`) plus the
+/// `--outage e@from..to[,...]` sugar (an outage is the state-preserving
+/// `outage:` item of the same schedule) into one `ChurnSchedule`.
+fn parse_churn(churn: &str, outage: &str) -> Result<ChurnSchedule> {
+    let mut sched = ChurnSchedule::parse(churn)
+        .map_err(|e| anyhow!("--churn: {e}"))?;
+    for item in outage.split(',').filter(|p| !p.trim().is_empty()) {
+        let rest = format!("outage:{}", item.trim());
+        let extra = ChurnSchedule::parse(&rest)
+            .map_err(|e| anyhow!("--outage: {e}"))?;
+        sched.merge(extra);
+    }
+    Ok(sched)
+}
+
 /// Parse `--edge-link e@spec[,e@spec...]` into per-edge link
 /// overrides (spec grammar: `LinkSpec::parse`).
 fn parse_edge_links(s: &str) -> Result<Vec<(usize, LinkSpec)>> {
@@ -415,8 +450,16 @@ commands:
                    --edge-link e@SPEC[,...]   (heterogeneous per-edge links,
                    SPEC: ideal|constant:LAT|bandwidth:LAT:MBIT|
                    lossy:LAT:MBIT:P)
+                   --churn ITEM[,...]         (dynamic topology; ITEM:
+                   edge:<e>@<from_ns>..<to_ns> | node:<n>@join:<ns> |
+                   node:<n>@leave:<ns> | random:<rate>[:<seed>] |
+                   outage:<e>@<from_ns>..<to_ns>; edge/node churn tears
+                   down per-edge state, re-adds are fresh edge epochs)
+                   --outage e@from..to[,...]  (sugar for outage: items —
+                   traffic held, state preserved)
                    --table (time-to-accuracy ladder incl. the codec ladder;
-                   with --rounds async:S it sweeps sync vs async)
+                   with --rounds async:S it sweeps sync vs async, with
+                   --churn it sweeps static vs churn)
                    --target-acc F --codec SPEC[,SPEC...]
   ablation-naive   Eq.11 vs Eq.13 dual compression
   ablation-warmup  first-epoch dense on/off

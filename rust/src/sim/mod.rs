@@ -14,10 +14,20 @@
 //!   latency, bandwidth-proportional serialization, i.i.d. drop with
 //!   retransmit byte accounting, heterogeneous per-edge overrides
 //!   (`SimConfig::edge_links`) — plus per-node straggler slowdowns and
-//!   scheduled edge outages
-//!   ([`OutageSchedule`](crate::graph::OutageSchedule)), so
-//!   *time-to-accuracy* under imperfect networks becomes measurable
+//!   a scheduled [`ChurnSchedule`](crate::graph::ChurnSchedule):
+//!   state-preserving edge *outages* (traffic held until the window
+//!   ends) and state-tearing *churn* (edge removal / node join-leave),
+//!   so *time-to-accuracy* under imperfect networks becomes measurable
 //!   (the scenario lever),
+//! * topology churn is a **first-class event**: at every transition
+//!   boundary the engine updates its epoch-stamped
+//!   [`TopologyView`](crate::graph::TopologyView), notifies the
+//!   affected machines (which retire / warm-start per-edge state), and
+//!   re-polls their gates.  A removed edge drains its in-flight frames
+//!   as typed churn drops (metered, never a panic); a revived edge is a
+//!   fresh incarnation activating at `1 + max(endpoint rounds)` so both
+//!   endpoints open it at the same round number.  Staleness bounds are
+//!   evaluated over currently-live edges only (the churn lever),
 //! * rounds follow a [`RoundPolicy`]: the classic bulk-synchronous
 //!   barrier (`Sync`, trajectory-identical to the threaded bus), or
 //!   gossip-style `Async { max_staleness }` where every message is
@@ -62,8 +72,8 @@ use std::sync::Arc;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::algorithms::{NodeStateMachine, RoundPolicy};
-use crate::comm::{Envelope, Meter, Msg, Outbox};
-use crate::graph::{Graph, OutageSchedule};
+use crate::comm::{CommError, Envelope, Meter, Msg, Outbox};
+use crate::graph::{ChurnSchedule, Graph, TopologyView};
 use crate::metrics::{EpochRecord, History, Mean};
 use crate::util::rng::{streams, Pcg};
 
@@ -83,8 +93,10 @@ pub struct SimConfig {
     /// Per-node compute slowdown factors `(node, factor)`; factor 2.0
     /// means the node computes at half speed.  Unlisted nodes run at 1.0.
     pub stragglers: Vec<(usize, f64)>,
-    /// Scheduled edge-down windows (time-varying topology).
-    pub outages: OutageSchedule,
+    /// Time-varying topology: state-preserving outage windows plus
+    /// state-tearing edge churn / node join-leave (empty = static,
+    /// pinned bit-identical to the pre-churn engine).
+    pub churn: ChurnSchedule,
 }
 
 impl Default for SimConfig {
@@ -94,7 +106,7 @@ impl Default for SimConfig {
             edge_links: Vec::new(),
             compute_ns_per_step: 1_000_000, // 1 ms per local step
             stragglers: Vec::new(),
-            outages: OutageSchedule::default(),
+            churn: ChurnSchedule::default(),
         }
     }
 }
@@ -179,6 +191,11 @@ pub struct SimOutcome {
     /// under `Async` (the bound is enforced in-protocol and pinned by
     /// tests; start-up slack on silent edges is not counted).
     pub max_staleness: usize,
+    /// Edge lifecycle transitions (kills + revivals) applied by the
+    /// churn scheduler — 0 on a static schedule.  The meter separately
+    /// counts `churn_dropped_frames`/`churn_dropped_bytes` for frames
+    /// drained in flight.
+    pub edges_churned: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -191,6 +208,10 @@ enum EventKind {
     ComputeDone { node: usize },
     /// A message reaches its destination.
     Deliver { env: Envelope },
+    /// A churn-schedule transition boundary: re-derive edge liveness,
+    /// update the topology view, notify affected machines, re-poll
+    /// their gates, and schedule the next boundary.
+    Churn,
 }
 
 #[derive(Debug)]
@@ -262,7 +283,7 @@ impl EventQueue {
 /// and schedules `Deliver` events.
 struct Courier<'a> {
     graph: &'a Graph,
-    outages: &'a OutageSchedule,
+    churn: &'a ChurnSchedule,
     link: Box<dyn LinkModel>,
     /// Heterogeneous-link overrides keyed by undirected edge index;
     /// edges not listed fall back to `link`.
@@ -282,13 +303,21 @@ struct Courier<'a> {
 
 impl Courier<'_> {
     fn send(&mut self, src: usize, dst: usize, round: usize, msg: Msg,
-            now: u64) -> Result<()> {
+            now: u64, view: &TopologyView) -> Result<()> {
         let edge = self
             .graph
             .edge_index(src, dst)
             .ok_or_else(|| anyhow!("sim: ({src}, {dst}) is not an edge"))?;
         let bytes = msg.wire_bytes();
         self.meter.record_send(src, bytes);
+        let life = view.edge_life(edge);
+        if !life.live {
+            // Defensive: a send raced an edge removal.  The first-copy
+            // bytes stay metered (the transmission happened), the frame
+            // vanishes as a typed churn drop.
+            self.meter.record_churn_drop(bytes as u64);
+            return Ok(());
+        }
         let model = self
             .edge_links
             .get(&edge)
@@ -298,12 +327,12 @@ impl Courier<'_> {
         if tx.attempts > 1 {
             self.meter.record_retransmit(src, tx.retransmit_bytes(bytes));
         }
-        // Serialization starts when the edge is up AND free: a down
-        // edge holds the message until the outage window ends, and a
-        // busy edge queues it behind the previous message.
+        // Serialization starts when the edge is up AND free: an
+        // outage-held edge delays the message until the window ends,
+        // and a busy edge queues it behind the previous message.
         let start = self
-            .outages
-            .next_up(edge, now)
+            .churn
+            .outage_next_up(edge, now)
             .max(*self.busy_until.get(&(src, dst)).unwrap_or(&0));
         let departure = start.saturating_add(tx.occupancy_ns);
         self.busy_until.insert((src, dst), departure);
@@ -320,6 +349,7 @@ impl Courier<'_> {
                     src,
                     dst,
                     round,
+                    epoch: life.epoch,
                     payload: msg,
                 },
             },
@@ -346,6 +376,10 @@ struct World<'a> {
     policy: RoundPolicy,
     rt: Vec<NodeRt>,
     courier: Courier<'a>,
+    /// The engine's live topology snapshot (version 0 = static full
+    /// view; machines key their lifecycle off its per-edge epochs).
+    view: TopologyView,
+    churn: &'a ChurnSchedule,
     /// Per-epoch eval slots, filled as nodes reach the epoch boundary.
     evals: BTreeMap<usize, Vec<Option<(f64, f64, f64)>>>,
     history: History,
@@ -374,12 +408,13 @@ impl World<'_> {
             };
             nrt.train_loss.add(loss);
             let mut out = Outbox::new();
-            nrt.machine.round_begin(round, &mut nrt.w, &mut out)?;
+            nrt.machine
+                .round_begin(round, &self.view, &mut nrt.w, &mut out)?;
             nrt.exchanging = true;
             outv = out.drain().collect();
         }
         for (to, msg) in outv {
-            self.courier.send(i, to, round, msg, now)?;
+            self.courier.send(i, to, round, msg, now, &self.view)?;
         }
         // Drain anything that arrived while computing; `pump` finishes
         // the round once the policy is satisfied and nothing more is
@@ -391,9 +426,85 @@ impl World<'_> {
     fn on_deliver(&mut self, env: Envelope, now: u64) -> Result<()> {
         let dst = env.dst;
         ensure!(dst < self.rt.len(), "sim: delivery to unknown node {dst}");
+        // A frame that was in flight across a churn event drains as a
+        // typed drop: its edge is gone, or reborn into a different
+        // incarnation than the one it was encoded for.
+        if let Some(edge) = self.courier.graph.edge_index(env.src, dst) {
+            let life = self.view.edge_life(edge);
+            if !life.live || life.epoch != env.epoch {
+                self.courier
+                    .meter
+                    .record_churn_drop(env.payload.wire_bytes() as u64);
+                if self.verbose {
+                    println!(
+                        "[sim] {}",
+                        CommError::ChurnDropped { src: env.src, dst, edge }
+                    );
+                }
+                return Ok(());
+            }
+        }
         self.rt[dst].inbox.entry(env.src).or_default().push_back(env);
         if self.rt[dst].exchanging {
             self.pump(dst, now)?;
+        }
+        Ok(())
+    }
+
+    /// Apply the churn schedule's edge liveness at `now`: kill edges
+    /// that churned down (purging their buffered frames as typed
+    /// drops), revive edges that came back (fresh incarnation,
+    /// activating at `1 + max(endpoint rounds)` so both endpoints open
+    /// it at the same round number), then notify every affected machine
+    /// and re-poll its gate — a node that was waiting on a now-dead
+    /// edge completes its round here instead of deadlocking.
+    fn apply_churn(&mut self, now: u64) -> Result<()> {
+        let edges: Vec<(usize, usize)> =
+            self.courier.graph.edges().to_vec();
+        let mut affected: std::collections::BTreeSet<usize> =
+            std::collections::BTreeSet::new();
+        for (e, &(i, j)) in edges.iter().enumerate() {
+            let down = self.churn.churned_down(e, i, j, now);
+            let life = self.view.edge_life(e);
+            if life.live && down {
+                self.view.kill_edge(e);
+                self.courier.meter.record_edge_churn();
+                // Purge frames already delivered into inbox buffers:
+                // in-flight state of a dead edge drains as drops.
+                for (a, b) in [(i, j), (j, i)] {
+                    if let Some(q) = self.rt[b].inbox.get_mut(&a) {
+                        for env in q.drain(..) {
+                            self.courier.meter.record_churn_drop(
+                                env.payload.wire_bytes() as u64,
+                            );
+                        }
+                    }
+                }
+                affected.insert(i);
+                affected.insert(j);
+            } else if !life.live && !down {
+                let activation =
+                    1 + self.rt[i].round.max(self.rt[j].round);
+                self.view.revive_edge(e, activation);
+                self.courier.meter.record_edge_churn();
+                affected.insert(i);
+                affected.insert(j);
+            }
+        }
+        for &i in &affected {
+            let outv: Vec<(usize, Msg)> = {
+                let nrt = &mut self.rt[i];
+                let mut out = Outbox::new();
+                nrt.machine.on_topology(&self.view, &mut nrt.w, &mut out)?;
+                out.drain().collect()
+            };
+            let round = self.rt[i].round;
+            for (to, msg) in outv {
+                self.courier.send(i, to, round, msg, now, &self.view)?;
+            }
+            if self.rt[i].exchanging {
+                self.pump(i, now)?;
+            }
         }
         Ok(())
     }
@@ -458,12 +569,12 @@ impl World<'_> {
                 // The machine receives the SENDER's round stamp; its own
                 // round only gates completion.
                 nrt.machine
-                    .on_message(env.round, src, env.payload, &mut nrt.w,
-                                &mut out)?;
+                    .on_message(env.round, src, env.payload, &self.view,
+                                &mut nrt.w, &mut out)?;
                 outv = out.drain().collect();
             }
             for (to, msg) in outv {
-                self.courier.send(i, to, round, msg, now)?;
+                self.courier.send(i, to, round, msg, now, &self.view)?;
             }
         }
     }
@@ -473,7 +584,7 @@ impl World<'_> {
         {
             let nrt = &mut self.rt[i];
             round = nrt.round;
-            nrt.machine.round_end(round, &mut nrt.w)?;
+            nrt.machine.round_end(round, &self.view, &mut nrt.w)?;
             nrt.exchanging = false;
         }
         if let Some(&epoch) = self.sched.eval_rounds.get(&round) {
@@ -592,6 +703,19 @@ pub fn simulate(
             );
         }
     }
+    // Churn-schedule validation: explicit windows must reference real
+    // edges/nodes (typed startup errors, not mid-run index panics).
+    if let Some(e) = cfg.churn.max_edge_index() {
+        ensure!(
+            e < graph.edges().len(),
+            "sim: churn window for edge {e}, but the graph has only {} \
+             edges",
+            graph.edges().len()
+        );
+    }
+    if let Some(node) = cfg.churn.max_node_index() {
+        ensure!(node < n, "sim: churn event for node {node} out of range");
+    }
     let total_rounds = sched.total_rounds();
     let meter = Meter::new(n);
     if total_rounds == 0 {
@@ -602,6 +726,7 @@ pub fn simulate(
             meter,
             w,
             max_staleness: 0,
+            edges_churned: 0,
         });
     }
 
@@ -639,7 +764,7 @@ pub fn simulate(
             .collect(),
         courier: Courier {
             graph,
-            outages: &cfg.outages,
+            churn: &cfg.churn,
             link: cfg.link.build(),
             edge_links,
             link_rng: Pcg::derive(seed, &[streams::LINK]),
@@ -648,6 +773,8 @@ pub fn simulate(
             busy_until: BTreeMap::new(),
             last_arrival: BTreeMap::new(),
         },
+        view: TopologyView::full(graph.edges().len()),
+        churn: &cfg.churn,
         evals: BTreeMap::new(),
         history: History::default(),
         compute_ns,
@@ -658,20 +785,56 @@ pub fn simulate(
         verbose,
     };
 
+    // Apply the schedule's t = 0 state (edges absent from the start,
+    // nodes that join later) before anyone computes, then arm the first
+    // transition boundary as a first-class event.
+    if cfg.churn.has_churn() {
+        world.apply_churn(0)?;
+        if let Some(t) = cfg.churn.next_transition_after(0) {
+            world.courier.queue.push(t, EventKind::Churn);
+        }
+    }
+
     // Every node starts its round-0 local compute at t = 0.
     for i in 0..n {
         let dt = world.compute_ns[i];
         world.courier.queue.push(dt, EventKind::ComputeDone { node: i });
     }
 
+    // Guard against a churn-only spin: the random rule schedules slot
+    // boundaries forever, so if nothing but churn events fire for a
+    // very long stretch the run is deadlocked — report it instead of
+    // looping silently.
+    let mut churn_streak = 0u64;
     let mut final_t = 0u64;
     while let Some(ev) = world.courier.queue.pop() {
         final_t = ev.t_ns;
         match ev.kind {
             EventKind::ComputeDone { node } => {
+                churn_streak = 0;
                 world.on_compute_done(node, ev.t_ns)?
             }
-            EventKind::Deliver { env } => world.on_deliver(env, ev.t_ns)?,
+            EventKind::Deliver { env } => {
+                churn_streak = 0;
+                world.on_deliver(env, ev.t_ns)?
+            }
+            EventKind::Churn => {
+                churn_streak += 1;
+                ensure!(
+                    churn_streak < 200_000,
+                    "sim deadlock: {churn_streak} consecutive churn \
+                     events with no protocol progress"
+                );
+                world.apply_churn(ev.t_ns)?;
+                // Keep the boundary clock armed while work remains.
+                if world.finished < world.n {
+                    if let Some(t) =
+                        cfg.churn.next_transition_after(ev.t_ns)
+                    {
+                        world.courier.queue.push(t, EventKind::Churn);
+                    }
+                }
+            }
         }
     }
     let stuck: Vec<(usize, usize, bool)> = world
@@ -698,12 +861,14 @@ pub fn simulate(
         .max()
         .unwrap_or(0);
     let w = rt.into_iter().map(|r| r.w).collect();
+    let edges_churned = meter.edges_churned();
     Ok(SimOutcome {
         history,
         vtime_ns: meter.vtime_ns(),
         meter,
         w,
         max_staleness,
+        edges_churned,
     })
 }
 
@@ -850,14 +1015,15 @@ mod tests {
         let graph = Arc::new(Graph::chain(2));
         let sched = Schedule::new(1, 1, 1, 1);
         let alg = AlgorithmSpec::Ecl { theta: 1.0 };
-        let mut outages = OutageSchedule::default();
-        // Edge 0 down from t=0 until t=5 ms: round-0 sends (at ~1 us)
-        // stall until the window ends.
-        outages.add(0, 0, 5_000_000);
+        let mut churn = ChurnSchedule::default();
+        // Edge 0 in OUTAGE from t=0 until t=5 ms: round-0 sends (at
+        // ~1 us) stall until the window ends — held, never dropped,
+        // with zero topology transitions (state-preserving semantics).
+        churn.add_outage(0, 0, 5_000_000);
         let cfg = SimConfig {
             link: LinkSpec::Constant { latency_us: 1 },
             compute_ns_per_step: 1_000,
-            outages,
+            churn,
             ..SimConfig::default()
         };
         let out = simulate(&graph, &cfg, 11, &sched,
@@ -865,6 +1031,8 @@ mod tests {
                            RoundPolicy::Sync, false)
             .unwrap();
         assert!(out.vtime_ns >= 5_000_000, "vtime {}", out.vtime_ns);
+        assert_eq!(out.edges_churned, 0, "outage is not churn");
+        assert_eq!(out.meter.churn_dropped_frames(), 0);
         let no_outage = SimConfig {
             link: LinkSpec::Constant { latency_us: 1 },
             compute_ns_per_step: 1_000,
@@ -875,6 +1043,101 @@ mod tests {
                             RoundPolicy::Sync, false)
             .unwrap();
         assert!(base.vtime_ns < out.vtime_ns);
+    }
+
+    #[test]
+    fn churn_removes_edge_drops_in_flight_and_revives_fresh() {
+        // ring(3), C-ECL sync.  Edge 0 = (0, 1) churns out over rounds
+        // 1..2 and comes back: the run completes, the in-flight frames
+        // of the removal window drain as typed drops (byte-exact: sends
+        // stay metered), and the lifecycle counter sees both the kill
+        // and the revival.
+        let graph = Arc::new(Graph::ring(3));
+        let sched = Schedule::new(6, 1, 1, 6);
+        let alg = AlgorithmSpec::CEcl {
+            k_frac: 0.5,
+            theta: 1.0,
+            dense_first_epoch: false,
+        };
+        let mut churn = ChurnSchedule::default();
+        // Compute = 100 us/round, latency 10 us: round-0 frames are in
+        // flight during (100, 110) us, so a kill at 105 us catches them
+        // mid-air — they MUST drain as typed drops, and the churn event
+        // must unblock the endpoints that were waiting on them.
+        churn.add_edge_down(0, 105_000, 350_000);
+        let cfg = SimConfig {
+            link: LinkSpec::Constant { latency_us: 10 },
+            compute_ns_per_step: 100_000,
+            churn,
+            ..SimConfig::default()
+        };
+        let out = simulate(&graph, &cfg, 5, &sched,
+                           machine_setup(&graph, &alg, 5, 1),
+                           RoundPolicy::Sync, false)
+            .unwrap();
+        assert_eq!(out.edges_churned, 2, "one kill + one revival");
+        assert!(out.meter.churn_dropped_frames() > 0,
+                "in-flight frames must drain as drops");
+        assert!(out.meter.churn_dropped_bytes() > 0);
+        // Replay determinism with churn in the schedule.
+        let out2 = simulate(&graph, &cfg, 5, &sched,
+                            machine_setup(&graph, &alg, 5, 1),
+                            RoundPolicy::Sync, false)
+            .unwrap();
+        assert_eq!(out.meter.total_bytes(), out2.meter.total_bytes());
+        assert_eq!(out.meter.churn_dropped_frames(),
+                   out2.meter.churn_dropped_frames());
+        assert_eq!(out.w, out2.w, "churn replay must be bit-identical");
+    }
+
+    #[test]
+    fn node_leave_and_join_complete_without_panics() {
+        // Node 2 leaves a ring(4) mid-run (all its edges churn out);
+        // node 3 joins late (absent from t=0).  Both engines' gates
+        // skip dead edges, so every node still finishes its rounds.
+        let graph = Arc::new(Graph::ring(4));
+        let sched = Schedule::new(6, 1, 1, 6);
+        let alg = AlgorithmSpec::DPsgd;
+        let mut churn = ChurnSchedule::default();
+        churn.add_node_leave(2, 400_000);
+        churn.add_node_join(3, 250_000);
+        let cfg = SimConfig {
+            link: LinkSpec::Constant { latency_us: 10 },
+            compute_ns_per_step: 100_000,
+            churn,
+            ..SimConfig::default()
+        };
+        let out = simulate(&graph, &cfg, 9, &sched,
+                           machine_setup(&graph, &alg, 9, 1),
+                           RoundPolicy::Sync, false)
+            .unwrap();
+        assert!(out.edges_churned >= 4, "join + leave must transition");
+        assert_eq!(out.history.records.len(), 1, "final epoch still evals");
+        // Bad schedules are typed startup errors.
+        let mut bad = ChurnSchedule::default();
+        bad.add_edge_down(99, 0, 10);
+        let cfg_bad = SimConfig {
+            churn: bad,
+            ..SimConfig::default()
+        };
+        let err = simulate(&graph, &cfg_bad, 9, &sched,
+                           machine_setup(&graph, &alg, 9, 1),
+                           RoundPolicy::Sync, false)
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("edge 99"), "{err}");
+        let mut bad = ChurnSchedule::default();
+        bad.add_node_leave(7, 10);
+        let cfg_bad = SimConfig {
+            churn: bad,
+            ..SimConfig::default()
+        };
+        let err = simulate(&graph, &cfg_bad, 9, &sched,
+                           machine_setup(&graph, &alg, 9, 1),
+                           RoundPolicy::Sync, false)
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("node 7"), "{err}");
     }
 
     #[test]

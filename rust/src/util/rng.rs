@@ -169,6 +169,8 @@ pub mod streams {
     pub const PARTITION: u64 = 6;
     /// Virtual-time link model (drop/retransmit draws).
     pub const LINK: u64 = 7;
+    /// Random edge-churn rule (`ChurnSchedule`): per-(edge, slot) draws.
+    pub const CHURN: u64 = 8;
 }
 
 #[cfg(test)]

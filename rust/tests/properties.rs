@@ -11,7 +11,7 @@ use cecl::comm::{build_bus, Msg, Outbox};
 use cecl::compress::{measure_codec_contraction, CodecSpec, CooVec, EdgeCtx,
                      RandK, WireMode};
 use cecl::data::{node_classes, Partition};
-use cecl::graph::Graph;
+use cecl::graph::{Graph, TopologyView};
 use cecl::linalg::{Cholesky, Mat};
 use cecl::model::DatasetManifest;
 use cecl::prop_assert;
@@ -84,7 +84,14 @@ fn prop_topk_codec_never_worse_than_randk_energy() {
         // Decoded energy = ‖comp(x)‖²; top-k keeps the largest coords.
         let e = |spec: &CodecSpec| -> f64 {
             let mut codec = spec.build();
-            let ec = EdgeCtx { seed, edge: 0, round: 0, receiver: 1, dim: d };
+            let ec = EdgeCtx {
+                seed,
+                edge: 0,
+                round: 0,
+                receiver: 1,
+                dim: d,
+                epoch: 0,
+            };
             let f = codec.encode(&x, &ec);
             codec
                 .decode(&f, &ec)
@@ -112,6 +119,7 @@ fn prop_identity_codec_roundtrip_bit_exact() {
             round: 0,
             receiver: 0,
             dim: d,
+            epoch: 0,
         };
         let f = codec.encode(&x, &ec);
         prop_assert!(f.wire_bytes() == 4 * d, "dense byte accounting");
@@ -230,17 +238,17 @@ fn sm_ctx(node: usize, graph: &Arc<Graph>, seed: u64,
     }
 }
 
-/// Drive one exchange round of every node by hand (single-threaded),
-/// delivering to each receiver in ascending sender order — the same
-/// order the blocking driver drains its neighbors in.  Returns total
-/// wire bytes.
-fn drive_round(nodes: &mut [CEclNode], ws: &mut [Vec<f32>],
-               round: usize) -> usize {
+/// Drive one exchange round of every node by hand (single-threaded)
+/// under the given topology view, delivering to each receiver in
+/// ascending sender order — the same order the blocking driver drains
+/// its neighbors in.  Returns total wire bytes.
+fn drive_round_view(nodes: &mut [CEclNode], ws: &mut [Vec<f32>],
+                    round: usize, view: &TopologyView) -> usize {
     let n = nodes.len();
     let mut queued: Vec<Vec<(usize, Msg)>> = Vec::with_capacity(n);
     for i in 0..n {
         let mut out = Outbox::new();
-        NodeStateMachine::round_begin(&mut nodes[i], round, &mut ws[i],
+        NodeStateMachine::round_begin(&mut nodes[i], round, view, &mut ws[i],
                                       &mut out)
             .unwrap();
         queued.push(out.drain().collect());
@@ -251,16 +259,32 @@ fn drive_round(nodes: &mut [CEclNode], ws: &mut [Vec<f32>],
             bytes += msg.wire_bytes();
             let mut out = Outbox::new();
             NodeStateMachine::on_message(&mut nodes[to], round, src, msg,
-                                         &mut ws[to], &mut out)
+                                         view, &mut ws[to], &mut out)
                 .unwrap();
             assert!(out.is_empty(), "C-ECL is single-phase");
         }
     }
     for i in 0..n {
         assert!(nodes[i].round_complete());
-        NodeStateMachine::round_end(&mut nodes[i], round, &mut ws[i]).unwrap();
+        NodeStateMachine::round_end(&mut nodes[i], round, view, &mut ws[i])
+            .unwrap();
     }
     bytes
+}
+
+/// [`drive_round_view`] over the static full view.
+fn drive_round(nodes: &mut [CEclNode], ws: &mut [Vec<f32>],
+               round: usize) -> usize {
+    let edge_count = match nodes.len() {
+        0 => 0,
+        n => {
+            // All property graphs here are chains/rings over all nodes.
+            // Edge counts only size the view; use a safe upper bound.
+            n * n
+        }
+    };
+    let view = TopologyView::full(edge_count);
+    drive_round_view(nodes, ws, round, &view)
 }
 
 #[test]
@@ -392,11 +416,12 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
             nodes.iter().map(|n| n.dual_state().to_vec()).collect();
 
         // Collect round_begin output per node.
+        let view = TopologyView::full(graph.edges().len());
         let mut sent: Vec<cecl::compress::Frame> = Vec::new();
         for i in 0..2 {
             let mut out = Outbox::new();
-            NodeStateMachine::round_begin(&mut nodes[i], round, &mut ws[i],
-                                          &mut out)
+            NodeStateMachine::round_begin(&mut nodes[i], round, &view,
+                                          &mut ws[i], &mut out)
                 .unwrap();
             let msgs: Vec<(usize, Msg)> = out.drain().collect();
             prop_assert!(msgs.len() == 1, "node {i}: one neighbor");
@@ -423,7 +448,14 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
                 sent[i].wire_bytes()
             );
             let mut codec = spec.build();
-            let ec = EdgeCtx { seed, edge: 0, round, receiver: to, dim: d };
+            let ec = EdgeCtx {
+                seed,
+                edge: 0,
+                round,
+                receiver: to,
+                dim: d,
+                epoch: 0,
+            };
             let y_wire = codec.decode(&sent[i], &ec).unwrap();
             // (b) decoded values equal the gather of the dense y
             // (Eq. 8/9: comp is exactly linear for fixed ω).
@@ -458,11 +490,13 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
                 round,
                 from,
                 Msg::Frame(sent[from].clone()),
+                &view,
                 &mut ws[i],
                 &mut out,
             )
             .unwrap();
-            NodeStateMachine::round_end(&mut nodes[i], round, &mut ws[i])
+            NodeStateMachine::round_end(&mut nodes[i], round, &view,
+                                        &mut ws[i])
                 .unwrap();
             let mut z_expect = z_before[i][0].clone();
             let mut yvals = Vec::new();
@@ -694,6 +728,148 @@ fn prop_powergossip_async_staleness_never_exceeds_bound() {
 }
 
 #[test]
+fn prop_edge_rebirth_never_reuses_stale_codec_state() {
+    // The per-edge lifecycle satellite: remove→re-add of an edge under
+    // the STATEFUL codecs (`ef+top_k` error-feedback residuals,
+    // `low_rank:2` q̂ warm starts) must never resurrect the old
+    // incarnation's state — the reborn machine's first frame must be
+    // byte-identical to a brand-new codec instance encoding the
+    // warm-started dual's y (z = α·a·w ⇒ y = −α·a·w) under the fresh
+    // edge epoch.  A negative control pins that the property has teeth:
+    // a codec that kept its state encodes a DIFFERENT frame than a
+    // fresh one.
+    use cecl::compress::EdgeCodec as _;
+
+    check("edge-rebirth-fresh-codec", 8, 1, |ctx: &mut Ctx| {
+        let seed = ctx.rng.next_u64();
+        let specs = [
+            CodecSpec::parse("ef+top_k:0.3").unwrap(),
+            CodecSpec::parse("low_rank:2").unwrap(),
+        ];
+        for spec in specs {
+            let graph = Arc::new(Graph::chain(2));
+            let manifest = sm_manifest((3, 3, 1), 4);
+            let d = manifest.d_pad;
+            let mut nodes: Vec<CEclNode> = (0..2)
+                .map(|i| {
+                    CEclNode::new(
+                        &sm_ctx(i, &graph, seed, manifest.clone()),
+                        spec.clone(),
+                        0.9,
+                        0,
+                        DualRule::CompressY,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let mut ws: Vec<Vec<f32>> = (0..2u64)
+                .map(|i| {
+                    let mut rng = Pcg::derive(seed, &[4242, i]);
+                    (0..d).map(|_| rng.normal_f32()).collect()
+                })
+                .collect();
+            // Rounds 0..2 accumulate per-edge codec state (EF
+            // residuals / q̂ warm starts) and nonzero duals.
+            let mut view = TopologyView::full(graph.edges().len());
+            for round in 0..3 {
+                drive_round_view(&mut nodes, &mut ws, round, &view);
+            }
+            // Churn: the edge dies and is reborn activating at round 3.
+            view.kill_edge(0);
+            view.revive_edge(0, 3);
+            let mut out = Outbox::new();
+            for (i, node) in nodes.iter_mut().enumerate() {
+                NodeStateMachine::on_topology(node, &view, &mut ws[i],
+                                              &mut out)
+                    .unwrap();
+            }
+            prop_assert!(out.is_empty(), "{}: topology sync sent", spec.name());
+            // The reborn machine's first frame...
+            NodeStateMachine::round_begin(&mut nodes[0], 3, &view,
+                                          &mut ws[0], &mut out)
+                .unwrap();
+            let msgs: Vec<(usize, Msg)> = out.drain().collect();
+            prop_assert!(msgs.len() == 1, "{}: one neighbor", spec.name());
+            let frame = msgs
+                .into_iter()
+                .next()
+                .unwrap()
+                .1
+                .into_frame()
+                .map_err(|e| e.to_string())?;
+            // ...must equal a brand-new codec encoding the warm-started
+            // y = z − 2αa·w = αa·w − 2αa·w = −αa·w under epoch 1.
+            let alpha = nodes[0].alpha();
+            let a = graph.edge_sign(0, 1);
+            let y: Vec<f32> =
+                ws[0].iter().map(|&wv| -alpha * a * wv).collect();
+            let mut fresh = spec.build();
+            let mats: Vec<(usize, usize, usize)> = manifest
+                .matrix_views()
+                .into_iter()
+                .map(|(_, off, r, c)| (off, r, c))
+                .collect();
+            let vecs: Vec<(usize, usize)> = manifest
+                .vector_views()
+                .into_iter()
+                .map(|(_, off, len)| (off, len))
+                .collect();
+            fresh.bind_layout(&mats, &vecs);
+            let ec = EdgeCtx {
+                seed,
+                edge: 0,
+                round: 3,
+                receiver: 1,
+                dim: d,
+                epoch: 1,
+            };
+            let expect = fresh.encode(&y, &ec);
+            prop_assert!(
+                frame.bytes() == expect.bytes(),
+                "{}: reborn frame != fresh-codec frame (stale state \
+                 resurrected?)",
+                spec.name()
+            );
+            // Negative control: a codec that kept its state across the
+            // same rounds encodes something ELSE than a fresh one.
+            let mut used = spec.build();
+            used.bind_layout(&mats, &vecs);
+            for round in 0..3 {
+                let x: Vec<f32> =
+                    (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+                let ec_r = EdgeCtx {
+                    seed,
+                    edge: 0,
+                    round,
+                    receiver: 1,
+                    dim: d,
+                    epoch: 0,
+                };
+                let _ = used.encode(&x, &ec_r);
+            }
+            let mut fresh2 = spec.build();
+            fresh2.bind_layout(&mats, &vecs);
+            let ec4 = EdgeCtx {
+                seed,
+                edge: 0,
+                round: 4,
+                receiver: 1,
+                dim: d,
+                epoch: 0,
+            };
+            let stale_frame = used.encode(&y, &ec4);
+            let fresh_frame = fresh2.encode(&y, &ec4);
+            prop_assert!(
+                stale_frame.bytes() != fresh_frame.bytes(),
+                "{}: statefulness control failed — stale == fresh",
+                spec.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_low_rank_codec_roundtrips_within_rank_error() {
     // `low_rank:R` on an exactly rank-R matrix: with at least one
     // power-iteration refinement per rank, every shipped q factor lies
@@ -737,6 +913,7 @@ fn prop_low_rank_codec_roundtrips_within_rank_error() {
                 round,
                 receiver: 0,
                 dim,
+                epoch: 0,
             };
             let frame = codec.encode(&m, &ectx);
             prop_assert!(
@@ -770,7 +947,10 @@ fn prop_low_rank_codec_roundtrips_within_rank_error() {
 fn prop_random_graphs_connected_mh_stochastic() {
     check("graph-mh", 20, 24, |ctx: &mut Ctx| {
         let n = (ctx.size + 3).min(24);
-        let g = Graph::random(n, ctx.rng.f64() * 0.5, ctx.rng.next_u64());
+        // `random_connected` is the explicit-connectivity sampler; the
+        // plain `random` is honest G(n, p) and may disconnect.
+        let g = Graph::random_connected(n, 0.3 + ctx.rng.f64() * 0.5,
+                                        ctx.rng.next_u64());
         prop_assert!(g.is_connected(), "disconnected");
         let w = g.mh_weights();
         for i in 0..n {
