@@ -128,6 +128,44 @@ fn main() {
         t.render()
     );
 
+    // Rival ladder: same ring, link, and schedule, the algorithm
+    // varies at matched codecs — CHOCO-SGD and LEAD next to the C-ECL
+    // row they rival (the byte columns line up by construction).
+    let mut t = Table::new([
+        "algorithm", "final acc", "sim secs", "KB/node/epoch",
+    ]);
+    for alg in [
+        AlgorithmSpec::CEclCodec {
+            codec: CodecSpec::parse("rand_k:0.1").expect("bench codec"),
+            theta: 1.0,
+            dense_first_epoch: false,
+        },
+        AlgorithmSpec::Choco {
+            codec: CodecSpec::parse("rand_k:0.1").expect("bench codec"),
+        },
+        AlgorithmSpec::Lead {
+            codec: CodecSpec::parse("qsgd:4").expect("bench codec"),
+        },
+    ] {
+        let mut s = spec(
+            64,
+            4,
+            LinkSpec::Bandwidth { latency_us: 500, mbit_per_sec: 50.0 },
+        );
+        s.algorithm = alg;
+        let r = run_simulated_native(&s, &graph).expect("sim run");
+        t.row([
+            s.algorithm.name(),
+            format!("{:.3}", r.final_accuracy),
+            format!("{:.3}", r.sim_time_secs.unwrap_or(0.0)),
+            format!("{:.0}", r.mean_bytes_per_epoch / 1024.0),
+        ]);
+    }
+    println!(
+        "\nring(64), rival baselines at matched codecs:\n{}",
+        t.render()
+    );
+
     // Sync vs async rounds under one 8x straggler: wall-clock cost of
     // the event-driven scheduler is tracked alongside the simulated-
     // time win (the whole point of the per-edge-clock refactor).

@@ -1,0 +1,573 @@
+//! CHOCO-SGD (Koloskova et al. 2019, arXiv 1902.00340): compressed
+//! gossip — the paper's strongest *gossip-family* rival.
+//!
+//! Every node keeps a pair of replicas per edge: `x̂_{i|j}` (what
+//! neighbor `j` believes about this node — updated with the node's own
+//! transmitted payload, so both endpoints hold the identical value by
+//! shared-seed construction) and `x̂_{j|i}` (what this node believes
+//! about neighbor `j`).  One round, after the K local SGD steps:
+//!
+//! * send `q_{i→j} = comp(x_i − x̂_{i|j}; ω_{j|i})` on every live edge,
+//!   then apply the *decoded* `q̂` to the own-side replica — the same
+//!   update the receiver applies, so replicas never fork;
+//! * on receive, `x̂_{j|i} += q̂_{j→i}`;
+//! * consensus step
+//!   `x_i += γ Σ_j W_ij (x̂_{j|i} − x̂_{i|j})`
+//!   with the Metropolis–Hastings weights `W` and consensus step size
+//!   `γ = τ` (the codec's Eq. (7) contraction — Koloskova's γ ∝ δ
+//!   schedule collapsed onto the one compression constant the repo
+//!   already computes; `identity` ⇒ τ = 1 ⇒ γ = 1).
+//!
+//! **Exact-gossip degeneration** — with the `identity` codec the
+//! replicas equal the true neighbor parameters bit-for-bit and γ = 1,
+//! so the consensus step *is* the D-PSGD MH fold; the implementation
+//! runs D-PSGD's exact accumulation order in that case, and the test
+//! suite pins the two trajectories bit-identical on both engines.
+//!
+//! Replicas are gossip state, not dual state: `alpha_deg = 0` and no
+//! `zsum`, so the Eq. (6) local step reduces to plain SGD, exactly like
+//! D-PSGD.  Per-edge lifecycle, clocks, and staleness gating follow the
+//! same contract as every other machine (see `algorithms` module docs):
+//! an edge birth allocates fresh codec instances and zeroes both
+//! replicas (the next send retransmits the full compressed state), an
+//! edge death retires them, and a neighbor that has not spoken this
+//! incarnation contributes nothing to the consensus sum.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::comm::{Msg, NodeComm, Outbox};
+use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx};
+use crate::graph::{Graph, TopologyView};
+
+use super::{BuildCtx, EdgeClock, NodeAlgorithm, NodeStateMachine,
+            RoundPolicy};
+
+pub struct ChocoNode {
+    node: usize,
+    graph: Arc<Graph>,
+    seed: u64,
+    d_pad: usize,
+    /// This node's row of the MH weight matrix.
+    weights: Vec<f64>,
+    /// Consensus step size γ = codec τ (1 for `identity` ⇒ D-PSGD).
+    gamma: f32,
+    codec_spec: CodecSpec,
+    /// Outbound codec per neighbor slot: encodes this node's q and
+    /// self-decodes it for the own-side replica update.
+    codecs_out: Vec<Box<dyn EdgeCodec>>,
+    /// Inbound codec per neighbor slot: decodes the neighbor's q.
+    codecs_in: Vec<Box<dyn EdgeCodec>>,
+    /// `x̂_{i|j}`: own replica as held by neighbor slot jj.
+    hat_self: Vec<Vec<f32>>,
+    /// `x̂_{j|i}`: neighbor slot jj's replica held here.
+    hat_nb: Vec<Vec<f32>>,
+    /// `identity` codec: replicas are exact, run the D-PSGD fold.
+    exact: bool,
+    /// Sync vs bounded-staleness async rounds.
+    policy: RoundPolicy,
+    /// The node's own round clock (set by `round_begin`).
+    cur_round: usize,
+    /// Per-edge clocks: freshest replica stamp, liveness, activation.
+    clocks: Vec<EdgeClock>,
+    /// Cached edge incarnation per neighbor slot.
+    edge_epochs: Vec<u32>,
+    /// Last `TopologyView::version` synced against.
+    seen_view: u64,
+    /// Layout views for rebinding freshly built codecs on edge birth.
+    mats: Vec<(usize, usize, usize)>,
+    vecs: Vec<(usize, usize)>,
+    /// Cached static full view for the blocking engine.
+    full_view: Arc<TopologyView>,
+    /// Largest per-edge lag consumed at any `round_end`.
+    max_lag_seen: usize,
+    // -- preallocated scratch -------------------------------------------
+    acc: Vec<f32>,
+    scratch_q: Vec<f32>,
+}
+
+impl ChocoNode {
+    pub fn new(ctx: &BuildCtx, codec: CodecSpec) -> Result<ChocoNode> {
+        let degree = ctx.graph.degree(ctx.node);
+        ensure!(degree > 0, "CHOCO-SGD requires no isolated nodes");
+        codec.validate()?;
+        let d_pad = ctx.manifest.d_pad;
+        let mats: Vec<(usize, usize, usize)> = ctx
+            .manifest
+            .matrix_views()
+            .into_iter()
+            .map(|(_, off, r, c)| (off, r, c))
+            .collect();
+        let vecs: Vec<(usize, usize)> = ctx
+            .manifest
+            .vector_views()
+            .into_iter()
+            .map(|(_, off, len)| (off, len))
+            .collect();
+        let build = |mats: &[(usize, usize, usize)],
+                     vecs: &[(usize, usize)]| {
+            let mut c = codec.build();
+            c.bind_layout(mats, vecs);
+            c
+        };
+        let gamma = codec.tau(d_pad).clamp(0.0, 1.0) as f32;
+        Ok(ChocoNode {
+            node: ctx.node,
+            graph: Arc::clone(&ctx.graph),
+            seed: ctx.seed,
+            d_pad,
+            weights: ctx.graph.mh_weights()[ctx.node].clone(),
+            gamma,
+            exact: matches!(codec, CodecSpec::Identity),
+            codecs_out: (0..degree).map(|_| build(&mats, &vecs)).collect(),
+            codecs_in: (0..degree).map(|_| build(&mats, &vecs)).collect(),
+            codec_spec: codec,
+            hat_self: vec![vec![0.0; d_pad]; degree],
+            hat_nb: vec![vec![0.0; d_pad]; degree],
+            policy: ctx.round_policy,
+            cur_round: 0,
+            clocks: vec![EdgeClock::born(0); degree],
+            edge_epochs: vec![0; degree],
+            seen_view: 0,
+            mats,
+            vecs,
+            full_view: Arc::new(TopologyView::full(
+                ctx.graph.edges().len(),
+            )),
+            max_lag_seen: 0,
+            acc: vec![0.0; d_pad],
+            scratch_q: Vec::with_capacity(d_pad),
+        })
+    }
+
+    /// The consensus step size the codec's τ selected.
+    pub fn gamma(&self) -> f32 {
+        self.gamma
+    }
+
+    /// Test access: (own-side, neighbor-side) replicas per slot.
+    pub fn replicas(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.hat_self, &self.hat_nb)
+    }
+
+    /// Per-edge lifecycle sync (same contract as `CEclNode::sync_view`):
+    /// a birth allocates fresh codec instances and zeroes both replicas
+    /// — the next send retransmits the full compressed state, so no
+    /// pre-churn replica (or error-feedback residual) can leak into a
+    /// new incarnation.  A death retires the slot.
+    fn sync_view(&mut self, view: &TopologyView) -> Result<()> {
+        if view.version() == self.seen_view {
+            return Ok(());
+        }
+        self.seen_view = view.version();
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        for (jj, &j) in neighbors.iter().enumerate() {
+            let e = self
+                .graph
+                .edge_index(self.node, j)
+                .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
+            let life = view.edge_life(e);
+            if life.epoch != self.edge_epochs[jj] {
+                self.edge_epochs[jj] = life.epoch;
+                let mut codec = self.codec_spec.build();
+                codec.bind_layout(&self.mats, &self.vecs);
+                self.codecs_out[jj] = codec;
+                let mut codec = self.codec_spec.build();
+                codec.bind_layout(&self.mats, &self.vecs);
+                self.codecs_in[jj] = codec;
+                self.hat_self[jj].iter_mut().for_each(|v| *v = 0.0);
+                self.hat_nb[jj].iter_mut().for_each(|v| *v = 0.0);
+                let mut clock = EdgeClock::born(life.activation_round);
+                clock.live = life.live;
+                self.clocks[jj] = clock;
+            } else if life.live != self.clocks[jj].live {
+                self.clocks[jj].live = life.live;
+                if !life.live {
+                    self.hat_self[jj].iter_mut().for_each(|v| *v = 0.0);
+                    self.hat_nb[jj].iter_mut().for_each(|v| *v = 0.0);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Shared-seed context for the payload `receiver` consumes on
+    /// `edge` at `round` (identical at both endpoints).
+    fn edge_ctx(&self, jj: usize, edge: usize, round: usize,
+                receiver: usize) -> EdgeCtx {
+        EdgeCtx {
+            seed: self.seed,
+            edge,
+            round,
+            receiver,
+            dim: self.d_pad,
+            epoch: self.edge_epochs[jj],
+        }
+    }
+}
+
+impl NodeStateMachine for ChocoNode {
+    fn name(&self) -> String {
+        format!("CHOCO-SGD [{}]", self.codec_spec.name())
+    }
+
+    fn round_begin(&mut self, round: usize, view: &TopologyView,
+                   w: &mut [f32], out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)?;
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        self.cur_round = round;
+        for (jj, &j) in neighbors.iter().enumerate() {
+            if !self.clocks[jj].active(round) {
+                continue; // dead or not-yet-activated edge
+            }
+            let e = self
+                .graph
+                .edge_index(self.node, j)
+                .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
+            // ω_{j|i}: what j receives from us.
+            let ctx_e = self.edge_ctx(jj, e, round, j);
+            if self.exact {
+                // Identity wire carries x itself; the replica is exact.
+                let frame = self.codecs_out[jj].encode(w, &ctx_e);
+                self.hat_self[jj].copy_from_slice(w);
+                out.send(j, Msg::Frame(frame));
+                continue;
+            }
+            let codec = &mut self.codecs_out[jj];
+            let hs = &self.hat_self[jj];
+            let frame = match codec.encode_from(&|i| w[i] - hs[i], &ctx_e) {
+                Some(frame) => frame,
+                None => {
+                    self.scratch_q.clear();
+                    self.scratch_q.extend(
+                        w.iter().zip(hs.iter()).map(|(&wv, &h)| wv - h),
+                    );
+                    codec.encode(&self.scratch_q, &ctx_e)
+                }
+            };
+            // Apply the decoded payload — exactly what the receiver
+            // will apply — so both ends of the edge hold the same
+            // `x̂_{i|j}` without the replica ever crossing the wire.
+            let qhat = codec.decode(&frame, &ctx_e)?;
+            for (h, &q) in self.hat_self[jj].iter_mut().zip(&qhat) {
+                *h += q;
+            }
+            out.send(j, Msg::Frame(frame));
+        }
+        Ok(())
+    }
+
+    fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
+                  view: &TopologyView, _w: &mut [f32],
+                  _out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)?;
+        let jj = self
+            .graph
+            .neighbors(self.node)
+            .iter()
+            .position(|&x| x == from)
+            .ok_or_else(|| {
+                anyhow!("node {}: message from non-neighbor {from}", self.node)
+            })?;
+        ensure!(
+            self.clocks[jj].live,
+            "node {}: replica update from {from} on a churned-out edge \
+             (the engine should have dropped it)",
+            self.node
+        );
+        super::admit_message(self.policy, self.node, from, self.cur_round,
+                             self.clocks[jj].round, msg_round)?;
+        let e = self
+            .graph
+            .edge_index(self.node, from)
+            .ok_or_else(|| anyhow!("({}, {from}) is not an edge", self.node))?;
+        // ω_{i|j}: what we receive from j — keyed off the SENDER's
+        // round stamp, so both endpoints derive the same stream however
+        // far their clocks have drifted.
+        let ctx_e = self.edge_ctx(jj, e, msg_round, self.node);
+        let frame = msg.into_frame()?;
+        let qhat = self.codecs_in[jj].decode(&frame, &ctx_e)?;
+        if self.exact {
+            self.hat_nb[jj].copy_from_slice(&qhat);
+        } else {
+            for (h, &q) in self.hat_nb[jj].iter_mut().zip(&qhat) {
+                *h += q;
+            }
+        }
+        self.clocks[jj].round = msg_round as i64;
+        self.clocks[jj].spoken = true;
+        Ok(())
+    }
+
+    fn round_complete(&self) -> bool {
+        super::staleness_gate(self.policy, self.cur_round, &self.clocks)
+    }
+
+    fn round_end(&mut self, round: usize, view: &TopologyView,
+                 w: &mut [f32]) -> Result<()> {
+        self.sync_view(view)?;
+        let lag = super::check_staleness(self.policy, self.node, "replica",
+                                         round, &self.clocks)?;
+        self.max_lag_seen = self.max_lag_seen.max(lag);
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        if self.exact {
+            // Identity + γ = 1: the consensus step algebraically equals
+            // the MH fold, and the replicas equal the true neighbor
+            // parameters bit-for-bit — run D-PSGD's exact accumulation
+            // order so the two trajectories are bit-identical (pinned).
+            let wii = self.weights[self.node] as f32;
+            for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
+                *a = wii * wv;
+            }
+            for (jj, &j) in neighbors.iter().enumerate() {
+                let wij = self.weights[j] as f32;
+                let c = &self.clocks[jj];
+                if c.live && c.spoken {
+                    for (a, &v) in self.acc.iter_mut().zip(&self.hat_nb[jj]) {
+                        *a += wij * v;
+                    }
+                } else {
+                    // Dead or not-yet-spoken slot: fall back to our own
+                    // parameters (the MH row stays stochastic).
+                    for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
+                        *a += wij * wv;
+                    }
+                }
+            }
+            w.copy_from_slice(&self.acc);
+            return Ok(());
+        }
+        // General compressed path: x += γ Σ_j W_ij (x̂_{j|i} − x̂_{i|j}).
+        self.acc.iter_mut().for_each(|v| *v = 0.0);
+        for (jj, &j) in neighbors.iter().enumerate() {
+            let c = &self.clocks[jj];
+            if !(c.live && c.spoken) {
+                continue; // no replica pair agreed on this edge yet
+            }
+            let wij = self.weights[j] as f32;
+            for ((a, &hn), &hs) in self
+                .acc
+                .iter_mut()
+                .zip(&self.hat_nb[jj])
+                .zip(&self.hat_self[jj])
+            {
+                *a += wij * (hn - hs);
+            }
+        }
+        let gamma = self.gamma;
+        for (wv, &a) in w.iter_mut().zip(&self.acc) {
+            *wv += gamma * a;
+        }
+        Ok(())
+    }
+
+    fn on_topology(&mut self, view: &TopologyView, _w: &mut [f32],
+                   _out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)
+    }
+
+    fn max_staleness_seen(&self) -> usize {
+        self.max_lag_seen
+    }
+
+    fn policy(&self) -> Option<RoundPolicy> {
+        Some(self.policy)
+    }
+}
+
+impl NodeAlgorithm for ChocoNode {
+    fn name(&self) -> String {
+        NodeStateMachine::name(self)
+    }
+
+    fn exchange(&mut self, round: usize, w: &mut [f32], comm: &NodeComm)
+                -> Result<()> {
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        let view = Arc::clone(&self.full_view);
+        super::drive_blocking(self, &neighbors, &view, round, w, comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::DPsgdNode;
+    use crate::model::Manifest;
+    use crate::util::rng::Pcg;
+
+    fn manifest() -> crate::model::DatasetManifest {
+        Manifest::parse(
+            "version 1\nsmoke s\ndataset t\nd 8\nd_pad 8\ninput 2 2 1\n\
+             classes 2\nbatch 2\neval_batch 2\ntrain_step a\neval_step b\n\
+             dual_update c\ninit_w d\nlayer l 2 4\nend\n",
+            std::path::Path::new("/x"),
+        )
+        .unwrap()
+        .dataset("t")
+        .unwrap()
+        .clone()
+    }
+
+    fn ctx(node: usize, graph: &Arc<Graph>) -> BuildCtx {
+        BuildCtx {
+            node,
+            graph: Arc::clone(graph),
+            manifest: manifest(),
+            seed: 7,
+            eta: 0.1,
+            local_steps: 1,
+            rounds_per_epoch: 1,
+            dual_path: crate::algorithms::DualPath::Native,
+            runtime: None,
+            round_policy: RoundPolicy::Sync,
+        }
+    }
+
+    fn init_w(node: usize) -> Vec<f32> {
+        let mut rng = Pcg::new(500 + node as u64);
+        (0..8).map(|_| rng.normal_f32()).collect()
+    }
+
+    /// Drive a full network of state machines for `rounds` sync rounds
+    /// (no local updates between rounds).
+    fn run_network(machines: &mut [Box<dyn NodeStateMachine>],
+                   ws: &mut [Vec<f32>], rounds: usize) {
+        let view = TopologyView::full(64);
+        for r in 0..rounds {
+            let mut inflight: Vec<(usize, usize, Msg)> = Vec::new();
+            for (i, m) in machines.iter_mut().enumerate() {
+                let mut out = Outbox::new();
+                m.round_begin(r, &view, &mut ws[i], &mut out).unwrap();
+                for (to, msg) in out.drain() {
+                    inflight.push((i, to, msg));
+                }
+            }
+            for (from, to, msg) in inflight {
+                let mut out = Outbox::new();
+                machines[to]
+                    .on_message(r, from, msg, &view, &mut ws[to], &mut out)
+                    .unwrap();
+                assert!(out.is_empty());
+            }
+            for (i, m) in machines.iter_mut().enumerate() {
+                assert!(m.round_complete(), "round {r} node {i}");
+                m.round_end(r, &view, &mut ws[i]).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn identity_codec_is_bitwise_dpsgd() {
+        // The exact-gossip degenerate case: CHOCO-SGD with the identity
+        // codec must walk D-PSGD's trajectory bit-for-bit.
+        let graph = Arc::new(Graph::ring(4));
+        let mut choco: Vec<Box<dyn NodeStateMachine>> = (0..4)
+            .map(|i| {
+                Box::new(
+                    ChocoNode::new(&ctx(i, &graph), CodecSpec::Identity)
+                        .unwrap(),
+                ) as Box<dyn NodeStateMachine>
+            })
+            .collect();
+        let mut dpsgd: Vec<Box<dyn NodeStateMachine>> = (0..4)
+            .map(|i| {
+                Box::new(DPsgdNode::new(&ctx(i, &graph)))
+                    as Box<dyn NodeStateMachine>
+            })
+            .collect();
+        let mut wc: Vec<Vec<f32>> = (0..4).map(init_w).collect();
+        let mut wd = wc.clone();
+        run_network(&mut choco, &mut wc, 5);
+        run_network(&mut dpsgd, &mut wd, 5);
+        for (c, d) in wc.iter().zip(&wd) {
+            let cb: Vec<u32> = c.iter().map(|v| v.to_bits()).collect();
+            let db: Vec<u32> = d.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(cb, db);
+        }
+    }
+
+    #[test]
+    fn compressed_consensus_preserves_mean_and_contracts() {
+        // Per-edge replica pairs are held identically at both endpoints
+        // and W is symmetric, so the node-mean is invariant and the
+        // spread contracts (γ = τ = 0.5 here).
+        let graph = Arc::new(Graph::ring(4));
+        let spec = CodecSpec::parse("rand_k:0.5").unwrap();
+        let mut machines: Vec<Box<dyn NodeStateMachine>> = (0..4)
+            .map(|i| {
+                Box::new(ChocoNode::new(&ctx(i, &graph), spec.clone())
+                    .unwrap()) as Box<dyn NodeStateMachine>
+            })
+            .collect();
+        let mut ws: Vec<Vec<f32>> = (0..4).map(init_w).collect();
+        let mean_before: f32 =
+            ws.iter().flat_map(|w| w.iter()).sum::<f32>() / 32.0;
+        let spread = |ws: &[Vec<f32>]| -> f32 {
+            let mut s = 0.0;
+            for a in ws {
+                for b in ws {
+                    s += a
+                        .iter()
+                        .zip(b)
+                        .map(|(x, y)| (x - y) * (x - y))
+                        .sum::<f32>();
+                }
+            }
+            s
+        };
+        let spread_before = spread(&ws);
+        run_network(&mut machines, &mut ws, 30);
+        let mean_after: f32 =
+            ws.iter().flat_map(|w| w.iter()).sum::<f32>() / 32.0;
+        assert!((mean_after - mean_before).abs() < 1e-3,
+                "{mean_before} -> {mean_after}");
+        let spread_after = spread(&ws);
+        assert!(spread_after < spread_before * 0.1,
+                "{spread_before} -> {spread_after}");
+        // And the replicas have locked onto the true parameters.
+        let any = machines[0].name();
+        assert_eq!(any, "CHOCO-SGD [rand_k 50%]");
+    }
+
+    #[test]
+    fn gamma_follows_codec_tau() {
+        let graph = Arc::new(Graph::ring(4));
+        let c = |s: &str| {
+            ChocoNode::new(&ctx(0, &graph), CodecSpec::parse(s).unwrap())
+                .unwrap()
+                .gamma()
+        };
+        assert_eq!(c("identity"), 1.0);
+        assert!((c("rand_k:0.1") - 0.1).abs() < 1e-6);
+        assert!(c("qsgd:4") > 0.0 && c("qsgd:4") <= 1.0);
+    }
+
+    #[test]
+    fn edge_rebirth_resets_replicas_and_codec() {
+        let graph = Arc::new(Graph::ring(4));
+        let spec = CodecSpec::parse("rand_k:0.5").unwrap();
+        let mut node = ChocoNode::new(&ctx(0, &graph), spec).unwrap();
+        let mut view = TopologyView::full(graph.edges().len());
+        let mut w = init_w(0);
+        let mut out = Outbox::new();
+        // Round 0: both neighbors speak, replicas move off zero.
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        out.drain().for_each(drop);
+        assert!(node.hat_self[0].iter().any(|&v| v != 0.0));
+        // Kill and revive edge (0, 1): epoch bumps, slot 0 is reborn.
+        let e = graph.edge_index(0, 1).unwrap();
+        view.kill_edge(e);
+        view.revive_edge(e, 3);
+        NodeStateMachine::on_topology(&mut node, &view, &mut w, &mut out)
+            .unwrap();
+        assert!(node.hat_self[0].iter().all(|&v| v == 0.0));
+        assert!(node.hat_nb[0].iter().all(|&v| v == 0.0));
+        assert_eq!(node.clocks[0].activation, 3);
+        assert!(!node.clocks[0].spoken);
+        // Slot 1 (edge to neighbor 3) is untouched.
+        assert!(node.hat_self[1].iter().any(|&v| v != 0.0));
+    }
+}

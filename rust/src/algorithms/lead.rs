@@ -1,0 +1,518 @@
+//! LEAD (Liu et al. 2021, arXiv 2007.00232): compressed primal–dual
+//! decentralized SGD — the paper's strongest *dual-family* rival.
+//!
+//! LEAD is, like (C-)ECL, an operator-splitting method: each node
+//! carries a dual variable `d_i` (with `Σ_i d_i = 0` preserved by
+//! symmetric updates) and communicates a *compressed difference*
+//! against a per-edge replica, so the transmitted payload vanishes at
+//! the fix point.  One round of Algorithm 1, mapped onto this repo's
+//! round contract:
+//!
+//! 1. **Local step** (the engine's Eq. (6) kernel): the machine
+//!    advertises `alpha_deg = 0` and `zsum = −d_i`, so the shared
+//!    local-update kernel computes
+//!    `z_i = w_i − η ∇f_i(w_i) − η d_i`
+//!    — exactly LEAD's gradient + dual correction, with zero custom
+//!    kernel code.
+//! 2. **Compress & gossip** (`round_begin` / `on_message`): per live
+//!    edge, send `q = comp(z_i − h_{i|j})`, form the estimate
+//!    `ẑ_{i|j} = h_{i|j} + q̂` and mix the replica
+//!    `h_{i|j} += α q̂` (both endpoints apply the *decoded* payload, so
+//!    the replica pair never forks).  The mixing rate
+//!    `α = 1/(2 − τ) ∈ (1/2, 1]` sits mid-interval of the contraction
+//!    condition `α (1 + C) < 2` with `C = 1 − τ`, so the replica error
+//!    contracts for every codec the repo ships (`identity` ⇒ α = 1).
+//! 3. **Primal–dual update** (`round_end`): with
+//!    `diff_i = Σ_j W_ij (ẑ_{i|j} − ẑ_{j|i})` over live, spoken edges,
+//!    `d_i += γ/(2η) · diff_i` and `w_i = z_i − (γ/2) · diff_i`,
+//!    using the Metropolis–Hastings weights and γ = 1.
+//!
+//! The dual `d_i` is node-level state and survives churn; the replica
+//! pairs `h_{i|j}`, `h_{j|i}` and estimates `ẑ` are per-edge state
+//! with the full lifecycle: birth allocates fresh codecs and zeroes
+//! them (the next send retransmits the full compressed state), death
+//! retires them, and unspoken slots contribute nothing to `diff`.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::comm::{Msg, NodeComm, Outbox};
+use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx};
+use crate::graph::{Graph, TopologyView};
+
+use super::{BuildCtx, EdgeClock, NodeAlgorithm, NodeStateMachine,
+            RoundPolicy};
+
+pub struct LeadNode {
+    node: usize,
+    graph: Arc<Graph>,
+    seed: u64,
+    d_pad: usize,
+    /// This node's row of the MH weight matrix.
+    weights: Vec<f64>,
+    /// Learning rate η — the dual step is γ/(2η).
+    eta: f32,
+    /// Primal–dual step size γ (Algorithm 1; 1.0 is the paper default).
+    gamma: f32,
+    /// Replica mixing rate α = 1/(2 − τ).
+    alpha_mix: f32,
+    codec_spec: CodecSpec,
+    /// Outbound codec per slot (encode + self-decode of own payload).
+    codecs_out: Vec<Box<dyn EdgeCodec>>,
+    /// Inbound codec per slot (decode of the neighbor's payload).
+    codecs_in: Vec<Box<dyn EdgeCodec>>,
+    /// `h_{i|j}`: own-side replica as held by neighbor slot jj.
+    h_self: Vec<Vec<f32>>,
+    /// `h_{j|i}`: neighbor slot jj's replica held here.
+    h_nb: Vec<Vec<f32>>,
+    /// `ẑ_{i|j}`: freshest own-z estimate shared with slot jj.
+    zhat_self: Vec<Vec<f32>>,
+    /// `ẑ_{j|i}`: freshest estimate of slot jj's z.
+    zhat_nb: Vec<Vec<f32>>,
+    /// `−d_i`, exposed as `zsum` so the Eq. (6) kernel computes
+    /// `w − η∇f − η d` with `alpha_deg = 0`.
+    neg_d: Vec<f32>,
+    /// Sync vs bounded-staleness async rounds.
+    policy: RoundPolicy,
+    cur_round: usize,
+    clocks: Vec<EdgeClock>,
+    edge_epochs: Vec<u32>,
+    seen_view: u64,
+    mats: Vec<(usize, usize, usize)>,
+    vecs: Vec<(usize, usize)>,
+    full_view: Arc<TopologyView>,
+    max_lag_seen: usize,
+    // -- preallocated scratch -------------------------------------------
+    diff: Vec<f32>,
+    scratch_q: Vec<f32>,
+}
+
+impl LeadNode {
+    pub fn new(ctx: &BuildCtx, codec: CodecSpec) -> Result<LeadNode> {
+        let degree = ctx.graph.degree(ctx.node);
+        ensure!(degree > 0, "LEAD requires no isolated nodes");
+        codec.validate()?;
+        let d_pad = ctx.manifest.d_pad;
+        let mats: Vec<(usize, usize, usize)> = ctx
+            .manifest
+            .matrix_views()
+            .into_iter()
+            .map(|(_, off, r, c)| (off, r, c))
+            .collect();
+        let vecs: Vec<(usize, usize)> = ctx
+            .manifest
+            .vector_views()
+            .into_iter()
+            .map(|(_, off, len)| (off, len))
+            .collect();
+        let build = |mats: &[(usize, usize, usize)],
+                     vecs: &[(usize, usize)]| {
+            let mut c = codec.build();
+            c.bind_layout(mats, vecs);
+            c
+        };
+        let tau = codec.tau(d_pad).clamp(0.0, 1.0);
+        Ok(LeadNode {
+            node: ctx.node,
+            graph: Arc::clone(&ctx.graph),
+            seed: ctx.seed,
+            d_pad,
+            weights: ctx.graph.mh_weights()[ctx.node].clone(),
+            eta: ctx.eta,
+            gamma: 1.0,
+            alpha_mix: (1.0 / (2.0 - tau)) as f32,
+            codecs_out: (0..degree).map(|_| build(&mats, &vecs)).collect(),
+            codecs_in: (0..degree).map(|_| build(&mats, &vecs)).collect(),
+            codec_spec: codec,
+            h_self: vec![vec![0.0; d_pad]; degree],
+            h_nb: vec![vec![0.0; d_pad]; degree],
+            zhat_self: vec![vec![0.0; d_pad]; degree],
+            zhat_nb: vec![vec![0.0; d_pad]; degree],
+            neg_d: vec![0.0; d_pad],
+            policy: ctx.round_policy,
+            cur_round: 0,
+            clocks: vec![EdgeClock::born(0); degree],
+            edge_epochs: vec![0; degree],
+            seen_view: 0,
+            mats,
+            vecs,
+            full_view: Arc::new(TopologyView::full(
+                ctx.graph.edges().len(),
+            )),
+            max_lag_seen: 0,
+            diff: vec![0.0; d_pad],
+            scratch_q: Vec::with_capacity(d_pad),
+        })
+    }
+
+    /// Replica mixing rate the codec's τ selected.
+    pub fn alpha_mix(&self) -> f32 {
+        self.alpha_mix
+    }
+
+    /// Test access to the dual variable (as `−d_i`).
+    pub fn neg_dual(&self) -> &[f32] {
+        &self.neg_d
+    }
+
+    /// Per-edge lifecycle sync (same contract as the other machines):
+    /// birth ⇒ fresh codecs + zeroed replicas/estimates; death ⇒
+    /// retire.  The node-level dual `neg_d` survives churn.
+    fn sync_view(&mut self, view: &TopologyView) -> Result<()> {
+        if view.version() == self.seen_view {
+            return Ok(());
+        }
+        self.seen_view = view.version();
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        for (jj, &j) in neighbors.iter().enumerate() {
+            let e = self
+                .graph
+                .edge_index(self.node, j)
+                .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
+            let life = view.edge_life(e);
+            if life.epoch != self.edge_epochs[jj] {
+                self.edge_epochs[jj] = life.epoch;
+                let mut codec = self.codec_spec.build();
+                codec.bind_layout(&self.mats, &self.vecs);
+                self.codecs_out[jj] = codec;
+                let mut codec = self.codec_spec.build();
+                codec.bind_layout(&self.mats, &self.vecs);
+                self.codecs_in[jj] = codec;
+                for buf in [&mut self.h_self[jj], &mut self.h_nb[jj],
+                            &mut self.zhat_self[jj], &mut self.zhat_nb[jj]] {
+                    buf.iter_mut().for_each(|v| *v = 0.0);
+                }
+                let mut clock = EdgeClock::born(life.activation_round);
+                clock.live = life.live;
+                self.clocks[jj] = clock;
+            } else if life.live != self.clocks[jj].live {
+                self.clocks[jj].live = life.live;
+                if !life.live {
+                    for buf in [&mut self.h_self[jj], &mut self.h_nb[jj],
+                                &mut self.zhat_self[jj],
+                                &mut self.zhat_nb[jj]] {
+                        buf.iter_mut().for_each(|v| *v = 0.0);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn edge_ctx(&self, jj: usize, edge: usize, round: usize,
+                receiver: usize) -> EdgeCtx {
+        EdgeCtx {
+            seed: self.seed,
+            edge,
+            round,
+            receiver,
+            dim: self.d_pad,
+            epoch: self.edge_epochs[jj],
+        }
+    }
+}
+
+impl NodeStateMachine for LeadNode {
+    fn name(&self) -> String {
+        format!("LEAD [{}]", self.codec_spec.name())
+    }
+
+    fn round_begin(&mut self, round: usize, view: &TopologyView,
+                   w: &mut [f32], out: &mut Outbox) -> Result<()> {
+        // On entry `w` holds z = w − η∇f − ηd (the Eq. (6) kernel with
+        // alpha_deg = 0 and zsum = −d already ran the local steps).
+        self.sync_view(view)?;
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        self.cur_round = round;
+        for (jj, &j) in neighbors.iter().enumerate() {
+            if !self.clocks[jj].active(round) {
+                continue;
+            }
+            let e = self
+                .graph
+                .edge_index(self.node, j)
+                .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
+            let ctx_e = self.edge_ctx(jj, e, round, j);
+            let codec = &mut self.codecs_out[jj];
+            let hs = &self.h_self[jj];
+            let frame = match codec.encode_from(&|i| w[i] - hs[i], &ctx_e) {
+                Some(frame) => frame,
+                None => {
+                    self.scratch_q.clear();
+                    self.scratch_q.extend(
+                        w.iter().zip(hs.iter()).map(|(&zv, &h)| zv - h),
+                    );
+                    codec.encode(&self.scratch_q, &ctx_e)
+                }
+            };
+            // Mirror the receiver: ẑ_{i|j} = h + q̂, then h += α q̂, off
+            // the decoded payload so the pair never forks.
+            let qhat = codec.decode(&frame, &ctx_e)?;
+            let alpha = self.alpha_mix;
+            for ((zh, h), &q) in self.zhat_self[jj]
+                .iter_mut()
+                .zip(self.h_self[jj].iter_mut())
+                .zip(&qhat)
+            {
+                *zh = *h + q;
+                *h += alpha * q;
+            }
+            out.send(j, Msg::Frame(frame));
+        }
+        Ok(())
+    }
+
+    fn on_message(&mut self, msg_round: usize, from: usize, msg: Msg,
+                  view: &TopologyView, _w: &mut [f32],
+                  _out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)?;
+        let jj = self
+            .graph
+            .neighbors(self.node)
+            .iter()
+            .position(|&x| x == from)
+            .ok_or_else(|| {
+                anyhow!("node {}: message from non-neighbor {from}", self.node)
+            })?;
+        ensure!(
+            self.clocks[jj].live,
+            "node {}: z-estimate from {from} on a churned-out edge \
+             (the engine should have dropped it)",
+            self.node
+        );
+        super::admit_message(self.policy, self.node, from, self.cur_round,
+                             self.clocks[jj].round, msg_round)?;
+        let e = self
+            .graph
+            .edge_index(self.node, from)
+            .ok_or_else(|| anyhow!("({}, {from}) is not an edge", self.node))?;
+        let ctx_e = self.edge_ctx(jj, e, msg_round, self.node);
+        let frame = msg.into_frame()?;
+        let qhat = self.codecs_in[jj].decode(&frame, &ctx_e)?;
+        let alpha = self.alpha_mix;
+        for ((zh, h), &q) in self.zhat_nb[jj]
+            .iter_mut()
+            .zip(self.h_nb[jj].iter_mut())
+            .zip(&qhat)
+        {
+            *zh = *h + q;
+            *h += alpha * q;
+        }
+        self.clocks[jj].round = msg_round as i64;
+        self.clocks[jj].spoken = true;
+        Ok(())
+    }
+
+    fn round_complete(&self) -> bool {
+        super::staleness_gate(self.policy, self.cur_round, &self.clocks)
+    }
+
+    fn round_end(&mut self, round: usize, view: &TopologyView,
+                 w: &mut [f32]) -> Result<()> {
+        self.sync_view(view)?;
+        let lag = super::check_staleness(self.policy, self.node, "z-estimate",
+                                         round, &self.clocks)?;
+        self.max_lag_seen = self.max_lag_seen.max(lag);
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        // diff = Σ_j W_ij (ẑ_{i|j} − ẑ_{j|i}) over live, spoken slots.
+        self.diff.iter_mut().for_each(|v| *v = 0.0);
+        for (jj, &j) in neighbors.iter().enumerate() {
+            let c = &self.clocks[jj];
+            if !(c.live && c.spoken) {
+                continue;
+            }
+            let wij = self.weights[j] as f32;
+            for ((d, &zs), &zn) in self
+                .diff
+                .iter_mut()
+                .zip(&self.zhat_self[jj])
+                .zip(&self.zhat_nb[jj])
+            {
+                *d += wij * (zs - zn);
+            }
+        }
+        // d += γ/(2η) diff  (stored negated);  w = z − (γ/2) diff.
+        let dual_step = self.gamma / (2.0 * self.eta);
+        let primal_step = self.gamma / 2.0;
+        for ((nd, wv), &dv) in
+            self.neg_d.iter_mut().zip(w.iter_mut()).zip(&self.diff)
+        {
+            *nd -= dual_step * dv;
+            *wv -= primal_step * dv;
+        }
+        Ok(())
+    }
+
+    fn on_topology(&mut self, view: &TopologyView, _w: &mut [f32],
+                   _out: &mut Outbox) -> Result<()> {
+        self.sync_view(view)
+    }
+
+    fn zsum(&self) -> Option<&[f32]> {
+        Some(&self.neg_d)
+    }
+
+    fn max_staleness_seen(&self) -> usize {
+        self.max_lag_seen
+    }
+
+    fn policy(&self) -> Option<RoundPolicy> {
+        Some(self.policy)
+    }
+}
+
+impl NodeAlgorithm for LeadNode {
+    fn name(&self) -> String {
+        NodeStateMachine::name(self)
+    }
+
+    fn exchange(&mut self, round: usize, w: &mut [f32], comm: &NodeComm)
+                -> Result<()> {
+        let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
+        let view = Arc::clone(&self.full_view);
+        super::drive_blocking(self, &neighbors, &view, round, w, comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+    use crate::util::rng::Pcg;
+
+    fn manifest() -> crate::model::DatasetManifest {
+        Manifest::parse(
+            "version 1\nsmoke s\ndataset t\nd 8\nd_pad 8\ninput 2 2 1\n\
+             classes 2\nbatch 2\neval_batch 2\ntrain_step a\neval_step b\n\
+             dual_update c\ninit_w d\nlayer l 2 4\nend\n",
+            std::path::Path::new("/x"),
+        )
+        .unwrap()
+        .dataset("t")
+        .unwrap()
+        .clone()
+    }
+
+    fn ctx(node: usize, graph: &Arc<Graph>) -> BuildCtx {
+        BuildCtx {
+            node,
+            graph: Arc::clone(graph),
+            manifest: manifest(),
+            seed: 9,
+            eta: 0.1,
+            local_steps: 1,
+            rounds_per_epoch: 1,
+            dual_path: crate::algorithms::DualPath::Native,
+            runtime: None,
+            round_policy: RoundPolicy::Sync,
+        }
+    }
+
+    #[test]
+    fn advertises_the_dual_through_zsum_with_zero_alpha_deg() {
+        let graph = Arc::new(Graph::ring(4));
+        let node =
+            LeadNode::new(&ctx(0, &graph), CodecSpec::Identity).unwrap();
+        assert_eq!(NodeStateMachine::alpha_deg(&node), 0.0);
+        let z = NodeStateMachine::zsum(&node).expect("LEAD carries a dual");
+        assert!(z.iter().all(|&v| v == 0.0), "dual starts at zero");
+        assert_eq!(NodeStateMachine::name(&node), "LEAD [identity]");
+    }
+
+    #[test]
+    fn alpha_mix_spans_half_to_one() {
+        let graph = Arc::new(Graph::ring(4));
+        let a = |s: &str| {
+            LeadNode::new(&ctx(0, &graph), CodecSpec::parse(s).unwrap())
+                .unwrap()
+                .alpha_mix()
+        };
+        assert_eq!(a("identity"), 1.0);
+        let r = a("rand_k:0.1");
+        assert!(r > 0.5 && r < 0.54, "{r}");
+    }
+
+    #[test]
+    fn consensus_rounds_drive_dual_to_disagreement_pressure() {
+        // Two nodes, identity codec, no gradients: nodes should agree
+        // and the duals should absorb the initial disagreement
+        // symmetrically (d_0 = −d_1, so Σ d = 0).
+        let graph = Arc::new(Graph::complete(2));
+        let view = TopologyView::full(graph.edges().len());
+        let mut nodes: Vec<LeadNode> = (0..2)
+            .map(|i| LeadNode::new(&ctx(i, &graph), CodecSpec::Identity)
+                .unwrap())
+            .collect();
+        let mut ws = vec![vec![1.0f32; 8], vec![-1.0f32; 8]];
+        for r in 0..200 {
+            // "Local step" with zero gradient: z = w + η·zsum.
+            for (i, n) in nodes.iter().enumerate() {
+                let z: Vec<f32> = NodeStateMachine::zsum(n)
+                    .unwrap()
+                    .to_vec();
+                for (wv, zv) in ws[i].iter_mut().zip(z) {
+                    *wv += 0.1 * zv;
+                }
+            }
+            let mut inflight = Vec::new();
+            for (i, n) in nodes.iter_mut().enumerate() {
+                let mut out = Outbox::new();
+                NodeStateMachine::round_begin(n, r, &view, &mut ws[i],
+                                              &mut out)
+                    .unwrap();
+                for (to, msg) in out.drain() {
+                    inflight.push((i, to, msg));
+                }
+            }
+            for (from, to, msg) in inflight {
+                let mut out = Outbox::new();
+                NodeStateMachine::on_message(&mut nodes[to], r, from, msg,
+                                             &view, &mut ws[to], &mut out)
+                    .unwrap();
+            }
+            for (i, n) in nodes.iter_mut().enumerate() {
+                assert!(NodeStateMachine::round_complete(n));
+                NodeStateMachine::round_end(n, r, &view, &mut ws[i])
+                    .unwrap();
+            }
+        }
+        // Consensus: both nodes at the average (0).
+        for wsn in &ws {
+            for &v in wsn {
+                assert!(v.abs() < 1e-3, "no consensus: {v}");
+            }
+        }
+        // Dual symmetry: d_0 + d_1 = 0 exactly by construction.
+        for (a, b) in nodes[0].neg_dual().iter().zip(nodes[1].neg_dual()) {
+            assert!((a + b).abs() < 1e-4, "dual sum {a} + {b}");
+        }
+    }
+
+    #[test]
+    fn edge_rebirth_resets_replicas_but_keeps_the_dual() {
+        let graph = Arc::new(Graph::ring(4));
+        let spec = CodecSpec::parse("rand_k:0.5").unwrap();
+        let mut node = LeadNode::new(&ctx(0, &graph), spec).unwrap();
+        let mut view = TopologyView::full(graph.edges().len());
+        let mut w: Vec<f32> = {
+            let mut rng = Pcg::new(11);
+            (0..8).map(|_| rng.normal_f32()).collect()
+        };
+        let mut out = Outbox::new();
+        NodeStateMachine::round_begin(&mut node, 0, &view, &mut w, &mut out)
+            .unwrap();
+        out.drain().for_each(drop);
+        node.neg_d[0] = 0.5; // pretend the dual has moved
+        assert!(node.h_self[0].iter().any(|&v| v != 0.0));
+        let e = graph.edge_index(0, 1).unwrap();
+        view.kill_edge(e);
+        view.revive_edge(e, 2);
+        NodeStateMachine::on_topology(&mut node, &view, &mut w, &mut out)
+            .unwrap();
+        assert!(node.h_self[0].iter().all(|&v| v == 0.0));
+        assert!(node.zhat_nb[0].iter().all(|&v| v == 0.0));
+        assert_eq!(node.neg_d[0], 0.5, "dual is node state, survives churn");
+        assert_eq!(node.clocks[0].activation, 2);
+    }
+}

@@ -52,12 +52,16 @@
 //! that straddle rounds — see `powergossip`'s module docs).
 
 pub mod cecl;
+pub mod choco;
 pub mod dpsgd;
+pub mod lead;
 pub mod powergossip;
 
 pub use cecl::{cecl_display_name, rule_for_codec, CEclNode, DualPath,
                DualRule};
+pub use choco::ChocoNode;
 pub use dpsgd::DPsgdNode;
+pub use lead::LeadNode;
 pub use powergossip::PowerGossipNode;
 
 use std::sync::Arc;
@@ -84,16 +88,32 @@ pub enum RoundPolicy {
     Async { max_staleness: usize },
 }
 
+/// The full `--rounds` grammar, restated verbatim in every parse error
+/// (same convention as `CODEC_GRAMMAR`).
+pub const ROUNDS_GRAMMAR: &str =
+    "sync | async:<max_staleness>, with max_staleness a round count ≥ 0";
+
 impl RoundPolicy {
-    /// Parse the CLI grammar `sync | async:<max_staleness>`.
-    pub fn parse(s: &str) -> Option<RoundPolicy> {
-        match s.trim() {
-            "sync" => Some(RoundPolicy::Sync),
+    /// Parse the CLI grammar (see [`ROUNDS_GRAMMAR`]).  Every error
+    /// names the offending token and restates the grammar.
+    pub fn parse(s: &str) -> Result<RoundPolicy, String> {
+        let s = s.trim();
+        match s {
+            "sync" => Ok(RoundPolicy::Sync),
             other => {
-                let s = other.strip_prefix("async:")?;
-                Some(RoundPolicy::Async {
-                    max_staleness: s.parse().ok()?,
-                })
+                let arg = other.strip_prefix("async:").ok_or_else(|| {
+                    format!(
+                        "unknown round policy `{other}` \
+                         (grammar: {ROUNDS_GRAMMAR})"
+                    )
+                })?;
+                let max_staleness = arg.parse().map_err(|_| {
+                    format!(
+                        "`{other}`: `{arg}` is not a round count \
+                         (grammar: {ROUNDS_GRAMMAR})"
+                    )
+                })?;
+                Ok(RoundPolicy::Async { max_staleness })
             }
         }
     }
@@ -273,6 +293,12 @@ pub enum AlgorithmSpec {
     /// PowerGossip (Vogels et al. 2020) with the given power-iteration
     /// steps per round.
     PowerGossip { iters: usize },
+    /// CHOCO-SGD (Koloskova et al. 2019): compressed gossip over
+    /// per-edge replicas, any edge codec.
+    Choco { codec: CodecSpec },
+    /// LEAD (Liu et al. 2021): primal-dual compressed-difference
+    /// gossip with linear convergence, any edge codec.
+    Lead { codec: CodecSpec },
 }
 
 impl AlgorithmSpec {
@@ -295,6 +321,12 @@ impl AlgorithmSpec {
             AlgorithmSpec::PowerGossip { iters } => {
                 format!("PowerGossip ({iters})")
             }
+            AlgorithmSpec::Choco { codec } => {
+                format!("CHOCO-SGD [{}]", codec.name())
+            }
+            AlgorithmSpec::Lead { codec } => {
+                format!("LEAD [{}]", codec.name())
+            }
         }
     }
 
@@ -315,63 +347,149 @@ impl AlgorithmSpec {
     }
 
     /// Parse CLI names like `cecl:0.1`, `powergossip:10`, `ecl`,
-    /// `dpsgd`.  A non-numeric `cecl:` argument parses as a codec spec
-    /// (`cecl:qsgd:4`, `cecl:ef+top_k:0.01`, `cecl:rand_k:0.1:values`).
-    pub fn parse(s: &str) -> Option<AlgorithmSpec> {
+    /// `dpsgd`, `choco:rand_k:0.1`, `lead:qsgd:4` (see
+    /// [`ALGORITHM_GRAMMAR`]).  A non-numeric `cecl:` argument parses
+    /// as a codec spec (`cecl:qsgd:4`, `cecl:ef+top_k:0.01`,
+    /// `cecl:rand_k:0.1:values`).  Every error names the offending
+    /// token and restates the grammar, same convention as
+    /// `CodecSpec::parse`.
+    pub fn parse(s: &str) -> Result<AlgorithmSpec, String> {
+        let s = s.trim();
         let (head, arg) = match s.split_once(':') {
             Some((h, a)) => (h, Some(a)),
             None => (s, None),
         };
+        let no_arg = |what: &str| {
+            format!(
+                "`{s}`: {head} takes no argument, got `{what}` \
+                 (grammar: {ALGORITHM_GRAMMAR})"
+            )
+        };
+        let codec_arg = |what: &str| -> Result<CodecSpec, String> {
+            let a = arg.ok_or_else(|| {
+                format!(
+                    "`{s}`: {head} needs {what} \
+                     (grammar: {ALGORITHM_GRAMMAR})"
+                )
+            })?;
+            CodecSpec::parse(a).map_err(|e| format!("`{s}`: {e}"))
+        };
         match head {
-            "sgd" => Some(AlgorithmSpec::Sgd),
-            "dpsgd" | "d-psgd" => Some(AlgorithmSpec::DPsgd),
-            "ecl" => Some(AlgorithmSpec::Ecl {
-                theta: arg.map(|a| a.parse().ok()).flatten().unwrap_or(1.0),
-            }),
+            "sgd" => match arg {
+                None => Ok(AlgorithmSpec::Sgd),
+                Some(a) => Err(no_arg(a)),
+            },
+            "dpsgd" | "d-psgd" => match arg {
+                None => Ok(AlgorithmSpec::DPsgd),
+                Some(a) => Err(no_arg(a)),
+            },
+            "ecl" => {
+                let theta = match arg {
+                    None => 1.0,
+                    Some(a) => {
+                        let t: f32 = a.parse().map_err(|_| {
+                            format!(
+                                "`{s}`: `{a}` is not a θ value \
+                                 (grammar: {ALGORITHM_GRAMMAR})"
+                            )
+                        })?;
+                        if !(t.is_finite() && t > 0.0 && t <= 2.0) {
+                            return Err(format!(
+                                "`{s}`: θ must be in (0, 2], got `{a}` \
+                                 (grammar: {ALGORITHM_GRAMMAR})"
+                            ));
+                        }
+                        t
+                    }
+                };
+                Ok(AlgorithmSpec::Ecl { theta })
+            }
             "cecl" | "c-ecl" => {
-                let arg = arg?;
+                let arg = arg.ok_or_else(|| {
+                    format!(
+                        "`{s}`: cecl needs a k fraction or codec spec \
+                         (grammar: {ALGORITHM_GRAMMAR})"
+                    )
+                })?;
                 if let Ok(k_frac) = arg.parse::<f64>() {
                     // Degenerate fractions (k = 0, k > 1) are rejected
                     // HERE, like the codec grammar does, instead of
                     // failing deep inside encode.
-                    valid_k(k_frac)?;
-                    Some(AlgorithmSpec::CEcl {
+                    CodecSpec::validate_k_fraction(k_frac)
+                        .map_err(|e| format!("`{s}`: {e}"))?;
+                    Ok(AlgorithmSpec::CEcl {
                         k_frac,
                         theta: 1.0,
                         dense_first_epoch: true,
                     })
                 } else {
-                    Some(AlgorithmSpec::CEclCodec {
-                        codec: CodecSpec::parse(arg).ok()?,
+                    Ok(AlgorithmSpec::CEclCodec {
+                        codec: CodecSpec::parse(arg)
+                            .map_err(|e| format!("`{s}`: {e}"))?,
                         theta: 1.0,
                         dense_first_epoch: true,
                     })
                 }
             }
             "naive-cecl" => {
-                let k_frac = arg?.parse().ok()?;
-                valid_k(k_frac)?;
-                Some(AlgorithmSpec::NaiveCEcl { k_frac, theta: 1.0 })
+                let a = arg.ok_or_else(|| {
+                    format!(
+                        "`{s}`: naive-cecl needs a k fraction \
+                         (grammar: {ALGORITHM_GRAMMAR})"
+                    )
+                })?;
+                let k_frac: f64 = a.parse().map_err(|_| {
+                    format!(
+                        "`{s}`: `{a}` is not a fraction \
+                         (grammar: {ALGORITHM_GRAMMAR})"
+                    )
+                })?;
+                CodecSpec::validate_k_fraction(k_frac)
+                    .map_err(|e| format!("`{s}`: {e}"))?;
+                Ok(AlgorithmSpec::NaiveCEcl { k_frac, theta: 1.0 })
             }
             "powergossip" | "pg" => {
-                let iters: usize = arg?.parse().ok()?;
+                let a = arg.ok_or_else(|| {
+                    format!(
+                        "`{s}`: powergossip needs an iteration count \
+                         (grammar: {ALGORITHM_GRAMMAR})"
+                    )
+                })?;
+                let iters: usize = a.parse().map_err(|_| {
+                    format!(
+                        "`{s}`: `{a}` is not an iteration count \
+                         (grammar: {ALGORITHM_GRAMMAR})"
+                    )
+                })?;
                 if iters == 0 {
-                    return None;
+                    return Err(format!(
+                        "`{s}`: powergossip needs ≥ 1 power iteration \
+                         (grammar: {ALGORITHM_GRAMMAR})"
+                    ));
                 }
-                Some(AlgorithmSpec::PowerGossip { iters })
+                Ok(AlgorithmSpec::PowerGossip { iters })
             }
-            _ => None,
+            "choco" | "choco-sgd" => {
+                Ok(AlgorithmSpec::Choco { codec: codec_arg("a codec")? })
+            }
+            "lead" => {
+                Ok(AlgorithmSpec::Lead { codec: codec_arg("a codec")? })
+            }
+            _ => Err(format!(
+                "unknown algorithm `{head}` in `{s}` \
+                 (grammar: {ALGORITHM_GRAMMAR})"
+            )),
         }
     }
 }
 
-/// `Some(())` iff `k` is a legal rand-k fraction — delegates to the
-/// codec grammar's single source of truth
-/// ([`CodecSpec::validate_k_fraction`]), shared by the numeric
-/// `cecl:K`/`naive-cecl:K` spellings.
-fn valid_k(k: f64) -> Option<()> {
-    CodecSpec::validate_k_fraction(k).ok()
-}
+/// The full `--algorithm` grammar, restated verbatim in every parse
+/// error (same convention as `CODEC_GRAMMAR`).
+pub const ALGORITHM_GRAMMAR: &str =
+    "sgd | dpsgd | ecl[:theta] | cecl:<k_frac|codec> | \
+     naive-cecl:<k_frac> | powergossip:<iters> | choco:<codec> | \
+     lead:<codec>, with theta in (0, 2], k_frac in (0, 1], iters ≥ 1, \
+     and <codec> the --codec grammar";
 
 /// Everything a node algorithm needs at construction time.
 pub struct BuildCtx {
@@ -472,6 +590,12 @@ pub fn build_node(spec: &AlgorithmSpec,
         AlgorithmSpec::PowerGossip { iters } => {
             Box::new(PowerGossipNode::new(ctx, *iters)?)
         }
+        AlgorithmSpec::Choco { codec } => {
+            Box::new(ChocoNode::new(ctx, codec.clone())?)
+        }
+        AlgorithmSpec::Lead { codec } => {
+            Box::new(LeadNode::new(ctx, codec.clone())?)
+        }
         other => Box::new(build_cecl(other, ctx)?),
     })
 }
@@ -486,6 +610,12 @@ pub fn build_machine(spec: &AlgorithmSpec,
         AlgorithmSpec::DPsgd => Box::new(DPsgdNode::new(ctx)),
         AlgorithmSpec::PowerGossip { iters } => {
             Box::new(PowerGossipNode::new(ctx, *iters)?)
+        }
+        AlgorithmSpec::Choco { codec } => {
+            Box::new(ChocoNode::new(ctx, codec.clone())?)
+        }
+        AlgorithmSpec::Lead { codec } => {
+            Box::new(LeadNode::new(ctx, codec.clone())?)
         }
         other => Box::new(build_cecl(other, ctx)?),
     })
@@ -675,15 +805,19 @@ mod tests {
 
     #[test]
     fn spec_parsing() {
-        assert_eq!(AlgorithmSpec::parse("sgd"), Some(AlgorithmSpec::Sgd));
-        assert_eq!(AlgorithmSpec::parse("dpsgd"), Some(AlgorithmSpec::DPsgd));
+        assert_eq!(AlgorithmSpec::parse("sgd"), Ok(AlgorithmSpec::Sgd));
+        assert_eq!(AlgorithmSpec::parse("dpsgd"), Ok(AlgorithmSpec::DPsgd));
         assert_eq!(
             AlgorithmSpec::parse("ecl"),
-            Some(AlgorithmSpec::Ecl { theta: 1.0 })
+            Ok(AlgorithmSpec::Ecl { theta: 1.0 })
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("ecl:0.5"),
+            Ok(AlgorithmSpec::Ecl { theta: 0.5 })
         );
         assert_eq!(
             AlgorithmSpec::parse("cecl:0.1"),
-            Some(AlgorithmSpec::CEcl {
+            Ok(AlgorithmSpec::CEcl {
                 k_frac: 0.1,
                 theta: 1.0,
                 dense_first_epoch: true
@@ -691,17 +825,71 @@ mod tests {
         );
         assert_eq!(
             AlgorithmSpec::parse("powergossip:10"),
-            Some(AlgorithmSpec::PowerGossip { iters: 10 })
+            Ok(AlgorithmSpec::PowerGossip { iters: 10 })
         );
-        assert_eq!(AlgorithmSpec::parse("cecl"), None);
-        assert_eq!(AlgorithmSpec::parse("bogus"), None);
+        assert!(AlgorithmSpec::parse("cecl").is_err());
+        assert!(AlgorithmSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn parse_errors_restate_the_grammar() {
+        // The headline bug this suite pins: `ecl:<garbage>` used to
+        // fall back silently to θ = 1.0.
+        for bad in ["ecl:garbage", "ecl:0", "ecl:2.5", "ecl:nan", "cecl",
+                    "bogus", "choco", "choco:nope:1", "lead:qsgd:99",
+                    "sgd:1", "dpsgd:x", "powergossip:x", "naive-cecl:x"] {
+            let err = AlgorithmSpec::parse(bad).unwrap_err();
+            assert!(err.contains("grammar"), "`{bad}` -> {err}");
+        }
+        // Codec errors propagate the codec grammar, algorithm errors
+        // the algorithm grammar — both name the offending spec.
+        let err = AlgorithmSpec::parse("choco:nope:1").unwrap_err();
+        assert!(err.contains("choco:nope:1") && err.contains("nope"),
+                "{err}");
+        let err = AlgorithmSpec::parse("ecl:garbage").unwrap_err();
+        assert!(err.contains("ecl:garbage") && err.contains("θ"), "{err}");
+    }
+
+    #[test]
+    fn choco_and_lead_parse_via_the_codec_grammar() {
+        assert_eq!(
+            AlgorithmSpec::parse("choco:rand_k:0.1"),
+            Ok(AlgorithmSpec::Choco {
+                codec: CodecSpec::RandK {
+                    k_frac: 0.1,
+                    mode: WireMode::Explicit,
+                }
+            })
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("choco:qsgd:4"),
+            Ok(AlgorithmSpec::Choco {
+                codec: CodecSpec::Qsgd { bits: 4 }
+            })
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("lead:ef+top_k:0.01"),
+            Ok(AlgorithmSpec::Lead {
+                codec: CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK {
+                    k_frac: 0.01,
+                })),
+            })
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("choco:identity").unwrap().name(),
+            "CHOCO-SGD [identity]"
+        );
+        assert_eq!(
+            AlgorithmSpec::parse("lead:qsgd:4").unwrap().name(),
+            "LEAD [qsgd 4b]"
+        );
     }
 
     #[test]
     fn spec_parsing_codec_forms() {
         assert_eq!(
             AlgorithmSpec::parse("cecl:qsgd:4"),
-            Some(AlgorithmSpec::CEclCodec {
+            Ok(AlgorithmSpec::CEclCodec {
                 codec: CodecSpec::Qsgd { bits: 4 },
                 theta: 1.0,
                 dense_first_epoch: true,
@@ -709,7 +897,7 @@ mod tests {
         );
         assert_eq!(
             AlgorithmSpec::parse("cecl:ef+top_k:0.01"),
-            Some(AlgorithmSpec::CEclCodec {
+            Ok(AlgorithmSpec::CEclCodec {
                 codec: CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK {
                     k_frac: 0.01,
                 })),
@@ -720,11 +908,11 @@ mod tests {
         // Numeric arguments stay on the paper's rand-k path.
         assert!(matches!(
             AlgorithmSpec::parse("cecl:0.2"),
-            Some(AlgorithmSpec::CEcl { .. })
+            Ok(AlgorithmSpec::CEcl { .. })
         ));
         // Broken codec specs do not parse.
-        assert_eq!(AlgorithmSpec::parse("cecl:qsgd:99"), None);
-        assert_eq!(AlgorithmSpec::parse("cecl:nope:1"), None);
+        assert!(AlgorithmSpec::parse("cecl:qsgd:99").is_err());
+        assert!(AlgorithmSpec::parse("cecl:nope:1").is_err());
         // Names mark the Eq. 11 fallback for non-linear codecs.
         assert_eq!(
             AlgorithmSpec::parse("cecl:qsgd:4").unwrap().name(),
@@ -737,7 +925,7 @@ mod tests {
         // PowerGossip-as-a-codec rides the same spelling.
         assert_eq!(
             AlgorithmSpec::parse("cecl:low_rank:2"),
-            Some(AlgorithmSpec::CEclCodec {
+            Ok(AlgorithmSpec::CEclCodec {
                 codec: CodecSpec::LowRank { rank: 2, iters: 1 },
                 theta: 1.0,
                 dense_first_epoch: true,
@@ -780,18 +968,19 @@ mod tests {
 
     #[test]
     fn round_policy_parse_and_names() {
-        assert_eq!(RoundPolicy::parse("sync"), Some(RoundPolicy::Sync));
+        assert_eq!(RoundPolicy::parse("sync"), Ok(RoundPolicy::Sync));
         assert_eq!(
             RoundPolicy::parse("async:3"),
-            Some(RoundPolicy::Async { max_staleness: 3 })
+            Ok(RoundPolicy::Async { max_staleness: 3 })
         );
         assert_eq!(
             RoundPolicy::parse("async:0"),
-            Some(RoundPolicy::Async { max_staleness: 0 })
+            Ok(RoundPolicy::Async { max_staleness: 0 })
         );
-        assert_eq!(RoundPolicy::parse("async"), None);
-        assert_eq!(RoundPolicy::parse("async:x"), None);
-        assert_eq!(RoundPolicy::parse("gossip"), None);
+        for bad in ["async", "async:x", "async:-1", "gossip"] {
+            let err = RoundPolicy::parse(bad).unwrap_err();
+            assert!(err.contains("grammar"), "`{bad}` -> {err}");
+        }
         assert_eq!(RoundPolicy::Sync.name(), "sync");
         assert_eq!(RoundPolicy::Async { max_staleness: 2 }.name(), "async:2");
         assert_eq!(RoundPolicy::Sync.staleness(), 0);
@@ -809,6 +998,13 @@ mod tests {
         assert!(AlgorithmSpec::parse("cecl:qsgd:4").unwrap().supports_async());
         // Conversation counters lifted PowerGossip's sync-only pin.
         assert!(AlgorithmSpec::PowerGossip { iters: 4 }.supports_async());
+        // The compressed-gossip rivals ride the same per-edge clocks.
+        assert!(AlgorithmSpec::parse("choco:rand_k:0.1")
+            .unwrap()
+            .supports_async());
+        assert!(AlgorithmSpec::parse("lead:qsgd:4")
+            .unwrap()
+            .supports_async());
     }
 
     #[test]
@@ -818,11 +1014,11 @@ mod tests {
         for bad in ["cecl:0", "cecl:0.0", "cecl:1.5", "cecl:-0.1",
                     "naive-cecl:0", "naive-cecl:2", "powergossip:0",
                     "pg:0"] {
-            assert_eq!(AlgorithmSpec::parse(bad), None, "`{bad}` must fail");
+            assert!(AlgorithmSpec::parse(bad).is_err(), "`{bad}` must fail");
         }
         // The boundary k = 1 (ECL) stays legal.
-        assert!(AlgorithmSpec::parse("cecl:1").is_some());
-        assert!(AlgorithmSpec::parse("powergossip:1").is_some());
+        assert!(AlgorithmSpec::parse("cecl:1").is_ok());
+        assert!(AlgorithmSpec::parse("powergossip:1").is_ok());
     }
 
     #[test]

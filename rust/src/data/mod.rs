@@ -9,7 +9,11 @@
 //! * **homogeneous** — every node draws from all 10 classes, balanced;
 //! * **heterogeneous** — every node draws from its own random 8-of-10
 //!   class subset (paper §5.1), balanced within the subset, same total
-//!   count per node.
+//!   count per node;
+//! * **dirichlet(α)** — each node's class *proportions* are a symmetric
+//!   Dirichlet(α) draw (Hsu et al. 2019, the standard federated non-IID
+//!   knob): α → ∞ recovers the homogeneous split, α → 0 approaches
+//!   one-class-per-node.  Node sizes stay equal, per the paper.
 //!
 //! The class-conditional distributions are what drive the paper's
 //! client-drift phenomenon, so this generator exercises the same code
@@ -63,14 +67,24 @@ impl SyntheticSpec {
     }
 }
 
-/// The paper's two data splits (§5.1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// The paper's two data splits (§5.1) plus the Dirichlet-α label-skew
+/// axis used for the head-to-head against compressed gossip.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Partition {
     Homogeneous,
     /// Each node holds data of `classes_per_node` randomly selected
     /// classes (the paper uses 8 of 10).
     Heterogeneous { classes_per_node: usize },
+    /// Each node's class proportions drawn from a symmetric
+    /// Dirichlet(α); sample counts per node stay equal.
+    Dirichlet { alpha: f64 },
 }
+
+/// The full `--heterogeneity` grammar, restated verbatim in every parse
+/// error (same convention as `CODEC_GRAMMAR`).
+pub const PARTITION_GRAMMAR: &str =
+    "homogeneous | heterogeneous[:<classes_per_node>] | dirichlet:<alpha>, \
+     with classes_per_node ≥ 1 and alpha a finite value > 0";
 
 impl Partition {
     pub fn name(&self) -> String {
@@ -79,6 +93,63 @@ impl Partition {
             Partition::Heterogeneous { classes_per_node } => {
                 format!("heterogeneous({classes_per_node}/10)")
             }
+            Partition::Dirichlet { alpha } => format!("dirichlet({alpha})"),
+        }
+    }
+
+    /// Parse the `--heterogeneity` grammar (see [`PARTITION_GRAMMAR`]).
+    /// Every error names the offending token and restates the grammar.
+    pub fn parse(s: &str) -> Result<Partition, String> {
+        let s = s.trim();
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match (head, arg) {
+            ("homogeneous" | "homo" | "iid", None) => {
+                Ok(Partition::Homogeneous)
+            }
+            ("heterogeneous" | "hetero", None) => {
+                Ok(Partition::Heterogeneous { classes_per_node: 8 })
+            }
+            ("heterogeneous" | "hetero", Some(c)) => {
+                let classes_per_node = c.parse::<usize>().map_err(|_| {
+                    format!(
+                        "`{s}`: `{c}` is not a class count \
+                         (grammar: {PARTITION_GRAMMAR})"
+                    )
+                })?;
+                if classes_per_node == 0 {
+                    return Err(format!(
+                        "`{s}`: classes_per_node must be ≥ 1 \
+                         (grammar: {PARTITION_GRAMMAR})"
+                    ));
+                }
+                Ok(Partition::Heterogeneous { classes_per_node })
+            }
+            ("dirichlet", Some(a)) => {
+                let alpha = a.parse::<f64>().map_err(|_| {
+                    format!(
+                        "`{s}`: `{a}` is not an α value \
+                         (grammar: {PARTITION_GRAMMAR})"
+                    )
+                })?;
+                if !(alpha.is_finite() && alpha > 0.0) {
+                    return Err(format!(
+                        "`{s}`: α must be finite and > 0 \
+                         (grammar: {PARTITION_GRAMMAR})"
+                    ));
+                }
+                Ok(Partition::Dirichlet { alpha })
+            }
+            ("dirichlet", None) => Err(format!(
+                "`{s}`: dirichlet needs an α value \
+                 (grammar: {PARTITION_GRAMMAR})"
+            )),
+            _ => Err(format!(
+                "unknown split `{head}` in `{s}` \
+                 (grammar: {PARTITION_GRAMMAR})"
+            )),
         }
     }
 }
@@ -192,13 +263,43 @@ impl Generator {
             sample_len: slen,
         }
     }
+
+    /// Dataset with an explicit per-class sample count (`counts[c]`
+    /// samples of class `c`), shuffled with the same schedule idiom as
+    /// [`Generator::generate`].
+    pub fn generate_counts(&self, counts: &[usize], rng: &mut Pcg)
+                           -> Dataset {
+        assert_eq!(counts.len(), self.spec.classes);
+        let n: usize = counts.iter().sum();
+        let slen = self.spec.sample_len();
+        let mut x = vec![0.0f32; n * slen];
+        let mut y = Vec::with_capacity(n);
+        let mut schedule = Vec::with_capacity(n);
+        for (class, &count) in counts.iter().enumerate() {
+            schedule.extend(std::iter::repeat(class).take(count));
+        }
+        rng.shuffle(&mut schedule);
+        for (i, &class) in schedule.iter().enumerate() {
+            self.sample_into(class, rng, &mut x[i * slen..(i + 1) * slen]);
+            y.push(class as i32);
+        }
+        Dataset {
+            x,
+            y,
+            n,
+            sample_len: slen,
+        }
+    }
 }
 
 /// Per-node class subsets for a partition.
 pub fn node_classes(partition: Partition, nodes: usize, classes: usize,
                     seed: u64) -> Vec<Vec<usize>> {
     match partition {
-        Partition::Homogeneous => {
+        // Dirichlet has full nominal support on every node — the skew
+        // lives in the counts ([`dirichlet_class_counts`]), not the
+        // support set.
+        Partition::Homogeneous | Partition::Dirichlet { .. } => {
             vec![(0..classes).collect(); nodes]
         }
         Partition::Heterogeneous { classes_per_node } => {
@@ -219,6 +320,62 @@ pub fn node_classes(partition: Partition, nodes: usize, classes: usize,
     }
 }
 
+/// Per-node per-class sample counts for the Dirichlet(α) split: node
+/// `i` draws class proportions from `Pcg::derive(seed, [PARTITION, i])`
+/// and the proportions are apportioned over exactly `train_per_node`
+/// samples by largest remainder, so node sizes stay equal (the paper's
+/// constraint) while label marginals skew with α.
+pub fn dirichlet_class_counts(
+    nodes: usize,
+    classes: usize,
+    train_per_node: usize,
+    alpha: f64,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    (0..nodes)
+        .map(|i| {
+            let mut rng =
+                Pcg::derive(seed, &[streams::PARTITION, i as u64]);
+            let p = rng.dirichlet(alpha, classes);
+            apportion(&p, train_per_node)
+        })
+        .collect()
+}
+
+/// Largest-remainder apportionment of `n` units over proportions `p`
+/// (sums to exactly `n`; ties broken by class index, deterministic).
+fn apportion(p: &[f64], n: usize) -> Vec<usize> {
+    let mut counts: Vec<usize> =
+        p.iter().map(|&q| (q * n as f64).floor() as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    let mut order: Vec<usize> = (0..p.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = p[a] * n as f64 - (p[a] * n as f64).floor();
+        let fb = p[b] * n as f64 - (p[b] * n as f64).floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &c in order.iter().take(n.saturating_sub(assigned)) {
+        counts[c] += 1;
+    }
+    counts
+}
+
+/// Label-skew statistic for a per-node class-count matrix: the mean,
+/// over nodes, of the largest single-class share.  1/classes for a
+/// perfectly balanced split, → 1 as nodes collapse onto one class.
+pub fn label_skew(counts: &[Vec<usize>]) -> f64 {
+    assert!(!counts.is_empty());
+    counts
+        .iter()
+        .map(|c| {
+            let total: usize = c.iter().sum();
+            let max = c.iter().copied().max().unwrap_or(0);
+            max as f64 / total.max(1) as f64
+        })
+        .sum::<f64>()
+        / counts.len() as f64
+}
+
 /// Build the full experiment data: per-node training sets (equal size,
 /// per the paper) plus a shared balanced test set.
 pub fn build_node_datasets(
@@ -229,14 +386,40 @@ pub fn build_node_datasets(
     test_size: usize,
 ) -> (Vec<Dataset>, Dataset) {
     let generator = Generator::new(spec);
-    let class_sets = node_classes(partition, nodes, spec.classes, spec.seed);
     let mut trains = Vec::with_capacity(nodes);
-    for (i, classes) in class_sets.iter().enumerate() {
-        let mut rng = Pcg::derive(
-            spec.seed,
-            &[streams::DATA, 1000 + i as u64],
-        );
-        trains.push(generator.generate(classes, train_per_node, &mut rng));
+    match partition {
+        // Count-based split: the class schedule comes from the
+        // partition stream, sampling stays on the per-node data stream
+        // (so homogeneous/heterogeneous trajectories are untouched).
+        Partition::Dirichlet { alpha } => {
+            let counts = dirichlet_class_counts(
+                nodes,
+                spec.classes,
+                train_per_node,
+                alpha,
+                spec.seed,
+            );
+            for (i, c) in counts.iter().enumerate() {
+                let mut rng = Pcg::derive(
+                    spec.seed,
+                    &[streams::DATA, 1000 + i as u64],
+                );
+                trains.push(generator.generate_counts(c, &mut rng));
+            }
+        }
+        _ => {
+            let class_sets =
+                node_classes(partition, nodes, spec.classes, spec.seed);
+            for (i, classes) in class_sets.iter().enumerate() {
+                let mut rng = Pcg::derive(
+                    spec.seed,
+                    &[streams::DATA, 1000 + i as u64],
+                );
+                trains.push(
+                    generator.generate(classes, train_per_node, &mut rng),
+                );
+            }
+        }
     }
     let mut test_rng = Pcg::derive(spec.seed, &[streams::DATA, 9999]);
     let all: Vec<usize> = (0..spec.classes).collect();
@@ -373,6 +556,90 @@ mod tests {
         assert_eq!(test.n, 200);
         let counts = test.class_counts(10);
         assert!(counts.iter().all(|&c| c == 20));
+    }
+
+    #[test]
+    fn partition_parse_grammar() {
+        assert_eq!(Partition::parse("homogeneous"),
+                   Ok(Partition::Homogeneous));
+        assert_eq!(Partition::parse("iid"), Ok(Partition::Homogeneous));
+        assert_eq!(Partition::parse("hetero"),
+                   Ok(Partition::Heterogeneous { classes_per_node: 8 }));
+        assert_eq!(Partition::parse("heterogeneous:3"),
+                   Ok(Partition::Heterogeneous { classes_per_node: 3 }));
+        assert_eq!(Partition::parse("dirichlet:0.1"),
+                   Ok(Partition::Dirichlet { alpha: 0.1 }));
+        for bad in ["dirichlet", "dirichlet:x", "dirichlet:0",
+                    "dirichlet:-1", "dirichlet:inf", "hetero:0",
+                    "hetero:x", "gaussian:1"] {
+            let err = Partition::parse(bad).unwrap_err();
+            assert!(err.contains("grammar"), "`{bad}` -> {err}");
+        }
+    }
+
+    #[test]
+    fn apportion_sums_exactly_and_follows_proportions() {
+        let counts = apportion(&[0.5, 0.3, 0.2], 10);
+        assert_eq!(counts, vec![5, 3, 2]);
+        // Fractional quotas: total still exact.
+        let counts = apportion(&[1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0], 10);
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert!(counts.iter().all(|&c| (3..=4).contains(&c)));
+        // A point mass keeps everything on one class.
+        let counts = apportion(&[0.0, 1.0, 0.0], 7);
+        assert_eq!(counts, vec![0, 7, 0]);
+    }
+
+    #[test]
+    fn dirichlet_counts_equal_node_sizes_and_determinism() {
+        let a = dirichlet_class_counts(16, 10, 120, 0.1, 42);
+        let b = dirichlet_class_counts(16, 10, 120, 0.1, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        for c in &a {
+            assert_eq!(c.iter().sum::<usize>(), 120);
+        }
+        // A different seed reshuffles the skew.
+        let c = dirichlet_class_counts(16, 10, 120, 0.1, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn dirichlet_alpha_limits() {
+        // α → large recovers the homogeneous split (≈ n/C per class).
+        let big = dirichlet_class_counts(8, 10, 200, 1e6, 7);
+        for node in &big {
+            for &c in node {
+                assert!((19..=21).contains(&c), "α=1e6 counts {node:?}");
+            }
+        }
+        assert!((label_skew(&big) - 0.1).abs() < 0.01);
+        // α = 0.1 skews hard; homogeneous baseline sits at 1/C = 0.1.
+        let skewed = dirichlet_class_counts(8, 10, 200, 0.1, 7);
+        assert!(label_skew(&skewed) > 0.35,
+                "α=0.1 skew {}", label_skew(&skewed));
+    }
+
+    #[test]
+    fn dirichlet_datasets_assign_every_sample_exactly_once() {
+        let (trains, test) = build_node_datasets(
+            &spec(),
+            Partition::Dirichlet { alpha: 0.1 },
+            4,
+            60,
+            100,
+        );
+        assert_eq!(trains.len(), 4);
+        let counts = dirichlet_class_counts(4, 10, 60, 0.1, spec().seed);
+        for (t, c) in trains.iter().zip(&counts) {
+            assert_eq!(t.n, 60);
+            assert_eq!(t.y.len(), 60);
+            assert_eq!(t.x.len(), 60 * t.sample_len);
+            // The emitted labels realize exactly the drawn counts.
+            assert_eq!(&t.class_counts(10), c);
+        }
+        // Test set stays balanced regardless of the training split.
+        assert!(test.class_counts(10).iter().all(|&c| c == 10));
     }
 
     #[test]

@@ -36,6 +36,11 @@ pub struct Sizing {
     /// virtual-time engine; in `repro sim --table` a non-sync value
     /// adds an async sweep next to the sync baseline.
     pub rounds: RoundPolicy,
+    /// Heterogeneity axis (`--heterogeneity homogeneous|heterogeneous
+    /// [:c]|dirichlet:<alpha>`).  `None` keeps each command's own
+    /// partition default; in `repro sim --table` a Dirichlet value
+    /// sweeps the α ladder {set α, 1.0, ∞} instead of a single split.
+    pub partition: Option<Partition>,
 }
 
 impl Default for Sizing {
@@ -54,6 +59,7 @@ impl Default for Sizing {
             datasets: vec!["fashion".to_string(), "cifar".to_string()],
             codecs: Vec::new(),
             rounds: RoundPolicy::Sync,
+            partition: None,
         }
     }
 }
@@ -93,7 +99,13 @@ impl Sizing {
         }
         let rounds = args.get_str("rounds", "sync");
         s.rounds = RoundPolicy::parse(&rounds)
-            .unwrap_or_else(|| panic!("--rounds {rounds}: use sync|async:<max_staleness>"));
+            .unwrap_or_else(|e| panic!("--rounds: {e}"));
+        if let Some(h) = args.get_opt::<String>("heterogeneity") {
+            s.partition = Some(
+                Partition::parse(&h)
+                    .unwrap_or_else(|e| panic!("--heterogeneity: {e}")),
+            );
+        }
         s
     }
 
@@ -169,6 +181,34 @@ mod tests {
     fn broken_round_policy_fails_loudly() {
         let _ = Sizing::from_args(&Args::parse(
             "x --rounds async".split_whitespace().map(String::from),
+        ));
+    }
+
+    #[test]
+    fn sizing_parses_heterogeneity() {
+        let s = Sizing::from_args(&Args::parse(
+            "x --heterogeneity dirichlet:0.1"
+                .split_whitespace()
+                .map(String::from),
+        ));
+        assert_eq!(s.partition, Some(Partition::Dirichlet { alpha: 0.1 }));
+        let s = Sizing::from_args(&Args::parse(
+            "x --heterogeneity heterogeneous:4"
+                .split_whitespace()
+                .map(String::from),
+        ));
+        assert_eq!(
+            s.partition,
+            Some(Partition::Heterogeneous { classes_per_node: 4 })
+        );
+        assert_eq!(Sizing::default().partition, None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn broken_heterogeneity_fails_loudly() {
+        let _ = Sizing::from_args(&Args::parse(
+            "x --heterogeneity dirichlet:0".split_whitespace().map(String::from),
         ));
     }
 

@@ -74,6 +74,17 @@ pub fn sim_methods() -> Vec<AlgorithmSpec> {
         cecl_codec(CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK {
             k_frac: 0.10,
         }))),
+        // The compressed-gossip rivals (ROADMAP direction 2): CHOCO-SGD
+        // at the same explicit rand-k wire as the C-ECL 10% row — byte-
+        // identical frames, so the table isolates the algorithm — and
+        // LEAD on the 4-bit quantizer next to the `cecl:qsgd:4` row.
+        AlgorithmSpec::Choco {
+            codec: CodecSpec::RandK {
+                k_frac: 0.10,
+                mode: WireMode::Explicit,
+            },
+        },
+        AlgorithmSpec::Lead { codec: CodecSpec::Qsgd { bits: 4 } },
     ]
 }
 
@@ -85,6 +96,26 @@ pub fn policy_ladder(sizing: &Sizing) -> Vec<RoundPolicy> {
         vec![RoundPolicy::Sync, sizing.rounds]
     } else {
         vec![RoundPolicy::Sync]
+    }
+}
+
+/// The heterogeneity sweep for a sizing: the single requested split by
+/// default; a `--heterogeneity dirichlet:<alpha>` request sweeps the
+/// paper's α ladder — homogeneous (α = ∞), moderate skew (α = 1.0),
+/// and the requested α — so every non-IID row has its IID baseline in
+/// the same table, mirroring [`policy_ladder`].
+pub fn heterogeneity_ladder(sizing: &Sizing) -> Vec<Partition> {
+    match sizing.partition {
+        Some(Partition::Dirichlet { alpha }) => {
+            let mut ladder =
+                vec![Partition::Homogeneous, Partition::Dirichlet { alpha: 1.0 }];
+            if alpha != 1.0 {
+                ladder.push(Partition::Dirichlet { alpha });
+            }
+            ladder
+        }
+        Some(p) => vec![p],
+        None => vec![Partition::Homogeneous],
     }
 }
 
@@ -126,6 +157,7 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
         "link".into(),
         "rounds".into(),
         "churn".into(),
+        "het".into(),
         "final acc".into(),
         "sim secs".into(),
         format!("t2a@{:.0}%", target_acc * 100.0),
@@ -144,6 +176,7 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
         dense_first_epoch: false,
     }));
     let churns = churn_ladder(&cfg_base.churn);
+    let partitions = heterogeneity_ladder(sizing);
     for alg in methods {
         for link in link_ladder() {
             for &policy in policies {
@@ -151,8 +184,9 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
                     continue;
                 }
                 for churn in &churns {
+                  for &partition in &partitions {
                     let mut spec: ExperimentSpec =
-                        sizing.spec_base(&dataset, Partition::Homogeneous);
+                        sizing.spec_base(&dataset, partition);
                     spec.algorithm = alg.clone();
                     spec.rounds = policy;
                     spec.exec = ExecMode::Simulated(SimConfig {
@@ -161,8 +195,9 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
                         ..cfg_base.clone()
                     });
                     if sizing.verbose {
-                        eprintln!("[sim] {} / {} / {} / {} ...", alg.name(),
-                                  link.name(), policy.name(), churn.label());
+                        eprintln!("[sim] {} / {} / {} / {} / {} ...",
+                                  alg.name(), link.name(), policy.name(),
+                                  churn.label(), partition.name());
                     }
                     let report = run_simulated_native(&spec, &graph)?;
                     // A run that never reached the target
@@ -192,6 +227,7 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
                         link.name(),
                         policy.name(),
                         churn.label(),
+                        partition.name(),
                         format!("{:.3}", report.final_accuracy),
                         sim_secs,
                         t2a,
@@ -205,6 +241,7 @@ pub fn run_sim_table(sizing: &Sizing, cfg_base: &SimConfig, target_acc: f64,
                         ),
                     ]);
                     reports.push(report);
+                  }
                 }
             }
         }
@@ -308,6 +345,56 @@ mod tests {
             "PowerGossip rows must not be skipped"
         );
         assert!(reports.iter().all(|r| r.max_staleness <= 2));
+    }
+
+    #[test]
+    fn dirichlet_ladder_sweeps_alpha_with_rival_rows() {
+        // Default: one homogeneous split, no ladder.
+        assert_eq!(
+            heterogeneity_ladder(&tiny_sizing()),
+            vec![Partition::Homogeneous]
+        );
+        // A non-Dirichlet request stays a single row.
+        let s = Sizing {
+            partition: Some(Partition::Heterogeneous { classes_per_node: 4 }),
+            ..tiny_sizing()
+        };
+        assert_eq!(heterogeneity_ladder(&s).len(), 1);
+        // `--heterogeneity dirichlet:0.1` sweeps α ∈ {∞, 1.0, 0.1}…
+        let s = Sizing {
+            partition: Some(Partition::Dirichlet { alpha: 0.1 }),
+            ..tiny_sizing()
+        };
+        assert_eq!(
+            heterogeneity_ladder(&s),
+            vec![
+                Partition::Homogeneous,
+                Partition::Dirichlet { alpha: 1.0 },
+                Partition::Dirichlet { alpha: 0.1 },
+            ]
+        );
+        // …and α = 1.0 is not swept twice.
+        let s1 = Sizing {
+            partition: Some(Partition::Dirichlet { alpha: 1.0 }),
+            ..tiny_sizing()
+        };
+        assert_eq!(heterogeneity_ladder(&s1).len(), 2);
+
+        // End-to-end: the ladder triples every cell, and the rival
+        // CHOCO-SGD/LEAD rows run under every split.
+        let (table, reports) =
+            run_sim_table(&s, &SimConfig::default(), 0.99,
+                          &policy_ladder(&s))
+                .unwrap();
+        assert_eq!(
+            reports.len(),
+            3 * sim_methods().len() * link_ladder().len()
+        );
+        let rendered = table.render();
+        for cell in ["CHOCO-SGD [rand_k 10%]", "LEAD [qsgd 4b]",
+                     "dirichlet(0.1)", "dirichlet(1)", "homogeneous"] {
+            assert!(rendered.contains(cell), "missing `{cell}`");
+        }
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!   codec** layer ([`compress::codec`]: stateful per-edge
 //!   encoders/decoders producing byte-exact wire frames — rand-k in two
 //!   wire modes, top-k, QSGD quantization, sign+norm, error feedback,
-//!   identity), the C-ECL/ECL/D-PSGD/PowerGossip protocol drivers, and
+//!   identity), the C-ECL/ECL/D-PSGD/PowerGossip protocol drivers plus
+//!   the compressed-gossip rival baselines CHOCO-SGD and LEAD, and
 //!   every experiment of the paper's evaluation section.
 //! * **L2 (python/compile/model.py, build-time only)** — the 5-layer CNN
 //!   with GroupNorm, its loss/gradient, and the Eq. (6) closed-form
@@ -175,12 +176,40 @@
 //! | [`compress`] | rand-k mask sampler, COO vectors, low-rank (PowerGossip primitives + `low_rank` codec) |
 //! | [`compress::codec`] | **edge codecs**: `EdgeCodec`/`Frame`/`EdgeCtx`/`CodecSpec`, identity / rand-k (explicit + values-only wire) / top-k / QSGD / sign / low-rank / error feedback |
 //! | [`comm`] | `Msg` (dense / sparse / codec frame / scalar), byte meter (incl. churn-drop counters), threaded bus |
-//! | [`algorithms`] | `NodeAlgorithm` + `NodeStateMachine` protocol drivers, `RoundPolicy` (sync / bounded-staleness async), per-edge lifecycle |
+//! | [`algorithms`] | `NodeAlgorithm` + `NodeStateMachine` protocol drivers (C-ECL family, D-PSGD, PowerGossip, and the rivals CHOCO-SGD / LEAD), `RoundPolicy` (sync / bounded-staleness async), per-edge lifecycle |
 //! | [`coordinator`] | `ExperimentSpec` → `Report` on either engine |
 //! | [`sim`] | virtual-time engine: event queue, link models (incl. per-edge overrides), stragglers, first-class churn events |
 //! | [`experiments`] | tables, figures, ablations, simulated time-to-accuracy (churn ladder) |
 //! | [`graph`] | topologies, `TopologyView` (epoch-stamped live snapshot), `ChurnSchedule` (outage / edge churn / node join-leave / random rule) |
-//! | [`quadratic`], [`data`], [`model`], [`runtime`] | convex substrate, synthetic data, manifests, PJRT |
+//! | [`data`] | synthetic datasets + the heterogeneity axis: homogeneous / heterogeneous(8-of-10) / **Dirichlet(α)** label-skew partitions |
+//! | [`quadratic`], [`model`], [`runtime`] | convex substrate, manifests, PJRT |
+//!
+//! ## Rival baselines and the heterogeneity axis
+//!
+//! The paper's headline — operator splitting tolerates data
+//! heterogeneity that breaks gossip averaging — needs rivals to beat.
+//! [`algorithms::ChocoNode`] (CHOCO-SGD: per-edge replicas `x̂`,
+//! consensus step scaled by γ = τ) and [`algorithms::LeadNode`] (LEAD:
+//! primal–dual with per-edge z-estimates) are first-class
+//! `NodeStateMachine`s compressing through the **same** [`compress`]
+//! edge codecs — `--algorithm choco:rand_k:0.1` ships byte-identical
+//! frames to the C-ECL `rand_k:0.1` row, so comparisons isolate the
+//! algorithm.  Both obey the full per-edge lifecycle (churn
+//! birth/teardown, `EdgeClock` staleness gating under `--rounds
+//! async:<s>`); CHOCO-SGD with the identity codec degenerates
+//! bit-exactly to D-PSGD (pinned by tests).
+//!
+//! Data skew is the `--heterogeneity` axis (all run commands):
+//! `homogeneous`, `heterogeneous[:c]` (the paper's 8-of-10 split), or
+//! `dirichlet:<alpha>` — per-node class proportions drawn from a
+//! symmetric Dirichlet(α) with equal node sizes ([`data::Partition`]).
+//! The head-to-head table sweeps algorithm × codec × α (a Dirichlet
+//! value expands to the ladder {α, 1.0, ∞}) under sync or async rounds:
+//!
+//! ```text
+//! repro sim --table --heterogeneity dirichlet:0.1 --rounds async:2 \
+//!           --nodes 64 --dataset tiny
+//! ```
 //!
 //! ## Dynamic topology
 //!

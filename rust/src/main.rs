@@ -102,14 +102,18 @@ fn main() -> Result<()> {
             let sizing = Sizing::from_args(&args);
             // `--codec SPEC` runs C-ECL over that edge codec directly.
             let algorithm = pick_algorithm(&args, &sizing, true)?;
-            let partition = match args.get_str("partition", "homogeneous").as_str() {
-                "homogeneous" | "homo" => Partition::Homogeneous,
-                "heterogeneous" | "hetero" => Partition::Heterogeneous {
-                    // Paper default: 8-of-10. Lower = stronger client
-                    // drift (the `ablation-drift` stress regime).
-                    classes_per_node: args.get("classes-per-node", 8usize),
+            let partition = match sizing.partition {
+                // `--heterogeneity` (the shared axis flag) wins.
+                Some(p) => p,
+                None => match args.get_str("partition", "homogeneous").as_str() {
+                    "heterogeneous" | "hetero" => Partition::Heterogeneous {
+                        // Paper default: 8-of-10. Lower = stronger client
+                        // drift (the `ablation-drift` stress regime).
+                        classes_per_node: args.get("classes-per-node", 8usize),
+                    },
+                    other => Partition::parse(other)
+                        .map_err(|e| anyhow!("--partition: {e}"))?,
                 },
-                other => return Err(anyhow!("unknown partition {other}")),
             };
             let topo_name = args.get_str("topology", "ring");
             check_unknown(&args)?;
@@ -198,7 +202,9 @@ fn main() -> Result<()> {
                     .ok_or_else(|| anyhow!("unknown topology {topo_name}"))?;
                 let graph = Graph::build(topology, sizing.nodes);
                 let ds = sizing.datasets.first().cloned().unwrap();
-                let mut spec = sizing.spec_base(&ds, Partition::Homogeneous);
+                let partition =
+                    sizing.partition.unwrap_or(Partition::Homogeneous);
+                let mut spec = sizing.spec_base(&ds, partition);
                 spec.algorithm = algorithm;
                 spec.verbose = true;
                 spec.exec = ExecMode::Simulated(cfg);
@@ -307,39 +313,10 @@ fn pick_algorithm(args: &Args, sizing: &Sizing,
         });
     }
     let name = alg_name.unwrap_or_else(|| "cecl:0.1".to_string());
-    let mut alg = AlgorithmSpec::parse(&name).ok_or_else(|| {
-        // A broken embedded codec spec — or a degenerate numeric
-        // fraction (`cecl:0`, `cecl:1.5`) — deserves the codec
-        // parser's detailed error (offending token + grammar), not a
-        // generic "unknown algorithm".
-        if let Some(arg) = name
-            .strip_prefix("cecl:")
-            .or_else(|| name.strip_prefix("c-ecl:"))
-            .or_else(|| name.strip_prefix("naive-cecl:"))
-        {
-            if let Ok(k_frac) = arg.parse::<f64>() {
-                if let Err(e) =
-                    cecl::compress::CodecSpec::validate_k_fraction(k_frac)
-                {
-                    return anyhow!("--algorithm {name}: {e}");
-                }
-            } else if let Err(e) = cecl::compress::CodecSpec::parse(arg) {
-                return anyhow!("--algorithm {name}: {e}");
-            }
-        }
-        if let Some(arg) = name
-            .strip_prefix("powergossip:")
-            .or_else(|| name.strip_prefix("pg:"))
-        {
-            if matches!(arg.parse::<usize>(), Ok(0)) {
-                return anyhow!(
-                    "--algorithm {name}: powergossip needs at least one \
-                     power iteration (grammar: powergossip:N with N >= 1)"
-                );
-            }
-        }
-        anyhow!("unknown algorithm {name}")
-    })?;
+    // The algorithm grammar names every offending token itself (broken
+    // embedded codec specs, degenerate fractions, θ out of range, …).
+    let mut alg = AlgorithmSpec::parse(&name)
+        .map_err(|e| anyhow!("--algorithm: {e}"))?;
     if let AlgorithmSpec::CEclCodec { dense_first_epoch: dfe, .. } = &mut alg {
         *dfe = dense_first_epoch;
     }
@@ -442,6 +419,7 @@ commands:
   topology --viz   print adjacency (Figure 2)
   theory           Theorem 1 / Corollary 2 rate validation
   train            one run: --algorithm sgd|dpsgd|ecl|cecl:K|powergossip:N
+                   |choco:SPEC|lead:SPEC (the compressed-gossip rivals)
                    or --codec SPEC (C-ECL over that edge codec)
   sim              virtual-time run, artifact-free (scales to 512+ nodes):
                    --link ideal|constant|bandwidth|lossy --latency-us N
@@ -459,7 +437,8 @@ commands:
                    traffic held, state preserved)
                    --table (time-to-accuracy ladder incl. the codec ladder;
                    with --rounds async:S it sweeps sync vs async, with
-                   --churn it sweeps static vs churn)
+                   --churn it sweeps static vs churn, with --heterogeneity
+                   dirichlet:A it sweeps the α ladder {A, 1.0, ∞})
                    --target-acc F --codec SPEC[,SPEC...]
   ablation-naive   Eq.11 vs Eq.13 dual compression
   ablation-warmup  first-epoch dense on/off
@@ -479,6 +458,13 @@ round policies (--rounds, virtual-time engine only for async):
   async:S          per-edge clocks, gossip-style: a node steps once every
                    edge has delivered state at most S rounds stale
                    (PowerGossip runs on per-edge conversation counters)
+
+heterogeneity (--heterogeneity, all run commands; `train` also accepts
+the legacy --partition spelling):
+  homogeneous      i.i.d. label split (default)
+  heterogeneous[:c] paper-style c-of-10 label split (default c = 8)
+  dirichlet:A      per-node class proportions ~ Dirichlet(α): A = 0.1 is
+                   severe skew, A = 1.0 moderate, large A → homogeneous
 
 common options:
   --dataset fashion|cifar   --epochs N        --nodes N

@@ -131,6 +131,54 @@ impl Pcg {
         self.f64() < p
     }
 
+    /// Gamma(shape, 1) via Marsaglia–Tsang squeeze (2000); the shape < 1
+    /// case goes through the Gamma(shape + 1) boost `G(a) = G(a+1)·U^{1/a}`.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0 && shape.is_finite(), "gamma shape {shape}");
+        if shape < 1.0 {
+            let boost = self.gamma(shape + 1.0);
+            // U ∈ (0, 1): f64() can return exactly 0, which would stick
+            // the draw at 0 for every shape.
+            let mut u = self.f64();
+            while u <= 0.0 {
+                u = self.f64();
+            }
+            return boost * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(α·1_k) draw: `k` proportions summing to 1.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        assert!(k > 0);
+        let g: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            // All draws underflowed to 0 (tiny α): fall back to a point
+            // mass on a uniformly-chosen coordinate — the α → 0 limit.
+            let mut p = vec![0.0; k];
+            p[self.below(k)] = 1.0;
+            return p;
+        }
+        g.iter().map(|&x| x / sum).collect()
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -266,6 +314,47 @@ mod tests {
         s.dedup();
         assert_eq!(s.len(), 20);
         assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // Gamma(a, 1): mean a, variance a — check both branches of the
+        // sampler (a < 1 boost, a ≥ 1 squeeze).
+        for a in [0.1, 0.5, 1.0, 3.5] {
+            let mut rng = Pcg::new(31);
+            let n = 100_000;
+            let xs: Vec<f64> = (0..n).map(|_| rng.gamma(a)).collect();
+            assert!(xs.iter().all(|&x| x >= 0.0));
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / n as f64;
+            assert!((mean - a).abs() < 0.05 * (1.0 + a), "a={a} mean={mean}");
+            assert!((var - a).abs() < 0.15 * (1.0 + a), "a={a} var={var}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_concentrates() {
+        let mut rng = Pcg::new(37);
+        let p = rng.dirichlet(1.0, 10);
+        assert_eq!(p.len(), 10);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|&x| x >= 0.0));
+        // Large α concentrates near uniform; small α near a vertex.
+        let mut big = Pcg::new(41);
+        let pb = big.dirichlet(1e4, 10);
+        assert!(pb.iter().all(|&x| (x - 0.1).abs() < 0.02), "{pb:?}");
+        let mut small = Pcg::new(43);
+        let mx = (0..20)
+            .map(|_| {
+                small
+                    .dirichlet(0.05, 10)
+                    .into_iter()
+                    .fold(0.0f64, f64::max)
+            })
+            .sum::<f64>()
+            / 20.0;
+        assert!(mx > 0.8, "α=0.05 mean max share {mx}");
     }
 
     #[test]

@@ -1,12 +1,25 @@
 //! Convergence-behaviour suite on the convex-quadratic substrate — fast,
-//! exact, artifact-free checks of the paper's algorithmic claims.
+//! exact, artifact-free checks of the paper's algorithmic claims — plus
+//! the rival-baseline head-to-head: LEAD's primal-dual iteration on the
+//! quadratic network, and the Dirichlet-skew acceptance run where C-ECL
+//! beats CHOCO-SGD at matched bytes per round.
 
-use cecl::graph::Graph;
+use std::sync::Arc;
+
+use cecl::algorithms::{AlgorithmSpec, BuildCtx, DualPath, LeadNode,
+                       NodeStateMachine, RoundPolicy};
+use cecl::comm::{Msg, Outbox};
+use cecl::compress::{CodecSpec, WireMode};
+use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
+use cecl::data::Partition;
+use cecl::graph::{Graph, TopologyView};
 use cecl::linalg;
+use cecl::model::Manifest;
 use cecl::quadratic::{
     delta_of, rate_bound, run_cecl, tau_threshold, theta_domain, DualRule,
     QuadraticNetwork,
 };
+use cecl::sim::SimConfig;
 use cecl::util::stats::empirical_rate;
 
 fn network(seed: u64) -> (QuadraticNetwork, Graph) {
@@ -135,6 +148,198 @@ fn rate_bound_theorem1_structure() {
     // penalty(τ) = √(1−τ)(1 + δ): check exact values.
     assert!((p075 - 0.25f64.sqrt() * (1.0 + d)).abs() < 1e-12);
     assert!((p05 - 0.5f64.sqrt() * (1.0 + d)).abs() < 1e-12);
+}
+
+/// A d = d_pad = 16 manifest matching the quadratic network's
+/// dimension, so real `NodeStateMachine`s drive on the exact substrate.
+fn quadratic_manifest() -> cecl::model::DatasetManifest {
+    Manifest::parse(
+        "version 1\nsmoke s\ndataset t\nd 16\nd_pad 16\ninput 2 2 1\n\
+         classes 2\nbatch 2\neval_batch 2\ntrain_step a\neval_step b\n\
+         dual_update c\ninit_w d\nlayer l 4 4\nend\n",
+        std::path::Path::new("/x"),
+    )
+    .unwrap()
+    .dataset("t")
+    .unwrap()
+    .clone()
+}
+
+/// One synchronous exchange round of real LEAD machines, driven by
+/// hand: round_begin everywhere, deliver in ascending sender order,
+/// round_end everywhere.
+fn lead_round(nodes: &mut [LeadNode], ws: &mut [Vec<f32>], round: usize,
+              view: &TopologyView) {
+    let n = nodes.len();
+    let mut queued: Vec<Vec<(usize, Msg)>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut out = Outbox::new();
+        NodeStateMachine::round_begin(&mut nodes[i], round, view, &mut ws[i],
+                                      &mut out)
+            .unwrap();
+        queued.push(out.drain().collect());
+    }
+    for (src, msgs) in queued.into_iter().enumerate() {
+        for (to, msg) in msgs {
+            let mut out = Outbox::new();
+            NodeStateMachine::on_message(&mut nodes[to], round, src, msg,
+                                         view, &mut ws[to], &mut out)
+                .unwrap();
+            assert!(out.is_empty(), "LEAD is single-phase");
+        }
+    }
+    for i in 0..n {
+        assert!(nodes[i].round_complete());
+        NodeStateMachine::round_end(&mut nodes[i], round, view, &mut ws[i])
+            .unwrap();
+    }
+}
+
+#[test]
+fn lead_converges_on_the_quadratic_network() {
+    // The LEAD rival as a real state machine on the convex-quadratic
+    // substrate: per round, every node takes the Eq. (6)-style local
+    // step z = w − η∇f(w) + η·(−d) (alpha_deg = 0, zsum = −d), then
+    // the machines exchange compressed z-estimates and apply the
+    // primal/dual corrections.  With the identity codec the stacked
+    // distance to the global optimum w* must fall by orders of
+    // magnitude — LEAD solves the heterogeneous consensus problem
+    // exactly, unlike plain gossip averaging.
+    let (net, graph) = network(11);
+    let graph = Arc::new(graph);
+    let n = graph.n();
+    let dim = net.dim;
+    let manifest = quadratic_manifest();
+    assert_eq!(manifest.d_pad, dim, "manifest must match the network");
+    let eta = 0.25 / net.l_smooth;
+    let mut nodes: Vec<LeadNode> = (0..n)
+        .map(|i| {
+            let ctx = BuildCtx {
+                node: i,
+                graph: Arc::clone(&graph),
+                manifest: manifest.clone(),
+                seed: 11,
+                eta: eta as f32,
+                local_steps: 1,
+                rounds_per_epoch: 1,
+                dual_path: DualPath::Native,
+                runtime: None,
+                round_policy: RoundPolicy::Sync,
+            };
+            LeadNode::new(&ctx, CodecSpec::Identity).unwrap()
+        })
+        .collect();
+    let mut ws: Vec<Vec<f32>> = vec![vec![0.0; dim]; n];
+    let err = |ws: &[Vec<f32>]| -> f64 {
+        ws.iter()
+            .map(|w| {
+                w.iter()
+                    .zip(&net.w_star)
+                    .map(|(&wf, &s)| (wf as f64 - s).powi(2))
+                    .sum::<f64>()
+            })
+            .sum()
+    };
+    let e0 = err(&ws);
+    assert!(e0 > 0.0, "w* must be nonzero for the test to have teeth");
+    let view = TopologyView::full(graph.edges().len());
+    for round in 0..600 {
+        for i in 0..n {
+            let wf: Vec<f64> = ws[i].iter().map(|&v| v as f64).collect();
+            let hw = net.nodes[i].hess.matvec(&wf);
+            let nd: Vec<f32> =
+                NodeStateMachine::zsum(&nodes[i]).unwrap().to_vec();
+            for k in 0..dim {
+                let grad = hw[k] - net.nodes[i].btc[k];
+                ws[i][k] = (wf[k] - eta * grad) as f32 + (eta as f32) * nd[k];
+            }
+        }
+        lead_round(&mut nodes, &mut ws, round, &view);
+    }
+    let e_final = err(&ws);
+    assert!(e_final.is_finite(), "LEAD diverged");
+    assert!(
+        e_final < e0 * 1e-2,
+        "LEAD stalled: {e_final} vs initial {e0}"
+    );
+    // Consensus: every pair of nodes agrees to fine precision relative
+    // to the remaining optimality error.
+    let spread: f64 = (1..n)
+        .map(|i| {
+            ws[i]
+                .iter()
+                .zip(&ws[0])
+                .map(|(&a, &b)| (a as f64 - b as f64).powi(2))
+                .sum::<f64>()
+        })
+        .sum();
+    assert!(
+        spread < e0 * 1e-2,
+        "LEAD nodes never reached consensus: spread {spread}"
+    );
+}
+
+#[test]
+fn cecl_beats_choco_at_matched_bytes_under_dirichlet_skew() {
+    // The acceptance scenario: at heavy label skew (dirichlet:0.1) and
+    // byte-for-byte matched communication (rand_k:0.1 frames on both
+    // sides, no dense warmup), operator splitting must clear the
+    // accuracy target while CHOCO-SGD's gossip averaging falls
+    // measurably short — the paper's headline, reproduced end to end
+    // on the virtual-time engine at a fixed seed.
+    let graph = Graph::ring(8);
+    let run = |alg: AlgorithmSpec| {
+        let spec = ExperimentSpec {
+            dataset: "tiny".into(),
+            algorithm: alg,
+            epochs: 8,
+            nodes: 8,
+            train_per_node: 100,
+            test_size: 200,
+            partition: Partition::Dirichlet { alpha: 0.1 },
+            local_steps: 2,
+            eta: 0.1,
+            eval_every: 8,
+            seed: 23,
+            exec: ExecMode::Simulated(SimConfig::default()),
+            rounds: RoundPolicy::Sync,
+            ..Default::default()
+        };
+        run_simulated_native(&spec, &graph).unwrap()
+    };
+    let cecl = run(AlgorithmSpec::CEcl {
+        k_frac: 0.1,
+        theta: 1.0,
+        dense_first_epoch: false,
+    });
+    let choco = run(AlgorithmSpec::Choco {
+        codec: CodecSpec::RandK { k_frac: 0.1, mode: WireMode::Explicit },
+    });
+    // Matched communication: identical codec, schedule, and graph give
+    // identical wire bytes — the comparison isolates the algorithm.
+    assert_eq!(
+        cecl.total_bytes, choco.total_bytes,
+        "bytes/round must match for a fair head-to-head"
+    );
+    // Fixed-seed determinism of the whole scenario.
+    let replay = run(AlgorithmSpec::CEcl {
+        k_frac: 0.1,
+        theta: 1.0,
+        dense_first_epoch: false,
+    });
+    assert_eq!(replay.final_accuracy.to_bits(), cecl.final_accuracy.to_bits());
+    // C-ECL clears the target; CHOCO-SGD falls measurably short.
+    assert!(
+        cecl.final_accuracy > 0.15,
+        "C-ECL accuracy {} below target under dirichlet:0.1",
+        cecl.final_accuracy
+    );
+    assert!(
+        cecl.final_accuracy > choco.final_accuracy + 0.03,
+        "C-ECL {} not measurably above CHOCO-SGD {} at matched bytes",
+        cecl.final_accuracy,
+        choco.final_accuracy
+    );
 }
 
 #[test]

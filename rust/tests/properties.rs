@@ -5,12 +5,13 @@
 use std::sync::Arc;
 
 use cecl::algorithms::{build_machine, AlgorithmSpec, BuildCtx, CEclNode,
-                       DualPath, DualRule, NodeAlgorithm, NodeStateMachine,
-                       RoundPolicy};
+                       ChocoNode, DualPath, DualRule, LeadNode,
+                       NodeAlgorithm, NodeStateMachine, RoundPolicy};
 use cecl::comm::{build_bus, Msg, Outbox};
 use cecl::compress::{measure_codec_contraction, CodecSpec, CooVec, EdgeCtx,
                      RandK, WireMode};
-use cecl::data::{node_classes, Partition};
+use cecl::data::{build_node_datasets, dirichlet_class_counts, label_skew,
+                 node_classes, Partition, SyntheticSpec};
 use cecl::graph::{Graph, TopologyView};
 use cecl::linalg::{Cholesky, Mat};
 use cecl::model::DatasetManifest;
@@ -285,6 +286,33 @@ fn drive_round(nodes: &mut [CEclNode], ws: &mut [Vec<f32>],
     };
     let view = TopologyView::full(edge_count);
     drive_round_view(nodes, ws, round, &view)
+}
+
+/// [`drive_round_view`] over boxed machines — the rival algorithms
+/// (CHOCO-SGD, LEAD) drive through the same single-phase schedule.
+fn drive_round_dyn(nodes: &mut [Box<dyn NodeStateMachine>],
+                   ws: &mut [Vec<f32>], round: usize,
+                   view: &TopologyView) {
+    let n = nodes.len();
+    let mut queued: Vec<Vec<(usize, Msg)>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut out = Outbox::new();
+        nodes[i].round_begin(round, view, &mut ws[i], &mut out).unwrap();
+        queued.push(out.drain().collect());
+    }
+    for (src, msgs) in queued.into_iter().enumerate() {
+        for (to, msg) in msgs {
+            let mut out = Outbox::new();
+            nodes[to]
+                .on_message(round, src, msg, view, &mut ws[to], &mut out)
+                .unwrap();
+            assert!(out.is_empty(), "rival machines are single-phase");
+        }
+    }
+    for i in 0..n {
+        assert!(nodes[i].round_complete());
+        nodes[i].round_end(round, view, &mut ws[i]).unwrap();
+    }
 }
 
 #[test]
@@ -870,6 +898,210 @@ fn prop_edge_rebirth_never_reuses_stale_codec_state() {
 }
 
 #[test]
+fn prop_rival_machines_async_staleness_never_exceeds_bound() {
+    // CHOCO-SGD and LEAD under `async:<s>` obey the same contract as
+    // C-ECL: every round completes without deadlock, no replica or
+    // dual older than `s` rounds is ever folded, and both stay
+    // one-frame-per-neighbor-per-round on the wire (they are
+    // single-phase gossip protocols, so message counts are exact).
+    use cecl::sim::{simulate, NodeSetup, NullLocal, Schedule, SimConfig};
+
+    check("rival-async-staleness-bound", 10, 4, |ctx: &mut Ctx| {
+        let s = 1 + ctx.rng.below(3); // staleness budget 1..=3
+        let n = 4 + (ctx.size % 3); // ring of 4..=6 nodes
+        let rounds = 6 + ctx.rng.below(4);
+        let seed = ctx.rng.next_u64();
+        let policy = RoundPolicy::Async { max_staleness: s };
+        let graph = Arc::new(Graph::ring(n));
+        let alg = if ctx.rng.bernoulli(0.5) {
+            AlgorithmSpec::Choco {
+                codec: CodecSpec::RandK {
+                    k_frac: 0.3,
+                    mode: WireMode::Explicit,
+                },
+            }
+        } else {
+            AlgorithmSpec::Lead { codec: CodecSpec::Qsgd { bits: 4 } }
+        };
+        let manifest = sm_manifest((2, 2, 1), 3);
+        let ws: Vec<Vec<f32>> =
+            (0..n).map(|_| ctx.vec_f32(manifest.d_pad)).collect();
+        let setups: Vec<NodeSetup> = ws
+            .into_iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let mut bctx = sm_ctx(i, &graph, seed, manifest.clone());
+                bctx.round_policy = policy;
+                NodeSetup {
+                    machine: build_machine(&alg, &bctx).unwrap(),
+                    local: Box::new(NullLocal),
+                    w,
+                }
+            })
+            .collect();
+        let cfg = SimConfig {
+            link: if ctx.rng.bernoulli(0.5) {
+                cecl::sim::LinkSpec::Lossy {
+                    latency_us: 200 + ctx.rng.below(2_000) as u64,
+                    mbit_per_sec: 20.0,
+                    drop_p: 0.2 * ctx.rng.f64(),
+                }
+            } else {
+                cecl::sim::LinkSpec::Constant {
+                    latency_us: 200 + ctx.rng.below(4_000) as u64,
+                }
+            },
+            compute_ns_per_step: 500_000,
+            stragglers: vec![(ctx.rng.below(n), 1.0 + 7.0 * ctx.rng.f64())],
+            ..SimConfig::default()
+        };
+        let sched = Schedule::new(rounds, 1, 2, rounds);
+        let out = simulate(&graph, &cfg, seed, &sched, setups, policy, false)
+            .map_err(|e| format!("async {} sim failed: {e}", alg.name()))?;
+        prop_assert!(
+            out.max_staleness <= s,
+            "lag {} exceeds budget {s} (n={n}, rounds={rounds}, alg={})",
+            out.max_staleness,
+            alg.name()
+        );
+        prop_assert!(
+            out.meter.total_msgs() as usize == rounds * 2 * n,
+            "{}: every node must still send every round: {} msgs",
+            alg.name(),
+            out.meter.total_msgs()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rival_edge_rebirth_never_reuses_stale_codec_state() {
+    // The PR-5 lifecycle contract extended over the rival machines:
+    // remove→re-add of an edge under the stateful `ef+top_k` codec must
+    // give the reborn incarnation a zeroed replica AND a fresh codec.
+    // Both CHOCO-SGD and LEAD encode `q = (buffer) − replica` in
+    // round_begin, so the reborn machine's first frame must be
+    // byte-identical to a brand-new codec encoding the raw buffer
+    // under the fresh edge epoch.  A no-churn control pins that the
+    // property has teeth: without the rebirth, the accumulated replica
+    // and EF residual produce a DIFFERENT frame.
+    use cecl::compress::EdgeCodec as _;
+
+    check("rival-rebirth-fresh-codec", 6, 1, |ctx: &mut Ctx| {
+        let seed = ctx.rng.next_u64();
+        let spec = CodecSpec::parse("ef+top_k:0.3").unwrap();
+        let graph = Arc::new(Graph::chain(2));
+        let manifest = sm_manifest((3, 3, 1), 4);
+        let d = manifest.d_pad;
+        let mats: Vec<(usize, usize, usize)> = manifest
+            .matrix_views()
+            .into_iter()
+            .map(|(_, off, r, c)| (off, r, c))
+            .collect();
+        let vecs: Vec<(usize, usize)> = manifest
+            .vector_views()
+            .into_iter()
+            .map(|(_, off, len)| (off, len))
+            .collect();
+        for kind in ["choco", "lead"] {
+            let build = |i: usize| -> Box<dyn NodeStateMachine> {
+                let bctx = sm_ctx(i, &graph, seed, manifest.clone());
+                match kind {
+                    "choco" => {
+                        Box::new(ChocoNode::new(&bctx, spec.clone()).unwrap())
+                    }
+                    _ => Box::new(LeadNode::new(&bctx, spec.clone()).unwrap()),
+                }
+            };
+            let make_ws = || -> Vec<Vec<f32>> {
+                (0..2u64)
+                    .map(|i| {
+                        let mut rng = Pcg::derive(seed, &[5151, i]);
+                        (0..d).map(|_| rng.normal_f32()).collect()
+                    })
+                    .collect()
+            };
+            let mut nodes: Vec<Box<dyn NodeStateMachine>> =
+                (0..2).map(build).collect();
+            let mut ws = make_ws();
+            // Rounds 0..2 accumulate replicas and EF residuals.
+            let mut view = TopologyView::full(graph.edges().len());
+            for round in 0..3 {
+                drive_round_dyn(&mut nodes, &mut ws, round, &view);
+            }
+            // Churn: the edge dies and is reborn activating at round 3.
+            view.kill_edge(0);
+            view.revive_edge(0, 3);
+            let mut out = Outbox::new();
+            for (i, node) in nodes.iter_mut().enumerate() {
+                node.on_topology(&view, &mut ws[i], &mut out).unwrap();
+            }
+            prop_assert!(out.is_empty(), "{kind}: topology sync sent");
+            // The reborn machine's first frame...
+            nodes[0].round_begin(3, &view, &mut ws[0], &mut out).unwrap();
+            let msgs: Vec<(usize, Msg)> = out.drain().collect();
+            prop_assert!(msgs.len() == 1, "{kind}: one neighbor");
+            let frame = msgs
+                .into_iter()
+                .next()
+                .unwrap()
+                .1
+                .into_frame()
+                .map_err(|e| e.to_string())?;
+            // ...must equal a brand-new codec encoding the raw buffer
+            // (replica = 0 ⇒ q = w) under epoch 1.
+            let mut fresh = spec.build();
+            fresh.bind_layout(&mats, &vecs);
+            let ec = EdgeCtx {
+                seed,
+                edge: 0,
+                round: 3,
+                receiver: 1,
+                dim: d,
+                epoch: 1,
+            };
+            let expect = fresh.encode(&ws[0], &ec);
+            prop_assert!(
+                frame.bytes() == expect.bytes(),
+                "{kind}: reborn frame != fresh-codec frame (stale replica \
+                 or EF state resurrected?)"
+            );
+            // No-churn control: the same machine driven without the
+            // rebirth carries replica + EF state into round 3 and
+            // encodes something ELSE.
+            let mut ctrl: Vec<Box<dyn NodeStateMachine>> =
+                (0..2).map(build).collect();
+            let mut cws = make_ws();
+            let static_view = TopologyView::full(graph.edges().len());
+            for round in 0..3 {
+                drive_round_dyn(&mut ctrl, &mut cws, round, &static_view);
+            }
+            let mut cout = Outbox::new();
+            ctrl[0]
+                .round_begin(3, &static_view, &mut cws[0], &mut cout)
+                .unwrap();
+            let cframe = cout
+                .drain()
+                .next()
+                .unwrap()
+                .1
+                .into_frame()
+                .map_err(|e| e.to_string())?;
+            let mut fresh2 = spec.build();
+            fresh2.bind_layout(&mats, &vecs);
+            let ec0 = EdgeCtx { epoch: 0, ..ec };
+            let fresh_frame = fresh2.encode(&cws[0], &ec0);
+            prop_assert!(
+                cframe.bytes() != fresh_frame.bytes(),
+                "{kind}: statefulness control failed — a live edge's \
+                 round-3 frame matched a fresh codec on the raw buffer"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_low_rank_codec_roundtrips_within_rank_error() {
     // `low_rank:R` on an exactly rank-R matrix: with at least one
     // power-iteration refinement per rank, every shipped q factor lies
@@ -1073,6 +1305,124 @@ fn prop_heterogeneous_partition_shapes() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_dirichlet_counts_partition_every_sample_exactly_once() {
+    // The Dirichlet(α) split apportions exactly `train_per_node`
+    // samples per node (largest remainder never drops or duplicates a
+    // sample) for every α, node count, and class count — and the whole
+    // split is a pure function of the seed.
+    check("dirichlet-partition", 16, 12, |ctx: &mut Ctx| {
+        let nodes = (ctx.size % 12).max(2);
+        let classes = 4 + ctx.rng.below(7); // 4..=10
+        let train = 40 + ctx.rng.below(200);
+        let alpha = 0.05 + 2.0 * ctx.rng.f64();
+        let seed = ctx.rng.next_u64();
+        let counts = dirichlet_class_counts(nodes, classes, train, alpha, seed);
+        prop_assert!(counts.len() == nodes, "node count");
+        for (i, c) in counts.iter().enumerate() {
+            prop_assert!(c.len() == classes, "node {i}: class count");
+            let total: usize = c.iter().sum();
+            prop_assert!(
+                total == train,
+                "node {i} holds {total} samples, not {train}"
+            );
+        }
+        let again = dirichlet_class_counts(nodes, classes, train, alpha, seed);
+        prop_assert!(counts == again, "dirichlet split not deterministic");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dirichlet_datasets_realize_the_drawn_counts() {
+    // End to end through the generator: the per-node datasets built for
+    // a Dirichlet partition hold exactly the drawn per-class counts —
+    // every sample the apportionment assigned shows up exactly once in
+    // the node's label histogram.
+    check("dirichlet-datasets", 6, 6, |ctx: &mut Ctx| {
+        let nodes = (ctx.size % 6).max(2);
+        let alpha = 0.1 + ctx.rng.f64();
+        let seed = ctx.rng.next_u64();
+        let spec = SyntheticSpec::for_dataset("p", 4, 4, 1, 10, seed);
+        let train = 50;
+        let (trains, test) = build_node_datasets(
+            &spec,
+            Partition::Dirichlet { alpha },
+            nodes,
+            train,
+            80,
+        );
+        let counts = dirichlet_class_counts(nodes, 10, train, alpha, seed);
+        prop_assert!(trains.len() == nodes, "node count");
+        for (i, ds) in trains.iter().enumerate() {
+            prop_assert!(ds.n == train, "node {i}: {} samples", ds.n);
+            let mut hist = vec![0usize; 10];
+            for &y in &ds.y {
+                hist[y as usize] += 1;
+            }
+            prop_assert!(
+                hist == counts[i],
+                "node {i}: labels don't realize the Dirichlet draw"
+            );
+        }
+        prop_assert!(test.n == 80, "test size");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dirichlet_alpha_to_infinity_recovers_homogeneous_split() {
+    // α → ∞ pins the proportions at 1/classes, so the apportioned
+    // counts converge to the homogeneous split (±1 from rounding) and
+    // the skew statistic sits on the balanced floor.
+    check("dirichlet-large-alpha", 12, 10, |ctx: &mut Ctx| {
+        let nodes = (ctx.size % 10).max(2);
+        let classes = 10usize;
+        let train = 100 * (1 + ctx.rng.below(4));
+        let seed = ctx.rng.next_u64();
+        let counts =
+            dirichlet_class_counts(nodes, classes, train, 1e9, seed);
+        let per = train / classes;
+        for (i, c) in counts.iter().enumerate() {
+            for (cls, &cnt) in c.iter().enumerate() {
+                prop_assert!(
+                    cnt.abs_diff(per) <= 1,
+                    "node {i} class {cls}: {cnt} vs homogeneous {per}"
+                );
+            }
+        }
+        let skew = label_skew(&counts);
+        prop_assert!(
+            skew < 0.1 + 2.0 / train as f64,
+            "skew {skew} at alpha=1e9"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn dirichlet_alpha_point_one_pins_heavy_label_skew() {
+    // The head-to-head operating point (α = 0.1, 8 nodes, 10 classes,
+    // 500 samples/node — the acceptance scenario's split): the mean
+    // max-class share must sit well above both the balanced 0.1 floor
+    // and the near-homogeneous α = 100 draw, and reproduce exactly
+    // from the seed.
+    let counts = dirichlet_class_counts(8, 10, 500, 0.1, 42);
+    let skew = label_skew(&counts);
+    assert_eq!(
+        skew,
+        label_skew(&dirichlet_class_counts(8, 10, 500, 0.1, 42)),
+        "skew statistic not reproducible from the seed"
+    );
+    assert!(skew > 0.35, "alpha=0.1 skew {skew} below the pinned floor");
+    let tame = label_skew(&dirichlet_class_counts(8, 10, 500, 100.0, 42));
+    assert!(tame < 0.18, "alpha=100 skew {tame} above the homogeneous band");
+    assert!(
+        skew > 2.0 * tame,
+        "skew ladder not monotone in alpha: {skew} !> 2 x {tame}"
+    );
 }
 
 // ---------------------------------------------------------------------

@@ -773,6 +773,132 @@ fn powergossip_async_rounds_complete_bounded_and_replay() {
 }
 
 #[test]
+fn rival_codecs_meter_identical_bytes_and_trajectories_on_both_engines() {
+    // CHOCO-SGD and LEAD through the same cross-engine contract as
+    // C-ECL: for every rival × codec row (parsed via the CLI grammar,
+    // so `choco:...`/`lead:...` specs are exercised end to end), the
+    // threaded bus and the virtual-time engine account identical
+    // first-copy bytes per node AND land on bit-identical parameters
+    // under sync rounds — even with link latency reordering deliveries.
+    let graph = Arc::new(Graph::ring(5));
+    for spec in ["choco:rand_k:0.1", "choco:qsgd:4", "choco:ef+top_k:0.1",
+                 "lead:rand_k:0.1", "lead:qsgd:4", "lead:ef+top_k:0.01"] {
+        let alg = AlgorithmSpec::parse(spec).unwrap();
+        let (bytes_t, msgs_t, ws_t) = threaded_run(&alg, &graph, 61, 3);
+        assert!(bytes_t.iter().sum::<u64>() > 0, "{spec}: no traffic");
+        for link in [LinkSpec::Ideal, LinkSpec::Constant { latency_us: 200 }] {
+            let (bytes_s, msgs_s, retrans, ws_s) = simulated_run(
+                &alg, &graph, 61, 3, link, RoundPolicy::Sync,
+            );
+            assert_eq!(bytes_t, bytes_s, "{spec}: per-node bytes diverged");
+            assert_eq!(msgs_t, msgs_s, "{spec}: message counts diverged");
+            assert_eq!(retrans, 0, "{spec}: lossless links never retransmit");
+            assert_eq!(ws_t, ws_s, "{spec}: sync trajectory diverged");
+        }
+    }
+}
+
+#[test]
+fn choco_identity_is_dpsgd_on_both_engines() {
+    // Exact-gossip degeneration: CHOCO-SGD with the identity codec IS
+    // D-PSGD — exact replicas and γ = τ = 1 collapse the consensus
+    // step onto the Metropolis–Hastings fold.  Pinned bit-exactly on
+    // the threaded bus and through the virtual-time engine.
+    let graph = Arc::new(Graph::ring(5));
+    let choco = AlgorithmSpec::Choco { codec: CodecSpec::Identity };
+    let (_, msgs_d, ws_dpsgd) =
+        threaded_run(&AlgorithmSpec::DPsgd, &graph, 19, 4);
+    let (_, msgs_c, ws_choco_t) = threaded_run(&choco, &graph, 19, 4);
+    assert_eq!(msgs_d, msgs_c, "both are one-message-per-neighbor-per-round");
+    assert_eq!(ws_dpsgd, ws_choco_t, "threaded CHOCO+identity != D-PSGD");
+    let (_, _, _, ws_choco_s) = simulated_run(
+        &choco,
+        &graph,
+        19,
+        4,
+        LinkSpec::Constant { latency_us: 150 },
+        RoundPolicy::Sync,
+    );
+    assert_eq!(ws_dpsgd, ws_choco_s, "simulated CHOCO+identity != D-PSGD");
+}
+
+#[test]
+fn rival_machines_complete_churn_matrix_and_replay() {
+    // The PR-5 churn matrix extended over the rival machines: 16-node
+    // ring under `random:0.05` edge churn with short slots, CHOCO-SGD
+    // and LEAD, sync and async:2 rounds.  Every cell must complete
+    // without panics, surface real lifecycle transitions, respect the
+    // staleness bound over live edges only, and replay bit-identically
+    // — churn events and drops included.
+    use cecl::graph::ChurnSchedule;
+
+    let graph = Graph::ring(16);
+    let algs = [
+        AlgorithmSpec::Choco {
+            codec: CodecSpec::parse("rand_k:0.1").unwrap(),
+        },
+        AlgorithmSpec::Lead { codec: CodecSpec::Qsgd { bits: 4 } },
+    ];
+    let policies =
+        [RoundPolicy::Sync, RoundPolicy::Async { max_staleness: 2 }];
+    for alg in &algs {
+        for &rounds in &policies {
+            let mut churn = ChurnSchedule::new();
+            churn.random_edge_churn_with_slot(0.05, 7, 500_000);
+            let spec = ExperimentSpec {
+                dataset: "tiny".into(),
+                algorithm: alg.clone(),
+                epochs: 3,
+                nodes: 16,
+                train_per_node: 40,
+                test_size: 40,
+                local_steps: 2,
+                eta: 0.1,
+                eval_every: 3,
+                seed: 29,
+                exec: ExecMode::Simulated(SimConfig {
+                    link: LinkSpec::Constant { latency_us: 200 },
+                    compute_ns_per_step: 500_000,
+                    churn,
+                    ..SimConfig::default()
+                }),
+                rounds,
+                ..Default::default()
+            };
+            let a = run_simulated_native(&spec, &graph).unwrap_or_else(|e| {
+                panic!(
+                    "{} / {}: churn run failed: {e}",
+                    alg.name(),
+                    rounds.name()
+                )
+            });
+            assert!(
+                a.edges_churned > 0,
+                "{} / {}: no lifecycle transitions at 5%/slot",
+                alg.name(),
+                rounds.name()
+            );
+            assert!(
+                a.max_staleness <= rounds.staleness(),
+                "{} / {}: staleness {} exceeds bound {}",
+                alg.name(),
+                rounds.name(),
+                a.max_staleness,
+                rounds.staleness()
+            );
+            assert!(a.final_accuracy.is_finite());
+            assert!(a.total_bytes > 0);
+            let b = run_simulated_native(&spec, &graph).unwrap();
+            assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+            assert_eq!(a.total_bytes, b.total_bytes);
+            assert_eq!(a.edges_churned, b.edges_churned);
+            assert_eq!(a.frames_dropped_by_churn, b.frames_dropped_by_churn);
+            assert_eq!(a.sim_time_secs, b.sim_time_secs);
+        }
+    }
+}
+
+#[test]
 fn churn_64_node_matrix_completes_for_all_algorithms_and_policies() {
     // The PR's acceptance run: a 64-node ring under `random:0.05` edge
     // churn (short slots so dozens of lifecycle transitions land inside
