@@ -64,6 +64,11 @@ pub enum CommError {
     /// delivery): the virtual-time engine drains it as a typed drop
     /// instead of delivering cross-incarnation state.
     ChurnDropped { src: usize, dst: usize, edge: usize },
+    /// The socket layer failed mid-stream (reset, refused dial, short
+    /// write).  The net engine maps this onto the churn lifecycle —
+    /// the same per-edge teardown as `DownKind::Churn` — instead of
+    /// panicking or deadlocking.
+    Io { detail: String },
 }
 
 impl fmt::Display for CommError {
@@ -87,6 +92,9 @@ impl fmt::Display for CommError {
                     "frame {src}->{dst} dropped: edge {edge} churned \
                      out of the topology in flight"
                 )
+            }
+            CommError::Io { detail } => {
+                write!(f, "socket error: {detail}")
             }
         }
     }
@@ -231,10 +239,35 @@ pub struct Meter {
     /// Edge lifecycle transitions (kills + revivals) applied by the
     /// engine.
     edges_churned: AtomicU64,
+    /// Framing overhead bytes per node (wire headers on the net engine;
+    /// always 0 under the in-process engines, whose channels carry no
+    /// framing).  Kept apart from `sent` so payload accounting — the
+    /// quantity the paper reports and the byte-identity tests pin —
+    /// stays comparable across all three engines.
+    header: Vec<AtomicU64>,
+    /// Payload bytes per *directed* edge, indexed by
+    /// [`directed_edge_index`].  Empty unless the meter was built with
+    /// [`Meter::with_edges`]; the sim and net engines enable it so the
+    /// net engine's measured per-edge bytes can be checked against the
+    /// sim's prediction.
+    edge_sent: Vec<AtomicU64>,
+}
+
+/// Index of the directed slot for canonical edge `edge = (i, j)`,
+/// `i < j`: slot `2*edge` carries `i -> j` traffic, slot `2*edge + 1`
+/// carries `j -> i`.
+pub fn directed_edge_index(edge: usize, src: usize, dst: usize) -> usize {
+    2 * edge + usize::from(src > dst)
 }
 
 impl Meter {
     pub fn new(n: usize) -> Arc<Meter> {
+        Meter::with_edges(n, 0)
+    }
+
+    /// A meter that additionally tracks payload bytes per directed edge
+    /// (`2 * edge_count` slots).  `new` leaves that tracking disabled.
+    pub fn with_edges(n: usize, edge_count: usize) -> Arc<Meter> {
         Arc::new(Meter {
             sent: (0..n).map(|_| AtomicU64::new(0)).collect(),
             msgs: (0..n).map(|_| AtomicU64::new(0)).collect(),
@@ -243,6 +276,8 @@ impl Meter {
             churn_dropped_frames: AtomicU64::new(0),
             churn_dropped_bytes: AtomicU64::new(0),
             edges_churned: AtomicU64::new(0),
+            header: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            edge_sent: (0..2 * edge_count).map(|_| AtomicU64::new(0)).collect(),
         })
     }
 
@@ -254,6 +289,43 @@ impl Meter {
     /// Account bytes burned on retransmissions (beyond the first copy).
     pub fn record_retransmit(&self, node: usize, bytes: u64) {
         self.retrans[node].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Account framing overhead (wire headers) for `node`, separate from
+    /// payload bytes.
+    pub fn record_header_overhead(&self, node: usize, bytes: u64) {
+        self.header[node].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Account payload bytes on a directed edge slot (see
+    /// [`directed_edge_index`]).  A no-op unless the meter was built
+    /// with [`Meter::with_edges`].
+    pub fn record_edge_send(&self, dir_edge: usize, bytes: u64) {
+        if let Some(slot) = self.edge_sent.get(dir_edge) {
+            slot.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    pub fn header_overhead_bytes(&self, node: usize) -> u64 {
+        self.header[node].load(Ordering::Relaxed)
+    }
+
+    pub fn total_header_overhead_bytes(&self) -> u64 {
+        self.header.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Payload bytes per directed edge, or `None` if the meter was not
+    /// built with per-edge tracking.
+    pub fn edge_payload_bytes(&self) -> Option<Vec<u64>> {
+        if self.edge_sent.is_empty() {
+            return None;
+        }
+        Some(
+            self.edge_sent
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect(),
+        )
     }
 
     /// Account a frame drained by topology churn (typed drop, not an
@@ -321,6 +393,8 @@ impl Meter {
             .iter()
             .chain(self.msgs.iter())
             .chain(self.retrans.iter())
+            .chain(self.header.iter())
+            .chain(self.edge_sent.iter())
         {
             a.store(0, Ordering::Relaxed);
         }
@@ -612,6 +686,41 @@ mod tests {
         // The typed drop renders with its route.
         let e = CommError::ChurnDropped { src: 1, dst: 0, edge: 3 };
         assert!(e.to_string().contains("edge 3"), "{e}");
+    }
+
+    #[test]
+    fn meter_splits_header_overhead_from_payload() {
+        let m = Meter::new(2);
+        m.record_send(0, 100);
+        m.record_header_overhead(0, 24);
+        m.record_header_overhead(1, 24);
+        // Payload accounting — what the byte-identity tests pin — is
+        // untouched by framing overhead.
+        assert_eq!(m.total_bytes(), 100);
+        assert_eq!(m.header_overhead_bytes(0), 24);
+        assert_eq!(m.total_header_overhead_bytes(), 48);
+        m.reset();
+        assert_eq!(m.total_header_overhead_bytes(), 0);
+    }
+
+    #[test]
+    fn meter_per_edge_tracking_is_opt_in() {
+        // Default meter: per-edge slots disabled, recording is a no-op.
+        let plain = Meter::new(2);
+        plain.record_edge_send(0, 99);
+        assert!(plain.edge_payload_bytes().is_none());
+
+        // Edge-tracking meter: directed slots, byte-exact.
+        let m = Meter::with_edges(3, 2);
+        // Canonical edge 1 = (i, j); i -> j lands in slot 2, j -> i in 3.
+        assert_eq!(directed_edge_index(1, 0, 2), 2);
+        assert_eq!(directed_edge_index(1, 2, 0), 3);
+        m.record_edge_send(directed_edge_index(1, 0, 2), 40);
+        m.record_edge_send(directed_edge_index(1, 2, 0), 8);
+        m.record_edge_send(directed_edge_index(0, 1, 0), 16);
+        assert_eq!(m.edge_payload_bytes(), Some(vec![0, 16, 40, 8]));
+        m.reset();
+        assert_eq!(m.edge_payload_bytes(), Some(vec![0, 0, 0, 0]));
     }
 
     #[test]

@@ -138,6 +138,16 @@ pub struct Report {
     /// Frames drained in flight by topology churn (their payload bytes
     /// stay in the send accounting — byte-exact metering).
     pub frames_dropped_by_churn: u64,
+    /// Framing overhead bytes (wire headers) — nonzero only under the
+    /// net engine; the in-process engines carry no framing.  Kept apart
+    /// from `total_bytes` so payload accounting stays comparable across
+    /// engines.
+    pub header_overhead_bytes: u64,
+    /// Payload bytes per directed edge (`comm::directed_edge_index`
+    /// layout).  Filled by the virtual-time and net engines; empty under
+    /// the threaded engine.  This is the cross-engine identity surface:
+    /// a net run's vector must equal the sim's for the same spec/seed.
+    pub edge_payload_bytes: Vec<u64>,
     pub wallclock_secs: f64,
 }
 
@@ -152,8 +162,8 @@ impl Report {
 }
 
 /// Derived round/eval structure for a spec against a dataset config.
-fn build_schedule(spec: &ExperimentSpec, train_per_node: usize,
-                  batch: usize) -> Result<Schedule> {
+pub(crate) fn build_schedule(spec: &ExperimentSpec, train_per_node: usize,
+                             batch: usize) -> Result<Schedule> {
     let batches_per_epoch = train_per_node / batch;
     if batches_per_epoch == 0 {
         return Err(anyhow!(
@@ -394,6 +404,8 @@ fn run_threaded(
         max_staleness: 0,
         edges_churned: 0,
         frames_dropped_by_churn: 0,
+        header_overhead_bytes: 0,
+        edge_payload_bytes: Vec::new(),
         wallclock_secs: t0.elapsed().as_secs_f64(),
     })
 }
@@ -509,6 +521,8 @@ where
         max_staleness: out.max_staleness,
         edges_churned: out.edges_churned,
         frames_dropped_by_churn: out.meter.churn_dropped_frames(),
+        header_overhead_bytes: 0,
+        edge_payload_bytes: out.meter.edge_payload_bytes().unwrap_or_default(),
         wallclock_secs: t0.elapsed().as_secs_f64(),
     })
 }
@@ -547,7 +561,7 @@ pub fn run_simulated_pjrt(
 
 /// Input shape for the artifact-free linear model, keyed off the spec's
 /// dataset name (shape-compatible stand-ins, like the data generator).
-fn native_input(dataset: &str) -> (usize, usize, usize) {
+pub(crate) fn native_input(dataset: &str) -> (usize, usize, usize) {
     match dataset {
         "cifar" => (32, 32, 3),
         "fashion" => (28, 28, 1),

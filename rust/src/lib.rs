@@ -25,21 +25,23 @@
 //! via the PJRT C API (`xla` crate, CPU client, behind the `pjrt`
 //! cargo feature).
 //!
-//! ## Two execution engines
+//! ## Three execution engines
 //!
 //! Every algorithm is written once as a poll-driven state machine
-//! ([`algorithms::NodeStateMachine`]) and can be driven by either
-//! engine, selected through [`coordinator::ExperimentSpec::exec`]:
+//! ([`algorithms::NodeStateMachine`]) and can be driven by any of three
+//! engines — the first two selected through
+//! [`coordinator::ExperimentSpec::exec`], the third through its own
+//! entry points [`net::run_net_native`] / [`net::run_net_node`]:
 //!
-//! | | **Threaded** (`ExecMode::Threaded`) | **Virtual-time** (`ExecMode::Simulated`) |
-//! |---|---|---|
-//! | concurrency | one OS thread per node | single thread, event queue |
-//! | network | zero-latency, lossless channels | pluggable [`sim::LinkModel`]s: latency, bandwidth, drops + retransmit, per-edge overrides, stragglers |
-//! | topology | epoch-constant (static view) | dynamic: [`graph::ChurnSchedule`] outages + edge churn + node join/leave, epoch-stamped [`graph::TopologyView`] |
-//! | clock | wall-clock only | virtual nanoseconds ⇒ simulated *time-to-accuracy* |
-//! | scale | ~dozens of nodes | 512+ nodes in one process |
-//! | round policies | sync only | sync, or `async:<s>` bounded staleness |
-//! | determinism | bytes deterministic; timing racy | same seed ⇒ bit-identical [`coordinator::Report`] |
+//! | | **Threaded** (`ExecMode::Threaded`) | **Virtual-time** (`ExecMode::Simulated`) | **Net** ([`net`]) |
+//! |---|---|---|---|
+//! | concurrency | one OS thread per node | single thread, event queue | one OS thread + TCP sockets per node; or one process per node (`repro node`) |
+//! | network | zero-latency, lossless channels | pluggable [`sim::LinkModel`]s: latency, bandwidth, drops + retransmit, per-edge overrides, stragglers | real TCP streams (loopback or routable), framed wire protocol ([`net::wire`]) |
+//! | topology | epoch-constant (static view) | dynamic: [`graph::ChurnSchedule`] outages + edge churn + node join/leave, epoch-stamped [`graph::TopologyView`] | static universe; a crashed peer maps onto the churn teardown lifecycle |
+//! | clock | wall-clock only | virtual nanoseconds ⇒ simulated *time-to-accuracy* | wall-clock (time-to-accuracy measured, not forecast) |
+//! | scale | ~dozens of nodes | 512+ nodes in one process | 64+ nodes loopback; multi-process via `repro node` |
+//! | round policies | sync only | sync, or `async:<s>` bounded staleness | sync, or `async:<s>` off real arrivals |
+//! | determinism | bytes deterministic; timing racy | same seed ⇒ bit-identical [`coordinator::Report`] | payload bytes bit-identical to the sim per directed edge; sync trajectory bit-identical too |
 //!
 //! Use the **threaded** engine to benchmark real wall-clock round costs
 //! with the PJRT artifacts at paper scale (8 nodes).  Use the
@@ -50,7 +52,43 @@
 //! at all when paired with the native softmax backend
 //! ([`coordinator::run_simulated_native`]).  The zero-latency lossless
 //! link reproduces the threaded engine's byte accounting exactly
-//! (pinned by the `sim` test suite).
+//! (pinned by the `sim` test suite).  Use the **net** engine to run the
+//! byte-exact codec frames over actual sockets: `repro launch --nodes N`
+//! spawns a whole localhost deployment in one process (and
+//! `--verify-bytes` checks its per-edge payload bytes against the sim's
+//! prediction), while `repro node --node I --peers a0,a1,…` runs a
+//! single node against explicit addresses for real multi-process
+//! deployments.
+//!
+//! ## The wire format (net engine)
+//!
+//! [`net::wire`] frames every [`comm::Msg`] with a fixed 24-byte
+//! little-endian header:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        0x4345434C ("CECL")
+//!      4     2  version      1
+//!      6     1  kind         0=Hello 1=Dense 2=Frame 3=Scalar 4=Bye
+//!      7     1  reserved     must be 0
+//!      8     4  src          sender node id
+//!     12     4  epoch        edge incarnation (churn lifecycle stamp)
+//!     16     4  round        sender's round counter
+//!     20     4  payload_len  bytes following the header
+//! ```
+//!
+//! The payload is the codec's byte-exact `Frame` (or the dense/scalar
+//! encoding of the corresponding `Msg`) — identical to what the other
+//! engines meter, which is what makes cross-engine byte accounting
+//! comparable.  Framing rules: `Hello`/`Bye` carry no payload; `Dense`
+//! payloads must be a multiple of 4; `Scalar` is exactly 8 bytes; a
+//! stream ending mid-message is a protocol error (`CommError::Corrupt`)
+//! while EOF at a message boundary without a preceding `Bye` is crash
+//! semantics (`CommError::Disconnected` → churn teardown).  Header
+//! bytes are metered separately
+//! ([`coordinator::Report::header_overhead_bytes`]) so `payload_bytes`
+//! — the paper's send-volume quantity — stays engine-comparable; the
+//! in-process engines report 0 overhead.
 //!
 //! ## Quick start
 //!
@@ -177,8 +215,9 @@
 //! | [`compress::codec`] | **edge codecs**: `EdgeCodec`/`Frame`/`EdgeCtx`/`CodecSpec`, identity / rand-k (explicit + values-only wire) / top-k / QSGD / sign / low-rank / error feedback |
 //! | [`comm`] | `Msg` (dense / sparse / codec frame / scalar), byte meter (incl. churn-drop counters), threaded bus |
 //! | [`algorithms`] | `NodeAlgorithm` + `NodeStateMachine` protocol drivers (C-ECL family, D-PSGD, PowerGossip, and the rivals CHOCO-SGD / LEAD), `RoundPolicy` (sync / bounded-staleness async), per-edge lifecycle |
-//! | [`coordinator`] | `ExperimentSpec` → `Report` on either engine |
+//! | [`coordinator`] | `ExperimentSpec` → `Report` on the in-process engines |
 //! | [`sim`] | virtual-time engine: event queue, link models (incl. per-edge overrides), stragglers, first-class churn events |
+//! | [`net`] | real-socket engine: framed wire protocol ([`net::wire`]), per-node TCP runtime with reader threads, localhost launcher + multi-process node entry |
 //! | [`experiments`] | tables, figures, ablations, simulated time-to-accuracy (churn ladder) |
 //! | [`graph`] | topologies, `TopologyView` (epoch-stamped live snapshot), `ChurnSchedule` (outage / edge churn / node join-leave / random rule) |
 //! | [`data`] | synthetic datasets + the heterogeneity axis: homogeneous / heterogeneous(8-of-10) / **Dirichlet(α)** label-skew partitions |
@@ -255,6 +294,7 @@ pub mod graph;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod quadratic;
 pub mod runtime;
 pub mod sim;
@@ -271,6 +311,7 @@ pub mod prelude {
     pub use crate::graph::{ChurnSchedule, EdgeLife, Graph, Topology,
                            TopologyView};
     pub use crate::metrics::History;
+    pub use crate::net::{run_net_native, run_net_node, NetConfig};
     pub use crate::quadratic::QuadraticNetwork;
     pub use crate::runtime::Engine;
     pub use crate::sim::{LinkSpec, SimConfig};

@@ -9,8 +9,13 @@
 //! repro theory   [--rounds N --dim D ...]                   Theorem 1 validation
 //! repro train    --algorithm cecl:0.1 [--partition hetero]  one run
 //! repro train    --codec qsgd:4 | ef+top_k:0.01 | ...       codec run
+//! repro launch   --nodes 8 --codec rand_k:0.1 [--verify-bytes]   TCP deployment
+//! repro node     --node 0 --peers ip:port,... [--listen ip:port] one process
 //! repro ablation-naive | ablation-warmup | ablation-wire
 //! ```
+
+use std::net::{SocketAddr, TcpListener};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -21,6 +26,7 @@ use cecl::experiments::{ablations, fig1, sim as sim_exp, tables, theory,
                         Sizing};
 use cecl::graph::{ChurnSchedule, Graph, Topology};
 use cecl::model::Manifest;
+use cecl::net::{run_net_native, run_net_node, NetConfig};
 use cecl::runtime::Engine;
 use cecl::sim::{LinkSpec, SimConfig};
 use cecl::util::cli::Args;
@@ -243,6 +249,126 @@ fn main() -> Result<()> {
                 );
             }
         }
+        "launch" => {
+            // Real-socket run: a full localhost TCP deployment in one
+            // process — one listener, one worker thread, and one
+            // framed-wire runtime per node ("the byte-exact Frame wire
+            // over TCP").  Artifact-free like `sim`.
+            let sizing = Sizing::from_args(&args);
+            // Same warmup default as `sim`, so `--verify-bytes`
+            // compares byte counts of identical experiments.
+            let algorithm = pick_algorithm(&args, &sizing, false)?;
+            let topo_name = args.get_str("topology", "ring");
+            let verify_bytes = args.flag("verify-bytes");
+            let net = net_config(&args);
+            check_unknown(&args)?;
+            let topology = Topology::from_name(&topo_name)
+                .ok_or_else(|| anyhow!("unknown topology {topo_name}"))?;
+            let graph = Graph::build(topology, sizing.nodes);
+            let ds = sizing.datasets.first().cloned().unwrap();
+            let partition = sizing.partition.unwrap_or(Partition::Homogeneous);
+            let mut spec = sizing.spec_base(&ds, partition);
+            spec.algorithm = algorithm;
+            spec.verbose = true;
+            let report = run_net_native(&spec, &graph, &net)?;
+            println!(
+                "\n{} on {} ({} nodes over loopback TCP, rounds {}): \
+                 final acc {:.3}, max lag {} rounds, \
+                 sent {:.0} KB/node/epoch payload \
+                 + {:.0} KB total wire headers, wallclock {:.2}s",
+                report.algorithm,
+                topology.name(),
+                sizing.nodes,
+                spec.rounds.name(),
+                report.final_accuracy,
+                report.max_staleness,
+                report.mean_bytes_per_epoch / 1024.0,
+                report.header_overhead_bytes as f64 / 1024.0,
+                report.wallclock_secs
+            );
+            if verify_bytes {
+                // Acceptance gate: the socket deployment's per-edge
+                // payload bytes must equal the virtual-time engine's
+                // prediction for the same spec and seed.
+                let mut sim_spec = spec.clone();
+                sim_spec.verbose = false;
+                sim_spec.exec = ExecMode::Simulated(SimConfig::default());
+                let predicted = run_simulated_native(&sim_spec, &graph)?;
+                if predicted.edge_payload_bytes != report.edge_payload_bytes
+                    || predicted.total_bytes != report.total_bytes
+                {
+                    return Err(anyhow!(
+                        "verify-bytes: socket payload bytes diverge from \
+                         the sim prediction (net {} B vs sim {} B total)",
+                        report.total_bytes,
+                        predicted.total_bytes
+                    ));
+                }
+                println!(
+                    "verify-bytes: OK — {} directed-edge slots match the \
+                     sim prediction exactly ({} payload B total)",
+                    report.edge_payload_bytes.len(),
+                    report.total_bytes
+                );
+            }
+        }
+        "node" => {
+            // One node of a multi-process deployment: every process gets
+            // the same spec and the same full --peers table (its own
+            // entry included) and derives its data partition from the
+            // shared seed — no coordinator.
+            let sizing = Sizing::from_args(&args);
+            let algorithm = pick_algorithm(&args, &sizing, false)?;
+            let node = args.get("node", 0usize);
+            let listen = args.get_opt::<String>("listen");
+            let peers = args.get_str("peers", "");
+            let topo_name = args.get_str("topology", "ring");
+            let net = net_config(&args);
+            check_unknown(&args)?;
+            let peer_addrs: Vec<SocketAddr> = peers
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| {
+                    p.trim().parse().map_err(|_| {
+                        anyhow!("--peers `{p}`: expected ip:port")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            if peer_addrs.len() != sizing.nodes {
+                return Err(anyhow!(
+                    "--peers lists {} addresses for --nodes {}",
+                    peer_addrs.len(),
+                    sizing.nodes
+                ));
+            }
+            if node >= sizing.nodes {
+                return Err(anyhow!("--node {node} out of range"));
+            }
+            let topology = Topology::from_name(&topo_name)
+                .ok_or_else(|| anyhow!("unknown topology {topo_name}"))?;
+            let graph = Graph::build(topology, sizing.nodes);
+            let ds = sizing.datasets.first().cloned().unwrap();
+            let partition = sizing.partition.unwrap_or(Partition::Homogeneous);
+            let mut spec = sizing.spec_base(&ds, partition);
+            spec.algorithm = algorithm;
+            spec.verbose = true;
+            let listen_addr =
+                listen.unwrap_or_else(|| peer_addrs[node].to_string());
+            let listener = TcpListener::bind(&listen_addr).map_err(|e| {
+                anyhow!("binding {listen_addr}: {e}")
+            })?;
+            let summary =
+                run_net_node(&spec, &graph, node, listener, &peer_addrs, &net)?;
+            println!(
+                "node {} done: final acc {:.3}, sent {:.0} KB payload \
+                 + {:.0} KB wire headers, max lag {} rounds",
+                summary.node,
+                summary.final_accuracy,
+                summary.bytes_sent as f64 / 1024.0,
+                summary.header_overhead_bytes as f64 / 1024.0,
+                summary.max_staleness
+            );
+        }
         "ablation-naive" => {
             let sizing = Sizing::from_args(&args);
             check_unknown(&args)?;
@@ -321,6 +447,19 @@ fn pick_algorithm(args: &Args, sizing: &Sizing,
         *dfe = dense_first_epoch;
     }
     Ok(alg)
+}
+
+/// Socket-engine transport knobs shared by `launch` and `node`.
+fn net_config(args: &Args) -> NetConfig {
+    NetConfig {
+        connect_timeout: Duration::from_secs(
+            args.get("connect-timeout-secs", 10u64),
+        ),
+        stall_timeout: Duration::from_secs(
+            args.get("stall-timeout-secs", 30u64),
+        ),
+        kill: None,
+    }
 }
 
 /// Parse `--straggler n:factor[,n:factor...]` into `SimConfig`
@@ -440,6 +579,16 @@ commands:
                    --churn it sweeps static vs churn, with --heterogeneity
                    dirichlet:A it sweeps the α ladder {A, 1.0, ∞})
                    --target-acc F --codec SPEC[,SPEC...]
+  launch           real-socket run: spawns a full localhost TCP
+                   deployment in one process (the byte-exact codec
+                   frames over a framed wire protocol); artifact-free
+                   --verify-bytes (assert per-edge payload bytes match
+                   the sim prediction for the same seed)
+                   --connect-timeout-secs N --stall-timeout-secs N
+  node             one node of a multi-process deployment:
+                   --node I --peers ip:port,... (full table, own entry
+                   included; all processes share spec + seed)
+                   [--listen ip:port] (defaults to own --peers entry)
   ablation-naive   Eq.11 vs Eq.13 dual compression
   ablation-warmup  first-epoch dense on/off
   ablation-wire    explicit-index vs values-only rand-k wire modes
@@ -452,7 +601,8 @@ codec specs (--codec, also `--algorithm cecl:SPEC`):
   dual rule; low_rank:R is PowerGossip's compressor on the C-ECL wire,
   byte-identical to powergossip:R per neighbor per round)
 
-round policies (--rounds, virtual-time engine only for async):
+round policies (--rounds; async runs on the virtual-time and socket
+engines):
   sync             bulk-synchronous rounds (default; pre-async pinned
                    trajectory)
   async:S          per-edge clocks, gossip-style: a node steps once every

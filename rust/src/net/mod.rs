@@ -1,0 +1,458 @@
+//! The third execution engine: real sockets.
+//!
+//! The threaded bus and the virtual-time sim are in-process stand-ins;
+//! this module drives the exact same `algorithms::NodeStateMachine`s
+//! over actual TCP streams — the byte-exact codec `Frame` wire format
+//! promoted to a length-prefixed binary protocol ([`wire`]).  Three
+//! layers:
+//!
+//! * [`wire`] — the framed protocol: 24-byte header (magic / version /
+//!   kind / src / epoch / round / payload length) + payload, with the
+//!   header bytes metered apart from payload bytes so the paper's
+//!   payload accounting stays engine-comparable;
+//! * [`runtime`] (crate-private) — per-node mesh rendezvous over
+//!   `TcpListener`/`TcpStream`, one reader thread per neighbor, and a
+//!   round pump that mirrors the sim's delivery admission, so a sync
+//!   run is byte- *and* trajectory-identical to the simulator while
+//!   `--rounds async:<s>` runs event-driven off real arrivals — the
+//!   first async execution off the simulator;
+//! * this module — the deployment layer: [`run_net_native`] spawns a
+//!   whole localhost deployment in one process (one OS thread + one
+//!   listener per node) and aggregates a standard
+//!   [`Report`](crate::coordinator::Report); [`run_net_node`] runs a
+//!   single node against explicit peer addresses (the `repro node`
+//!   multi-process path).
+//!
+//! Fault model: a peer that vanishes without the protocol's `Bye`
+//! (crash, kill -9, reset) maps onto the PR-5 churn lifecycle — the
+//! typed `CommError` kills the edge in the local `TopologyView`, buffered
+//! frames drain as churn drops, and the machine gets the same
+//! `on_topology` teardown a simulated churn event delivers — so a
+//! deployment survives node loss instead of deadlocking.  The
+//! [`NetConfig::kill`] hook injects exactly that fault for tests.
+
+pub mod wire;
+
+pub(crate) mod runtime;
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::algorithms::{build_machine, BuildCtx, DualPath};
+use crate::comm::Meter;
+use crate::coordinator::{build_schedule, native_input, ExperimentSpec, Report,
+                         NATIVE_SIM_BATCH};
+use crate::data::{build_node_datasets, Dataset, SyntheticSpec};
+use crate::graph::Graph;
+use crate::metrics::{EpochRecord, History, Mean};
+use crate::model::DatasetManifest;
+use crate::sim::{LocalUpdate, Schedule, SoftmaxLocal};
+
+use runtime::{connect_mesh, NetNodeRuntime, NodeOutcome};
+
+/// Socket-engine knobs (transport only — the experiment itself is the
+/// same [`ExperimentSpec`] the other engines take).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Mesh rendezvous budget: how long dials retry and accepts wait
+    /// while peers come up.
+    pub connect_timeout: Duration,
+    /// How long a round may sit with no traffic before the node calls
+    /// the deployment wedged (a crashed peer closes its socket and is
+    /// handled; a *hung* peer is only caught by this).
+    pub stall_timeout: Duration,
+    /// Fault injection: `(node, round)` makes that node slam its
+    /// sockets shut (no `Bye`) right after that round's `round_end` —
+    /// crash semantics for the churn-lifecycle tests.
+    pub kill: Option<(usize, usize)>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            connect_timeout: Duration::from_secs(10),
+            stall_timeout: Duration::from_secs(30),
+            kill: None,
+        }
+    }
+}
+
+/// Per-node result of a multi-process [`run_net_node`] run (the
+/// aggregated `Report` lives with whoever launched the processes).
+#[derive(Debug, Clone)]
+pub struct NodeRunSummary {
+    pub node: usize,
+    /// Payload bytes this node sent (first-copy, headers excluded).
+    pub bytes_sent: u64,
+    /// Wire framing overhead this node sent.
+    pub header_overhead_bytes: u64,
+    pub max_staleness: usize,
+    /// This node's own accuracy at the last eval boundary.
+    pub final_accuracy: f64,
+}
+
+/// Everything the deployment shares, derived once from the spec.
+struct Prep {
+    ds: DatasetManifest,
+    sched: Schedule,
+    trains: Vec<Dataset>,
+    test: Arc<Dataset>,
+    init_w: Vec<f32>,
+    classes: usize,
+}
+
+fn prepare(spec: &ExperimentSpec, graph: &Graph) -> Result<Prep> {
+    ensure!(
+        spec.algorithm.is_decentralized(),
+        "net engine: {} is not decentralized — a socket deployment needs \
+         nodes that exchange (use the threaded or sim engine for SGD)",
+        spec.algorithm.name()
+    );
+    ensure!(
+        graph.n() == spec.nodes,
+        "net engine: graph has {} nodes, spec expects {}",
+        graph.n(),
+        spec.nodes
+    );
+    let classes = 10;
+    let ds = DatasetManifest::synthetic_linear(
+        &spec.dataset,
+        native_input(&spec.dataset),
+        classes,
+        NATIVE_SIM_BATCH,
+        NATIVE_SIM_BATCH,
+    );
+    let sched = build_schedule(spec, spec.train_per_node, ds.batch)?;
+    let (h, w, c) = ds.input;
+    let data_spec = SyntheticSpec::for_dataset(
+        &spec.dataset, h, w, c, classes, spec.seed,
+    );
+    let (trains, test) = build_node_datasets(
+        &data_spec,
+        spec.partition,
+        spec.nodes,
+        spec.train_per_node,
+        spec.test_size,
+    );
+    Ok(Prep {
+        init_w: vec![0.0f32; ds.d_pad],
+        ds,
+        sched,
+        trains,
+        test: Arc::new(test),
+        classes,
+    })
+}
+
+/// Build one node's protocol machine + local numerics — identical
+/// construction to the sim's native path, which is what makes the
+/// cross-engine byte/trajectory identity hold.
+fn build_protocol(
+    spec: &ExperimentSpec,
+    graph: &Arc<Graph>,
+    prep: &Prep,
+    node: usize,
+    train: Dataset,
+) -> Result<(Box<dyn crate::algorithms::NodeStateMachine>,
+             Box<dyn LocalUpdate>)> {
+    let ctx = BuildCtx {
+        node,
+        graph: Arc::clone(graph),
+        manifest: prep.ds.clone(),
+        seed: spec.seed,
+        eta: spec.eta,
+        local_steps: spec.local_steps,
+        rounds_per_epoch: prep.sched.rounds_per_epoch,
+        dual_path: DualPath::Native,
+        runtime: None,
+        round_policy: spec.rounds,
+    };
+    let machine = build_machine(&spec.algorithm, &ctx)?;
+    let local: Box<dyn LocalUpdate> = Box::new(SoftmaxLocal::new(
+        node,
+        train,
+        Arc::clone(&prep.test),
+        prep.classes,
+        spec.seed,
+        spec.eta,
+        NATIVE_SIM_BATCH,
+        spec.local_steps,
+    )?);
+    Ok((machine, local))
+}
+
+enum EvalMsg {
+    /// `(node, epoch, accuracy, loss, train_loss)`.
+    Eval(usize, usize, f64, f64, f64),
+    /// The node stopped reporting (killed or failed): stop waiting on
+    /// its eval slots.
+    Dead(usize),
+}
+
+/// Run a whole localhost deployment in one process: one listener, one
+/// worker thread, and one socket runtime per node, all loopback TCP.
+/// The artifact-free softmax backend supplies the numerics (like
+/// `run_simulated_native`), so this needs no PJRT and no network beyond
+/// `127.0.0.1`.
+pub fn run_net_native(spec: &ExperimentSpec, graph: &Graph,
+                      net: &NetConfig) -> Result<Report> {
+    let t0 = std::time::Instant::now();
+    let prep = prepare(spec, graph)?;
+    let graph = Arc::new(graph.clone());
+    let n = spec.nodes;
+    if let Some((node, round)) = net.kill {
+        ensure!(node < n, "net: kill target {node} out of range");
+        ensure!(
+            round < prep.sched.total_rounds(),
+            "net: kill round {round} is past the schedule"
+        );
+    }
+
+    // Bind every listener before spawning anything, so the full address
+    // table exists up front and rendezvous cannot race the launcher.
+    let mut listeners = Vec::with_capacity(n);
+    let mut addrs: Vec<SocketAddr> = Vec::with_capacity(n);
+    for node in 0..n {
+        let l = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| anyhow!("net: binding node {node} listener: {e}"))?;
+        addrs.push(l.local_addr()?);
+        listeners.push(l);
+    }
+
+    let meter = Meter::with_edges(n, graph.edges().len());
+    let abort = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<EvalMsg>();
+
+    let mut history = History::default();
+    let mut outcomes: Vec<NodeOutcome> = Vec::new();
+    let sched = &prep.sched;
+    let prep_ref = &prep;
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for (node, (listener, train)) in
+            listeners.into_iter().zip(prep_ref.trains.iter().cloned()).enumerate()
+        {
+            let tx = tx.clone();
+            let graph = Arc::clone(&graph);
+            let meter = Arc::clone(&meter);
+            let abort = Arc::clone(&abort);
+            let addrs = addrs.clone();
+            handles.push(s.spawn(move || -> Result<NodeOutcome> {
+                let mut on_eval =
+                    |epoch: usize, acc: f64, loss: f64, tl: f64| -> Result<()> {
+                        tx.send(EvalMsg::Eval(node, epoch, acc, loss, tl))
+                            .map_err(|_| anyhow!("collector closed"))
+                    };
+                let kill_after = match net.kill {
+                    Some((k, r)) if k == node => Some(r),
+                    _ => None,
+                };
+                let res = (|| -> Result<NodeOutcome> {
+                    let (machine, local) =
+                        build_protocol(spec, &graph, prep_ref, node, train)?;
+                    let links = connect_mesh(node, &graph, listener, &addrs,
+                                             &meter, net.connect_timeout)?;
+                    let rt = NetNodeRuntime::new(
+                        node,
+                        Arc::clone(&graph),
+                        links,
+                        Arc::clone(&meter),
+                        spec.rounds,
+                        net.stall_timeout,
+                        Arc::clone(&abort),
+                    );
+                    rt.run(machine, local, prep_ref.init_w.clone(), sched,
+                           kill_after, &mut on_eval)
+                })();
+                match &res {
+                    Ok(o) if o.killed => {
+                        let _ = tx.send(EvalMsg::Dead(node));
+                    }
+                    Ok(_) => {}
+                    Err(_) => {
+                        // Unblock siblings waiting on a round this node
+                        // will never finish.
+                        abort.store(true, Ordering::Relaxed);
+                        let _ = tx.send(EvalMsg::Dead(node));
+                    }
+                }
+                res
+            }));
+        }
+        drop(tx);
+
+        // Collector: per-epoch slots keyed by node, means taken in node
+        // order (bit-deterministic); a dead node's slots stop counting.
+        type Slot = Vec<Option<(f64, f64, f64)>>;
+        let mut pending: BTreeMap<usize, Slot> = BTreeMap::new();
+        let mut dead = vec![false; n];
+        let mut done = 0usize;
+        let expected = sched.eval_rounds.len();
+        let mut complete_ready =
+            |pending: &mut BTreeMap<usize, Slot>, dead: &[bool],
+             history: &mut History, done: &mut usize| {
+                loop {
+                    let Some((&epoch, slots)) = pending.iter().next() else {
+                        return;
+                    };
+                    let full = slots
+                        .iter()
+                        .enumerate()
+                        .all(|(i, s)| s.is_some() || dead[i]);
+                    if !full {
+                        return;
+                    }
+                    let slots = pending.remove(&epoch).expect("just observed");
+                    let (mut a, mut l, mut t) =
+                        (Mean::default(), Mean::default(), Mean::default());
+                    let mut reporting = 0usize;
+                    for sv in slots.into_iter().flatten() {
+                        a.add(sv.0);
+                        l.add(sv.1);
+                        t.add(sv.2);
+                        reporting += 1;
+                    }
+                    if reporting > 0 {
+                        let rec = EpochRecord {
+                            epoch,
+                            mean_accuracy: a.take(),
+                            mean_loss: l.take(),
+                            train_loss: t.take(),
+                            cum_bytes_per_node: meter.mean_bytes_per_node(),
+                            sim_time_secs: 0.0,
+                        };
+                        if spec.verbose {
+                            println!(
+                                "[net:{}] epoch {:>4}: acc {:.3} loss {:.3} \
+                                 train {:.3} sent/node {:.0} KB ({} nodes)",
+                                spec.algorithm.name(),
+                                rec.epoch,
+                                rec.mean_accuracy,
+                                rec.mean_loss,
+                                rec.train_loss,
+                                rec.cum_bytes_per_node / 1024.0,
+                                reporting
+                            );
+                        }
+                        history.push(rec);
+                    }
+                    *done += 1;
+                }
+            };
+        while done < expected {
+            match rx.recv() {
+                Ok(EvalMsg::Eval(node, epoch, acc, loss, tl)) => {
+                    let entry = pending
+                        .entry(epoch)
+                        .or_insert_with(|| vec![None; n]);
+                    entry[node] = Some((acc, loss, tl));
+                    complete_ready(&mut pending, &dead, &mut history, &mut done);
+                }
+                Ok(EvalMsg::Dead(node)) => {
+                    dead[node] = true;
+                    // A death may complete epochs that were only waiting
+                    // on this node's slot.
+                    complete_ready(&mut pending, &dead, &mut history, &mut done);
+                }
+                Err(_) => break, // all workers exited (possibly with error)
+            }
+        }
+        for h in handles {
+            outcomes.push(
+                h.join().map_err(|_| anyhow!("net: node thread panicked"))??,
+            );
+        }
+        Ok(())
+    })?;
+
+    let total_bytes = meter.total_bytes();
+    Ok(Report {
+        algorithm: spec.algorithm.name(),
+        dataset: spec.dataset.clone(),
+        partition: spec.partition.name(),
+        topology: "graph".to_string(),
+        final_accuracy: history.final_accuracy(),
+        best_accuracy: history.best_accuracy(),
+        history,
+        mean_bytes_per_epoch: total_bytes as f64 / n as f64
+            / spec.epochs as f64,
+        total_bytes,
+        retransmit_bytes: 0,
+        sim_time_secs: None,
+        max_staleness: outcomes
+            .iter()
+            .map(|o| o.max_staleness)
+            .max()
+            .unwrap_or(0),
+        edges_churned: meter.edges_churned(),
+        frames_dropped_by_churn: meter.churn_dropped_frames(),
+        header_overhead_bytes: meter.total_header_overhead_bytes(),
+        edge_payload_bytes: meter.edge_payload_bytes().unwrap_or_default(),
+        wallclock_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Run exactly one node of a deployment in this process, rendezvousing
+/// with peers at explicit socket addresses — the `repro node` path for
+/// real multi-process (and, with routable addresses, multi-host)
+/// deployments.  Every process must be started with the same spec and
+/// the same full address table; data partitions are derived
+/// deterministically from the shared seed, so no coordinator is needed.
+pub fn run_net_node(
+    spec: &ExperimentSpec,
+    graph: &Graph,
+    node: usize,
+    listener: TcpListener,
+    peer_addrs: &[SocketAddr],
+    net: &NetConfig,
+) -> Result<NodeRunSummary> {
+    ensure!(node < spec.nodes, "net: node {node} out of range");
+    ensure!(
+        peer_addrs.len() == spec.nodes,
+        "net: address table has {} entries for {} nodes",
+        peer_addrs.len(),
+        spec.nodes
+    );
+    let mut prep = prepare(spec, graph)?;
+    let graph = Arc::new(graph.clone());
+    let train = prep.trains.swap_remove(node);
+    let (machine, local) = build_protocol(spec, &graph, &prep, node, train)?;
+    let meter = Meter::with_edges(spec.nodes, graph.edges().len());
+    let links = connect_mesh(node, &graph, listener, peer_addrs, &meter,
+                             net.connect_timeout)?;
+    let rt = NetNodeRuntime::new(
+        node,
+        Arc::clone(&graph),
+        links,
+        Arc::clone(&meter),
+        spec.rounds,
+        net.stall_timeout,
+        Arc::new(AtomicBool::new(false)),
+    );
+    let mut final_accuracy = f64::NAN;
+    let verbose = spec.verbose;
+    let mut on_eval = |epoch: usize, acc: f64, loss: f64, tl: f64| -> Result<()> {
+        final_accuracy = acc;
+        if verbose {
+            println!(
+                "[net node {node}] epoch {epoch:>4}: acc {acc:.3} \
+                 loss {loss:.3} train {tl:.3}"
+            );
+        }
+        Ok(())
+    };
+    let outcome = rt.run(machine, local, prep.init_w.clone(), &prep.sched,
+                         None, &mut on_eval)?;
+    Ok(NodeRunSummary {
+        node,
+        bytes_sent: meter.bytes_sent(node),
+        header_overhead_bytes: meter.header_overhead_bytes(node),
+        max_staleness: outcome.max_staleness,
+        final_accuracy,
+    })
+}

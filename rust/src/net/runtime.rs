@@ -1,0 +1,704 @@
+//! Per-node socket runtime: mesh rendezvous, reader threads, and the
+//! round pump that drives a `NodeStateMachine` over real TCP streams.
+//!
+//! The pump mirrors the virtual-time engine's delivery admission
+//! exactly (`sim::World::pump`): per-peer FIFO inboxes iterated in key
+//! order, `Sync` holding every message until the receiver's round
+//! matches its stamp, `Async` handing over each FIFO head immediately.
+//! That shared admission logic is what makes a sync net run
+//! byte-for-byte *and* trajectory-identical to the sim for the same
+//! spec and seed.
+//!
+//! Failure model: a peer that closes its stream without a `Bye` (crash,
+//! kill, reset) surfaces as a typed [`CommError`] and maps onto the
+//! PR-5 churn lifecycle — the edge is killed in the local
+//! `TopologyView`, buffered frames drain as churn drops, and the
+//! machine gets the same `on_topology` teardown a simulated
+//! `DownKind::Churn` delivers.  A `Bye` is a clean finish: the edge
+//! stays live and the runtime simply stops expecting traffic from it.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::algorithms::{NodeStateMachine, RoundPolicy};
+use crate::comm::{directed_edge_index, CommError, Meter, Msg, Outbox};
+use crate::graph::{Graph, TopologyView};
+use crate::metrics::Mean;
+use crate::sim::{LocalUpdate, Schedule};
+
+use super::wire::{self, WireBody, WireMsg, HEADER_BYTES};
+
+/// What a reader thread reports into the node's event channel.
+pub(crate) enum NetEvent {
+    /// A decoded payload from `peer`, carrying the sender's round stamp
+    /// and the edge incarnation it was encoded for.
+    Msg { peer: usize, round: usize, epoch: u32, msg: Msg },
+    /// The peer sent `Bye`: it finished its rounds cleanly.
+    PeerDone { peer: usize },
+    /// The peer's stream died without a `Bye` — crash semantics.
+    PeerLost { peer: usize, error: CommError },
+}
+
+/// One node's live connections after the mesh rendezvous.
+pub(crate) struct Links {
+    /// Write half per neighbor (the reader half is owned by the reader
+    /// threads via `try_clone`).
+    pub writers: BTreeMap<usize, TcpStream>,
+    /// Merged event stream from all reader threads.
+    pub rx: Receiver<NetEvent>,
+    pub readers: Vec<JoinHandle<()>>,
+}
+
+/// Establish the full neighbor mesh for `node`: dial every neighbor
+/// with a larger id, accept from every neighbor with a smaller id
+/// (each undirected edge gets exactly one stream, opened by its lower
+/// endpoint... the *smaller* id dials so the ordering is canonical).
+/// Dials retry until `timeout` — peers may start later than us — and
+/// every accepted stream must open with a `Hello` naming an expected
+/// neighbor.
+pub(crate) fn connect_mesh(
+    node: usize,
+    graph: &Graph,
+    listener: TcpListener,
+    peer_addrs: &[SocketAddr],
+    meter: &Arc<Meter>,
+    timeout: Duration,
+) -> Result<Links> {
+    let deadline = Instant::now() + timeout;
+    let dial_to: Vec<usize> = graph
+        .neighbors(node)
+        .iter()
+        .copied()
+        .filter(|&j| j > node)
+        .collect();
+    let accept_from: BTreeSet<usize> = graph
+        .neighbors(node)
+        .iter()
+        .copied()
+        .filter(|&j| j < node)
+        .collect();
+
+    // Accept in a helper thread so dialing and accepting interleave —
+    // sequencing them can deadlock on cyclic topologies.
+    let expected = accept_from.clone();
+    let acceptor = std::thread::spawn(move || -> Result<BTreeMap<usize, TcpStream>> {
+        let mut got: BTreeMap<usize, TcpStream> = BTreeMap::new();
+        listener
+            .set_nonblocking(true)
+            .context("listener set_nonblocking")?;
+        while got.len() < expected.len() {
+            if Instant::now() >= deadline {
+                let missing: Vec<usize> = expected
+                    .iter()
+                    .filter(|j| !got.contains_key(j))
+                    .copied()
+                    .collect();
+                bail!("node {node}: timed out accepting from {missing:?}");
+            }
+            let stream = match listener.accept() {
+                Ok((s, _)) => s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                Err(e) => bail!("node {node}: accept failed: {e}"),
+            };
+            stream.set_nonblocking(false).context("accepted stream")?;
+            // Bound the handshake read so a stray connection cannot
+            // wedge the rendezvous.  Read unbuffered: a BufReader's
+            // readahead could swallow round-0 bytes a fast dialer sends
+            // right behind its Hello.
+            stream
+                .set_read_timeout(Some(Duration::from_secs(5)))
+                .context("handshake read timeout")?;
+            let hello = wire::read_message(&mut &stream)
+                .map_err(|e| anyhow!("node {node}: handshake: {e}"))?
+                .ok_or_else(|| {
+                    anyhow!("node {node}: peer closed before Hello")
+                })?;
+            ensure!(
+                matches!(hello.body, WireBody::Hello),
+                "node {node}: expected Hello, got a data message"
+            );
+            ensure!(
+                expected.contains(&hello.src) && !got.contains_key(&hello.src),
+                "node {node}: unexpected Hello from {}",
+                hello.src
+            );
+            stream.set_read_timeout(None).context("clear read timeout")?;
+            got.insert(hello.src, stream);
+        }
+        Ok(got)
+    });
+
+    // Dial the larger-id neighbors, retrying while they come up.
+    let mut dialed: BTreeMap<usize, TcpStream> = BTreeMap::new();
+    for &j in &dial_to {
+        let addr = peer_addrs[j];
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        bail!("node {node}: dialing {j} at {addr}: {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        wire::write_message(&mut &stream, &WireMsg::hello(node))
+            .map_err(|e| anyhow!("node {node}: Hello to {j}: {e}"))?;
+        meter.record_header_overhead(node, HEADER_BYTES as u64);
+        dialed.insert(j, stream);
+    }
+
+    let accepted = acceptor
+        .join()
+        .map_err(|_| anyhow!("node {node}: acceptor panicked"))??;
+
+    let mut writers = BTreeMap::new();
+    let (tx, rx) = channel::<NetEvent>();
+    let mut readers = Vec::new();
+    for (peer, stream) in accepted.into_iter().chain(dialed) {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        let reader = stream
+            .try_clone()
+            .with_context(|| format!("node {node}: clone stream to {peer}"))?;
+        let tx = tx.clone();
+        readers.push(std::thread::spawn(move || {
+            reader_loop(node, peer, reader, tx)
+        }));
+        writers.insert(peer, stream);
+    }
+    drop(tx); // rx disconnects once every reader thread exits
+    Ok(Links { writers, rx, readers })
+}
+
+/// Decode frames off one stream into the shared event channel until
+/// the peer finishes (Bye then EOF) or fails.  Per-stream TCP ordering
+/// means a `PeerLost` is always this reader's final event, after every
+/// message that actually arrived.
+fn reader_loop(node: usize, peer: usize, stream: TcpStream,
+               tx: Sender<NetEvent>) {
+    let mut r = BufReader::new(stream);
+    let mut clean = false;
+    loop {
+        match wire::read_message(&mut r) {
+            Ok(Some(m)) => {
+                if m.src != peer {
+                    let _ = tx.send(NetEvent::PeerLost {
+                        peer,
+                        error: CommError::Corrupt {
+                            detail: format!(
+                                "stream from {peer} carried src {}",
+                                m.src
+                            ),
+                        },
+                    });
+                    return;
+                }
+                match m.body {
+                    WireBody::Payload(msg) => {
+                        if tx
+                            .send(NetEvent::Msg {
+                                peer,
+                                round: m.round,
+                                epoch: m.epoch,
+                                msg,
+                            })
+                            .is_err()
+                        {
+                            return; // runtime gone; nothing to report to
+                        }
+                    }
+                    WireBody::Bye => {
+                        clean = true;
+                        let _ = tx.send(NetEvent::PeerDone { peer });
+                    }
+                    WireBody::Hello => {
+                        let _ = tx.send(NetEvent::PeerLost {
+                            peer,
+                            error: CommError::Corrupt {
+                                detail: format!(
+                                    "mid-stream Hello from {peer}"
+                                ),
+                            },
+                        });
+                        return;
+                    }
+                }
+            }
+            Ok(None) => {
+                // Clean EOF: crash semantics unless a Bye preceded it.
+                if !clean {
+                    let _ = tx.send(NetEvent::PeerLost {
+                        peer,
+                        error: CommError::Disconnected { node, peer },
+                    });
+                }
+                return;
+            }
+            Err(e) => {
+                if !clean {
+                    let _ = tx.send(NetEvent::PeerLost { peer, error: e });
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// What one node's run produced (evals stream out via the callback).
+pub(crate) struct NodeOutcome {
+    pub max_staleness: usize,
+    /// True when the run ended via the intentional kill hook.
+    pub killed: bool,
+}
+
+/// The per-node engine: owns the sockets and drives one machine
+/// through the schedule.
+pub(crate) struct NetNodeRuntime {
+    node: usize,
+    graph: Arc<Graph>,
+    view: TopologyView,
+    policy: RoundPolicy,
+    writers: BTreeMap<usize, TcpStream>,
+    rx: Receiver<NetEvent>,
+    readers: Vec<JoinHandle<()>>,
+    meter: Arc<Meter>,
+    /// Per-peer FIFO of undelivered `(round, epoch, msg)` — the same
+    /// buffering the sim keeps per source.
+    inbox: BTreeMap<usize, VecDeque<(usize, u32, Msg)>>,
+    /// Peers whose streams died (edges already torn down).
+    lost: BTreeSet<usize>,
+    /// Peers that sent `Bye` (finished cleanly; edges stay live).
+    done_peers: BTreeSet<usize>,
+    /// Write failures observed mid-flush, pending the churn teardown
+    /// (which needs the machine and is applied at the next safe point).
+    pending_lost: Vec<(usize, CommError)>,
+    stall_timeout: Duration,
+    /// Cooperative abort: set when any sibling node in the deployment
+    /// fails, so survivors stop waiting on a round that can never
+    /// complete instead of riding out the full stall timeout.
+    abort: Arc<AtomicBool>,
+}
+
+impl NetNodeRuntime {
+    pub(crate) fn new(
+        node: usize,
+        graph: Arc<Graph>,
+        links: Links,
+        meter: Arc<Meter>,
+        policy: RoundPolicy,
+        stall_timeout: Duration,
+        abort: Arc<AtomicBool>,
+    ) -> NetNodeRuntime {
+        let view = TopologyView::full(graph.edges().len());
+        NetNodeRuntime {
+            node,
+            graph,
+            view,
+            policy,
+            writers: links.writers,
+            rx: links.rx,
+            readers: links.readers,
+            meter,
+            inbox: BTreeMap::new(),
+            lost: BTreeSet::new(),
+            done_peers: BTreeSet::new(),
+            pending_lost: Vec::new(),
+            stall_timeout,
+            abort,
+        }
+    }
+
+    /// Drive the machine through every round of the schedule.
+    /// `on_eval` receives `(epoch, accuracy, loss, train_loss)` at each
+    /// eval boundary.  `kill_after_round` ends the process abruptly
+    /// (no `Bye`) after that round's `round_end` — the fault-injection
+    /// hook the churn tests use.
+    pub(crate) fn run(
+        mut self,
+        machine: Box<dyn NodeStateMachine>,
+        local: Box<dyn LocalUpdate>,
+        w: Vec<f32>,
+        sched: &Schedule,
+        kill_after_round: Option<usize>,
+        on_eval: &mut dyn FnMut(usize, f64, f64, f64) -> Result<()>,
+    ) -> Result<NodeOutcome> {
+        let res = self.run_inner(machine, local, w, sched, kill_after_round,
+                                 on_eval);
+        if res.is_err() {
+            // Slam the streams so peers see EOF now instead of riding
+            // out their stall timeout on a node that already gave up.
+            self.close_streams();
+        }
+        res
+    }
+
+    fn run_inner(
+        &mut self,
+        mut machine: Box<dyn NodeStateMachine>,
+        mut local: Box<dyn LocalUpdate>,
+        mut w: Vec<f32>,
+        sched: &Schedule,
+        kill_after_round: Option<usize>,
+        on_eval: &mut dyn FnMut(usize, f64, f64, f64) -> Result<()>,
+    ) -> Result<NodeOutcome> {
+        let zeros = vec![0.0f32; w.len()];
+        let mut train_loss = Mean::default();
+        for round in 0..sched.total_rounds() {
+            let loss = match machine.zsum() {
+                Some(z) => {
+                    let z = z.to_vec();
+                    local.local_round(round, &mut w, &z, machine.alpha_deg())?
+                }
+                None => local.local_round(round, &mut w, &zeros,
+                                          machine.alpha_deg())?,
+            };
+            train_loss.add(loss);
+            let mut out = Outbox::new();
+            machine.round_begin(round, &self.view, &mut w, &mut out)?;
+            self.flush(&mut out, round)?;
+            self.settle_lost(machine.as_mut(), &mut w, round)?;
+            self.exchange(machine.as_mut(), &mut w, round)?;
+            machine.round_end(round, &self.view, &mut w)?;
+            if kill_after_round == Some(round) {
+                // Crash semantics: slam every stream shut with no Bye.
+                // Peers must map the resulting EOF onto churn teardown.
+                self.close_streams();
+                return Ok(NodeOutcome {
+                    max_staleness: machine.max_staleness_seen(),
+                    killed: true,
+                });
+            }
+            if let Some(&epoch) = sched.eval_rounds.get(&round) {
+                let (acc, eloss) = local.evaluate(&w)?;
+                on_eval(epoch, acc, eloss, train_loss.take())?;
+            }
+        }
+        self.shutdown_clean(sched.total_rounds())?;
+        Ok(NodeOutcome {
+            max_staleness: machine.max_staleness_seen(),
+            killed: false,
+        })
+    }
+
+    /// Pump the exchange phase of `round` until the machine's policy
+    /// gate opens — the socket equivalent of `sim::World::pump`, with
+    /// `rx.recv_timeout` standing in for the event queue.
+    fn exchange(&mut self, machine: &mut dyn NodeStateMachine,
+                w: &mut [f32], round: usize) -> Result<()> {
+        loop {
+            // Drain everything the readers have queued so far.
+            while let Ok(ev) = self.rx.try_recv() {
+                self.handle_event(ev, machine, w, round)?;
+            }
+            self.deliver_admissible(machine, w, round)?;
+            if machine.round_complete() {
+                return Ok(());
+            }
+            if self.abort.load(Ordering::Relaxed) {
+                bail!(
+                    "node {}: aborting round {round}: a sibling node failed",
+                    self.node
+                );
+            }
+            // Block for the next event; a stall here means a peer
+            // wedged without closing its socket.
+            match self.rx.recv_timeout(self.stall_timeout) {
+                Ok(ev) => self.handle_event(ev, machine, w, round)?,
+                Err(RecvTimeoutError::Timeout) => bail!(
+                    "node {}: round {round} stalled for {:?} waiting on \
+                     peers (policy {})",
+                    self.node,
+                    self.stall_timeout,
+                    self.policy.name()
+                ),
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Every reader exited; if the gate still won't open
+                    // the protocol can never finish.
+                    self.deliver_admissible(machine, w, round)?;
+                    if machine.round_complete() {
+                        return Ok(());
+                    }
+                    bail!(
+                        "node {}: all peers closed with round {round} \
+                         incomplete",
+                        self.node
+                    );
+                }
+            }
+        }
+    }
+
+    /// Feed every currently-admissible buffered message to the machine,
+    /// in peer-id order — the same deterministic order the sim uses.
+    fn deliver_admissible(&mut self, machine: &mut dyn NodeStateMachine,
+                          w: &mut [f32], round: usize) -> Result<()> {
+        loop {
+            let mut found: Option<usize> = None;
+            for (&src, q) in self.inbox.iter() {
+                if let Some(&(msg_round, _, _)) = q.front() {
+                    match self.policy {
+                        RoundPolicy::Sync => {
+                            ensure!(
+                                msg_round >= round,
+                                "net: node {} holds a stale round-{msg_round} \
+                                 message from {src} while in round {round}",
+                                self.node
+                            );
+                            if msg_round == round {
+                                found = Some(src);
+                                break;
+                            }
+                        }
+                        RoundPolicy::Async { .. } => {
+                            found = Some(src);
+                            break;
+                        }
+                    }
+                }
+            }
+            let Some(src) = found else { return Ok(()) };
+            let (msg_round, _, msg) = self
+                .inbox
+                .get_mut(&src)
+                .and_then(|q| q.pop_front())
+                .expect("front just observed");
+            let mut out = Outbox::new();
+            machine.on_message(msg_round, src, msg, &self.view, w, &mut out)?;
+            self.flush(&mut out, round)?;
+            self.settle_lost(machine, w, round)?;
+        }
+    }
+
+    fn handle_event(&mut self, ev: NetEvent,
+                    machine: &mut dyn NodeStateMachine, w: &mut [f32],
+                    round: usize) -> Result<()> {
+        match ev {
+            NetEvent::Msg { peer, round: msg_round, epoch, msg } => {
+                self.admit(peer, msg_round, epoch, msg);
+            }
+            NetEvent::PeerDone { peer } => {
+                self.done_peers.insert(peer);
+            }
+            NetEvent::PeerLost { peer, error } => {
+                self.on_peer_lost(peer, error, machine, w, round)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Buffer an arrived message, applying the same incarnation check
+    /// the sim applies at delivery: traffic for a dead or reborn edge
+    /// drains as a typed churn drop, never reaching the machine.
+    fn admit(&mut self, peer: usize, round: usize, epoch: u32, msg: Msg) {
+        let bytes = msg.wire_bytes() as u64;
+        if self.lost.contains(&peer) {
+            self.meter.record_churn_drop(bytes);
+            return;
+        }
+        match self.graph.edge_index(self.node, peer) {
+            Some(edge) => {
+                let life = self.view.edge_life(edge);
+                if !life.live || life.epoch != epoch {
+                    self.meter.record_churn_drop(bytes);
+                    return;
+                }
+            }
+            None => {
+                // Cannot happen post-handshake; drop defensively.
+                self.meter.record_churn_drop(bytes);
+                return;
+            }
+        }
+        self.inbox
+            .entry(peer)
+            .or_default()
+            .push_back((round, epoch, msg));
+    }
+
+    /// Map a dead stream onto the churn lifecycle: kill the edge, drain
+    /// buffered frames as churn drops, and give the machine the same
+    /// `on_topology` teardown a simulated churn event delivers.
+    /// Idempotent; a peer that already said `Bye` finished cleanly and
+    /// needs no teardown.
+    fn on_peer_lost(&mut self, peer: usize, _error: CommError,
+                    machine: &mut dyn NodeStateMachine, w: &mut [f32],
+                    round: usize) -> Result<()> {
+        if self.done_peers.contains(&peer) || !self.lost.insert(peer) {
+            return Ok(());
+        }
+        if let Some(edge) = self.graph.edge_index(self.node, peer) {
+            if self.view.is_live(edge) {
+                self.view.kill_edge(edge);
+                self.meter.record_edge_churn();
+            }
+        }
+        if let Some(q) = self.inbox.get_mut(&peer) {
+            for (_, _, msg) in q.drain(..) {
+                self.meter.record_churn_drop(msg.wire_bytes() as u64);
+            }
+        }
+        let mut out = Outbox::new();
+        machine.on_topology(&self.view, w, &mut out)?;
+        self.flush(&mut out, round)?;
+        Ok(())
+    }
+
+    /// Apply churn teardowns queued by write failures.  Teardown can
+    /// queue further sends (none of the current protocols do), whose
+    /// failures queue further teardowns — loop to a fixed point.
+    fn settle_lost(&mut self, machine: &mut dyn NodeStateMachine,
+                   w: &mut [f32], round: usize) -> Result<()> {
+        while let Some((peer, error)) = self.pending_lost.pop() {
+            self.on_peer_lost(peer, error, machine, w, round)?;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self, out: &mut Outbox, round: usize) -> Result<()> {
+        let queued: Vec<(usize, Msg)> = out.drain().collect();
+        for (to, msg) in queued {
+            self.send(to, round, msg)?;
+        }
+        Ok(())
+    }
+
+    /// Send one payload, mirroring the sim courier's accounting: the
+    /// payload is metered (totals and the directed-edge slot) *before*
+    /// the liveness check, so byte counts stay engine-identical; a dead
+    /// edge turns the send into a churn drop; a write failure marks the
+    /// peer lost for the next `settle_lost`.
+    fn send(&mut self, to: usize, round: usize, msg: Msg) -> Result<()> {
+        let edge = self
+            .graph
+            .edge_index(self.node, to)
+            .ok_or(CommError::NoEdge { node: self.node, peer: to })?;
+        let bytes = msg.wire_bytes();
+        self.meter.record_send(self.node, bytes);
+        self.meter
+            .record_edge_send(directed_edge_index(edge, self.node, to),
+                              bytes as u64);
+        let life = self.view.edge_life(edge);
+        if !life.live {
+            self.meter.record_churn_drop(bytes as u64);
+            return Ok(());
+        }
+        let wm = WireMsg {
+            src: self.node,
+            round,
+            epoch: life.epoch,
+            body: WireBody::Payload(msg),
+        };
+        let stream = self
+            .writers
+            .get(&to)
+            .ok_or(CommError::NoEdge { node: self.node, peer: to })?;
+        match wire::write_message(&mut &*stream, &wm) {
+            Ok(written) => {
+                self.meter.record_header_overhead(
+                    self.node,
+                    (written - bytes) as u64,
+                );
+                Ok(())
+            }
+            Err(e @ (CommError::Io { .. } | CommError::Disconnected { .. })) => {
+                // The transmission left this node (metered); the peer is
+                // gone.  Same churn-drop semantics as a dead edge, plus
+                // the deferred teardown.
+                self.meter.record_churn_drop(bytes as u64);
+                self.pending_lost.push((to, e));
+                Ok(())
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Clean shutdown: announce `Bye` on every surviving stream, then
+    /// linger until each neighbor has finished or failed before closing
+    /// — closing early would RST data a lagging peer still needs.
+    fn shutdown_clean(&mut self, final_round: usize) -> Result<()> {
+        let peers: Vec<usize> = self.writers.keys().copied().collect();
+        for &peer in &peers {
+            if self.lost.contains(&peer) {
+                continue;
+            }
+            let stream = &self.writers[&peer];
+            match wire::write_message(&mut &*stream,
+                                      &WireMsg::bye(self.node, final_round)) {
+                Ok(written) => self
+                    .meter
+                    .record_header_overhead(self.node, written as u64),
+                Err(_) => {
+                    // The peer vanished between its last message and our
+                    // Bye; nothing left to tear down — we're done.
+                    self.lost.insert(peer);
+                }
+            }
+        }
+        let deadline = Instant::now() + self.stall_timeout;
+        loop {
+            let all_accounted = peers
+                .iter()
+                .all(|p| self.done_peers.contains(p) || self.lost.contains(p));
+            if all_accounted {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break; // close anyway; the deployment is wedged
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                // Late traffic from lagging async peers: already
+                // consumed for our purposes; discard without touching
+                // the churn counters (nothing failed).
+                Ok(NetEvent::Msg { .. }) => {}
+                Ok(NetEvent::PeerDone { peer }) => {
+                    self.done_peers.insert(peer);
+                }
+                Ok(NetEvent::PeerLost { peer, .. }) => {
+                    // Post-completion loss: no machine left to notify,
+                    // but the edge still churns for the report.
+                    if self.done_peers.contains(&peer)
+                        || !self.lost.insert(peer)
+                    {
+                        continue;
+                    }
+                    if let Some(edge) =
+                        self.graph.edge_index(self.node, peer)
+                    {
+                        if self.view.is_live(edge) {
+                            self.view.kill_edge(edge);
+                            self.meter.record_edge_churn();
+                        }
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        self.close_streams();
+        Ok(())
+    }
+
+    /// Shut every stream down (both halves — the reader threads hold
+    /// fd clones, so a plain drop would never send FIN) and join the
+    /// readers.
+    fn close_streams(&mut self) {
+        for stream in self.writers.values() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

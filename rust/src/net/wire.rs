@@ -1,0 +1,433 @@
+//! The length-prefixed binary wire protocol of the net engine.
+//!
+//! Every message is one fixed 24-byte header followed by the payload:
+//!
+//! ```text
+//! offset  size  field        encoding
+//! ------  ----  -----------  --------------------------------------
+//!      0     4  magic        0x4345434C ("CECL"), little-endian u32
+//!      4     2  version      protocol version, currently 1 (LE u16)
+//!      6     1  kind         message kind (see below)
+//!      7     1  reserved     must be 0
+//!      8     4  src          sender node id (LE u32)
+//!     12     4  epoch        edge incarnation at send time (LE u32)
+//!     16     4  round        sender's round clock (LE u32)
+//!     20     4  payload_len  payload bytes that follow (LE u32)
+//! ```
+//!
+//! Kinds: `0 = hello` (connection handshake, empty payload), `1 =
+//! dense` (f32 LE array), `2 = frame` (raw codec `Frame` buffer), `3 =
+//! scalar` (one f64 LE), `4 = bye` (clean shutdown, empty payload).
+//!
+//! Framing rules: `payload_len` is exactly `Msg::wire_bytes()` for
+//! every data kind, so the payload accounting on the socket is
+//! byte-identical to the in-process engines; the 24 header bytes are
+//! metered separately (`Meter::record_header_overhead`).  A reader
+//! that sees a bad magic, an unknown version or kind, a nonzero
+//! reserved byte, or an implausible length rejects the stream as
+//! [`CommError::Corrupt`] — it never resynchronizes.  `Msg::Sparse`
+//! (PJRT interop) never crosses this wire and is rejected at encode
+//! time.  EOF exactly on a message boundary is a clean close; EOF
+//! mid-message is `Corrupt`; any other socket failure is
+//! [`CommError::Io`].
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::comm::{CommError, Msg};
+use crate::compress::Frame;
+
+/// Fixed header size; the per-message framing overhead the net engine
+/// meters apart from payload bytes.
+pub const HEADER_BYTES: usize = 24;
+
+/// "CECL" as a little-endian u32.
+pub const MAGIC: u32 = 0x4345_434C;
+
+/// Current protocol version.
+pub const VERSION: u16 = 1;
+
+/// Sanity cap on `payload_len` — far above any real frame (the models
+/// here are a few KB), small enough that a corrupt length can never
+/// drive an allocation bomb.
+pub const MAX_PAYLOAD_BYTES: usize = 16 << 20;
+
+const KIND_HELLO: u8 = 0;
+const KIND_DENSE: u8 = 1;
+const KIND_FRAME: u8 = 2;
+const KIND_SCALAR: u8 = 3;
+const KIND_BYE: u8 = 4;
+
+/// A decoded message body.
+#[derive(Debug, Clone)]
+pub enum WireBody {
+    /// Connection handshake: identifies the dialer to the acceptor.
+    Hello,
+    /// Clean shutdown: the peer has finished its rounds and will send
+    /// nothing more.  Distinguishes a finished peer from a crashed one
+    /// (bare EOF), which maps onto the churn lifecycle.
+    Bye,
+    /// An algorithm payload, byte-identical to the in-process `Msg`.
+    Payload(Msg),
+}
+
+/// One decoded wire message.
+#[derive(Debug, Clone)]
+pub struct WireMsg {
+    pub src: usize,
+    pub round: usize,
+    pub epoch: u32,
+    pub body: WireBody,
+}
+
+impl WireMsg {
+    pub fn hello(src: usize) -> WireMsg {
+        WireMsg { src, round: 0, epoch: 0, body: WireBody::Hello }
+    }
+
+    pub fn bye(src: usize, round: usize) -> WireMsg {
+        WireMsg { src, round, epoch: 0, body: WireBody::Bye }
+    }
+}
+
+fn io_err(detail: String) -> CommError {
+    CommError::Io { detail }
+}
+
+fn corrupt(detail: String) -> CommError {
+    CommError::Corrupt { detail }
+}
+
+/// Serialize header + payload into one buffer (a single `write_all`, so
+/// the kernel never sees a torn message from this side).
+pub fn encode_message(msg: &WireMsg) -> Result<Vec<u8>, CommError> {
+    let (kind, payload): (u8, Vec<u8>) = match &msg.body {
+        WireBody::Hello => (KIND_HELLO, Vec::new()),
+        WireBody::Bye => (KIND_BYE, Vec::new()),
+        WireBody::Payload(Msg::Dense(v)) => {
+            let mut buf = Vec::with_capacity(4 * v.len());
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            (KIND_DENSE, buf)
+        }
+        WireBody::Payload(Msg::Frame(f)) => (KIND_FRAME, f.bytes().to_vec()),
+        WireBody::Payload(Msg::Scalar(s)) => {
+            (KIND_SCALAR, s.to_le_bytes().to_vec())
+        }
+        WireBody::Payload(other @ Msg::Sparse(_)) => {
+            return Err(CommError::WrongPayload {
+                expected: "socket-encodable",
+                got: other.kind(),
+            });
+        }
+    };
+    if payload.len() > MAX_PAYLOAD_BYTES {
+        return Err(corrupt(format!(
+            "payload of {} bytes exceeds the wire cap",
+            payload.len()
+        )));
+    }
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.push(kind);
+    buf.push(0); // reserved
+    buf.extend_from_slice(&(msg.src as u32).to_le_bytes());
+    buf.extend_from_slice(&msg.epoch.to_le_bytes());
+    buf.extend_from_slice(&(msg.round as u32).to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    Ok(buf)
+}
+
+/// Encode and write one message.  Returns the bytes written (header +
+/// payload), so callers can meter framing overhead as
+/// `written - msg.wire_bytes()`.
+pub fn write_message(w: &mut impl Write, msg: &WireMsg)
+                     -> Result<usize, CommError> {
+    let buf = encode_message(msg)?;
+    w.write_all(&buf)
+        .map_err(|e| io_err(format!("write to peer failed: {e}")))?;
+    Ok(buf.len())
+}
+
+/// Read one message.  `Ok(None)` is a clean EOF exactly on a message
+/// boundary; mid-message EOF is `Corrupt`; other socket failures are
+/// `Io`.
+pub fn read_message(r: &mut impl Read) -> Result<Option<WireMsg>, CommError> {
+    let mut header = [0u8; HEADER_BYTES];
+    let mut got = 0usize;
+    while got < HEADER_BYTES {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None); // clean close between messages
+                }
+                return Err(corrupt(format!(
+                    "EOF after {got} of {HEADER_BYTES} header bytes"
+                )));
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(io_err(format!("read failed: {e}"))),
+        }
+    }
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(corrupt(format!("bad magic {magic:#010x}")));
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(corrupt(format!(
+            "unsupported protocol version {version} (this side speaks \
+             {VERSION})"
+        )));
+    }
+    let kind = header[6];
+    if header[7] != 0 {
+        return Err(corrupt(format!("nonzero reserved byte {}", header[7])));
+    }
+    let src = u32::from_le_bytes(header[8..12].try_into().unwrap()) as usize;
+    let epoch = u32::from_le_bytes(header[12..16].try_into().unwrap());
+    let round = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes(header[20..24].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(corrupt(format!("payload length {len} exceeds cap")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == ErrorKind::UnexpectedEof {
+            corrupt(format!("EOF inside a {len}-byte payload"))
+        } else {
+            io_err(format!("read failed: {e}"))
+        }
+    })?;
+    let body = match kind {
+        KIND_HELLO | KIND_BYE => {
+            if len != 0 {
+                return Err(corrupt(format!(
+                    "control message (kind {kind}) with {len}-byte payload"
+                )));
+            }
+            if kind == KIND_HELLO { WireBody::Hello } else { WireBody::Bye }
+        }
+        KIND_DENSE => {
+            if len % 4 != 0 {
+                return Err(corrupt(format!(
+                    "dense payload of {len} bytes is not f32-aligned"
+                )));
+            }
+            let v = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            WireBody::Payload(Msg::Dense(v))
+        }
+        KIND_FRAME => WireBody::Payload(Msg::Frame(Frame::new(payload))),
+        KIND_SCALAR => {
+            if len != 8 {
+                return Err(corrupt(format!(
+                    "scalar payload of {len} bytes (want 8)"
+                )));
+            }
+            let s = f64::from_le_bytes(payload[0..8].try_into().unwrap());
+            WireBody::Payload(Msg::Scalar(s))
+        }
+        other => return Err(corrupt(format!("unknown message kind {other}"))),
+    };
+    Ok(Some(WireMsg { src, round, epoch, body }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: &WireMsg) -> WireMsg {
+        let buf = encode_message(msg).unwrap();
+        let mut cursor = &buf[..];
+        let got = read_message(&mut cursor).unwrap().unwrap();
+        // Exactly one message, nothing left over.
+        assert!(read_message(&mut cursor).unwrap().is_none());
+        got
+    }
+
+    #[test]
+    fn header_is_24_bytes_and_payload_len_is_wire_bytes() {
+        for msg in [
+            Msg::Dense(vec![1.0, -2.5, 3.0]),
+            Msg::Frame(Frame::new(vec![7u8; 13])),
+            Msg::Scalar(0.25),
+        ] {
+            let want = msg.wire_bytes();
+            let wm = WireMsg { src: 3, round: 9, epoch: 2,
+                               body: WireBody::Payload(msg) };
+            let buf = encode_message(&wm).unwrap();
+            assert_eq!(buf.len(), HEADER_BYTES + want);
+        }
+        assert_eq!(encode_message(&WireMsg::hello(0)).unwrap().len(),
+                   HEADER_BYTES);
+        assert_eq!(encode_message(&WireMsg::bye(0, 5)).unwrap().len(),
+                   HEADER_BYTES);
+    }
+
+    #[test]
+    fn payloads_round_trip_bit_exactly() {
+        let wm = WireMsg {
+            src: 7,
+            round: 123,
+            epoch: 4,
+            body: WireBody::Payload(Msg::Dense(vec![1.5, -0.0, f32::MIN])),
+        };
+        let got = round_trip(&wm);
+        assert_eq!(got.src, 7);
+        assert_eq!(got.round, 123);
+        assert_eq!(got.epoch, 4);
+        match got.body {
+            WireBody::Payload(Msg::Dense(v)) => {
+                assert_eq!(v.len(), 3);
+                assert_eq!(v[0].to_bits(), 1.5f32.to_bits());
+                assert_eq!(v[1].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(v[2].to_bits(), f32::MIN.to_bits());
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+
+        let frame_bytes: Vec<u8> = (0..=255).collect();
+        let wm = WireMsg {
+            src: 0,
+            round: 0,
+            epoch: 0,
+            body: WireBody::Payload(Msg::Frame(Frame::new(frame_bytes.clone()))),
+        };
+        match round_trip(&wm).body {
+            WireBody::Payload(Msg::Frame(f)) => {
+                assert_eq!(f.bytes(), &frame_bytes[..]);
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+
+        let wm = WireMsg {
+            src: 1,
+            round: 2,
+            epoch: 0,
+            body: WireBody::Payload(Msg::Scalar(-1.25e-5)),
+        };
+        match round_trip(&wm).body {
+            WireBody::Payload(Msg::Scalar(s)) => {
+                assert_eq!(s.to_bits(), (-1.25e-5f64).to_bits());
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+
+        assert!(matches!(round_trip(&WireMsg::hello(5)).body, WireBody::Hello));
+        assert!(matches!(round_trip(&WireMsg::bye(5, 9)).body, WireBody::Bye));
+    }
+
+    #[test]
+    fn sparse_payloads_never_cross_the_wire() {
+        let coo = crate::compress::CooVec::gather(&[1.0, 2.0], &[0]);
+        let wm = WireMsg {
+            src: 0,
+            round: 0,
+            epoch: 0,
+            body: WireBody::Payload(Msg::Sparse(coo)),
+        };
+        let err = encode_message(&wm).unwrap_err();
+        assert_eq!(
+            err,
+            CommError::WrongPayload {
+                expected: "socket-encodable",
+                got: "sparse"
+            }
+        );
+    }
+
+    #[test]
+    fn corrupt_streams_are_typed_errors() {
+        let good = encode_message(&WireMsg {
+            src: 1,
+            round: 1,
+            epoch: 0,
+            body: WireBody::Payload(Msg::Scalar(1.0)),
+        })
+        .unwrap();
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        let err = read_message(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        // Future protocol version.
+        let mut bad = good.clone();
+        bad[4..6].copy_from_slice(&99u16.to_le_bytes());
+        let err = read_message(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        // Unknown kind.
+        let mut bad = good.clone();
+        bad[6] = 200;
+        let err = read_message(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("kind"), "{err}");
+
+        // Nonzero reserved byte.
+        let mut bad = good.clone();
+        bad[7] = 1;
+        let err = read_message(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("reserved"), "{err}");
+
+        // Implausible payload length.
+        let mut bad = good.clone();
+        bad[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_message(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+
+        // Truncation mid-header and mid-payload: corrupt, not clean EOF.
+        for cut in [3, HEADER_BYTES - 1, good.len() - 1] {
+            let err = read_message(&mut &good[..cut]).unwrap_err();
+            assert!(matches!(err, CommError::Corrupt { .. }), "cut {cut}: {err}");
+        }
+
+        // Misaligned dense payload.
+        let dense = encode_message(&WireMsg {
+            src: 0,
+            round: 0,
+            epoch: 0,
+            body: WireBody::Payload(Msg::Dense(vec![1.0, 2.0])),
+        })
+        .unwrap();
+        let mut bad = dense.clone();
+        bad[20..24].copy_from_slice(&7u32.to_le_bytes());
+        let err = read_message(&mut &bad[..HEADER_BYTES + 7]).unwrap_err();
+        assert!(err.to_string().contains("aligned"), "{err}");
+    }
+
+    #[test]
+    fn back_to_back_messages_parse_in_order() {
+        let mut buf = Vec::new();
+        buf.extend(encode_message(&WireMsg::hello(2)).unwrap());
+        buf.extend(
+            encode_message(&WireMsg {
+                src: 2,
+                round: 1,
+                epoch: 0,
+                body: WireBody::Payload(Msg::Frame(Frame::new(vec![9; 4]))),
+            })
+            .unwrap(),
+        );
+        buf.extend(encode_message(&WireMsg::bye(2, 1)).unwrap());
+        let mut cursor = &buf[..];
+        assert!(matches!(
+            read_message(&mut cursor).unwrap().unwrap().body,
+            WireBody::Hello
+        ));
+        let m = read_message(&mut cursor).unwrap().unwrap();
+        assert_eq!(m.round, 1);
+        assert!(matches!(m.body, WireBody::Payload(Msg::Frame(_))));
+        assert!(matches!(
+            read_message(&mut cursor).unwrap().unwrap().body,
+            WireBody::Bye
+        ));
+        assert!(read_message(&mut cursor).unwrap().is_none());
+    }
+}

@@ -72,7 +72,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::algorithms::{NodeStateMachine, RoundPolicy};
-use crate::comm::{CommError, Envelope, Meter, Msg, Outbox};
+use crate::comm::{directed_edge_index, CommError, Envelope, Meter, Msg, Outbox};
 use crate::graph::{ChurnSchedule, Graph, TopologyView};
 use crate::metrics::{EpochRecord, History, Mean};
 use crate::util::rng::{streams, Pcg};
@@ -310,6 +310,8 @@ impl Courier<'_> {
             .ok_or_else(|| anyhow!("sim: ({src}, {dst}) is not an edge"))?;
         let bytes = msg.wire_bytes();
         self.meter.record_send(src, bytes);
+        self.meter
+            .record_edge_send(directed_edge_index(edge, src, dst), bytes as u64);
         let life = view.edge_life(edge);
         if !life.live {
             // Defensive: a send raced an edge removal.  The first-copy
@@ -717,7 +719,7 @@ pub fn simulate(
         ensure!(node < n, "sim: churn event for node {node} out of range");
     }
     let total_rounds = sched.total_rounds();
-    let meter = Meter::new(n);
+    let meter = Meter::with_edges(n, graph.edges().len());
     if total_rounds == 0 {
         let w = nodes.into_iter().map(|s| s.w).collect();
         return Ok(SimOutcome {
