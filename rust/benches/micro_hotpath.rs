@@ -6,8 +6,10 @@
 //! PowerGossip power-iteration halves, and the PJRT train/eval steps.
 //! These are the per-round costs behind every table.
 
-use cecl::compress::low_rank::{matvec_f32, matvec_t_f32};
-use cecl::compress::{CodecSpec, CooVec, EdgeCtx, RandK};
+use cecl::compress::codec::QsgdCodec;
+use cecl::compress::low_rank::{matvec_f32, matvec_f32_reference,
+                               matvec_t_f32, matvec_t_f32_reference};
+use cecl::compress::{CodecSpec, CooVec, EdgeCodec, EdgeCtx, RandK};
 use cecl::model::Manifest;
 use cecl::runtime::{native, Engine, ModelRuntime};
 use cecl::util::bench::BenchSet;
@@ -115,6 +117,21 @@ fn main() {
         );
     }
 
+    // ---- qsgd encode: branch-free bucketed kernel vs scalar ref ---------
+    // Both paths produce byte-identical frames (pinned by a unit
+    // test); the A/B here is purely the wall-clock win.
+    let mut q4 = QsgdCodec { bits: 4 };
+    set.bench_throughput("qsgd:4 encode (branch-free)", 3, 20, d as f64,
+                         "elem", || {
+        let f = q4.encode(&y, &ctx);
+        std::hint::black_box(f.wire_bytes());
+    });
+    set.bench_throughput("qsgd:4 encode (reference)", 3, 20, d as f64,
+                         "elem", || {
+        let f = q4.encode_reference(&y, &ctx);
+        std::hint::black_box(f.wire_bytes());
+    });
+
     // ---- gossip weighted average (D-PSGD inner loop) --------------------
     let wj = randn(d, 7);
     let mut acc = randn(d, 8);
@@ -138,6 +155,17 @@ fn main() {
     set.bench_throughput("powergossip s = M^T p", 3, 50,
                          (rows * cols) as f64, "flop", || {
         std::hint::black_box(matvec_t_f32(&m, rows, cols, &p));
+    });
+    // A/B: the pre-blocking scalar kernels (same math, serial
+    // accumulation) — the low-rank GEMV is the per-round cost of every
+    // `low_rank:R` row, so the win here is a table-level win.
+    set.bench_throughput("powergossip p = M q (reference)", 3, 50,
+                         (rows * cols) as f64, "flop", || {
+        std::hint::black_box(matvec_f32_reference(&m, rows, cols, &q));
+    });
+    set.bench_throughput("powergossip s = M^T p (reference)", 3, 50,
+                         (rows * cols) as f64, "flop", || {
+        std::hint::black_box(matvec_t_f32_reference(&m, rows, cols, &p));
     });
 
     // ---- PJRT layers (needs artifacts) ----------------------------------

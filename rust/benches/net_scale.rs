@@ -6,6 +6,9 @@
 //! Entirely artifact-free (native softmax backend) and loopback-only:
 //! `cargo bench --bench net_scale` works on a bare checkout with no
 //! network beyond 127.0.0.1.
+//!
+//! `-- --json FILE` additionally writes the timing rows as flat JSON
+//! (same [`JsonReport`] format as `sim_scale`).
 
 use cecl::algorithms::{AlgorithmSpec, RoundPolicy};
 use cecl::compress::CodecSpec;
@@ -13,7 +16,7 @@ use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
 use cecl::graph::Graph;
 use cecl::net::{run_net_native, NetConfig};
 use cecl::sim::{LinkSpec, SimConfig};
-use cecl::util::bench::BenchSet;
+use cecl::util::bench::{BenchSet, JsonReport};
 use cecl::util::table::Table;
 
 fn spec(nodes: usize, epochs: usize, codec: &str) -> ExperimentSpec {
@@ -38,16 +41,22 @@ fn spec(nodes: usize, epochs: usize, codec: &str) -> ExperimentSpec {
 }
 
 fn main() {
+    let mut json_path = None;
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => json_path = Some(it.next().expect("--json FILE")),
+            "--bench" => {}
+            other => eprintln!("net_scale: ignoring unknown arg {other}"),
+        }
+    }
     let nodes = 16usize;
     let graph = Graph::ring(nodes);
 
     // Wall-clock per real round: rendezvous + framed TCP exchange for a
     // whole 16-node deployment in one process.  Each run is 2 epochs x
     // 2 rounds = 4 rounds.
-    let mut set = BenchSet::new(
-        "net_scale — real-socket C-ECL ring(16), loopback TCP, native \
-         softmax backend",
-    );
+    let mut set = BenchSet::new("net_rungs");
     for codec in ["identity", "rand_k:0.1"] {
         let s = spec(nodes, 2, codec);
         set.bench_throughput(
@@ -132,4 +141,11 @@ fn main() {
          TCP:\n{}",
         t.render()
     );
+
+    if let Some(path) = json_path {
+        let mut rep = JsonReport::new();
+        rep.add_set(&set);
+        std::fs::write(&path, rep.render()).expect("write --json file");
+        println!("wrote {path}");
+    }
 }

@@ -1,19 +1,61 @@
-//! Scale bench for the virtual-time engine: C-ECL(10%) on rings of
-//! n ∈ {64, 256, 512} nodes — node counts that are simply impossible
-//! with the thread-per-node engine (OS threads + blocking channels) —
-//! plus the wall-clock cost per simulated round and the simulated
-//! time-to-accuracy ladder across link models at n = 64.
+//! Scale bench for the virtual-time engine: the 64 → 512 → 8k → 100k
+//! → 1M rung ladder (C-ECL(10%) softmax-tiny rungs plus NullLocal
+//! protocol-only rungs that isolate pure engine throughput), the
+//! simulated time-to-accuracy ladder across link models, and the
+//! sync-vs-async / churn / PowerGossip wall-clock tables at n = 64.
 //!
 //! Entirely artifact-free (native softmax backend): `cargo bench
 //! --bench sim_scale` works on a bare checkout.
+//!
+//! Flags (after `--`):
+//!   --max-nodes N   largest rung to run (default 512 — the quick set;
+//!                   the checked-in BENCH_sim_scale.json is produced
+//!                   with --max-nodes 1000000)
+//!   --json FILE     also write every timing row as flat JSON
+//!                   ([`JsonReport`] format)
+//!   --check FILE    compare against a previous --json file (the
+//!                   checked-in BENCH_sim_scale.json) and exit(1) if
+//!                   any shared row regressed by more than 2x
 
-use cecl::algorithms::{AlgorithmSpec, RoundPolicy};
+use std::sync::Arc;
+
+use cecl::algorithms::{build_machine, AlgorithmSpec, BuildCtx, DualPath,
+                       RoundPolicy};
 use cecl::compress::CodecSpec;
 use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
 use cecl::graph::{ChurnSchedule, Graph};
-use cecl::sim::{LinkSpec, SimConfig};
-use cecl::util::bench::BenchSet;
+use cecl::model::DatasetManifest;
+use cecl::sim::{simulate, LinkSpec, NodeSetup, NullLocal, Schedule,
+                SimConfig};
+use cecl::util::bench::{parse_mean_secs, BenchSet, JsonReport};
+use cecl::util::rng::Pcg;
 use cecl::util::table::Table;
+
+struct Opts {
+    max_nodes: usize,
+    json: Option<String>,
+    check: Option<String>,
+}
+
+fn opts() -> Opts {
+    let mut o = Opts { max_nodes: 512, json: None, check: None };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--max-nodes" => {
+                o.max_nodes = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--max-nodes N");
+            }
+            "--json" => o.json = Some(it.next().expect("--json FILE")),
+            "--check" => o.check = Some(it.next().expect("--check FILE")),
+            "--bench" => {} // cargo passes this through
+            other => eprintln!("sim_scale: ignoring unknown arg {other}"),
+        }
+    }
+    o
+}
 
 fn spec(nodes: usize, epochs: usize, link: LinkSpec) -> ExperimentSpec {
     ExperimentSpec {
@@ -39,26 +81,76 @@ fn spec(nodes: usize, epochs: usize, link: LinkSpec) -> ExperimentSpec {
     }
 }
 
+/// Protocol-only node setups: ECL machines over a d = 15 synthetic
+/// manifest with [`NullLocal`] numerics — the rung isolates the event
+/// engine (queue, courier, codec framing) from training cost.
+fn null_setups(graph: &Arc<Graph>, rounds_per_epoch: usize)
+               -> Vec<NodeSetup> {
+    let ds = DatasetManifest::synthetic_linear("t", (2, 2, 1), 3, 2, 2);
+    let alg = AlgorithmSpec::Ecl { theta: 1.0 };
+    (0..graph.n())
+        .map(|node| {
+            let ctx = BuildCtx {
+                node,
+                graph: Arc::clone(graph),
+                manifest: ds.clone(),
+                seed: 7,
+                eta: 0.05,
+                local_steps: 1,
+                rounds_per_epoch,
+                dual_path: DualPath::Native,
+                runtime: None,
+                round_policy: RoundPolicy::Sync,
+            };
+            let mut rng = Pcg::new(900 + node as u64);
+            let w = (0..ds.d_pad).map(|_| rng.normal_f32()).collect();
+            NodeSetup {
+                machine: build_machine(&alg, &ctx).expect("bench machine"),
+                local: Box::new(NullLocal),
+                w,
+            }
+        })
+        .collect()
+}
+
 fn main() {
-    let mut set = BenchSet::new(
-        "sim_scale — virtual-time C-ECL(10%) ring, native softmax backend",
-    );
-    // Wall-clock per simulated round at growing node counts.  Each run
-    // is 2 epochs x 2 rounds = 4 rounds.
-    for nodes in [64usize, 256, 512] {
+    let opts = opts();
+    let mut json = JsonReport::new();
+
+    // ----- the rung ladder: softmax-tiny time-to-accuracy runs -------
+    // (nodes, threads, timing iters): big rungs run once, and 8k runs
+    // both serial and partition-parallel so the A/B is in the JSON.
+    let mut set = BenchSet::new("softmax_rungs");
+    for &(nodes, threads, iters) in &[
+        (64usize, 1usize, 3usize),
+        (512, 1, 3),
+        (8_192, 1, 1),
+        (8_192, 8, 1),
+        (100_000, 8, 1),
+    ] {
+        if nodes > opts.max_nodes {
+            continue;
+        }
         let graph = Graph::ring(nodes);
-        let s = spec(
+        let mut s = spec(
             nodes,
             2,
-            LinkSpec::Bandwidth {
-                latency_us: 200,
-                mbit_per_sec: 100.0,
-            },
+            LinkSpec::Bandwidth { latency_us: 200, mbit_per_sec: 100.0 },
         );
+        s.exec = ExecMode::Simulated(SimConfig {
+            link: LinkSpec::Bandwidth { latency_us: 200, mbit_per_sec: 100.0 },
+            threads,
+            ..SimConfig::default()
+        });
+        let name = if threads == 1 {
+            format!("ring({nodes}) 4 rounds")
+        } else {
+            format!("ring({nodes}) 4 rounds t{threads}")
+        };
         set.bench_throughput(
-            &format!("ring({nodes}) 4 rounds"),
-            1,
-            3,
+            &name,
+            usize::from(iters > 1),
+            iters,
             4.0 * nodes as f64,
             "node-round",
             || {
@@ -68,8 +160,53 @@ fn main() {
         );
     }
     set.report();
+    json.add_set(&set);
 
-    // The payload: simulated time-to-accuracy across link models.
+    // ----- NullLocal protocol-only rungs up to 1M nodes --------------
+    // Setup construction (machines + initial params) is inside the
+    // timed closure on purpose: at 1M nodes, building the fleet is
+    // part of what "one machine can run this" has to mean.
+    let mut set = BenchSet::new("nulllocal_rungs");
+    for &(nodes, threads) in &[
+        (8_192usize, 1usize),
+        (100_000, 1),
+        (1_000_000, 1),
+        (1_000_000, 8),
+    ] {
+        if nodes > opts.max_nodes {
+            continue;
+        }
+        let graph = Arc::new(Graph::ring(nodes));
+        let cfg = SimConfig {
+            link: LinkSpec::Constant { latency_us: 100 },
+            threads,
+            ..SimConfig::default()
+        };
+        let sched = Schedule::new(1, 2, 1, 1);
+        let name = if threads == 1 {
+            format!("ring({nodes}) 2 rounds null")
+        } else {
+            format!("ring({nodes}) 2 rounds null t{threads}")
+        };
+        set.bench_throughput(
+            &name,
+            0,
+            1,
+            2.0 * nodes as f64,
+            "node-round",
+            || {
+                let setups = null_setups(&graph, 2);
+                let out = simulate(&graph, &cfg, 7, &sched, setups,
+                                   RoundPolicy::Sync, false)
+                    .expect("null sim run");
+                std::hint::black_box(out.vtime_ns);
+            },
+        );
+    }
+    set.report();
+    json.add_set(&set);
+
+    // ----- simulated time-to-accuracy across link models -------------
     let mut t = Table::new([
         "link", "final acc", "sim secs", "KB/node/epoch", "retrans KB",
     ]);
@@ -169,9 +306,7 @@ fn main() {
     // Sync vs async rounds under one 8x straggler: wall-clock cost of
     // the event-driven scheduler is tracked alongside the simulated-
     // time win (the whole point of the per-edge-clock refactor).
-    let mut set = BenchSet::new(
-        "sim_scale — sync vs async rounds, ring(64), one 8x straggler",
-    );
+    let mut set = BenchSet::new("sync_vs_async");
     let mut t = Table::new([
         "rounds", "final acc", "sim secs", "max lag", "KB/node/epoch",
     ]);
@@ -217,6 +352,7 @@ fn main() {
         ]);
     }
     set.report();
+    json.add_set(&set);
     println!(
         "\nring(64), C-ECL(10%), one 8x straggler, constant 10 ms links:\n{}",
         t.render()
@@ -226,9 +362,7 @@ fn main() {
     // version compare per callback) vs `random:0.05` edge churn on a
     // ring(64) — wall-clock cost of the first-class churn events plus
     // the protocol cost the counters surface.
-    let mut set = BenchSet::new(
-        "sim_scale — churn events vs static path, ring(64), C-ECL(10%)",
-    );
+    let mut set = BenchSet::new("churn_vs_static");
     let mut t = Table::new([
         "schedule", "final acc", "sim secs", "churned", "chdrops",
         "KB/node/epoch",
@@ -279,6 +413,7 @@ fn main() {
         ]);
     }
     set.report();
+    json.add_set(&set);
     println!(
         "\nring(64), C-ECL(10%), static vs random:0.05 edge churn \
          (1 ms slots):\n{}",
@@ -288,9 +423,7 @@ fn main() {
     // Async PowerGossip: the multi-phase conversation pipeline under
     // per-edge clocks — wall-clock cost of round-straddling
     // conversations next to its own sync baseline.
-    let mut set = BenchSet::new(
-        "sim_scale — PowerGossip(2) sync vs async, ring(64), one 8x straggler",
-    );
+    let mut set = BenchSet::new("powergossip_async");
     let mut t = Table::new([
         "rounds", "final acc", "sim secs", "max lag", "KB/node/epoch",
     ]);
@@ -334,9 +467,44 @@ fn main() {
         ]);
     }
     set.report();
+    json.add_set(&set);
     println!(
         "\nring(64), PowerGossip(2), one 8x straggler, constant 10 ms \
          links:\n{}",
         t.render()
     );
+
+    // ----- machine-readable output and the regression gate -----------
+    if let Some(path) = &opts.json {
+        std::fs::write(path, json.render()).expect("write --json file");
+        println!("wrote {path}");
+    }
+    if let Some(path) = &opts.check {
+        let baseline = std::fs::read_to_string(path).expect("read --check file");
+        let old = parse_mean_secs(&baseline).expect("parse --check file");
+        let new = parse_mean_secs(&json.render()).expect("parse own rows");
+        let mut failures = Vec::new();
+        for (name, mean) in &new {
+            let Some((_, base)) = old.iter().find(|(n, _)| n == name) else {
+                continue; // new row: no baseline yet
+            };
+            // Sub-5 ms rows are timer noise at 2x; the gate is for the
+            // rung ladder, which is well above that.
+            if *base < 0.005 {
+                continue;
+            }
+            let ratio = mean / base;
+            let verdict = if ratio > 2.0 { "REGRESSED" } else { "ok" };
+            println!("check {name}: {mean:.4}s vs {base:.4}s ({ratio:.2}x) \
+                      {verdict}");
+            if ratio > 2.0 {
+                failures.push(name.clone());
+            }
+        }
+        if !failures.is_empty() {
+            eprintln!("sim_scale: >2x regression vs {path}: {failures:?}");
+            std::process::exit(1);
+        }
+        println!("sim_scale: no >2x regressions vs {path}");
+    }
 }

@@ -41,6 +41,7 @@
 //! Eq. (13) rewrite `comp(y − z) = comp(y) − comp(z)`; everything else
 //! runs the C-ECL dual update under the naive Eq. (11) rule.
 
+use std::cell::RefCell;
 use std::fmt;
 
 use super::RandK;
@@ -141,6 +142,54 @@ impl Frame {
     /// Mutable access (tests corrupt frames through this).
     pub fn bytes_mut(&mut self) -> &mut Vec<u8> {
         &mut self.bytes
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame buffer pool
+// ---------------------------------------------------------------------
+
+/// Retained buffers per thread.  Steady state needs roughly
+/// (in-flight frames per node × nodes per partition worker); beyond
+/// the cap, buffers are simply freed — the pool is an allocation-rate
+/// optimization, never a correctness dependency.
+const POOL_MAX: usize = 1024;
+
+thread_local! {
+    /// Recycled frame payload buffers.  Thread-local (not a shared
+    /// freelist) so the parallel sim's partition workers never contend
+    /// on a lock in the encode hot path.
+    static FRAME_POOL: RefCell<Vec<Vec<u8>>> = RefCell::new(Vec::new());
+}
+
+/// Take a cleared buffer with at least `cap` capacity from the
+/// thread-local pool, or allocate one.  Every codec encode path builds
+/// its frame into a pooled buffer; [`Frame`]'s `Drop` returns it, so a
+/// steady-state simulation recycles the same handful of allocations
+/// per thread instead of malloc/free per message.
+pub(crate) fn pooled_buf(cap: usize) -> Vec<u8> {
+    FRAME_POOL.with(|p| match p.borrow_mut().pop() {
+        Some(mut b) => {
+            b.clear();
+            b.reserve(cap);
+            b
+        }
+        None => Vec::with_capacity(cap),
+    })
+}
+
+impl Drop for Frame {
+    fn drop(&mut self) {
+        let bytes = std::mem::take(&mut self.bytes);
+        if bytes.capacity() == 0 {
+            return;
+        }
+        FRAME_POOL.with(|p| {
+            let mut pool = p.borrow_mut();
+            if pool.len() < POOL_MAX {
+                pool.push(bytes);
+            }
+        });
     }
 }
 
@@ -419,7 +468,7 @@ fn decode_explicit(bytes: &[u8], dim: usize) -> Result<Vec<f32>, CodecError> {
 
 /// Shared encoder for the explicit layout (indices must be sorted).
 fn encode_explicit(x: &[f32], idx: &[u32]) -> Frame {
-    let mut buf = Vec::with_capacity(8 * idx.len());
+    let mut buf = pooled_buf(8 * idx.len());
     for &i in idx {
         put_u32(&mut buf, i);
     }
@@ -460,7 +509,7 @@ impl EdgeCodec for IdentityCodec {
 
     fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
         debug_assert_eq!(x.len(), ctx.dim);
-        let mut buf = Vec::with_capacity(4 * x.len());
+        let mut buf = pooled_buf(4 * x.len());
         for &v in x {
             put_f32(&mut buf, v);
         }
@@ -523,7 +572,7 @@ impl EdgeCodec for RandKCodec {
         match self.mode {
             WireMode::Explicit => encode_explicit(x, &mask),
             WireMode::ValuesOnly => {
-                let mut buf = Vec::with_capacity(4 * mask.len());
+                let mut buf = pooled_buf(4 * mask.len());
                 for &i in &mask {
                     put_f32(&mut buf, x[i as usize]);
                 }
@@ -539,7 +588,7 @@ impl EdgeCodec for RandKCodec {
             WireMode::Explicit => 8,
             WireMode::ValuesOnly => 4,
         };
-        let mut buf = Vec::with_capacity(record * mask.len());
+        let mut buf = pooled_buf(record * mask.len());
         if self.mode == WireMode::Explicit {
             for &i in &mask {
                 put_u32(&mut buf, i);
@@ -689,19 +738,13 @@ impl QsgdCodec {
     fn n_buckets(dim: usize) -> usize {
         (dim + Self::BUCKET - 1) / Self::BUCKET
     }
-}
 
-impl EdgeCodec for QsgdCodec {
-    fn name(&self) -> String {
-        format!("qsgd {}b", self.bits)
-    }
-
-    fn is_linear_for_fixed_omega(&self) -> bool {
-        false
-    }
-
-    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
-        debug_assert_eq!(x.len(), ctx.dim);
+    /// The original scalar encode loop, kept as the byte-exact oracle
+    /// for the branch-free kernel (the `qsgd_branch_free_matches_
+    /// reference` test and the `micro_hotpath` A/B rows).  Not part of
+    /// the codec API.
+    #[doc(hidden)]
+    pub fn encode_reference(&self, x: &[f32], ctx: &EdgeCtx) -> Frame {
         let s = self.levels();
         let bits = self.bits as u32;
         let mut rng = ctx.mask_rng();
@@ -714,7 +757,7 @@ impl EdgeCodec for QsgdCodec {
                     .sqrt() as f32
             })
             .collect();
-        let mut buf = Vec::with_capacity(
+        let mut buf = pooled_buf(
             4 * norms.len() + (x.len() * bits as usize + 7) / 8,
         );
         for &n in &norms {
@@ -737,6 +780,74 @@ impl EdgeCodec for QsgdCodec {
                 0
             };
             w.push(code, bits);
+        }
+        Frame::new(w.finish())
+    }
+}
+
+impl EdgeCodec for QsgdCodec {
+    fn name(&self) -> String {
+        format!("qsgd {}b", self.bits)
+    }
+
+    fn is_linear_for_fixed_omega(&self) -> bool {
+        false
+    }
+
+    /// Branch-free bucketed kernel.  Per bucket, the `norm > 0` test is
+    /// hoisted out of the coordinate loop (it is constant within a
+    /// bucket), and the per-coordinate stochastic rounding is a
+    /// straight-line `floor → compare → add → min` with no
+    /// data-dependent branch — the shape auto-vectorizers like.  Byte
+    /// output and RNG draw pattern are identical to
+    /// [`QsgdCodec::encode_reference`] (zero-norm buckets draw nothing),
+    /// pinned by a test.
+    fn encode(&mut self, x: &[f32], ctx: &EdgeCtx) -> Frame {
+        debug_assert_eq!(x.len(), ctx.dim);
+        let s = self.levels();
+        let sf = s as f64;
+        let bits = self.bits as u32;
+        let sign_shift = bits - 1;
+        let mut rng = ctx.mask_rng();
+        let norms: Vec<f32> = x
+            .chunks(Self::BUCKET)
+            .map(|c| {
+                c.iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum::<f64>()
+                    .sqrt() as f32
+            })
+            .collect();
+        let mut buf = pooled_buf(
+            4 * norms.len() + (x.len() * bits as usize + 7) / 8,
+        );
+        for &n in &norms {
+            put_f32(&mut buf, n);
+        }
+        let mut w = BitWriter { buf, acc: 0, nbits: 0 };
+        for (chunk, &norm) in x.chunks(Self::BUCKET).zip(&norms) {
+            if norm > 0.0 {
+                let nf = norm as f64;
+                for &v in chunk {
+                    // Same expression tree as the reference — the
+                    // divide stays per-coordinate so `a` is
+                    // bit-identical (x/n·s ≠ x·(s/n) in f64).
+                    let a = (v.abs() as f64 / nf) * sf;
+                    let lo = a.floor();
+                    let level =
+                        ((lo as u32) + u32::from(rng.f64() < a - lo)).min(s);
+                    // `v < 0.0`, not the sign bit: -0.0 must encode as
+                    // +0 exactly like the reference.
+                    let code = (u32::from(v < 0.0) << sign_shift) | level;
+                    w.push(code, bits);
+                }
+            } else {
+                // Zero (or NaN) norm: all-zero codes, and — critically
+                // for draw-pattern identity — no RNG consumption.
+                for _ in chunk {
+                    w.push(0, bits);
+                }
+            }
         }
         Frame::new(w.finish())
     }
@@ -793,7 +904,7 @@ impl EdgeCodec for SignNormCodec {
         debug_assert_eq!(x.len(), ctx.dim);
         let scale = (x.iter().map(|&v| v.abs() as f64).sum::<f64>()
             / x.len().max(1) as f64) as f32;
-        let mut buf = Vec::with_capacity(4 + (x.len() + 7) / 8);
+        let mut buf = pooled_buf(4 + (x.len() + 7) / 8);
         put_f32(&mut buf, scale);
         let mut w = BitWriter { buf, acc: 0, nbits: 0 };
         for &v in x {
@@ -1325,6 +1436,53 @@ mod tests {
         for i in 0..d {
             assert_eq!(x[i].to_bits(), y[i].to_bits(), "coord {i}");
         }
+    }
+
+    #[test]
+    fn qsgd_branch_free_matches_reference_bytes() {
+        // Three buckets (two full + a tail), with the middle bucket
+        // forced to zero norm (the RNG-skip path) and a -0.0 planted in
+        // the tail (sign must come from `v < 0.0`, not the sign bit).
+        let d = 2 * QsgdCodec::BUCKET + 176;
+        for bits in [2u8, 4, 8] {
+            for seed in 0..8u64 {
+                let mut x = randn(d, 100 + seed);
+                for v in
+                    &mut x[QsgdCodec::BUCKET..2 * QsgdCodec::BUCKET]
+                {
+                    *v = 0.0;
+                }
+                x[2 * QsgdCodec::BUCKET + 3] = -0.0;
+                let mut codec = QsgdCodec { bits };
+                let c = ctx(d, seed as usize);
+                let fast = codec.encode(&x, &c);
+                let slow = codec.encode_reference(&x, &c);
+                assert_eq!(
+                    fast.bytes(),
+                    slow.bytes(),
+                    "qsgd:{bits} branch-free kernel diverged (seed {seed})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frame_pool_recycles_buffers_without_aliasing() {
+        // Two live frames never share a buffer; dropping one and
+        // encoding again reuses its capacity but not its contents.
+        let d = 64;
+        let e = ctx(d, 0);
+        let mut c = IdentityCodec;
+        let x = randn(d, 9);
+        let y = randn(d, 10);
+        let fx = c.encode(&x, &e);
+        let fy = c.encode(&y, &e);
+        assert_ne!(fx.bytes(), fy.bytes());
+        let fx_copy = fx.bytes().to_vec();
+        drop(fy);
+        let fz = c.encode(&x, &e); // likely reuses fy's buffer
+        assert_eq!(fz.bytes(), &fx_copy[..], "recycled buffer was dirty");
+        assert_eq!(fx.bytes(), &fx_copy[..], "live frame clobbered");
     }
 
     #[test]

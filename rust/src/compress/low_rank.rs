@@ -16,11 +16,82 @@
 //! PowerGossip compressor through the Eq. (11) dual rule.  The
 //! interactive two-node choreography lives in `algorithms::powergossip`.
 
-use crate::compress::codec::{CodecError, EdgeCodec, EdgeCtx, Frame};
+use crate::compress::codec::{pooled_buf, CodecError, EdgeCodec, EdgeCtx, Frame};
 use crate::util::rng::{streams, Pcg};
 
-/// `p = M q` for a row-major `rows x cols` matrix stored in a flat slice.
+/// `p = M q` for a row-major `rows x cols` matrix stored in a flat
+/// slice.  The per-row dot product is 4-way unrolled with independent
+/// accumulators — breaking the serial add dependence is what lets the
+/// compiler keep four FMA chains in flight (and vectorize).  Summation
+/// order differs from [`matvec_f32_reference`], so results agree to
+/// rounding, not bit-exactly; every consumer of this function
+/// tolerates that (PowerGossip normalizes, the codec ships whatever
+/// was computed to both ends).
 pub fn matvec_f32(m: &[f32], rows: usize, cols: usize, q: &[f32]) -> Vec<f32> {
+    assert_eq!(m.len(), rows * cols);
+    assert_eq!(q.len(), cols);
+    let mut p = vec![0.0f32; rows];
+    let split = cols & !3;
+    for r in 0..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0, 0.0, 0.0);
+        for (c4, q4) in row[..split].chunks_exact(4).zip(q[..split].chunks_exact(4)) {
+            a0 += c4[0] * q4[0];
+            a1 += c4[1] * q4[1];
+            a2 += c4[2] * q4[2];
+            a3 += c4[3] * q4[3];
+        }
+        let mut acc = (a0 + a2) + (a1 + a3);
+        for (a, b) in row[split..].iter().zip(&q[split..]) {
+            acc += a * b;
+        }
+        p[r] = acc;
+    }
+    p
+}
+
+/// `s = Mᵀ p`, blocked four rows at a time: each pass streams four
+/// matrix rows against one traversal of `s`, quartering the traffic on
+/// the output vector versus the row-at-a-time reference.  Same
+/// rounding caveat as [`matvec_f32`].
+pub fn matvec_t_f32(m: &[f32], rows: usize, cols: usize, p: &[f32]) -> Vec<f32> {
+    assert_eq!(m.len(), rows * cols);
+    assert_eq!(p.len(), rows);
+    let mut s = vec![0.0f32; cols];
+    let rsplit = rows & !3;
+    for r in (0..rsplit).step_by(4) {
+        let (p0, p1, p2, p3) = (p[r], p[r + 1], p[r + 2], p[r + 3]);
+        if p0 == 0.0 && p1 == 0.0 && p2 == 0.0 && p3 == 0.0 {
+            continue;
+        }
+        let base = r * cols;
+        let r0 = &m[base..base + cols];
+        let r1 = &m[base + cols..base + 2 * cols];
+        let r2 = &m[base + 2 * cols..base + 3 * cols];
+        let r3 = &m[base + 3 * cols..base + 4 * cols];
+        for j in 0..cols {
+            s[j] += (r0[j] * p0 + r2[j] * p2) + (r1[j] * p1 + r3[j] * p3);
+        }
+    }
+    for r in rsplit..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        let pr = p[r];
+        if pr == 0.0 {
+            continue;
+        }
+        for (sj, a) in s.iter_mut().zip(row) {
+            *sj += a * pr;
+        }
+    }
+    s
+}
+
+/// The straight-line `p = M q` loop the blocked kernel replaced.  Kept
+/// as the accuracy oracle for tests and the `micro_hotpath` A/B rows.
+#[doc(hidden)]
+pub fn matvec_f32_reference(
+    m: &[f32], rows: usize, cols: usize, q: &[f32],
+) -> Vec<f32> {
     assert_eq!(m.len(), rows * cols);
     assert_eq!(q.len(), cols);
     let mut p = vec![0.0f32; rows];
@@ -35,8 +106,11 @@ pub fn matvec_f32(m: &[f32], rows: usize, cols: usize, q: &[f32]) -> Vec<f32> {
     p
 }
 
-/// `s = Mᵀ p`.
-pub fn matvec_t_f32(m: &[f32], rows: usize, cols: usize, p: &[f32]) -> Vec<f32> {
+/// The row-at-a-time `s = Mᵀ p` loop the blocked kernel replaced.
+#[doc(hidden)]
+pub fn matvec_t_f32_reference(
+    m: &[f32], rows: usize, cols: usize, p: &[f32],
+) -> Vec<f32> {
     assert_eq!(m.len(), rows * cols);
     assert_eq!(p.len(), rows);
     let mut s = vec![0.0f32; cols];
@@ -311,7 +385,7 @@ impl EdgeCodec for LowRankCodec {
                 })
                 .collect();
         }
-        let mut buf = Vec::with_capacity(self.frame_bytes());
+        let mut buf = pooled_buf(self.frame_bytes());
         for v in 0..self.views.len() {
             let (_, rows, cols, _) = self.views[v];
             self.load_view(x, v);
@@ -432,6 +506,33 @@ mod tests {
         for c in 0..cols {
             let want: f32 = (0..rows).map(|r| m[r * cols + c] * p[r]).sum();
             assert!((s[c] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn blocked_matvecs_agree_with_reference_kernels() {
+        // Odd shapes exercise the unroll tails; planted zeros exercise
+        // the skip paths in both transposed kernels.
+        for (rows, cols) in [(1, 1), (5, 3), (17, 13), (64, 31), (33, 64)] {
+            let m = randn(rows * cols, rows as u64 * 31 + cols as u64);
+            let q = randn(cols, 7);
+            let mut p = randn(rows, 8);
+            if rows > 2 {
+                p[1] = 0.0;
+                p[rows - 1] = 0.0;
+            }
+            let fast = matvec_f32(&m, rows, cols, &q);
+            let slow = matvec_f32_reference(&m, rows, cols, &q);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                        "matvec {rows}x{cols}: {a} vs {b}");
+            }
+            let fast_t = matvec_t_f32(&m, rows, cols, &p);
+            let slow_t = matvec_t_f32_reference(&m, rows, cols, &p);
+            for (a, b) in fast_t.iter().zip(&slow_t) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                        "matvec_t {rows}x{cols}: {a} vs {b}");
+            }
         }
     }
 

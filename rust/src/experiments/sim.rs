@@ -301,6 +301,32 @@ mod tests {
     }
 
     #[test]
+    fn sim_table_is_thread_count_invariant() {
+        // The `--threads` knob rides through `cfg_base` into every
+        // table cell; the conservative-PDES engine guarantees the
+        // parallel trajectories are bit-identical, so the whole table
+        // must reproduce (ideal-link rows quietly run serial — zero
+        // lookahead — which is part of the contract).
+        let sizing = tiny_sizing();
+        let policies = policy_ladder(&sizing);
+        let (_, serial) = run_sim_table(&sizing, &SimConfig::default(),
+                                        0.99, &policies)
+            .unwrap();
+        let cfg = SimConfig { threads: 3, ..SimConfig::default() };
+        let (_, parallel) =
+            run_sim_table(&sizing, &cfg, 0.99, &policies).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.total_bytes, b.total_bytes, "{}", a.algorithm);
+            assert_eq!(a.edge_payload_bytes, b.edge_payload_bytes,
+                       "{}", a.algorithm);
+            assert_eq!(a.final_accuracy.to_bits(),
+                       b.final_accuracy.to_bits(), "{}", a.algorithm);
+            assert_eq!(a.sim_time_secs, b.sim_time_secs, "{}", a.algorithm);
+        }
+    }
+
+    #[test]
     fn extra_codec_specs_append_rows() {
         let sizing = Sizing {
             codecs: vec![CodecSpec::Qsgd { bits: 8 }],

@@ -759,6 +759,19 @@ impl Graph {
         w
     }
 
+    /// Number of edges crossing partition boundaries under the block
+    /// partition `starts` (as produced by [`partition_blocks`]).  This
+    /// is the communication surface of the parallel simulator: only
+    /// cut-edge traffic leaves a partition's event queue.
+    pub fn cut_edges(&self, starts: &[usize]) -> usize {
+        self.edges
+            .iter()
+            .filter(|&&(i, j)| {
+                block_owner(starts, i) != block_owner(starts, j)
+            })
+            .count()
+    }
+
     /// ASCII rendering of the adjacency structure (Fig. 2 stand-in).
     pub fn ascii_viz(&self) -> String {
         let mut out = String::new();
@@ -792,9 +805,77 @@ impl Graph {
     }
 }
 
+/// Contiguous block partition of node ids `0..n` into `parts` blocks of
+/// near-equal size.  Returns `parts + 1` boundaries: block `p` owns
+/// nodes `starts[p]..starts[p + 1]`.
+///
+/// Contiguous id blocks are the locality-aware choice for this repo's
+/// standard topologies: on a ring they are *optimal* (exactly `2 *
+/// parts` cut edges regardless of block size), and on a row-major torus
+/// or chain they keep each block's internal edges dominant.  Blocks
+/// differ in size by at most one node (the first `n % parts` blocks get
+/// the extra node), so per-partition event load stays balanced.
+pub fn partition_blocks(n: usize, parts: usize) -> Vec<usize> {
+    let parts = parts.clamp(1, n.max(1));
+    let (q, r) = (n / parts, n % parts);
+    let mut starts = Vec::with_capacity(parts + 1);
+    let mut at = 0usize;
+    starts.push(at);
+    for p in 0..parts {
+        at += q + usize::from(p < r);
+        starts.push(at);
+    }
+    starts
+}
+
+/// Which block of `starts` (from [`partition_blocks`]) owns `node`.
+pub fn block_owner(starts: &[usize], node: usize) -> usize {
+    debug_assert!(node < *starts.last().expect("nonempty starts"));
+    // starts is sorted; find the last boundary <= node.
+    match starts.binary_search(&node) {
+        Ok(p) => p.min(starts.len() - 2),
+        Err(ins) => ins - 1,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn block_partition_covers_and_balances() {
+        for (n, parts) in [(10, 3), (7, 7), (1_000, 8), (5, 1), (3, 9)] {
+            let starts = partition_blocks(n, parts);
+            assert_eq!(starts[0], 0);
+            assert_eq!(*starts.last().unwrap(), n);
+            let sizes: Vec<usize> =
+                starts.windows(2).map(|w| w[1] - w[0]).collect();
+            let (min, max) = (
+                sizes.iter().min().unwrap(),
+                sizes.iter().max().unwrap(),
+            );
+            assert!(max - min <= 1, "unbalanced: {sizes:?}");
+            assert!(*min >= 1, "empty block: {sizes:?}");
+            for node in 0..n {
+                let p = block_owner(&starts, node);
+                assert!(starts[p] <= node && node < starts[p + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_block_partition_cut_is_two_per_part() {
+        for parts in [2usize, 4, 8] {
+            let g = Graph::ring(64);
+            let starts = partition_blocks(64, parts);
+            assert_eq!(g.cut_edges(&starts), parts, "ring cut");
+        }
+        // A ring's undirected cut under a block partition is one edge
+        // per boundary; `parts` boundaries on a cycle.
+        let g = Graph::complete(8);
+        let starts = partition_blocks(8, 2);
+        assert_eq!(g.cut_edges(&starts), 16, "K8 bisection: 4*4 pairs");
+    }
 
     #[test]
     fn paper_topologies_eight_nodes() {

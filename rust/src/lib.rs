@@ -283,6 +283,43 @@
 //! the engine so both endpoints (and PowerGossip's conversation
 //! counters, which restart at that offset) open the edge at the same
 //! round number under sync and async alike.
+//!
+//! ## Scaling & parallel simulation
+//!
+//! The virtual-time engine is built to run **million-node** topologies
+//! in one process (`cargo bench --bench sim_scale` walks the 64 → 512 →
+//! 8k → 100k → 1M rung ladder; `BENCH_sim_scale.json` is the checked-in
+//! trajectory).  Three layers make that work:
+//!
+//! * **Pooled frames** — codec encoders draw their output buffers from
+//!   a thread-local free list and [`compress::codec::Frame`] returns
+//!   its bytes on drop, so the steady-state event loop allocates
+//!   nothing per message.
+//! * **Calendar queue** — the event queue ([`sim`]'s internal
+//!   `CalendarQueue`) is a bucket wheel keyed by virtual nanoseconds
+//!   with a sorted overflow heap, O(1) amortized push/pop at any queue
+//!   depth.  Same-timestamp events pop in a **structural total order**
+//!   (event class, then node / directed-edge key, then a per-edge FIFO
+//!   sequence) that no scheduling layout can perturb.
+//! * **Partitioned conservative PDES** — `SimConfig::threads: N`
+//!   (CLI `--threads N`) splits the node set into `N` contiguous
+//!   blocks, each owning its nodes' events and outgoing couriers.
+//!   Workers advance window-by-window under a conservative **lookahead**
+//!   equal to the minimum inter-partition link latency
+//!   ([`sim::LinkSpec::min_latency_ns`]), exchanging cross-partition
+//!   deliveries at window barriers; churn applies at window boundaries
+//!   on all partitions at once.
+//!
+//! **Determinism contract:** serial is the `N = 1` degenerate case of
+//! the same windowed loop, every event executes in the structural total
+//! order, and all per-message randomness is derived from
+//! `(seed, directed edge, FIFO sequence)` rather than from scheduling
+//! history — so **any `--threads N` yields bit-identical trajectories,
+//! byte counters, virtual clocks, and `Report`s** (pinned by the
+//! `sim_parallel` suite up to 8192 nodes and by thread-invariance tests
+//! on the experiment tables).  Zero-latency cross-partition links give
+//! a zero lookahead window; the engine then quietly falls back to
+//! serial rather than deadlock.
 
 pub mod algorithms;
 pub mod comm;

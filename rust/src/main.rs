@@ -158,6 +158,10 @@ fn main() -> Result<()> {
             let mbit = args.get("mbit-per-sec", 100.0f64);
             let drop_p = args.get("drop-p", 0.05f64);
             let compute_us = args.get("compute-us-per-step", 1000u64);
+            // Partition-parallel event loop; 1 = serial.  Any value
+            // produces the same trajectory bit-for-bit (conservative
+            // PDES with link-latency lookahead).
+            let threads = args.get("threads", 1usize);
             let table_mode = args.flag("table");
             let target = args.get("target-acc", 0.5f64);
             let stragglers = parse_stragglers(
@@ -191,7 +195,7 @@ fn main() -> Result<()> {
                 compute_ns_per_step: compute_us.saturating_mul(1000),
                 stragglers,
                 churn,
-                ..SimConfig::default()
+                threads,
             };
             if table_mode {
                 let policies = sim_exp::policy_ladder(&sizing);
@@ -560,9 +564,11 @@ commands:
   train            one run: --algorithm sgd|dpsgd|ecl|cecl:K|powergossip:N
                    |choco:SPEC|lead:SPEC (the compressed-gossip rivals)
                    or --codec SPEC (C-ECL over that edge codec)
-  sim              virtual-time run, artifact-free (scales to 512+ nodes):
+  sim              virtual-time run, artifact-free (scales to 1M nodes):
                    --link ideal|constant|bandwidth|lossy --latency-us N
                    --mbit-per-sec F --drop-p F --compute-us-per-step N
+                   --threads N (partition-parallel event loop; any N
+                   yields the same trajectory bit-for-bit)
                    --straggler n:factor[,...] (per-node compute slowdown)
                    --edge-link e@SPEC[,...]   (heterogeneous per-edge links,
                    SPEC: ideal|constant:LAT|bandwidth:LAT:MBIT|

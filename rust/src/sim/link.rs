@@ -294,6 +294,24 @@ impl LinkSpec {
     pub fn name(&self) -> String {
         self.build().name()
     }
+
+    /// Lower bound on the delivery delay of any message over this
+    /// link, in virtual nanoseconds.  Every model computes `arrival >=
+    /// departure + latency` with `departure >= send time` (occupancy,
+    /// outages, busy couriers and FIFO ordering only push `departure`
+    /// later), so the propagation latency bounds the delay from below.
+    ///
+    /// This is the conservative-PDES lookahead: a partition that has
+    /// processed every event up to virtual time `T` cannot receive a
+    /// new cross-partition message before `T + min_latency_ns()`.
+    pub fn min_latency_ns(&self) -> u64 {
+        match *self {
+            LinkSpec::Ideal => 0,
+            LinkSpec::Constant { latency_us }
+            | LinkSpec::Bandwidth { latency_us, .. }
+            | LinkSpec::Lossy { latency_us, .. } => latency_us * 1_000,
+        }
+    }
 }
 
 #[cfg(test)]

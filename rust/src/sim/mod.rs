@@ -6,9 +6,14 @@
 //! scale past a few dozen nodes or report anything but byte counts.
 //! This engine replaces threads with poll-driven state machines
 //! ([`NodeStateMachine`](crate::algorithms::NodeStateMachine)) scheduled
-//! off a binary-heap event queue keyed by **virtual nanoseconds**:
+//! off a calendar-queue event scheduler keyed by **virtual
+//! nanoseconds**:
 //!
-//! * one thread simulates 512+ nodes (the scale lever),
+//! * one machine simulates a million nodes (the scale lever): per-node
+//!   scheduler state lives in SoA vectors, per-directed-edge courier
+//!   state in a CSR layout, message buffers come from a recycling
+//!   frame pool, and the scheduler is O(1) amortized
+//!   (`sim::queue::CalendarQueue`),
 //! * no thread spawn/park overhead in benches (the speed lever),
 //! * messages travel through pluggable [`LinkModel`]s — constant
 //!   latency, bandwidth-proportional serialization, i.i.d. drop with
@@ -19,11 +24,12 @@
 //!   ends) and state-tearing *churn* (edge removal / node join-leave),
 //!   so *time-to-accuracy* under imperfect networks becomes measurable
 //!   (the scenario lever),
-//! * topology churn is a **first-class event**: at every transition
-//!   boundary the engine updates its epoch-stamped
+//! * topology churn applies at **schedule boundaries**: at every
+//!   transition time the engine updates its epoch-stamped
 //!   [`TopologyView`](crate::graph::TopologyView), notifies the
 //!   affected machines (which retire / warm-start per-edge state), and
-//!   re-polls their gates.  A removed edge drains its in-flight frames
+//!   re-polls their gates — before any protocol event carrying the
+//!   same timestamp.  A removed edge drains its in-flight frames
 //!   as typed churn drops (metered, never a panic); a revived edge is a
 //!   fresh incarnation activating at `1 + max(endpoint rounds)` so both
 //!   endpoints open it at the same round number.  Staleness bounds are
@@ -34,17 +40,26 @@
 //!   delivered the moment it arrives (per-edge FIFO, stamped with the
 //!   sender's round) and a node steps once each edge is at most
 //!   `max_staleness` rounds stale — a straggler or one slow edge then
-//!   delays only its own edges (the async lever).
+//!   delays only its own edges (the async lever),
+//! * `SimConfig::threads > 1` runs the same loop as a conservative
+//!   parallel discrete-event simulation: contiguous node blocks
+//!   (`graph::partition_blocks`), one event queue per block, windows of
+//!   `lookahead = min cross-partition link latency` executed fork-join
+//!   (the parallel lever — see the crate docs, "Scaling & parallel
+//!   simulation").
 //!
 //! ## Determinism
 //!
-//! Everything is single-threaded and seeded: events tie-break on a
-//! monotone sequence number, link randomness comes from one derived
-//! [`Pcg`] consumed in event order, and per-directed-edge delivery is
-//! clamped FIFO.  Same seed ⇒ bit-identical
-//! [`Report`](crate::coordinator::Report) — the property the replay
-//! tests pin, and what makes simulator bugs reproducible from a single
-//! `u64`.
+//! Every run is a pure function of its seed.  Events tie-break on a
+//! *structural* key — `(class, src, dst, per-edge FIFO index)`, see
+//! `sim::queue` — so the pop order is a property of the event set, not
+//! of who pushed first; link randomness is a fresh
+//! [`Pcg`] derived per `(directed edge, message index)`, consumed by no
+//! one else; per-directed-edge delivery is clamped FIFO.  None of these
+//! depend on partition count, which is why `threads: N` replays
+//! `threads: 1` bit-for-bit — same trajectories, same byte counters,
+//! same [`Report`](crate::coordinator::Report) — and why simulator bugs
+//! are reproducible from a single `u64`.
 //!
 //! ## Local compute
 //!
@@ -57,6 +72,7 @@
 //! zero virtual cost (it is reporting, not protocol).
 
 pub mod link;
+mod queue;
 pub mod softmax;
 
 pub use link::{
@@ -65,17 +81,20 @@ pub use link::{
 };
 pub use softmax::SoftmaxLocal;
 
-use std::cmp::Ordering as CmpOrdering;
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Result};
 
 use crate::algorithms::{NodeStateMachine, RoundPolicy};
 use crate::comm::{directed_edge_index, CommError, Envelope, Meter, Msg, Outbox};
-use crate::graph::{ChurnSchedule, Graph, TopologyView};
+use crate::graph::{
+    block_owner, partition_blocks, ChurnSchedule, Graph, TopologyView,
+};
 use crate::metrics::{EpochRecord, History, Mean};
 use crate::util::rng::{streams, Pcg};
+
+use queue::{CalendarQueue, Event, EventKey, EventKind};
 
 /// Scenario knobs for one simulated run.  Lives inside
 /// `ExperimentSpec` (via `ExecMode::Simulated`), so it stays
@@ -97,6 +116,12 @@ pub struct SimConfig {
     /// state-tearing edge churn / node join-leave (empty = static,
     /// pinned bit-identical to the pre-churn engine).
     pub churn: ChurnSchedule,
+    /// Worker threads for the conservative-parallel loop; 1 (the
+    /// default) is the serial engine.  Any value is bit-identical to
+    /// serial by construction.  Needs latency on cross-partition links
+    /// for a nonzero lookahead window — with zero-latency (ideal)
+    /// cross-partition links the engine quietly falls back to serial.
+    pub threads: usize,
 }
 
 impl Default for SimConfig {
@@ -107,6 +132,7 @@ impl Default for SimConfig {
             compute_ns_per_step: 1_000_000, // 1 ms per local step
             stragglers: Vec::new(),
             churn: ChurnSchedule::default(),
+            threads: 1,
         }
     }
 }
@@ -199,125 +225,155 @@ pub struct SimOutcome {
 }
 
 // ---------------------------------------------------------------------
-// Event queue
+// Engine layout
 // ---------------------------------------------------------------------
 
-#[derive(Debug)]
-enum EventKind {
-    /// Node finished its K local steps and enters the exchange phase.
-    ComputeDone { node: usize },
-    /// A message reaches its destination.
-    Deliver { env: Envelope },
-    /// A churn-schedule transition boundary: re-derive edge liveness,
-    /// update the topology view, notify affected machines, re-poll
-    /// their gates, and schedule the next boundary.
-    Churn,
+/// Flattened adjacency (CSR): slot `off[i] + k` is node `i`'s k-th
+/// neighbor, with the undirected edge index and the directed edge index
+/// (for the per-direction byte meter) precomputed per slot.  Slots are
+/// also the index space of the per-directed-edge courier state
+/// ([`OutLink`]), replacing the `BTreeMap<(src, dst), _>` lookups of
+/// the heap-era engine.
+struct Csr {
+    off: Vec<usize>,
+    nbr: Vec<u32>,
+    edge: Vec<u32>,
+    dir: Vec<u32>,
 }
 
-#[derive(Debug)]
-struct Event {
-    t_ns: u64,
-    /// Monotone tie-breaker: equal-time events fire in schedule order,
-    /// which both guarantees determinism and per-edge FIFO.
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t_ns == other.t_ns && self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> CmpOrdering {
-        self.t_ns
-            .cmp(&other.t_ns)
-            .then_with(|| self.seq.cmp(&other.seq))
-    }
-}
-
-/// Min-heap wrapper (BinaryHeap is a max-heap).
-struct EventQueue {
-    heap: BinaryHeap<std::cmp::Reverse<Event>>,
-    seq: u64,
-}
-
-impl EventQueue {
-    fn new() -> EventQueue {
-        EventQueue {
-            heap: BinaryHeap::new(),
-            seq: 0,
+impl Csr {
+    fn build(graph: &Graph) -> Csr {
+        let n = graph.n();
+        let mut off = Vec::with_capacity(n + 1);
+        let mut nbr = Vec::new();
+        let mut edge = Vec::new();
+        let mut dir = Vec::new();
+        off.push(0);
+        for i in 0..n {
+            for &j in graph.neighbors(i) {
+                let e = graph.edge_index(i, j).expect("neighbor without edge");
+                nbr.push(j as u32);
+                edge.push(e as u32);
+                dir.push(directed_edge_index(e, i, j) as u32);
+            }
+            off.push(nbr.len());
         }
-    }
-
-    fn push(&mut self, t_ns: u64, kind: EventKind) {
-        self.seq += 1;
-        self.heap.push(std::cmp::Reverse(Event {
-            t_ns,
-            seq: self.seq,
-            kind,
-        }));
-    }
-
-    fn pop(&mut self) -> Option<Event> {
-        self.heap.pop().map(|std::cmp::Reverse(e)| e)
+        Csr { off, nbr, edge, dir }
     }
 }
 
-// ---------------------------------------------------------------------
-// The engine
-// ---------------------------------------------------------------------
-
-/// Message transport: meters payloads, draws link outcomes, queues
-/// serialization per directed edge (a serial link sends one message at
-/// a time — back-to-back, never in parallel), enforces FIFO delivery,
-/// and schedules `Deliver` events.
-struct Courier<'a> {
-    graph: &'a Graph,
-    churn: &'a ChurnSchedule,
-    link: Box<dyn LinkModel>,
-    /// Heterogeneous-link overrides keyed by undirected edge index;
-    /// edges not listed fall back to `link`.
-    edge_links: BTreeMap<usize, Box<dyn LinkModel>>,
-    link_rng: Pcg,
-    meter: &'a Meter,
-    queue: EventQueue,
-    /// When each directed edge finishes serializing its last queued
+/// Per-directed-edge courier state, indexed by CSR slot.
+#[derive(Clone, Copy, Default)]
+struct OutLink {
+    /// When this directed edge finishes serializing its last queued
     /// message — the earliest the next one may start.
-    busy_until: BTreeMap<(usize, usize), u64>,
-    /// Last scheduled arrival per directed edge — delivery never
-    /// reorders within an edge (TCP-like semantics the protocols rely
-    /// on).  With per-edge-constant latency this follows from the
-    /// departure queue already; kept as a defensive clamp.
-    last_arrival: BTreeMap<(usize, usize), u64>,
+    busy_until: u64,
+    /// Last scheduled arrival — delivery never reorders within an edge
+    /// (TCP-like semantics the protocols rely on).  With per-edge
+    /// constant latency this follows from the departure queue already;
+    /// kept as a defensive clamp.
+    last_arrival: u64,
+    /// Messages sent on this directed edge so far: the FIFO index in
+    /// the event key and the per-message link-RNG stream index.
+    fifo: u64,
 }
 
-impl Courier<'_> {
-    fn send(&mut self, src: usize, dst: usize, round: usize, msg: Msg,
-            now: u64, view: &TopologyView) -> Result<()> {
-        let edge = self
-            .graph
-            .edge_index(src, dst)
+/// One node's eval at an epoch boundary, recorded where (and when) it
+/// happens; the driver folds samples into `EpochRecord`s after the run.
+/// `own_bytes` is the node's *own* cumulative send counter at its
+/// boundary — a per-node quantity, so it is identical under any
+/// partitioning (a global meter snapshot would not be).
+struct EvalSample {
+    epoch: usize,
+    node: usize,
+    acc: f64,
+    loss: f64,
+    train: f64,
+    own_bytes: u64,
+    t_ns: u64,
+}
+
+/// Read-only state every partition shares (all `Sync`: the meter is
+/// atomic, the rest is immutable for the duration of a window).
+struct Shared<'a> {
+    graph: &'a Graph,
+    csr: &'a Csr,
+    sched: &'a Schedule,
+    churn: &'a ChurnSchedule,
+    meter: &'a Meter,
+    policy: RoundPolicy,
+    compute_ns: &'a [u64],
+    zeros: &'a [f32],
+    /// Block-partition boundaries (`graph::partition_blocks`).
+    starts: &'a [usize],
+    seed: u64,
+    n: usize,
+    total_rounds: usize,
+    verbose: bool,
+}
+
+/// One graph partition: the nodes `lo..hi`, their scheduler state in
+/// SoA vectors (indexed `node - lo`), the courier state of every
+/// directed edge *originating* here, and this block's event queue.
+/// The serial engine is exactly one `Part` spanning `0..n`.
+struct Part {
+    lo: usize,
+    hi: usize,
+    machines: Vec<Box<dyn NodeStateMachine>>,
+    locals: Vec<Box<dyn LocalUpdate>>,
+    ws: Vec<Vec<f32>>,
+    rounds: Vec<usize>,
+    exchanging: Vec<bool>,
+    done: Vec<bool>,
+    train_loss: Vec<Mean>,
+    /// Per-source FIFO buffers for messages the machine is not ready
+    /// for yet (future rounds, or arrivals during local compute);
+    /// sorted by source id, mirroring the old `BTreeMap` scan order.
+    inboxes: Vec<Vec<(u32, VecDeque<Envelope>)>>,
+    /// Courier state for CSR slots `out_base..`, i.e. edges out of
+    /// `lo..hi` — every send on a directed edge happens on the
+    /// sender's partition, so this state needs no sharing.
+    out: Vec<OutLink>,
+    out_base: usize,
+    link: Box<dyn LinkModel>,
+    edge_links: BTreeMap<usize, Box<dyn LinkModel>>,
+    queue: CalendarQueue,
+    /// Deliveries bound for other partitions, routed by the driver at
+    /// the window barrier (always after the current window by the
+    /// lookahead bound).
+    mail: Vec<Event>,
+    finished: usize,
+    last_t: u64,
+    evals: Vec<EvalSample>,
+}
+
+impl Part {
+    fn slot_of(&self, sh: &Shared, src: usize, dst: usize) -> Option<usize> {
+        (sh.csr.off[src]..sh.csr.off[src + 1])
+            .find(|&s| sh.csr.nbr[s] as usize == dst)
+    }
+
+    /// Message transport: meters payloads, draws link outcomes from a
+    /// per-message derived RNG, queues serialization per directed edge
+    /// (a serial link sends one message at a time — back-to-back,
+    /// never in parallel), enforces FIFO delivery, and schedules the
+    /// `Deliver` event (locally, or via `mail` across partitions).
+    fn send(&mut self, sh: &Shared, view: &TopologyView, src: usize,
+            dst: usize, round: usize, msg: Msg, now: u64) -> Result<()> {
+        let slot = self
+            .slot_of(sh, src, dst)
             .ok_or_else(|| anyhow!("sim: ({src}, {dst}) is not an edge"))?;
+        let edge = sh.csr.edge[slot] as usize;
+        let dir = sh.csr.dir[slot] as usize;
         let bytes = msg.wire_bytes();
-        self.meter.record_send(src, bytes);
-        self.meter
-            .record_edge_send(directed_edge_index(edge, src, dst), bytes as u64);
+        sh.meter.record_send(src, bytes);
+        sh.meter.record_edge_send(dir, bytes as u64);
         let life = view.edge_life(edge);
         if !life.live {
             // Defensive: a send raced an edge removal.  The first-copy
             // bytes stay metered (the transmission happened), the frame
             // vanishes as a typed churn drop.
-            self.meter.record_churn_drop(bytes as u64);
+            sh.meter.record_churn_drop(bytes as u64);
             return Ok(());
         }
         let model = self
@@ -325,28 +381,33 @@ impl Courier<'_> {
             .get(&edge)
             .map(|m| m.as_ref())
             .unwrap_or(self.link.as_ref());
-        let tx = model.transmit(bytes, &mut self.link_rng);
+        let ol = &mut self.out[slot - self.out_base];
+        let fifo = ol.fifo;
+        ol.fifo += 1;
+        // One derived stream per (directed edge, message index): link
+        // randomness is independent of global event order, hence of
+        // partitioning.
+        let mut rng =
+            Pcg::derive(sh.seed, &[streams::LINK, dir as u64, fifo]);
+        let tx = model.transmit(bytes, &mut rng);
         if tx.attempts > 1 {
-            self.meter.record_retransmit(src, tx.retransmit_bytes(bytes));
+            sh.meter.record_retransmit(src, tx.retransmit_bytes(bytes));
         }
         // Serialization starts when the edge is up AND free: an
         // outage-held edge delays the message until the window ends,
         // and a busy edge queues it behind the previous message.
-        let start = self
-            .churn
-            .outage_next_up(edge, now)
-            .max(*self.busy_until.get(&(src, dst)).unwrap_or(&0));
+        let start = sh.churn.outage_next_up(edge, now).max(ol.busy_until);
         let departure = start.saturating_add(tx.occupancy_ns);
-        self.busy_until.insert((src, dst), departure);
+        ol.busy_until = departure;
         let mut arrival = departure.saturating_add(tx.latency_ns);
-        let last = self.last_arrival.entry((src, dst)).or_insert(0);
-        if arrival < *last {
-            arrival = *last;
+        if arrival < ol.last_arrival {
+            arrival = ol.last_arrival;
         }
-        *last = arrival;
-        self.queue.push(
-            arrival,
-            EventKind::Deliver {
+        ol.last_arrival = arrival;
+        let ev = Event {
+            t_ns: arrival,
+            key: EventKey::deliver(src, dst, fifo),
+            kind: EventKind::Deliver {
                 env: Envelope {
                     src,
                     dst,
@@ -355,89 +416,86 @@ impl Courier<'_> {
                     payload: msg,
                 },
             },
-        );
+        };
+        if (self.lo..self.hi).contains(&dst) {
+            self.queue.push(ev);
+        } else {
+            self.mail.push(ev);
+        }
         Ok(())
     }
-}
 
-struct NodeRt {
-    machine: Box<dyn NodeStateMachine>,
-    local: Box<dyn LocalUpdate>,
-    w: Vec<f32>,
-    round: usize,
-    exchanging: bool,
-    /// Per-source FIFO buffers for messages the machine is not ready
-    /// for yet (future rounds, or arrivals during local compute).
-    inbox: BTreeMap<usize, VecDeque<Envelope>>,
-    train_loss: Mean,
-    done: bool,
-}
-
-struct World<'a> {
-    sched: &'a Schedule,
-    policy: RoundPolicy,
-    rt: Vec<NodeRt>,
-    courier: Courier<'a>,
-    /// The engine's live topology snapshot (version 0 = static full
-    /// view; machines key their lifecycle off its per-edge epochs).
-    view: TopologyView,
-    churn: &'a ChurnSchedule,
-    /// Per-epoch eval slots, filled as nodes reach the epoch boundary.
-    evals: BTreeMap<usize, Vec<Option<(f64, f64, f64)>>>,
-    history: History,
-    compute_ns: Vec<u64>,
-    zeros: Vec<f32>,
-    finished: usize,
-    n: usize,
-    total_rounds: usize,
-    verbose: bool,
-}
-
-impl World<'_> {
-    fn on_compute_done(&mut self, i: usize, now: u64) -> Result<()> {
-        let round;
-        let outv: Vec<(usize, Msg)>;
-        {
-            let nrt = &mut self.rt[i];
-            round = nrt.round;
-            let alpha_deg = nrt.machine.alpha_deg();
-            let loss = match nrt.machine.zsum() {
-                Some(z) => {
-                    nrt.local.local_round(round, &mut nrt.w, z, alpha_deg)?
+    /// Drain this partition's events with `t < end_ns`, in `(t, key)`
+    /// order.  Returns the number of events processed.  Safe to run
+    /// concurrently with other partitions' windows: the lookahead
+    /// bound guarantees no cross-partition event for this window is
+    /// still in flight.
+    fn run_window(&mut self, sh: &Shared, view: &TopologyView,
+                  end_ns: u64) -> Result<u64> {
+        let mut count = 0u64;
+        while let Some(t) = self.queue.peek_t() {
+            if t >= end_ns {
+                break;
+            }
+            let ev = self.queue.pop().expect("peeked nonempty");
+            self.last_t = self.last_t.max(ev.t_ns);
+            count += 1;
+            match ev.kind {
+                EventKind::ComputeDone { node } => {
+                    self.on_compute_done(sh, view, node, ev.t_ns)?
                 }
-                None => nrt.local.local_round(round, &mut nrt.w, &self.zeros,
-                                              alpha_deg)?,
-            };
-            nrt.train_loss.add(loss);
-            let mut out = Outbox::new();
-            nrt.machine
-                .round_begin(round, &self.view, &mut nrt.w, &mut out)?;
-            nrt.exchanging = true;
-            outv = out.drain().collect();
+                EventKind::Deliver { env } => {
+                    self.on_deliver(sh, view, env, ev.t_ns)?
+                }
+            }
         }
+        Ok(count)
+    }
+
+    fn on_compute_done(&mut self, sh: &Shared, view: &TopologyView,
+                       i: usize, now: u64) -> Result<()> {
+        let li = i - self.lo;
+        let round = self.rounds[li];
+        let outv: Vec<(usize, Msg)> = {
+            let machine = &mut self.machines[li];
+            let alpha_deg = machine.alpha_deg();
+            let w = &mut self.ws[li];
+            let loss = match machine.zsum() {
+                Some(z) => {
+                    self.locals[li].local_round(round, w, z, alpha_deg)?
+                }
+                None => self.locals[li].local_round(round, w, sh.zeros,
+                                                    alpha_deg)?,
+            };
+            self.train_loss[li].add(loss);
+            let mut out = Outbox::new();
+            machine.round_begin(round, view, w, &mut out)?;
+            self.exchanging[li] = true;
+            out.drain().collect()
+        };
         for (to, msg) in outv {
-            self.courier.send(i, to, round, msg, now, &self.view)?;
+            self.send(sh, view, i, to, round, msg, now)?;
         }
         // Drain anything that arrived while computing; `pump` finishes
         // the round once the policy is satisfied and nothing more is
         // deliverable (degenerate rounds — SGD, degree 0, async slack
         // within the staleness budget — complete without traffic).
-        self.pump(i, now)
+        self.pump(sh, view, i, now)
     }
 
-    fn on_deliver(&mut self, env: Envelope, now: u64) -> Result<()> {
+    fn on_deliver(&mut self, sh: &Shared, view: &TopologyView,
+                  env: Envelope, now: u64) -> Result<()> {
         let dst = env.dst;
-        ensure!(dst < self.rt.len(), "sim: delivery to unknown node {dst}");
+        ensure!(dst < sh.n, "sim: delivery to unknown node {dst}");
         // A frame that was in flight across a churn event drains as a
         // typed drop: its edge is gone, or reborn into a different
         // incarnation than the one it was encoded for.
-        if let Some(edge) = self.courier.graph.edge_index(env.src, dst) {
-            let life = self.view.edge_life(edge);
+        if let Some(edge) = sh.graph.edge_index(env.src, dst) {
+            let life = view.edge_life(edge);
             if !life.live || life.epoch != env.epoch {
-                self.courier
-                    .meter
+                sh.meter
                     .record_churn_drop(env.payload.wire_bytes() as u64);
-                if self.verbose {
+                if sh.verbose {
                     println!(
                         "[sim] {}",
                         CommError::ChurnDropped { src: env.src, dst, edge }
@@ -446,67 +504,19 @@ impl World<'_> {
                 return Ok(());
             }
         }
-        self.rt[dst].inbox.entry(env.src).or_default().push_back(env);
-        if self.rt[dst].exchanging {
-            self.pump(dst, now)?;
-        }
-        Ok(())
-    }
-
-    /// Apply the churn schedule's edge liveness at `now`: kill edges
-    /// that churned down (purging their buffered frames as typed
-    /// drops), revive edges that came back (fresh incarnation,
-    /// activating at `1 + max(endpoint rounds)` so both endpoints open
-    /// it at the same round number), then notify every affected machine
-    /// and re-poll its gate — a node that was waiting on a now-dead
-    /// edge completes its round here instead of deadlocking.
-    fn apply_churn(&mut self, now: u64) -> Result<()> {
-        let edges: Vec<(usize, usize)> =
-            self.courier.graph.edges().to_vec();
-        let mut affected: std::collections::BTreeSet<usize> =
-            std::collections::BTreeSet::new();
-        for (e, &(i, j)) in edges.iter().enumerate() {
-            let down = self.churn.churned_down(e, i, j, now);
-            let life = self.view.edge_life(e);
-            if life.live && down {
-                self.view.kill_edge(e);
-                self.courier.meter.record_edge_churn();
-                // Purge frames already delivered into inbox buffers:
-                // in-flight state of a dead edge drains as drops.
-                for (a, b) in [(i, j), (j, i)] {
-                    if let Some(q) = self.rt[b].inbox.get_mut(&a) {
-                        for env in q.drain(..) {
-                            self.courier.meter.record_churn_drop(
-                                env.payload.wire_bytes() as u64,
-                            );
-                        }
-                    }
-                }
-                affected.insert(i);
-                affected.insert(j);
-            } else if !life.live && !down {
-                let activation =
-                    1 + self.rt[i].round.max(self.rt[j].round);
-                self.view.revive_edge(e, activation);
-                self.courier.meter.record_edge_churn();
-                affected.insert(i);
-                affected.insert(j);
+        let li = dst - self.lo;
+        let src = env.src as u32;
+        let inbox = &mut self.inboxes[li];
+        match inbox.binary_search_by_key(&src, |&(s, _)| s) {
+            Ok(k) => inbox[k].1.push_back(env),
+            Err(k) => {
+                let mut q = VecDeque::new();
+                q.push_back(env);
+                inbox.insert(k, (src, q));
             }
         }
-        for &i in &affected {
-            let outv: Vec<(usize, Msg)> = {
-                let nrt = &mut self.rt[i];
-                let mut out = Outbox::new();
-                nrt.machine.on_topology(&self.view, &mut nrt.w, &mut out)?;
-                out.drain().collect()
-            };
-            let round = self.rt[i].round;
-            for (to, msg) in outv {
-                self.courier.send(i, to, round, msg, now, &self.view)?;
-            }
-            if self.rt[i].exchanging {
-                self.pump(i, now)?;
-            }
+        if self.exchanging[li] {
+            self.pump(sh, view, dst, now)?;
         }
         Ok(())
     }
@@ -520,16 +530,18 @@ impl World<'_> {
     /// head immediately, whatever round it was sent in — the machine
     /// folds in every message it has (the freshest state per edge)
     /// before its local step.
-    fn pump(&mut self, i: usize, now: u64) -> Result<()> {
+    fn pump(&mut self, sh: &Shared, view: &TopologyView, i: usize,
+            now: u64) -> Result<()> {
+        let li = i - self.lo;
         loop {
-            if !self.rt[i].exchanging {
+            if !self.exchanging[li] {
                 return Ok(());
             }
-            let round = self.rt[i].round;
+            let round = self.rounds[li];
             let mut found: Option<usize> = None;
-            for (&src, q) in self.rt[i].inbox.iter() {
+            for (src, q) in self.inboxes[li].iter() {
                 if let Some(env) = q.front() {
-                    match self.policy {
+                    match sh.policy {
                         RoundPolicy::Sync => {
                             ensure!(
                                 env.round >= round,
@@ -538,12 +550,12 @@ impl World<'_> {
                                 env.round
                             );
                             if env.round == round {
-                                found = Some(src);
+                                found = Some(*src as usize);
                                 break;
                             }
                         }
                         RoundPolicy::Async { .. } => {
-                            found = Some(src);
+                            found = Some(*src as usize);
                             break;
                         }
                     }
@@ -554,105 +566,178 @@ impl World<'_> {
                 // Under sync this fires exactly when all of this round's
                 // messages are in (one per edge — the classic barrier);
                 // under async also on slack within the staleness budget.
-                if self.rt[i].machine.round_complete() {
-                    self.finish_round(i, now)?;
+                if self.machines[li].round_complete() {
+                    self.finish_round(sh, view, i, now)?;
                 }
                 return Ok(());
             };
-            let env = self.rt[i]
-                .inbox
-                .get_mut(&src)
-                .and_then(|q| q.pop_front())
-                .expect("front just observed");
-            let outv: Vec<(usize, Msg)>;
-            {
-                let nrt = &mut self.rt[i];
+            let env = {
+                let inbox = &mut self.inboxes[li];
+                let k = inbox
+                    .binary_search_by_key(&(src as u32), |&(s, _)| s)
+                    .expect("front just observed");
+                inbox[k].1.pop_front().expect("front just observed")
+            };
+            let outv: Vec<(usize, Msg)> = {
                 let mut out = Outbox::new();
                 // The machine receives the SENDER's round stamp; its own
                 // round only gates completion.
-                nrt.machine
-                    .on_message(env.round, src, env.payload, &self.view,
-                                &mut nrt.w, &mut out)?;
-                outv = out.drain().collect();
-            }
+                self.machines[li].on_message(env.round, src, env.payload,
+                                             view, &mut self.ws[li],
+                                             &mut out)?;
+                out.drain().collect()
+            };
             for (to, msg) in outv {
-                self.courier.send(i, to, round, msg, now, &self.view)?;
+                self.send(sh, view, i, to, round, msg, now)?;
             }
         }
     }
 
-    fn finish_round(&mut self, i: usize, now: u64) -> Result<()> {
-        let round;
-        {
-            let nrt = &mut self.rt[i];
-            round = nrt.round;
-            nrt.machine.round_end(round, &self.view, &mut nrt.w)?;
-            nrt.exchanging = false;
+    fn finish_round(&mut self, sh: &Shared, view: &TopologyView, i: usize,
+                    now: u64) -> Result<()> {
+        let li = i - self.lo;
+        let round = self.rounds[li];
+        self.machines[li].round_end(round, view, &mut self.ws[li])?;
+        self.exchanging[li] = false;
+        if let Some(&epoch) = sh.sched.eval_rounds.get(&round) {
+            let (acc, loss) = self.locals[li].evaluate(&self.ws[li])?;
+            let train = self.train_loss[li].take();
+            self.evals.push(EvalSample {
+                epoch,
+                node: i,
+                acc,
+                loss,
+                train,
+                own_bytes: sh.meter.bytes_sent(i),
+                t_ns: now,
+            });
         }
-        if let Some(&epoch) = self.sched.eval_rounds.get(&round) {
-            let (acc, loss) = {
-                let nrt = &mut self.rt[i];
-                nrt.local.evaluate(&nrt.w)?
-            };
-            let tl = self.rt[i].train_loss.take();
-            let n = self.n;
-            let full = {
-                let slots = self
-                    .evals
-                    .entry(epoch)
-                    .or_insert_with(|| vec![None; n]);
-                ensure!(slots[i].is_none(), "node {i} evaluated epoch {epoch} twice");
-                slots[i] = Some((acc, loss, tl));
-                slots.iter().all(Option::is_some)
-            };
-            if full {
-                let slots = self.evals.remove(&epoch).expect("just filled");
-                let (mut a, mut l, mut t) =
-                    (Mean::default(), Mean::default(), Mean::default());
-                for s in slots.into_iter().flatten() {
-                    a.add(s.0);
-                    l.add(s.1);
-                    t.add(s.2);
-                }
-                let rec = EpochRecord {
-                    epoch,
-                    mean_accuracy: a.take(),
-                    mean_loss: l.take(),
-                    train_loss: t.take(),
-                    cum_bytes_per_node: self.courier.meter.mean_bytes_per_node(),
-                    sim_time_secs: now as f64 / 1e9,
-                };
-                if self.verbose {
-                    println!(
-                        "[sim] epoch {:>4}: acc {:.3} loss {:.3} train {:.3} \
-                         sent/node {:.0} KB  t={:.3}s",
-                        rec.epoch,
-                        rec.mean_accuracy,
-                        rec.mean_loss,
-                        rec.train_loss,
-                        rec.cum_bytes_per_node / 1024.0,
-                        rec.sim_time_secs
-                    );
-                }
-                self.history.push(rec);
-            }
-        }
-        let done = {
-            let nrt = &mut self.rt[i];
-            nrt.round += 1;
-            nrt.round >= self.total_rounds
-        };
-        if done {
-            self.rt[i].done = true;
+        self.rounds[li] += 1;
+        if self.rounds[li] >= sh.total_rounds {
+            self.done[li] = true;
             self.finished += 1;
         } else {
-            let dt = self.compute_ns[i];
-            self.courier
-                .queue
-                .push(now.saturating_add(dt), EventKind::ComputeDone { node: i });
+            let dt = sh.compute_ns[i];
+            self.queue.push(Event {
+                t_ns: now.saturating_add(dt),
+                key: EventKey::compute(i),
+                kind: EventKind::ComputeDone { node: i },
+            });
         }
         Ok(())
     }
+}
+
+// ---------------------------------------------------------------------
+// The window driver
+// ---------------------------------------------------------------------
+
+/// Run one lookahead window `[*, end_ns)` on every partition — inline
+/// when there is one partition (the serial fast path, no thread
+/// machinery at all), fork-join otherwise.
+fn run_windows(parts: &mut [Part], sh: &Shared, view: &TopologyView,
+               end_ns: u64) -> Result<u64> {
+    if parts.len() == 1 {
+        return parts[0].run_window(sh, view, end_ns);
+    }
+    let results: Vec<Result<u64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = parts
+            .iter_mut()
+            .map(|p| scope.spawn(move || p.run_window(sh, view, end_ns)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sim worker thread panicked"))
+            .collect()
+    });
+    let mut total = 0u64;
+    for r in results {
+        total += r?;
+    }
+    Ok(total)
+}
+
+/// Route cross-partition deliveries accumulated during the last window
+/// (or churn application) into their target queues.  Runs at the
+/// barrier, single-threaded; with one partition `mail` is always empty.
+fn exchange_mail(parts: &mut [Part], sh: &Shared) {
+    let mut moved: Vec<Event> = Vec::new();
+    for p in parts.iter_mut() {
+        moved.append(&mut p.mail);
+    }
+    for ev in moved {
+        let dst = match &ev.kind {
+            EventKind::Deliver { env } => env.dst,
+            EventKind::ComputeDone { node } => *node,
+        };
+        parts[block_owner(sh.starts, dst)].queue.push(ev);
+    }
+}
+
+/// Apply the churn schedule's edge liveness at `now`: kill edges that
+/// churned down (purging their buffered frames as typed drops), revive
+/// edges that came back (fresh incarnation, activating at `1 +
+/// max(endpoint rounds)` so both endpoints open it at the same round
+/// number), then notify every affected machine and re-poll its gate —
+/// a node that was waiting on a now-dead edge completes its round here
+/// instead of deadlocking.  Runs at window boundaries with every
+/// partition quiescent, *before* any protocol event carrying the same
+/// timestamp (the documented boundary order).
+fn apply_churn(parts: &mut [Part], sh: &Shared, view: &mut TopologyView,
+               now: u64) -> Result<()> {
+    let mut affected: BTreeSet<usize> = BTreeSet::new();
+    for (e, &(i, j)) in sh.graph.edges().iter().enumerate() {
+        let down = sh.churn.churned_down(e, i, j, now);
+        let life = view.edge_life(e);
+        if life.live && down {
+            view.kill_edge(e);
+            sh.meter.record_edge_churn();
+            // Purge frames already delivered into inbox buffers:
+            // in-flight state of a dead edge drains as drops.
+            for (a, b) in [(i, j), (j, i)] {
+                let pb = &mut parts[block_owner(sh.starts, b)];
+                let lb = b - pb.lo;
+                if let Ok(k) = pb.inboxes[lb]
+                    .binary_search_by_key(&(a as u32), |&(s, _)| s)
+                {
+                    for env in pb.inboxes[lb][k].1.drain(..) {
+                        sh.meter.record_churn_drop(
+                            env.payload.wire_bytes() as u64,
+                        );
+                    }
+                }
+            }
+            affected.insert(i);
+            affected.insert(j);
+        } else if !life.live && !down {
+            let round_of = |x: usize| {
+                let p = &parts[block_owner(sh.starts, x)];
+                p.rounds[x - p.lo]
+            };
+            let activation = 1 + round_of(i).max(round_of(j));
+            view.revive_edge(e, activation);
+            sh.meter.record_edge_churn();
+            affected.insert(i);
+            affected.insert(j);
+        }
+    }
+    for &i in &affected {
+        let p = &mut parts[block_owner(sh.starts, i)];
+        let li = i - p.lo;
+        let outv: Vec<(usize, Msg)> = {
+            let mut out = Outbox::new();
+            p.machines[li].on_topology(view, &mut p.ws[li], &mut out)?;
+            out.drain().collect()
+        };
+        let round = p.rounds[li];
+        for (to, msg) in outv {
+            p.send(sh, view, i, to, round, msg, now)?;
+        }
+        if p.exchanging[li] {
+            p.pump(sh, view, i, now)?;
+        }
+    }
+    Ok(())
 }
 
 /// Run `sched.total_rounds()` rounds of the given per-node protocols in
@@ -677,7 +762,7 @@ pub fn simulate(
         nodes.len()
     );
     cfg.link.validate()?;
-    let mut edge_links: BTreeMap<usize, Box<dyn LinkModel>> = BTreeMap::new();
+    let mut seen_edges: BTreeSet<usize> = BTreeSet::new();
     for (edge, spec) in &cfg.edge_links {
         ensure!(
             *edge < graph.edges().len(),
@@ -687,7 +772,7 @@ pub fn simulate(
         );
         spec.validate()?;
         ensure!(
-            edge_links.insert(*edge, spec.build()).is_none(),
+            seen_edges.insert(*edge),
             "sim: duplicate per-edge link override for edge {edge}"
         );
     }
@@ -735,7 +820,7 @@ pub fn simulate(
     let d = nodes.iter().map(|s| s.w.len()).max().unwrap_or(0);
     let mut compute_ns =
         vec![cfg.compute_ns_per_step.saturating_mul(sched.local_steps as u64); n];
-    let mut straggler_seen = std::collections::BTreeSet::new();
+    let mut straggler_seen = BTreeSet::new();
     for &(i, f) in &cfg.stragglers {
         ensure!(i < n, "sim: straggler index {i} out of range");
         ensure!(f > 0.0, "sim: straggler factor must be positive");
@@ -748,121 +833,286 @@ pub fn simulate(
         compute_ns[i] = (compute_ns[i] as f64 * f) as u64;
     }
 
-    let mut world = World {
-        sched,
-        policy,
-        rt: nodes
-            .into_iter()
-            .map(|s| NodeRt {
-                machine: s.machine,
-                local: s.local,
-                w: s.w,
-                round: 0,
-                exchanging: false,
-                inbox: BTreeMap::new(),
-                train_loss: Mean::default(),
-                done: false,
+    // Partitioning and conservative lookahead.  With one partition the
+    // lookahead is unbounded (windows split only at churn boundaries)
+    // and the loop below IS the serial engine; with P > 1 a window may
+    // extend `lookahead` past its first event, because no
+    // cross-partition message can arrive sooner than `send time + min
+    // cross-edge latency`.
+    let mut nparts = cfg.threads.max(1).min(n);
+    let mut starts = partition_blocks(n, nparts);
+    let mut lookahead = u64::MAX;
+    if nparts > 1 {
+        let mut la = u64::MAX;
+        for (e, &(i, j)) in graph.edges().iter().enumerate() {
+            if block_owner(&starts, i) != block_owner(&starts, j) {
+                let spec = cfg
+                    .edge_links
+                    .iter()
+                    .find(|(k, _)| *k == e)
+                    .map(|(_, s)| s)
+                    .unwrap_or(&cfg.link);
+                la = la.min(spec.min_latency_ns());
+            }
+        }
+        if la == 0 {
+            // Zero-latency cross-partition links give the conservative
+            // engine no window to run ahead in — serial is the only
+            // correct schedule.  Fall back (results are identical by
+            // construction, only wall-clock differs).
+            if verbose {
+                println!(
+                    "[sim] threads {} requested but a cross-partition \
+                     link has zero latency; running serial",
+                    cfg.threads
+                );
+            }
+            nparts = 1;
+            starts = partition_blocks(n, 1);
+        } else {
+            lookahead = la;
+        }
+    }
+
+    let csr = Csr::build(graph);
+    // Calendar-queue day width: a fraction of the round pace, so one
+    // round's events spread over a few days.
+    let pace = cfg
+        .compute_ns_per_step
+        .saturating_mul(sched.local_steps as u64)
+        .max(8);
+    let width = (pace / 8).max(1);
+
+    let mut parts: Vec<Part> = Vec::with_capacity(nparts);
+    let mut setups = nodes.into_iter();
+    for p in 0..nparts {
+        let (lo, hi) = (starts[p], starts[p + 1]);
+        let count = hi - lo;
+        let mut machines = Vec::with_capacity(count);
+        let mut locals = Vec::with_capacity(count);
+        let mut ws = Vec::with_capacity(count);
+        for s in setups.by_ref().take(count) {
+            machines.push(s.machine);
+            locals.push(s.local);
+            ws.push(s.w);
+        }
+        let inboxes = (lo..hi)
+            .map(|i| {
+                graph
+                    .neighbors(i)
+                    .iter()
+                    .map(|&j| (j as u32, VecDeque::new()))
+                    .collect()
             })
-            .collect(),
-        courier: Courier {
-            graph,
-            churn: &cfg.churn,
+            .collect();
+        parts.push(Part {
+            lo,
+            hi,
+            machines,
+            locals,
+            ws,
+            rounds: vec![0; count],
+            exchanging: vec![false; count],
+            done: vec![false; count],
+            train_loss: (0..count).map(|_| Mean::default()).collect(),
+            inboxes,
+            out: vec![OutLink::default(); csr.off[hi] - csr.off[lo]],
+            out_base: csr.off[lo],
             link: cfg.link.build(),
-            edge_links,
-            link_rng: Pcg::derive(seed, &[streams::LINK]),
-            meter: &meter,
-            queue: EventQueue::new(),
-            busy_until: BTreeMap::new(),
-            last_arrival: BTreeMap::new(),
-        },
-        view: TopologyView::full(graph.edges().len()),
+            edge_links: cfg
+                .edge_links
+                .iter()
+                .map(|(e, s)| (*e, s.build()))
+                .collect(),
+            queue: CalendarQueue::new(width),
+            mail: Vec::new(),
+            finished: 0,
+            last_t: 0,
+            evals: Vec::new(),
+        });
+    }
+
+    let zeros = vec![0.0f32; d];
+    let sh = Shared {
+        graph,
+        csr: &csr,
+        sched,
         churn: &cfg.churn,
-        evals: BTreeMap::new(),
-        history: History::default(),
-        compute_ns,
-        zeros: vec![0.0; d],
-        finished: 0,
+        meter: &meter,
+        policy,
+        compute_ns: &compute_ns,
+        zeros: &zeros,
+        starts: &starts,
+        seed,
         n,
         total_rounds,
         verbose,
     };
+    let mut view = TopologyView::full(graph.edges().len());
 
     // Apply the schedule's t = 0 state (edges absent from the start,
     // nodes that join later) before anyone computes, then arm the first
-    // transition boundary as a first-class event.
+    // transition boundary.
+    let mut armed: Option<u64> = None;
     if cfg.churn.has_churn() {
-        world.apply_churn(0)?;
-        if let Some(t) = cfg.churn.next_transition_after(0) {
-            world.courier.queue.push(t, EventKind::Churn);
-        }
+        apply_churn(&mut parts, &sh, &mut view, 0)?;
+        exchange_mail(&mut parts, &sh);
+        armed = cfg.churn.next_transition_after(0);
     }
 
     // Every node starts its round-0 local compute at t = 0.
-    for i in 0..n {
-        let dt = world.compute_ns[i];
-        world.courier.queue.push(dt, EventKind::ComputeDone { node: i });
-    }
-
-    // Guard against a churn-only spin: the random rule schedules slot
-    // boundaries forever, so if nothing but churn events fire for a
-    // very long stretch the run is deadlocked — report it instead of
-    // looping silently.
-    let mut churn_streak = 0u64;
-    let mut final_t = 0u64;
-    while let Some(ev) = world.courier.queue.pop() {
-        final_t = ev.t_ns;
-        match ev.kind {
-            EventKind::ComputeDone { node } => {
-                churn_streak = 0;
-                world.on_compute_done(node, ev.t_ns)?
-            }
-            EventKind::Deliver { env } => {
-                churn_streak = 0;
-                world.on_deliver(env, ev.t_ns)?
-            }
-            EventKind::Churn => {
-                churn_streak += 1;
-                ensure!(
-                    churn_streak < 200_000,
-                    "sim deadlock: {churn_streak} consecutive churn \
-                     events with no protocol progress"
-                );
-                world.apply_churn(ev.t_ns)?;
-                // Keep the boundary clock armed while work remains.
-                if world.finished < world.n {
-                    if let Some(t) =
-                        cfg.churn.next_transition_after(ev.t_ns)
-                    {
-                        world.courier.queue.push(t, EventKind::Churn);
-                    }
-                }
-            }
+    for (p, part) in parts.iter_mut().enumerate() {
+        for i in starts[p]..starts[p + 1] {
+            part.queue.push(Event {
+                t_ns: compute_ns[i],
+                key: EventKey::compute(i),
+                kind: EventKind::ComputeDone { node: i },
+            });
         }
     }
-    let stuck: Vec<(usize, usize, bool)> = world
-        .rt
+
+    // The window loop.  Guard against a churn-only spin: the random
+    // rule schedules slot boundaries forever, so if nothing but churn
+    // boundaries fire for a very long stretch the run is deadlocked —
+    // report it instead of looping silently.
+    let mut churn_streak = 0u64;
+    let mut final_t = 0u64;
+    loop {
+        let head = parts.iter_mut().filter_map(|p| p.queue.peek_t()).min();
+        let boundary = match (head, armed) {
+            (None, None) => break,
+            (None, Some(tc)) => Some(tc),
+            (Some(t), Some(tc)) if tc <= t => Some(tc),
+            (Some(_), _) => None,
+        };
+        if let Some(tc) = boundary {
+            churn_streak += 1;
+            ensure!(
+                churn_streak < 200_000,
+                "sim deadlock: {churn_streak} consecutive churn \
+                 events with no protocol progress"
+            );
+            apply_churn(&mut parts, &sh, &mut view, tc)?;
+            exchange_mail(&mut parts, &sh);
+            final_t = final_t.max(tc);
+            // Keep the boundary clock armed while work remains.
+            let finished: usize = parts.iter().map(|p| p.finished).sum();
+            armed = if finished < n {
+                cfg.churn.next_transition_after(tc)
+            } else {
+                None
+            };
+            continue;
+        }
+        let t = head.expect("non-boundary iteration has a head event");
+        let end = armed
+            .unwrap_or(u64::MAX)
+            .min(t.saturating_add(lookahead));
+        let processed = run_windows(&mut parts, &sh, &view, end)?;
+        if processed > 0 {
+            churn_streak = 0;
+        }
+        exchange_mail(&mut parts, &sh);
+    }
+
+    let finished: usize = parts.iter().map(|p| p.finished).sum();
+    let stuck: Vec<(usize, usize, bool)> = parts
         .iter()
-        .enumerate()
-        .filter(|(_, r)| !r.done)
-        .map(|(i, r)| (i, r.round, r.exchanging))
+        .flat_map(|p| {
+            (p.lo..p.hi).filter_map(move |i| {
+                let li = i - p.lo;
+                (!p.done[li]).then_some((i, p.rounds[li], p.exchanging[li]))
+            })
+        })
         .take(8)
         .collect();
     ensure!(
-        world.finished == n,
+        finished == n,
         "sim deadlock: {}/{} nodes finished; stuck (node, round, \
          exchanging): {:?}",
-        world.finished,
+        finished,
         n,
         stuck
     );
+    final_t =
+        final_t.max(parts.iter().map(|p| p.last_t).max().unwrap_or(0));
     meter.advance_vtime_ns(final_t);
-    let World { rt, history, .. } = world;
-    let max_staleness = rt
+
+    // Fold per-node eval samples into per-epoch records.  Samples sort
+    // by (epoch, node) — a total order independent of partitioning —
+    // and means fold in node order, exactly as the heap-era engine's
+    // slot fill did.
+    let mut samples: Vec<EvalSample> = Vec::new();
+    for p in parts.iter_mut() {
+        samples.append(&mut p.evals);
+    }
+    samples.sort_by_key(|s| (s.epoch, s.node));
+    let mut history = History::default();
+    let mut idx = 0usize;
+    while idx < samples.len() {
+        let epoch = samples[idx].epoch;
+        let mut j = idx;
+        while j < samples.len() && samples[j].epoch == epoch {
+            j += 1;
+        }
+        let group = &samples[idx..j];
+        for w in group.windows(2) {
+            ensure!(
+                w[0].node != w[1].node,
+                "node {} evaluated epoch {epoch} twice",
+                w[0].node
+            );
+        }
+        if group.len() == n {
+            let (mut a, mut l, mut t, mut b) = (
+                Mean::default(),
+                Mean::default(),
+                Mean::default(),
+                Mean::default(),
+            );
+            let mut t_max = 0u64;
+            for s in group {
+                a.add(s.acc);
+                l.add(s.loss);
+                t.add(s.train);
+                b.add(s.own_bytes as f64);
+                t_max = t_max.max(s.t_ns);
+            }
+            let rec = EpochRecord {
+                epoch,
+                mean_accuracy: a.take(),
+                mean_loss: l.take(),
+                train_loss: t.take(),
+                cum_bytes_per_node: b.take(),
+                sim_time_secs: t_max as f64 / 1e9,
+            };
+            if verbose {
+                println!(
+                    "[sim] epoch {:>4}: acc {:.3} loss {:.3} train {:.3} \
+                     sent/node {:.0} KB  t={:.3}s",
+                    rec.epoch,
+                    rec.mean_accuracy,
+                    rec.mean_loss,
+                    rec.train_loss,
+                    rec.cum_bytes_per_node / 1024.0,
+                    rec.sim_time_secs
+                );
+            }
+            history.push(rec);
+        }
+        idx = j;
+    }
+
+    let max_staleness = parts
         .iter()
-        .map(|r| r.machine.max_staleness_seen())
+        .flat_map(|p| p.machines.iter())
+        .map(|m| m.max_staleness_seen())
         .max()
         .unwrap_or(0);
-    let w = rt.into_iter().map(|r| r.w).collect();
+    let mut w: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for p in parts {
+        w.extend(p.ws);
+    }
     let edges_churned = meter.edges_churned();
     Ok(SimOutcome {
         history,
@@ -921,22 +1171,6 @@ mod tests {
                 }
             })
             .collect()
-    }
-
-    #[test]
-    fn event_ordering_time_then_seq() {
-        let mut q = EventQueue::new();
-        q.push(50, EventKind::ComputeDone { node: 5 });
-        q.push(10, EventKind::ComputeDone { node: 1 });
-        q.push(10, EventKind::ComputeDone { node: 2 });
-        let order: Vec<(u64, usize)> = std::iter::from_fn(|| q.pop())
-            .map(|e| match e.kind {
-                EventKind::ComputeDone { node } => (e.t_ns, node),
-                _ => unreachable!(),
-            })
-            .collect();
-        // Time first; equal times in push (seq) order.
-        assert_eq!(order, vec![(10, 1), (10, 2), (50, 5)]);
     }
 
     #[test]
@@ -1175,6 +1409,88 @@ mod tests {
         );
         assert_eq!(a.w, b.w, "final parameters must replay bit-identically");
         assert!(a.meter.total_retransmit_bytes() > 0, "p=0.3 must retransmit");
+    }
+
+    #[test]
+    fn parallel_partitions_match_serial_bit_for_bit() {
+        // The conservative-PDES contract in miniature: ring(6) over a
+        // lossy latency link, three partitions vs one — identical
+        // virtual clock, byte counters, retransmits, and parameters.
+        let graph = Arc::new(Graph::ring(6));
+        let sched = Schedule::new(2, 2, 1, 1);
+        let alg = AlgorithmSpec::CEcl {
+            k_frac: 0.4,
+            theta: 1.0,
+            dense_first_epoch: false,
+        };
+        let cfg = SimConfig {
+            link: LinkSpec::Lossy {
+                latency_us: 50,
+                mbit_per_sec: 100.0,
+                drop_p: 0.3,
+            },
+            stragglers: vec![(1, 3.0)],
+            ..SimConfig::default()
+        };
+        let par_cfg = SimConfig { threads: 3, ..cfg.clone() };
+        let serial = simulate(&graph, &cfg, 21, &sched,
+                              machine_setup(&graph, &alg, 21, 2),
+                              RoundPolicy::Sync, false)
+            .unwrap();
+        let par = simulate(&graph, &par_cfg, 21, &sched,
+                           machine_setup(&graph, &alg, 21, 2),
+                           RoundPolicy::Sync, false)
+            .unwrap();
+        assert_eq!(serial.vtime_ns, par.vtime_ns);
+        assert_eq!(serial.meter.total_bytes(), par.meter.total_bytes());
+        assert_eq!(
+            serial.meter.total_retransmit_bytes(),
+            par.meter.total_retransmit_bytes()
+        );
+        assert_eq!(
+            serial.meter.edge_payload_bytes(),
+            par.meter.edge_payload_bytes()
+        );
+        assert_eq!(serial.w, par.w, "parallel must replay serial exactly");
+        assert_eq!(
+            serial.history.records.len(),
+            par.history.records.len()
+        );
+        for (a, b) in serial
+            .history
+            .records
+            .iter()
+            .zip(par.history.records.iter())
+        {
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(a.mean_accuracy.to_bits(), b.mean_accuracy.to_bits());
+            assert_eq!(a.sim_time_secs.to_bits(), b.sim_time_secs.to_bits());
+            assert_eq!(
+                a.cum_bytes_per_node.to_bits(),
+                b.cum_bytes_per_node.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_with_ideal_cross_links_falls_back_to_serial() {
+        // Zero-latency cross-partition links leave no conservative
+        // lookahead; the engine must fall back to one partition and
+        // still produce the serial result.
+        let graph = Arc::new(Graph::ring(4));
+        let sched = Schedule::new(1, 2, 1, 1);
+        let alg = AlgorithmSpec::DPsgd;
+        let serial = simulate(&graph, &SimConfig::default(), 3, &sched,
+                              machine_setup(&graph, &alg, 3, 2),
+                              RoundPolicy::Sync, false)
+            .unwrap();
+        let par_cfg = SimConfig { threads: 4, ..SimConfig::default() };
+        let par = simulate(&graph, &par_cfg, 3, &sched,
+                           machine_setup(&graph, &alg, 3, 2),
+                           RoundPolicy::Sync, false)
+            .unwrap();
+        assert_eq!(serial.vtime_ns, par.vtime_ns);
+        assert_eq!(serial.w, par.w);
     }
 
     #[test]

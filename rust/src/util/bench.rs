@@ -130,6 +130,128 @@ impl BenchSet {
     }
 }
 
+// ---------------------------------------------------------------------
+// Machine-readable output (`--json` / `--check`)
+// ---------------------------------------------------------------------
+
+/// Accumulates rows from one or more [`BenchSet`]s into a flat JSON
+/// document (hand-rolled: the only dependency budget here is
+/// `anyhow`).  Row names are prefixed with their set title
+/// (`"<title>/<name>"`), so a whole bench binary serializes into one
+/// list, diffable across commits — `BENCH_sim_scale.json` is this
+/// format, and the CI regression gate parses it back with
+/// [`parse_mean_secs`].
+#[derive(Default)]
+pub struct JsonReport {
+    rows: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append every measurement of `set` as a JSON row.
+    pub fn add_set(&mut self, set: &BenchSet) {
+        for m in set.measurements() {
+            let items = match m.items_per_iter {
+                Some(v) => format!("{v}"),
+                None => "null".to_string(),
+            };
+            self.rows.push(format!(
+                "{{\"name\":\"{}/{}\",\"iters\":{},\"min_secs\":{},\
+                 \"mean_secs\":{},\"p50_secs\":{},\"p95_secs\":{},\
+                 \"items_per_iter\":{},\"items_unit\":\"{}\"}}",
+                json_escape(&set.title),
+                json_escape(&m.name),
+                m.iters,
+                m.secs.min,
+                m.secs.mean,
+                m.secs.p50,
+                m.secs.p95,
+                items,
+                json_escape(m.items_unit),
+            ));
+        }
+    }
+
+    /// The complete document: `{"rows":[...]}`, one row per line.
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\"rows\":[\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(r);
+            if i + 1 < self.rows.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]}\n");
+        out
+    }
+}
+
+/// Extract `(name, mean_secs)` pairs from a [`JsonReport`] document.
+///
+/// This is a purpose-built scanner for the exact shape `render()`
+/// emits (plus whitespace tolerance), not a general JSON parser — it
+/// reads the `"name"` and `"mean_secs"` fields of each row object and
+/// ignores everything else.
+pub fn parse_mean_secs(doc: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    let mut rest = doc;
+    while let Some(at) = rest.find("\"name\":\"") {
+        rest = &rest[at + 8..];
+        let mut name = String::new();
+        let mut chars = rest.char_indices();
+        let mut end = None;
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => name.push('\n'),
+                    Some((_, e)) => name.push(e),
+                    None => return Err("truncated escape".into()),
+                },
+                '"' => {
+                    end = Some(i);
+                    break;
+                }
+                c => name.push(c),
+            }
+        }
+        let end = end.ok_or_else(|| "unterminated name".to_string())?;
+        rest = &rest[end + 1..];
+        let at = rest
+            .find("\"mean_secs\":")
+            .ok_or_else(|| format!("row `{name}` has no mean_secs"))?;
+        let num = rest[at + 12..]
+            .split(|c: char| c == ',' || c == '}')
+            .next()
+            .unwrap_or("")
+            .trim();
+        let mean: f64 = num
+            .parse()
+            .map_err(|e| format!("row `{name}`: bad mean `{num}`: {e}"))?;
+        out.push((name, mean));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +264,26 @@ mod tests {
         assert!(s.min > 0.0);
         assert!(s.min <= s.mean);
         assert!(s.p50 <= s.p95 + 1e-12);
+    }
+
+    #[test]
+    fn json_report_round_trips_means() {
+        let mut set = BenchSet::new("scale");
+        set.bench("nodes 64", 0, 3, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        set.bench_throughput("nodes \"512\"", 0, 3, 2.0, "ev", || {});
+        let mut rep = JsonReport::new();
+        rep.add_set(&set);
+        let doc = rep.render();
+        let means = parse_mean_secs(&doc).unwrap();
+        assert_eq!(means.len(), 2);
+        assert_eq!(means[0].0, "scale/nodes 64");
+        assert_eq!(means[1].0, "scale/nodes \"512\"");
+        for ((name, mean), m) in means.iter().zip(set.measurements()) {
+            assert!((mean - m.secs.mean).abs() <= 1e-12 * m.secs.mean,
+                    "{name}: {mean} vs {}", m.secs.mean);
+        }
     }
 
     #[test]
