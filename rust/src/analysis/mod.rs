@@ -1,0 +1,766 @@
+//! Determinism static-analysis pass (`repro lint`).
+//!
+//! A dependency-free source walker that enforces the repo's determinism
+//! invariants (see the "Determinism invariants" section in the crate
+//! docs).  It is deliberately a lexer, not a full parser: it strips
+//! strings and comments with a small state machine, tracks function
+//! scopes by brace depth, and matches banned tokens as whole words.
+//! That is enough to be exact on this codebase while adding zero
+//! dependencies (the container has no registry access, so `syn` is not
+//! an option).
+//!
+//! Rules (module-scoped):
+//!
+//! * `wall-clock` — `Instant` / `SystemTime` inside the deterministic
+//!   modules (`sim`, `algorithms`, `compress`, `graph`).  Virtual time
+//!   is the only clock those paths may observe.
+//! * `unordered-container` — `HashMap` / `HashSet` in the same
+//!   modules: iteration order would leak host hash seeds into replay.
+//! * `ambient-rng` — `thread_rng` / `OsRng` there too: all randomness
+//!   must flow from the seeded counter-mode `Pcg`.
+//! * `panic-decode` — `.unwrap()` / `.expect(...)` / panic-family
+//!   macros inside decode/parse-scope functions of the wire files
+//!   (`compress/codec.rs`, `compress/coo.rs`, `compress/low_rank.rs`,
+//!   `net/wire.rs`).  Peer bytes are untrusted; the contract is a
+//!   typed `CodecError` / `CommError`.
+//! * `index-decode` — direct slice indexing in those same functions,
+//!   where a bad offset panics instead of erroring.
+//! * `allow-justification` — a malformed suppression: unknown rule
+//!   name, or a directive with no justification text.
+//!
+//! Suppressions are spelled as a comment of the form
+//! "det:allow(rule[, rule...]): justification" — trailing on the
+//! offending line, or standalone on the line(s) above, in which case
+//! it applies to the next non-blank code line.  A directive without a
+//! justification, or naming an unknown rule, is itself a violation
+//! and suppresses nothing, so every exception stays visible and
+//! explained in the diff.
+//!
+//! `#[cfg(test)]` modules are exempt from all scoped rules: tests may
+//! unwrap and may time themselves.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Module prefixes (relative to `rust/src/`, `/`-separated) where the
+/// deterministic-path rules apply.
+const DET_PREFIXES: [&str; 4] = ["sim/", "algorithms/", "compress/", "graph/"];
+
+/// Files whose decode/parse-scope functions carry the no-panic,
+/// no-indexing contract on untrusted bytes.
+const WIRE_FILES: [&str; 4] = [
+    "compress/codec.rs",
+    "compress/coo.rs",
+    "compress/low_rank.rs",
+    "net/wire.rs",
+];
+
+/// Every rule a directive may name.
+const RULES: [&str; 6] = [
+    "wall-clock",
+    "unordered-container",
+    "ambient-rng",
+    "panic-decode",
+    "index-decode",
+    "allow-justification",
+];
+
+/// Banned whole-word tokens in deterministic modules, with the rule
+/// each one trips.
+const DET_TOKENS: [(&str, &str); 6] = [
+    ("Instant", "wall-clock"),
+    ("SystemTime", "wall-clock"),
+    ("HashMap", "unordered-container"),
+    ("HashSet", "unordered-container"),
+    ("thread_rng", "ambient-rng"),
+    ("OsRng", "ambient-rng"),
+];
+
+/// Panic-family macro names flagged in decode scope (each must be
+/// followed by `!` to count; `debug_assert*` is deliberately absent —
+/// it compiles out of release builds).
+const PANIC_MACROS: [&str; 7] = [
+    "panic",
+    "unreachable",
+    "todo",
+    "unimplemented",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+];
+
+/// One lint finding.  `Display` renders the `file:line: [rule] msg`
+/// form the CI gate greps.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule,
+               self.message)
+    }
+}
+
+#[inline]
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+// ---------------------------------------------------------------------
+// Source stripping
+// ---------------------------------------------------------------------
+
+/// Lexer state for [`strip_source`].
+enum Strip {
+    Code,
+    LineComment,
+    Str,
+    RawStr,
+    CharLit,
+}
+
+/// Blank out strings, char literals, and comments, preserving line
+/// structure and column positions, and collect line comments as
+/// `(1-based line, text)` pairs (directives live in comments).
+///
+/// Handles nested block comments, raw strings with any `#` count,
+/// byte strings/chars, and the `'a` lifetime-vs-`'a'` char ambiguity
+/// (a quote is a char literal only when escaped or closed two chars
+/// later).
+fn strip_source(src: &str) -> (Vec<String>, Vec<(usize, String)>) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut out = String::with_capacity(src.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut state = Strip::Code;
+    let mut hashes = 0usize;
+    let mut cur: Option<(usize, String)> = None;
+    let mut prev_code = ' ';
+    while i < n {
+        let c = s[i];
+        let nxt = if i + 1 < n { s[i + 1] } else { '\0' };
+        match state {
+            Strip::Code => {
+                if c == '/' && nxt == '/' {
+                    state = Strip::LineComment;
+                    cur = Some((line, String::new()));
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && nxt == '*' {
+                    let mut depth = 1usize;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    while i < n && depth > 0 {
+                        let c2 = s[i];
+                        let n2 = if i + 1 < n { s[i + 1] } else { '\0' };
+                        if c2 == '/' && n2 == '*' {
+                            depth += 1;
+                            out.push(' ');
+                            out.push(' ');
+                            i += 2;
+                            continue;
+                        }
+                        if c2 == '*' && n2 == '/' {
+                            depth -= 1;
+                            out.push(' ');
+                            out.push(' ');
+                            i += 2;
+                            continue;
+                        }
+                        if c2 == '\n' {
+                            out.push('\n');
+                            line += 1;
+                        } else {
+                            out.push(' ');
+                        }
+                        i += 1;
+                    }
+                    continue;
+                }
+                if c == '"' {
+                    state = Strip::Str;
+                    out.push(' ');
+                    i += 1;
+                    continue;
+                }
+                if c == 'r' && !is_ident(prev_code) {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && s[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && s[j] == '"' {
+                        state = Strip::RawStr;
+                        hashes = h;
+                        for _ in i..=j {
+                            out.push(' ');
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == 'b' && !is_ident(prev_code) {
+                    if nxt == '"' {
+                        state = Strip::Str;
+                        out.push(' ');
+                        out.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                    if nxt == '\'' {
+                        state = Strip::CharLit;
+                        out.push(' ');
+                        out.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                    if nxt == 'r' {
+                        let mut j = i + 2;
+                        let mut h = 0usize;
+                        while j < n && s[j] == '#' {
+                            h += 1;
+                            j += 1;
+                        }
+                        if j < n && s[j] == '"' {
+                            state = Strip::RawStr;
+                            hashes = h;
+                            for _ in i..=j {
+                                out.push(' ');
+                            }
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == '\'' {
+                    if nxt == '\\' {
+                        state = Strip::CharLit;
+                        out.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                    if i + 2 < n && s[i + 2] == '\'' && nxt != '\'' {
+                        state = Strip::CharLit;
+                        out.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                    // Lifetime tick: blank it and move on.
+                    out.push(' ');
+                    prev_code = ' ';
+                    i += 1;
+                    continue;
+                }
+                if c == '\n' {
+                    out.push('\n');
+                    line += 1;
+                    prev_code = ' ';
+                } else {
+                    out.push(c);
+                    prev_code = c;
+                }
+                i += 1;
+            }
+            Strip::LineComment => {
+                if c == '\n' {
+                    if let Some(entry) = cur.take() {
+                        comments.push(entry);
+                    }
+                    state = Strip::Code;
+                    out.push('\n');
+                    line += 1;
+                    prev_code = ' ';
+                } else {
+                    if let Some((_, text)) = cur.as_mut() {
+                        text.push(c);
+                    }
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            Strip::Str => {
+                if c == '\\' {
+                    out.push(' ');
+                    if nxt == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = Strip::Code;
+                    out.push(' ');
+                } else if c == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            Strip::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && s[j] == '#' && h < hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == hashes {
+                        state = Strip::Code;
+                        for _ in i..j {
+                            out.push(' ');
+                        }
+                        i = j;
+                        continue;
+                    }
+                }
+                if c == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            Strip::CharLit => {
+                if c == '\\' {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '\'' {
+                    state = Strip::Code;
+                    out.push(' ');
+                } else if c == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+        }
+    }
+    if let Some(entry) = cur.take() {
+        comments.push(entry);
+    }
+    (out.split('\n').map(str::to_string).collect(), comments)
+}
+
+// ---------------------------------------------------------------------
+// Token scanning
+// ---------------------------------------------------------------------
+
+/// Start offsets of whole-word occurrences of `word` in `line`.
+fn find_word(line: &[char], word: &[char]) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let (n, m) = (line.len(), word.len());
+    if m == 0 || n < m {
+        return hits;
+    }
+    let mut k = 0usize;
+    while k + m <= n {
+        if line[k..k + m] == *word {
+            let before_ok = k == 0 || !is_ident(line[k - 1]);
+            let after_ok = k + m >= n || !is_ident(line[k + m]);
+            if before_ok && after_ok {
+                hits.push(k);
+            }
+            k += m;
+        } else {
+            k += 1;
+        }
+    }
+    hits
+}
+
+/// Is `name` a function whose body is decode/parse scope?
+fn decode_scope_fn(name: &str) -> bool {
+    name.contains("decode")
+        || name.contains("parse")
+        || name.starts_with("read")
+        || name.starts_with("get_")
+}
+
+/// In-line scope event: a `fn name` sighting, a brace, or a `;` (which
+/// cancels a pending `fn` from a trait-method declaration).
+enum Event {
+    Fn(String),
+    Open,
+    Close,
+    Semi,
+}
+
+/// Position-ordered scope events on one stripped line.
+fn line_events(chars: &[char]) -> Vec<(usize, Event)> {
+    let mut events: Vec<(usize, Event)> = Vec::new();
+    let fn_word: Vec<char> = vec!['f', 'n'];
+    for k in find_word(chars, &fn_word) {
+        let mut j = k + 2;
+        let start_ws = j;
+        while j < chars.len() && chars[j].is_whitespace() {
+            j += 1;
+        }
+        if j == start_ws {
+            continue; // `fn` not followed by whitespace: not a def
+        }
+        if j < chars.len()
+            && (chars[j].is_ascii_alphabetic() || chars[j] == '_')
+        {
+            let st = j;
+            while j < chars.len() && is_ident(chars[j]) {
+                j += 1;
+            }
+            events.push((k, Event::Fn(chars[st..j].iter().collect())));
+        }
+    }
+    for (k, &c) in chars.iter().enumerate() {
+        match c {
+            '{' => events.push((k, Event::Open)),
+            '}' => events.push((k, Event::Close)),
+            ';' => events.push((k, Event::Semi)),
+            _ => {}
+        }
+    }
+    events.sort_by_key(|e| e.0);
+    events
+}
+
+// ---------------------------------------------------------------------
+// The lint proper
+// ---------------------------------------------------------------------
+
+/// Lint one source file.  `label` is its path relative to the tree
+/// root, `/`-separated — it selects which scoped rules apply.
+pub fn lint_source(label: &str, src: &str) -> Vec<Violation> {
+    let mut violations: Vec<Violation> = Vec::new();
+    let (lines, comments) = strip_source(src);
+    let line_chars: Vec<Vec<char>> =
+        lines.iter().map(|l| l.chars().collect()).collect();
+
+    // Pass 1: directives.  Map suppressed line -> rule set.
+    let mut allows: Vec<(usize, Vec<String>)> = Vec::new();
+    let directive = "det:allow";
+    for (ln, text) in &comments {
+        let t = text.trim_start_matches('/').trim_start_matches('!').trim();
+        let Some(rest) = t.strip_prefix(directive) else {
+            continue;
+        };
+        let mut ok_rules: Vec<String> = Vec::new();
+        if let Some(body) = rest.strip_prefix('(') {
+            if let Some(close) = body.find(')') {
+                let rules: Vec<String> = body[..close]
+                    .split(',')
+                    .map(|r| r.trim().to_string())
+                    .collect();
+                let tail = body[close + 1..].trim();
+                let just = tail.strip_prefix(':').map(str::trim)
+                    .unwrap_or("");
+                let known =
+                    rules.iter().all(|r| RULES.contains(&r.as_str()));
+                if !rules.is_empty() && known && !just.is_empty() {
+                    ok_rules = rules;
+                } else if !known {
+                    violations.push(Violation {
+                        file: label.to_string(),
+                        line: *ln,
+                        rule: "allow-justification",
+                        message: format!("unknown rule in {directive}"),
+                    });
+                } else {
+                    violations.push(Violation {
+                        file: label.to_string(),
+                        line: *ln,
+                        rule: "allow-justification",
+                        message: format!(
+                            "{directive} needs `: <justification>`"
+                        ),
+                    });
+                }
+            } else {
+                violations.push(Violation {
+                    file: label.to_string(),
+                    line: *ln,
+                    rule: "allow-justification",
+                    message: format!("unclosed {directive}("),
+                });
+            }
+        } else {
+            violations.push(Violation {
+                file: label.to_string(),
+                line: *ln,
+                rule: "allow-justification",
+                message: format!("malformed {directive}"),
+            });
+        }
+        if ok_rules.is_empty() {
+            continue;
+        }
+        let on_code =
+            *ln <= lines.len() && !lines[*ln - 1].trim().is_empty();
+        let target = if on_code {
+            Some(*ln)
+        } else {
+            // Standalone: the next non-blank code line.
+            (*ln..lines.len())
+                .find(|&j| !lines[j].trim().is_empty())
+                .map(|j| j + 1)
+        };
+        if let Some(t) = target {
+            match allows.iter_mut().find(|(l, _)| *l == t) {
+                Some((_, rs)) => rs.extend(ok_rules),
+                None => allows.push((t, ok_rules)),
+            }
+        }
+    }
+
+    let det = DET_PREFIXES.iter().any(|p| label.starts_with(p));
+    let wire = WIRE_FILES.contains(&label);
+
+    // Pass 2: walk lines tracking brace depth, the enclosing-fn stack,
+    // and `#[cfg(test)] mod` regions.
+    let mut depth = 0i64;
+    let mut fn_stack: Vec<(String, i64)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    let mut pending_test = false;
+    let mut in_test = false;
+    let mut test_depth = 0i64;
+    let mod_word: Vec<char> = vec!['m', 'o', 'd'];
+    for (idx, chars) in line_chars.iter().enumerate() {
+        let ln = idx + 1;
+        let line = &lines[idx];
+        if line.contains("#[cfg(test)]") {
+            pending_test = true;
+        }
+        if pending_test
+            && !find_word(chars, &mod_word).is_empty()
+            && line.contains('{')
+        {
+            in_test = true;
+            test_depth = depth;
+            pending_test = false;
+        }
+        let mut pushed_this_line: Option<String> = None;
+        for (_, ev) in line_events(chars) {
+            match ev {
+                Event::Fn(name) => pending_fn = Some(name),
+                Event::Open => {
+                    depth += 1;
+                    if let Some(name) = pending_fn.take() {
+                        pushed_this_line = Some(name.clone());
+                        fn_stack.push((name, depth));
+                    }
+                }
+                Event::Close => {
+                    if fn_stack.last().is_some_and(|t| t.1 == depth) {
+                        fn_stack.pop();
+                    }
+                    depth -= 1;
+                }
+                Event::Semi => pending_fn = None,
+            }
+        }
+        if in_test && depth <= test_depth {
+            // This line closes the test module; skip it too.
+            in_test = false;
+            continue;
+        }
+        if in_test {
+            continue;
+        }
+        let ctx_fn: &str = pushed_this_line
+            .as_deref()
+            .or_else(|| fn_stack.last().map(|t| t.0.as_str()))
+            .unwrap_or("");
+        let line_allows: &[String] = allows
+            .iter()
+            .find(|(l, _)| *l == ln)
+            .map(|(_, rs)| rs.as_slice())
+            .unwrap_or(&[]);
+        let mut report = |rule: &'static str, message: String| {
+            if !line_allows.iter().any(|r| r == rule) {
+                violations.push(Violation {
+                    file: label.to_string(),
+                    line: ln,
+                    rule,
+                    message,
+                });
+            }
+        };
+        if det {
+            for (word, rule) in DET_TOKENS {
+                let w: Vec<char> = word.chars().collect();
+                for _ in find_word(chars, &w) {
+                    report(rule,
+                           format!("`{word}` in deterministic module"));
+                }
+            }
+        }
+        if wire && decode_scope_fn(ctx_fn) {
+            if line.contains(".unwrap()") {
+                report("panic-decode",
+                       format!("`.unwrap()` in decode path fn `{ctx_fn}`"));
+            }
+            if line.contains(".expect(") {
+                report(
+                    "panic-decode",
+                    format!("`.expect(...)` in decode path fn `{ctx_fn}`"),
+                );
+            }
+            for mac in PANIC_MACROS {
+                let w: Vec<char> = mac.chars().collect();
+                for k in find_word(chars, &w) {
+                    let bang = chars[k + mac.len()..]
+                        .iter()
+                        .find(|c| !c.is_whitespace());
+                    if bang == Some(&'!') {
+                        report(
+                            "panic-decode",
+                            format!(
+                                "`{mac}!` in decode path fn `{ctx_fn}`"
+                            ),
+                        );
+                    }
+                }
+            }
+            let mut hits = 0usize;
+            for (k, &c) in chars.iter().enumerate() {
+                if c != '[' {
+                    continue;
+                }
+                let mut j = k as i64 - 1;
+                while j >= 0 && chars[j as usize] == ' ' {
+                    j -= 1;
+                }
+                if j >= 0 {
+                    let p = chars[j as usize];
+                    if is_ident(p) || p == ')' || p == ']' {
+                        hits += 1;
+                    }
+                }
+            }
+            if hits > 0 {
+                report(
+                    "index-decode",
+                    format!(
+                        "direct indexing in decode path fn `{ctx_fn}` \
+                         ({hits}x)"
+                    ),
+                );
+            }
+        }
+    }
+    violations
+}
+
+/// Lint every `.rs` file under `root` (labels are `/`-relative paths).
+/// Deterministic order: files before subdirectories, each sorted.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut out = Vec::new();
+    walk(root, root, &mut out)?;
+    Ok(out)
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<Violation>)
+        -> io::Result<()> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            dirs.push(path);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+    files.sort();
+    dirs.sort();
+    for path in files {
+        let src = fs::read_to_string(&path)?;
+        let label = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.extend(lint_source(&label, &src));
+    }
+    for sub in dirs {
+        walk(root, &sub, out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_blanks_strings_and_comments_but_keeps_columns() {
+        let src = "let a = \"x[0]\"; // c[1]\nlet b = a[2];\n";
+        let (lines, comments) = strip_source(src);
+        // Same width, string/comment chars blanked, `;` still at col 14.
+        assert_eq!(lines[0].len(), "let a = \"x[0]\"; // c[1]".len());
+        assert!(!lines[0].contains('"') && !lines[0].contains('c'));
+        assert_eq!(lines[0].chars().nth(14), Some(';'));
+        assert_eq!(lines[1], "let b = a[2];");
+        assert_eq!(comments, vec![(1, " c[1]".to_string())]);
+    }
+
+    #[test]
+    fn strip_handles_raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let r = r#\"un\"wrap()\"#; }";
+        let (lines, _) = strip_source(src);
+        assert!(!lines[0].contains("wrap"), "{}", lines[0]);
+        assert!(lines[0].contains("fn f"), "{}", lines[0]);
+    }
+
+    #[test]
+    fn strip_handles_nested_block_comments() {
+        let src = "a /* x /* y */ z */ b";
+        let (lines, _) = strip_source(src);
+        assert_eq!(lines[0].len(), src.len());
+        assert!(lines[0].starts_with('a') && lines[0].ends_with('b'));
+        assert!(!lines[0].contains('x') && !lines[0].contains('z'));
+    }
+
+    #[test]
+    fn find_word_is_whole_word() {
+        let chars: Vec<char> = "Instant InstantX x_Instant".chars()
+            .collect();
+        let w: Vec<char> = "Instant".chars().collect();
+        assert_eq!(find_word(&chars, &w), vec![0]);
+    }
+
+    #[test]
+    fn decode_scope_names() {
+        assert!(decode_scope_fn("decode"));
+        assert!(decode_scope_fn("decode_sparse"));
+        assert!(decode_scope_fn("read_message"));
+        assert!(decode_scope_fn("get_u32"));
+        assert!(decode_scope_fn("parse_header"));
+        // `read*` is scope by prefix — `ready` rides along, by design:
+        // over-approximating scope is safe (an allow fixes it).
+        assert!(decode_scope_fn("ready"));
+        assert!(!decode_scope_fn("encode"));
+        assert!(!decode_scope_fn("write_message"));
+    }
+}

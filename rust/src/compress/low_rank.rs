@@ -454,8 +454,11 @@ impl EdgeCodec for LowRankCodec {
             });
         }
         let f32_at = |k: usize| {
-            f32::from_le_bytes([b[4 * k], b[4 * k + 1], b[4 * k + 2],
-                                b[4 * k + 3]])
+            let o = 4 * k;
+            // det:allow(index-decode): the exact-length check above pins
+            // `b.len()` to `frame_bytes()`, and the view cursor walks at
+            // most that many f32 slots.
+            f32::from_le_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]])
         };
         let mut out = vec![0.0f32; ctx.dim];
         let mut cur = 0usize; // f32 cursor
@@ -468,10 +471,14 @@ impl EdgeCodec for LowRankCodec {
                 cur += cols;
                 rank1_axpy(&mut mat, rows, cols, 1.0, &p, &q);
             }
+            // det:allow(index-decode): views are built by `ensure_views`
+            // to tile exactly `ctx.dim`, which is also `out.len()`.
             out[off..off + len].copy_from_slice(&mat[..len]);
         }
         for &(off, len) in &self.vec_views {
             for i in 0..len {
+                // det:allow(index-decode): same tiling invariant as the
+                // matrix views above.
                 out[off + i] = f32_at(cur + i);
             }
             cur += len;

@@ -211,6 +211,7 @@
 //!
 //! | module | contents |
 //! |---|---|
+//! | [`analysis`] | determinism lint engine (`repro lint`): scoped source rules + the allow-list directive |
 //! | [`compress`] | rand-k mask sampler, COO vectors, low-rank (PowerGossip primitives + `low_rank` codec) |
 //! | [`compress::codec`] | **edge codecs**: `EdgeCodec`/`Frame`/`EdgeCtx`/`CodecSpec`, identity / rand-k (explicit + values-only wire) / top-k / QSGD / sign / low-rank / error feedback |
 //! | [`comm`] | `Msg` (dense / sparse / codec frame / scalar), byte meter (incl. churn-drop counters), threaded bus |
@@ -320,8 +321,39 @@
 //! on the experiment tables).  Zero-latency cross-partition links give
 //! a zero lookahead window; the engine then quietly falls back to
 //! serial rather than deadlock.
+//!
+//! ## Determinism invariants
+//!
+//! The bit-identical-replay and byte-exact-accounting claims above are
+//! *enforced*, not aspirational: `repro lint` (the [`analysis`] module,
+//! a required CI step) walks `rust/src` and rejects API uses that would
+//! let host state leak into a deterministic path.  The scopes:
+//!
+//! | scope | banned | why |
+//! |---|---|---|
+//! | [`sim`], [`algorithms`], [`compress`], [`graph`] | `std::time::Instant`, `SystemTime` | virtual time is the only clock; a wall-clock read forks replay |
+//! | same modules | `HashMap`, `HashSet` | iteration order depends on the host hash seed — `BTreeMap`/`BTreeSet`/`Vec` only |
+//! | same modules | `thread_rng`, `OsRng` | all randomness derives from the seeded counter-mode [`util::rng::Pcg`] |
+//! | decode/parse fns of `compress/codec.rs`, `compress/coo.rs`, `compress/low_rank.rs`, `net/wire.rs` | `.unwrap()`, `.expect(...)`, panic-family macros, direct indexing | peer bytes are untrusted; corrupt frames must surface typed `CodecError` / `CommError`, never a panic |
+//!
+//! `Instant` stays legal in [`net`], [`coordinator`], and
+//! `util::bench` — the engines that *measure* wall-clock rather than
+//! simulate it.  `#[cfg(test)]` modules are exempt everywhere.
+//!
+//! Exceptions are spelled inline as a comment of the form
+//! `det:allow(rule[, rule]): justification` (trailing on the offending
+//! line, or standalone directly above it) — the justification text is
+//! mandatory, unknown rule names are themselves violations, and the
+//! lint suppresses nothing without both, so every escape hatch is
+//! visible and argued in the diff.  Crate-wide bans that need no
+//! module scoping (`SystemTime`, `HashMap`, `HashSet`) are also
+//! declared in `clippy.toml` via `disallowed-types` /
+//! `disallowed-methods`, and the `[lints]` table in `Cargo.toml`
+//! denies `clippy::undocumented_unsafe_blocks` so an `unsafe impl`
+//! can't land without a `// SAFETY:` argument.
 
 pub mod algorithms;
+pub mod analysis;
 pub mod comm;
 pub mod compress;
 pub mod coordinator;

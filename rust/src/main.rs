@@ -12,9 +12,11 @@
 //! repro launch   --nodes 8 --codec rand_k:0.1 [--verify-bytes]   TCP deployment
 //! repro node     --node 0 --peers ip:port,... [--listen ip:port] one process
 //! repro ablation-naive | ablation-warmup | ablation-wire
+//! repro lint     [--root DIR]                              determinism static analysis
 //! ```
 
 use std::net::{SocketAddr, TcpListener};
+use std::path::Path;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
@@ -401,6 +403,24 @@ fn main() -> Result<()> {
             let t = ablations::run_wire_ablation(&manifest, &sizing)?;
             println!("--- ablation: wire format ---\n{}", t.render());
         }
+        "lint" => {
+            let root = args.get_str(
+                "root",
+                concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"),
+            );
+            check_unknown(&args)?;
+            let violations = cecl::analysis::lint_tree(Path::new(&root))
+                .map_err(|e| anyhow!("lint walk of {root} failed: {e}"))?;
+            for v in &violations {
+                println!("{v}");
+            }
+            if violations.is_empty() {
+                println!("repro lint: clean ({root})");
+            } else {
+                eprintln!("repro lint: {} violation(s)", violations.len());
+                std::process::exit(1);
+            }
+        }
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
         }
@@ -598,6 +618,11 @@ commands:
   ablation-naive   Eq.11 vs Eq.13 dual compression
   ablation-warmup  first-epoch dense on/off
   ablation-wire    explicit-index vs values-only rand-k wire modes
+  lint             determinism static analysis over rust/src (CI gate):
+                   wall-clock/HashMap/ambient-RNG bans in sim|algorithms
+                   |compress|graph, panic+indexing bans in decode/parse
+                   paths; suppress with a justified inline allow comment
+                   [--root DIR] (exit 1 on any violation)
 
 codec specs (--codec, also `--algorithm cecl:SPEC`):
   identity | rand_k:K | rand_k:K:values | top_k:K | qsgd:B | sign

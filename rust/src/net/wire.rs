@@ -97,6 +97,50 @@ fn corrupt(detail: String) -> CommError {
     CommError::Corrupt { detail }
 }
 
+// Checked little-endian field readers.  Every offset used below is a
+// compile-time constant inside a fixed-size header, but the parse path
+// carries a no-panic contract on arbitrary peer bytes (`repro lint`
+// enforces it), so each read is bounds-checked and surfaces a typed
+// `Corrupt` instead of slicing.
+
+fn le_u16(b: &[u8], off: usize) -> Result<u16, CommError> {
+    let arr: [u8; 2] = b
+        .get(off..off + 2)
+        .and_then(|s| s.try_into().ok())
+        .ok_or_else(|| corrupt(format!("truncated u16 at offset {off}")))?;
+    Ok(u16::from_le_bytes(arr))
+}
+
+fn le_u32(b: &[u8], off: usize) -> Result<u32, CommError> {
+    let arr: [u8; 4] = b
+        .get(off..off + 4)
+        .and_then(|s| s.try_into().ok())
+        .ok_or_else(|| corrupt(format!("truncated u32 at offset {off}")))?;
+    Ok(u32::from_le_bytes(arr))
+}
+
+fn le_f32(b: &[u8], off: usize) -> Result<f32, CommError> {
+    let arr: [u8; 4] = b
+        .get(off..off + 4)
+        .and_then(|s| s.try_into().ok())
+        .ok_or_else(|| corrupt(format!("truncated f32 at offset {off}")))?;
+    Ok(f32::from_le_bytes(arr))
+}
+
+fn le_f64(b: &[u8], off: usize) -> Result<f64, CommError> {
+    let arr: [u8; 8] = b
+        .get(off..off + 8)
+        .and_then(|s| s.try_into().ok())
+        .ok_or_else(|| corrupt(format!("truncated f64 at offset {off}")))?;
+    Ok(f64::from_le_bytes(arr))
+}
+
+fn byte_at(b: &[u8], off: usize) -> Result<u8, CommError> {
+    b.get(off)
+        .copied()
+        .ok_or_else(|| corrupt(format!("truncated byte at offset {off}")))
+}
+
 /// Serialize header + payload into one buffer (a single `write_all`, so
 /// the kernel never sees a torn message from this side).
 pub fn encode_message(msg: &WireMsg) -> Result<Vec<u8>, CommError> {
@@ -158,6 +202,8 @@ pub fn read_message(r: &mut impl Read) -> Result<Option<WireMsg>, CommError> {
     let mut header = [0u8; HEADER_BYTES];
     let mut got = 0usize;
     while got < HEADER_BYTES {
+        // det:allow(index-decode): `got < HEADER_BYTES` is the loop
+        // condition, so the range start is always in bounds.
         match r.read(&mut header[got..]) {
             Ok(0) => {
                 if got == 0 {
@@ -172,25 +218,26 @@ pub fn read_message(r: &mut impl Read) -> Result<Option<WireMsg>, CommError> {
             Err(e) => return Err(io_err(format!("read failed: {e}"))),
         }
     }
-    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let magic = le_u32(&header, 0)?;
     if magic != MAGIC {
         return Err(corrupt(format!("bad magic {magic:#010x}")));
     }
-    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    let version = le_u16(&header, 4)?;
     if version != VERSION {
         return Err(corrupt(format!(
             "unsupported protocol version {version} (this side speaks \
              {VERSION})"
         )));
     }
-    let kind = header[6];
-    if header[7] != 0 {
-        return Err(corrupt(format!("nonzero reserved byte {}", header[7])));
+    let kind = byte_at(&header, 6)?;
+    let reserved = byte_at(&header, 7)?;
+    if reserved != 0 {
+        return Err(corrupt(format!("nonzero reserved byte {reserved}")));
     }
-    let src = u32::from_le_bytes(header[8..12].try_into().unwrap()) as usize;
-    let epoch = u32::from_le_bytes(header[12..16].try_into().unwrap());
-    let round = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
-    let len = u32::from_le_bytes(header[20..24].try_into().unwrap()) as usize;
+    let src = le_u32(&header, 8)? as usize;
+    let epoch = le_u32(&header, 12)?;
+    let round = le_u32(&header, 16)? as usize;
+    let len = le_u32(&header, 20)? as usize;
     if len > MAX_PAYLOAD_BYTES {
         return Err(corrupt(format!("payload length {len} exceeds cap")));
     }
@@ -217,10 +264,10 @@ pub fn read_message(r: &mut impl Read) -> Result<Option<WireMsg>, CommError> {
                     "dense payload of {len} bytes is not f32-aligned"
                 )));
             }
-            let v = payload
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
+            let mut v = Vec::with_capacity(len / 4);
+            for k in 0..len / 4 {
+                v.push(le_f32(&payload, 4 * k)?);
+            }
             WireBody::Payload(Msg::Dense(v))
         }
         KIND_FRAME => WireBody::Payload(Msg::Frame(Frame::new(payload))),
@@ -230,7 +277,7 @@ pub fn read_message(r: &mut impl Read) -> Result<Option<WireMsg>, CommError> {
                     "scalar payload of {len} bytes (want 8)"
                 )));
             }
-            let s = f64::from_le_bytes(payload[0..8].try_into().unwrap());
+            let s = le_f64(&payload, 0)?;
             WireBody::Payload(Msg::Scalar(s))
         }
         other => return Err(corrupt(format!("unknown message kind {other}"))),

@@ -78,11 +78,15 @@ pub struct Executable {
     pub name: String,
 }
 
-// SAFETY: PJRT CPU client executables are internally synchronized; see
-// module-level documentation. The wrapped pointer is never mutated
-// through a shared reference on the rust side.
+// SAFETY: `PjRtLoadedExecutable` owns an opaque handle to a PJRT CPU
+// executable; the PJRT C API guarantees `Execute` may be called from
+// any thread, and nothing else on the rust side touches the handle, so
+// moving the wrapper across threads is sound.
 #[cfg(feature = "pjrt")]
 unsafe impl Send for Executable {}
+// SAFETY: `&Executable` only ever reaches `execute`, which the PJRT
+// runtime internally synchronizes; the wrapped pointer is never
+// mutated through a shared reference on the rust side.
 #[cfg(feature = "pjrt")]
 unsafe impl Sync for Executable {}
 
@@ -127,9 +131,14 @@ pub struct Engine {
     client: xla::PjRtClient,
 }
 
-// SAFETY: as for Executable — the CPU client is thread-safe.
+// SAFETY: `PjRtClient` is an opaque handle to the PJRT CPU client,
+// which the C API documents as usable from any thread; the handle is
+// only consumed by compile/load calls, so ownership may migrate.
 #[cfg(feature = "pjrt")]
 unsafe impl Send for Engine {}
+// SAFETY: shared references only reach the client's compile/load entry
+// points, which PJRT synchronizes internally — same argument as
+// `Executable` above.
 #[cfg(feature = "pjrt")]
 unsafe impl Sync for Engine {}
 

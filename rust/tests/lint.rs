@@ -1,0 +1,268 @@
+//! Self-tests for the determinism lint (`cecl::analysis`).
+//!
+//! Three layers: (1) `lint_source` semantics on inline sources — each
+//! rule fires in its scope and stays quiet outside it, directives
+//! suppress exactly their rule on exactly their line; (2) the seeded
+//! fixture trees under `rust/tests/lint_fixtures/` — what the
+//! acceptance criterion "exits nonzero on every seeded violation
+//! fixture" pins; (3) the real tree — `rust/src` must lint clean,
+//! which is what makes the CI gate a no-op until someone regresses an
+//! invariant.
+
+use std::path::{Path, PathBuf};
+
+use cecl::analysis::{lint_source, lint_tree, Violation};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/lint_fixtures")
+        .join(name)
+}
+
+fn rules(vs: &[Violation]) -> Vec<&'static str> {
+    let mut r: Vec<&'static str> = vs.iter().map(|v| v.rule).collect();
+    r.sort_unstable();
+    r.dedup();
+    r
+}
+
+// -------------------------------------------------------------------
+// lint_source semantics
+// -------------------------------------------------------------------
+
+#[test]
+fn wall_clock_scoped_to_deterministic_modules() {
+    let src = "pub fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    // Fires in a deterministic module...
+    assert!(!lint_source("sim/engine.rs", src).is_empty());
+    assert!(!lint_source("algorithms/cecl.rs", src).is_empty());
+    // ...and is legal where wall-clock is the measured quantity.
+    assert!(lint_source("net/runtime.rs", src).is_empty());
+    assert!(lint_source("coordinator/mod.rs", src).is_empty());
+    assert!(lint_source("util/bench.rs", src).is_empty());
+}
+
+#[test]
+fn banned_tokens_match_whole_words_only() {
+    // Idents merely containing a banned token must not fire.
+    let src = "pub struct InstantaneousRate;\npub fn x(h: MyHashMapLike) {}\n";
+    assert!(lint_source("sim/mod.rs", src).is_empty());
+}
+
+#[test]
+fn tokens_inside_strings_and_comments_do_not_fire() {
+    let src = concat!(
+        "// Instant is banned here; HashMap too.\n",
+        "pub fn describe() -> &'static str {\n",
+        "    \"uses Instant and HashMap and thread_rng\"\n",
+        "}\n",
+    );
+    assert!(lint_source("sim/mod.rs", src).is_empty());
+}
+
+#[test]
+fn test_modules_are_exempt() {
+    let src = concat!(
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    use std::time::Instant;\n",
+        "    #[test]\n",
+        "    fn timing() { let _ = Instant::now(); }\n",
+        "}\n",
+    );
+    assert!(lint_source("sim/mod.rs", src).is_empty());
+}
+
+#[test]
+fn panic_rules_scope_to_decode_fns_of_wire_files() {
+    let decode = "pub fn decode(b: &[u8]) -> u32 { b.first().copied().unwrap() as u32 }\n";
+    let encode = "pub fn encode(b: &[u8]) -> u32 { b.first().copied().unwrap() as u32 }\n";
+    // decode-scope fn in a wire file: fires.
+    let vs = lint_source("net/wire.rs", decode);
+    assert_eq!(rules(&vs), vec!["panic-decode"], "{vs:?}");
+    // encode fn in the same file: exempt.
+    assert!(lint_source("net/wire.rs", encode).is_empty());
+    // decode fn in a non-wire file: exempt.
+    assert!(lint_source("sim/mod.rs", decode).is_empty());
+}
+
+#[test]
+fn indexing_flagged_but_not_attributes_or_macros() {
+    let src = concat!(
+        "#[derive(Debug)]\n",
+        "pub struct P;\n",
+        "pub fn parse(b: &[u8]) -> Vec<u8> {\n",
+        "    let v = vec![0u8; 4];\n",
+        "    let _ = v;\n",
+        "    b.to_vec()\n",
+        "}\n",
+    );
+    assert!(lint_source("net/wire.rs", src).is_empty());
+    let bad = "pub fn parse(b: &[u8]) -> u8 { b[0] }\n";
+    let vs = lint_source("net/wire.rs", bad);
+    assert_eq!(rules(&vs), vec!["index-decode"], "{vs:?}");
+}
+
+#[test]
+fn panic_macros_fire_but_debug_assert_does_not() {
+    let bang = "pub fn decode(n: usize) { assert!(n > 0); }\n";
+    let vs = lint_source("compress/codec.rs", bang);
+    assert_eq!(rules(&vs), vec!["panic-decode"], "{vs:?}");
+    let dbg = "pub fn decode(n: usize) { debug_assert!(n > 0); }\n";
+    assert!(lint_source("compress/codec.rs", dbg).is_empty());
+}
+
+#[test]
+fn trailing_directive_suppresses_same_line() {
+    let src = concat!(
+        "pub fn decode(b: &[u8]) -> u8 {\n",
+        "    b[0] // det:allow(index-decode): length checked by caller\n",
+        "}\n",
+    );
+    assert!(lint_source("net/wire.rs", src).is_empty());
+}
+
+#[test]
+fn standalone_directive_targets_next_code_line_only() {
+    let src = concat!(
+        "pub fn decode(b: &[u8]) -> u8 {\n",
+        "    // det:allow(index-decode): first byte only, len pre-checked\n",
+        "    let hi = b[0];\n",
+        "    let lo = b[1];\n",
+        "    hi.wrapping_add(lo)\n",
+        "}\n",
+    );
+    let vs = lint_source("net/wire.rs", src);
+    // The directive covers line 3; line 4 still fires.
+    assert_eq!(vs.len(), 1, "{vs:?}");
+    assert_eq!(vs[0].rule, "index-decode");
+    assert_eq!(vs[0].line, 4);
+}
+
+#[test]
+fn directive_suppresses_only_named_rules() {
+    let src = concat!(
+        "pub fn decode(b: &[u8]) -> u8 {\n",
+        "    // det:allow(panic-decode): unwrap is on a checked branch\n",
+        "    b[0].checked_add(1).unwrap()\n",
+        "}\n",
+    );
+    let vs = lint_source("net/wire.rs", src);
+    // panic-decode suppressed; the indexing on the same line is not.
+    assert_eq!(rules(&vs), vec!["index-decode"], "{vs:?}");
+}
+
+#[test]
+fn directive_without_justification_is_a_violation_and_inert() {
+    let src = concat!(
+        "pub fn step() {\n",
+        "    // det:allow(wall-clock)\n",
+        "    let _ = std::time::Instant::now();\n",
+        "}\n",
+    );
+    let vs = lint_source("sim/mod.rs", src);
+    assert_eq!(rules(&vs), vec!["allow-justification", "wall-clock"],
+               "{vs:?}");
+}
+
+#[test]
+fn directive_with_unknown_rule_is_a_violation_and_inert() {
+    let src = concat!(
+        "pub fn step() {\n",
+        "    // det:allow(wallclock): misspelled\n",
+        "    let _ = std::time::Instant::now();\n",
+        "}\n",
+    );
+    let vs = lint_source("graph/mod.rs", src);
+    assert_eq!(rules(&vs), vec!["allow-justification", "wall-clock"],
+               "{vs:?}");
+    assert!(vs.iter().any(|v| v.message.contains("unknown rule")),
+            "{vs:?}");
+}
+
+#[test]
+fn multi_rule_directive_suppresses_both() {
+    let src = concat!(
+        "pub fn decode(b: &[u8]) -> u8 {\n",
+        "    // det:allow(index-decode, panic-decode): len pre-checked\n",
+        "    b[0].checked_add(1).unwrap()\n",
+        "}\n",
+    );
+    assert!(lint_source("net/wire.rs", src).is_empty());
+}
+
+#[test]
+fn violation_display_is_file_line_rule() {
+    let vs = lint_source("sim/mod.rs",
+                         "pub fn t() { let _ = Instant::now(); }\n");
+    assert_eq!(vs.len(), 1);
+    let line = vs[0].to_string();
+    assert!(line.starts_with("sim/mod.rs:1: [wall-clock]"), "{line}");
+}
+
+// -------------------------------------------------------------------
+// Seeded fixture trees (the CI acceptance surface)
+// -------------------------------------------------------------------
+
+#[test]
+fn fixture_wallclock_in_sim_fires() {
+    let vs = lint_tree(&fixture("wallclock_in_sim")).unwrap();
+    assert!(!vs.is_empty());
+    assert!(vs.iter().all(|v| v.rule == "wall-clock"), "{vs:?}");
+    assert!(vs.iter().all(|v| v.file == "sim/mod.rs"), "{vs:?}");
+}
+
+#[test]
+fn fixture_hashmap_in_algorithms_fires() {
+    let vs = lint_tree(&fixture("hashmap_in_algorithms")).unwrap();
+    assert!(!vs.is_empty());
+    assert!(vs.iter().all(|v| v.rule == "unordered-container"), "{vs:?}");
+}
+
+#[test]
+fn fixture_rng_in_compress_fires() {
+    let vs = lint_tree(&fixture("rng_in_compress")).unwrap();
+    assert_eq!(rules(&vs), vec!["ambient-rng"], "{vs:?}");
+}
+
+#[test]
+fn fixture_unwrap_in_decode_fires_both_rules() {
+    let vs = lint_tree(&fixture("unwrap_in_decode")).unwrap();
+    assert_eq!(rules(&vs), vec!["index-decode", "panic-decode"], "{vs:?}");
+}
+
+#[test]
+fn fixture_missing_justification_fires() {
+    let vs = lint_tree(&fixture("missing_justification")).unwrap();
+    assert_eq!(rules(&vs), vec!["allow-justification", "wall-clock"],
+               "{vs:?}");
+}
+
+#[test]
+fn fixture_unknown_rule_fires() {
+    let vs = lint_tree(&fixture("unknown_rule")).unwrap();
+    assert_eq!(rules(&vs), vec!["allow-justification", "wall-clock"],
+               "{vs:?}");
+}
+
+#[test]
+fn fixture_allowed_clean_is_clean() {
+    let vs = lint_tree(&fixture("allowed_clean")).unwrap();
+    assert!(vs.is_empty(), "allow-list failed to suppress: {vs:?}");
+}
+
+// -------------------------------------------------------------------
+// The real tree
+// -------------------------------------------------------------------
+
+#[test]
+fn real_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let vs = lint_tree(&root).unwrap();
+    let listing: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
+    assert!(
+        vs.is_empty(),
+        "rust/src must lint clean; fix or add a justified allow:\n{}",
+        listing.join("\n"),
+    );
+}

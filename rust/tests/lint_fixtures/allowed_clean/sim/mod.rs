@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): a properly justified allow suppresses
+// exactly its rule on its target line — this tree must lint clean.
+pub fn trace_stamp() -> u64 {
+    // det:allow(wall-clock): fixture exercises suppression; this is a
+    // lint self-test source, not a runtime path.
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}

@@ -1,0 +1,7 @@
+// Lint fixture (never compiled): an unordered container in protocol
+// state must trip the unordered-container rule.
+use std::collections::HashMap;
+
+pub struct Node {
+    pub duals: HashMap<usize, Vec<f32>>,
+}

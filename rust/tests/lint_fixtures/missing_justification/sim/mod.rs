@@ -1,0 +1,7 @@
+// Lint fixture (never compiled): a directive with no justification is
+// itself a violation and suppresses nothing.
+pub fn now_ns() -> u64 {
+    // det:allow(wall-clock)
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}

@@ -1,0 +1,7 @@
+// Lint fixture (never compiled): ambient randomness in a codec path
+// must trip the ambient-rng rule.
+pub fn sample_mask(dim: usize) -> Vec<u32> {
+    let mut rng = rand::thread_rng();
+    let _ = &mut rng;
+    (0..dim as u32).collect()
+}

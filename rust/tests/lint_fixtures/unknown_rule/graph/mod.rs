@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): a directive naming an unknown rule is
+// itself a violation and suppresses nothing.
+pub fn neighbors() -> Vec<usize> {
+    // det:allow(wallclock): misspelled rule name, should not suppress
+    let t = std::time::Instant::now();
+    let _ = t;
+    Vec::new()
+}

@@ -1,0 +1,5 @@
+// Lint fixture (never compiled): a panic and a direct index on peer
+// bytes in the parse path must trip panic-decode and index-decode.
+pub fn read_message(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[0..4].try_into().unwrap())
+}

@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): a wall-clock read inside the
+// virtual-time engine must trip the wall-clock rule.
+use std::time::Instant;
+
+pub fn step() -> u64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
