@@ -2,14 +2,19 @@
 //! unavailable offline — see util::bench).
 //!
 //! Covers: the fused dual update (native sparse / native dense / PJRT
-//! L1-Pallas), mask sampling, COO gather/scatter, gossip averaging, the
-//! PowerGossip power-iteration halves, and the PJRT train/eval steps.
-//! These are the per-round costs behind every table.
+//! L1-Pallas), mask sampling, COO gather/scatter, codec decode vs
+//! `decode_into`, the fused round kernels vs their `_reference` twins,
+//! gossip averaging, the PowerGossip power-iteration halves, and the
+//! PJRT train/eval steps.  These are the per-round costs behind every
+//! table.
 
 use cecl::compress::codec::QsgdCodec;
 use cecl::compress::low_rank::{matvec_f32, matvec_f32_reference,
                                matvec_t_f32, matvec_t_f32_reference};
 use cecl::compress::{CodecSpec, CooVec, EdgeCodec, EdgeCtx, RandK};
+use cecl::linalg::{consensus_mix_f32, consensus_mix_f32_reference,
+                   dual_mix_f32, dual_mix_f32_reference,
+                   fused_prox_step_f32, fused_prox_step_f32_reference};
 use cecl::model::Manifest;
 use cecl::runtime::{native, Engine, ModelRuntime};
 use cecl::util::bench::BenchSet;
@@ -95,8 +100,8 @@ fn main() {
         dim: d,
         epoch: 0,
     };
-    for spec_str in ["rand_k:0.1", "rand_k:0.1:values", "top_k:0.1",
-                     "qsgd:4", "sign", "ef+top_k:0.1"] {
+    for spec_str in ["identity", "rand_k:0.1", "rand_k:0.1:values",
+                     "top_k:0.1", "qsgd:4", "sign", "ef+top_k:0.1"] {
         let spec = CodecSpec::parse(spec_str).expect("bench codec spec");
         let mut enc = spec.build();
         let frame = spec.build().encode(&y, &ctx);
@@ -115,6 +120,20 @@ fn main() {
                 std::hint::black_box(out.len());
             },
         );
+        // A/B against the allocation-free receive path the sim engine
+        // actually runs: same frame, reusable scratch, zero Vec churn.
+        let mut dec_into = spec.build();
+        let mut scratch = vec![0.0f32; d];
+        set.bench_throughput(
+            &format!("codec decode_into {spec_str}"), 2, 15, d as f64,
+            "elem",
+            || {
+                dec_into
+                    .decode_into(&frame, &ctx, &mut scratch)
+                    .expect("decode_into");
+                std::hint::black_box(scratch[0]);
+            },
+        );
     }
 
     // ---- qsgd encode: branch-free bucketed kernel vs scalar ref ---------
@@ -130,6 +149,46 @@ fn main() {
                          "elem", || {
         let f = q4.encode_reference(&y, &ctx);
         std::hint::black_box(f.wire_bytes());
+    });
+
+    // ---- fused round kernels vs plain-loop references -------------------
+    // Each pair is pinned bit-identical in linalg; the rows here are
+    // purely the wall-clock delta of the 4-way unroll.
+    let g = randn(d, 30);
+    let zsum = randn(d, 31);
+    let mut wf = randn(d, 32);
+    set.bench_throughput("fused_prox_step (4-way unrolled)", 3, 50,
+                         d as f64, "elem", || {
+        fused_prox_step_f32(&mut wf, &g, &zsum, 0.05, 1.1);
+        std::hint::black_box(wf[0]);
+    });
+    set.bench_throughput("fused_prox_step (reference)", 3, 50,
+                         d as f64, "elem", || {
+        fused_prox_step_f32_reference(&mut wf, &g, &zsum, 0.05, 1.1);
+        std::hint::black_box(wf[0]);
+    });
+    let ymix = randn(d, 33);
+    let mut zmix = randn(d, 34);
+    let mut accm = randn(d, 35);
+    set.bench_throughput("dual_mix (4-way unrolled)", 3, 50, d as f64,
+                         "elem", || {
+        dual_mix_f32(&mut zmix, &mut accm, &ymix, 0.5, 1.0);
+        std::hint::black_box(zmix[0]);
+    });
+    set.bench_throughput("dual_mix (reference)", 3, 50, d as f64,
+                         "elem", || {
+        dual_mix_f32_reference(&mut zmix, &mut accm, &ymix, 0.5, 1.0);
+        std::hint::black_box(zmix[0]);
+    });
+    set.bench_throughput("consensus_mix (4-way unrolled)", 3, 50,
+                         d as f64, "elem", || {
+        consensus_mix_f32(&mut accm, &ymix, &zmix, 0.3);
+        std::hint::black_box(accm[0]);
+    });
+    set.bench_throughput("consensus_mix (reference)", 3, 50,
+                         d as f64, "elem", || {
+        consensus_mix_f32_reference(&mut accm, &ymix, &zmix, 0.3);
+        std::hint::black_box(accm[0]);
     });
 
     // ---- gossip weighted average (D-PSGD inner loop) --------------------

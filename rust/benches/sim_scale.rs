@@ -1,6 +1,7 @@
 //! Scale bench for the virtual-time engine: the 64 → 512 → 8k → 100k
 //! → 1M rung ladder (C-ECL(10%) softmax-tiny rungs plus NullLocal
-//! protocol-only rungs that isolate pure engine throughput), the
+//! protocol-only rungs that isolate pure engine throughput, plus a
+//! degree-4 torus(16x32) rung next to ring(512)), the
 //! simulated time-to-accuracy ladder across link models, and the
 //! sync-vs-async / churn / PowerGossip wall-clock tables at n = 64.
 //!
@@ -152,6 +153,32 @@ fn main() {
             usize::from(iters > 1),
             iters,
             4.0 * nodes as f64,
+            "node-round",
+            || {
+                let r = run_simulated_native(&s, &graph).expect("sim run");
+                std::hint::black_box(r.total_bytes);
+            },
+        );
+    }
+    // Torus rung: the same 512 nodes as ring(512) but degree 4 — twice
+    // the edges at equal node count, so next to the ring row it
+    // isolates how the message path scales with edge count.
+    if 512 <= opts.max_nodes {
+        let graph = Graph::torus(16, 32);
+        let mut s = spec(
+            512,
+            2,
+            LinkSpec::Bandwidth { latency_us: 200, mbit_per_sec: 100.0 },
+        );
+        s.exec = ExecMode::Simulated(SimConfig {
+            link: LinkSpec::Bandwidth { latency_us: 200, mbit_per_sec: 100.0 },
+            ..SimConfig::default()
+        });
+        set.bench_throughput(
+            "torus(16x32) 4 rounds",
+            1,
+            3,
+            4.0 * 512.0,
             "node-round",
             || {
                 let r = run_simulated_native(&s, &graph).expect("sim run");

@@ -65,6 +65,8 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::comm::{Msg, NodeComm, Outbox};
 use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx, RandK, WireMode};
 use crate::graph::{Graph, TopologyView};
+use crate::linalg::{dual_diff_mix_f32, dual_mix_f32};
+use crate::model::Arena;
 use crate::runtime::{native, ModelRuntime};
 
 use super::{paper_alpha, BuildCtx, EdgeClock, NodeAlgorithm,
@@ -107,9 +109,10 @@ pub struct CEclNode {
     rule: DualRule,
     dual_path: DualPath,
     runtime: Option<Arc<ModelRuntime>>,
-    /// Dual state, one vector per neighbor slot (sorted neighbor order).
-    /// Dead slots are retired to zero until their edge is reborn.
-    z: Vec<Vec<f32>>,
+    /// Dual state, one arena row per neighbor slot (sorted neighbor
+    /// order) — a single contiguous slab, stride `d_pad`.  Dead slots
+    /// are retired to zero until their edge is reborn.
+    z: Arena,
     /// Cached `Σ_j A_{i|j} z_{i|j}` over live edges.
     zsum: Vec<f32>,
     /// Sync vs bounded-staleness async rounds.
@@ -145,6 +148,8 @@ pub struct CEclNode {
     scratch_dense_a: Vec<f32>,
     scratch_mask_in: Vec<f32>,
     scratch_mask_out: Vec<f32>,
+    /// Reusable decode target: every dense `decode_into` lands here.
+    scratch_recv: Vec<f32>,
 }
 
 impl CEclNode {
@@ -196,7 +201,7 @@ impl CEclNode {
             rule,
             dual_path: ctx.dual_path,
             runtime: ctx.runtime.clone(),
-            z: vec![vec![0.0; d_pad]; degree],
+            z: Arena::zeros(degree, d_pad),
             zsum: vec![0.0; d_pad],
             policy: ctx.round_policy,
             cur_round: 0,
@@ -215,6 +220,7 @@ impl CEclNode {
             scratch_dense_a: vec![0.0; d_pad],
             scratch_mask_in: vec![0.0; d_pad],
             scratch_mask_out: vec![0.0; d_pad],
+            scratch_recv: vec![0.0; d_pad],
         })
     }
 
@@ -249,14 +255,14 @@ impl CEclNode {
                     // Warm-start from the current primal.
                     let a = self.graph.edge_sign(self.node, j);
                     let alpha = self.alpha;
-                    for (zv, &wv) in self.z[jj].iter_mut().zip(w.iter()) {
+                    for (zv, &wv) in self.z.row_mut(jj).iter_mut().zip(w.iter()) {
                         *zv = alpha * a * wv;
                     }
                 } else {
                     // The incarnation is already dead again (several
                     // transitions observed at once, e.g. by a direct
                     // TopologyView user): a dead slot carries no dual.
-                    for zv in self.z[jj].iter_mut() {
+                    for zv in self.z.row_mut(jj).iter_mut() {
                         *zv = 0.0;
                     }
                 }
@@ -270,7 +276,7 @@ impl CEclNode {
                     // Typed teardown: the dual is retired with the
                     // edge; rebirth rebuilds it from the then-current
                     // primal under a new epoch.
-                    for zv in self.z[jj].iter_mut() {
+                    for zv in self.z.row_mut(jj).iter_mut() {
                         *zv = 0.0;
                     }
                 }
@@ -321,7 +327,7 @@ impl CEclNode {
         let mut want = vec![0.0f32; self.d_pad];
         for (jj, &j) in self.graph.neighbors(self.node).iter().enumerate() {
             let a = self.graph.edge_sign(self.node, j);
-            for (acc, &zv) in want.iter_mut().zip(&self.z[jj]) {
+            for (acc, &zv) in want.iter_mut().zip(self.z.row(jj)) {
                 *acc += a * zv;
             }
         }
@@ -337,7 +343,7 @@ impl CEclNode {
         self.zsum.iter_mut().for_each(|v| *v = 0.0);
         for (jj, &j) in self.graph.neighbors(self.node).iter().enumerate() {
             let a = self.graph.edge_sign(self.node, j);
-            for (acc, &zv) in self.zsum.iter_mut().zip(&self.z[jj]) {
+            for (acc, &zv) in self.zsum.iter_mut().zip(self.z.row(jj)) {
                 *acc += a * zv;
             }
         }
@@ -383,7 +389,7 @@ impl CEclNode {
             self.scratch_dense_a.iter_mut().for_each(|v| *v = 0.0);
             let (_, y_send) = rt
                 .dual_update(
-                    &self.z[jj],
+                    self.z.row(jj),
                     w,
                     &self.scratch_dense_a,
                     &self.scratch_dense_a,
@@ -404,9 +410,8 @@ impl CEclNode {
                 .edge_index(self.node, j)
                 .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
             let ctx_e = self.edge_ctx(jj, e, round, self.node);
-            let codec = &mut self.codecs[jj];
-            let ycomp = codec.decode(&frame, &ctx_e)?;
-            let mask_in = codec
+            self.codecs[jj].decode_into(&frame, &ctx_e, &mut self.scratch_recv)?;
+            let mask_in = self.codecs[jj]
                 .sparse_support(&ctx_e)
                 .ok_or_else(|| anyhow!("pjrt path needs a mask codec"))?;
             RandK::mask_to_dense(self.d_pad, &mask_in, &mut self.scratch_mask_in);
@@ -414,9 +419,9 @@ impl CEclNode {
             let taa = 2.0 * self.alpha * self.graph.edge_sign(self.node, j);
             let (z_new, _) = rt
                 .dual_update(
-                    &self.z[jj],
+                    self.z.row(jj),
                     w,
-                    &ycomp,
+                    &self.scratch_recv,
                     &self.scratch_mask_in,
                     &self.scratch_mask_out,
                     self.theta,
@@ -424,14 +429,16 @@ impl CEclNode {
                 )
                 .context("pjrt dual_update (recv)")?;
             match self.rule {
-                DualRule::CompressDiff => self.z[jj] = z_new,
+                DualRule::CompressDiff => {
+                    self.z.row_mut(jj).copy_from_slice(&z_new)
+                }
                 DualRule::CompressY => {
                     // The kernel implements Eq. (13); Eq. (11) is the
-                    // naive rule, applied densely here (`ycomp` is zero
-                    // off the mask, so this matches the sparse form).
+                    // naive rule, applied densely here (the decoded y is
+                    // zero off the mask, so this matches the sparse form).
                     let theta = self.theta;
-                    let z = &mut self.z[jj];
-                    for (zv, &yv) in z.iter_mut().zip(&ycomp) {
+                    let z = self.z.row_mut(jj);
+                    for (zv, &yv) in z.iter_mut().zip(&self.scratch_recv) {
                         *zv = (1.0 - theta) * *zv + theta * yv;
                     }
                 }
@@ -440,8 +447,9 @@ impl CEclNode {
         Ok(())
     }
 
-    /// Test/bench access: per-neighbor dual state.
-    pub fn dual_state(&self) -> &[Vec<f32>] {
+    /// Test/bench access: per-neighbor dual state (arena row = neighbor
+    /// slot in sorted neighbor order).
+    pub fn dual_state(&self) -> &Arena {
         &self.z
     }
 
@@ -514,7 +522,8 @@ impl NodeStateMachine for CEclNode {
                     continue; // dead or not-yet-activated edge
                 }
                 let taa = 2.0 * self.alpha * self.graph.edge_sign(self.node, j);
-                let y: Vec<f32> = self.z[jj]
+                let y: Vec<f32> = self.z
+                    .row(jj)
                     .iter()
                     .zip(w.iter())
                     .map(|(&zv, &wv)| zv - taa * wv)
@@ -539,7 +548,7 @@ impl NodeStateMachine for CEclNode {
                 let ctx_e = self.edge_ctx(jj, e, round, j);
                 let taa = 2.0 * self.alpha * self.graph.edge_sign(self.node, j);
                 let codec = &mut self.codecs[jj];
-                let z = &self.z[jj];
+                let z = self.z.row(jj);
                 let frame = match codec
                     .encode_from(&|i| z[i] - taa * w[i], &ctx_e)
                 {
@@ -593,7 +602,7 @@ impl NodeStateMachine for CEclNode {
                 y_recv.len(),
                 self.d_pad
             );
-            for (zv, &yv) in self.z[jj].iter_mut().zip(&y_recv) {
+            for (zv, &yv) in self.z.row_mut(jj).iter_mut().zip(&y_recv) {
                 *zv = (1.0 - theta) * *zv + theta * yv;
             }
             self.zsum_dirty = true;
@@ -622,7 +631,7 @@ impl NodeStateMachine for CEclNode {
                     if let Some((idx, vals)) =
                         codec.decode_sparse(&frame, &ctx_e)?
                     {
-                        let z = &mut self.z[jj];
+                        let z = self.z.row_mut(jj);
                         for (&i, &yv) in idx.iter().zip(&vals) {
                             let i = i as usize;
                             debug_assert!(i < self.d_pad);
@@ -633,16 +642,15 @@ impl NodeStateMachine for CEclNode {
                     } else if codec.is_full_support() {
                         // Identity: comp(z) = z, so Eq. (13) reduces to
                         // the fused dense update — no support list.
-                        let y = codec.decode(&frame, &ctx_e)?;
-                        debug_assert_eq!(y.len(), self.d_pad);
-                        let z = &mut self.z[jj];
-                        for ((zv, acc), &yv) in
-                            z.iter_mut().zip(self.zsum.iter_mut()).zip(&y)
-                        {
-                            let delta = theta * (yv - *zv);
-                            *zv += delta;
-                            *acc += a * delta;
-                        }
+                        // `decode_into` lands in persistent scratch (no
+                        // allocation) and the fused kernel applies the
+                        // same per-element expression tree as the old
+                        // zip loop.
+                        codec.decode_into(&frame, &ctx_e,
+                                          &mut self.scratch_recv)?;
+                        dual_diff_mix_f32(self.z.row_mut(jj),
+                                          &mut self.zsum,
+                                          &self.scratch_recv, theta, a);
                     } else {
                         // Unreachable with the current codec set: the
                         // Eq. 13 rule requires fixed-ω linearity, and
@@ -659,17 +667,13 @@ impl NodeStateMachine for CEclNode {
                 }
                 DualRule::CompressY => {
                     // Eq. (11): z' = (1−θ)z + θ comp(y). Touches every
-                    // coordinate (comp(y) is dense for quantizers).
-                    let y = codec.decode(&frame, &ctx_e)?;
-                    debug_assert_eq!(y.len(), self.d_pad);
-                    let z = &mut self.z[jj];
-                    for ((zv, acc), &yv) in
-                        z.iter_mut().zip(self.zsum.iter_mut()).zip(&y)
-                    {
-                        let old = *zv;
-                        *zv = (1.0 - theta) * old + theta * yv;
-                        *acc += a * (*zv - old);
-                    }
+                    // coordinate (comp(y) is dense for quantizers); the
+                    // decode lands in persistent scratch and the fused
+                    // kernel keeps the exact expression tree.
+                    codec.decode_into(&frame, &ctx_e,
+                                      &mut self.scratch_recv)?;
+                    dual_mix_f32(self.z.row_mut(jj), &mut self.zsum,
+                                 &self.scratch_recv, theta, a);
                 }
             }
         }
@@ -818,9 +822,11 @@ end
                 let mut n = CEclNode::new(&ctx(i, &graph), rand_k(k_frac),
                                           theta, 0, DualRule::CompressDiff)
                     .unwrap();
-                // Seed distinct non-trivial dual state + w.
+                // Seed distinct non-trivial dual state + w.  The arena
+                // stride equals d_pad here, so the slab order matches
+                // the old row-by-row flatten order exactly.
                 let mut rng = Pcg::new(100 + i as u64);
-                for zv in n.z.iter_mut().flatten() {
+                for zv in n.z.as_mut_slice().iter_mut() {
                     *zv = rng.normal_f32();
                 }
                 // Restore the zsum invariant after direct z seeding (the
@@ -880,7 +886,7 @@ end
                 let wj = init_w(j);
                 for t in 0..32 {
                     let y_ji = zj[ii][t] - 2.0 * alpha_j * a_ji * wj[t];
-                    let got = nodes_before[i].z[jj][t];
+                    let got = nodes_before[i].z.row(jj)[t];
                     assert!(
                         (got - y_ji).abs() < 1e-5,
                         "node {i} nb {j} coord {t}: {got} vs {y_ji}"
@@ -904,7 +910,7 @@ end
             for jj in 0..2 {
                 for t in 0..32 {
                     total += 1;
-                    if node.z[jj][t] == orig[jj][t] {
+                    if node.z.row(jj)[t] == orig[jj][t] {
                         unchanged += 1;
                     }
                 }
@@ -922,7 +928,7 @@ end
             for t in 0..32 {
                 let mut want = 0.0f32;
                 for (jj, &j) in graph.neighbors(i).iter().enumerate() {
-                    want += graph.edge_sign(i, j) * node.z[jj][t];
+                    want += graph.edge_sign(i, j) * node.z.row(jj)[t];
                 }
                 assert!((node.zsum[t] - want).abs() < 1e-5);
             }
@@ -1010,7 +1016,7 @@ end
                                               0.9, 0, rule)
                         .unwrap();
                     let mut rng = Pcg::new(300 + i as u64);
-                    for zv in n.z.iter_mut().flatten() {
+                    for zv in n.z.as_mut_slice().iter_mut() {
                         *zv = rng.normal_f32();
                     }
                     n.recompute_zsum();
@@ -1039,8 +1045,8 @@ end
                 let mut rng = Pcg::new(300 + node.node as u64);
                 let moved = node
                     .z
+                    .as_slice()
                     .iter()
-                    .flatten()
                     .filter(|&&zv| zv != rng.normal_f32())
                     .count();
                 assert!(moved > 0, "{}: z never moved", spec.name());
@@ -1112,11 +1118,11 @@ end
             .unwrap();
         // Seed nonzero dual state so the teardown is observable.
         let mut rng = Pcg::new(7);
-        for zv in node.z.iter_mut().flatten() {
+        for zv in node.z.as_mut_slice().iter_mut() {
             *zv = rng.normal_f32();
         }
         node.recompute_zsum();
-        let z_to_2 = node.z[1].clone();
+        let z_to_2 = node.z.row(1).to_vec();
         let mut w = vec![0.5f32; 32];
         let mut out = Outbox::new();
 
@@ -1125,8 +1131,8 @@ end
         NodeStateMachine::on_topology(&mut node, &view, &mut w, &mut out)
             .unwrap();
         assert!(out.is_empty());
-        assert!(node.z[0].iter().all(|&v| v == 0.0), "dual not retired");
-        assert_eq!(node.z[1], z_to_2, "static slot must be untouched");
+        assert!(node.z.row(0).iter().all(|&v| v == 0.0), "dual not retired");
+        assert_eq!(node.z.row(1), &z_to_2[..], "static slot must be untouched");
         // alpha_deg tracks the live degree.
         let full_ad = node.alpha() * 2.0;
         assert!((NodeStateMachine::alpha_deg(&node) - node.alpha()).abs()
@@ -1143,7 +1149,7 @@ end
             .unwrap();
         assert!((NodeStateMachine::alpha_deg(&node) - full_ad).abs() < 1e-6);
         // Warm start: z_{0|1} = α · (+1) · w.
-        for (&zv, &wv) in node.z[0].iter().zip(&w) {
+        for (&zv, &wv) in node.z.row(0).iter().zip(&w) {
             assert!((zv - node.alpha() * wv).abs() < 1e-6, "{zv} vs α·w");
         }
         node.debug_check_zsum();

@@ -40,6 +40,8 @@ use anyhow::{anyhow, ensure, Result};
 use crate::comm::{Msg, NodeComm, Outbox};
 use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx};
 use crate::graph::{Graph, TopologyView};
+use crate::linalg::{axpy_f32, consensus_mix_f32, scaled_copy_f32};
+use crate::model::Arena;
 
 use super::{BuildCtx, EdgeClock, NodeAlgorithm, NodeStateMachine,
             RoundPolicy};
@@ -59,10 +61,11 @@ pub struct ChocoNode {
     codecs_out: Vec<Box<dyn EdgeCodec>>,
     /// Inbound codec per neighbor slot: decodes the neighbor's q.
     codecs_in: Vec<Box<dyn EdgeCodec>>,
-    /// `x̂_{i|j}`: own replica as held by neighbor slot jj.
-    hat_self: Vec<Vec<f32>>,
+    /// `x̂_{i|j}`: own replica as held by neighbor slot jj (arena row
+    /// per slot, one contiguous slab).
+    hat_self: Arena,
     /// `x̂_{j|i}`: neighbor slot jj's replica held here.
-    hat_nb: Vec<Vec<f32>>,
+    hat_nb: Arena,
     /// `identity` codec: replicas are exact, run the D-PSGD fold.
     exact: bool,
     /// Sync vs bounded-staleness async rounds.
@@ -85,6 +88,8 @@ pub struct ChocoNode {
     // -- preallocated scratch -------------------------------------------
     acc: Vec<f32>,
     scratch_q: Vec<f32>,
+    /// Reusable decode target: every `decode_into` lands here.
+    scratch_recv: Vec<f32>,
 }
 
 impl ChocoNode {
@@ -123,8 +128,8 @@ impl ChocoNode {
             codecs_out: (0..degree).map(|_| build(&mats, &vecs)).collect(),
             codecs_in: (0..degree).map(|_| build(&mats, &vecs)).collect(),
             codec_spec: codec,
-            hat_self: vec![vec![0.0; d_pad]; degree],
-            hat_nb: vec![vec![0.0; d_pad]; degree],
+            hat_self: Arena::zeros(degree, d_pad),
+            hat_nb: Arena::zeros(degree, d_pad),
             policy: ctx.round_policy,
             cur_round: 0,
             clocks: vec![EdgeClock::born(0); degree],
@@ -138,6 +143,7 @@ impl ChocoNode {
             max_lag_seen: 0,
             acc: vec![0.0; d_pad],
             scratch_q: Vec::with_capacity(d_pad),
+            scratch_recv: vec![0.0; d_pad],
         })
     }
 
@@ -147,7 +153,7 @@ impl ChocoNode {
     }
 
     /// Test access: (own-side, neighbor-side) replicas per slot.
-    pub fn replicas(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+    pub fn replicas(&self) -> (&Arena, &Arena) {
         (&self.hat_self, &self.hat_nb)
     }
 
@@ -176,16 +182,16 @@ impl ChocoNode {
                 let mut codec = self.codec_spec.build();
                 codec.bind_layout(&self.mats, &self.vecs);
                 self.codecs_in[jj] = codec;
-                self.hat_self[jj].iter_mut().for_each(|v| *v = 0.0);
-                self.hat_nb[jj].iter_mut().for_each(|v| *v = 0.0);
+                self.hat_self.row_mut(jj).fill(0.0);
+                self.hat_nb.row_mut(jj).fill(0.0);
                 let mut clock = EdgeClock::born(life.activation_round);
                 clock.live = life.live;
                 self.clocks[jj] = clock;
             } else if life.live != self.clocks[jj].live {
                 self.clocks[jj].live = life.live;
                 if !life.live {
-                    self.hat_self[jj].iter_mut().for_each(|v| *v = 0.0);
-                    self.hat_nb[jj].iter_mut().for_each(|v| *v = 0.0);
+                    self.hat_self.row_mut(jj).fill(0.0);
+                    self.hat_nb.row_mut(jj).fill(0.0);
                 }
             }
         }
@@ -230,12 +236,12 @@ impl NodeStateMachine for ChocoNode {
             if self.exact {
                 // Identity wire carries x itself; the replica is exact.
                 let frame = self.codecs_out[jj].encode(w, &ctx_e);
-                self.hat_self[jj].copy_from_slice(w);
+                self.hat_self.row_mut(jj).copy_from_slice(w);
                 out.send(j, Msg::Frame(frame));
                 continue;
             }
             let codec = &mut self.codecs_out[jj];
-            let hs = &self.hat_self[jj];
+            let hs = self.hat_self.row(jj);
             let frame = match codec.encode_from(&|i| w[i] - hs[i], &ctx_e) {
                 Some(frame) => frame,
                 None => {
@@ -249,10 +255,10 @@ impl NodeStateMachine for ChocoNode {
             // Apply the decoded payload — exactly what the receiver
             // will apply — so both ends of the edge hold the same
             // `x̂_{i|j}` without the replica ever crossing the wire.
-            let qhat = codec.decode(&frame, &ctx_e)?;
-            for (h, &q) in self.hat_self[jj].iter_mut().zip(&qhat) {
-                *h += q;
-            }
+            // The decode lands in persistent scratch; the unit-weight
+            // axpy is `h += 1.0 * q` — exact for every finite q.
+            codec.decode_into(&frame, &ctx_e, &mut self.scratch_recv)?;
+            axpy_f32(1.0, &self.scratch_recv, self.hat_self.row_mut(jj));
             out.send(j, Msg::Frame(frame));
         }
         Ok(())
@@ -287,13 +293,12 @@ impl NodeStateMachine for ChocoNode {
         // far their clocks have drifted.
         let ctx_e = self.edge_ctx(jj, e, msg_round, self.node);
         let frame = msg.into_frame()?;
-        let qhat = self.codecs_in[jj].decode(&frame, &ctx_e)?;
+        self.codecs_in[jj].decode_into(&frame, &ctx_e,
+                                       &mut self.scratch_recv)?;
         if self.exact {
-            self.hat_nb[jj].copy_from_slice(&qhat);
+            self.hat_nb.row_mut(jj).copy_from_slice(&self.scratch_recv);
         } else {
-            for (h, &q) in self.hat_nb[jj].iter_mut().zip(&qhat) {
-                *h += q;
-            }
+            axpy_f32(1.0, &self.scratch_recv, self.hat_nb.row_mut(jj));
         }
         self.clocks[jj].round = msg_round as i64;
         self.clocks[jj].spoken = true;
@@ -317,48 +322,35 @@ impl NodeStateMachine for ChocoNode {
             // parameters bit-for-bit — run D-PSGD's exact accumulation
             // order so the two trajectories are bit-identical (pinned).
             let wii = self.weights[self.node] as f32;
-            for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
-                *a = wii * wv;
-            }
+            scaled_copy_f32(wii, w, &mut self.acc);
             for (jj, &j) in neighbors.iter().enumerate() {
                 let wij = self.weights[j] as f32;
                 let c = &self.clocks[jj];
                 if c.live && c.spoken {
-                    for (a, &v) in self.acc.iter_mut().zip(&self.hat_nb[jj]) {
-                        *a += wij * v;
-                    }
+                    axpy_f32(wij, self.hat_nb.row(jj), &mut self.acc);
                 } else {
                     // Dead or not-yet-spoken slot: fall back to our own
                     // parameters (the MH row stays stochastic).
-                    for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
-                        *a += wij * wv;
-                    }
+                    axpy_f32(wij, w, &mut self.acc);
                 }
             }
             w.copy_from_slice(&self.acc);
             return Ok(());
         }
-        // General compressed path: x += γ Σ_j W_ij (x̂_{j|i} − x̂_{i|j}).
-        self.acc.iter_mut().for_each(|v| *v = 0.0);
+        // General compressed path: x += γ Σ_j W_ij (x̂_{j|i} − x̂_{i|j}),
+        // via the fused consensus kernels (bit-identical to the plain
+        // zip loops they replaced — see `linalg`).
+        self.acc.fill(0.0);
         for (jj, &j) in neighbors.iter().enumerate() {
             let c = &self.clocks[jj];
             if !(c.live && c.spoken) {
                 continue; // no replica pair agreed on this edge yet
             }
             let wij = self.weights[j] as f32;
-            for ((a, &hn), &hs) in self
-                .acc
-                .iter_mut()
-                .zip(&self.hat_nb[jj])
-                .zip(&self.hat_self[jj])
-            {
-                *a += wij * (hn - hs);
-            }
+            consensus_mix_f32(&mut self.acc, self.hat_nb.row(jj),
+                              self.hat_self.row(jj), wij);
         }
-        let gamma = self.gamma;
-        for (wv, &a) in w.iter_mut().zip(&self.acc) {
-            *wv += gamma * a;
-        }
+        axpy_f32(self.gamma, &self.acc, w);
         Ok(())
     }
 
@@ -556,18 +548,18 @@ mod tests {
             .unwrap();
         assert_eq!(out.len(), 2);
         out.drain().for_each(drop);
-        assert!(node.hat_self[0].iter().any(|&v| v != 0.0));
+        assert!(node.hat_self.row(0).iter().any(|&v| v != 0.0));
         // Kill and revive edge (0, 1): epoch bumps, slot 0 is reborn.
         let e = graph.edge_index(0, 1).unwrap();
         view.kill_edge(e);
         view.revive_edge(e, 3);
         NodeStateMachine::on_topology(&mut node, &view, &mut w, &mut out)
             .unwrap();
-        assert!(node.hat_self[0].iter().all(|&v| v == 0.0));
-        assert!(node.hat_nb[0].iter().all(|&v| v == 0.0));
+        assert!(node.hat_self.row(0).iter().all(|&v| v == 0.0));
+        assert!(node.hat_nb.row(0).iter().all(|&v| v == 0.0));
         assert_eq!(node.clocks[0].activation, 3);
         assert!(!node.clocks[0].spoken);
         // Slot 1 (edge to neighbor 3) is untouched.
-        assert!(node.hat_self[1].iter().any(|&v| v != 0.0));
+        assert!(node.hat_self.row(1).iter().any(|&v| v != 0.0));
     }
 }

@@ -23,6 +23,8 @@ use anyhow::{anyhow, Result};
 
 use crate::comm::{Msg, NodeComm, Outbox};
 use crate::graph::{Graph, TopologyView};
+use crate::linalg::{axpy_f32, scaled_copy_f32};
+use crate::model::Arena;
 
 use super::{BuildCtx, EdgeClock, NodeAlgorithm, NodeStateMachine,
             RoundPolicy};
@@ -34,11 +36,14 @@ pub struct DPsgdNode {
     weights: Vec<f64>,
     /// Scratch accumulator (no allocation per round).
     acc: Vec<f32>,
-    /// Freshest received neighbor parameters, one slot per sorted
-    /// neighbor (cleared each round under `Sync`, persistent under
-    /// `Async`; retired on edge death so a churned-out neighbor's last
-    /// model can never be folded in again).
-    recv: Vec<Option<Vec<f32>>>,
+    /// Freshest received neighbor parameters, one arena row per sorted
+    /// neighbor — a contiguous slab, so the `round_end` fold walks
+    /// memory linearly.  `fresh[jj]` says whether the row holds a
+    /// usable vector (cleared each round under `Sync`, persistent
+    /// under `Async`; retired on edge death so a churned-out
+    /// neighbor's last model can never be folded in again).
+    recv: Arena,
+    fresh: Vec<bool>,
     /// Sync vs bounded-staleness async rounds.
     policy: RoundPolicy,
     /// The node's own round clock (set by `round_begin`).
@@ -65,7 +70,8 @@ impl DPsgdNode {
             graph: Arc::clone(&ctx.graph),
             weights,
             acc: vec![0.0; ctx.manifest.d_pad],
-            recv: (0..degree).map(|_| None).collect(),
+            recv: Arena::zeros(degree, ctx.manifest.d_pad),
+            fresh: vec![false; degree],
             policy: ctx.round_policy,
             cur_round: 0,
             clocks: vec![EdgeClock::born(0); degree],
@@ -97,14 +103,14 @@ impl DPsgdNode {
             let life = view.edge_life(e);
             if life.epoch != self.edge_epochs[jj] {
                 self.edge_epochs[jj] = life.epoch;
-                self.recv[jj] = None;
+                self.fresh[jj] = false;
                 let mut clock = EdgeClock::born(life.activation_round);
                 clock.live = life.live;
                 self.clocks[jj] = clock;
             } else if life.live != self.clocks[jj].live {
                 self.clocks[jj].live = life.live;
                 if !life.live {
-                    self.recv[jj] = None;
+                    self.fresh[jj] = false;
                 }
             }
         }
@@ -125,9 +131,7 @@ impl NodeStateMachine for DPsgdNode {
         if !self.policy.is_async() {
             // Sync folds exactly this round's parameters; async keeps
             // the freshest per edge across rounds.
-            for slot in self.recv.iter_mut() {
-                *slot = None;
-            }
+            self.fresh.fill(false);
         }
         for (jj, &j) in neighbors.iter().enumerate() {
             if self.clocks[jj].active(round) {
@@ -159,7 +163,16 @@ impl NodeStateMachine for DPsgdNode {
                              self.clocks[jj].round, msg_round)?;
         // FIFO stamps are strictly increasing, so overwriting always
         // keeps the freshest parameters for this edge.
-        self.recv[jj] = Some(msg.into_dense()?);
+        let wj = msg.into_dense()?;
+        anyhow::ensure!(
+            wj.len() == self.acc.len(),
+            "node {}: parameter payload len {} != d_pad {}",
+            self.node,
+            wj.len(),
+            self.acc.len()
+        );
+        self.recv.row_mut(jj).copy_from_slice(&wj);
+        self.fresh[jj] = true;
         self.clocks[jj].round = msg_round as i64;
         self.clocks[jj].spoken = true;
         Ok(())
@@ -177,33 +190,17 @@ impl NodeStateMachine for DPsgdNode {
         self.max_lag_seen = self.max_lag_seen.max(lag);
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
         let wii = self.weights[self.node] as f32;
-        for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
-            *a = wii * wv;
-        }
+        scaled_copy_f32(wii, w, &mut self.acc);
         for (jj, &j) in neighbors.iter().enumerate() {
             let wij = self.weights[j] as f32;
-            let fold = if self.clocks[jj].live {
-                self.recv[jj].as_deref()
+            if self.clocks[jj].live && self.fresh[jj] {
+                axpy_f32(wij, self.recv.row(jj), &mut self.acc);
             } else {
-                // Churned-out neighbor: its weight falls back to our
-                // own parameters (row stays stochastic).
-                None
-            };
-            match fold {
-                Some(wj) => {
-                    for (a, &v) in self.acc.iter_mut().zip(wj) {
-                        *a += wij * v;
-                    }
-                }
-                // Also reachable in the first `max_staleness` async
-                // rounds of an incarnation (birth slack): the neighbor
-                // has not spoken yet, so its MH weight falls back to
+                // Churned-out neighbor, or one that has not spoken yet
+                // this incarnation (the first `max_staleness` async
+                // rounds of birth slack): its MH weight falls back to
                 // our own parameters — the row stays stochastic.
-                None => {
-                    for (a, &wv) in self.acc.iter_mut().zip(w.iter()) {
-                        *a += wij * wv;
-                    }
-                }
+                axpy_f32(wij, w, &mut self.acc);
             }
         }
         w.copy_from_slice(&self.acc);

@@ -40,6 +40,8 @@ use anyhow::{anyhow, ensure, Result};
 use crate::comm::{Msg, NodeComm, Outbox};
 use crate::compress::{CodecSpec, EdgeCodec, EdgeCtx};
 use crate::graph::{Graph, TopologyView};
+use crate::linalg::consensus_mix_f32;
+use crate::model::Arena;
 
 use super::{BuildCtx, EdgeClock, NodeAlgorithm, NodeStateMachine,
             RoundPolicy};
@@ -62,14 +64,15 @@ pub struct LeadNode {
     codecs_out: Vec<Box<dyn EdgeCodec>>,
     /// Inbound codec per slot (decode of the neighbor's payload).
     codecs_in: Vec<Box<dyn EdgeCodec>>,
-    /// `h_{i|j}`: own-side replica as held by neighbor slot jj.
-    h_self: Vec<Vec<f32>>,
+    /// `h_{i|j}`: own-side replica as held by neighbor slot jj (arena
+    /// row per slot, one contiguous slab — likewise the three below).
+    h_self: Arena,
     /// `h_{j|i}`: neighbor slot jj's replica held here.
-    h_nb: Vec<Vec<f32>>,
+    h_nb: Arena,
     /// `ẑ_{i|j}`: freshest own-z estimate shared with slot jj.
-    zhat_self: Vec<Vec<f32>>,
+    zhat_self: Arena,
     /// `ẑ_{j|i}`: freshest estimate of slot jj's z.
-    zhat_nb: Vec<Vec<f32>>,
+    zhat_nb: Arena,
     /// `−d_i`, exposed as `zsum` so the Eq. (6) kernel computes
     /// `w − η∇f − η d` with `alpha_deg = 0`.
     neg_d: Vec<f32>,
@@ -86,6 +89,8 @@ pub struct LeadNode {
     // -- preallocated scratch -------------------------------------------
     diff: Vec<f32>,
     scratch_q: Vec<f32>,
+    /// Reusable decode target: every `decode_into` lands here.
+    scratch_recv: Vec<f32>,
 }
 
 impl LeadNode {
@@ -125,10 +130,10 @@ impl LeadNode {
             codecs_out: (0..degree).map(|_| build(&mats, &vecs)).collect(),
             codecs_in: (0..degree).map(|_| build(&mats, &vecs)).collect(),
             codec_spec: codec,
-            h_self: vec![vec![0.0; d_pad]; degree],
-            h_nb: vec![vec![0.0; d_pad]; degree],
-            zhat_self: vec![vec![0.0; d_pad]; degree],
-            zhat_nb: vec![vec![0.0; d_pad]; degree],
+            h_self: Arena::zeros(degree, d_pad),
+            h_nb: Arena::zeros(degree, d_pad),
+            zhat_self: Arena::zeros(degree, d_pad),
+            zhat_nb: Arena::zeros(degree, d_pad),
             neg_d: vec![0.0; d_pad],
             policy: ctx.round_policy,
             cur_round: 0,
@@ -143,6 +148,7 @@ impl LeadNode {
             max_lag_seen: 0,
             diff: vec![0.0; d_pad],
             scratch_q: Vec::with_capacity(d_pad),
+            scratch_recv: vec![0.0; d_pad],
         })
     }
 
@@ -179,21 +185,20 @@ impl LeadNode {
                 let mut codec = self.codec_spec.build();
                 codec.bind_layout(&self.mats, &self.vecs);
                 self.codecs_in[jj] = codec;
-                for buf in [&mut self.h_self[jj], &mut self.h_nb[jj],
-                            &mut self.zhat_self[jj], &mut self.zhat_nb[jj]] {
-                    buf.iter_mut().for_each(|v| *v = 0.0);
-                }
+                self.h_self.row_mut(jj).fill(0.0);
+                self.h_nb.row_mut(jj).fill(0.0);
+                self.zhat_self.row_mut(jj).fill(0.0);
+                self.zhat_nb.row_mut(jj).fill(0.0);
                 let mut clock = EdgeClock::born(life.activation_round);
                 clock.live = life.live;
                 self.clocks[jj] = clock;
             } else if life.live != self.clocks[jj].live {
                 self.clocks[jj].live = life.live;
                 if !life.live {
-                    for buf in [&mut self.h_self[jj], &mut self.h_nb[jj],
-                                &mut self.zhat_self[jj],
-                                &mut self.zhat_nb[jj]] {
-                        buf.iter_mut().for_each(|v| *v = 0.0);
-                    }
+                    self.h_self.row_mut(jj).fill(0.0);
+                    self.h_nb.row_mut(jj).fill(0.0);
+                    self.zhat_self.row_mut(jj).fill(0.0);
+                    self.zhat_nb.row_mut(jj).fill(0.0);
                 }
             }
         }
@@ -235,7 +240,7 @@ impl NodeStateMachine for LeadNode {
                 .ok_or_else(|| anyhow!("({}, {j}) is not an edge", self.node))?;
             let ctx_e = self.edge_ctx(jj, e, round, j);
             let codec = &mut self.codecs_out[jj];
-            let hs = &self.h_self[jj];
+            let hs = self.h_self.row(jj);
             let frame = match codec.encode_from(&|i| w[i] - hs[i], &ctx_e) {
                 Some(frame) => frame,
                 None => {
@@ -247,13 +252,15 @@ impl NodeStateMachine for LeadNode {
                 }
             };
             // Mirror the receiver: ẑ_{i|j} = h + q̂, then h += α q̂, off
-            // the decoded payload so the pair never forks.
-            let qhat = codec.decode(&frame, &ctx_e)?;
+            // the decoded payload (landed in persistent scratch) so the
+            // pair never forks.
+            codec.decode_into(&frame, &ctx_e, &mut self.scratch_recv)?;
             let alpha = self.alpha_mix;
-            for ((zh, h), &q) in self.zhat_self[jj]
+            for ((zh, h), &q) in self.zhat_self
+                .row_mut(jj)
                 .iter_mut()
-                .zip(self.h_self[jj].iter_mut())
-                .zip(&qhat)
+                .zip(self.h_self.row_mut(jj).iter_mut())
+                .zip(&self.scratch_recv)
             {
                 *zh = *h + q;
                 *h += alpha * q;
@@ -289,12 +296,14 @@ impl NodeStateMachine for LeadNode {
             .ok_or_else(|| anyhow!("({}, {from}) is not an edge", self.node))?;
         let ctx_e = self.edge_ctx(jj, e, msg_round, self.node);
         let frame = msg.into_frame()?;
-        let qhat = self.codecs_in[jj].decode(&frame, &ctx_e)?;
+        self.codecs_in[jj].decode_into(&frame, &ctx_e,
+                                       &mut self.scratch_recv)?;
         let alpha = self.alpha_mix;
-        for ((zh, h), &q) in self.zhat_nb[jj]
+        for ((zh, h), &q) in self.zhat_nb
+            .row_mut(jj)
             .iter_mut()
-            .zip(self.h_nb[jj].iter_mut())
-            .zip(&qhat)
+            .zip(self.h_nb.row_mut(jj).iter_mut())
+            .zip(&self.scratch_recv)
         {
             *zh = *h + q;
             *h += alpha * q;
@@ -315,22 +324,17 @@ impl NodeStateMachine for LeadNode {
                                          round, &self.clocks)?;
         self.max_lag_seen = self.max_lag_seen.max(lag);
         let neighbors: Vec<usize> = self.graph.neighbors(self.node).to_vec();
-        // diff = Σ_j W_ij (ẑ_{i|j} − ẑ_{j|i}) over live, spoken slots.
-        self.diff.iter_mut().for_each(|v| *v = 0.0);
+        // diff = Σ_j W_ij (ẑ_{i|j} − ẑ_{j|i}) over live, spoken slots —
+        // the fused consensus kernel, bit-identical to the plain loop.
+        self.diff.fill(0.0);
         for (jj, &j) in neighbors.iter().enumerate() {
             let c = &self.clocks[jj];
             if !(c.live && c.spoken) {
                 continue;
             }
             let wij = self.weights[j] as f32;
-            for ((d, &zs), &zn) in self
-                .diff
-                .iter_mut()
-                .zip(&self.zhat_self[jj])
-                .zip(&self.zhat_nb[jj])
-            {
-                *d += wij * (zs - zn);
-            }
+            consensus_mix_f32(&mut self.diff, self.zhat_self.row(jj),
+                              self.zhat_nb.row(jj), wij);
         }
         // d += γ/(2η) diff  (stored negated);  w = z − (γ/2) diff.
         let dual_step = self.gamma / (2.0 * self.eta);
@@ -504,14 +508,14 @@ mod tests {
             .unwrap();
         out.drain().for_each(drop);
         node.neg_d[0] = 0.5; // pretend the dual has moved
-        assert!(node.h_self[0].iter().any(|&v| v != 0.0));
+        assert!(node.h_self.row(0).iter().any(|&v| v != 0.0));
         let e = graph.edge_index(0, 1).unwrap();
         view.kill_edge(e);
         view.revive_edge(e, 2);
         NodeStateMachine::on_topology(&mut node, &view, &mut w, &mut out)
             .unwrap();
-        assert!(node.h_self[0].iter().all(|&v| v == 0.0));
-        assert!(node.zhat_nb[0].iter().all(|&v| v == 0.0));
+        assert!(node.h_self.row(0).iter().all(|&v| v == 0.0));
+        assert!(node.zhat_nb.row(0).iter().all(|&v| v == 0.0));
         assert_eq!(node.neg_d[0], 0.5, "dual is node state, survives churn");
         assert_eq!(node.clocks[0].activation, 2);
     }

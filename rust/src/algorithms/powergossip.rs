@@ -541,7 +541,11 @@ impl PowerGossipNode {
                             out.send(from, Msg::Dense(p.clone()));
                         }
                         run.p_self = ps;
-                        run.p_peer = vec![Vec::new(); nv];
+                        // Reset the slots in place: the outer vec keeps
+                        // its allocation across power iterations.
+                        for slot in run.p_peer.iter_mut() {
+                            *slot = Vec::new();
+                        }
                         run.phase = PgPhase::P;
                         run.recv_count = 0;
                     } else if !self.vec_views.is_empty() {

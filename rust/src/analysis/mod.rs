@@ -25,6 +25,11 @@
 //!   typed `CodecError` / `CommError`.
 //! * `index-decode` — direct slice indexing in those same functions,
 //!   where a bad offset panics instead of erroring.
+//! * `decode-alloc` — fresh `Vec` construction (`Vec::new`,
+//!   `Vec::with_capacity`, `vec![...]`, `.to_vec()`, `.collect()`)
+//!   inside `decode_into` implementations of the wire files.  The
+//!   decode-into contract is zero steady-state allocation: scratch is
+//!   reused across rounds, never rebuilt per message.
 //! * `allow-justification` — a malformed suppression: unknown rule
 //!   name, or a directive with no justification text.
 //!
@@ -58,12 +63,13 @@ const WIRE_FILES: [&str; 4] = [
 ];
 
 /// Every rule a directive may name.
-const RULES: [&str; 6] = [
+const RULES: [&str; 7] = [
     "wall-clock",
     "unordered-container",
     "ambient-rng",
     "panic-decode",
     "index-decode",
+    "decode-alloc",
     "allow-justification",
 ];
 
@@ -77,6 +83,13 @@ const DET_TOKENS: [(&str, &str); 6] = [
     ("thread_rng", "ambient-rng"),
     ("OsRng", "ambient-rng"),
 ];
+
+/// Allocation constructors banned inside `decode_into` implementations
+/// of the wire files (`decode-alloc`): the decode-into contract is that
+/// a steady-state round allocates nothing — scratch is reused, never
+/// rebuilt.  `vec!` is matched separately as a macro (word + `!`).
+const DECODE_ALLOC_TOKENS: [&str; 4] =
+    ["Vec::new", "Vec::with_capacity", ".to_vec(", ".collect"];
 
 /// Panic-family macro names flagged in decode scope (each must be
 /// followed by `!` to count; `debug_assert*` is deliberately absent —
@@ -666,6 +679,33 @@ pub fn lint_source(label: &str, src: &str) -> Vec<Violation> {
                          ({hits}x)"
                     ),
                 );
+            }
+        }
+        if wire && ctx_fn.contains("decode_into") {
+            for tok in DECODE_ALLOC_TOKENS {
+                if line.contains(tok) {
+                    report(
+                        "decode-alloc",
+                        format!(
+                            "`{tok}` allocates in decode_into fn \
+                             `{ctx_fn}`"
+                        ),
+                    );
+                }
+            }
+            let vec_word: Vec<char> = vec!['v', 'e', 'c'];
+            for k in find_word(chars, &vec_word) {
+                let bang =
+                    chars[k + 3..].iter().find(|c| !c.is_whitespace());
+                if bang == Some(&'!') {
+                    report(
+                        "decode-alloc",
+                        format!(
+                            "`vec!` allocates in decode_into fn \
+                             `{ctx_fn}`"
+                        ),
+                    );
+                }
             }
         }
     }

@@ -174,8 +174,44 @@ pub(crate) fn pooled_buf(cap: usize) -> Vec<u8> {
             b.reserve(cap);
             b
         }
-        None => Vec::with_capacity(cap),
+        None => {
+            POOL_MISSES.with(|c| c.set(c.get() + 1));
+            Vec::with_capacity(cap)
+        }
     })
+}
+
+thread_local! {
+    /// Times `pooled_buf` fell through to a fresh allocation.
+    static POOL_MISSES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+    /// Times a codec materialized a fresh dense `Vec<f32>` through the
+    /// allocating [`EdgeCodec::decode`] path (native `decode_into`
+    /// overrides never bump this).
+    static DECODE_ALLOCS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Bumped at the top of every allocating dense `decode` implementation.
+#[inline]
+pub(crate) fn note_decode_alloc() {
+    DECODE_ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+/// This thread's hot-path counters as `(pool_misses, decode_allocs)`.
+/// Both are cumulative per thread; the steady-state allocation test
+/// resets them, runs a warmed-up simulation, and asserts neither grew —
+/// i.e. every frame buffer was recycled and every received frame was
+/// decoded through a native `decode_into` into reusable scratch.
+pub fn hotpath_counters() -> (u64, u64) {
+    (
+        POOL_MISSES.with(|c| c.get()),
+        DECODE_ALLOCS.with(|c| c.get()),
+    )
+}
+
+/// Zero this thread's hot-path counters.
+pub fn reset_hotpath_counters() {
+    POOL_MISSES.with(|c| c.set(0));
+    DECODE_ALLOCS.with(|c| c.set(0));
 }
 
 impl Drop for Frame {
@@ -288,6 +324,33 @@ pub trait EdgeCodec: Send {
     /// Reconstruct the dense `comp(x; ω_ctx)` from a frame, validating
     /// every byte.  Corrupt input returns a typed error, never panics.
     fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError>;
+
+    /// Decode into a caller-provided dense buffer of `ctx.dim`
+    /// elements instead of materializing a fresh `Vec<f32>` — the
+    /// receive hot path decodes every frame into reusable per-edge
+    /// scratch through this.  On success every element of `out` is
+    /// overwritten (coordinates outside the support are zeroed) and the
+    /// result is bit-identical to [`EdgeCodec::decode`] (pinned by the
+    /// codec-matrix test); on error `out` is unspecified.  The default
+    /// routes through `decode`; the shipping codecs override it
+    /// natively, and the `decode-alloc` lint rule bans fresh `Vec`
+    /// construction inside those overrides.
+    fn decode_into(
+        &mut self,
+        frame: &Frame,
+        ctx: &EdgeCtx,
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        let v = self.decode(frame, ctx)?;
+        if v.len() != out.len() {
+            return Err(CodecError::Length {
+                expected: out.len(),
+                got: v.len(),
+            });
+        }
+        out.copy_from_slice(&v);
+        Ok(())
+    }
 
     /// Sparse fast path for codecs whose output is supported on `≪ d`
     /// coordinates: decode a frame to `(sorted idx, vals)` without
@@ -476,6 +539,58 @@ fn decode_explicit(bytes: &[u8], dim: usize) -> Result<Vec<f32>, CodecError> {
     Ok(out)
 }
 
+/// Zero-allocation twin of [`decode_explicit_sparse`]: validate the
+/// explicit `[u32 idx]*m ++ [f32 val]*m` layout and scatter it straight
+/// into `out` (zeroing untouched coordinates).  Same validation order
+/// and errors as the allocating path.
+fn scatter_explicit(
+    bytes: &[u8],
+    dim: usize,
+    out: &mut [f32],
+) -> Result<(), CodecError> {
+    if bytes.len() % 8 != 0 {
+        return Err(CodecError::Ragged {
+            got: bytes.len(),
+            record: 8,
+        });
+    }
+    let m = bytes.len() / 8;
+    if m > dim {
+        return Err(CodecError::Length {
+            expected: 8 * dim,
+            got: bytes.len(),
+        });
+    }
+    out.fill(0.0);
+    let mut prev: i64 = -1;
+    for k in 0..m {
+        let idx = get_u32(bytes, 4 * k);
+        if (idx as usize) >= dim {
+            return Err(CodecError::IndexOutOfRange { idx, dim });
+        }
+        if (idx as i64) <= prev {
+            return Err(CodecError::UnsortedIndex { pos: k });
+        }
+        prev = idx as i64;
+        out[idx as usize] = get_f32(bytes, 4 * (m + k));
+    }
+    Ok(())
+}
+
+/// Caller-contract check shared by the native `decode_into` overrides:
+/// the output scratch must span exactly the edge dimension.
+#[inline]
+fn check_out_dim(out: &[f32], dim: usize) -> Result<(), CodecError> {
+    if out.len() == dim {
+        Ok(())
+    } else {
+        Err(CodecError::Length {
+            expected: dim,
+            got: out.len(),
+        })
+    }
+}
+
 /// Shared encoder for the explicit layout (indices must be sorted).
 fn encode_explicit(x: &[f32], idx: &[u32]) -> Frame {
     let mut buf = pooled_buf(8 * idx.len());
@@ -527,6 +642,7 @@ impl EdgeCodec for IdentityCodec {
     }
 
     fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        note_decode_alloc();
         let b = frame.bytes();
         if b.len() != 4 * ctx.dim {
             return Err(CodecError::Length {
@@ -535,6 +651,26 @@ impl EdgeCodec for IdentityCodec {
             });
         }
         Ok((0..ctx.dim).map(|i| get_f32(b, 4 * i)).collect())
+    }
+
+    fn decode_into(
+        &mut self,
+        frame: &Frame,
+        ctx: &EdgeCtx,
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        check_out_dim(out, ctx.dim)?;
+        let b = frame.bytes();
+        if b.len() != 4 * ctx.dim {
+            return Err(CodecError::Length {
+                expected: 4 * ctx.dim,
+                got: b.len(),
+            });
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = get_f32(b, 4 * i);
+        }
+        Ok(())
     }
 
     fn sparse_support(&self, ctx: &EdgeCtx) -> Option<Vec<u32>> {
@@ -611,6 +747,7 @@ impl EdgeCodec for RandKCodec {
     }
 
     fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        note_decode_alloc();
         let decoded = self.decode_sparse(frame, ctx)?;
         let Some((mask, vals)) = decoded else {
             return Err(CodecError::BadSpec(
@@ -624,6 +761,31 @@ impl EdgeCodec for RandKCodec {
             out[i as usize] = v;
         }
         Ok(out)
+    }
+
+    fn decode_into(
+        &mut self,
+        frame: &Frame,
+        ctx: &EdgeCtx,
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        check_out_dim(out, ctx.dim)?;
+        // The O(k) mask/value pair from `decode_sparse` is inherent to
+        // the shared-seed support validation; only the O(d) dense
+        // materialization is skipped here.
+        let decoded = self.decode_sparse(frame, ctx)?;
+        let Some((mask, vals)) = decoded else {
+            return Err(CodecError::BadSpec(
+                "rand-k sparse decode unavailable".into(),
+            ));
+        };
+        out.fill(0.0);
+        for (&i, &v) in mask.iter().zip(&vals) {
+            // det:allow(index-decode): `decode_sparse` validates every
+            // index against `ctx.dim` before returning the mask.
+            out[i as usize] = v;
+        }
+        Ok(())
     }
 
     fn decode_sparse(
@@ -699,11 +861,18 @@ impl EdgeCodec for TopKCodec {
         debug_assert_eq!(x.len(), ctx.dim);
         let k = self.k_of(x.len());
         let mut order: Vec<u32> = (0..x.len() as u32).collect();
+        // Total order, descending |x| with the index as the explicit
+        // tie-break: `total_cmp` ranks NaN magnitudes above +inf (a
+        // NaN coordinate is always kept — it must reach the receiver,
+        // not be silently dropped by a comparator that calls it Equal
+        // to everything), and equal magnitudes keep the lowest indices.
+        // A partial_cmp-with-Equal-fallback here made the selected set
+        // depend on the selection algorithm's visit order.
         order.select_nth_unstable_by(k - 1, |&a, &b| {
             x[b as usize]
                 .abs()
-                .partial_cmp(&x[a as usize].abs())
-                .unwrap_or(std::cmp::Ordering::Equal)
+                .total_cmp(&x[a as usize].abs())
+                .then(a.cmp(&b))
         });
         let mut idx: Vec<u32> = order[..k].to_vec();
         idx.sort_unstable();
@@ -711,6 +880,7 @@ impl EdgeCodec for TopKCodec {
     }
 
     fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        note_decode_alloc();
         // Top-k frames carry exactly k_of(d) records — pinning the
         // count catches whole-record truncation, which would otherwise
         // stay 8-byte aligned and shift the value block.
@@ -722,6 +892,23 @@ impl EdgeCodec for TopKCodec {
             });
         }
         decode_explicit(frame.bytes(), ctx.dim)
+    }
+
+    fn decode_into(
+        &mut self,
+        frame: &Frame,
+        ctx: &EdgeCtx,
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        check_out_dim(out, ctx.dim)?;
+        let expected = 8 * self.k_of(ctx.dim);
+        if frame.bytes().len() != expected {
+            return Err(CodecError::Length {
+                expected,
+                got: frame.bytes().len(),
+            });
+        }
+        scatter_explicit(frame.bytes(), ctx.dim, out)
     }
 }
 
@@ -868,6 +1055,7 @@ impl EdgeCodec for QsgdCodec {
     }
 
     fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        note_decode_alloc();
         let bits = self.bits as u32;
         let nb = Self::n_buckets(ctx.dim);
         let expected = 4 * nb + (ctx.dim * bits as usize + 7) / 8;
@@ -901,6 +1089,45 @@ impl EdgeCodec for QsgdCodec {
         }
         Ok(out)
     }
+
+    fn decode_into(
+        &mut self,
+        frame: &Frame,
+        ctx: &EdgeCtx,
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        check_out_dim(out, ctx.dim)?;
+        let bits = self.bits as u32;
+        let nb = Self::n_buckets(ctx.dim);
+        let expected = 4 * nb + (ctx.dim * bits as usize + 7) / 8;
+        let b = frame.bytes();
+        if b.len() != expected {
+            return Err(CodecError::Length {
+                expected,
+                got: b.len(),
+            });
+        }
+        // Validate every bucket norm up front, then re-read them from
+        // the frame during the scatter — no norms staging vector.
+        for k in 0..nb {
+            if !get_f32(b, 4 * k).is_finite() {
+                return Err(CodecError::NonFiniteScalar);
+            }
+        }
+        let s = self.levels() as f32;
+        // det:allow(index-decode): the exact-length check above
+        // guarantees `b.len() >= 4 * nb`, so the slice start is valid.
+        let mut r = BitReader::new(&b[4 * nb..]);
+        for (i, o) in out.iter_mut().enumerate() {
+            let code = r.read(bits);
+            let level = code & ((1 << (bits - 1)) - 1);
+            let sign = if code >> (bits - 1) == 1 { -1.0f32 } else { 1.0 };
+            // Same expression tree as `decode`; the norm comes back
+            // bit-identical from the frame bytes.
+            *o = sign * (level as f32 / s) * get_f32(b, 4 * (i / Self::BUCKET));
+        }
+        Ok(())
+    }
 }
 
 /// Sign + norm (signSGD with majority-scale, Bernstein et al. 2018):
@@ -933,6 +1160,7 @@ impl EdgeCodec for SignNormCodec {
     }
 
     fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        note_decode_alloc();
         let expected = 4 + (ctx.dim + 7) / 8;
         let b = frame.bytes();
         if b.len() != expected {
@@ -952,6 +1180,34 @@ impl EdgeCodec for SignNormCodec {
             .map(|_| if r.read(1) == 1 { -scale } else { scale })
             .collect())
     }
+
+    fn decode_into(
+        &mut self,
+        frame: &Frame,
+        ctx: &EdgeCtx,
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        check_out_dim(out, ctx.dim)?;
+        let expected = 4 + (ctx.dim + 7) / 8;
+        let b = frame.bytes();
+        if b.len() != expected {
+            return Err(CodecError::Length {
+                expected,
+                got: b.len(),
+            });
+        }
+        let scale = get_f32(b, 0);
+        if !scale.is_finite() {
+            return Err(CodecError::NonFiniteScalar);
+        }
+        // det:allow(index-decode): the exact-length check above
+        // guarantees `b.len() >= 4`, so the slice start is valid.
+        let mut r = BitReader::new(&b[4..]);
+        for o in out.iter_mut() {
+            *o = if r.read(1) == 1 { -scale } else { scale };
+        }
+        Ok(())
+    }
 }
 
 /// Error-feedback combinator (EF-SGD / LEAD lineage): keeps the
@@ -963,6 +1219,10 @@ pub struct ErrorFeedback {
     inner: Box<dyn EdgeCodec>,
     residual: Vec<f32>,
     carry: Vec<f32>,
+    /// Scratch for the self-decode inside `encode` — the receiver-side
+    /// estimate, reconstructed via `decode_into` so a steady-state
+    /// encode never allocates.
+    est: Vec<f32>,
 }
 
 impl ErrorFeedback {
@@ -971,6 +1231,7 @@ impl ErrorFeedback {
             inner,
             residual: Vec::new(),
             carry: Vec::new(),
+            est: Vec::new(),
         }
     }
 
@@ -997,11 +1258,13 @@ impl EdgeCodec for ErrorFeedback {
         self.carry
             .extend(x.iter().zip(&self.residual).map(|(&a, &b)| a + b));
         let frame = self.inner.encode(&self.carry, ctx);
-        // What the receiver will reconstruct — decode our own frame.
-        match self.inner.decode(&frame, ctx) {
-            Ok(est) => {
+        // What the receiver will reconstruct — decode our own frame
+        // into the retained scratch (allocation-free at steady state).
+        self.est.resize(self.carry.len(), 0.0);
+        match self.inner.decode_into(&frame, ctx, &mut self.est) {
+            Ok(()) => {
                 for ((r, &v), &e) in
-                    self.residual.iter_mut().zip(&self.carry).zip(&est)
+                    self.residual.iter_mut().zip(&self.carry).zip(&self.est)
                 {
                     *r = v - e;
                 }
@@ -1013,6 +1276,15 @@ impl EdgeCodec for ErrorFeedback {
 
     fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
         self.inner.decode(frame, ctx)
+    }
+
+    fn decode_into(
+        &mut self,
+        frame: &Frame,
+        ctx: &EdgeCtx,
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        self.inner.decode_into(frame, ctx, out)
     }
 
     fn bind_layout(&mut self, matrices: &[(usize, usize, usize)],
@@ -1485,6 +1757,144 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn decode_into_matches_decode_for_every_spec() {
+        // The zero-allocation receive path must be bit-identical to the
+        // allocating one, for every codec in the CLI ladder, across
+        // rounds (ω varies with the round) — including when the scratch
+        // buffer arrives dirty from a previous message.
+        let d = 777;
+        for spec in all_specs() {
+            let mut enc = spec.build();
+            let mut dec_a = spec.build();
+            let mut dec_b = spec.build();
+            let mut out = vec![f32::NAN; d]; // dirty scratch
+            for round in 0..5 {
+                let x = randn(d, 50 + round as u64);
+                let c = ctx(d, round);
+                let f = enc.encode(&x, &c);
+                let y = dec_a.decode(&f, &c).unwrap();
+                dec_b.decode_into(&f, &c, &mut out).unwrap();
+                for i in 0..d {
+                    assert_eq!(
+                        y[i].to_bits(),
+                        out[i].to_bits(),
+                        "{}: round {round} coord {i}",
+                        spec.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_into_rejects_wrong_scratch_length() {
+        let d = 64;
+        let x = randn(d, 33);
+        let c = ctx(d, 0);
+        for spec in all_specs() {
+            let mut codec = spec.build();
+            let f = codec.encode(&x, &c);
+            let mut short = vec![0.0f32; d - 1];
+            assert!(
+                matches!(
+                    codec.decode_into(&f, &c, &mut short),
+                    Err(CodecError::Length { .. })
+                ),
+                "{}: undersized scratch not rejected",
+                spec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn ef_residual_state_matches_decode_oracle_after_rounds() {
+        // EF's encode self-decodes through `decode_into`; replay the
+        // same math through the plain allocating `decode` and pin the
+        // residual trajectory bit-for-bit after N rounds.
+        let d = 512;
+        let mut ef = ErrorFeedback::new(Box::new(TopKCodec { k_frac: 0.1 }));
+        let mut oracle = TopKCodec { k_frac: 0.1 };
+        let mut residual = vec![0.0f32; d];
+        for round in 0..8 {
+            let x = randn(d, 70 + round as u64);
+            let c = ctx(d, round);
+            let f = ef.encode(&x, &c);
+            let carry: Vec<f32> =
+                x.iter().zip(&residual).map(|(&a, &b)| a + b).collect();
+            let f2 = oracle.encode(&carry, &c);
+            assert_eq!(f.bytes(), f2.bytes(), "round {round}: frame drift");
+            let est = oracle.decode(&f2, &c).unwrap();
+            for ((rv, &cv), &ev) in
+                residual.iter_mut().zip(&carry).zip(&est)
+            {
+                *rv = cv - ev;
+            }
+            for (i, (a, b)) in ef.residual().iter().zip(&residual).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "round {round} coord {i}: residual drift"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topk_total_order_pins_nan_and_ties() {
+        // NaN magnitudes rank above everything (always kept), and equal
+        // magnitudes tie-break toward the lowest index — the selected
+        // support must not depend on select_nth's visit order.
+        let d = 8;
+        let x = [1.0f32, -1.0, f32::NAN, 0.5, 1.0, 0.0, -0.5, 0.25];
+        let mut tk = TopKCodec { k_frac: 0.375 }; // k = 3 of 8
+        let f = tk.encode(&x, &ctx(d, 0));
+        assert_eq!(f.wire_bytes(), 8 * 3);
+        // NaN at idx 2 is kept; the |1.0| tie {0, 1, 4} resolves to the
+        // two lowest indices 0 and 1.  Sorted support: [0, 1, 2].
+        let idx: Vec<u32> =
+            (0..3).map(|k| get_u32(f.bytes(), 4 * k)).collect();
+        assert_eq!(idx, vec![0, 1, 2]);
+        let vals: Vec<f32> =
+            (0..3).map(|k| get_f32(f.bytes(), 4 * (3 + k))).collect();
+        assert_eq!(vals[0].to_bits(), 1.0f32.to_bits());
+        assert_eq!(vals[1].to_bits(), (-1.0f32).to_bits());
+        assert!(vals[2].is_nan());
+
+        // All-equal magnitudes: the support is exactly the first k
+        // indices, whatever the signs.
+        let y = [2.0f32, -2.0, 2.0, -2.0, 2.0, -2.0];
+        let mut tk = TopKCodec { k_frac: 0.5 }; // k = 3 of 6
+        let f = tk.encode(&y, &ctx(6, 0));
+        let idx: Vec<u32> =
+            (0..3).map(|k| get_u32(f.bytes(), 4 * k)).collect();
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn hotpath_counters_track_pool_misses_and_decode_allocs() {
+        FRAME_POOL.with(|p| p.borrow_mut().clear());
+        reset_hotpath_counters();
+        let d = 64;
+        let e = ctx(d, 0);
+        let mut c = IdentityCodec;
+        let x = randn(d, 21);
+        let f = c.encode(&x, &e); // empty pool: one miss
+        assert_eq!(hotpath_counters(), (1, 0));
+        let mut out = vec![0.0f32; d];
+        c.decode_into(&f, &e, &mut out).unwrap(); // native: no alloc
+        assert_eq!(hotpath_counters(), (1, 0));
+        let _ = c.decode(&f, &e).unwrap(); // dense path: counted
+        assert_eq!(hotpath_counters(), (1, 1));
+        drop(f);
+        let f2 = c.encode(&x, &e); // recycled buffer: no new miss
+        assert_eq!(hotpath_counters().0, 1);
+        drop(f2);
+        FRAME_POOL.with(|p| p.borrow_mut().clear());
+        reset_hotpath_counters();
     }
 
     #[test]

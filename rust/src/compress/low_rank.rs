@@ -16,7 +16,9 @@
 //! PowerGossip compressor through the Eq. (11) dual rule.  The
 //! interactive two-node choreography lives in `algorithms::powergossip`.
 
-use crate::compress::codec::{pooled_buf, CodecError, EdgeCodec, EdgeCtx, Frame};
+use crate::compress::codec::{
+    note_decode_alloc, pooled_buf, CodecError, EdgeCodec, EdgeCtx, Frame,
+};
 use crate::util::rng::{streams, Pcg};
 
 /// `p = M q` for a row-major `rows x cols` matrix stored in a flat
@@ -266,6 +268,9 @@ pub struct LowRankCodec {
     /// encode's ctx.
     states: Vec<Vec<LowRankEdgeState>>,
     scratch: Vec<f32>,
+    /// Factor staging for the allocation-free `decode_into` path.
+    scratch_p: Vec<f32>,
+    scratch_q: Vec<f32>,
 }
 
 impl LowRankCodec {
@@ -278,6 +283,8 @@ impl LowRankCodec {
             dim: None,
             states: Vec::new(),
             scratch: Vec::new(),
+            scratch_p: Vec::new(),
+            scratch_q: Vec::new(),
         }
     }
 
@@ -444,6 +451,7 @@ impl EdgeCodec for LowRankCodec {
     }
 
     fn decode(&mut self, frame: &Frame, ctx: &EdgeCtx) -> Result<Vec<f32>, CodecError> {
+        note_decode_alloc();
         self.ensure_views(ctx.dim)?;
         let expected = self.frame_bytes();
         let b = frame.bytes();
@@ -484,6 +492,72 @@ impl EdgeCodec for LowRankCodec {
             cur += len;
         }
         Ok(out)
+    }
+
+    fn decode_into(
+        &mut self,
+        frame: &Frame,
+        ctx: &EdgeCtx,
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        if out.len() != ctx.dim {
+            return Err(CodecError::Length {
+                expected: ctx.dim,
+                got: out.len(),
+            });
+        }
+        self.ensure_views(ctx.dim)?;
+        let expected = self.frame_bytes();
+        let b = frame.bytes();
+        if b.len() != expected {
+            return Err(CodecError::Length {
+                expected,
+                got: b.len(),
+            });
+        }
+        let f32_at = |k: usize| {
+            let o = 4 * k;
+            // det:allow(index-decode): the exact-length check above pins
+            // `b.len()` to `frame_bytes()`, and the view cursor walks at
+            // most that many f32 slots.
+            f32::from_le_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]])
+        };
+        out.fill(0.0);
+        let mut cur = 0usize; // f32 cursor
+        let rank = self.rank;
+        for &(off, rows, cols, len) in &self.views {
+            // The factor staging and the rank-1 accumulator live in
+            // retained scratch so a steady-state decode never touches
+            // the allocator; the `rank1_axpy` call is the same call the
+            // allocating path makes, so reconstruction stays bit-exact.
+            self.scratch.clear();
+            self.scratch.resize(rows * cols, 0.0);
+            for _ in 0..rank {
+                self.scratch_p.clear();
+                for i in 0..rows {
+                    self.scratch_p.push(f32_at(cur + i));
+                }
+                cur += rows;
+                self.scratch_q.clear();
+                for i in 0..cols {
+                    self.scratch_q.push(f32_at(cur + i));
+                }
+                cur += cols;
+                rank1_axpy(&mut self.scratch, rows, cols, 1.0, &self.scratch_p, &self.scratch_q);
+            }
+            // det:allow(index-decode): views are built by `ensure_views`
+            // to tile exactly `ctx.dim`, which is also `out.len()`.
+            out[off..off + len].copy_from_slice(&self.scratch[..len]);
+        }
+        for &(off, len) in &self.vec_views {
+            for i in 0..len {
+                // det:allow(index-decode): same tiling invariant as the
+                // matrix views above.
+                out[off + i] = f32_at(cur + i);
+            }
+            cur += len;
+        }
+        Ok(())
     }
 }
 

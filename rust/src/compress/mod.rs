@@ -30,8 +30,8 @@ pub mod coo;
 pub mod low_rank;
 
 pub use codec::{
-    measure_codec_contraction, CodecError, CodecSpec, EdgeCodec, EdgeCtx,
-    Frame, WireMode,
+    hotpath_counters, measure_codec_contraction, reset_hotpath_counters,
+    CodecError, CodecSpec, EdgeCodec, EdgeCtx, Frame, WireMode,
 };
 pub use coo::CooVec;
 pub use low_rank::{power_iteration_step, LowRankCodec, LowRankEdgeState};

@@ -39,6 +39,10 @@ pub enum Topology {
     MultiplexRing,
     FullyConnected,
     Star,
+    /// `rows × cols` wrap-around grid (`torus:RxC` on the CLI), node
+    /// id `r * cols + c` — row-major, so contiguous block partitions
+    /// keep each block's internal edges dominant.
+    Torus { rows: u32, cols: u32 },
     /// Connected Erdős–Rényi random graph: G(n, p) resampled until
     /// connected ([`Graph::random_connected`]), `p` given in percent.
     Random { extra_p_percent: u8, seed: u64 },
@@ -52,12 +56,24 @@ impl Topology {
             Topology::MultiplexRing => "multiplex-ring",
             Topology::FullyConnected => "fully-connected",
             Topology::Star => "star",
+            Topology::Torus { .. } => "torus",
             Topology::Random { .. } => "random",
         }
     }
 
-    /// Parse from CLI names.
+    /// Parse from CLI names.  `torus:RxC` carries its shape inline
+    /// (e.g. `torus:16x32` — a 512-node torus); both sides must be at
+    /// least 2 so every node has degree 4.
     pub fn from_name(name: &str) -> Option<Topology> {
+        if let Some(shape) = name.strip_prefix("torus:") {
+            let (r, c) = shape.split_once('x')?;
+            let rows: u32 = r.parse().ok()?;
+            let cols: u32 = c.parse().ok()?;
+            if rows < 2 || cols < 2 {
+                return None;
+            }
+            return Some(Topology::Torus { rows, cols });
+        }
         match name {
             "chain" => Some(Topology::Chain),
             "ring" => Some(Topology::Ring),
@@ -584,6 +600,17 @@ impl Graph {
             Topology::MultiplexRing => Graph::multiplex_ring(n),
             Topology::FullyConnected => Graph::complete(n),
             Topology::Star => Graph::star(n),
+            Topology::Torus { rows, cols } => {
+                let (r, c) = (rows as usize, cols as usize);
+                assert_eq!(
+                    n,
+                    r * c,
+                    "torus:{rows}x{cols} is a {}-node topology, but the \
+                     run asked for {n} nodes",
+                    r * c
+                );
+                Graph::torus(r, c)
+            }
             // Experiment drivers need a connected G (Assumption 4):
             // the topology enum always takes the connected sampler.
             Topology::Random {
@@ -619,6 +646,30 @@ impl Graph {
             .into_iter()
             .map(|(a, b)| (a.min(b), a.max(b)))
             .collect();
+        canon.sort_unstable();
+        canon.dedup();
+        Graph::from_edges(n, &canon)
+    }
+
+    /// `rows × cols` wrap-around grid: node `(r, c)` has id
+    /// `r * cols + c` and links to its four grid neighbors modulo the
+    /// wrap.  With a side of exactly 2 the wrap edge coincides with the
+    /// adjacent edge, so those pairs dedup to a single canonical edge
+    /// (degree 3 on that axis instead of 4) — same convention as
+    /// [`Graph::multiplex_ring`]'s chord dedup.
+    pub fn torus(rows: usize, cols: usize) -> Graph {
+        assert!(rows >= 2 && cols >= 2, "torus needs both sides >= 2");
+        let n = rows * cols;
+        let id = |r: usize, c: usize| r * cols + c;
+        let mut canon: Vec<(usize, usize)> = Vec::with_capacity(2 * n);
+        for r in 0..rows {
+            for c in 0..cols {
+                let a = id(r, c);
+                for b in [id(r, (c + 1) % cols), id((r + 1) % rows, c)] {
+                    canon.push((a.min(b), a.max(b)));
+                }
+            }
+        }
         canon.sort_unstable();
         canon.dedup();
         Graph::from_edges(n, &canon)
@@ -899,6 +950,43 @@ mod tests {
         let full = Graph::complete(8);
         assert_eq!(full.edges().len(), 28);
         assert_eq!(full.min_degree(), Some(7));
+    }
+
+    #[test]
+    fn torus_structure_and_grammar() {
+        // 4x8: every node degree 4, 2n edges, connected.
+        let g = Graph::torus(4, 8);
+        assert_eq!(g.n(), 32);
+        assert_eq!(g.edges().len(), 64);
+        assert_eq!(g.min_degree(), Some(4));
+        assert_eq!(g.max_degree(), Some(4));
+        assert!(g.is_connected());
+        // Node (1, 3) = 11 touches (1,2)=10, (1,4)=12, (0,3)=3, (2,3)=19.
+        assert_eq!(g.neighbors(11), &[3, 10, 12, 19]);
+        // A side of 2 collapses its wrap edge onto the adjacent edge:
+        // 2x3 has 3 vertical edges (deduped) + 6 horizontal = 9.
+        let thin = Graph::torus(2, 3);
+        assert_eq!(thin.edges().len(), 9);
+        assert!(thin.is_connected());
+        // CLI grammar.
+        assert_eq!(
+            Topology::from_name("torus:4x8"),
+            Some(Topology::Torus { rows: 4, cols: 8 })
+        );
+        let t = Topology::from_name("torus:4x8").unwrap();
+        assert_eq!(t.name(), "torus");
+        let built = Graph::build(t, 32);
+        assert_eq!(built.edges(), g.edges());
+        for bad in ["torus:", "torus:4", "torus:4x", "torus:1x8",
+                    "torus:4x1", "torus:ax8"] {
+            assert_eq!(Topology::from_name(bad), None, "`{bad}` must fail");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "torus:4x8")]
+    fn torus_node_count_mismatch_panics() {
+        let _ = Graph::build(Topology::Torus { rows: 4, cols: 8 }, 31);
     }
 
     #[test]

@@ -290,12 +290,38 @@
 //! The virtual-time engine is built to run **million-node** topologies
 //! in one process (`cargo bench --bench sim_scale` walks the 64 → 512 →
 //! 8k → 100k → 1M rung ladder; `BENCH_sim_scale.json` is the checked-in
-//! trajectory).  Three layers make that work:
+//! trajectory).  Five layers make that work:
 //!
 //! * **Pooled frames** — codec encoders draw their output buffers from
 //!   a thread-local free list and [`compress::codec::Frame`] returns
 //!   its bytes on drop, so the steady-state event loop allocates
 //!   nothing per message.
+//! * **Zero-allocation receive** —
+//!   [`compress::EdgeCodec::decode_into`] decodes a frame into
+//!   caller-owned scratch instead of returning a fresh `Vec`.  The
+//!   contract: on success `out` is **fully overwritten** (coordinates a
+//!   sparse frame omits are written as zero, never left stale),
+//!   bit-identical to what `decode` would have returned; on error the
+//!   scratch contents are unspecified.  Every `NodeStateMachine` and
+//!   the net runtime hold per-edge scratch across rounds, so a
+//!   steady-state round performs zero pool misses and zero allocating
+//!   decodes — pinned by thread-local counters
+//!   ([`compress::hotpath_counters`]) in the `sim` suite, and guarded
+//!   at the source level by the `decode-alloc` lint rule (no `Vec`
+//!   construction inside a `decode_into` of the wire files).
+//! * **SoA parameter arena** — [`model::Arena`] packs every node's
+//!   flat parameter vector (and C-ECL's per-edge duals) into one
+//!   contiguous fixed-stride slab instead of per-node `Vec<f32>`s:
+//!   row *i* is the partition-local node (or edge-slot) index, rows
+//!   are reached via `row`/`row_mut`/`iter_rows`, and
+//!   `from_vecs`/`into_vecs` round-trip the legacy layout bit-exactly.
+//!   One allocation per partition, cache-linear row walks, and the
+//!   fused round kernels in [`linalg`] (`fused_prox_step_f32`,
+//!   `dual_mix_f32`, `consensus_mix_f32`, …) stream over those rows
+//!   4-way unrolled while preserving the scalar per-element expression
+//!   tree — each kernel is pinned bit-identical to its `_reference`
+//!   twin, so the arena + fused path replays the exact pre-refactor
+//!   trajectories.
 //! * **Calendar queue** — the event queue ([`sim`]'s internal
 //!   `CalendarQueue`) is a bucket wheel keyed by virtual nanoseconds
 //!   with a sorted overflow heap, O(1) amortized push/pop at any queue
@@ -335,6 +361,7 @@
 //! | same modules | `HashMap`, `HashSet` | iteration order depends on the host hash seed — `BTreeMap`/`BTreeSet`/`Vec` only |
 //! | same modules | `thread_rng`, `OsRng` | all randomness derives from the seeded counter-mode [`util::rng::Pcg`] |
 //! | decode/parse fns of `compress/codec.rs`, `compress/coo.rs`, `compress/low_rank.rs`, `net/wire.rs` | `.unwrap()`, `.expect(...)`, panic-family macros, direct indexing | peer bytes are untrusted; corrupt frames must surface typed `CodecError` / `CommError`, never a panic |
+//! | `decode_into` fns of the same wire files | `Vec::new`, `Vec::with_capacity`, `vec![...]`, `.to_vec()`, `.collect()` | the zero-allocation receive contract: scratch is reused across rounds, never rebuilt per message |
 //!
 //! `Instant` stays legal in [`net`], [`coordinator`], and
 //! `util::bench` — the engines that *measure* wall-clock rather than

@@ -5,6 +5,19 @@
 //! Deliberately small and dependency-free: row-major [`Mat`], Cholesky
 //! factorization/solve, power iteration for extreme eigenvalues of
 //! symmetric PSD matrices.
+//!
+//! ## Fused f32 round kernels
+//!
+//! The second half of the module is the f32 hot-path substrate shared
+//! by the per-round update rules: the Eq. (6) prox step
+//! ([`fused_prox_step_f32`]), weighted accumulation
+//! ([`axpy_f32`] / [`scaled_copy_f32`] / [`consensus_mix_f32`]), and
+//! the C-ECL dual mixes ([`dual_mix_f32`] / [`dual_diff_mix_f32`]).
+//! Every kernel is 4-way unrolled across *independent* elements and
+//! ships a `_reference` twin (the plain loop); because the unrolled
+//! body applies the identical per-element f32 expression tree, the two
+//! halves are pinned **bit-identical** by the test suite — same
+//! contract as the `matvec` halves in `compress::low_rank`.
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -287,6 +300,249 @@ pub fn min_eig_sym(a: &Mat, iters: usize, rng: &mut crate::util::rng::Pcg) -> f6
     (sigma - mu_shifted).max(0.0)
 }
 
+// --------------------------------------------------------------------------
+// Fused f32 round kernels.
+//
+// These are the inner loops of the per-round update rules: the Eq. (6)
+// prox step (softmax local model), Metropolis-Hastings folds (D-PSGD /
+// CHOCO), weighted consensus differences (CHOCO / LEAD), and the
+// C-ECL dual mixes (Eq. (11)).  Each `*_f32` kernel is 4-way unrolled
+// across independent elements; its `_reference` twin is the plain
+// loop.  Unrolling never reassociates: every element goes through the
+// same f32 expression tree in both halves, so results are pinned
+// bit-identical (see `fused_kernels_bit_identical` below), which keeps
+// the sim replay/parallel bit-identity suites valid through the fused
+// paths.
+// --------------------------------------------------------------------------
+
+/// Eq. (6) fused prox step: `w[i] = (w[i] - eta*g[i] + eta*z[i]) / denom`.
+pub fn fused_prox_step_f32(w: &mut [f32], g: &[f32], z: &[f32], eta: f32, denom: f32) {
+    assert_eq!(w.len(), g.len());
+    assert_eq!(w.len(), z.len());
+    let n = w.len() / 4 * 4;
+    let (wh, wt) = w.split_at_mut(n);
+    let (gh, gt) = g.split_at(n);
+    let (zh, zt) = z.split_at(n);
+    for ((wc, gc), zc) in wh
+        .chunks_exact_mut(4)
+        .zip(gh.chunks_exact(4))
+        .zip(zh.chunks_exact(4))
+    {
+        wc[0] = (wc[0] - eta * gc[0] + eta * zc[0]) / denom;
+        wc[1] = (wc[1] - eta * gc[1] + eta * zc[1]) / denom;
+        wc[2] = (wc[2] - eta * gc[2] + eta * zc[2]) / denom;
+        wc[3] = (wc[3] - eta * gc[3] + eta * zc[3]) / denom;
+    }
+    for ((wv, &gv), &zv) in wt.iter_mut().zip(gt).zip(zt) {
+        *wv = (*wv - eta * gv + eta * zv) / denom;
+    }
+}
+
+/// Plain-loop twin of [`fused_prox_step_f32`]; bit-identical.
+pub fn fused_prox_step_f32_reference(
+    w: &mut [f32],
+    g: &[f32],
+    z: &[f32],
+    eta: f32,
+    denom: f32,
+) {
+    assert_eq!(w.len(), g.len());
+    assert_eq!(w.len(), z.len());
+    for ((wv, &gv), &zv) in w.iter_mut().zip(g).zip(z) {
+        *wv = (*wv - eta * gv + eta * zv) / denom;
+    }
+}
+
+/// `y[i] += alpha * x[i]` — the MH-fold accumulate.
+pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    let n = y.len() / 4 * 4;
+    let (yh, yt) = y.split_at_mut(n);
+    let (xh, xt) = x.split_at(n);
+    for (yc, xc) in yh.chunks_exact_mut(4).zip(xh.chunks_exact(4)) {
+        yc[0] += alpha * xc[0];
+        yc[1] += alpha * xc[1];
+        yc[2] += alpha * xc[2];
+        yc[3] += alpha * xc[3];
+    }
+    for (yv, &xv) in yt.iter_mut().zip(xt) {
+        *yv += alpha * xv;
+    }
+}
+
+/// Plain-loop twin of [`axpy_f32`]; bit-identical.
+pub fn axpy_f32_reference(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// `out[i] = alpha * x[i]` — the self-weight term that seeds a fold.
+pub fn scaled_copy_f32(alpha: f32, x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    let n = out.len() / 4 * 4;
+    let (oh, ot) = out.split_at_mut(n);
+    let (xh, xt) = x.split_at(n);
+    for (oc, xc) in oh.chunks_exact_mut(4).zip(xh.chunks_exact(4)) {
+        oc[0] = alpha * xc[0];
+        oc[1] = alpha * xc[1];
+        oc[2] = alpha * xc[2];
+        oc[3] = alpha * xc[3];
+    }
+    for (ov, &xv) in ot.iter_mut().zip(xt) {
+        *ov = alpha * xv;
+    }
+}
+
+/// Plain-loop twin of [`scaled_copy_f32`]; bit-identical.
+pub fn scaled_copy_f32_reference(alpha: f32, x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    for (ov, &xv) in out.iter_mut().zip(x) {
+        *ov = alpha * xv;
+    }
+}
+
+/// `acc[i] += wij * (plus[i] - minus[i])` — weighted consensus
+/// difference (CHOCO replica gap, LEAD dual drive).
+pub fn consensus_mix_f32(acc: &mut [f32], plus: &[f32], minus: &[f32], wij: f32) {
+    assert_eq!(acc.len(), plus.len());
+    assert_eq!(acc.len(), minus.len());
+    let n = acc.len() / 4 * 4;
+    let (ah, at) = acc.split_at_mut(n);
+    let (ph, pt) = plus.split_at(n);
+    let (mh, mt) = minus.split_at(n);
+    for ((ac, pc), mc) in ah
+        .chunks_exact_mut(4)
+        .zip(ph.chunks_exact(4))
+        .zip(mh.chunks_exact(4))
+    {
+        ac[0] += wij * (pc[0] - mc[0]);
+        ac[1] += wij * (pc[1] - mc[1]);
+        ac[2] += wij * (pc[2] - mc[2]);
+        ac[3] += wij * (pc[3] - mc[3]);
+    }
+    for ((av, &pv), &mv) in at.iter_mut().zip(pt).zip(mt) {
+        *av += wij * (pv - mv);
+    }
+}
+
+/// Plain-loop twin of [`consensus_mix_f32`]; bit-identical.
+pub fn consensus_mix_f32_reference(
+    acc: &mut [f32],
+    plus: &[f32],
+    minus: &[f32],
+    wij: f32,
+) {
+    assert_eq!(acc.len(), plus.len());
+    assert_eq!(acc.len(), minus.len());
+    for ((av, &pv), &mv) in acc.iter_mut().zip(plus).zip(minus) {
+        *av += wij * (pv - mv);
+    }
+}
+
+/// C-ECL Eq. (11) convex dual mix with incremental z-sum:
+/// `z' = (1-theta)*z + theta*y; acc += a*(z' - z)`.
+pub fn dual_mix_f32(z: &mut [f32], acc: &mut [f32], y: &[f32], theta: f32, a: f32) {
+    assert_eq!(z.len(), acc.len());
+    assert_eq!(z.len(), y.len());
+    let n = z.len() / 4 * 4;
+    let (zh, zt) = z.split_at_mut(n);
+    let (ah, at) = acc.split_at_mut(n);
+    let (yh, yt) = y.split_at(n);
+    for ((zc, ac), yc) in zh
+        .chunks_exact_mut(4)
+        .zip(ah.chunks_exact_mut(4))
+        .zip(yh.chunks_exact(4))
+    {
+        let o0 = zc[0];
+        zc[0] = (1.0 - theta) * o0 + theta * yc[0];
+        ac[0] += a * (zc[0] - o0);
+        let o1 = zc[1];
+        zc[1] = (1.0 - theta) * o1 + theta * yc[1];
+        ac[1] += a * (zc[1] - o1);
+        let o2 = zc[2];
+        zc[2] = (1.0 - theta) * o2 + theta * yc[2];
+        ac[2] += a * (zc[2] - o2);
+        let o3 = zc[3];
+        zc[3] = (1.0 - theta) * o3 + theta * yc[3];
+        ac[3] += a * (zc[3] - o3);
+    }
+    for ((zv, av), &yv) in zt.iter_mut().zip(at.iter_mut()).zip(yt) {
+        let old = *zv;
+        *zv = (1.0 - theta) * old + theta * yv;
+        *av += a * (*zv - old);
+    }
+}
+
+/// Plain-loop twin of [`dual_mix_f32`]; bit-identical.
+pub fn dual_mix_f32_reference(
+    z: &mut [f32],
+    acc: &mut [f32],
+    y: &[f32],
+    theta: f32,
+    a: f32,
+) {
+    assert_eq!(z.len(), acc.len());
+    assert_eq!(z.len(), y.len());
+    for ((zv, av), &yv) in z.iter_mut().zip(acc.iter_mut()).zip(y) {
+        let old = *zv;
+        *zv = (1.0 - theta) * old + theta * yv;
+        *av += a * (*zv - old);
+    }
+}
+
+/// C-ECL delta-form dual mix (full-support diff path):
+/// `delta = theta*(y - z); z += delta; acc += a*delta`.
+pub fn dual_diff_mix_f32(z: &mut [f32], acc: &mut [f32], y: &[f32], theta: f32, a: f32) {
+    assert_eq!(z.len(), acc.len());
+    assert_eq!(z.len(), y.len());
+    let n = z.len() / 4 * 4;
+    let (zh, zt) = z.split_at_mut(n);
+    let (ah, at) = acc.split_at_mut(n);
+    let (yh, yt) = y.split_at(n);
+    for ((zc, ac), yc) in zh
+        .chunks_exact_mut(4)
+        .zip(ah.chunks_exact_mut(4))
+        .zip(yh.chunks_exact(4))
+    {
+        let d0 = theta * (yc[0] - zc[0]);
+        zc[0] += d0;
+        ac[0] += a * d0;
+        let d1 = theta * (yc[1] - zc[1]);
+        zc[1] += d1;
+        ac[1] += a * d1;
+        let d2 = theta * (yc[2] - zc[2]);
+        zc[2] += d2;
+        ac[2] += a * d2;
+        let d3 = theta * (yc[3] - zc[3]);
+        zc[3] += d3;
+        ac[3] += a * d3;
+    }
+    for ((zv, av), &yv) in zt.iter_mut().zip(at.iter_mut()).zip(yt) {
+        let delta = theta * (yv - *zv);
+        *zv += delta;
+        *av += a * delta;
+    }
+}
+
+/// Plain-loop twin of [`dual_diff_mix_f32`]; bit-identical.
+pub fn dual_diff_mix_f32_reference(
+    z: &mut [f32],
+    acc: &mut [f32],
+    y: &[f32],
+    theta: f32,
+    a: f32,
+) {
+    assert_eq!(z.len(), acc.len());
+    assert_eq!(z.len(), y.len());
+    for ((zv, av), &yv) in z.iter_mut().zip(acc.iter_mut()).zip(y) {
+        let delta = theta * (yv - *zv);
+        *zv += delta;
+        *av += a * delta;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -382,5 +638,80 @@ mod tests {
         scale(0.5, &mut z);
         assert_eq!(z, vec![1.0, 2.0]);
         assert_eq!(sub(&[3.0, 2.0], &[1.0, 1.0]), vec![2.0, 1.0]);
+    }
+
+    fn randn_f32(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn fused_kernels_bit_identical() {
+        // Lengths straddling the unroll width, including remainders.
+        for &n in &[0usize, 1, 3, 4, 5, 8, 17, 130] {
+            let x = randn_f32(n, 10 + n as u64);
+            let y0 = randn_f32(n, 20 + n as u64);
+            let z0 = randn_f32(n, 30 + n as u64);
+
+            let (mut a, mut b) = (y0.clone(), y0.clone());
+            fused_prox_step_f32(&mut a, &x, &z0, 0.3, 1.7);
+            fused_prox_step_f32_reference(&mut b, &x, &z0, 0.3, 1.7);
+            assert_bits_eq(&a, &b, "prox");
+
+            let (mut a, mut b) = (y0.clone(), y0.clone());
+            axpy_f32(0.37, &x, &mut a);
+            axpy_f32_reference(0.37, &x, &mut b);
+            assert_bits_eq(&a, &b, "axpy");
+
+            let (mut a, mut b) = (vec![0.0f32; n], vec![0.0f32; n]);
+            scaled_copy_f32(-1.25, &x, &mut a);
+            scaled_copy_f32_reference(-1.25, &x, &mut b);
+            assert_bits_eq(&a, &b, "scaled_copy");
+
+            let (mut a, mut b) = (y0.clone(), y0.clone());
+            consensus_mix_f32(&mut a, &x, &z0, 0.41);
+            consensus_mix_f32_reference(&mut b, &x, &z0, 0.41);
+            assert_bits_eq(&a, &b, "consensus_mix");
+
+            let (mut za, mut zb) = (z0.clone(), z0.clone());
+            let (mut aa, mut ab) = (y0.clone(), y0.clone());
+            dual_mix_f32(&mut za, &mut aa, &x, 0.4, 0.9);
+            dual_mix_f32_reference(&mut zb, &mut ab, &x, 0.4, 0.9);
+            assert_bits_eq(&za, &zb, "dual_mix z");
+            assert_bits_eq(&aa, &ab, "dual_mix acc");
+
+            let (mut za, mut zb) = (z0.clone(), z0.clone());
+            let (mut aa, mut ab) = (y0.clone(), y0.clone());
+            dual_diff_mix_f32(&mut za, &mut aa, &x, 0.4, 0.9);
+            dual_diff_mix_f32_reference(&mut zb, &mut ab, &x, 0.4, 0.9);
+            assert_bits_eq(&za, &zb, "dual_diff_mix z");
+            assert_bits_eq(&aa, &ab, "dual_diff_mix acc");
+        }
+    }
+
+    #[test]
+    fn fused_kernels_known_values() {
+        // axpy: y += 2x.
+        let mut y = vec![1.0f32, 1.0, 1.0, 1.0, 1.0];
+        axpy_f32(2.0, &[1.0, 2.0, 3.0, 4.0, 5.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0, 9.0, 11.0]);
+        // prox with eta=0 divides by denom only.
+        let mut w = vec![2.0f32, 4.0, 6.0, 8.0, 10.0];
+        let zeros = vec![0.0f32; 5];
+        fused_prox_step_f32(&mut w, &zeros, &zeros, 0.0, 2.0);
+        assert_eq!(w, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        // dual mix with theta=1 replaces z by y and accumulates the jump.
+        let mut z = vec![1.0f32, 1.0, 1.0, 1.0, 1.0];
+        let mut acc = vec![0.0f32; 5];
+        dual_mix_f32(&mut z, &mut acc, &[3.0, 3.0, 3.0, 3.0, 3.0], 1.0, 0.5);
+        assert_eq!(z, vec![3.0; 5]);
+        assert_eq!(acc, vec![1.0; 5]);
     }
 }

@@ -652,5 +652,8 @@ common options:
   --train-per-node N        --test-size N     --eta F
   --local-steps K           --eval-every N    --seed N
   --dual-path native|pjrt   --verbose         --rounds sync|async:S
-  --partition homo|hetero   --topology chain|ring|multiplex-ring|fully-connected
+  --partition homo|hetero   --topology chain|ring|multiplex-ring
+                            |fully-connected|star|torus:RxC
+                            (torus:RxC is an R x C wrap-around grid and
+                            needs exactly R*C nodes, e.g. torus:16x32)
 ";

@@ -1,0 +1,152 @@
+//! Structure-of-arrays parameter arena: one contiguous f32 slab holding
+//! a family of per-slot vectors (node parameters, dual variables,
+//! replica estimates) as fixed-stride rows.
+//!
+//! The sim engine and the algorithm state machines index rows by the
+//! PR-8 CSR slot order (partition-local node index, or neighbor slot),
+//! so a partition's round sweep walks the slab linearly instead of
+//! chasing one heap box per node.  Rows may have different logical
+//! lengths (the stride is the maximum); [`Arena::row`] /
+//! [`Arena::row_mut`] return exactly the logical prefix, so all
+//! existing length-checked code sees the same slices it saw with
+//! `Vec<Vec<f32>>`.
+//!
+//! The arena is storage only — it never reorders or rescales values —
+//! so converting a field from `Vec<Vec<f32>>` to `Arena` is bit-exact
+//! by construction.
+
+/// Contiguous slab of `rows` f32 vectors at a fixed stride.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arena {
+    data: Vec<f32>,
+    stride: usize,
+    lens: Vec<usize>,
+}
+
+impl Arena {
+    /// `rows` zero-filled rows, each of logical length `len`.
+    pub fn zeros(rows: usize, len: usize) -> Arena {
+        Arena {
+            data: vec![0.0; rows * len],
+            stride: len,
+            lens: vec![len; rows],
+        }
+    }
+
+    /// Pack owned vectors into a slab.  The stride is the longest row;
+    /// shorter rows keep their logical length and pad with zeros that
+    /// [`Arena::row`] never exposes.
+    pub fn from_vecs(rows: Vec<Vec<f32>>) -> Arena {
+        let stride = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+        let lens: Vec<usize> = rows.iter().map(|r| r.len()).collect();
+        let mut data = vec![0.0; rows.len() * stride];
+        for (i, r) in rows.iter().enumerate() {
+            data[i * stride..i * stride + r.len()].copy_from_slice(r);
+        }
+        Arena { data, stride, lens }
+    }
+
+    /// Unpack back into owned per-row vectors (logical lengths).
+    pub fn into_vecs(self) -> Vec<Vec<f32>> {
+        self.lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| self.data[i * self.stride..i * self.stride + n].to_vec())
+            .collect()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.lens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lens.is_empty()
+    }
+
+    /// Fixed row stride in elements (the longest logical row).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.stride..i * self.stride + self.lens[i]]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.stride..i * self.stride + self.lens[i]]
+    }
+
+    /// The whole slab, padding included — bulk fills and tests.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The whole slab, padding included — bulk fills and tests.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Set every element (all rows) to `v`.
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Iterate rows in slot order.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        (0..self.rows()).map(move |i| self.row(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_layout() {
+        let a = Arena::zeros(3, 4);
+        assert_eq!(a.rows(), 3);
+        assert_eq!(a.stride(), 4);
+        assert_eq!(a.row(2), &[0.0; 4]);
+        assert_eq!(a.as_slice().len(), 12);
+    }
+
+    #[test]
+    fn from_vecs_roundtrip_uniform() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut a = Arena::from_vecs(rows.clone());
+        assert_eq!(a.rows(), 3);
+        assert_eq!(a.row(1), &[3.0, 4.0]);
+        a.row_mut(1)[0] = 9.0;
+        let out = a.into_vecs();
+        assert_eq!(out[1], vec![9.0, 4.0]);
+        assert_eq!(out[0], rows[0]);
+        assert_eq!(out[2], rows[2]);
+    }
+
+    #[test]
+    fn ragged_rows_keep_logical_lengths() {
+        let a = Arena::from_vecs(vec![vec![1.0], vec![2.0, 3.0, 4.0]]);
+        assert_eq!(a.stride(), 3);
+        assert_eq!(a.row(0), &[1.0]);
+        assert_eq!(a.row(1), &[2.0, 3.0, 4.0]);
+        assert_eq!(a.into_vecs(), vec![vec![1.0], vec![2.0, 3.0, 4.0]]);
+    }
+
+    #[test]
+    fn empty_arena() {
+        let a = Arena::from_vecs(Vec::new());
+        assert!(a.is_empty());
+        assert_eq!(a.rows(), 0);
+        assert!(a.into_vecs().is_empty());
+    }
+
+    #[test]
+    fn fill_and_iter_rows() {
+        let mut a = Arena::zeros(2, 3);
+        a.fill(7.0);
+        let rows: Vec<&[f32]> = a.iter_rows().collect();
+        assert_eq!(rows, vec![&[7.0f32; 3][..], &[7.0f32; 3][..]]);
+    }
+}

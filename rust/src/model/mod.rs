@@ -1,7 +1,12 @@
 //! Model metadata on the rust side: the artifact manifest written by
 //! `python/compile/aot.py`, the flat-parameter layout (layer names,
 //! shapes, offsets), and the per-layer matrix views that PowerGossip
-//! compresses.
+//! compresses.  Also home of the structure-of-arrays [`Arena`] that
+//! the sim engine and algorithm state use for parameter/dual storage.
+
+pub mod arena;
+
+pub use arena::Arena;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

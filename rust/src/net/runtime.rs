@@ -356,10 +356,12 @@ impl NetNodeRuntime {
         let zeros = vec![0.0f32; w.len()];
         let mut train_loss = Mean::default();
         for round in 0..sched.total_rounds() {
+            // `zsum` and `alpha_deg` are both shared borrows of the
+            // machine, so the dual sum feeds the local step directly —
+            // no per-round copy of the d_pad-sized slice.
             let loss = match machine.zsum() {
                 Some(z) => {
-                    let z = z.to_vec();
-                    local.local_round(round, &mut w, &z, machine.alpha_deg())?
+                    local.local_round(round, &mut w, z, machine.alpha_deg())?
                 }
                 None => local.local_round(round, &mut w, &zeros,
                                           machine.alpha_deg())?,

@@ -92,6 +92,7 @@ use crate::graph::{
     block_owner, partition_blocks, ChurnSchedule, Graph, TopologyView,
 };
 use crate::metrics::{EpochRecord, History, Mean};
+use crate::model::Arena;
 use crate::util::rng::{streams, Pcg};
 
 use queue::{CalendarQueue, Event, EventKey, EventKind};
@@ -321,7 +322,10 @@ struct Part {
     hi: usize,
     machines: Vec<Box<dyn NodeStateMachine>>,
     locals: Vec<Box<dyn LocalUpdate>>,
-    ws: Vec<Vec<f32>>,
+    /// Per-node parameters as one contiguous slab (SoA arena, row =
+    /// partition-local node index) — the round sweep walks memory
+    /// linearly instead of chasing one heap box per node.
+    ws: Arena,
     rounds: Vec<usize>,
     exchanging: Vec<bool>,
     done: Vec<bool>,
@@ -459,7 +463,7 @@ impl Part {
         let outv: Vec<(usize, Msg)> = {
             let machine = &mut self.machines[li];
             let alpha_deg = machine.alpha_deg();
-            let w = &mut self.ws[li];
+            let w = self.ws.row_mut(li);
             let loss = match machine.zsum() {
                 Some(z) => {
                     self.locals[li].local_round(round, w, z, alpha_deg)?
@@ -583,7 +587,7 @@ impl Part {
                 // The machine receives the SENDER's round stamp; its own
                 // round only gates completion.
                 self.machines[li].on_message(env.round, src, env.payload,
-                                             view, &mut self.ws[li],
+                                             view, self.ws.row_mut(li),
                                              &mut out)?;
                 out.drain().collect()
             };
@@ -597,10 +601,10 @@ impl Part {
                     now: u64) -> Result<()> {
         let li = i - self.lo;
         let round = self.rounds[li];
-        self.machines[li].round_end(round, view, &mut self.ws[li])?;
+        self.machines[li].round_end(round, view, self.ws.row_mut(li))?;
         self.exchanging[li] = false;
         if let Some(&epoch) = sh.sched.eval_rounds.get(&round) {
-            let (acc, loss) = self.locals[li].evaluate(&self.ws[li])?;
+            let (acc, loss) = self.locals[li].evaluate(self.ws.row(li))?;
             let train = self.train_loss[li].take();
             self.evals.push(EvalSample {
                 epoch,
@@ -726,7 +730,7 @@ fn apply_churn(parts: &mut [Part], sh: &Shared, view: &mut TopologyView,
         let li = i - p.lo;
         let outv: Vec<(usize, Msg)> = {
             let mut out = Outbox::new();
-            p.machines[li].on_topology(view, &mut p.ws[li], &mut out)?;
+            p.machines[li].on_topology(view, p.ws.row_mut(li), &mut out)?;
             out.drain().collect()
         };
         let round = p.rounds[li];
@@ -910,7 +914,9 @@ pub fn simulate(
             hi,
             machines,
             locals,
-            ws,
+            // Bit-exact packing: the arena stores the same values at
+            // the same logical indices the Vec-of-Vecs did.
+            ws: Arena::from_vecs(ws),
             rounds: vec![0; count],
             exchanging: vec![false; count],
             done: vec![false; count],
@@ -1111,7 +1117,7 @@ pub fn simulate(
         .unwrap_or(0);
     let mut w: Vec<Vec<f32>> = Vec::with_capacity(n);
     for p in parts {
-        w.extend(p.ws);
+        w.extend(p.ws.into_vecs());
     }
     let edges_churned = meter.edges_churned();
     Ok(SimOutcome {

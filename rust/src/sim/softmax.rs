@@ -22,6 +22,7 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use crate::data::{Batcher, Dataset};
+use crate::linalg::fused_prox_step_f32;
 
 use super::LocalUpdate;
 
@@ -144,11 +145,12 @@ impl SoftmaxLocal {
         }
         self.x = xbuf;
         self.y = ybuf;
-        // Eq. (6) closed form.
+        // Eq. (6) closed form, fused: per-element expression tree is
+        // identical to the scalar loop (pinned against
+        // `fused_prox_step_f32_reference` in linalg), so golden hashes
+        // replay bit-for-bit.
         let denom = 1.0 + self.eta * alpha_deg;
-        for ((wv, &g), &z) in w.iter_mut().zip(&self.grad).zip(zsum) {
-            *wv = (*wv - self.eta * g + self.eta * z) / denom;
-        }
+        fused_prox_step_f32(w, &self.grad, zsum, self.eta, denom);
         loss / self.batch as f64
     }
 }

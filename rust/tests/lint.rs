@@ -113,6 +113,27 @@ fn panic_macros_fire_but_debug_assert_does_not() {
 }
 
 #[test]
+fn decode_alloc_scoped_to_decode_into_of_wire_files() {
+    let bad = "pub fn decode_into(out: &mut Vec<u8>) { let v = Vec::new(); out.extend(v); }\n";
+    let vs = lint_source("compress/codec.rs", bad);
+    assert_eq!(rules(&vs), vec!["decode-alloc"], "{vs:?}");
+    // The allocating `decode` path is the legal place to allocate.
+    let decode = "pub fn decode(n: usize) -> Vec<f32> { vec![0.0; n] }\n";
+    assert!(lint_source("compress/codec.rs", decode).is_empty());
+    // decode_into outside the wire files is exempt.
+    assert!(lint_source("sim/mod.rs", bad).is_empty());
+    // A justified allow works like every other rule's.
+    let allowed = concat!(
+        "pub fn decode_into(out: &mut Vec<u8>) {\n",
+        "    // det:allow(decode-alloc): lazy one-time init, not steady state\n",
+        "    let v = Vec::new();\n",
+        "    out.extend(v);\n",
+        "}\n",
+    );
+    assert!(lint_source("compress/codec.rs", allowed).is_empty());
+}
+
+#[test]
 fn trailing_directive_suppresses_same_line() {
     let src = concat!(
         "pub fn decode(b: &[u8]) -> u8 {\n",
@@ -243,6 +264,16 @@ fn fixture_unknown_rule_fires() {
     let vs = lint_tree(&fixture("unknown_rule")).unwrap();
     assert_eq!(rules(&vs), vec!["allow-justification", "wall-clock"],
                "{vs:?}");
+}
+
+#[test]
+fn fixture_decode_alloc_in_wire_fires() {
+    let vs = lint_tree(&fixture("decode_alloc_in_wire")).unwrap();
+    assert_eq!(rules(&vs), vec!["decode-alloc"], "{vs:?}");
+    // One hit per banned constructor: to_vec, Vec::new,
+    // Vec::with_capacity, vec!, collect.
+    assert_eq!(vs.len(), 5, "{vs:?}");
+    assert!(vs.iter().all(|v| v.file == "compress/codec.rs"), "{vs:?}");
 }
 
 #[test]

@@ -1,0 +1,23 @@
+//! Seeded violation tree: every banned allocation constructor inside a
+//! `decode_into` implementation of a wire file.  The `decode-alloc`
+//! rule must flag each one; the allocating `decode` twin below stays
+//! legal.
+
+pub fn decode_into(b: &[f32], out: &mut [f32]) -> Result<(), ()> {
+    let staged = b.to_vec();
+    let mut spill = Vec::new();
+    spill.extend_from_slice(&staged);
+    let mut lut = Vec::with_capacity(out.len());
+    lut.extend_from_slice(&spill);
+    let zeros = vec![0.0f32; out.len()];
+    let summed: Vec<f32> =
+        zeros.iter().zip(&lut).map(|(x, y)| x + y).collect();
+    for (o, v) in out.iter_mut().zip(&summed) {
+        *o = *v;
+    }
+    Ok(())
+}
+
+pub fn decode(n: usize) -> Vec<f32> {
+    vec![0.0f32; n]
+}

@@ -441,7 +441,7 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
         drive_round(&mut nodes, &mut ws, 0);
         let round = 1usize;
         let z_before: Vec<Vec<Vec<f32>>> =
-            nodes.iter().map(|n| n.dual_state().to_vec()).collect();
+            nodes.iter().map(|n| n.dual_state().clone().into_vecs()).collect();
 
         // Collect round_begin output per node.
         let view = TopologyView::full(graph.edges().len());
@@ -538,7 +538,7 @@ fn prop_dual_update_dense_sparse_agree_state_machine() {
                 &mut yvals,
             );
             prop_assert!(
-                nodes[i].dual_state()[0] == z_expect,
+                nodes[i].dual_state().row(0) == z_expect.as_slice(),
                 "node {i}: on_message != dual_update_sparse"
             );
         }
@@ -584,7 +584,8 @@ fn prop_wire_contraction_eq7_state_machine() {
                 let to = 1 - i;
                 let sign = graph.edge_sign(i, to);
                 let taa = 2.0 * nodes[i].alpha() * sign;
-                let y_dense: Vec<f32> = nodes[i].dual_state()[0]
+                let y_dense: Vec<f32> = nodes[i].dual_state()
+                    .row(0)
                     .iter()
                     .zip(&ws[i])
                     .map(|(&zv, &wv)| zv - taa * wv)

@@ -16,7 +16,7 @@ use std::sync::Arc;
 use cecl::algorithms::{build_machine, build_node, AlgorithmSpec, BuildCtx,
                        DualPath, NodeAlgorithm, RoundPolicy};
 use cecl::comm::build_bus;
-use cecl::compress::CodecSpec;
+use cecl::compress::{hotpath_counters, reset_hotpath_counters, CodecSpec};
 use cecl::coordinator::{run_simulated_native, ExecMode, ExperimentSpec};
 use cecl::graph::Graph;
 use cecl::model::DatasetManifest;
@@ -188,6 +188,34 @@ fn every_codec_meters_identical_first_copy_bytes_on_both_engines() {
         assert_eq!(msgs_t, msgs_s, "{spec}: message counts diverged");
         assert_eq!(retrans, 0);
         assert!(bytes_t.iter().sum::<u64>() > 0, "{spec}: no traffic");
+    }
+}
+
+#[test]
+fn steady_state_rounds_are_allocation_free_on_the_hot_path() {
+    // The decode-into / frame-pool contract at the system level: after
+    // a warmup run has filled the thread-local frame pool and sized
+    // every machine's scratch, a whole repeat run (threads = 1, so all
+    // work stays on this thread) performs zero pool misses and zero
+    // allocating dense decodes.  A regression that reverts a codec to
+    // its allocating `decode`, or leaks frame buffers past the pool,
+    // trips this.
+    let graph = Arc::new(Graph::ring(6));
+    for spec in ["identity", "rand_k:0.1", "rand_k:0.1:values", "top_k:0.1",
+                 "qsgd:4", "sign", "low_rank:2", "ef+top_k:0.1"] {
+        let alg = cecl_codec(spec);
+        let _ = simulated_run(&alg, &graph, 23, 3, LinkSpec::Ideal,
+                              RoundPolicy::Sync);
+        reset_hotpath_counters();
+        let _ = simulated_run(&alg, &graph, 23, 3, LinkSpec::Ideal,
+                              RoundPolicy::Sync);
+        let (pool_misses, decode_allocs) = hotpath_counters();
+        assert_eq!(
+            (pool_misses, decode_allocs),
+            (0, 0),
+            "{spec}: steady-state rounds touched the allocator \
+             (pool misses, dense decodes)"
+        );
     }
 }
 
